@@ -1,0 +1,80 @@
+//! Multilevel scheduling pipeline (paper §5.3): take a pleasantly
+//! parallel analytics campaign of thousands of 1-second tasks, run it
+//! (a) submitted directly as a job array and (b) through the
+//! LLMapReduce-style aggregator, on all three schedulers the paper
+//! tested — and report the utilization recovery and ΔT reduction.
+//!
+//! Run: `cargo run --release --example multilevel_pipeline`
+
+use sssched::cluster::ClusterSpec;
+use sssched::config::SchedulerChoice;
+use sssched::multilevel::{MapMode, Multilevel, MultilevelParams};
+use sssched::sched::{make_scheduler, RunOptions, Scheduler};
+use sssched::util::table::{fnum, Table};
+use sssched::workload::WorkloadBuilder;
+
+fn main() {
+    // The paper's cluster, short-task campaign: n=240 tasks/processor of
+    // 1 s each (the "rapid" set, the worst case of Figure 5).
+    let cluster = ClusterSpec::supercloud();
+    let p = cluster.total_cores();
+    let workload = WorkloadBuilder::constant(1.0)
+        .tasks(240 * p)
+        .label("rapid-analytics")
+        .build();
+    println!(
+        "workload: {} tasks x 1 s on {} cores ({} tasks/processor)\n",
+        workload.len(),
+        p,
+        workload.len() as u64 / p
+    );
+
+    let mut table = Table::new(
+        "regular vs multilevel (mimo) vs multilevel (siso)",
+        &["scheduler", "mode", "T_total (s)", "ΔT (s)", "U", "ΔT reduction"],
+    );
+
+    for choice in [
+        SchedulerChoice::Slurm,
+        SchedulerChoice::GridEngine,
+        SchedulerChoice::Mesos,
+    ] {
+        let inner = make_scheduler(choice);
+        let base = inner.run(&workload, &cluster, 7, &RunOptions::default());
+        base.check_invariants().unwrap();
+        table.row(&[
+            inner.name().into(),
+            "regular array".into(),
+            fnum(base.t_total),
+            fnum(base.delta_t()),
+            format!("{:.3}", base.utilization()),
+            "1x".into(),
+        ]);
+
+        for (label, mode) in [("multilevel mimo", MapMode::Mimo), ("multilevel siso", MapMode::Siso)] {
+            let ml = Multilevel::new(
+                inner.as_ref(),
+                MultilevelParams {
+                    mode,
+                    ..MultilevelParams::default()
+                },
+            );
+            let run = ml.run(&workload, &cluster, 7, &RunOptions::default());
+            run.check_invariants().unwrap();
+            table.row(&[
+                inner.name().into(),
+                label.into(),
+                fnum(run.t_total),
+                fnum(run.delta_t()),
+                format!("{:.3}", run.utilization()),
+                format!("{:.0}x", base.delta_t() / run.delta_t().max(1e-9)),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+    println!(
+        "paper §5.3: multilevel scheduling lifts 1 s task utilization from <10% to ~90%,\n\
+         with ΔT reductions of 30x (Slurm), 40x (Grid Engine), 100x (Mesos) at n=240;\n\
+         siso mode pays the repeated map-application startup the paper warns about."
+    );
+}

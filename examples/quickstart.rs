@@ -1,0 +1,62 @@
+//! Quickstart: the library in ~40 lines.
+//!
+//! 1. Build the paper's cluster and a short-task workload.
+//! 2. Simulate it under the Slurm-like scheduler.
+//! 3. Fit the latency model ΔT = t_s·n^α_s through the AOT-compiled
+//!    Pallas kernel running on PJRT (falling back to the rust fit).
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use sssched::cluster::ClusterSpec;
+use sssched::config::SchedulerChoice;
+use sssched::sched::{make_scheduler_scaled, RunOptions};
+use sssched::util::fit::fit_power_law;
+use sssched::workload::WorkloadBuilder;
+
+fn main() -> anyhow::Result<()> {
+    // A SuperCloud scaled down 4x (11 nodes × 32 cores), with daemon
+    // costs scaled up 4x so the saturation knee — and hence the fitted
+    // (t_s, α) — matches the paper's full-size cluster (DESIGN.md §11).
+    let cluster = ClusterSpec::homogeneous(11, 32, 64 * 1024, 11);
+    let p = cluster.total_cores();
+    let scheduler = make_scheduler_scaled(SchedulerChoice::Slurm, 4);
+
+    // Sweep tasks-per-processor at fixed 240 s of work per processor.
+    let mut points = Vec::new();
+    for n in [4u64, 8, 16, 48, 96, 240] {
+        let t = 240.0 / n as f64;
+        let workload = WorkloadBuilder::constant(t)
+            .tasks(n * p)
+            .label(format!("n{n}"))
+            .build();
+        let run = scheduler.run(&workload, &cluster, 42, &RunOptions::default());
+        println!(
+            "n={n:>3}  t={t:>6.2}s  T_total={:>8.1}s  ΔT={:>7.1}s  U={:.3}",
+            run.t_total,
+            run.delta_t(),
+            run.utilization()
+        );
+        points.push((n as f64, run.delta_t()));
+    }
+
+    // Fit the paper's model, preferring the PJRT/Pallas path.
+    let ns: Vec<f64> = points.iter().map(|p| p.0).collect();
+    let dts: Vec<f64> = points.iter().map(|p| p.1).collect();
+    match sssched::runtime::ArtifactSuite::load("artifacts") {
+        Ok(mut suite) => {
+            let fit = suite.powerlaw_fit(&[points])?[0];
+            println!(
+                "\nPJRT fit:  ΔT ≈ {:.2} · n^{:.2}   (R²={:.3})",
+                fit.t_s, fit.alpha_s, fit.r2
+            );
+        }
+        Err(_) => println!("\n(artifacts not built — run `make artifacts` for the PJRT fit)"),
+    }
+    let rust_fit = fit_power_law(&ns, &dts);
+    println!(
+        "rust fit:  ΔT ≈ {:.2} · n^{:.2}   (R²={:.3})",
+        rust_fit.t_s, rust_fit.alpha_s, rust_fit.r2
+    );
+    println!("\npaper (Table 10, Slurm): ΔT ≈ 2.2 · n^1.3");
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! Scheduler shootout: simulate the paper's Table 9 benchmark — four
+//! schedulers × four constant-task-time sets × three trials on the
+//! 1408-core virtual cluster — then fit the latency model (Table 10)
+//! and print measured-vs-paper.
+//!
+//! Run: `cargo run --release --example scheduler_shootout`
+//! Pass `--quick` for a scaled-down (352-core) fast run.
+
+use sssched::cluster::ClusterSpec;
+use sssched::config::SchedulerChoice;
+use sssched::model::fit_from_runs;
+use sssched::sched::{calibration, make_scheduler, RunOptions};
+use sssched::util::table::{fnum, Table};
+use sssched::workload::table9_sets;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (nodes, trials) = if quick { (11, 1) } else { (44, 3) };
+    let cluster = ClusterSpec::homogeneous(nodes, 32, 64 * 1024, 22);
+    let p = cluster.total_cores();
+    println!(
+        "cluster: {} nodes x 32 cores = {} slots, {} trial(s)\n",
+        nodes, p, trials
+    );
+
+    let paper9 = calibration::paper_table9_runtimes();
+    let mut t9 = Table::new(
+        "Table 9 — runtimes (sim vs paper, s)",
+        &["scheduler", "set", "t", "n", "sim mean", "paper mean", "ratio"],
+    );
+    let mut fits = Table::new(
+        "Table 10 — model fit (sim vs paper)",
+        &["scheduler", "t_s sim", "t_s paper", "alpha sim", "alpha paper", "R2"],
+    );
+
+    for (si, choice) in SchedulerChoice::paper_four().iter().enumerate() {
+        let sched = make_scheduler(*choice);
+        let mut runs = Vec::new();
+        for (seti, set) in table9_sets().iter().enumerate() {
+            let workload = set.workload(p);
+            // Skip prohibitive runs like the paper (YARN rapid).
+            if sched.projected_runtime(&workload, &cluster) > 3600.0 {
+                t9.row(&[
+                    sched.name().into(),
+                    set.name.into(),
+                    fnum(set.task_time),
+                    set.tasks_per_proc.to_string(),
+                    "abandoned".into(),
+                    "-".into(),
+                    "-".into(),
+                ]);
+                continue;
+            }
+            let mut totals = Vec::new();
+            for trial in 0..trials {
+                let r = sched.run(&workload, &cluster, 1000 + trial, &RunOptions::default());
+                r.check_invariants().expect("invariants");
+                totals.push(r.t_total);
+                runs.push(r);
+            }
+            let mean = totals.iter().sum::<f64>() / totals.len() as f64;
+            let paper = paper9[si].1[seti];
+            t9.row(&[
+                sched.name().into(),
+                set.name.into(),
+                fnum(set.task_time),
+                set.tasks_per_proc.to_string(),
+                fnum(mean),
+                paper.map(fnum).unwrap_or_else(|| "-".into()),
+                paper
+                    .map(|pv| format!("{:.2}", mean / pv))
+                    .unwrap_or_else(|| "-".into()),
+            ]);
+        }
+        let fit = fit_from_runs(&runs);
+        let pf = &calibration::paper_table10()[si];
+        fits.row(&[
+            sched.name().into(),
+            fnum(fit.t_s),
+            fnum(pf.t_s),
+            format!("{:.2}", fit.alpha_s),
+            format!("{:.2}", pf.alpha_s),
+            format!("{:.3}", fit.r2),
+        ]);
+    }
+
+    println!("{}", t9.render());
+    println!("{}", fits.render());
+}

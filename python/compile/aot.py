@@ -1,0 +1,82 @@
+"""AOT compile path: lower the Layer-2 graphs to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile()``/``.serialize()``) is the interchange
+format: jax >= 0.5 serializes HloModuleProto with 64-bit instruction ids
+which the image's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (from python/).
+`make artifacts` wraps this and is a no-op when inputs are unchanged.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def artifact_specs():
+    """Name -> (fn, example_args) for every AOT artifact."""
+    return {
+        "analytics": (
+            model.analytics_model,
+            (f32(model.ANALYTICS_B, model.ANALYTICS_D),
+             f32(model.ANALYTICS_D, model.ANALYTICS_F)),
+        ),
+        "powerlaw_fit": (
+            model.powerlaw_fit,
+            (f32(model.FIT_S, model.FIT_K),
+             f32(model.FIT_S, model.FIT_K),
+             f32(model.FIT_S, model.FIT_K)),
+        ),
+        "utilization": (
+            model.utilization_model,
+            (f32(model.FIT_S), f32(model.FIT_S), f32(model.UTIL_T)),
+        ),
+        "uvar": (
+            model.uvar_model,
+            (f32(model.UVAR_P), f32(model.UVAR_P), f32(1)),
+        ),
+    }
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument(
+        "--only", default=None, help="emit just one artifact by name"
+    )
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    for name, (fn, example_args) in artifact_specs().items():
+        if args.only and name != args.only:
+            continue
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text):>8} chars  {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Layer-1 Pallas kernel: the analytics map-task payload.
+
+The hot-spot of the "data analysis job" the paper's big-data workloads
+motivate: batched feature projection (matmul -> MXU) + ReLU + per-feature
+batch reduction, tiled over the batch dimension so each (tile_b, D) x
+(D, F) step is VMEM-resident.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the BlockSpec grid walks
+HBM->VMEM batch tiles; the (D, F) weight block stays pinned in VMEM; the
+matmul targets the MXU. On this image the kernel runs with
+interpret=True (CPU PJRT cannot execute Mosaic custom-calls) — numerics
+are identical, performance is modeled in EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _analytics_kernel(x_ref, w_ref, o_ref):
+    """One grid step: o += sum(relu(x_tile @ w), axis=0)."""
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    h = jnp.maximum(
+        jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32), 0.0
+    )
+    o_ref[...] += jnp.sum(h, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b", "interpret"))
+def analytics(x, w, *, tile_b=64, interpret=True):
+    """Analytics payload: (B, D) records x (D, F) weights -> (F,) totals.
+
+    Args:
+      x: (B, D) record batch; B must be a multiple of tile_b.
+      w: (D, F) projection matrix.
+      tile_b: batch tile size (VMEM sizing knob).
+      interpret: run the Pallas interpreter (required on CPU PJRT).
+
+    Returns:
+      (F,) float32 per-feature activation totals.
+    """
+    b, d = x.shape
+    d2, f = w.shape
+    assert d == d2, f"shape mismatch: {x.shape} @ {w.shape}"
+    assert b % tile_b == 0, f"B={b} not a multiple of tile_b={tile_b}"
+    grid = (b // tile_b,)
+    return pl.pallas_call(
+        _analytics_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_b, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, f), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((f,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((f,), jnp.float32),
+        interpret=interpret,
+    )(x, w)

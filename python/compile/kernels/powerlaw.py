@@ -1,0 +1,57 @@
+"""Layer-1 Pallas kernel: masked regression-moment accumulation.
+
+The measurement side of the paper's Table 10: fitting
+log ΔT = log t_s + α_s · log n per scheduler. The kernel reduces, for a
+batch of S series of up to K (log n, log ΔT) observations with a
+validity mask, the six moments a weighted OLS line fit needs — one
+single-pass VMEM-resident reduction per series tile. Layer 2
+(`compile.model.powerlaw_fit`) finishes the scalar algebra.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _moments_kernel(x_ref, y_ref, m_ref, o_ref):
+    """Per-series moment reduction: o[s] = [Σm, Σmx, Σmy, Σmxx, Σmxy, Σmyy]."""
+    x = x_ref[...]
+    y = y_ref[...]
+    m = m_ref[...]
+    o_ref[..., 0] = jnp.sum(m, axis=1)
+    o_ref[..., 1] = jnp.sum(m * x, axis=1)
+    o_ref[..., 2] = jnp.sum(m * y, axis=1)
+    o_ref[..., 3] = jnp.sum(m * x * x, axis=1)
+    o_ref[..., 4] = jnp.sum(m * x * y, axis=1)
+    o_ref[..., 5] = jnp.sum(m * y * y, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def powerlaw_moments(x, y, mask, *, interpret=True):
+    """Masked per-series regression moments.
+
+    Args:
+      x: (S, K) log-n values.
+      y: (S, K) log-ΔT values.
+      mask: (S, K) 1.0 valid / 0.0 padding.
+      interpret: run the Pallas interpreter (required on CPU PJRT).
+
+    Returns:
+      (S, 6) float32 moments [Σm, Σmx, Σmy, Σmxx, Σmxy, Σmyy].
+    """
+    s, k = x.shape
+    assert y.shape == (s, k) and mask.shape == (s, k)
+    return pl.pallas_call(
+        _moments_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((s, k), lambda i: (0, 0)),
+            pl.BlockSpec((s, k), lambda i: (0, 0)),
+            pl.BlockSpec((s, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((s, 6), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, 6), jnp.float32),
+        interpret=interpret,
+    )(x, y, mask)

@@ -1,0 +1,118 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness references: every Pallas kernel in this
+package is checked against its function here by pytest (including
+hypothesis sweeps over shapes and dtypes) before the AOT artifacts are
+emitted.
+"""
+
+import jax.numpy as jnp
+
+
+def analytics_ref(x, w):
+    """Analytics map-task payload, reference implementation.
+
+    The "data analysis job" of the paper's motivation: project a batch of
+    records through a feature matrix, apply a ReLU nonlinearity, and
+    reduce per-feature over the batch.
+
+    Args:
+      x: (B, D) record batch.
+      w: (D, F) feature projection.
+
+    Returns:
+      (F,) per-feature activation totals.
+    """
+    h = jnp.maximum(jnp.dot(x, w, preferred_element_type=jnp.float32), 0.0)
+    return jnp.sum(h, axis=0)
+
+
+def powerlaw_moments_ref(x, y, mask):
+    """Masked regression moments, reference implementation.
+
+    For each series s computes the six accumulated moments needed for a
+    weighted least-squares line fit of y on x:
+      [Σm, Σmx, Σmy, Σmxx, Σmxy, Σmyy]
+
+    Args:
+      x: (S, K) abscissae (log n).
+      y: (S, K) ordinates (log ΔT).
+      mask: (S, K) 1.0 for valid points, 0.0 for padding.
+
+    Returns:
+      (S, 6) moment matrix.
+    """
+    m = mask
+    cols = [
+        jnp.sum(m, axis=1),
+        jnp.sum(m * x, axis=1),
+        jnp.sum(m * y, axis=1),
+        jnp.sum(m * x * x, axis=1),
+        jnp.sum(m * x * y, axis=1),
+        jnp.sum(m * y * y, axis=1),
+    ]
+    return jnp.stack(cols, axis=1)
+
+
+def powerlaw_fit_ref(x, y, mask):
+    """Full power-law fit from moments: returns (t_s, alpha, r2) per series.
+
+    Matches rust `util::fit::fit_power_law` (OLS in log-log space) —
+    inputs are already logs; t_s = exp(intercept).
+    """
+    mom = powerlaw_moments_ref(x, y, mask)
+    n = mom[:, 0]
+    sx, sy, sxx, sxy, syy = mom[:, 1], mom[:, 2], mom[:, 3], mom[:, 4], mom[:, 5]
+    denom = n * sxx - sx * sx
+    safe = jnp.where(jnp.abs(denom) > 1e-30, denom, 1.0)
+    slope = (n * sxy - sx * sy) / safe
+    intercept = (sy - slope * sx) / jnp.maximum(n, 1.0)
+    # R^2 = 1 - SS_res/SS_tot, expanded in terms of the moments.
+    ss_tot = syy - sy * sy / jnp.maximum(n, 1.0)
+    ss_res = (
+        syy
+        - 2.0 * (intercept * sy + slope * sxy)
+        + intercept * intercept * n
+        + 2.0 * intercept * slope * sx
+        + slope * slope * sxx
+    )
+    r2 = jnp.where(ss_tot > 0.0, 1.0 - ss_res / jnp.where(ss_tot > 0.0, ss_tot, 1.0), 1.0)
+    return jnp.exp(intercept), slope, r2
+
+
+def utilization_curves_ref(t_s, alpha, t_grid, t_job=240.0):
+    """Model utilization curves for Figure 5, reference implementation.
+
+    Args:
+      t_s: (S,) fitted marginal latencies.
+      alpha: (S,) fitted exponents.
+      t_grid: (T,) task times.
+      t_job: per-processor isolated job time (paper: 240 s), so
+        n = t_job / t.
+
+    Returns:
+      (approx, exact): two (S, T) arrays —
+        approx: U^-1 = 1 + t_s/t        (Figure 5a dotted lines)
+        exact:  U^-1 = 1 + t_s n^α/(tn) (Figure 5b dashed lines)
+    """
+    ts = t_s[:, None]
+    al = alpha[:, None]
+    t = t_grid[None, :]
+    n = t_job / t
+    approx = 1.0 / (1.0 + ts / t)
+    exact = 1.0 / (1.0 + ts * jnp.power(n, al) / (t * n))
+    return approx, exact
+
+
+def uvar_ref(t_p, mask, t_s):
+    """Variable-task-time utilization, reference implementation.
+
+    U^-1 = (Σ m·(1 + t_s/t(p))) / Σ m  over masked processors.
+    """
+    import jax.numpy as jnp
+
+    safe = jnp.where(t_p > 0.0, t_p, 1.0)
+    inv = 1.0 + t_s / safe
+    num = jnp.sum(mask * inv)
+    den = jnp.sum(mask)
+    return den / num

@@ -1,0 +1,65 @@
+"""Layer-1 Pallas kernel: variable-task-time utilization reduction.
+
+The paper's Section 4 closes with: "If the scheduler releases a
+processor as it completes its work, then the overall utilization is the
+average of the per-processor utilization — U^-1 ≈ P^-1 Σ_p U_c(t(p))^-1".
+This kernel performs that masked average over the per-processor mean
+task times t(p) in one VMEM-resident pass: for each processor,
+U_c(t(p))^-1 = 1 + t_s / t(p); the output is [Σ m·(1 + t_s/t(p)), Σ m].
+Layer 2 finishes U = Σm / Σ(...).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _uvar_kernel(tp_ref, mask_ref, ts_ref, o_ref):
+    """Masked accumulation of per-processor inverse utilizations."""
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    tp = tp_ref[...]
+    m = mask_ref[...]
+    ts = ts_ref[0]
+    # Guard padded entries (tp=0) before dividing.
+    safe_tp = jnp.where(tp > 0.0, tp, 1.0)
+    inv_u = 1.0 + ts / safe_tp
+    o_ref[0] += jnp.sum(m * inv_u)
+    o_ref[1] += jnp.sum(m)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def uvar_moments(t_p, mask, t_s, *, tile=256, interpret=True):
+    """Masked U_v reduction moments.
+
+    Args:
+      t_p: (P,) per-processor mean task times (padded entries arbitrary).
+      mask: (P,) 1.0 for real processors, 0.0 for padding.
+      t_s: (1,) marginal scheduler latency.
+      tile: processors per VMEM tile.
+      interpret: run the Pallas interpreter (required on CPU PJRT).
+
+    Returns:
+      (2,) float32: [Σ m·U_c(t(p))^-1, Σ m].
+    """
+    (p,) = t_p.shape
+    assert mask.shape == (p,) and t_s.shape == (1,)
+    assert p % tile == 0, f"P={p} not a multiple of tile={tile}"
+    return pl.pallas_call(
+        _uvar_kernel,
+        grid=(p // tile,),
+        in_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((2,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((2,), jnp.float32),
+        interpret=interpret,
+    )(t_p, mask, t_s)

@@ -1,0 +1,114 @@
+"""Layer-2 JAX model: the compute graphs that get AOT-lowered for the
+rust coordinator.
+
+Three graphs, all calling the Layer-1 Pallas kernels:
+
+* ``analytics_model``  — the analytics map-task payload executed by the
+  realtime mini-cluster's workers (the paper's "data analysis job").
+* ``powerlaw_fit``     — Table 10's fit: batched masked log-log OLS over
+  (n, ΔT) observations, moments computed by the Pallas kernel.
+* ``utilization_model``— the Figure 5/7 model curves U_c(t) (approx and
+  exact) for a batch of fitted (t_s, α_s).
+
+Python runs ONCE at build time (`make artifacts`); the rust binary
+executes the lowered HLO through PJRT.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.analytics import analytics
+from .kernels.powerlaw import powerlaw_moments
+from .kernels.uvar import uvar_moments
+
+# Fixed AOT shapes (the rust side pads to these).
+ANALYTICS_B = 256
+ANALYTICS_D = 64
+ANALYTICS_F = 32
+FIT_S = 8  # max series (schedulers) per fit call
+FIT_K = 32  # max observations per series
+UTIL_T = 64  # task-time grid length
+UVAR_P = 2048  # padded processor count for the U_v reduction
+
+
+def analytics_model(x, w):
+    """Map-task payload: features + a scalar checksum for verification.
+
+    Args:
+      x: (B, D) record batch.
+      w: (D, F) projection.
+
+    Returns:
+      (features, checksum): (F,) activation totals and their sum.
+    """
+    feats = analytics(x, w)
+    return feats, jnp.sum(feats)
+
+
+def powerlaw_fit(log_n, log_dt, mask):
+    """Batched power-law fit ΔT = t_s·n^α_s (log-log OLS).
+
+    Args:
+      log_n: (S, K) log tasks-per-processor.
+      log_dt: (S, K) log ΔT.
+      mask: (S, K) 1.0 valid / 0.0 padding.
+
+    Returns:
+      (t_s, alpha, r2): three (S,) vectors.
+    """
+    mom = powerlaw_moments(log_n, log_dt, mask)
+    n = mom[:, 0]
+    sx, sy, sxx, sxy, syy = mom[:, 1], mom[:, 2], mom[:, 3], mom[:, 4], mom[:, 5]
+    denom = n * sxx - sx * sx
+    safe = jnp.where(jnp.abs(denom) > 1e-30, denom, 1.0)
+    slope = (n * sxy - sx * sy) / safe
+    intercept = (sy - slope * sx) / jnp.maximum(n, 1.0)
+    ss_tot = syy - sy * sy / jnp.maximum(n, 1.0)
+    ss_res = (
+        syy
+        - 2.0 * (intercept * sy + slope * sxy)
+        + intercept * intercept * n
+        + 2.0 * intercept * slope * sx
+        + slope * slope * sxx
+    )
+    r2 = jnp.where(
+        ss_tot > 0.0, 1.0 - ss_res / jnp.where(ss_tot > 0.0, ss_tot, 1.0), 1.0
+    )
+    return jnp.exp(intercept), slope, r2
+
+
+def utilization_model(t_s, alpha, t_grid):
+    """Model utilization curves (paper Section 4 / Figure 5).
+
+    Args:
+      t_s: (S,) marginal latencies.
+      alpha: (S,) exponents.
+      t_grid: (T,) task times.
+
+    Returns:
+      (approx, exact): (S, T) arrays; n is derived from the paper's fixed
+      T_job = 240 s per processor.
+    """
+    t_job = 240.0
+    ts = t_s[:, None]
+    al = alpha[:, None]
+    t = t_grid[None, :]
+    n = t_job / t
+    approx = 1.0 / (1.0 + ts / t)
+    exact = 1.0 / (1.0 + ts * jnp.power(n, al) / (t * n))
+    return approx, exact
+
+
+def uvar_model(t_p, mask, t_s):
+    """Variable-task-time utilization U_v (paper §4, per-processor
+    averaging), reduced by the Pallas kernel.
+
+    Args:
+      t_p: (P,) per-processor mean task times.
+      mask: (P,) validity mask.
+      t_s: (1,) marginal latency.
+
+    Returns:
+      scalar U.
+    """
+    mom = uvar_moments(t_p, mask, t_s)
+    return mom[1] / mom[0]

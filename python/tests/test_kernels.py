@@ -1,0 +1,216 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes and dtypes; numpy cross-checks the regression
+algebra against an independent implementation (polyfit).
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile.kernels.analytics import analytics
+from compile.kernels.powerlaw import powerlaw_moments
+from compile.kernels.ref import (
+    analytics_ref,
+    powerlaw_fit_ref,
+    powerlaw_moments_ref,
+    utilization_curves_ref,
+)
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("ci")
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+class TestAnalyticsKernel:
+    def test_matches_ref_basic(self):
+        r = rng(0)
+        x = r.normal(size=(256, 64)).astype(np.float32)
+        w = r.normal(size=(64, 32)).astype(np.float32)
+        got = analytics(x, w)
+        want = analytics_ref(jnp.asarray(x), jnp.asarray(w))
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+    @hypothesis.given(
+        tiles=st.integers(1, 6),
+        tile_b=st.sampled_from([8, 16, 64]),
+        d=st.integers(1, 96),
+        f=st.integers(1, 48),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_shape_sweep(self, tiles, tile_b, d, f, seed):
+        r = rng(seed)
+        b = tiles * tile_b
+        x = r.normal(size=(b, d)).astype(np.float32)
+        w = r.normal(size=(d, f)).astype(np.float32)
+        got = analytics(x, w, tile_b=tile_b)
+        want = analytics_ref(jnp.asarray(x), jnp.asarray(w))
+        assert got.shape == (f,)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-3)
+
+    @hypothesis.given(seed=st.integers(0, 2**31 - 1))
+    def test_bfloat16_inputs(self, seed):
+        r = rng(seed)
+        x = jnp.asarray(r.normal(size=(128, 32)), dtype=jnp.bfloat16)
+        w = jnp.asarray(r.normal(size=(32, 16)), dtype=jnp.bfloat16)
+        got = analytics(x, w, tile_b=64)
+        want = analytics_ref(x, w)
+        # bf16 matmul accumulated in f32 on both paths.
+        assert got.dtype == jnp.float32
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-2, atol=2e-1)
+
+    def test_relu_zeroes_negative_features(self):
+        # With all-negative projections the ReLU must zero everything.
+        x = jnp.ones((64, 8), jnp.float32)
+        w = -jnp.ones((8, 4), jnp.float32)
+        got = analytics(x, w, tile_b=32)
+        assert_allclose(np.asarray(got), np.zeros(4, np.float32))
+
+    def test_accumulates_across_tiles(self):
+        # Sum over B is tile-order independent: one tile vs many.
+        r = rng(3)
+        x = r.normal(size=(256, 16)).astype(np.float32)
+        w = r.normal(size=(16, 8)).astype(np.float32)
+        one = analytics(x, w, tile_b=256)
+        many = analytics(x, w, tile_b=8)
+        assert_allclose(np.asarray(one), np.asarray(many), rtol=1e-4, atol=1e-3)
+
+    def test_rejects_misaligned_batch(self):
+        with pytest.raises(AssertionError):
+            analytics(jnp.ones((100, 8)), jnp.ones((8, 4)), tile_b=64)
+
+
+class TestPowerlawKernel:
+    @hypothesis.given(
+        s=st.integers(1, 8),
+        k=st.integers(2, 32),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_moments_match_ref(self, s, k, seed):
+        r = rng(seed)
+        x = r.uniform(0.0, 6.0, size=(s, k)).astype(np.float32)
+        y = r.uniform(-2.0, 9.0, size=(s, k)).astype(np.float32)
+        mask = (r.uniform(size=(s, k)) < 0.8).astype(np.float32)
+        got = powerlaw_moments(x, y, mask)
+        want = powerlaw_moments_ref(jnp.asarray(x), jnp.asarray(y), jnp.asarray(mask))
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-3)
+
+    def test_fit_recovers_exact_power_law(self):
+        # The paper's Table 10 values as synthetic truth.
+        t_s = np.array([2.2, 2.8, 3.4, 33.0], np.float32)
+        alpha = np.array([1.3, 1.3, 1.1, 1.0], np.float32)
+        ns = np.array([4.0, 8.0, 48.0, 240.0], np.float32)
+        x = np.log(np.tile(ns, (4, 1))).astype(np.float32)
+        y = (np.log(t_s)[:, None] + alpha[:, None] * x).astype(np.float32)
+        mask = np.ones_like(x)
+        ts_hat, al_hat, r2 = powerlaw_fit_ref(
+            jnp.asarray(x), jnp.asarray(y), jnp.asarray(mask)
+        )
+        assert_allclose(np.asarray(ts_hat), t_s, rtol=1e-3)
+        assert_allclose(np.asarray(al_hat), alpha, rtol=1e-3)
+        assert_allclose(np.asarray(r2), np.ones(4), atol=1e-3)
+
+    @hypothesis.given(seed=st.integers(0, 2**31 - 1))
+    def test_fit_matches_numpy_polyfit(self, seed):
+        r = rng(seed)
+        k = 12
+        x = np.sort(r.uniform(0.0, 5.5, size=k)).astype(np.float32)
+        y = (0.7 + 1.25 * x + r.normal(scale=0.05, size=k)).astype(np.float32)
+        xs = np.tile(x, (2, 1))
+        ys = np.tile(y, (2, 1))
+        mask = np.ones_like(xs)
+        ts_hat, al_hat, _ = powerlaw_fit_ref(
+            jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(mask)
+        )
+        slope_np, intercept_np = np.polyfit(x.astype(np.float64), y.astype(np.float64), 1)
+        assert_allclose(float(al_hat[0]), slope_np, rtol=1e-3)
+        assert_allclose(float(jnp.log(ts_hat[0])), intercept_np, rtol=1e-2, atol=1e-3)
+
+    def test_mask_excludes_padding(self):
+        # Padding rows with garbage must not affect the fit.
+        x_clean = np.log(np.array([4.0, 8.0, 48.0, 240.0], np.float32))
+        y_clean = np.float32(np.log(2.2)) + np.float32(1.3) * x_clean
+        x = np.concatenate([x_clean, np.full(4, 99.0, np.float32)])[None, :]
+        y = np.concatenate([y_clean, np.full(4, -99.0, np.float32)])[None, :]
+        mask = np.concatenate([np.ones(4), np.zeros(4)]).astype(np.float32)[None, :]
+        ts_hat, al_hat, _ = powerlaw_fit_ref(
+            jnp.asarray(x), jnp.asarray(y), jnp.asarray(mask)
+        )
+        assert_allclose(float(ts_hat[0]), 2.2, rtol=1e-3)
+        assert_allclose(float(al_hat[0]), 1.3, rtol=1e-3)
+
+
+class TestUtilizationRef:
+    def test_half_utilization_at_ts_equals_t(self):
+        approx, _ = utilization_curves_ref(
+            jnp.array([2.0]), jnp.array([1.0]), jnp.array([2.0])
+        )
+        assert_allclose(float(approx[0, 0]), 0.5, rtol=1e-6)
+
+    def test_exact_equals_approx_at_alpha_one(self):
+        t = jnp.array([1.0, 5.0, 30.0, 60.0])
+        approx, exact = utilization_curves_ref(
+            jnp.array([3.4]), jnp.array([1.0]), t
+        )
+        assert_allclose(np.asarray(exact), np.asarray(approx), rtol=1e-6)
+
+    def test_alpha_above_one_lowers_exact_utilization(self):
+        t = jnp.array([1.0])
+        _, exact13 = utilization_curves_ref(jnp.array([2.2]), jnp.array([1.3]), t)
+        _, exact10 = utilization_curves_ref(jnp.array([2.2]), jnp.array([1.0]), t)
+        assert float(exact13[0, 0]) < float(exact10[0, 0])
+
+
+class TestUvarKernel:
+    @hypothesis.given(
+        tiles=st.integers(1, 8),
+        seed=st.integers(0, 2**31 - 1),
+        ts=st.floats(0.1, 40.0),
+    )
+    def test_matches_ref(self, tiles, seed, ts):
+        from compile.kernels.ref import uvar_ref
+        from compile.kernels.uvar import uvar_moments
+
+        r = rng(seed)
+        p = tiles * 256
+        t_p = r.uniform(0.5, 60.0, size=p).astype(np.float32)
+        mask = (r.uniform(size=p) < 0.9).astype(np.float32)
+        if mask.sum() == 0:
+            mask[0] = 1.0
+        ts_arr = np.array([ts], np.float32)
+        mom = uvar_moments(jnp.asarray(t_p), jnp.asarray(mask), jnp.asarray(ts_arr))
+        got = float(mom[1] / mom[0])
+        want = float(uvar_ref(jnp.asarray(t_p), jnp.asarray(mask), jnp.asarray(ts_arr)[0]))
+        assert_allclose(got, want, rtol=1e-3)
+
+    def test_uniform_tasks_reduce_to_constant_model(self):
+        from compile.kernels.uvar import uvar_moments
+
+        # All processors at t=5, t_s=2.2: U = 1/(1+2.2/5).
+        t_p = np.full(256, 5.0, np.float32)
+        mask = np.ones(256, np.float32)
+        mom = uvar_moments(
+            jnp.asarray(t_p), jnp.asarray(mask), jnp.asarray([2.2], np.float32)
+        )
+        got = float(mom[1] / mom[0])
+        assert_allclose(got, 1.0 / (1.0 + 2.2 / 5.0), rtol=1e-5)
+
+    def test_padding_ignored(self):
+        from compile.kernels.uvar import uvar_moments
+
+        t_p = np.concatenate([np.full(128, 10.0), np.zeros(128)]).astype(np.float32)
+        mask = np.concatenate([np.ones(128), np.zeros(128)]).astype(np.float32)
+        mom = uvar_moments(
+            jnp.asarray(t_p), jnp.asarray(mask), jnp.asarray([1.0], np.float32)
+        )
+        got = float(mom[1] / mom[0])
+        assert_allclose(got, 1.0 / 1.1, rtol=1e-5)

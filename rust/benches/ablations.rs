@@ -1,0 +1,186 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! A1. Job-array vs individual-job submission (paper §5.2: arrays
+//!     "introduce much less scheduler latency").
+//! A2. Scheduling-cycle interval sensitivity (Slurm-like).
+//! A3. Allocator offer-interval sensitivity (Mesos-like).
+//! A4. AM-startup sensitivity (YARN-like; am→1.5 s models an Apache
+//!     Llama-style low-latency application master, §3.1.4).
+//! A5. Centralized vs Sparrow-like distributed scheduling on the rapid
+//!     set (§3.2.6 centralized-vs-distributed trade-off).
+//! A6. FCFS vs EASY-backfill on a mixed parallel workload (§3.2.3).
+//! A7. On-demand responsiveness: mean wait vs offered load under
+//!     Poisson arrivals (§1 interactive vs batch discussion).
+
+use sssched::cluster::ClusterSpec;
+use sssched::config::SchedulerChoice;
+use sssched::sched::batchq::{BatchJob, BatchQueueSim, QueuePolicy};
+use sssched::sched::sparrow::{SparrowParams, SparrowSim};
+use sssched::sched::{calibration, centralized::CentralizedSim, make_scheduler, mesos::MesosSim, yarn::YarnSim, RunOptions, Scheduler};
+use sssched::util::prng::Prng;
+use sssched::util::table::{fnum, Table};
+use sssched::workload::{ArrivalProcess, WorkloadBuilder};
+
+fn cluster() -> ClusterSpec {
+    // 8 nodes × 32 = 256 cores: ablations isolate mechanisms, the
+    // full-scale numbers live in the table9/fig benches.
+    ClusterSpec::homogeneous(8, 32, 64 * 1024, 4)
+}
+
+fn main() {
+    let c = cluster();
+    let p = c.total_cores();
+
+    // ---- A1: array vs individual submission.
+    let mut t = Table::new(
+        "A1: job-array vs individual submission (Slurm-like, n=8, t=30s)",
+        &["mode", "T_total (s)", "ΔT (s)", "U"],
+    );
+    let sched = make_scheduler(SchedulerChoice::Slurm);
+    let w = WorkloadBuilder::constant(30.0).tasks(8 * p).label("a1").build();
+    for (mode, opts) in [
+        ("array", RunOptions::default()),
+        (
+            "individual",
+            RunOptions {
+                individual_submission: true,
+                ..Default::default()
+            },
+        ),
+    ] {
+        let r = sched.run(&w, &c, 1, &opts);
+        t.row(&[
+            mode.into(),
+            fnum(r.t_total),
+            fnum(r.delta_t()),
+            format!("{:.3}", r.utilization()),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // ---- A2: cycle-interval sensitivity.
+    let mut t = Table::new(
+        "A2: scheduling-cycle interval (Slurm-like, n=8, t=30s)",
+        &["cycle (s)", "ΔT (s)", "U"],
+    );
+    for cycle in [0.25, 0.5, 1.0, 2.0, 4.0, 8.0] {
+        let mut params = calibration::slurm_params();
+        params.cycle_interval = cycle;
+        let sim = CentralizedSim::new(params);
+        let r = sim.run(&w, &c, 2, &RunOptions::default());
+        t.row(&[fnum(cycle), fnum(r.delta_t()), format!("{:.3}", r.utilization())]);
+    }
+    println!("{}", t.render());
+
+    // ---- A3: offer-interval sensitivity.
+    let mut t = Table::new(
+        "A3: allocator offer interval (Mesos-like, n=8, t=30s)",
+        &["offer interval (s)", "ΔT (s)", "U"],
+    );
+    for interval in [0.25, 0.5, 1.0, 2.0, 4.0] {
+        let mut params = calibration::mesos_params();
+        params.offer_interval = interval;
+        let sim = MesosSim::new(params);
+        let r = sim.run(&w, &c, 3, &RunOptions::default());
+        t.row(&[fnum(interval), fnum(r.delta_t()), format!("{:.3}", r.utilization())]);
+    }
+    println!("{}", t.render());
+
+    // ---- A4: AM-startup sensitivity (Llama-style low-latency AM).
+    let mut t = Table::new(
+        "A4: ApplicationMaster startup (YARN-like, n=48, t=5s)",
+        &["AM startup (s)", "T_total (s)", "U"],
+    );
+    let wf = WorkloadBuilder::constant(5.0).tasks(48 * p).label("a4").build();
+    for am in [31.0, 15.0, 5.0, 1.5] {
+        let mut params = calibration::yarn_params();
+        params.am_startup_mean = am;
+        let sim = YarnSim::new(params);
+        let r = sim.run(&wf, &c, 4, &RunOptions::default());
+        t.row(&[fnum(am), fnum(r.t_total), format!("{:.3}", r.utilization())]);
+    }
+    println!("{}", t.render());
+    println!("(am=1.5 s ~ Apache Llama low-latency AM: recovers most of the lost utilization)\n");
+
+    // ---- A5: centralized vs distributed on the rapid set.
+    let mut t = Table::new(
+        "A5: centralized vs Sparrow-like distributed (n=240, t=1s)",
+        &["scheduler", "T_total (s)", "ΔT (s)", "U", "daemon busy (s)"],
+    );
+    let wr = WorkloadBuilder::constant(1.0).tasks(240 * p).label("a5").build();
+    for sched in [
+        make_scheduler(SchedulerChoice::Slurm),
+        Box::new(SparrowSim::new(SparrowParams::default())) as Box<dyn Scheduler>,
+    ] {
+        let r = sched.run(&wr, &c, 5, &RunOptions::default());
+        t.row(&[
+            sched.name().into(),
+            fnum(r.t_total),
+            fnum(r.delta_t()),
+            format!("{:.3}", r.utilization()),
+            fnum(r.daemon_busy),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // ---- A6: FCFS vs backfill on a mixed parallel workload.
+    let mut rng = Prng::new(0xAB6);
+    let jobs: Vec<BatchJob> = (0..300)
+        .map(|id| BatchJob {
+            id,
+            user: id % 5,
+            cores: [1, 1, 2, 4, 8, 16, 64][rng.choose_index(7)],
+            duration: rng.range_f64(10.0, 600.0),
+            priority: 0,
+            submit_at: 0.0,
+        })
+        .collect();
+    let mut t = Table::new(
+        "A6: queue policy on a mixed parallel workload (300 jobs, 256 cores)",
+        &["policy", "makespan (s)", "U", "mean wait (s)", "max wait (s)"],
+    );
+    for (name, policy) in [
+        ("FCFS", QueuePolicy::Fcfs),
+        ("FCFS+backfill", QueuePolicy::FcfsBackfill),
+        ("Fairshare", QueuePolicy::Fairshare),
+    ] {
+        let r = BatchQueueSim::new(policy).run(&jobs, &c).unwrap();
+        t.row(&[
+            name.into(),
+            fnum(r.makespan),
+            format!("{:.3}", r.utilization),
+            fnum(r.waits.mean()),
+            fnum(r.waits.max()),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // ---- A7: on-demand responsiveness under Poisson arrivals.
+    let mut t = Table::new(
+        "A7: mean wait vs offered load (Slurm-like, Poisson arrivals, t=30s)",
+        &["offered load ρ", "arrival rate (t/s)", "mean wait (s)", "p~max wait (s)"],
+    );
+    for rho in [0.3, 0.6, 0.8, 0.9] {
+        let rate = rho * p as f64 / 30.0;
+        let mut wl = WorkloadBuilder::constant(30.0).tasks(8 * p).label("a7").build();
+        ArrivalProcess::Poisson { rate }.apply(&mut wl, 7);
+        let sched = make_scheduler(SchedulerChoice::Slurm);
+        let r = sched.run(
+            &wl,
+            &c,
+            7,
+            &RunOptions {
+                individual_submission: true, // on-demand jobs arrive one by one
+                ..Default::default()
+            },
+        );
+        t.row(&[
+            format!("{rho:.1}"),
+            fnum(rate),
+            fnum(r.waits.mean()),
+            fnum(r.waits.max()),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("ablations complete");
+}

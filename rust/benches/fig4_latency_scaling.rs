@@ -1,0 +1,30 @@
+//! Bench: regenerate Figure 4 — ΔT vs tasks-per-processor on log-log
+//! axes, measured trials + fitted model line, one panel per scheduler.
+
+use sssched::config::ExperimentConfig;
+use sssched::harness::fig4;
+use std::time::Instant;
+
+fn main() {
+    let mut cfg = ExperimentConfig::default();
+    if std::env::var("SSSCHED_QUICK").is_ok() {
+        cfg.scale_down = 8;
+        cfg.trials = 1;
+    }
+    let t0 = Instant::now();
+    let rep = fig4(&cfg);
+    let wall = t0.elapsed().as_secs_f64();
+    println!("{}", rep.render_plots());
+    std::fs::create_dir_all("out").ok();
+    if std::fs::write("out/fig4.csv", rep.to_csv()).is_ok() {
+        println!("series written to out/fig4.csv");
+    }
+    println!("bench: {wall:.2}s wall");
+    match rep.check_shape() {
+        Ok(()) => println!("shape vs paper: OK (ΔT grows with n; power law fits)"),
+        Err(e) => {
+            println!("shape vs paper: FAIL — {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,35 @@
+//! Bench: regenerate Figure 6 — ΔT vs n with multilevel scheduling
+//! (LLMapReduce) on Slurm / Grid Engine / Mesos, including the ΔT
+//! reduction factors at the largest n.
+
+use sssched::config::ExperimentConfig;
+use sssched::harness::fig6;
+use sssched::multilevel::MultilevelParams;
+use std::time::Instant;
+
+fn main() {
+    let mut cfg = ExperimentConfig::default();
+    if std::env::var("SSSCHED_QUICK").is_ok() {
+        cfg.scale_down = 8;
+        cfg.trials = 1;
+    }
+    let t0 = Instant::now();
+    let rep = fig6(&cfg, &MultilevelParams::default());
+    let wall = t0.elapsed().as_secs_f64();
+    println!("{}", rep.render_plots());
+    println!("{}", rep.render_table().render());
+    std::fs::create_dir_all("out").ok();
+    if std::fs::write("out/fig6.csv", rep.render_table().to_csv()).is_ok() {
+        println!("series written to out/fig6.csv");
+    }
+    println!("bench: {wall:.2}s wall");
+    match rep.check_shape() {
+        Ok(()) => println!(
+            "shape vs paper: OK (multilevel ΔT bounded; ≥10x reduction at max n — paper: 30x/40x/100x)"
+        ),
+        Err(e) => {
+            println!("shape vs paper: FAIL — {e}");
+            std::process::exit(1);
+        }
+    }
+}

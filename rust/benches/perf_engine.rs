@@ -1,0 +1,116 @@
+//! Perf bench: hot-path microbenchmarks feeding EXPERIMENTS.md §Perf.
+//!
+//! * event-queue throughput (push+pop)
+//! * full scheduler-simulation events/s (the L3 hot path)
+//! * realtime coordinator dispatch rate (channel round-trip)
+//! * PJRT power-law fit latency (the L1/L2 hot path from rust)
+
+use sssched::cluster::ClusterSpec;
+use sssched::config::SchedulerChoice;
+use sssched::exec::{RealtimeCoordinator, RealtimeParams, RtTask, RtWork};
+use sssched::sched::{make_scheduler, RunOptions};
+use sssched::sim::EventQueue;
+use sssched::workload::WorkloadBuilder;
+use std::time::Instant;
+
+fn main() {
+    // ---- 1. Raw event queue.
+    let n = 2_000_000u64;
+    let t0 = Instant::now();
+    let mut q: EventQueue<u64> = EventQueue::new();
+    let mut acc = 0u64;
+    for i in 0..n {
+        // Jittered future times (respecting the causality guard).
+        q.push(q.now() + (i % 100) as f64 * 0.01, i);
+        if i % 4 == 3 {
+            acc = acc.wrapping_add(q.pop().unwrap().1);
+        }
+    }
+    while let Some((_, v)) = q.pop() {
+        acc = acc.wrapping_add(v);
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "event queue: {:.2}M push+pop/s (checksum {acc})",
+        2.0 * n as f64 / dt / 1e6
+    );
+
+    // ---- 2. Scheduler sims, events/s.
+    let cluster = ClusterSpec::supercloud();
+    for choice in [
+        SchedulerChoice::Slurm,
+        SchedulerChoice::Mesos,
+        SchedulerChoice::Yarn,
+        SchedulerChoice::IdealFifo,
+    ] {
+        let sched = make_scheduler(choice);
+        let w = WorkloadBuilder::constant(5.0)
+            .tasks(48 * cluster.total_cores())
+            .label("bench")
+            .build();
+        let t0 = Instant::now();
+        let r = sched.run(&w, &cluster, 1, &RunOptions::default());
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "{:<12} sim: {:>7} tasks, {:>8} events in {:.3}s = {:.2}M events/s ({:.0}x realtime)",
+            sched.name(),
+            r.n_tasks,
+            r.events,
+            dt,
+            r.events as f64 / dt / 1e6,
+            r.t_total / dt,
+        );
+    }
+
+    // ---- 3. Realtime dispatch rate (zero-work tasks).
+    let coord = RealtimeCoordinator::new(RealtimeParams {
+        workers: 2,
+        dispatch_overhead: 0.0,
+        artifacts_dir: None,
+    });
+    let tasks: Vec<RtTask> = (0..20_000)
+        .map(|id| RtTask {
+            id,
+            nominal: 0.0,
+            work: RtWork::Spin(0.0),
+        })
+        .collect();
+    let t0 = Instant::now();
+    let r = coord.run(&tasks).unwrap();
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "realtime coordinator: {:.0} dispatches/s ({} tasks in {:.3}s)",
+        r.n_tasks as f64 / dt,
+        r.n_tasks,
+        dt
+    );
+
+    // ---- 4. PJRT fit latency.
+    match sssched::runtime::ArtifactSuite::load("artifacts") {
+        Ok(mut suite) => {
+            let series: Vec<Vec<(f64, f64)>> = (0..4)
+                .map(|s| {
+                    (0..16)
+                        .map(|k| {
+                            let n = 2f64.powi(k % 8);
+                            (n, (2.0 + s as f64) * n.powf(1.2))
+                        })
+                        .collect()
+                })
+                .collect();
+            // Warmup + timed.
+            let _ = suite.powerlaw_fit(&series).unwrap();
+            let iters = 200;
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                let _ = suite.powerlaw_fit(&series).unwrap();
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            println!(
+                "pjrt powerlaw_fit: {:.3} ms/call (4 series x 16 pts, {iters} iters)",
+                dt / iters as f64 * 1e3
+            );
+        }
+        Err(_) => println!("pjrt fit: artifacts missing (run `make artifacts`)"),
+    }
+}

@@ -1,0 +1,33 @@
+//! Bench: regenerate Table 10 (fitted t_s, α_s per scheduler) over the
+//! Figure 4 n-sweep, through both the rust and the PJRT/Pallas fit
+//! paths, and check the paper's orderings.
+
+use sssched::config::ExperimentConfig;
+use sssched::harness::table10;
+use std::time::Instant;
+
+fn main() {
+    let mut cfg = ExperimentConfig::default();
+    if std::env::var("SSSCHED_QUICK").is_ok() {
+        cfg.scale_down = 8;
+        cfg.trials = 1;
+    }
+    println!(
+        "table10 bench: P={} trials={} n_sweep={:?}",
+        cfg.processors(),
+        cfg.trials,
+        cfg.n_sweep
+    );
+    let t0 = Instant::now();
+    let rep = table10(&cfg, Some("artifacts"));
+    let wall = t0.elapsed().as_secs_f64();
+    println!("{}", rep.render().render());
+    println!("bench: {wall:.2}s wall");
+    match rep.check_shape() {
+        Ok(()) => println!("shape vs paper: OK (t_s and alpha orderings hold, fit paths agree)"),
+        Err(e) => {
+            println!("shape vs paper: FAIL — {e}");
+            std::process::exit(1);
+        }
+    }
+}

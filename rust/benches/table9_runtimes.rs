@@ -1,0 +1,52 @@
+//! Bench: regenerate Table 9 (runtimes of 4 task sets × 4 schedulers ×
+//! 3 trials at full 1408-core scale) and compare with the paper.
+//!
+//! `SSSCHED_QUICK=1 cargo bench --bench table9_runtimes` scales down.
+
+use sssched::config::ExperimentConfig;
+use sssched::harness::table9;
+use std::time::Instant;
+
+fn main() {
+    let mut cfg = ExperimentConfig::default();
+    if std::env::var("SSSCHED_QUICK").is_ok() {
+        cfg.scale_down = 8;
+        cfg.trials = 1;
+    }
+    println!(
+        "table9 bench: P={} trials={} (paper: 1408 cores, 3 trials)",
+        cfg.processors(),
+        cfg.trials
+    );
+    let t0 = Instant::now();
+    let rep = table9(&cfg);
+    let wall = t0.elapsed().as_secs_f64();
+    println!("{}", rep.render().render());
+    let simulated: f64 = rep
+        .sweeps
+        .iter()
+        .flat_map(|s| s.points.iter())
+        .flat_map(|p| p.trials.iter())
+        .map(|r| r.t_total)
+        .sum();
+    let events: u64 = rep
+        .sweeps
+        .iter()
+        .flat_map(|s| s.points.iter())
+        .flat_map(|p| p.trials.iter())
+        .map(|r| r.events)
+        .sum();
+    println!(
+        "bench: {wall:.2}s wall to simulate {simulated:.0}s of cluster time \
+         ({events} events, {:.2}M events/s, speedup {:.0}x)",
+        events as f64 / wall / 1e6,
+        simulated / wall
+    );
+    match rep.check_shape(0.35) {
+        Ok(()) => println!("shape vs paper: OK (all ratios within ±35%)"),
+        Err(e) => {
+            println!("shape vs paper: FAIL — {e}");
+            std::process::exit(1);
+        }
+    }
+}

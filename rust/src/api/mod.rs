@@ -1,0 +1,13 @@
+//! DRMAA-like in-language job API.
+//!
+//! The paper (§3.1, §3.4) credits the big-data schedulers' adoption to
+//! their "easy-to-use APIs with which applications are developed" and
+//! notes DRMAA (Distributed Resource Management Application API) was
+//! the batch world's equivalent. This module is that layer for sssched:
+//! a session object with `submit` / `submit_array` / `wait` /
+//! `job_status` over any [`crate::sched::Scheduler`] backend, so applications
+//! script experiments without touching the simulator guts.
+
+mod session;
+
+pub use session::{JobInfo, JobStatus, JobTemplate, Session};

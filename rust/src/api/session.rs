@@ -1,0 +1,232 @@
+//! DRMAA-style session over a scheduler backend.
+//!
+//! Usage mirrors DRMAA 1.0's control flow: build [`JobTemplate`]s,
+//! `submit`/`submit_array`, then `run()` the session (the synchronous
+//! equivalent of `drmaa_synchronize(ALL)`) and query [`JobInfo`]s.
+
+use crate::cluster::ClusterSpec;
+use crate::sched::{RunOptions, Scheduler};
+use crate::workload::{TaskSpec, Workload};
+
+/// Description of a job to submit (DRMAA job template).
+#[derive(Clone, Debug)]
+pub struct JobTemplate {
+    /// Human-readable name.
+    pub name: String,
+    /// Task runtime (virtual s).
+    pub duration: f64,
+    /// Memory per task (MB).
+    pub mem_mb: i64,
+    /// Submission time offset.
+    pub submit_at: f64,
+}
+
+impl Default for JobTemplate {
+    fn default() -> Self {
+        Self {
+            name: "job".into(),
+            duration: 1.0,
+            mem_mb: 2048,
+            submit_at: 0.0,
+        }
+    }
+}
+
+/// Job state after the session runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobStatus {
+    /// Queued, session not yet run.
+    Pending,
+    /// Ran to completion.
+    Done,
+}
+
+/// Per-job accounting (DRMAA `drmaa_wait` result analog).
+#[derive(Clone, Debug)]
+pub struct JobInfo {
+    /// Job id (dense, as returned by submit).
+    pub id: u32,
+    /// Status.
+    pub status: JobStatus,
+    /// First task start (s).
+    pub start: f64,
+    /// Last task end (s).
+    pub end: f64,
+    /// Mean queue wait across the job's tasks.
+    pub mean_wait: f64,
+    /// Number of tasks in the job (1 unless an array).
+    pub tasks: u32,
+}
+
+/// A DRMAA-like session bound to a scheduler and cluster.
+pub struct Session<'a> {
+    scheduler: &'a dyn Scheduler,
+    cluster: &'a ClusterSpec,
+    seed: u64,
+    tasks: Vec<TaskSpec>,
+    /// job id -> (first task id, task count)
+    jobs: Vec<(u32, u32)>,
+    infos: Option<Vec<JobInfo>>,
+}
+
+impl<'a> Session<'a> {
+    /// Open a session.
+    pub fn new(scheduler: &'a dyn Scheduler, cluster: &'a ClusterSpec, seed: u64) -> Self {
+        Self {
+            scheduler,
+            cluster,
+            seed,
+            tasks: Vec::new(),
+            jobs: Vec::new(),
+            infos: None,
+        }
+    }
+
+    /// Submit one job; returns its job id.
+    pub fn submit(&mut self, template: &JobTemplate) -> u32 {
+        self.submit_array(template, 1)
+    }
+
+    /// Submit a job array of `count` tasks; returns the job id.
+    pub fn submit_array(&mut self, template: &JobTemplate, count: u32) -> u32 {
+        assert!(count > 0, "empty job array");
+        assert!(self.infos.is_none(), "session already ran");
+        let job_id = self.jobs.len() as u32;
+        let first = self.tasks.len() as u32;
+        for _ in 0..count {
+            let mut t = TaskSpec::array(self.tasks.len() as u32, job_id, template.duration);
+            t.mem_mb = template.mem_mb;
+            t.submit_at = template.submit_at;
+            self.tasks.push(t);
+        }
+        self.jobs.push((first, count));
+        job_id
+    }
+
+    /// Number of submitted jobs.
+    pub fn job_count(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// Run everything to completion (synchronous `drmaa_synchronize`).
+    /// Returns the underlying [`crate::sched::RunResult`].
+    pub fn run(&mut self) -> crate::sched::RunResult {
+        let workload = Workload {
+            tasks: self.tasks.clone(),
+            label: "api-session".into(),
+        };
+        workload.validate().expect("invalid session workload");
+        let result =
+            self.scheduler
+                .run(&workload, self.cluster, self.seed, &RunOptions::with_trace());
+        let trace = result.trace.as_ref().expect("trace requested");
+        let mut infos = Vec::with_capacity(self.jobs.len());
+        for (job_id, &(first, count)) in self.jobs.iter().enumerate() {
+            let mut start = f64::INFINITY;
+            let mut end = 0.0f64;
+            let mut wait_sum = 0.0;
+            for rec in trace
+                .iter()
+                .filter(|r| r.task >= first && r.task < first + count)
+            {
+                start = start.min(rec.start);
+                end = end.max(rec.end);
+                wait_sum += rec.wait();
+            }
+            infos.push(JobInfo {
+                id: job_id as u32,
+                status: JobStatus::Done,
+                start,
+                end,
+                mean_wait: wait_sum / count as f64,
+                tasks: count,
+            });
+        }
+        self.infos = Some(infos);
+        result
+    }
+
+    /// Status of a job (Pending until `run`, then Done).
+    pub fn job_status(&self, job_id: u32) -> JobStatus {
+        match &self.infos {
+            Some(_) => JobStatus::Done,
+            None => {
+                assert!((job_id as usize) < self.jobs.len(), "unknown job {job_id}");
+                JobStatus::Pending
+            }
+        }
+    }
+
+    /// Accounting info for a job after `run`.
+    pub fn wait(&self, job_id: u32) -> Option<&JobInfo> {
+        self.infos.as_ref()?.get(job_id as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SchedulerChoice;
+    use crate::sched::make_scheduler;
+
+    fn cluster() -> ClusterSpec {
+        ClusterSpec::homogeneous(2, 8, 32 * 1024, 2)
+    }
+
+    #[test]
+    fn submit_run_wait_lifecycle() {
+        let sched = make_scheduler(SchedulerChoice::Slurm);
+        let cluster = cluster();
+        let mut session = Session::new(sched.as_ref(), &cluster, 1);
+        let a = session.submit(&JobTemplate {
+            duration: 2.0,
+            ..Default::default()
+        });
+        let b = session.submit_array(
+            &JobTemplate {
+                duration: 1.0,
+                ..Default::default()
+            },
+            32,
+        );
+        assert_eq!(session.job_status(a), JobStatus::Pending);
+        let result = session.run();
+        result.check_invariants().unwrap();
+        assert_eq!(session.job_status(a), JobStatus::Done);
+        let ia = session.wait(a).unwrap();
+        let ib = session.wait(b).unwrap();
+        assert_eq!(ia.tasks, 1);
+        assert_eq!(ib.tasks, 32);
+        assert!(ia.end > ia.start);
+        assert!(ib.mean_wait >= 0.0);
+        assert!(session.wait(99).is_none());
+    }
+
+    #[test]
+    fn works_across_backends() {
+        let cluster = cluster();
+        for choice in [
+            SchedulerChoice::Mesos,
+            SchedulerChoice::Yarn,
+            SchedulerChoice::IdealFifo,
+        ] {
+            let sched = make_scheduler(choice);
+            let mut session = Session::new(sched.as_ref(), &cluster, 2);
+            let j = session.submit_array(&JobTemplate::default(), 8);
+            let r = session.run();
+            r.check_invariants().unwrap();
+            assert_eq!(session.wait(j).unwrap().tasks, 8);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "already ran")]
+    fn no_submission_after_run() {
+        let sched = make_scheduler(SchedulerChoice::IdealFifo);
+        let cluster = cluster();
+        let mut session = Session::new(sched.as_ref(), &cluster, 3);
+        session.submit(&JobTemplate::default());
+        session.run();
+        session.submit(&JobTemplate::default());
+    }
+}

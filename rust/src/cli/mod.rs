@@ -1,0 +1,110 @@
+//! Hand-rolled CLI argument parsing (clap is not in the offline crate
+//! set). Flags are `--name value` or `--name` (boolean); the first
+//! non-flag token is the subcommand.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// Subcommand (first positional).
+    pub command: Option<String>,
+    /// Remaining positionals.
+    pub positionals: Vec<String>,
+    /// `--key value` options.
+    pub options: BTreeMap<String, String>,
+    /// `--flag` booleans.
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding `argv[0]`).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut iter = args.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("empty flag `--`".into());
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|nxt| !nxt.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                out.positionals.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Boolean flag present?
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// String option.
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    /// Typed option with default.
+    pub fn opt_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("invalid value `{v}` for --{name}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn command_flags_options() {
+        let a = parse("experiment table9 --trials 2 --quick --out-dir out");
+        assert_eq!(a.command.as_deref(), Some("experiment"));
+        assert_eq!(a.positionals, vec!["table9"]);
+        assert_eq!(a.opt("trials"), Some("2"));
+        assert!(a.flag("quick"));
+        assert_eq!(a.opt("out-dir"), Some("out"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("features --table=3");
+        assert_eq!(a.opt("table"), Some("3"));
+    }
+
+    #[test]
+    fn typed_options() {
+        let a = parse("x --n 7");
+        assert_eq!(a.opt_parse("n", 1u32).unwrap(), 7);
+        assert_eq!(a.opt_parse("missing", 42u32).unwrap(), 42);
+        assert!(parse("x --n seven").opt_parse("n", 1u32).is_err());
+    }
+
+    #[test]
+    fn trailing_flag_not_eating_value() {
+        let a = parse("cmd --quick --n 3");
+        assert!(a.flag("quick"));
+        assert_eq!(a.opt("n"), Some("3"));
+    }
+}

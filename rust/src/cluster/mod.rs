@@ -1,0 +1,10 @@
+//! Cluster model: nodes, core slots, memory accounting, racks and RPC
+//! latencies. This is the synthetic stand-in for the paper's 44-node /
+//! 1408-core MIT SuperCloud testbed (one scheduler node + 44 compute
+//! nodes on 10 GigE).
+
+mod nodes;
+mod slots;
+
+pub use nodes::{ClusterSpec, Node, NodeId, NodeState};
+pub use slots::{SlotId, SlotPool};

@@ -1,0 +1,128 @@
+//! Node-level cluster description and state.
+
+/// Identifies a compute node.
+pub type NodeId = u32;
+
+/// Administrative / health state of a node, mirroring the states the
+/// production schedulers track (Slurm: IDLE/ALLOC/DRAIN/DOWN, etc.).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NodeState {
+    /// Accepting work.
+    Up,
+    /// Finishing current work, accepting nothing new.
+    Draining,
+    /// Out of service.
+    Down,
+}
+
+/// Static description of one compute node.
+#[derive(Clone, Debug)]
+pub struct Node {
+    /// Node id (dense, 0-based).
+    pub id: NodeId,
+    /// Core count (= job slots for single-core tasks).
+    pub cores: u32,
+    /// RAM in MB.
+    pub mem_mb: u64,
+    /// Rack index, for network-aware placement experiments.
+    pub rack: u32,
+    /// Health state.
+    pub state: NodeState,
+}
+
+/// Whole-cluster specification.
+#[derive(Clone, Debug)]
+pub struct ClusterSpec {
+    /// Compute nodes (excludes the scheduler node, which is modeled as
+    /// the scheduler's service stations).
+    pub nodes: Vec<Node>,
+    /// One-way control-plane RPC latency scheduler <-> node (seconds).
+    pub rpc_latency: f64,
+    /// Node-daemon task launch overhead mean (fork/exec, cgroup setup).
+    pub launch_overhead: f64,
+    /// Node-daemon task teardown overhead mean (reap, accounting).
+    pub teardown_overhead: f64,
+}
+
+impl ClusterSpec {
+    /// Homogeneous cluster: `n_nodes` nodes × `cores` cores, `nodes_per_rack`
+    /// nodes per rack.
+    pub fn homogeneous(n_nodes: u32, cores: u32, mem_mb: u64, nodes_per_rack: u32) -> Self {
+        let nodes = (0..n_nodes)
+            .map(|id| Node {
+                id,
+                cores,
+                mem_mb,
+                rack: id / nodes_per_rack.max(1),
+                state: NodeState::Up,
+            })
+            .collect();
+        Self {
+            nodes,
+            rpc_latency: 0.000_2, // 10 GigE round-trip /2, switch hop
+            launch_overhead: 0.010,
+            teardown_overhead: 0.005,
+        }
+    }
+
+    /// The paper's testbed: 44 compute nodes × 32 cores = 1408 cores,
+    /// one rack per 22 nodes, 10 GigE.
+    pub fn supercloud() -> Self {
+        Self::homogeneous(44, 32, 64 * 1024, 22)
+    }
+
+    /// A laptop-scale cluster for fast tests.
+    pub fn tiny() -> Self {
+        Self::homogeneous(2, 4, 8 * 1024, 2)
+    }
+
+    /// Total core slots across Up nodes.
+    pub fn total_cores(&self) -> u64 {
+        self.nodes
+            .iter()
+            .filter(|n| n.state == NodeState::Up)
+            .map(|n| n.cores as u64)
+            .sum()
+    }
+
+    /// Number of nodes.
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Mark a node down (failure injection in tests).
+    pub fn set_state(&mut self, id: NodeId, state: NodeState) {
+        self.nodes[id as usize].state = state;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn supercloud_is_1408_cores() {
+        let c = ClusterSpec::supercloud();
+        assert_eq!(c.n_nodes(), 44);
+        assert_eq!(c.total_cores(), 1408);
+        assert_eq!(c.nodes[0].rack, 0);
+        assert_eq!(c.nodes[43].rack, 1);
+    }
+
+    #[test]
+    fn down_nodes_drop_from_capacity() {
+        let mut c = ClusterSpec::homogeneous(4, 8, 1024, 2);
+        assert_eq!(c.total_cores(), 32);
+        c.set_state(1, NodeState::Down);
+        assert_eq!(c.total_cores(), 24);
+        c.set_state(2, NodeState::Draining);
+        assert_eq!(c.total_cores(), 16);
+    }
+
+    #[test]
+    fn heterogeneous_by_hand() {
+        let mut c = ClusterSpec::homogeneous(2, 4, 1024, 2);
+        c.nodes[1].cores = 16;
+        assert_eq!(c.total_cores(), 20);
+    }
+}

@@ -1,0 +1,232 @@
+//! Core-slot pool: the scheduler-facing view of cluster capacity.
+//!
+//! Tracks free/busy core slots and per-node memory, and enforces the key
+//! invariant the property tests lean on: a slot is never double-allocated
+//! and memory is never oversubscribed.
+
+use super::nodes::{ClusterSpec, NodeId, NodeState};
+
+/// Identifies a core slot (dense, 0-based across the cluster).
+pub type SlotId = u32;
+
+/// Allocation bookkeeping over a cluster's core slots.
+#[derive(Clone, Debug)]
+pub struct SlotPool {
+    /// slot -> node
+    node_of: Vec<NodeId>,
+    /// free-slot stack (LIFO keeps placement cache-friendly and matches
+    /// the "pack onto recently freed resources" behaviour of cons_res)
+    free: Vec<SlotId>,
+    /// busy flags, by slot
+    busy: Vec<bool>,
+    /// per-node free memory (MB)
+    mem_free: Vec<i64>,
+    /// per-node total memory (MB)
+    mem_total: Vec<i64>,
+    busy_count: usize,
+}
+
+impl SlotPool {
+    /// Build a pool over all Up nodes of the spec.
+    pub fn new(spec: &ClusterSpec) -> Self {
+        let mut node_of = Vec::new();
+        let mut free = Vec::new();
+        for node in &spec.nodes {
+            if node.state != NodeState::Up {
+                continue;
+            }
+            for _ in 0..node.cores {
+                let id = node_of.len() as SlotId;
+                node_of.push(node.id);
+                free.push(id);
+            }
+        }
+        // Pop order: slot 0 first (free is a stack).
+        free.reverse();
+        let n = node_of.len();
+        let mem_total: Vec<i64> = spec.nodes.iter().map(|n| n.mem_mb as i64).collect();
+        Self {
+            node_of,
+            free,
+            busy: vec![false; n],
+            mem_free: mem_total.clone(),
+            mem_total,
+            busy_count: 0,
+        }
+    }
+
+    /// Total slot count.
+    pub fn capacity(&self) -> usize {
+        self.node_of.len()
+    }
+
+    /// Currently free slot count.
+    pub fn free_count(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Currently busy slot count.
+    pub fn busy_count(&self) -> usize {
+        self.busy_count
+    }
+
+    /// Node that hosts a slot.
+    pub fn node_of(&self, slot: SlotId) -> NodeId {
+        self.node_of[slot as usize]
+    }
+
+    /// Allocate one slot requiring `mem_mb` on its node. Returns `None`
+    /// if no slot satisfies the request.
+    pub fn alloc(&mut self, mem_mb: i64) -> Option<SlotId> {
+        // Fast path: top of stack has enough memory (homogeneous common
+        // case). Otherwise scan the free stack for a fitting node.
+        let pos = self
+            .free
+            .iter()
+            .rposition(|&s| self.mem_free[self.node_of[s as usize] as usize] >= mem_mb)?;
+        let slot = self.free.remove(pos);
+        let node = self.node_of[slot as usize] as usize;
+        self.mem_free[node] -= mem_mb;
+        debug_assert!(self.mem_free[node] >= 0);
+        debug_assert!(!self.busy[slot as usize], "double allocation of slot {slot}");
+        self.busy[slot as usize] = true;
+        self.busy_count += 1;
+        Some(slot)
+    }
+
+    /// Release a slot and its memory.
+    pub fn release(&mut self, slot: SlotId, mem_mb: i64) {
+        let idx = slot as usize;
+        assert!(self.busy[idx], "release of free slot {slot}");
+        self.busy[idx] = false;
+        self.busy_count -= 1;
+        let node = self.node_of[idx] as usize;
+        self.mem_free[node] += mem_mb;
+        assert!(
+            self.mem_free[node] <= self.mem_total[node],
+            "memory over-release on node {node}"
+        );
+        self.free.push(slot);
+    }
+
+    /// Invariant check used by property tests: busy+free counts conserve
+    /// capacity and no slot is both busy and free.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        if self.free.len() + self.busy_count != self.capacity() {
+            return Err(format!(
+                "slot conservation violated: free={} busy={} cap={}",
+                self.free.len(),
+                self.busy_count,
+                self.capacity()
+            ));
+        }
+        for &s in &self.free {
+            if self.busy[s as usize] {
+                return Err(format!("slot {s} both busy and free"));
+            }
+        }
+        for (node, (&f, &t)) in self.mem_free.iter().zip(&self.mem_total).enumerate() {
+            if f < 0 || f > t {
+                return Err(format!("node {node} memory out of range: {f}/{t}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, ensure};
+
+    fn spec() -> ClusterSpec {
+        ClusterSpec::homogeneous(4, 4, 1000, 2)
+    }
+
+    #[test]
+    fn alloc_release_roundtrip() {
+        let mut p = SlotPool::new(&spec());
+        assert_eq!(p.capacity(), 16);
+        let s = p.alloc(100).unwrap();
+        assert_eq!(p.busy_count(), 1);
+        p.release(s, 100);
+        assert_eq!(p.busy_count(), 0);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn exhaustion_returns_none() {
+        let mut p = SlotPool::new(&spec());
+        let mut slots = Vec::new();
+        while let Some(s) = p.alloc(0) {
+            slots.push(s);
+        }
+        assert_eq!(slots.len(), 16);
+        assert!(p.alloc(0).is_none());
+        // All distinct
+        let mut sorted = slots.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 16);
+    }
+
+    #[test]
+    fn memory_limits_respected() {
+        let mut p = SlotPool::new(&spec());
+        // Each node has 1000 MB and 4 cores: only 2 × 500 MB tasks fit per node.
+        let mut got = 0;
+        while p.alloc(500).is_some() {
+            got += 1;
+        }
+        assert_eq!(got, 8); // 2 per node × 4 nodes
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "release of free slot")]
+    fn double_release_panics() {
+        let mut p = SlotPool::new(&spec());
+        let s = p.alloc(0).unwrap();
+        p.release(s, 0);
+        p.release(s, 0);
+    }
+
+    #[test]
+    fn down_nodes_excluded() {
+        let mut sp = spec();
+        sp.set_state(0, NodeState::Down);
+        let p = SlotPool::new(&sp);
+        assert_eq!(p.capacity(), 12);
+        assert!((0..p.capacity() as u32).all(|s| p.node_of(s) != 0));
+    }
+
+    #[test]
+    fn prop_random_alloc_release_conserves() {
+        check(
+            |rng| {
+                // random sequence of alloc/release ops
+                let ops: Vec<bool> = (0..200).map(|_| rng.chance(0.6)).collect();
+                ops
+            },
+            |ops| {
+                let mut p = SlotPool::new(&spec());
+                let mut held: Vec<SlotId> = Vec::new();
+                for &is_alloc in ops {
+                    if is_alloc {
+                        if let Some(s) = p.alloc(100) {
+                            held.push(s);
+                        }
+                    } else if let Some(s) = held.pop() {
+                        p.release(s, 100);
+                    }
+                    p.check_invariants()?;
+                    ensure(
+                        p.busy_count() == held.len(),
+                        format!("busy {} != held {}", p.busy_count(), held.len()),
+                    )?;
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,12 @@
+//! Configuration system.
+//!
+//! `toml.rs` is a minimal TOML-subset parser (tables, string / float /
+//! integer / bool values, comments) — `serde`/`toml` crates are not in
+//! the offline crate set. `schema.rs` maps parsed values onto typed
+//! experiment configuration with defaults and validation.
+
+mod schema;
+mod toml;
+
+pub use schema::{ExperimentConfig, SchedulerChoice};
+pub use toml::{parse_toml, TomlValue};

@@ -1,0 +1,255 @@
+//! Typed experiment configuration with defaults matching the paper's
+//! testbed, loadable from the TOML-subset files in `configs/`.
+
+use super::toml::{parse_toml, TomlValue};
+use std::collections::BTreeMap;
+
+/// Which scheduler model to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedulerChoice {
+    /// Slurm-like (new-HPC family).
+    Slurm,
+    /// Son-of-Grid-Engine-like (traditional HPC family).
+    GridEngine,
+    /// Mesos-like two-level offer scheduler (open-source big data).
+    Mesos,
+    /// Hadoop-YARN-like AM-per-job scheduler (open-source big data).
+    Yarn,
+    /// Idealized zero-overhead FIFO baseline (testing reference).
+    IdealFifo,
+}
+
+impl SchedulerChoice {
+    /// Parse from a config/CLI string.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "slurm" => Ok(Self::Slurm),
+            "gridengine" | "ge" | "sge" => Ok(Self::GridEngine),
+            "mesos" => Ok(Self::Mesos),
+            "yarn" | "hadoop-yarn" | "hadoopyarn" => Ok(Self::Yarn),
+            "ideal" | "fifo" | "ideal-fifo" => Ok(Self::IdealFifo),
+            other => Err(format!("unknown scheduler `{other}`")),
+        }
+    }
+
+    /// Report name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Slurm => "Slurm",
+            Self::GridEngine => "GridEngine",
+            Self::Mesos => "Mesos",
+            Self::Yarn => "Hadoop YARN",
+            Self::IdealFifo => "IdealFIFO",
+        }
+    }
+
+    /// The paper's four measured schedulers.
+    pub fn paper_four() -> [Self; 4] {
+        [Self::Slurm, Self::GridEngine, Self::Mesos, Self::Yarn]
+    }
+}
+
+/// Experiment configuration (paper defaults).
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Compute node count (paper: 44).
+    pub nodes: u32,
+    /// Cores per node (paper: 32).
+    pub cores_per_node: u32,
+    /// Node memory (MB).
+    pub mem_mb: u64,
+    /// Trials per task set (paper: 3).
+    pub trials: u32,
+    /// Root RNG seed.
+    pub seed: u64,
+    /// Schedulers to benchmark.
+    pub schedulers: Vec<SchedulerChoice>,
+    /// Tasks-per-processor sweep for Figure 4/6 (the paper sweeps n
+    /// across the Table 9 values plus intermediate points).
+    pub n_sweep: Vec<u32>,
+    /// Output directory for CSV/trace artifacts.
+    pub out_dir: String,
+    /// If set, scales the cluster down by this integer factor (every
+    /// experiment stays shape-faithful since n per processor is what
+    /// matters; used by quick CI runs).
+    pub scale_down: u32,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            nodes: 44,
+            cores_per_node: 32,
+            mem_mb: 64 * 1024,
+            trials: 3,
+            seed: 0x55C4ED,
+            schedulers: SchedulerChoice::paper_four().to_vec(),
+            n_sweep: vec![4, 8, 16, 32, 48, 96, 240],
+            out_dir: "out".into(),
+            scale_down: 1,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Effective processor count.
+    pub fn processors(&self) -> u64 {
+        (self.nodes as u64 * self.cores_per_node as u64) / self.scale_down.max(1) as u64
+    }
+
+    /// Effective node count after scale-down.
+    pub fn effective_nodes(&self) -> u32 {
+        (self.nodes / self.scale_down.max(1)).max(1)
+    }
+
+    /// Load from a parsed TOML map (unknown keys rejected to catch typos).
+    pub fn from_map(map: &BTreeMap<String, TomlValue>) -> Result<Self, String> {
+        let mut cfg = Self::default();
+        for (key, value) in map {
+            match key.as_str() {
+                "cluster.nodes" => cfg.nodes = get_u32(value, key)?,
+                "cluster.cores_per_node" => cfg.cores_per_node = get_u32(value, key)?,
+                "cluster.mem_mb" => cfg.mem_mb = get_u32(value, key)? as u64,
+                "experiment.trials" => cfg.trials = get_u32(value, key)?,
+                "experiment.seed" => {
+                    cfg.seed = value.as_i64().ok_or_else(|| bad(key))? as u64
+                }
+                "experiment.scale_down" => cfg.scale_down = get_u32(value, key)?,
+                "experiment.out_dir" => {
+                    cfg.out_dir = value.as_str().ok_or_else(|| bad(key))?.to_string()
+                }
+                "experiment.schedulers" => {
+                    let arr = match value {
+                        TomlValue::Array(xs) => xs,
+                        _ => return Err(bad(key)),
+                    };
+                    cfg.schedulers = arr
+                        .iter()
+                        .map(|v| {
+                            v.as_str()
+                                .ok_or_else(|| bad(key))
+                                .and_then(SchedulerChoice::parse)
+                        })
+                        .collect::<Result<_, _>>()?;
+                }
+                "experiment.n_sweep" => {
+                    let arr = match value {
+                        TomlValue::Array(xs) => xs,
+                        _ => return Err(bad(key)),
+                    };
+                    cfg.n_sweep = arr
+                        .iter()
+                        .map(|v| v.as_i64().map(|i| i as u32).ok_or_else(|| bad(key)))
+                        .collect::<Result<_, _>>()?;
+                }
+                other => return Err(format!("unknown config key `{other}`")),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Parse from TOML text.
+    pub fn from_toml(text: &str) -> Result<Self, String> {
+        Self::from_map(&parse_toml(text)?)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &str) -> Result<Self, String> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+        Self::from_toml(&text)
+    }
+
+    /// Sanity checks.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.nodes == 0 || self.cores_per_node == 0 {
+            return Err("cluster must have nodes and cores".into());
+        }
+        if self.trials == 0 {
+            return Err("trials must be >= 1".into());
+        }
+        if self.schedulers.is_empty() {
+            return Err("at least one scheduler required".into());
+        }
+        if self.n_sweep.is_empty() || self.n_sweep.iter().any(|&n| n == 0) {
+            return Err("n_sweep must be non-empty, positive".into());
+        }
+        Ok(())
+    }
+}
+
+fn get_u32(v: &TomlValue, key: &str) -> Result<u32, String> {
+    v.as_i64()
+        .filter(|&i| i >= 0 && i <= u32::MAX as i64)
+        .map(|i| i as u32)
+        .ok_or_else(|| bad(key))
+}
+
+fn bad(key: &str) -> String {
+    format!("invalid value for `{key}`")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.processors(), 1408);
+        assert_eq!(c.trials, 3);
+        assert_eq!(c.schedulers.len(), 4);
+    }
+
+    #[test]
+    fn from_toml_roundtrip() {
+        let c = ExperimentConfig::from_toml(
+            r#"
+[cluster]
+nodes = 8
+cores_per_node = 4
+[experiment]
+trials = 2
+schedulers = ["slurm", "mesos"]
+n_sweep = [4, 240]
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.processors(), 32);
+        assert_eq!(c.trials, 2);
+        assert_eq!(
+            c.schedulers,
+            vec![SchedulerChoice::Slurm, SchedulerChoice::Mesos]
+        );
+    }
+
+    #[test]
+    fn rejects_unknown_keys() {
+        assert!(ExperimentConfig::from_toml("whoops = 1").is_err());
+    }
+
+    #[test]
+    fn rejects_invalid() {
+        assert!(ExperimentConfig::from_toml("[experiment]\ntrials = 0").is_err());
+        assert!(ExperimentConfig::from_toml("[experiment]\nschedulers = [\"bogus\"]").is_err());
+    }
+
+    #[test]
+    fn scale_down() {
+        let mut c = ExperimentConfig::default();
+        c.scale_down = 4;
+        assert_eq!(c.processors(), 352);
+        assert_eq!(c.effective_nodes(), 11);
+    }
+
+    #[test]
+    fn scheduler_parse_aliases() {
+        assert_eq!(
+            SchedulerChoice::parse("GE").unwrap(),
+            SchedulerChoice::GridEngine
+        );
+        assert_eq!(SchedulerChoice::parse("YARN").unwrap(), SchedulerChoice::Yarn);
+        assert!(SchedulerChoice::parse("pbs").is_err());
+    }
+}

@@ -1,0 +1,236 @@
+//! Minimal TOML-subset parser.
+//!
+//! Supports: `[table]` and `[table.sub]` headers, `key = value` pairs
+//! with string, integer, float, boolean and flat-array values, `#`
+//! comments, and blank lines. Keys are flattened to dotted paths
+//! (`table.sub.key`). This covers everything sssched config files use.
+
+use std::collections::BTreeMap;
+
+/// A parsed TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    /// Quoted string.
+    Str(String),
+    /// Integer.
+    Int(i64),
+    /// Float.
+    Float(f64),
+    /// Boolean.
+    Bool(bool),
+    /// Flat array of values.
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    /// As f64 (ints coerce).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    /// As i64.
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// As str.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// As bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+fn parse_scalar(raw: &str, lineno: usize) -> Result<TomlValue, String> {
+    let raw = raw.trim();
+    if raw.starts_with('"') {
+        if !raw.ends_with('"') || raw.len() < 2 {
+            return Err(format!("line {lineno}: unterminated string"));
+        }
+        let inner = &raw[1..raw.len() - 1];
+        // Basic escapes.
+        let mut out = String::new();
+        let mut chars = inner.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    other => return Err(format!("line {lineno}: bad escape {other:?}")),
+                }
+            } else {
+                out.push(c);
+            }
+        }
+        return Ok(TomlValue::Str(out));
+    }
+    if raw == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if raw == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if raw.starts_with('[') {
+        if !raw.ends_with(']') {
+            return Err(format!("line {lineno}: unterminated array"));
+        }
+        let inner = &raw[1..raw.len() - 1];
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in inner.split(',') {
+                if part.trim().is_empty() {
+                    continue; // trailing comma
+                }
+                items.push(parse_scalar(part, lineno)?);
+            }
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    if let Ok(i) = raw.replace('_', "").parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = raw.replace('_', "").parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("line {lineno}: cannot parse value `{raw}`"))
+}
+
+/// Parse TOML-subset text into a flat dotted-key map.
+pub fn parse_toml(text: &str) -> Result<BTreeMap<String, TomlValue>, String> {
+    let mut out = BTreeMap::new();
+    let mut prefix = String::new();
+    for (i, line) in text.lines().enumerate() {
+        let lineno = i + 1;
+        // Strip comments outside strings (simple heuristic: TOML-subset
+        // forbids '#' inside our strings' values on the same line unless quoted).
+        let line = strip_comment(line);
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            if !line.ends_with(']') {
+                return Err(format!("line {lineno}: malformed table header"));
+            }
+            prefix = line[1..line.len() - 1].trim().to_string();
+            if prefix.is_empty() {
+                return Err(format!("line {lineno}: empty table name"));
+            }
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| format!("line {lineno}: expected key = value"))?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(format!("line {lineno}: empty key"));
+        }
+        let value = parse_scalar(&line[eq + 1..], lineno)?;
+        let full = if prefix.is_empty() {
+            key.to_string()
+        } else {
+            format!("{prefix}.{key}")
+        };
+        if out.insert(full.clone(), value).is_some() {
+            return Err(format!("line {lineno}: duplicate key `{full}`"));
+        }
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_tables_and_types() {
+        let text = r#"
+# experiment config
+name = "table9"   # trailing comment
+trials = 3
+[cluster]
+nodes = 44
+cores = 32
+rpc_latency = 2.0e-4
+isolated = true
+[sched.slurm]
+dispatch_ms = 6.5
+ns = [4, 8, 48, 240]
+"#;
+        let m = parse_toml(text).unwrap();
+        assert_eq!(m["name"].as_str(), Some("table9"));
+        assert_eq!(m["trials"].as_i64(), Some(3));
+        assert_eq!(m["cluster.nodes"].as_i64(), Some(44));
+        assert_eq!(m["cluster.rpc_latency"].as_f64(), Some(2.0e-4));
+        assert_eq!(m["cluster.isolated"].as_bool(), Some(true));
+        assert_eq!(m["sched.slurm.dispatch_ms"].as_f64(), Some(6.5));
+        match &m["sched.slurm.ns"] {
+            TomlValue::Array(xs) => assert_eq!(xs.len(), 4),
+            other => panic!("not an array: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn string_escapes() {
+        let m = parse_toml(r#"s = "a\nb \"q\" c""#).unwrap();
+        assert_eq!(m["s"].as_str(), Some("a\nb \"q\" c"));
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let m = parse_toml(r##"s = "a#b" # comment"##).unwrap();
+        assert_eq!(m["s"].as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let m = parse_toml("n = 337_920").unwrap();
+        assert_eq!(m["n"].as_i64(), Some(337920));
+    }
+
+    #[test]
+    fn rejects_duplicates_and_garbage() {
+        assert!(parse_toml("a = 1\na = 2").is_err());
+        assert!(parse_toml("nonsense").is_err());
+        assert!(parse_toml("[unclosed").is_err());
+        assert!(parse_toml("x = @@").is_err());
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let m = parse_toml("i = 3\nf = 3.0").unwrap();
+        assert_eq!(m["i"], TomlValue::Int(3));
+        assert_eq!(m["f"], TomlValue::Float(3.0));
+        assert_eq!(m["i"].as_f64(), Some(3.0));
+    }
+}

@@ -1,0 +1,15 @@
+//! Realtime execution mode: a real (wall-clock) mini-cluster.
+//!
+//! Where `sim/` reproduces the paper's 1408-core measurements in virtual
+//! time, this module actually runs tasks: a leader thread owns the
+//! pending queue and dispatches over channels to P worker threads;
+//! workers execute either a timed spin/sleep task (the paper's `sleep`
+//! benchmark payload) or the real AOT-compiled analytics kernel through
+//! PJRT (the "data analysis job"). A configurable serial dispatch
+//! overhead plays the role of the scheduler's marginal latency t_s, so
+//! the measured wall-clock utilization curves can be compared directly
+//! against the paper's U_c(t) model — on real hardware, end to end.
+
+mod realtime;
+
+pub use realtime::{RealtimeCoordinator, RealtimeParams, RtTask, RtWork};

@@ -1,0 +1,326 @@
+//! Leader/worker realtime coordinator.
+
+use crate::sched::RunResult;
+use crate::util::prng::Prng;
+use crate::util::stats::Summary;
+use crate::workload::TraceRecord;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// What a realtime task executes.
+#[derive(Clone, Debug)]
+pub enum RtWork {
+    /// Block the worker for the given seconds (paper's sleep benchmark).
+    Sleep(f64),
+    /// Spin-wait (busy CPU) for the given seconds.
+    Spin(f64),
+    /// Run `batches` invocations of the AOT analytics payload via PJRT.
+    Analytics {
+        /// Number of (B, D) batches to process.
+        batches: u32,
+        /// Data seed.
+        seed: u64,
+    },
+}
+
+/// One realtime task.
+#[derive(Clone, Debug)]
+pub struct RtTask {
+    /// Dense id.
+    pub id: u32,
+    /// Nominal isolated duration (s) — used for T_job accounting, like
+    /// the constant task time t of the paper's benchmark.
+    pub nominal: f64,
+    /// Payload.
+    pub work: RtWork,
+}
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct RealtimeParams {
+    /// Worker thread count P.
+    pub workers: usize,
+    /// Serial dispatch overhead injected at the leader per task (s) —
+    /// the emulated marginal scheduler latency t_s. 0 to measure the
+    /// coordinator's intrinsic overhead.
+    pub dispatch_overhead: f64,
+    /// Artifacts directory for `RtWork::Analytics` (None disables PJRT;
+    /// Analytics tasks then fail).
+    pub artifacts_dir: Option<String>,
+}
+
+impl Default for RealtimeParams {
+    fn default() -> Self {
+        Self {
+            workers: 4,
+            dispatch_overhead: 0.0,
+            artifacts_dir: None,
+        }
+    }
+}
+
+/// The realtime mini-cluster.
+pub struct RealtimeCoordinator {
+    params: RealtimeParams,
+}
+
+struct Completion {
+    task: u32,
+    worker: u32,
+    start_s: f64,
+    end_s: f64,
+    checksum: f64,
+}
+
+impl RealtimeCoordinator {
+    /// New coordinator.
+    pub fn new(params: RealtimeParams) -> Self {
+        Self { params }
+    }
+
+    /// Execute all tasks; returns a [`RunResult`] in wall-clock seconds
+    /// plus the per-task trace.
+    pub fn run(&self, tasks: &[RtTask]) -> anyhow::Result<RunResult> {
+        let p = self.params.workers.max(1);
+        let epoch = Instant::now();
+        let (done_tx, done_rx) = mpsc::channel::<Completion>();
+
+        // One channel per worker.
+        let mut task_txs = Vec::with_capacity(p);
+        let mut handles = Vec::with_capacity(p);
+        for w in 0..p {
+            let (tx, rx) = mpsc::channel::<RtTask>();
+            task_txs.push(tx);
+            let done = done_tx.clone();
+            let artifacts = self.params.artifacts_dir.clone();
+            let h = std::thread::Builder::new()
+                .name(format!("worker-{w}"))
+                .spawn(move || worker_loop(w as u32, rx, done, artifacts, epoch))
+                .expect("spawn worker");
+            handles.push(h);
+        }
+        drop(done_tx);
+
+        // Leader loop: initial wave, then dispatch-on-completion with the
+        // configured serial overhead (the emulated t_s).
+        let mut pending: std::collections::VecDeque<RtTask> =
+            tasks.iter().cloned().collect();
+        let mut free: Vec<u32> = (0..p as u32).rev().collect();
+        let mut outstanding = 0usize;
+        let mut waits = Summary::new();
+        let mut trace: Vec<TraceRecord> = Vec::with_capacity(tasks.len());
+        let mut makespan = 0.0f64;
+        let mut checksum_acc = 0.0f64;
+
+        loop {
+            // Dispatch as long as there are free workers and tasks.
+            while let (Some(&worker), false) = (free.last(), pending.is_empty()) {
+                let task = pending.pop_front().unwrap();
+                free.pop();
+                // The emulated daemon latency blocks the leader (serial
+                // dispatch) without burning a core the workers need.
+                wait_for(self.params.dispatch_overhead);
+                waits.add(epoch.elapsed().as_secs_f64());
+                task_txs[worker as usize]
+                    .send(task)
+                    .expect("worker channel closed");
+                outstanding += 1;
+            }
+            if outstanding == 0 && pending.is_empty() {
+                break;
+            }
+            let c = done_rx.recv().expect("completion channel closed");
+            outstanding -= 1;
+            free.push(c.worker);
+            makespan = makespan.max(c.end_s);
+            checksum_acc += c.checksum;
+            trace.push(TraceRecord {
+                task: c.task,
+                node: c.worker,
+                slot: c.worker,
+                submit: 0.0,
+                start: c.start_s,
+                end: c.end_s,
+            });
+        }
+
+        drop(task_txs);
+        for h in handles {
+            h.join().expect("worker panicked");
+        }
+        // Checksums keep the analytics work observable (no dead-code
+        // elimination concerns, and a cheap integrity signal).
+        let _ = checksum_acc;
+
+        let t_job: f64 = tasks.iter().map(|t| t.nominal).sum::<f64>() / p as f64;
+        trace.sort_by_key(|r| r.task);
+        Ok(RunResult {
+            scheduler: format!("realtime(ts={})", self.params.dispatch_overhead),
+            workload: "realtime".into(),
+            n_tasks: tasks.len() as u64,
+            processors: p as u64,
+            t_total: makespan,
+            t_job,
+            events: 0,
+            daemon_busy: self.params.dispatch_overhead * tasks.len() as f64,
+            waits,
+            trace: Some(trace),
+        })
+    }
+}
+
+fn worker_loop(
+    id: u32,
+    rx: mpsc::Receiver<RtTask>,
+    done: mpsc::Sender<Completion>,
+    artifacts: Option<String>,
+    epoch: Instant,
+) {
+    // PJRT client created inside the worker thread (the xla handles are
+    // not Send; each worker owns its own). Eager load keeps artifact
+    // compilation out of the timed path.
+    let mut suite = artifacts.as_deref().map(|dir| {
+        crate::runtime::ArtifactSuite::load(dir).expect("load artifacts")
+    });
+    while let Ok(task) = rx.recv() {
+        let start_s = epoch.elapsed().as_secs_f64();
+        let mut checksum = 0.0f64;
+        match task.work {
+            RtWork::Sleep(s) => std::thread::sleep(Duration::from_secs_f64(s)),
+            RtWork::Spin(s) => spin_for(s),
+            RtWork::Analytics { batches, seed } => {
+                let suite = suite
+                    .as_mut()
+                    .expect("Analytics task needs artifacts_dir");
+                let mut rng = Prng::new(seed ^ (id as u64) << 32 ^ task.id as u64);
+                use crate::runtime::shapes::{ANALYTICS_B, ANALYTICS_D, ANALYTICS_F};
+                for _ in 0..batches {
+                    let x: Vec<f32> = (0..ANALYTICS_B * ANALYTICS_D)
+                        .map(|_| rng.f64() as f32 - 0.5)
+                        .collect();
+                    let w: Vec<f32> = (0..ANALYTICS_D * ANALYTICS_F)
+                        .map(|_| rng.f64() as f32 - 0.5)
+                        .collect();
+                    let (_, c) = suite.analytics(&x, &w).expect("analytics exec");
+                    checksum += c as f64;
+                }
+            }
+        }
+        let end_s = epoch.elapsed().as_secs_f64();
+        if done
+            .send(Completion {
+                task: task.id,
+                worker: id,
+                start_s,
+                end_s,
+                checksum,
+            })
+            .is_err()
+        {
+            return; // leader gone
+        }
+    }
+}
+
+/// Block for `s` seconds: sleep for multi-millisecond waits, spin below
+/// (where sleep would overshoot).
+fn wait_for(s: f64) {
+    if s > 0.002 {
+        std::thread::sleep(Duration::from_secs_f64(s));
+    } else {
+        spin_for(s);
+    }
+}
+
+/// Busy-wait for `s` seconds (sub-millisecond precision where sleep
+/// would overshoot).
+fn spin_for(s: f64) {
+    if s <= 0.0 {
+        return;
+    }
+    let start = Instant::now();
+    while start.elapsed().as_secs_f64() < s {
+        std::hint::spin_loop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sleep_tasks(n: u32, dur: f64) -> Vec<RtTask> {
+        (0..n)
+            .map(|id| RtTask {
+                id,
+                nominal: dur,
+                work: RtWork::Sleep(dur),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn executes_all_tasks_in_parallel() {
+        let coord = RealtimeCoordinator::new(RealtimeParams {
+            workers: 4,
+            ..Default::default()
+        });
+        let r = coord.run(&sleep_tasks(16, 0.02)).unwrap();
+        r.check_invariants().unwrap();
+        assert_eq!(r.n_tasks, 16);
+        // 16 × 20 ms on 4 workers ≈ 80 ms ideal; allow generous slack.
+        assert!(r.t_total >= 0.079, "t_total={}", r.t_total);
+        assert!(r.t_total < 0.5, "t_total={}", r.t_total);
+        // All 4 workers used.
+        let trace = r.trace.as_ref().unwrap();
+        let mut workers: Vec<u32> = trace.iter().map(|t| t.node).collect();
+        workers.sort_unstable();
+        workers.dedup();
+        assert_eq!(workers.len(), 4);
+    }
+
+    #[test]
+    fn dispatch_overhead_degrades_utilization() {
+        let fast = RealtimeCoordinator::new(RealtimeParams {
+            workers: 2,
+            dispatch_overhead: 0.0,
+            artifacts_dir: None,
+        });
+        let slow = RealtimeCoordinator::new(RealtimeParams {
+            workers: 2,
+            dispatch_overhead: 0.02,
+            artifacts_dir: None,
+        });
+        let tasks = sleep_tasks(20, 0.01);
+        let u_fast = fast.run(&tasks).unwrap().utilization();
+        let u_slow = slow.run(&tasks).unwrap().utilization();
+        assert!(
+            u_slow < u_fast * 0.8,
+            "u_slow={u_slow} should trail u_fast={u_fast}"
+        );
+    }
+
+    #[test]
+    fn spin_work_supported() {
+        let coord = RealtimeCoordinator::new(RealtimeParams {
+            workers: 2,
+            ..Default::default()
+        });
+        let tasks: Vec<RtTask> = (0..4)
+            .map(|id| RtTask {
+                id,
+                nominal: 0.005,
+                work: RtWork::Spin(0.005),
+            })
+            .collect();
+        let r = coord.run(&tasks).unwrap();
+        assert!(r.t_total >= 0.0099, "t_total={}", r.t_total);
+    }
+
+    #[test]
+    fn empty_task_list_is_fine() {
+        let coord = RealtimeCoordinator::new(RealtimeParams::default());
+        let r = coord.run(&[]).unwrap();
+        assert_eq!(r.n_tasks, 0);
+        assert_eq!(r.t_total, 0.0);
+    }
+}

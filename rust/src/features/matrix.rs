@@ -1,0 +1,498 @@
+//! The feature matrix data and its rendering.
+
+use crate::util::table::Table;
+
+/// The eight representative schedulers of Section 3.3, in table order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedulerInfo {
+    /// IBM Platform LSF.
+    Lsf,
+    /// OpenLAVA (open-source LSF derivative).
+    OpenLava,
+    /// Slurm.
+    Slurm,
+    /// Grid Engine (Univa / Son of Grid Engine).
+    GridEngine,
+    /// Pacora (research scheduler).
+    Pacora,
+    /// Apache Hadoop YARN.
+    Yarn,
+    /// Apache Mesos.
+    Mesos,
+    /// Google Kubernetes.
+    Kubernetes,
+}
+
+impl SchedulerInfo {
+    /// All eight, in the paper's column order.
+    pub fn all() -> [SchedulerInfo; 8] {
+        use SchedulerInfo::*;
+        [Lsf, OpenLava, Slurm, GridEngine, Pacora, Yarn, Mesos, Kubernetes]
+    }
+
+    /// Column header.
+    pub fn name(&self) -> &'static str {
+        use SchedulerInfo::*;
+        match self {
+            Lsf => "LSF",
+            OpenLava => "OpenLAVA",
+            Slurm => "Slurm",
+            GridEngine => "Grid Engine",
+            Pacora => "Pacora",
+            Yarn => "YARN",
+            Mesos => "Mesos",
+            Kubernetes => "Kubernetes",
+        }
+    }
+
+    /// HPC or Big Data family (Table 1 "Type" row).
+    pub fn family(&self) -> &'static str {
+        use SchedulerInfo::*;
+        match self {
+            Lsf | OpenLava | Slurm | GridEngine | Pacora => "HPC",
+            Yarn | Mesos | Kubernetes => "Big Data",
+        }
+    }
+}
+
+/// A cell in the feature matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FeatureValue {
+    /// Supported (✓).
+    Yes,
+    /// Not supported (blank in the paper).
+    No,
+    /// Supported with a caveat (footnotes in the paper).
+    Partial(&'static str),
+    /// Not applicable / unknown (— for Pacora).
+    NA,
+    /// Free-text cell (e.g. "Open source", "10K+").
+    Text(&'static str),
+}
+
+impl FeatureValue {
+    /// Render for tables.
+    pub fn render(&self) -> String {
+        match self {
+            FeatureValue::Yes => "yes".into(),
+            FeatureValue::No => "".into(),
+            FeatureValue::Partial(note) => format!("yes*({note})"),
+            FeatureValue::NA => "-".into(),
+            FeatureValue::Text(t) => (*t).into(),
+        }
+    }
+
+    /// True for Yes/Partial.
+    pub fn supported(&self) -> bool {
+        matches!(self, FeatureValue::Yes | FeatureValue::Partial(_))
+    }
+}
+
+/// The seven table categories of Section 3.3.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FeatureCategory {
+    /// Table 1.
+    Metadata,
+    /// Table 2.
+    JobTypes,
+    /// Table 3.
+    JobScheduling,
+    /// Table 4.
+    ResourceManagement,
+    /// Table 5.
+    JobPlacement,
+    /// Table 6.
+    SchedulingPerformance,
+    /// Table 7.
+    JobExecution,
+}
+
+impl FeatureCategory {
+    /// All, in paper table order (1..=7).
+    pub fn all() -> [FeatureCategory; 7] {
+        use FeatureCategory::*;
+        [
+            Metadata,
+            JobTypes,
+            JobScheduling,
+            ResourceManagement,
+            JobPlacement,
+            SchedulingPerformance,
+            JobExecution,
+        ]
+    }
+
+    /// Paper table number.
+    pub fn table_number(&self) -> u32 {
+        Self::all().iter().position(|c| c == self).unwrap() as u32 + 1
+    }
+
+    /// Table title.
+    pub fn title(&self) -> &'static str {
+        use FeatureCategory::*;
+        match self {
+            Metadata => "Table 1: Metadata features",
+            JobTypes => "Table 2: Job type features",
+            JobScheduling => "Table 3: Job scheduling features",
+            ResourceManagement => "Table 4: Resource management features",
+            JobPlacement => "Table 5: Job placement features",
+            SchedulingPerformance => "Table 6: Scheduling performance features",
+            JobExecution => "Table 7: Job execution features",
+        }
+    }
+}
+
+/// One feature row: name, category, and the eight scheduler cells in
+/// [`SchedulerInfo::all`] order.
+pub struct FeatureRow {
+    /// Row label.
+    pub name: &'static str,
+    /// Which paper table it belongs to.
+    pub category: FeatureCategory,
+    /// Cells for the eight schedulers.
+    pub values: [FeatureValue; 8],
+}
+
+use FeatureCategory as C;
+use FeatureValue::{No, Partial, Text, Yes, NA};
+
+/// The full matrix, rows in paper order. Cell order:
+/// LSF, OpenLAVA, Slurm, Grid Engine, Pacora, YARN, Mesos, Kubernetes.
+pub fn all_features() -> Vec<FeatureRow> {
+    vec![
+        // ------------------------------------------------ Table 1
+        FeatureRow {
+            name: "Type",
+            category: C::Metadata,
+            values: [
+                Text("HPC"), Text("HPC"), Text("HPC"), Text("HPC"), Text("HPC"),
+                Text("Big Data"), Text("Big Data"), Text("Big Data"),
+            ],
+        },
+        FeatureRow {
+            name: "Actively developed",
+            category: C::Metadata,
+            values: [Yes, Yes, Yes, Yes, Partial("within Microsoft"), Yes, Yes, Yes],
+        },
+        FeatureRow {
+            name: "Cost / licensing",
+            category: C::Metadata,
+            values: [
+                Text("$$$"), Text("Open source"), Text("Open source"),
+                Text("$$$, Open source"), Text("N/A"), Text("Open source"),
+                Text("Open source"), Text("Open source"),
+            ],
+        },
+        FeatureRow {
+            name: "OS support",
+            category: C::Metadata,
+            values: [
+                Text("Linux"), Text("Linux, Cygwin"), Text("Linux, *nix"),
+                Text("Linux, *nix"), Text("N/A"), Text("Linux"), Text("Linux"),
+                Text("Linux"),
+            ],
+        },
+        FeatureRow {
+            name: "Language support",
+            category: C::Metadata,
+            values: [
+                Text("All"), Text("All"), Text("All"), Text("All"), Text("N/A"),
+                Text("Java, Python (strongest)"), Text("All"), Text("All"),
+            ],
+        },
+        FeatureRow {
+            name: "Access control / security",
+            category: C::Metadata,
+            values: [Yes, Yes, Yes, Yes, NA, Yes, Yes, Yes],
+        },
+        // ------------------------------------------------ Table 2
+        FeatureRow {
+            name: "Parallel and array jobs",
+            category: C::JobTypes,
+            values: [
+                Text("Both"), Text("Both"), Text("Both"), Text("Both"), Text("N/A"),
+                Text("Array"), Text("Array"), Text("Array"),
+            ],
+        },
+        FeatureRow {
+            name: "Queue support",
+            category: C::JobTypes,
+            values: [
+                Yes, Yes, Yes, Yes, NA,
+                Partial("capacity scheduler"),
+                Partial("frameworks act as queues"),
+                No,
+            ],
+        },
+        FeatureRow {
+            name: "Multiple resource managers (metascheduling)",
+            category: C::JobTypes,
+            values: [No, No, No, No, NA, No, Yes, No],
+        },
+        // ------------------------------------------------ Table 3
+        FeatureRow {
+            name: "Timesharing",
+            category: C::JobScheduling,
+            values: [Yes, Yes, Yes, Yes, NA, Yes, Yes, Yes],
+        },
+        FeatureRow {
+            name: "Backfilling",
+            category: C::JobScheduling,
+            values: [Yes, Yes, Yes, Yes, NA, No, No, No],
+        },
+        FeatureRow {
+            name: "Job chunking",
+            category: C::JobScheduling,
+            values: [No, No, No, Yes, NA, No, No, No],
+        },
+        FeatureRow {
+            name: "Bin packing",
+            category: C::JobScheduling,
+            values: [No, No, Yes, No, NA, No, No, No],
+        },
+        FeatureRow {
+            name: "Gang scheduling",
+            category: C::JobScheduling,
+            values: [No, No, Yes, No, NA, No, No, No],
+        },
+        FeatureRow {
+            name: "Job dependencies and DAGs",
+            category: C::JobScheduling,
+            values: [
+                Yes, Yes, Yes, Yes, NA, Yes,
+                Partial("if framework supports"),
+                No,
+            ],
+        },
+        // ------------------------------------------------ Table 4
+        FeatureRow {
+            name: "Resource heterogeneity",
+            category: C::ResourceManagement,
+            values: [Yes, Yes, Yes, Yes, Yes, Yes, Yes, Yes],
+        },
+        FeatureRow {
+            name: "Resource allocation policy",
+            category: C::ResourceManagement,
+            values: [Yes, Yes, Yes, Yes, Yes, Yes, Yes, Yes],
+        },
+        FeatureRow {
+            name: "Static and dynamic resources",
+            category: C::ResourceManagement,
+            values: [
+                Text("Both"), Text("Both"), Text("Both"), Text("Both"), Text("Both"),
+                Text("Both"), Text("Both"), Text("Both"),
+            ],
+        },
+        FeatureRow {
+            name: "Network-aware scheduling",
+            category: C::ResourceManagement,
+            values: [Yes, No, Yes, Yes, NA, No, No, No],
+        },
+        // ------------------------------------------------ Table 5
+        FeatureRow {
+            name: "Intelligent scheduling",
+            category: C::JobPlacement,
+            values: [
+                Yes, Yes, Yes, Yes, Yes,
+                Partial("Fair/Capacity schedulers"),
+                Partial("if framework supports"),
+                No,
+            ],
+        },
+        FeatureRow {
+            name: "Prioritization schema",
+            category: C::JobPlacement,
+            values: [Yes, Yes, Yes, Yes, NA, Yes, Yes, Yes],
+        },
+        FeatureRow {
+            name: "Job replacement and reordering",
+            category: C::JobPlacement,
+            values: [Yes, Yes, Yes, Yes, NA, No, No, No],
+        },
+        FeatureRow {
+            name: "Advanced reservations",
+            category: C::JobPlacement,
+            values: [Yes, No, Yes, Yes, NA, No, No, No],
+        },
+        FeatureRow {
+            name: "Power-aware scheduling",
+            category: C::JobPlacement,
+            values: [Yes, No, Yes, Yes, NA, No, No, No],
+        },
+        FeatureRow {
+            name: "User-related job placement",
+            category: C::JobPlacement,
+            values: [Yes, No, Yes, Yes, NA, No, No, No],
+        },
+        FeatureRow {
+            name: "Job-related job placement",
+            category: C::JobPlacement,
+            values: [Yes, No, Yes, Yes, NA, No, No, No],
+        },
+        FeatureRow {
+            name: "Data-related job placement",
+            category: C::JobPlacement,
+            values: [No, No, No, No, NA, Yes, No, No],
+        },
+        // ------------------------------------------------ Table 6
+        FeatureRow {
+            name: "Centralized vs. distributed",
+            category: C::SchedulingPerformance,
+            values: [
+                Text("Cent."), Text("Cent."), Text("Cent."), Text("Cent."),
+                Text("Cent."), Text("Cent."), Text("Dist."), Text("Cent."),
+            ],
+        },
+        FeatureRow {
+            name: "Scheduler fault tolerance",
+            category: C::SchedulingPerformance,
+            values: [Yes, No, Yes, Yes, No, Yes, Yes, Yes],
+        },
+        FeatureRow {
+            name: "Scalability and throughput (job slots)",
+            category: C::SchedulingPerformance,
+            values: [
+                Text("10K+"), Text("1K+"), Text("100K+"), Text("10K+"), Text("10K+"),
+                Text("100K+"), Text("100K+"), Text("1K+"),
+            ],
+        },
+        // ------------------------------------------------ Table 7
+        FeatureRow {
+            name: "Prolog/epilog support",
+            category: C::JobExecution,
+            values: [Yes, No, Yes, Yes, NA, No, Yes, Yes],
+        },
+        FeatureRow {
+            name: "Data movement / file staging",
+            category: C::JobExecution,
+            values: [Yes, No, Yes, Yes, NA, No, No, No],
+        },
+        FeatureRow {
+            name: "Checkpointing",
+            category: C::JobExecution,
+            values: [Yes, Yes, Yes, Yes, NA, No, No, No],
+        },
+        FeatureRow {
+            name: "Job migration",
+            category: C::JobExecution,
+            values: [
+                Yes, Yes, Yes, Yes, NA, No,
+                Partial("user-level"),
+                Partial("user-level"),
+            ],
+        },
+        FeatureRow {
+            name: "Job restarting",
+            category: C::JobExecution,
+            values: [Yes, Yes, Yes, Yes, NA, Yes, Yes, Yes],
+        },
+        FeatureRow {
+            name: "Job preemption",
+            category: C::JobExecution,
+            values: [Yes, Yes, Yes, Yes, NA, No, Yes, Yes],
+        },
+    ]
+}
+
+/// The eight schedulers (paper column order).
+pub fn schedulers() -> [SchedulerInfo; 8] {
+    SchedulerInfo::all()
+}
+
+/// Render one of the paper's Tables 1–7.
+pub fn feature_table(category: FeatureCategory) -> Table {
+    let mut header = vec!["Feature"];
+    let scheds = SchedulerInfo::all();
+    for s in &scheds {
+        header.push(s.name());
+    }
+    let mut table = Table::new(category.title(), &header);
+    for row in all_features().iter().filter(|r| r.category == category) {
+        let mut cells = vec![row.name.to_string()];
+        cells.extend(row.values.iter().map(|v| v.render()));
+        table.row(&cells);
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_category_has_rows() {
+        for cat in FeatureCategory::all() {
+            let t = feature_table(cat);
+            assert!(!t.is_empty(), "{:?} empty", cat);
+        }
+    }
+
+    #[test]
+    fn paper_row_counts() {
+        let count = |c: FeatureCategory| {
+            all_features().iter().filter(|r| r.category == c).count()
+        };
+        assert_eq!(count(C::Metadata), 6);
+        assert_eq!(count(C::JobTypes), 3);
+        assert_eq!(count(C::JobScheduling), 6);
+        assert_eq!(count(C::ResourceManagement), 4);
+        assert_eq!(count(C::JobPlacement), 8);
+        assert_eq!(count(C::SchedulingPerformance), 3);
+        assert_eq!(count(C::JobExecution), 6);
+    }
+
+    #[test]
+    fn key_paper_facts_hold() {
+        let rows = all_features();
+        let get = |name: &str| rows.iter().find(|r| r.name == name).unwrap();
+        // Mesos is the only metascheduler (Table 2).
+        let meta = get("Multiple resource managers (metascheduling)");
+        let scheds = SchedulerInfo::all();
+        for (i, s) in scheds.iter().enumerate() {
+            let expect = *s == SchedulerInfo::Mesos;
+            assert_eq!(
+                meta.values[i].supported(),
+                expect,
+                "metascheduling for {}",
+                s.name()
+            );
+        }
+        // Backfilling is HPC-only (Table 3).
+        let bf = get("Backfilling");
+        for (i, s) in scheds.iter().enumerate() {
+            if s.family() == "Big Data" {
+                assert!(!bf.values[i].supported(), "{} backfill", s.name());
+            }
+        }
+        // Only YARN does data-related placement (Table 5).
+        let dp = get("Data-related job placement");
+        for (i, s) in scheds.iter().enumerate() {
+            assert_eq!(dp.values[i].supported(), *s == SchedulerInfo::Yarn);
+        }
+        // Mesos is the only distributed scheduler (Table 6).
+        let cd = get("Centralized vs. distributed");
+        for (i, s) in scheds.iter().enumerate() {
+            let is_dist = matches!(cd.values[i], FeatureValue::Text("Dist."));
+            assert_eq!(is_dist, *s == SchedulerInfo::Mesos);
+        }
+    }
+
+    #[test]
+    fn all_rows_have_eight_columns_and_render() {
+        for row in all_features() {
+            assert_eq!(row.values.len(), 8);
+            for v in &row.values {
+                let _ = v.render();
+            }
+        }
+        let t = feature_table(C::Metadata);
+        let text = t.render();
+        assert!(text.contains("Slurm") && text.contains("Kubernetes"));
+    }
+
+    #[test]
+    fn table_numbers() {
+        assert_eq!(C::Metadata.table_number(), 1);
+        assert_eq!(C::JobExecution.table_number(), 7);
+    }
+}

@@ -1,0 +1,12 @@
+//! Scheduler feature-comparison database — the paper's Section 3
+//! (Tables 1–7) as queryable data.
+//!
+//! Eight representative schedulers (LSF, OpenLAVA, Slurm, Grid Engine,
+//! Pacora, YARN, Mesos, Kubernetes) × the feature set of §3.2, grouped
+//! into the same seven categories the paper tables use.
+
+mod matrix;
+
+pub use matrix::{
+    all_features, feature_table, schedulers, FeatureCategory, FeatureValue, SchedulerInfo,
+};

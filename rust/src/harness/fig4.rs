@@ -1,0 +1,129 @@
+//! Figure 4: ΔT vs tasks-per-processor (log–log), measured trials plus
+//! the fitted power-law model line, one panel per scheduler.
+
+use super::sweep::{run_sweep, SchedulerSweep};
+use crate::config::ExperimentConfig;
+use crate::util::fit::{fit_power_law, PowerLawFit};
+use crate::util::plot::Plot;
+use crate::util::table::Table;
+
+/// One scheduler panel of Figure 4.
+pub struct Fig4Panel {
+    /// Scheduler display name.
+    pub scheduler: String,
+    /// The measured sweep.
+    pub sweep: SchedulerSweep,
+    /// Power-law fit over the pooled trials.
+    pub fit: PowerLawFit,
+}
+
+/// All panels.
+pub struct Fig4Report {
+    /// Panel (a)–(d) in scheduler order.
+    pub panels: Vec<Fig4Panel>,
+}
+
+/// Run Figure 4.
+pub fn fig4(cfg: &ExperimentConfig) -> Fig4Report {
+    let panels = cfg
+        .schedulers
+        .iter()
+        .map(|&choice| {
+            let sweep = run_sweep(choice, cfg, &cfg.n_sweep, None);
+            let pts = sweep.fit_points();
+            let ns: Vec<f64> = pts.iter().map(|p| p.0).collect();
+            let dts: Vec<f64> = pts.iter().map(|p| p.1).collect();
+            let fit = fit_power_law(&ns, &dts);
+            Fig4Panel {
+                scheduler: sweep.scheduler.clone(),
+                sweep,
+                fit,
+            }
+        })
+        .collect();
+    Fig4Report { panels }
+}
+
+impl Fig4Report {
+    /// ASCII log-log plots, one per scheduler (measured ○ + model ·).
+    pub fn render_plots(&self) -> String {
+        let mut out = String::new();
+        for (i, panel) in self.panels.iter().enumerate() {
+            let mut plot = Plot::new(
+                format!(
+                    "Figure 4{}: {} — ΔT vs n (t_s={:.2}, α={:.2})",
+                    (b'a' + i as u8) as char,
+                    panel.scheduler,
+                    panel.fit.t_s,
+                    panel.fit.alpha_s
+                ),
+                "tasks per processor n",
+                "ΔT (s)",
+            )
+            .loglog()
+            .size(60, 16);
+            plot.series("measured", 'o', panel.sweep.fit_points());
+            // Model line sampled densely over the measured range.
+            let (lo, hi) = panel
+                .sweep
+                .points
+                .iter()
+                .fold((f64::MAX, f64::MIN), |(lo, hi), p| {
+                    (lo.min(p.n as f64), hi.max(p.n as f64))
+                });
+            let model: Vec<(f64, f64)> = (0..40)
+                .map(|i| {
+                    let n = lo * (hi / lo).powf(i as f64 / 39.0);
+                    (n, panel.fit.delta_t(n))
+                })
+                .collect();
+            plot.series("model t_s·n^α", '.', model);
+            out.push_str(&plot.render());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// CSV series (scheduler, n, trial, delta_t).
+    pub fn to_csv(&self) -> String {
+        let mut t = Table::new("", &["scheduler", "n", "trial", "delta_t_s"]);
+        for panel in &self.panels {
+            for point in &panel.sweep.points {
+                for (trial, run) in point.trials.iter().enumerate() {
+                    t.row(&[
+                        panel.scheduler.clone(),
+                        point.n.to_string(),
+                        trial.to_string(),
+                        format!("{:.3}", run.delta_t()),
+                    ]);
+                }
+            }
+        }
+        t.to_csv()
+    }
+
+    /// Shape checks: ΔT grows with n for every scheduler (beyond shot
+    /// noise) and the model fit is tight (R² high) at high n.
+    pub fn check_shape(&self) -> Result<(), String> {
+        for panel in &self.panels {
+            if panel.sweep.points.len() < 3 {
+                continue;
+            }
+            let first = panel.sweep.points.first().unwrap();
+            let last = panel.sweep.points.last().unwrap();
+            if last.mean_delta_t() <= first.mean_delta_t() {
+                return Err(format!(
+                    "{}: ΔT not increasing over the sweep",
+                    panel.scheduler
+                ));
+            }
+            if panel.fit.r2 < 0.85 {
+                return Err(format!(
+                    "{}: power-law fit R²={:.3} too low",
+                    panel.scheduler, panel.fit.r2
+                ));
+            }
+        }
+        Ok(())
+    }
+}

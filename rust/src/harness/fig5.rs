@@ -1,0 +1,187 @@
+//! Figure 5: scheduler utilization as a function of task time —
+//! measured points plus (a) the approximate model U⁻¹ ≈ 1 + t_s/t and
+//! (b) the exact model U⁻¹ = 1 + t_s n^α/(t n). Model curves are
+//! evaluated through the AOT `utilization` artifact when available,
+//! falling back to the rust implementation.
+
+use super::sweep::SchedulerSweep;
+use super::table10::{table10, Table10Report};
+use crate::config::ExperimentConfig;
+use crate::model::{u_constant_approx, u_constant_exact};
+use crate::util::plot::Plot;
+use crate::util::table::Table;
+use crate::workload::TABLE9_JOB_TIME_PER_PROC;
+
+/// One scheduler's measured + modeled utilization curve.
+pub struct Fig5Series {
+    /// Scheduler display name.
+    pub scheduler: String,
+    /// Measured (t, U) points.
+    pub measured: Vec<(f64, f64)>,
+    /// Approximate model curve (t, U).
+    pub model_approx: Vec<(f64, f64)>,
+    /// Exact model curve (t, U).
+    pub model_exact: Vec<(f64, f64)>,
+}
+
+/// Figure 5 data.
+pub struct Fig5Report {
+    /// One series per scheduler.
+    pub series: Vec<Fig5Series>,
+    /// Whether the model curves came from the PJRT artifact.
+    pub used_pjrt: bool,
+}
+
+/// Run Figure 5 (reuses the Table 10 sweep + fits).
+pub fn fig5(cfg: &ExperimentConfig, artifacts_dir: Option<&str>) -> Fig5Report {
+    let t10 = table10(cfg, artifacts_dir);
+    fig5_from(&t10, artifacts_dir)
+}
+
+/// Build Figure 5 from an existing Table 10 report.
+pub fn fig5_from(t10: &Table10Report, artifacts_dir: Option<&str>) -> Fig5Report {
+    let t_grid: Vec<f64> = (0..crate::runtime::shapes::UTIL_T)
+        .map(|i| 0.5 * (120.0f64 / 0.5).powf(i as f64 / (crate::runtime::shapes::UTIL_T - 1) as f64))
+        .collect();
+
+    // Try the PJRT path for the model curves (≤8 series per call).
+    let mut used_pjrt = false;
+    let pjrt_curves = artifacts_dir.and_then(|dir| {
+        let mut suite = crate::runtime::ArtifactSuite::load(dir).ok()?;
+        let fits: Vec<crate::runtime::PjrtFit> = t10
+            .fits
+            .iter()
+            .map(|f| crate::runtime::PjrtFit {
+                t_s: f.rust_fit.t_s,
+                alpha_s: f.rust_fit.alpha_s,
+                r2: f.rust_fit.r2,
+            })
+            .collect();
+        if fits.len() > crate::runtime::shapes::FIT_S {
+            return None;
+        }
+        suite.utilization_curves(&fits, &t_grid).ok()
+    });
+    if pjrt_curves.is_some() {
+        used_pjrt = true;
+    }
+
+    let series = t10
+        .fits
+        .iter()
+        .enumerate()
+        .map(|(i, f)| {
+            let measured = measured_points(&f.sweep);
+            let (approx, exact) = match &pjrt_curves {
+                Some((a, e)) => (
+                    t_grid.iter().copied().zip(a[i].iter().copied()).collect(),
+                    t_grid.iter().copied().zip(e[i].iter().copied()).collect(),
+                ),
+                None => {
+                    let a: Vec<(f64, f64)> = t_grid
+                        .iter()
+                        .map(|&t| (t, u_constant_approx(f.rust_fit.t_s, t)))
+                        .collect();
+                    let e: Vec<(f64, f64)> = t_grid
+                        .iter()
+                        .map(|&t| {
+                            let n = TABLE9_JOB_TIME_PER_PROC / t;
+                            (t, u_constant_exact(f.rust_fit.t_s, f.rust_fit.alpha_s, t, n))
+                        })
+                        .collect();
+                    (a, e)
+                }
+            };
+            Fig5Series {
+                scheduler: f.scheduler.clone(),
+                measured,
+                model_approx: approx,
+                model_exact: exact,
+            }
+        })
+        .collect();
+    Fig5Report { series, used_pjrt }
+}
+
+fn measured_points(sweep: &SchedulerSweep) -> Vec<(f64, f64)> {
+    sweep
+        .points
+        .iter()
+        .map(|p| (p.t, p.mean_utilization()))
+        .collect()
+}
+
+impl Fig5Report {
+    /// ASCII plot: measured points (per-scheduler glyphs) + exact model.
+    pub fn render_plot(&self) -> String {
+        let glyphs = ['S', 'G', 'M', 'Y', '5', '6', '7', '8'];
+        let mut plot = Plot::new(
+            "Figure 5: utilization vs task time (points=measured, .=exact model)",
+            "task time t (s)",
+            "utilization U",
+        )
+        .size(70, 20);
+        for (i, s) in self.series.iter().enumerate() {
+            plot.series(
+                s.scheduler.clone(),
+                glyphs[i % glyphs.len()],
+                s.measured.clone(),
+            );
+            plot.series(format!("{} model", s.scheduler), '.', s.model_exact.clone());
+        }
+        plot.render()
+    }
+
+    /// CSV of measured + model curves.
+    pub fn to_csv(&self) -> String {
+        let mut t = Table::new(
+            "",
+            &["scheduler", "kind", "t_s_task", "utilization"],
+        );
+        for s in &self.series {
+            for &(x, u) in &s.measured {
+                t.row(&[s.scheduler.clone(), "measured".into(), format!("{x:.4}"), format!("{u:.4}")]);
+            }
+            for &(x, u) in &s.model_approx {
+                t.row(&[s.scheduler.clone(), "model_approx".into(), format!("{x:.4}"), format!("{u:.4}")]);
+            }
+            for &(x, u) in &s.model_exact {
+                t.row(&[s.scheduler.clone(), "model_exact".into(), format!("{x:.4}"), format!("{u:.4}")]);
+            }
+        }
+        t.to_csv()
+    }
+
+    /// Shape checks (paper §5.2): U < 15 % at t = 1 s for every measured
+    /// scheduler; U > 70 % at t = 60 s except YARN; measured utilization
+    /// is (weakly) increasing in t.
+    pub fn check_shape(&self) -> Result<(), String> {
+        for s in &self.series {
+            if let Some(&(_, u1)) = s.measured.iter().find(|(t, _)| (*t - 1.0).abs() < 0.01) {
+                if u1 > 0.15 {
+                    return Err(format!("{}: U(1s)={u1:.2} should be <0.15", s.scheduler));
+                }
+            }
+            if let Some(&(_, u60)) = s.measured.iter().find(|(t, _)| (*t - 60.0).abs() < 0.01) {
+                let floor = if s.scheduler.contains("YARN") { 0.5 } else { 0.7 };
+                if u60 < floor {
+                    return Err(format!(
+                        "{}: U(60s)={u60:.2} should be >{floor}",
+                        s.scheduler
+                    ));
+                }
+            }
+            let mut sorted = s.measured.clone();
+            sorted.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            for w in sorted.windows(2) {
+                if w[1].1 < w[0].1 * 0.8 {
+                    return Err(format!(
+                        "{}: utilization strongly non-monotone at t={}",
+                        s.scheduler, w[1].0
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,143 @@
+//! Figure 6: ΔT vs tasks-per-processor with multilevel scheduling
+//! (LLMapReduce) on Slurm, Grid Engine and Mesos — compared against the
+//! regular (non-multilevel) runs to measure the ΔT reduction factors.
+
+use super::sweep::{run_sweep, SchedulerSweep};
+use crate::config::{ExperimentConfig, SchedulerChoice};
+use crate::multilevel::MultilevelParams;
+use crate::util::plot::Plot;
+use crate::util::table::{fnum, Table};
+
+/// One scheduler's regular-vs-multilevel comparison.
+pub struct Fig6Panel {
+    /// Scheduler display name (inner scheduler).
+    pub scheduler: String,
+    /// Regular submission sweep.
+    pub regular: SchedulerSweep,
+    /// Multilevel (aggregated) sweep.
+    pub multilevel: SchedulerSweep,
+}
+
+impl Fig6Panel {
+    /// ΔT reduction factor at the largest common n (the paper quotes
+    /// 30×/40×/100× for Slurm/GE/Mesos).
+    pub fn reduction_at_max_n(&self) -> Option<f64> {
+        let reg = self.regular.points.last()?;
+        let ml = self
+            .multilevel
+            .points
+            .iter()
+            .find(|p| p.n == reg.n)?;
+        Some(reg.mean_delta_t() / ml.mean_delta_t().max(1e-9))
+    }
+}
+
+/// Figure 6 data.
+pub struct Fig6Report {
+    /// Panels (a)–(c): Slurm, Grid Engine, Mesos.
+    pub panels: Vec<Fig6Panel>,
+}
+
+/// The three schedulers the paper runs multilevel scheduling on.
+pub fn fig6_schedulers() -> [SchedulerChoice; 3] {
+    [
+        SchedulerChoice::Slurm,
+        SchedulerChoice::GridEngine,
+        SchedulerChoice::Mesos,
+    ]
+}
+
+/// Run Figure 6.
+pub fn fig6(cfg: &ExperimentConfig, ml_params: &MultilevelParams) -> Fig6Report {
+    let panels = fig6_schedulers()
+        .iter()
+        .map(|&choice| {
+            let regular = run_sweep(choice, cfg, &cfg.n_sweep, None);
+            let multilevel = run_sweep(choice, cfg, &cfg.n_sweep, Some(ml_params));
+            Fig6Panel {
+                scheduler: regular.scheduler.clone(),
+                regular,
+                multilevel,
+            }
+        })
+        .collect();
+    Fig6Report { panels }
+}
+
+impl Fig6Report {
+    /// ASCII log-log plots: regular (o) vs multilevel (x) ΔT.
+    pub fn render_plots(&self) -> String {
+        let mut out = String::new();
+        for (i, panel) in self.panels.iter().enumerate() {
+            let mut plot = Plot::new(
+                format!(
+                    "Figure 6{}: {} — ΔT vs n, multilevel vs regular",
+                    (b'a' + i as u8) as char,
+                    panel.scheduler
+                ),
+                "tasks per processor n",
+                "ΔT (s)",
+            )
+            .loglog()
+            .size(60, 16);
+            plot.series("regular", 'o', panel.regular.fit_points());
+            plot.series("multilevel", 'x', panel.multilevel.fit_points());
+            out.push_str(&plot.render());
+            if let Some(red) = panel.reduction_at_max_n() {
+                out.push_str(&format!("   ΔT reduction at max n: {red:.0}x\n"));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Summary table.
+    pub fn render_table(&self) -> Table {
+        let mut t = Table::new(
+            "Figure 6 summary: multilevel ΔT (s) by n",
+            &["scheduler", "n", "ΔT regular", "ΔT multilevel", "reduction"],
+        );
+        for panel in &self.panels {
+            for reg in &panel.regular.points {
+                if let Some(ml) = panel.multilevel.points.iter().find(|p| p.n == reg.n) {
+                    let (dr, dm) = (reg.mean_delta_t(), ml.mean_delta_t());
+                    t.row(&[
+                        panel.scheduler.clone(),
+                        reg.n.to_string(),
+                        fnum(dr),
+                        fnum(dm),
+                        format!("{:.0}x", dr / dm.max(1e-9)),
+                    ]);
+                }
+            }
+        }
+        t
+    }
+
+    /// Shape checks (paper §5.3): multilevel ΔT stays bounded (< 120 s)
+    /// at every n, and the reduction at the largest n is ≥ 10×.
+    pub fn check_shape(&self) -> Result<(), String> {
+        for panel in &self.panels {
+            for p in &panel.multilevel.points {
+                let dt = p.mean_delta_t();
+                if dt > 120.0 {
+                    return Err(format!(
+                        "{} multilevel ΔT({}) = {dt:.0}s exceeds 120 s",
+                        panel.scheduler, p.n
+                    ));
+                }
+            }
+            match panel.reduction_at_max_n() {
+                Some(red) if red >= 10.0 => {}
+                Some(red) => {
+                    return Err(format!(
+                        "{}: ΔT reduction {red:.1}x at max n below 10x",
+                        panel.scheduler
+                    ));
+                }
+                None => return Err(format!("{}: no common max-n point", panel.scheduler)),
+            }
+        }
+        Ok(())
+    }
+}

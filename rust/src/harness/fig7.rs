@@ -1,0 +1,114 @@
+//! Figure 7: utilization as a function of task count for regular vs
+//! multilevel scheduling (Grid Engine, Slurm, Mesos) — the paper's
+//! headline result: multilevel scheduling brings 1–5 s task utilization
+//! to ~90 %, on par with 30–60 s tasks.
+
+use super::fig6::{fig6, Fig6Report};
+use crate::config::ExperimentConfig;
+use crate::multilevel::MultilevelParams;
+use crate::util::plot::Plot;
+use crate::util::table::Table;
+
+/// Figure 7 data (derived from the Figure 6 runs).
+pub struct Fig7Report {
+    /// Underlying regular/multilevel sweeps.
+    pub fig6: Fig6Report,
+}
+
+/// Run Figure 7.
+pub fn fig7(cfg: &ExperimentConfig, ml_params: &MultilevelParams) -> Fig7Report {
+    Fig7Report {
+        fig6: fig6(cfg, ml_params),
+    }
+}
+
+impl Fig7Report {
+    /// ASCII plots of U vs task time, regular (o) vs multilevel (x).
+    pub fn render_plots(&self) -> String {
+        let mut out = String::new();
+        for (i, panel) in self.fig6.panels.iter().enumerate() {
+            let mut plot = Plot::new(
+                format!(
+                    "Figure 7{}: {} — utilization, regular vs multilevel",
+                    (b'a' + i as u8) as char,
+                    panel.scheduler
+                ),
+                "task time t (s)",
+                "utilization U",
+            )
+            .size(60, 14);
+            let reg: Vec<(f64, f64)> = panel
+                .regular
+                .points
+                .iter()
+                .map(|p| (p.t, p.mean_utilization()))
+                .collect();
+            let ml: Vec<(f64, f64)> = panel
+                .multilevel
+                .points
+                .iter()
+                .map(|p| (p.t, p.mean_utilization()))
+                .collect();
+            plot.series("regular", 'o', reg);
+            plot.series("multilevel", 'x', ml);
+            out.push_str(&plot.render());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Summary table of utilizations.
+    pub fn render_table(&self) -> Table {
+        let mut t = Table::new(
+            "Figure 7 summary: utilization by task time",
+            &["scheduler", "t (s)", "n", "U regular", "U multilevel"],
+        );
+        for panel in &self.fig6.panels {
+            for reg in &panel.regular.points {
+                if let Some(ml) = panel.multilevel.points.iter().find(|p| p.n == reg.n) {
+                    t.row(&[
+                        panel.scheduler.clone(),
+                        format!("{:.2}", reg.t),
+                        reg.n.to_string(),
+                        format!("{:.3}", reg.mean_utilization()),
+                        format!("{:.3}", ml.mean_utilization()),
+                    ]);
+                }
+            }
+        }
+        t
+    }
+
+    /// Shape checks: multilevel utilization ≥ 80 % at every task time
+    /// for all three schedulers (paper: "around 90 %"), and multilevel
+    /// at the shortest tasks beats regular by ≥ 5×.
+    pub fn check_shape(&self) -> Result<(), String> {
+        for panel in &self.fig6.panels {
+            for p in &panel.multilevel.points {
+                let u = p.mean_utilization();
+                if u < 0.80 {
+                    return Err(format!(
+                        "{} multilevel U(n={}) = {u:.2} below 0.80",
+                        panel.scheduler, p.n
+                    ));
+                }
+            }
+            let (reg_max, ml_max) = match (
+                panel.regular.points.last(),
+                panel.multilevel.points.last(),
+            ) {
+                (Some(r), Some(m)) if r.n == m.n => {
+                    (r.mean_utilization(), m.mean_utilization())
+                }
+                _ => continue,
+            };
+            if ml_max < reg_max * 5.0 {
+                return Err(format!(
+                    "{}: multilevel U {ml_max:.2} should be ≥5x regular {reg_max:.2} at max n",
+                    panel.scheduler
+                ));
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,28 @@
+//! Experiment harness: one runner per table/figure of the paper's
+//! evaluation, producing both rendered reports and CSV series.
+//!
+//! | runner     | reproduces |
+//! |------------|-----------|
+//! | `features` | Tables 1–7 (via `crate::features`) |
+//! | `table9`   | Table 9 — runtimes of 4 task sets × 4 schedulers × trials |
+//! | `table10`  | Table 10 — fitted (t_s, α_s) per scheduler |
+//! | `fig4`     | Figure 4 — ΔT vs n (log-log), measured + model |
+//! | `fig5`     | Figure 5 — utilization vs task time, approx/exact models |
+//! | `fig6`     | Figure 6 — ΔT vs n with multilevel scheduling |
+//! | `fig7`     | Figure 7 — utilization, regular vs multilevel |
+
+mod fig4;
+mod fig5;
+mod fig6;
+mod fig7;
+mod sweep;
+mod table10;
+mod table9;
+
+pub use fig4::{fig4, Fig4Report};
+pub use fig5::{fig5, fig5_from, Fig5Report};
+pub use fig6::{fig6, Fig6Report};
+pub use fig7::{fig7, Fig7Report};
+pub use sweep::{run_sweep, SchedulerSweep, SweepPoint, PROHIBITIVE_SECS};
+pub use table10::{table10, Table10Report};
+pub use table9::{table9, Table9Report};

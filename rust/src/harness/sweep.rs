@@ -1,0 +1,186 @@
+//! Shared sweep machinery: run a scheduler over a set of
+//! tasks-per-processor values at fixed per-processor work (the paper's
+//! T_job = 240 s), several trials each.
+
+use crate::cluster::ClusterSpec;
+use crate::config::{ExperimentConfig, SchedulerChoice};
+use crate::multilevel::{Multilevel, MultilevelParams};
+use crate::sched::{make_scheduler_scaled, RunOptions, RunResult, Scheduler};
+use crate::workload::{Workload, WorkloadBuilder, TABLE9_JOB_TIME_PER_PROC};
+
+/// Runs projected past this virtual-seconds bound are skipped, like the
+/// paper's abandoned YARN rapid trials.
+pub const PROHIBITIVE_SECS: f64 = 3600.0;
+
+/// All trials at one tasks-per-processor value.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    /// Tasks per processor n.
+    pub n: u32,
+    /// Task time t = T_job / n.
+    pub t: f64,
+    /// One result per trial.
+    pub trials: Vec<RunResult>,
+}
+
+impl SweepPoint {
+    /// Mean T_total across trials.
+    pub fn mean_t_total(&self) -> f64 {
+        self.trials.iter().map(|r| r.t_total).sum::<f64>() / self.trials.len() as f64
+    }
+
+    /// Mean ΔT across trials.
+    pub fn mean_delta_t(&self) -> f64 {
+        self.trials.iter().map(|r| r.delta_t()).sum::<f64>() / self.trials.len() as f64
+    }
+
+    /// Mean utilization across trials.
+    pub fn mean_utilization(&self) -> f64 {
+        self.trials.iter().map(|r| r.utilization()).sum::<f64>()
+            / self.trials.len() as f64
+    }
+}
+
+/// A full sweep for one scheduler.
+#[derive(Clone, Debug)]
+pub struct SchedulerSweep {
+    /// Scheduler display name.
+    pub scheduler: String,
+    /// Points actually run.
+    pub points: Vec<SweepPoint>,
+    /// n values skipped as prohibitive.
+    pub skipped: Vec<u32>,
+}
+
+impl SchedulerSweep {
+    /// Pooled (n, ΔT) observations across all trials (fit input).
+    pub fn fit_points(&self) -> Vec<(f64, f64)> {
+        self.points
+            .iter()
+            .flat_map(|p| p.trials.iter().map(|r| (p.n as f64, r.delta_t())))
+            .collect()
+    }
+}
+
+fn cluster_of(cfg: &ExperimentConfig) -> ClusterSpec {
+    ClusterSpec::homogeneous(
+        cfg.effective_nodes(),
+        cfg.cores_per_node,
+        cfg.mem_mb,
+        (cfg.effective_nodes() / 2).max(1),
+    )
+}
+
+fn workload_for(n: u32, processors: u64, label: &str) -> Workload {
+    let t = TABLE9_JOB_TIME_PER_PROC / n as f64;
+    WorkloadBuilder::constant(t)
+        .tasks(n as u64 * processors)
+        .label(label)
+        .build()
+}
+
+/// Run `choice` over `n_values`, `cfg.trials` trials each. When
+/// `multilevel` is given, the workload is routed through the
+/// LLMapReduce-style aggregator first (Figures 6–7).
+pub fn run_sweep(
+    choice: SchedulerChoice,
+    cfg: &ExperimentConfig,
+    n_values: &[u32],
+    multilevel: Option<&MultilevelParams>,
+) -> SchedulerSweep {
+    let cluster = cluster_of(cfg);
+    let processors = cluster.total_cores();
+    // Scaled daemon costs keep the experiment shape-invariant on
+    // scaled-down clusters (see make_scheduler_scaled).
+    let inner = make_scheduler_scaled(choice, cfg.scale_down);
+    let mut points = Vec::new();
+    let mut skipped = Vec::new();
+
+    for &n in n_values {
+        let t = TABLE9_JOB_TIME_PER_PROC / n as f64;
+        let label = format!("n{n}");
+        let workload = workload_for(n, processors, &label);
+        let projected = match multilevel {
+            Some(ml) => Multilevel::new(inner.as_ref(), ml.clone())
+                .projected_runtime(&workload, &cluster),
+            None => inner.projected_runtime(&workload, &cluster),
+        };
+        if projected > PROHIBITIVE_SECS {
+            skipped.push(n);
+            continue;
+        }
+        let mut trials = Vec::with_capacity(cfg.trials as usize);
+        for trial in 0..cfg.trials {
+            let seed = cfg
+                .seed
+                .wrapping_add(trial as u64)
+                .wrapping_add((n as u64) << 20);
+            let r = match multilevel {
+                Some(ml) => Multilevel::new(inner.as_ref(), ml.clone()).run(
+                    &workload,
+                    &cluster,
+                    seed,
+                    &RunOptions::default(),
+                ),
+                None => inner.run(&workload, &cluster, seed, &RunOptions::default()),
+            };
+            r.check_invariants()
+                .unwrap_or_else(|e| panic!("{} n={n}: {e}", inner.name()));
+            trials.push(r);
+        }
+        points.push(SweepPoint { n, t, trials });
+    }
+
+    SchedulerSweep {
+        scheduler: match multilevel {
+            Some(_) => format!("{}+multilevel", inner.name()),
+            None => inner.name().to_string(),
+        },
+        points,
+        skipped,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.scale_down = 11; // 4 nodes, 128 cores — fast in tests
+        cfg.trials = 1;
+        cfg
+    }
+
+    #[test]
+    fn sweep_runs_all_points() {
+        let s = run_sweep(SchedulerChoice::Slurm, &quick_cfg(), &[4, 8], None);
+        assert_eq!(s.points.len(), 2);
+        assert!(s.skipped.is_empty());
+        assert_eq!(s.points[0].trials.len(), 1);
+        assert!((s.points[0].t - 60.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn yarn_rapid_is_skipped() {
+        let s = run_sweep(SchedulerChoice::Yarn, &quick_cfg(), &[240], None);
+        assert!(s.points.is_empty());
+        assert_eq!(s.skipped, vec![240]);
+    }
+
+    #[test]
+    fn multilevel_sweep_labels() {
+        let ml = MultilevelParams::default();
+        let s = run_sweep(SchedulerChoice::Mesos, &quick_cfg(), &[8], Some(&ml));
+        assert!(s.scheduler.contains("multilevel"));
+        assert_eq!(s.points.len(), 1);
+    }
+
+    #[test]
+    fn fit_points_pool_trials() {
+        let mut cfg = quick_cfg();
+        cfg.trials = 2;
+        let s = run_sweep(SchedulerChoice::Slurm, &cfg, &[4, 8], None);
+        assert_eq!(s.fit_points().len(), 4);
+    }
+}

@@ -1,0 +1,148 @@
+//! Table 10: the fitted latency-model parameters (t_s, α_s) per
+//! scheduler, from a sweep over tasks-per-processor (the paper fits
+//! over the Figure 4 points).
+//!
+//! The fit runs through BOTH paths — the rust-native OLS and the
+//! AOT-compiled Pallas kernel via PJRT — and reports both, asserting
+//! they agree.
+
+use super::sweep::{run_sweep, SchedulerSweep};
+use crate::config::ExperimentConfig;
+use crate::sched::calibration::paper_table10;
+use crate::util::fit::{fit_power_law, PowerLawFit};
+use crate::util::table::{fnum, Table};
+
+/// One scheduler's fit, both paths.
+pub struct SchedulerFit {
+    /// Scheduler display name.
+    pub scheduler: String,
+    /// Rust-native log-log OLS.
+    pub rust_fit: PowerLawFit,
+    /// PJRT/Pallas fit (None when artifacts are unavailable).
+    pub pjrt_fit: Option<crate::runtime::PjrtFit>,
+    /// Underlying sweep.
+    pub sweep: SchedulerSweep,
+}
+
+/// Table 10 results.
+pub struct Table10Report {
+    /// One entry per scheduler.
+    pub fits: Vec<SchedulerFit>,
+}
+
+/// Run the sweep and fit. `artifacts_dir` enables the PJRT fit path.
+pub fn table10(cfg: &ExperimentConfig, artifacts_dir: Option<&str>) -> Table10Report {
+    let mut suite = artifacts_dir.and_then(|d| crate::runtime::ArtifactSuite::load(d).ok());
+    let fits = cfg
+        .schedulers
+        .iter()
+        .map(|&choice| {
+            let sweep = run_sweep(choice, cfg, &cfg.n_sweep, None);
+            let pts = sweep.fit_points();
+            let ns: Vec<f64> = pts.iter().map(|p| p.0).collect();
+            let dts: Vec<f64> = pts.iter().map(|p| p.1).collect();
+            let rust_fit = fit_power_law(&ns, &dts);
+            let pjrt_fit = suite.as_mut().and_then(|s| {
+                // The artifact takes ≤32 points per series; subsample
+                // trials evenly if the sweep is larger.
+                let capped: Vec<(f64, f64)> = if pts.len() > crate::runtime::shapes::FIT_K {
+                    let stride = pts.len().div_ceil(crate::runtime::shapes::FIT_K);
+                    pts.iter().step_by(stride).copied().collect()
+                } else {
+                    pts.clone()
+                };
+                s.powerlaw_fit(&[capped]).ok().map(|v| v[0])
+            });
+            SchedulerFit {
+                scheduler: sweep.scheduler.clone(),
+                rust_fit,
+                pjrt_fit,
+                sweep,
+            }
+        })
+        .collect();
+    Table10Report { fits }
+}
+
+impl Table10Report {
+    /// Render with the paper's reference values.
+    pub fn render(&self) -> Table {
+        let mut t = Table::new(
+            "Table 10: measured model-fit parameters",
+            &[
+                "scheduler", "t_s (rust)", "t_s (pjrt)", "t_s (paper)",
+                "alpha (rust)", "alpha (pjrt)", "alpha (paper)", "R2",
+            ],
+        );
+        for f in &self.fits {
+            let paper = paper_table10()
+                .into_iter()
+                .find(|p| p.scheduler == f.scheduler);
+            t.row(&[
+                f.scheduler.clone(),
+                fnum(f.rust_fit.t_s),
+                f.pjrt_fit.map(|p| fnum(p.t_s)).unwrap_or_else(|| "-".into()),
+                paper.as_ref().map(|p| fnum(p.t_s)).unwrap_or_else(|| "-".into()),
+                format!("{:.2}", f.rust_fit.alpha_s),
+                f.pjrt_fit
+                    .map(|p| format!("{:.2}", p.alpha_s))
+                    .unwrap_or_else(|| "-".into()),
+                paper
+                    .as_ref()
+                    .map(|p| format!("{:.2}", p.alpha_s))
+                    .unwrap_or_else(|| "-".into()),
+                format!("{:.3}", f.rust_fit.r2),
+            ]);
+        }
+        t
+    }
+
+    /// Shape assertions: orderings of Table 10 hold — t_s(Slurm) <
+    /// t_s(GE) < t_s(Mesos) ≪ t_s(YARN); α(Slurm), α(GE) > α(Mesos) >
+    /// α(YARN) ≈ 1; and the two fit paths agree.
+    pub fn check_shape(&self) -> Result<(), String> {
+        let get = |name: &str| -> Result<&SchedulerFit, String> {
+            self.fits
+                .iter()
+                .find(|f| f.scheduler == name)
+                .ok_or_else(|| format!("missing fit for {name}"))
+        };
+        let slurm = get("Slurm")?;
+        let ge = get("GridEngine")?;
+        let mesos = get("Mesos")?;
+        let yarn = get("Hadoop YARN")?;
+        let ts = |f: &SchedulerFit| f.rust_fit.t_s;
+        let al = |f: &SchedulerFit| f.rust_fit.alpha_s;
+        if !(ts(slurm) < ts(ge) && ts(ge) < ts(yarn) && ts(mesos) < ts(yarn)) {
+            return Err(format!(
+                "t_s ordering violated: slurm={} ge={} mesos={} yarn={}",
+                ts(slurm), ts(ge), ts(mesos), ts(yarn)
+            ));
+        }
+        if ts(yarn) < 5.0 * ts(mesos) {
+            return Err("YARN t_s should dwarf the others".into());
+        }
+        if !(al(slurm) > al(mesos) && al(ge) > al(mesos) && al(mesos) > al(yarn) - 0.05) {
+            return Err(format!(
+                "alpha ordering violated: slurm={:.2} ge={:.2} mesos={:.2} yarn={:.2}",
+                al(slurm), al(ge), al(mesos), al(yarn)
+            ));
+        }
+        if (al(yarn) - 1.0).abs() > 0.15 {
+            return Err(format!("YARN alpha {:.2} should be ~1.0", al(yarn)));
+        }
+        for f in &self.fits {
+            if let Some(p) = f.pjrt_fit {
+                if (p.t_s - f.rust_fit.t_s).abs() / f.rust_fit.t_s > 0.05
+                    || (p.alpha_s - f.rust_fit.alpha_s).abs() > 0.05
+                {
+                    return Err(format!(
+                        "{}: pjrt fit ({}, {:.2}) diverges from rust fit ({}, {:.2})",
+                        f.scheduler, p.t_s, p.alpha_s, f.rust_fit.t_s, f.rust_fit.alpha_s
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,135 @@
+//! Table 9: runtimes of the four constant-task-time sets on the four
+//! schedulers, three trials each.
+
+use super::sweep::{run_sweep, SchedulerSweep};
+use crate::config::ExperimentConfig;
+use crate::sched::calibration::paper_table9_runtimes;
+use crate::util::table::{fnum, Table};
+use crate::workload::table9_sets;
+
+/// Table 9 results for all schedulers.
+pub struct Table9Report {
+    /// One sweep per scheduler over the Table 9 n values.
+    pub sweeps: Vec<SchedulerSweep>,
+    /// Trials per point.
+    pub trials: u32,
+}
+
+/// Run Table 9.
+pub fn table9(cfg: &ExperimentConfig) -> Table9Report {
+    let ns: Vec<u32> = table9_sets().iter().map(|s| s.tasks_per_proc).collect();
+    let sweeps = cfg
+        .schedulers
+        .iter()
+        .map(|&c| run_sweep(c, cfg, &ns, None))
+        .collect();
+    Table9Report {
+        sweeps,
+        trials: cfg.trials,
+    }
+}
+
+impl Table9Report {
+    /// Render in the paper's layout (one row per scheduler × set, with
+    /// all trial runtimes and the paper's means for comparison).
+    pub fn render(&self) -> Table {
+        let mut t = Table::new(
+            "Table 9: runtimes by task set (simulated, s)",
+            &["scheduler", "set", "t (s)", "n", "trial runtimes", "mean", "paper mean", "ratio"],
+        );
+        let sets = table9_sets();
+        let paper = paper_table9_runtimes();
+        for sweep in &self.sweeps {
+            for set in &sets {
+                let paper_mean = paper
+                    .iter()
+                    .find(|(name, _)| *name == sweep.scheduler)
+                    .and_then(|(_, runtimes)| {
+                        let idx = sets
+                            .iter()
+                            .position(|s| s.name == set.name)
+                            .unwrap();
+                        runtimes[idx]
+                    });
+                match sweep.points.iter().find(|p| p.n == set.tasks_per_proc) {
+                    Some(point) => {
+                        let runtimes: Vec<String> =
+                            point.trials.iter().map(|r| fnum(r.t_total)).collect();
+                        let mean = point.mean_t_total();
+                        t.row(&[
+                            sweep.scheduler.clone(),
+                            set.name.into(),
+                            fnum(set.task_time),
+                            set.tasks_per_proc.to_string(),
+                            runtimes.join(", "),
+                            fnum(mean),
+                            paper_mean.map(fnum).unwrap_or_else(|| "-".into()),
+                            paper_mean
+                                .map(|p| format!("{:.2}", mean / p))
+                                .unwrap_or_else(|| "-".into()),
+                        ]);
+                    }
+                    None if sweep.skipped.contains(&set.tasks_per_proc) => {
+                        t.row(&[
+                            sweep.scheduler.clone(),
+                            set.name.into(),
+                            fnum(set.task_time),
+                            set.tasks_per_proc.to_string(),
+                            "abandoned (prohibitive)".into(),
+                            "-".into(),
+                            "-".into(),
+                            "-".into(),
+                        ]);
+                    }
+                    None => {}
+                }
+            }
+        }
+        t
+    }
+
+    /// Shape assertions against the paper (used by tests/benches):
+    /// ratios to the paper means stay within `tol` where both exist;
+    /// YARN rapid is skipped.
+    pub fn check_shape(&self, tol: f64) -> Result<(), String> {
+        let sets = table9_sets();
+        let paper = paper_table9_runtimes();
+        for sweep in &self.sweeps {
+            let Some((_, paper_runtimes)) =
+                paper.iter().find(|(name, _)| *name == sweep.scheduler)
+            else {
+                continue;
+            };
+            for (idx, set) in sets.iter().enumerate() {
+                match (
+                    sweep.points.iter().find(|p| p.n == set.tasks_per_proc),
+                    paper_runtimes[idx],
+                ) {
+                    (Some(point), Some(paper_mean)) => {
+                        let ratio = point.mean_t_total() / paper_mean;
+                        if !((1.0 - tol)..=(1.0 + tol)).contains(&ratio) {
+                            return Err(format!(
+                                "{} {}: sim/paper ratio {ratio:.2} outside ±{tol}",
+                                sweep.scheduler, set.name
+                            ));
+                        }
+                    }
+                    (None, None) => {} // both abandoned: correct
+                    (None, Some(_)) => {
+                        return Err(format!(
+                            "{} {}: simulated run skipped but paper ran it",
+                            sweep.scheduler, set.name
+                        ));
+                    }
+                    (Some(_), None) => {
+                        return Err(format!(
+                            "{} {}: paper abandoned this but the sim ran it",
+                            sweep.scheduler, set.name
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}

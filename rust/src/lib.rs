@@ -1,0 +1,42 @@
+//! sssched — reproduction of "Scalable System Scheduling for HPC and
+//! Big Data" (Reuther et al., JPDC 2017, DOI 10.1016/j.jpdc.2017.06.009).
+//!
+//! Job schedulers are the "operating systems" of big-data and HPC
+//! clusters; the paper measures their job-launch latency, models it as
+//! ΔT = t_s·n^α_s, and shows multilevel scheduling recovers the
+//! utilization that seconds-scale tasks lose. This crate rebuilds the
+//! entire study:
+//!
+//! * [`sim`], [`cluster`], [`workload`] — the discrete-event testbed
+//!   standing in for the paper's 1408-core SuperCloud;
+//! * [`sched`] — mechanistic models of Slurm, Grid Engine, Mesos and
+//!   Hadoop YARN (plus a Sparrow-like distributed scheduler, batch-queue
+//!   policies with EASY backfill, and an ideal-FIFO reference);
+//! * [`multilevel`] — LLMapReduce-style aggregation (paper §5.3);
+//! * [`model`] — the Section 4 latency/utilization equations + fitting;
+//! * [`runtime`] — PJRT execution of the AOT-compiled Pallas kernels
+//!   (power-law fit, U_v reduction, analytics payload);
+//! * [`exec`] — a realtime leader/worker mini-cluster running real PJRT
+//!   payloads (examples/end_to_end.rs);
+//! * [`harness`], [`features`] — regenerate every table and figure;
+//! * [`api`] — a DRMAA-like session API for scripting experiments;
+//! * [`config`], [`cli`], [`util`] — config files, CLI, and the PRNG /
+//!   stats / property-testing substrate (the offline crate set has no
+//!   rand/serde/clap/proptest, so they live here).
+//!
+//! Python (`python/compile/`) runs only at build time (`make
+//! artifacts`); the rust binary is self-contained afterwards.
+pub mod api;
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod exec;
+pub mod features;
+pub mod harness;
+pub mod model;
+pub mod multilevel;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,283 @@
+//! sssched — CLI for the "Scalable System Scheduling for HPC and Big
+//! Data" reproduction.
+//!
+//! Subcommands:
+//!   features    render the paper's feature-comparison Tables 1–7
+//!   experiment  run table9 | table10 | fig4 | fig5 | fig6 | fig7 | all
+//!   serve       realtime mini-cluster (leader + worker threads, PJRT payloads)
+//!   validate    run every experiment's shape checks at reduced scale
+//!
+//! Common options: --config <toml>, --quick (scaled-down cluster),
+//! --trials N, --out-dir <dir>, --artifacts <dir>, --csv.
+
+use sssched::cli::Args;
+use sssched::config::ExperimentConfig;
+use sssched::exec::{RealtimeCoordinator, RealtimeParams, RtTask, RtWork};
+use sssched::features::{feature_table, FeatureCategory};
+use sssched::harness;
+use sssched::multilevel::MultilevelParams;
+use sssched::util::table::fnum;
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match args.command.as_deref() {
+        Some("features") => cmd_features(&args),
+        Some("experiment") => cmd_experiment(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("validate") => cmd_validate(&args),
+        Some(other) => {
+            eprintln!("unknown command `{other}`");
+            usage();
+            2
+        }
+        None => {
+            usage();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() {
+    eprintln!(
+        "usage: sssched <command> [options]\n\
+         commands:\n\
+         \x20 features   [--table 1..7] [--csv]\n\
+         \x20 experiment <table9|table10|fig4|fig5|fig6|fig7|all> \
+         [--config f] [--quick] [--trials N] [--out-dir d] [--artifacts d] [--csv]\n\
+         \x20 serve      [--workers N] [--tasks N] [--task-ms MS] \
+         [--payload sleep|spin|analytics] [--ts SECS] [--artifacts d]\n\
+         \x20 validate   [--quick]"
+    );
+}
+
+fn load_config(args: &Args) -> Result<ExperimentConfig, String> {
+    let mut cfg = match args.opt("config") {
+        Some(path) => ExperimentConfig::load(path)?,
+        None => ExperimentConfig::default(),
+    };
+    if args.flag("quick") {
+        cfg.scale_down = 8; // 5 nodes × 32 = 160 cores
+        cfg.trials = 1;
+    }
+    if let Some(t) = args.opt("trials") {
+        cfg.trials = t.parse().map_err(|_| "bad --trials")?;
+    }
+    if let Some(d) = args.opt("out-dir") {
+        cfg.out_dir = d.to_string();
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn artifacts_dir(args: &Args) -> String {
+    args.opt("artifacts").unwrap_or("artifacts").to_string()
+}
+
+fn cmd_features(args: &Args) -> i32 {
+    let categories: Vec<FeatureCategory> = match args.opt("table") {
+        Some(n) => {
+            let n: u32 = match n.parse() {
+                Ok(v @ 1..=7) => v,
+                _ => {
+                    eprintln!("--table must be 1..7");
+                    return 2;
+                }
+            };
+            FeatureCategory::all()
+                .into_iter()
+                .filter(|c| c.table_number() == n)
+                .collect()
+        }
+        None => FeatureCategory::all().to_vec(),
+    };
+    for c in categories {
+        let t = feature_table(c);
+        if args.flag("csv") {
+            print!("{}", t.to_csv());
+        } else {
+            println!("{}", t.render());
+        }
+    }
+    0
+}
+
+fn write_out(cfg: &ExperimentConfig, name: &str, content: &str) {
+    let dir = std::path::Path::new(&cfg.out_dir);
+    if std::fs::create_dir_all(dir).is_ok() {
+        let path = dir.join(name);
+        if std::fs::write(&path, content).is_ok() {
+            println!("wrote {}", path.display());
+        }
+    }
+}
+
+fn cmd_experiment(args: &Args) -> i32 {
+    let cfg = match load_config(args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("config error: {e}");
+            return 2;
+        }
+    };
+    let what = args.positionals.first().map(|s| s.as_str()).unwrap_or("all");
+    let arts = artifacts_dir(args);
+    let ml = MultilevelParams::default();
+    let run = |name: &str| -> i32 {
+        match name {
+            "table9" => {
+                let rep = harness::table9(&cfg);
+                println!("{}", rep.render().render());
+                write_out(&cfg, "table9.csv", &rep.render().to_csv());
+            }
+            "table10" => {
+                let rep = harness::table10(&cfg, Some(&arts));
+                println!("{}", rep.render().render());
+                if let Err(e) = rep.check_shape() {
+                    eprintln!("shape check FAILED: {e}");
+                    return 1;
+                }
+                println!("shape check vs paper: OK");
+                write_out(&cfg, "table10.csv", &rep.render().to_csv());
+            }
+            "fig4" => {
+                let rep = harness::fig4(&cfg);
+                println!("{}", rep.render_plots());
+                write_out(&cfg, "fig4.csv", &rep.to_csv());
+            }
+            "fig5" => {
+                let rep = harness::fig5(&cfg, Some(&arts));
+                println!("{}", rep.render_plot());
+                println!(
+                    "(model curves computed via {})",
+                    if rep.used_pjrt { "PJRT artifact" } else { "rust fallback" }
+                );
+                write_out(&cfg, "fig5.csv", &rep.to_csv());
+            }
+            "fig6" => {
+                let rep = harness::fig6(&cfg, &ml);
+                println!("{}", rep.render_plots());
+                println!("{}", rep.render_table().render());
+                write_out(&cfg, "fig6.csv", &rep.render_table().to_csv());
+            }
+            "fig7" => {
+                let rep = harness::fig7(&cfg, &ml);
+                println!("{}", rep.render_plots());
+                println!("{}", rep.render_table().render());
+                write_out(&cfg, "fig7.csv", &rep.render_table().to_csv());
+            }
+            other => {
+                eprintln!("unknown experiment `{other}`");
+                return 2;
+            }
+        }
+        0
+    };
+    if what == "all" {
+        for name in ["table9", "table10", "fig4", "fig5", "fig6", "fig7"] {
+            let rc = run(name);
+            if rc != 0 {
+                return rc;
+            }
+        }
+        0
+    } else {
+        run(what)
+    }
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let workers = args.opt_parse("workers", 4usize).unwrap_or(4);
+    let n_tasks = args.opt_parse("tasks", 64u32).unwrap_or(64);
+    let task_ms = args.opt_parse("task-ms", 20.0f64).unwrap_or(20.0);
+    let ts = args.opt_parse("ts", 0.0f64).unwrap_or(0.0);
+    let payload = args.opt("payload").unwrap_or("spin");
+    let arts = artifacts_dir(args);
+
+    let nominal = task_ms / 1000.0;
+    let tasks: Vec<RtTask> = (0..n_tasks)
+        .map(|id| RtTask {
+            id,
+            nominal,
+            work: match payload {
+                "sleep" => RtWork::Sleep(nominal),
+                "analytics" => RtWork::Analytics {
+                    // ~0.45 ms per batch on this CPU; scale count to the
+                    // requested nominal duration.
+                    batches: ((nominal / 0.00045).ceil() as u32).max(1),
+                    seed: id as u64,
+                },
+                _ => RtWork::Spin(nominal),
+            },
+        })
+        .collect();
+
+    let coord = RealtimeCoordinator::new(RealtimeParams {
+        workers,
+        dispatch_overhead: ts,
+        artifacts_dir: (payload == "analytics").then(|| arts),
+    });
+    match coord.run(&tasks) {
+        Ok(r) => {
+            println!(
+                "{} tasks x {} ms on {} workers (payload={payload}, ts={ts}s)",
+                n_tasks, task_ms, workers
+            );
+            println!(
+                "T_total={} s  T_job={} s  U={:.3}  throughput={:.1} tasks/s",
+                fnum(r.t_total),
+                fnum(r.t_job),
+                r.utilization(),
+                r.n_tasks as f64 / r.t_total.max(1e-9),
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("serve failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_validate(args: &Args) -> i32 {
+    let mut cfg = match load_config(args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("config error: {e}");
+            return 2;
+        }
+    };
+    if !args.flag("full") {
+        cfg.scale_down = 8;
+        cfg.trials = 1;
+    }
+    let arts = artifacts_dir(args);
+    let ml = MultilevelParams::default();
+    let mut failures = 0;
+    let mut check = |name: &str, result: Result<(), String>| match result {
+        Ok(()) => println!("  ok  {name}"),
+        Err(e) => {
+            println!("FAIL  {name}: {e}");
+            failures += 1;
+        }
+    };
+    println!("validate (P={}, trials={}):", cfg.processors(), cfg.trials);
+    check("table9 shapes", harness::table9(&cfg).check_shape(0.35));
+    check("table10 shapes", harness::table10(&cfg, Some(&arts)).check_shape());
+    check("fig4 shapes", harness::fig4(&cfg).check_shape());
+    check("fig5 shapes", harness::fig5(&cfg, Some(&arts)).check_shape());
+    check("fig6 shapes", harness::fig6(&cfg, &ml).check_shape());
+    check("fig7 shapes", harness::fig7(&cfg, &ml).check_shape());
+    if failures == 0 {
+        println!("all shape checks passed");
+        0
+    } else {
+        1
+    }
+}

@@ -1,0 +1,91 @@
+//! Closed-form model equations from Section 4 of the paper.
+
+/// ΔT = t_s · n^α_s — the non-execution latency model.
+pub fn delta_t_model(t_s: f64, alpha_s: f64, n: f64) -> f64 {
+    t_s * n.powf(alpha_s)
+}
+
+/// Approximate constant-task-time utilization (paper: valid for
+/// α_s ≈ 1): `U_c(t)^-1 ≈ 1 + t_s/t` — the dotted model lines of
+/// Figure 5a.
+pub fn u_constant_approx(t_s: f64, t: f64) -> f64 {
+    assert!(t > 0.0);
+    1.0 / (1.0 + t_s / t)
+}
+
+/// Exact constant-task-time utilization:
+/// `U_c^-1 = 1 + (t_s n^α_s)/(t n)` — the dashed model lines of
+/// Figure 5b.
+pub fn u_constant_exact(t_s: f64, alpha_s: f64, t: f64, n: f64) -> f64 {
+    assert!(t > 0.0 && n > 0.0);
+    1.0 / (1.0 + t_s * n.powf(alpha_s) / (t * n))
+}
+
+/// Variable-task-time utilization via per-processor averaging:
+/// `U^-1 ≈ P^-1 Σ_p U_c(t(p))^-1`, where t(p) is the average duration
+/// of tasks on processor p. `per_proc_mean_t` carries one entry per
+/// processor.
+pub fn u_variable(t_s: f64, per_proc_mean_t: &[f64]) -> f64 {
+    assert!(!per_proc_mean_t.is_empty());
+    let inv_sum: f64 = per_proc_mean_t
+        .iter()
+        .map(|&tp| 1.0 / u_constant_approx(t_s, tp))
+        .sum();
+    per_proc_mean_t.len() as f64 / inv_sum
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn t_equals_ts_gives_half_utilization() {
+        // Paper: t_s ≈ t ⇒ U_c ≈ 0.5.
+        assert!((u_constant_approx(2.0, 2.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exact_reduces_to_approx_at_alpha_one() {
+        let (t_s, t, n) = (2.2, 5.0, 48.0);
+        let exact = u_constant_exact(t_s, 1.0, t, n);
+        let approx = u_constant_approx(t_s, t);
+        assert!((exact - approx).abs() < 1e-12);
+    }
+
+    #[test]
+    fn alpha_above_one_hurts_utilization_at_high_n() {
+        let u1 = u_constant_exact(2.2, 1.0, 1.0, 240.0);
+        let u13 = u_constant_exact(2.2, 1.3, 1.0, 240.0);
+        assert!(u13 < u1);
+    }
+
+    #[test]
+    fn long_tasks_approach_full_utilization() {
+        assert!(u_constant_approx(2.2, 3600.0) > 0.999);
+        assert!(u_constant_approx(2.2, 1.0) < 0.32);
+    }
+
+    #[test]
+    fn variable_equals_constant_for_uniform_tasks() {
+        let u_var = u_variable(2.2, &[5.0; 100]);
+        let u_c = u_constant_approx(2.2, 5.0);
+        assert!((u_var - u_c).abs() < 1e-12);
+    }
+
+    #[test]
+    fn variable_mixture_between_extremes() {
+        // Half the processors run 1 s tasks, half run 60 s tasks.
+        let mut ts = vec![1.0; 50];
+        ts.extend(vec![60.0; 50]);
+        let u = u_variable(2.2, &ts);
+        assert!(u > u_constant_approx(2.2, 1.0));
+        assert!(u < u_constant_approx(2.2, 60.0));
+    }
+
+    #[test]
+    fn delta_t_matches_table10_slurm() {
+        // Slurm at n=240: 2.2 · 240^1.3 ≈ 2731 s.
+        let dt = delta_t_model(2.2, 1.3, 240.0);
+        assert!((dt - 2731.0).abs() < 15.0, "dt={dt}");
+    }
+}

@@ -1,0 +1,85 @@
+//! Fitting measured runs to the latency model (the measurement side of
+//! Table 10). The same fit is also available through the AOT-compiled
+//! Pallas kernel (`artifacts/powerlaw_fit.hlo.txt`); `rust/tests/`
+//! cross-checks the two paths agree.
+
+use crate::sched::RunResult;
+use crate::util::fit::{fit_power_law, PowerLawFit};
+
+/// One (n, ΔT) observation from a run.
+#[derive(Clone, Copy, Debug)]
+pub struct FitPoint {
+    /// Tasks per processor n.
+    pub n: f64,
+    /// Measured non-execution latency ΔT (s).
+    pub delta_t: f64,
+}
+
+impl FitPoint {
+    /// Extract from a run result.
+    pub fn from_run(r: &RunResult) -> Self {
+        Self {
+            n: r.tasks_per_proc(),
+            delta_t: r.delta_t(),
+        }
+    }
+}
+
+/// Fit ΔT = t_s n^α_s over a set of runs (all trials pooled, like the
+/// paper's per-scheduler fit over the Table 9 task sets).
+pub fn fit_from_runs<'a>(runs: impl IntoIterator<Item = &'a RunResult>) -> PowerLawFit {
+    let pts: Vec<FitPoint> = runs.into_iter().map(FitPoint::from_run).collect();
+    let ns: Vec<f64> = pts.iter().map(|p| p.n).collect();
+    let dts: Vec<f64> = pts.iter().map(|p| p.delta_t).collect();
+    fit_power_law(&ns, &dts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::Summary;
+
+    fn synthetic_run(n: f64, t_s: f64, alpha: f64) -> RunResult {
+        let p = 1408u64;
+        let t_job = 240.0;
+        RunResult {
+            scheduler: "syn".into(),
+            workload: "syn".into(),
+            n_tasks: (n * p as f64) as u64,
+            processors: p,
+            t_total: t_job + t_s * n.powf(alpha),
+            t_job,
+            events: 0,
+            daemon_busy: 0.0,
+            waits: Summary::new(),
+            trace: None,
+        }
+    }
+
+    #[test]
+    fn recovers_synthetic_parameters() {
+        let runs: Vec<RunResult> = [4.0, 8.0, 48.0, 240.0]
+            .iter()
+            .map(|&n| synthetic_run(n, 2.8, 1.3))
+            .collect();
+        let fit = fit_from_runs(&runs);
+        assert!((fit.t_s - 2.8).abs() < 1e-6, "t_s={}", fit.t_s);
+        assert!((fit.alpha_s - 1.3).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pooled_trials_average_out() {
+        // Three noisy trials per n: fit should still land close.
+        let mut runs = Vec::new();
+        for &n in &[4.0, 8.0, 48.0, 240.0] {
+            for tweak in [0.95, 1.0, 1.05] {
+                let mut r = synthetic_run(n, 3.4, 1.1);
+                r.t_total = r.t_job + (r.t_total - r.t_job) * tweak;
+                runs.push(r);
+            }
+        }
+        let fit = fit_from_runs(&runs);
+        assert!((fit.t_s - 3.4).abs() < 0.3);
+        assert!((fit.alpha_s - 1.1).abs() < 0.05);
+    }
+}

@@ -1,0 +1,11 @@
+//! The paper's Section 4 analytic latency and utilization models, and
+//! the measurement-side fitting that produces Table 10.
+//!
+//! Notation (paper Table 8): t_s marginal scheduler latency, t task
+//! time, n tasks per processor, α_s nonlinear exponent, U utilization.
+
+mod analytic;
+mod measure;
+
+pub use analytic::{delta_t_model, u_constant_approx, u_constant_exact, u_variable};
+pub use measure::{fit_from_runs, FitPoint};

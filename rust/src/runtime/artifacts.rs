@@ -1,0 +1,201 @@
+//! Typed wrappers over the AOT artifacts.
+//!
+//! Each wrapper owns the padding/unpadding logic for its artifact's
+//! fixed AOT shapes (see `python/compile/model.py`):
+//!
+//! * `powerlaw_fit`  — (S=8, K=32) masked log-log OLS → (t_s, α, R²)
+//! * `utilization`   — (S=8) fits × (T=64) task-time grid → U curves
+//! * `analytics`     — (B=256, D=64) × (D, F=32) map-task payload
+
+use super::pjrt::PjrtRuntime;
+use anyhow::{ensure, Context, Result};
+
+/// Fixed AOT shape constants (mirror python/compile/model.py).
+pub mod shapes {
+    /// Max fit series per call.
+    pub const FIT_S: usize = 8;
+    /// Max observations per series.
+    pub const FIT_K: usize = 32;
+    /// Task-time grid length.
+    pub const UTIL_T: usize = 64;
+    /// Analytics batch.
+    pub const ANALYTICS_B: usize = 256;
+    /// Analytics record width.
+    pub const ANALYTICS_D: usize = 64;
+    /// Analytics feature count.
+    pub const ANALYTICS_F: usize = 32;
+    /// Padded processor count for the U_v reduction.
+    pub const UVAR_P: usize = 2048;
+}
+
+/// One power-law fit result from the PJRT path.
+#[derive(Clone, Copy, Debug)]
+pub struct PjrtFit {
+    /// Marginal latency t_s.
+    pub t_s: f64,
+    /// Nonlinear exponent α_s.
+    pub alpha_s: f64,
+    /// R² of the log-log fit.
+    pub r2: f64,
+}
+
+/// Runtime facade exposing the three artifacts as typed calls.
+pub struct ArtifactSuite {
+    rt: PjrtRuntime,
+}
+
+impl ArtifactSuite {
+    /// Load the suite from an artifacts directory, compiling all three
+    /// HLO artifacts eagerly.
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let mut rt = PjrtRuntime::cpu(dir)?;
+        for name in ["powerlaw_fit", "utilization", "analytics", "uvar"] {
+            rt.load(name)
+                .with_context(|| format!("artifact {name} (run `make artifacts`)"))?;
+        }
+        Ok(Self { rt })
+    }
+
+    /// Batched power-law fit through the Pallas kernel: one entry per
+    /// series of (n, ΔT) observations. Series longer than K=32 points
+    /// or batches larger than S=8 are rejected.
+    pub fn powerlaw_fit(&mut self, series: &[Vec<(f64, f64)>]) -> Result<Vec<PjrtFit>> {
+        use shapes::{FIT_K, FIT_S};
+        ensure!(
+            series.len() <= FIT_S,
+            "at most {FIT_S} series per call, got {}",
+            series.len()
+        );
+        let mut x = vec![0f32; FIT_S * FIT_K];
+        let mut y = vec![0f32; FIT_S * FIT_K];
+        let mut m = vec![0f32; FIT_S * FIT_K];
+        for (s, pts) in series.iter().enumerate() {
+            let valid: Vec<(f64, f64)> = pts
+                .iter()
+                .copied()
+                .filter(|&(n, dt)| n > 0.0 && dt > 0.0)
+                .collect();
+            ensure!(
+                valid.len() >= 2,
+                "series {s} needs >= 2 positive points, has {}",
+                valid.len()
+            );
+            ensure!(
+                valid.len() <= FIT_K,
+                "series {s} has {} points, max {FIT_K}",
+                valid.len()
+            );
+            for (k, &(n, dt)) in valid.iter().enumerate() {
+                x[s * FIT_K + k] = (n.ln()) as f32;
+                y[s * FIT_K + k] = (dt.ln()) as f32;
+                m[s * FIT_K + k] = 1.0;
+            }
+        }
+        let dims = [shapes::FIT_S as i64, FIT_K as i64];
+        let inputs = [
+            PjrtRuntime::literal_f32(&x, &dims)?,
+            PjrtRuntime::literal_f32(&y, &dims)?,
+            PjrtRuntime::literal_f32(&m, &dims)?,
+        ];
+        let out = self.rt.load("powerlaw_fit")?.run_f32(&inputs)?;
+        ensure!(out.len() == 3, "powerlaw_fit returns (t_s, alpha, r2)");
+        Ok((0..series.len())
+            .map(|s| PjrtFit {
+                t_s: out[0][s] as f64,
+                alpha_s: out[1][s] as f64,
+                r2: out[2][s] as f64,
+            })
+            .collect())
+    }
+
+    /// Model utilization curves U_c(t) (approx, exact) for up to S=8
+    /// fitted schedulers over a T=64 task-time grid.
+    pub fn utilization_curves(
+        &mut self,
+        fits: &[PjrtFit],
+        t_grid: &[f64],
+    ) -> Result<(Vec<Vec<f64>>, Vec<Vec<f64>>)> {
+        use shapes::{FIT_S, UTIL_T};
+        ensure!(fits.len() <= FIT_S, "at most {FIT_S} fits per call");
+        ensure!(
+            t_grid.len() == UTIL_T,
+            "t_grid must have exactly {UTIL_T} points, got {}",
+            t_grid.len()
+        );
+        let mut ts = vec![1.0f32; FIT_S];
+        let mut al = vec![1.0f32; FIT_S];
+        for (i, f) in fits.iter().enumerate() {
+            ts[i] = f.t_s as f32;
+            al[i] = f.alpha_s as f32;
+        }
+        let tg: Vec<f32> = t_grid.iter().map(|&t| t as f32).collect();
+        let inputs = [
+            PjrtRuntime::literal_f32(&ts, &[FIT_S as i64])?,
+            PjrtRuntime::literal_f32(&al, &[FIT_S as i64])?,
+            PjrtRuntime::literal_f32(&tg, &[UTIL_T as i64])?,
+        ];
+        let out = self.rt.load("utilization")?.run_f32(&inputs)?;
+        ensure!(out.len() == 2, "utilization returns (approx, exact)");
+        let unpack = |flat: &Vec<f32>| -> Vec<Vec<f64>> {
+            (0..fits.len())
+                .map(|s| {
+                    flat[s * UTIL_T..(s + 1) * UTIL_T]
+                        .iter()
+                        .map(|&v| v as f64)
+                        .collect()
+                })
+                .collect()
+        };
+        Ok((unpack(&out[0]), unpack(&out[1])))
+    }
+
+    /// Run the analytics map-task payload on one (B, D) record batch.
+    /// Returns (features, checksum).
+    pub fn analytics(&mut self, x: &[f32], w: &[f32]) -> Result<(Vec<f32>, f32)> {
+        use shapes::{ANALYTICS_B, ANALYTICS_D, ANALYTICS_F};
+        ensure!(x.len() == ANALYTICS_B * ANALYTICS_D, "x must be B*D");
+        ensure!(w.len() == ANALYTICS_D * ANALYTICS_F, "w must be D*F");
+        let inputs = [
+            PjrtRuntime::literal_f32(x, &[ANALYTICS_B as i64, ANALYTICS_D as i64])?,
+            PjrtRuntime::literal_f32(w, &[ANALYTICS_D as i64, ANALYTICS_F as i64])?,
+        ];
+        let out = self.rt.load("analytics")?.run_f32(&inputs)?;
+        ensure!(out.len() == 2, "analytics returns (features, checksum)");
+        Ok((out[0].clone(), out[1][0]))
+    }
+
+    /// Variable-task-time utilization U_v (paper §4 per-processor
+    /// averaging) through the Pallas reduction: per-processor mean task
+    /// times (≤ P=2048 entries) + marginal latency → U.
+    pub fn u_variable(&mut self, per_proc_mean_t: &[f64], t_s: f64) -> Result<f64> {
+        use shapes::UVAR_P;
+        ensure!(
+            !per_proc_mean_t.is_empty() && per_proc_mean_t.len() <= UVAR_P,
+            "need 1..={UVAR_P} processors, got {}",
+            per_proc_mean_t.len()
+        );
+        ensure!(
+            per_proc_mean_t.iter().all(|&t| t > 0.0),
+            "per-processor mean task times must be positive"
+        );
+        let mut tp = vec![0f32; UVAR_P];
+        let mut mask = vec![0f32; UVAR_P];
+        for (i, &t) in per_proc_mean_t.iter().enumerate() {
+            tp[i] = t as f32;
+            mask[i] = 1.0;
+        }
+        let inputs = [
+            PjrtRuntime::literal_f32(&tp, &[UVAR_P as i64])?,
+            PjrtRuntime::literal_f32(&mask, &[UVAR_P as i64])?,
+            PjrtRuntime::literal_f32(&[t_s as f32], &[1])?,
+        ];
+        let out = self.rt.load("uvar")?.run_f32(&inputs)?;
+        ensure!(out.len() == 1 && out[0].len() == 1, "uvar returns a scalar");
+        Ok(out[0][0] as f64)
+    }
+
+    /// PJRT platform name.
+    pub fn platform(&self) -> String {
+        self.rt.platform()
+    }
+}

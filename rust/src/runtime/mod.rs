@@ -1,0 +1,10 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from the
+//! Layer-3 (rust) hot path. Python/JAX is build-time only — see
+//! `python/compile/aot.py`. Interchange format is HLO *text* (the image's
+//! xla_extension 0.5.1 rejects jax>=0.5 serialized protos).
+
+mod artifacts;
+mod pjrt;
+
+pub use artifacts::{shapes, ArtifactSuite, PjrtFit};
+pub use pjrt::{Artifact, PjrtRuntime};

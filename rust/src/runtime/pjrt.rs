@@ -1,0 +1,89 @@
+//! Thin wrapper over the `xla` crate (PJRT C API): one CPU client, many
+//! compiled executables keyed by artifact name.
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled HLO artifact, ready to execute on the PJRT CPU client.
+pub struct Artifact {
+    name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    /// Name of the artifact (file stem of the `.hlo.txt` it was loaded from).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with f32 buffers, returning the flattened f32 outputs of the
+    /// result tuple. All sssched artifacts are lowered with
+    /// `return_tuple=True`, so the single output is a tuple of arrays.
+    pub fn run_f32(&self, inputs: &[xla::Literal]) -> Result<Vec<Vec<f32>>> {
+        let mut result = self.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        let tuple = result.decompose_tuple()?;
+        tuple
+            .into_iter()
+            .map(|lit| {
+                lit.convert(xla::PrimitiveType::F32)?
+                    .to_vec::<f32>()
+                    .map_err(Into::into)
+            })
+            .collect()
+    }
+}
+
+/// Runtime owning the PJRT client and a cache of compiled executables.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    cache: HashMap<String, Artifact>,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client rooted at an artifacts directory.
+    pub fn cpu(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            artifacts_dir: artifacts_dir.as_ref().to_path_buf(),
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Platform name reported by PJRT (e.g. "cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile `<artifacts_dir>/<name>.hlo.txt`, caching the result.
+    pub fn load(&mut self, name: &str) -> Result<&Artifact> {
+        if !self.cache.contains_key(name) {
+            let path = self.artifacts_dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("loading HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {name}"))?;
+            self.cache.insert(
+                name.to_string(),
+                Artifact {
+                    name: name.to_string(),
+                    exe,
+                },
+            );
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Build an f32 literal of the given shape from a flat slice.
+    pub fn literal_f32(values: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(values);
+        lit.reshape(dims).map_err(Into::into)
+    }
+}

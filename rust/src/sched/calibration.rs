@@ -1,0 +1,186 @@
+//! Calibrated mechanism parameters for the four measured schedulers.
+//!
+//! The *mechanisms* live in `centralized.rs` / `mesos.rs` / `yarn.rs`;
+//! the constants below are chosen so the simulated Table 9 runtimes and
+//! the resulting Table 10 fits land near the paper's measurements:
+//!
+//! | Scheduler   | paper t_s | paper α_s | Table 9 runtimes (rapid/fast/medium/long, s) |
+//! |-------------|-----------|-----------|----------------------------------------------|
+//! | Slurm       | 2.2       | 1.3       | ~2784 / ~610 / ~271 / ~284                   |
+//! | Grid Engine | 2.8       | 1.3       | ~3071 / ~626 / ~278 / ~277                   |
+//! | Mesos       | 3.4       | 1.1       | ~1794 / ~366 / ~280 / ~306                   |
+//! | Hadoop YARN | 33        | 1.0       | (abandoned) / ~1840 / ~487 / ~378            |
+//!
+//! Key anchors derived from the paper's own data:
+//! * central-daemon steady throughput = N / T_total on the rapid set:
+//!   Slurm ≈ 121/s (→ 8.2 ms/task), GE ≈ 110/s (→ 9.1 ms/task),
+//!   Mesos ≈ 188/s (→ 5.3 ms/task);
+//! * YARN per-application AM startup ≈ 31 s (fast: 48·(5+~33) ≈ 1824 s);
+//! * trial scatter ≈ 0.5 % (Table 9 triples) → jitter CVs of a few %.
+
+use super::centralized::CentralizedParams;
+use super::mesos::MesosParams;
+use super::yarn::YarnParams;
+
+/// Slurm 15.08-like parameters (sched/builtin, select/cons_res,
+/// proctrack/cgroup — the paper's §5.1 configuration).
+pub fn slurm_params() -> CentralizedParams {
+    CentralizedParams {
+        name: "Slurm",
+        cycle_interval: 1.0,
+        submit_cost_base: 0.5,
+        submit_cost_per_task: 20e-6,
+        submit_cost_job: 0.05,
+        sched_cost_per_task: 4.0e-3,
+        complete_cost_per_task: 4.2e-3,
+        scan_cost_per_pending: 2.0e-6,
+        scan_cap: 10_000,
+        launch_mean: 0.10,
+        launch_cv: 0.30,
+        teardown_mean: 0.10,
+        rpc: 2.0e-4,
+        jitter_cv: 0.05,
+    }
+}
+
+/// Son of Grid Engine 8.1.8-like parameters (high-throughput config:
+/// reduced scheduling interval, flat fair-share off).
+pub fn gridengine_params() -> CentralizedParams {
+    CentralizedParams {
+        name: "GridEngine",
+        cycle_interval: 2.0,
+        submit_cost_base: 0.8,
+        submit_cost_per_task: 25e-6,
+        submit_cost_job: 0.06,
+        sched_cost_per_task: 4.4e-3,
+        complete_cost_per_task: 4.6e-3,
+        scan_cost_per_pending: 3.0e-6,
+        scan_cap: 10_000,
+        launch_mean: 0.15,
+        launch_cv: 0.30,
+        teardown_mean: 0.15,
+        rpc: 2.0e-4,
+        jitter_cv: 0.05,
+    }
+}
+
+/// Mesos 0.25-like parameters (single master, one framework, command
+/// executor per task, 1 s allocation interval).
+pub fn mesos_params() -> MesosParams {
+    MesosParams {
+        name: "Mesos",
+        offer_interval: 1.0,
+        offer_batch_cost: 2.0e-3,
+        launch_cost_per_task: 2.8e-3,
+        complete_cost_per_task: 2.5e-3,
+        framework_latency: 0.05,
+        executor_startup_mean: 1.5,
+        executor_startup_cv: 0.25,
+        agent_teardown: 0.10,
+        rpc: 2.0e-4,
+        jitter_cv: 0.05,
+    }
+}
+
+/// Hadoop YARN 2.7.1-like parameters (one RM, NM heartbeats, one
+/// application — and hence one ApplicationMaster — per array element).
+pub fn yarn_params() -> YarnParams {
+    YarnParams {
+        name: "Hadoop YARN",
+        rm_cost_per_app: 5e-3,
+        complete_cost_per_app: 5e-3,
+        nm_heartbeat: 1.0,
+        am_startup_mean: 31.0,
+        am_startup_cv: 0.03,
+        container_launch: 0.8,
+        teardown: 0.5,
+        rpc: 2.0e-4,
+        jitter_cv: 0.05,
+    }
+}
+
+/// The paper's Table 10 reference values, used by calibration tests and
+/// the comparison reports.
+pub struct PaperFit {
+    /// Scheduler display name.
+    pub scheduler: &'static str,
+    /// Marginal latency t_s (s).
+    pub t_s: f64,
+    /// Nonlinear exponent α_s.
+    pub alpha_s: f64,
+}
+
+/// Table 10 as published.
+pub fn paper_table10() -> [PaperFit; 4] {
+    [
+        PaperFit {
+            scheduler: "Slurm",
+            t_s: 2.2,
+            alpha_s: 1.3,
+        },
+        PaperFit {
+            scheduler: "GridEngine",
+            t_s: 2.8,
+            alpha_s: 1.3,
+        },
+        PaperFit {
+            scheduler: "Mesos",
+            t_s: 3.4,
+            alpha_s: 1.1,
+        },
+        PaperFit {
+            scheduler: "Hadoop YARN",
+            t_s: 33.0,
+            alpha_s: 1.0,
+        },
+    ]
+}
+
+/// The paper's Table 9 mean runtimes (s) for comparison reports.
+/// `None` marks the abandoned YARN rapid trials.
+pub fn paper_table9_runtimes() -> [(&'static str, [Option<f64>; 4]); 4] {
+    [
+        ("Slurm", [Some(2783.7), Some(610.3), Some(271.0), Some(283.7)]),
+        ("GridEngine", [Some(3070.7), Some(626.3), Some(278.0), Some(276.7)]),
+        ("Mesos", [Some(1793.7), Some(365.7), Some(280.3), Some(305.7)]),
+        ("Hadoop YARN", [None, Some(1840.3), Some(487.0), Some(378.0)]),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn daemon_throughput_anchors() {
+        // N / T_total on the rapid set must match the per-task daemon cost.
+        let slurm = slurm_params();
+        let per_task = slurm.sched_cost_per_task + slurm.complete_cost_per_task;
+        let implied_runtime = 337_920.0 * per_task;
+        assert!(
+            (implied_runtime - 2771.0).abs() < 100.0,
+            "slurm rapid implied {implied_runtime}"
+        );
+        let mesos = mesos_params();
+        let per_task = mesos.launch_cost_per_task + mesos.complete_cost_per_task;
+        assert!((337_920.0 * per_task - 1791.0).abs() < 100.0);
+    }
+
+    #[test]
+    fn yarn_fast_anchor() {
+        let y = yarn_params();
+        // 48 tasks/slot × (5 s + AM + container + ~heartbeat/2 + teardown)
+        let per_slot = 48.0 * (5.0 + y.am_startup_mean + y.container_launch + 0.5 + y.teardown);
+        assert!(
+            (per_slot - 1840.0).abs() < 200.0,
+            "yarn fast implied {per_slot}"
+        );
+    }
+
+    #[test]
+    fn paper_tables_well_formed() {
+        assert_eq!(paper_table10().len(), 4);
+        assert_eq!(paper_table9_runtimes().len(), 4);
+        assert!(paper_table9_runtimes()[3].1[0].is_none()); // YARN rapid abandoned
+    }
+}

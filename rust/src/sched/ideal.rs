@@ -1,0 +1,123 @@
+//! Idealized zero-overhead FIFO scheduler — the correctness reference.
+//!
+//! Dispatch, launch and completion are free; T_total for N constant
+//! t-second tasks on P slots is exactly `ceil(N/P) · t` and utilization
+//! is 1 when N divides P. Property tests compare the real simulators
+//! against this floor.
+
+use super::result::{RunOptions, RunResult};
+use super::Scheduler;
+use crate::cluster::{ClusterSpec, SlotPool};
+use crate::sim::EventQueue;
+use crate::util::stats::Summary;
+use crate::workload::{TraceRecord, Workload};
+use std::collections::VecDeque;
+
+/// The ideal zero-overhead scheduler.
+pub struct IdealFifo;
+
+enum Ev {
+    End { slot: u32 },
+}
+
+impl Scheduler for IdealFifo {
+    fn name(&self) -> &'static str {
+        "IdealFIFO"
+    }
+
+    fn run(
+        &self,
+        workload: &Workload,
+        cluster: &ClusterSpec,
+        _seed: u64,
+        options: &RunOptions,
+    ) -> RunResult {
+        let mut q: EventQueue<Ev> = EventQueue::new();
+        let mut pool = SlotPool::new(cluster);
+        let n = workload.len();
+        let mut pending: VecDeque<u32> = (0..n as u32).collect();
+        let mut slot_mem: Vec<i64> = vec![0; pool.capacity()];
+        let mut makespan: f64 = 0.0;
+        let mut waits = Summary::new();
+        let mut trace = Vec::new();
+
+        // Fill every slot at t=0; refill instantly on completion.
+        let dispatch = |now: f64,
+                            pending: &mut VecDeque<u32>,
+                            pool: &mut SlotPool,
+                            q: &mut EventQueue<Ev>,
+                            slot_mem: &mut [i64],
+                            waits: &mut Summary,
+                            trace: &mut Vec<TraceRecord>| {
+            while let Some(&task_id) = pending.front() {
+                let task = &workload.tasks[task_id as usize];
+                let Some(slot) = pool.alloc(task.mem_mb) else {
+                    break;
+                };
+                pending.pop_front();
+                slot_mem[slot as usize] = task.mem_mb;
+                waits.add(now - task.submit_at);
+                if options.collect_trace {
+                    trace.push(TraceRecord {
+                        task: task_id,
+                        node: pool.node_of(slot),
+                        slot,
+                        submit: task.submit_at,
+                        start: now,
+                        end: now + task.duration,
+                    });
+                }
+                q.push(now + task.duration, Ev::End { slot });
+            }
+        };
+
+        dispatch(0.0, &mut pending, &mut pool, &mut q, &mut slot_mem, &mut waits, &mut trace);
+        while let Some((now, Ev::End { slot })) = q.pop() {
+            makespan = makespan.max(now);
+            pool.release(slot, slot_mem[slot as usize]);
+            dispatch(now, &mut pending, &mut pool, &mut q, &mut slot_mem, &mut waits, &mut trace);
+        }
+
+        let processors = cluster.total_cores();
+        RunResult {
+            scheduler: "IdealFIFO".into(),
+            workload: workload.label.clone(),
+            n_tasks: n as u64,
+            processors,
+            t_total: makespan,
+            t_job: workload.t_job_per_proc(processors),
+            events: q.popped(),
+            daemon_busy: 0.0,
+            waits,
+            trace: options.collect_trace.then_some(trace),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::WorkloadBuilder;
+
+    #[test]
+    fn exact_makespan_and_full_utilization() {
+        let cluster = ClusterSpec::homogeneous(2, 8, 32 * 1024, 2);
+        // N = 64 tasks of 3 s on 16 slots -> 4 waves -> exactly 12 s.
+        let w = WorkloadBuilder::constant(3.0).tasks(64).label("i").build();
+        let r = IdealFifo.run(&w, &cluster, 0, &RunOptions::default());
+        assert!((r.t_total - 12.0).abs() < 1e-9, "t_total={}", r.t_total);
+        assert!((r.utilization() - 1.0).abs() < 1e-9);
+        assert!((r.delta_t()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ragged_last_wave() {
+        let cluster = ClusterSpec::homogeneous(1, 4, 32 * 1024, 1);
+        // 6 tasks of 2 s on 4 slots -> waves of 4 then 2 -> 4 s.
+        let w = WorkloadBuilder::constant(2.0).tasks(6).build();
+        let r = IdealFifo.run(&w, &cluster, 0, &RunOptions::default());
+        assert!((r.t_total - 4.0).abs() < 1e-9);
+        // U = (12/4) / 4 = 0.75
+        assert!((r.utilization() - 0.75).abs() < 1e-9);
+    }
+}

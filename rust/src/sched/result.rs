@@ -1,0 +1,146 @@
+//! Simulation run results and the utilization arithmetic of the paper's
+//! Section 4/5: U = T_job / T_total.
+
+use crate::util::stats::Summary;
+use crate::workload::TraceRecord;
+
+/// Options controlling what a run records.
+#[derive(Clone, Debug, Default)]
+pub struct RunOptions {
+    /// Collect a full per-task trace (memory ∝ N).
+    pub collect_trace: bool,
+    /// Submit every task as its own job (paying the per-job submission
+    /// cost serially) instead of as one job array — the paper notes
+    /// arrays "introduce much less scheduler latency".
+    pub individual_submission: bool,
+}
+
+impl RunOptions {
+    /// Trace-collecting options.
+    pub fn with_trace() -> Self {
+        Self {
+            collect_trace: true,
+            ..Default::default()
+        }
+    }
+}
+
+/// Outcome of one simulated (or realtime) trial.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    /// Scheduler display name.
+    pub scheduler: String,
+    /// Workload label.
+    pub workload: String,
+    /// Task count N.
+    pub n_tasks: u64,
+    /// Processor (core slot) count P.
+    pub processors: u64,
+    /// Measured makespan T_total (virtual s): submission of the array to
+    /// the end of its last task.
+    pub t_total: f64,
+    /// Isolated per-processor job time T_job = Σt / P.
+    pub t_job: f64,
+    /// Events processed by the simulator (work metric; 0 for realtime).
+    pub events: u64,
+    /// Seconds the central daemon / master spent busy.
+    pub daemon_busy: f64,
+    /// Summary of per-task scheduler-induced wait times.
+    pub waits: Summary,
+    /// Optional full trace.
+    pub trace: Option<Vec<TraceRecord>>,
+}
+
+impl RunResult {
+    /// Non-execution latency ΔT = T_total − T_job (the paper's measured
+    /// quantity, Figure 4/6 y-axis).
+    pub fn delta_t(&self) -> f64 {
+        self.t_total - self.t_job
+    }
+
+    /// Utilization U = T_job / T_total (Figure 5/7 y-axis).
+    pub fn utilization(&self) -> f64 {
+        if self.t_total <= 0.0 {
+            return 0.0;
+        }
+        self.t_job / self.t_total
+    }
+
+    /// Tasks per processor n = N / P.
+    pub fn tasks_per_proc(&self) -> f64 {
+        self.n_tasks as f64 / self.processors as f64
+    }
+
+    /// Sanity invariants every run must satisfy (used by tests).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        if !(self.t_total.is_finite() && self.t_total >= 0.0) {
+            return Err(format!("bad t_total {}", self.t_total));
+        }
+        if self.t_total + 1e-9 < self.t_job {
+            return Err(format!(
+                "t_total {} < t_job {} — faster than physically possible",
+                self.t_total, self.t_job
+            ));
+        }
+        let u = self.utilization();
+        if !(0.0..=1.0 + 1e-9).contains(&u) {
+            return Err(format!("utilization {u} out of range"));
+        }
+        if let Some(trace) = &self.trace {
+            if trace.len() as u64 != self.n_tasks {
+                return Err(format!(
+                    "trace has {} records for {} tasks",
+                    trace.len(),
+                    self.n_tasks
+                ));
+            }
+            for r in trace {
+                if r.start + 1e-9 < r.submit || r.end + 1e-9 < r.start {
+                    return Err(format!("non-causal record {r:?}"));
+                }
+                if r.end > self.t_total + 1e-6 {
+                    return Err(format!(
+                        "task {} ends at {} after t_total {}",
+                        r.task, r.end, self.t_total
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn result(t_total: f64, t_job: f64) -> RunResult {
+        RunResult {
+            scheduler: "x".into(),
+            workload: "w".into(),
+            n_tasks: 10,
+            processors: 2,
+            t_total,
+            t_job,
+            events: 0,
+            daemon_busy: 0.0,
+            waits: Summary::new(),
+            trace: None,
+        }
+    }
+
+    #[test]
+    fn derived_quantities() {
+        let r = result(300.0, 240.0);
+        assert!((r.delta_t() - 60.0).abs() < 1e-12);
+        assert!((r.utilization() - 0.8).abs() < 1e-12);
+        assert!((r.tasks_per_proc() - 5.0).abs() < 1e-12);
+        r.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn invariant_catches_impossible_runs() {
+        assert!(result(100.0, 240.0).check_invariants().is_err());
+        assert!(result(f64::NAN, 1.0).check_invariants().is_err());
+    }
+}

@@ -1,0 +1,259 @@
+//! Hadoop-YARN-like scheduler simulator.
+//!
+//! Mechanism (mirrors ResourceManager + NodeManagers, Hadoop 2.7):
+//!
+//! * every job-array element is its own YARN application (YARN has no
+//!   native job arrays), so each pays: RM submission/scheduling (serial
+//!   at the RM), container allocation granted on a NodeManager
+//!   **heartbeat** boundary, then an **ApplicationMaster** container
+//!   launch — JVM spin-up, localization, registration — before the
+//!   actual task container can run;
+//! * the AM startup is the paper's explanation for YARN's poor numbers
+//!   ("greater overhead for each job, including launching an
+//!   application master process for each job", citing White 2015);
+//! * completions pay RM bookkeeping before the containers are reusable.
+//!
+//! Per-task cost is dominated by the *uniform* AM startup ⇒ fitted
+//! α_s ≈ 1.0 with a huge t_s ≈ 33 s (Table 10), and rapid-task runs
+//! become prohibitive (the paper abandoned them; the harness skips them
+//! via [`Scheduler::projected_runtime`]).
+
+use super::result::{RunOptions, RunResult};
+use super::Scheduler;
+use crate::cluster::{ClusterSpec, SlotPool};
+use crate::sim::{EventQueue, ServiceStation};
+use crate::util::prng::{LognormalGen, Prng};
+use crate::util::stats::Summary;
+use crate::workload::{TraceRecord, Workload};
+use std::collections::VecDeque;
+
+/// Mechanism parameters for the YARN-like model.
+#[derive(Clone, Debug)]
+pub struct YarnParams {
+    /// Display name.
+    pub name: &'static str,
+    /// RM serial cost per application submission + scheduling decision.
+    pub rm_cost_per_app: f64,
+    /// RM serial cost per completion.
+    pub complete_cost_per_app: f64,
+    /// NodeManager heartbeat interval (container grants land on
+    /// heartbeat boundaries).
+    pub nm_heartbeat: f64,
+    /// ApplicationMaster container startup mean (s): JVM + localization
+    /// + AM-RM registration.
+    pub am_startup_mean: f64,
+    /// CV of AM startup.
+    pub am_startup_cv: f64,
+    /// Task container launch overhead once the AM is up (s).
+    pub container_launch: f64,
+    /// Node-side cleanup before the slot is reusable (s).
+    pub teardown: f64,
+    /// One-way RPC latency (s).
+    pub rpc: f64,
+    /// CV of lognormal jitter on RM service times.
+    pub jitter_cv: f64,
+}
+
+/// YARN-like simulator.
+pub struct YarnSim {
+    params: YarnParams,
+}
+
+impl YarnSim {
+    /// New simulator.
+    pub fn new(params: YarnParams) -> Self {
+        Self { params }
+    }
+
+    /// Access parameters.
+    pub fn params(&self) -> &YarnParams {
+        &self.params
+    }
+}
+
+enum Ev {
+    /// An application submission reaches the RM.
+    Arrive { task: u32 },
+    /// RM scheduling pass (aligned to NM heartbeats).
+    Heartbeat,
+    /// AM container is up; task container launches next.
+    AmReady { task: u32, slot: u32 },
+    /// Task container starts executing.
+    Start { task: u32, slot: u32 },
+    /// Task finished.
+    End { task: u32, slot: u32 },
+    /// Slot cleaned up and reusable.
+    SlotFree { slot: u32 },
+}
+
+impl Scheduler for YarnSim {
+    fn name(&self) -> &'static str {
+        self.params.name
+    }
+
+    fn run(
+        &self,
+        workload: &Workload,
+        cluster: &ClusterSpec,
+        seed: u64,
+        options: &RunOptions,
+    ) -> RunResult {
+        let p = &self.params;
+        let mut rng = Prng::new(seed ^ 0x7A42_4EAD);
+        // Precomputed jitter distributions (hot path).
+        let g_rm = LognormalGen::new(p.rm_cost_per_app, p.jitter_cv);
+        let g_complete = LognormalGen::new(p.complete_cost_per_app, p.jitter_cv);
+        let g_am = LognormalGen::new(p.am_startup_mean, p.am_startup_cv);
+        let mut q: EventQueue<Ev> = EventQueue::new();
+        let mut pool = SlotPool::new(cluster);
+        let mut rm = ServiceStation::new();
+        let n = workload.len();
+
+        let mut pending: VecDeque<u32> = VecDeque::new();
+        for t in &workload.tasks {
+            if t.submit_at <= 0.0 && !options.individual_submission {
+                pending.push_back(t.id);
+            } else {
+                q.push(t.submit_at.max(0.0), Ev::Arrive { task: t.id });
+            }
+        }
+        let mut slot_mem: Vec<i64> = vec![0; pool.capacity()];
+        let mut makespan: f64 = 0.0;
+        let mut completed = 0usize;
+        let mut waits = Summary::new();
+        let mut trace: Vec<TraceRecord> = Vec::new();
+        let mut trace_idx: Vec<u32> = if options.collect_trace {
+            vec![u32::MAX; n]
+        } else {
+            Vec::new()
+        };
+
+        q.push(p.nm_heartbeat, Ev::Heartbeat);
+
+        while let Some((now, ev)) = q.pop() {
+            match ev {
+                Ev::Arrive { task } => {
+                    rm.serve(now, rng.lognormal(&g_rm));
+                    pending.push_back(task);
+                }
+                Ev::Heartbeat => {
+                    // Heartbeating NMs report free containers; RM grants
+                    // AM containers for queued applications.
+                    while !pending.is_empty() {
+                        let task_id = *pending.front().unwrap();
+                        let task = &workload.tasks[task_id as usize];
+                        let Some(slot) = pool.alloc(task.mem_mb) else {
+                            break;
+                        };
+                        pending.pop_front();
+                        slot_mem[slot as usize] = task.mem_mb;
+                        let fin = rm.serve(now, rng.lognormal(&g_rm));
+                        let am = rng.lognormal(&g_am);
+                        q.push(fin + p.rpc + am, Ev::AmReady { task: task_id, slot });
+                    }
+                    if completed < n {
+                        q.push(now + p.nm_heartbeat, Ev::Heartbeat);
+                    }
+                }
+                Ev::AmReady { task, slot } => {
+                    // AM asks for its task container; launch on same node.
+                    q.push(now + p.container_launch, Ev::Start { task, slot });
+                }
+                Ev::Start { task, slot } => {
+                    let spec = &workload.tasks[task as usize];
+                    waits.add(now - spec.submit_at);
+                    if options.collect_trace {
+                        trace_idx[task as usize] = trace.len() as u32;
+                        trace.push(TraceRecord {
+                            task,
+                            node: pool.node_of(slot),
+                            slot,
+                            submit: spec.submit_at,
+                            start: now,
+                            end: 0.0,
+                        });
+                    }
+                    q.push(now + spec.duration, Ev::End { task, slot });
+                }
+                Ev::End { task, slot } => {
+                    completed += 1;
+                    makespan = makespan.max(now);
+                    if options.collect_trace {
+                        trace[trace_idx[task as usize] as usize].end = now;
+                    }
+                    let fin = rm.serve(now, rng.lognormal(&g_complete));
+                    q.push(fin + p.teardown, Ev::SlotFree { slot });
+                }
+                Ev::SlotFree { slot } => {
+                    pool.release(slot, slot_mem[slot as usize]);
+                }
+            }
+        }
+
+        debug_assert_eq!(completed, n);
+        let processors = cluster.total_cores();
+        RunResult {
+            scheduler: p.name.to_string(),
+            workload: workload.label.clone(),
+            n_tasks: n as u64,
+            processors,
+            t_total: makespan,
+            t_job: workload.t_job_per_proc(processors),
+            events: q.popped(),
+            daemon_busy: rm.busy(),
+            waits,
+            trace: options.collect_trace.then_some(trace),
+        }
+    }
+
+    fn projected_runtime(&self, workload: &Workload, cluster: &ClusterSpec) -> f64 {
+        // Each task's slot is additionally occupied for ~the AM startup.
+        let p = cluster.total_cores() as f64;
+        let n_per_proc = workload.len() as f64 / p;
+        workload.total_work() / p
+            + n_per_proc * (self.params.am_startup_mean + self.params.container_launch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::calibration;
+    use crate::workload::WorkloadBuilder;
+
+    fn cluster() -> ClusterSpec {
+        ClusterSpec::homogeneous(2, 8, 32 * 1024, 2)
+    }
+
+    #[test]
+    fn completes_and_valid() {
+        let sim = YarnSim::new(calibration::yarn_params());
+        let w = WorkloadBuilder::constant(5.0).tasks(32).label("y").build();
+        let r = sim.run(&w, &cluster(), 2, &RunOptions::with_trace());
+        r.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn am_overhead_dominates_short_tasks() {
+        let sim = YarnSim::new(calibration::yarn_params());
+        // 2 tasks per slot, 5 s each: ΔT ≈ 2 × am_startup ≫ t_job.
+        let w = WorkloadBuilder::constant(5.0).tasks(32).build();
+        let r = sim.run(&w, &cluster(), 4, &RunOptions::default());
+        let per_task_overhead = r.delta_t() / 2.0;
+        let am = calibration::yarn_params().am_startup_mean;
+        assert!(
+            (per_task_overhead - am).abs() < am * 0.5,
+            "per-task overhead {per_task_overhead} should be near AM startup {am}"
+        );
+        assert!(r.utilization() < 0.3, "u={}", r.utilization());
+    }
+
+    #[test]
+    fn projected_runtime_flags_prohibitive() {
+        let sim = YarnSim::new(calibration::yarn_params());
+        let w = WorkloadBuilder::constant(1.0).tasks(16 * 240).build();
+        let projected = sim.projected_runtime(&w, &cluster());
+        // 240 tasks/proc × (1 s + ~33 s AM) ≈ 2+ hours.
+        assert!(projected > 3600.0, "projected={projected}");
+    }
+}

@@ -1,0 +1,300 @@
+//! Event queue + service stations for virtual-time simulation.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Virtual time in seconds. Must stay finite; the queue asserts this.
+pub type Time = f64;
+
+struct Entry<T> {
+    /// Packed ordering key: high 64 bits are the IEEE-754 bits of the
+    /// (non-negative, finite) event time — monotone in the time value —
+    /// and the low 64 bits the insertion sequence number. One u128
+    /// comparison replaces a float partial_cmp plus a tie-break branch
+    /// in the heap's hot sift loops, and encodes FIFO-among-ties
+    /// determinism structurally.
+    key: u128,
+    payload: T,
+}
+
+#[inline]
+fn pack_key(time: Time, seq: u64) -> u128 {
+    debug_assert!(time >= 0.0);
+    ((time.to_bits() as u128) << 64) | seq as u128
+}
+
+#[inline]
+fn unpack_time(key: u128) -> Time {
+    f64::from_bits((key >> 64) as u64)
+}
+
+impl<T> PartialEq for Entry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.key == other.key
+    }
+}
+impl<T> Eq for Entry<T> {}
+impl<T> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T> Ord for Entry<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap via reversed key order.
+        other.key.cmp(&self.key)
+    }
+}
+
+/// Deterministic min-time event queue.
+///
+/// Events at equal times pop in insertion order. Popping also advances
+/// `now()`; scheduling an event in the past panics (causality guard).
+pub struct EventQueue<T> {
+    heap: BinaryHeap<Entry<T>>,
+    seq: u64,
+    now: Time,
+    popped: u64,
+}
+
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> EventQueue<T> {
+    /// Empty queue at t = 0.
+    pub fn new() -> Self {
+        Self::with_capacity(1024)
+    }
+
+    /// Empty queue with a preallocated heap (avoids regrowth in the
+    /// simulators' hot loops).
+    pub fn with_capacity(cap: usize) -> Self {
+        Self {
+            heap: BinaryHeap::with_capacity(cap),
+            seq: 0,
+            now: 0.0,
+            popped: 0,
+        }
+    }
+
+    /// Current virtual time (time of the last popped event).
+    pub fn now(&self) -> Time {
+        self.now
+    }
+
+    /// Number of events popped so far (simulation work metric).
+    pub fn popped(&self) -> u64 {
+        self.popped
+    }
+
+    /// Number of pending events.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// True if no pending events.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Schedule `payload` at absolute time `at` (must be >= now and finite).
+    pub fn push(&mut self, at: Time, payload: T) {
+        assert!(at.is_finite(), "non-finite event time {at}");
+        assert!(
+            at >= self.now - 1e-9,
+            "scheduling into the past: at={at} now={}",
+            self.now
+        );
+        self.heap.push(Entry {
+            key: pack_key(at.max(self.now), self.seq),
+            payload,
+        });
+        self.seq += 1;
+    }
+
+    /// Schedule `payload` after a delay from now.
+    pub fn push_after(&mut self, delay: Time, payload: T) {
+        assert!(delay >= 0.0, "negative delay {delay}");
+        let now = self.now;
+        self.push(now + delay, payload);
+    }
+
+    /// Pop the earliest event, advancing the clock to its time.
+    pub fn pop(&mut self) -> Option<(Time, T)> {
+        let e = self.heap.pop()?;
+        let time = unpack_time(e.key);
+        debug_assert!(time >= self.now - 1e-9, "clock went backwards");
+        self.now = time;
+        self.popped += 1;
+        Some((time, e.payload))
+    }
+
+    /// Peek at the time of the next event.
+    pub fn next_time(&self) -> Option<Time> {
+        self.heap.peek().map(|e| unpack_time(e.key))
+    }
+}
+
+/// A serial resource with FIFO queueing (e.g. the central scheduler
+/// daemon's RPC/processing thread). Work items submitted at time `now`
+/// with a service requirement start when the server frees up; the
+/// returned value is the *completion* time.
+#[derive(Clone, Debug, Default)]
+pub struct ServiceStation {
+    free_at: Time,
+    busy_accum: Time,
+    served: u64,
+}
+
+impl ServiceStation {
+    /// Idle station.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Enqueue work arriving at `now` needing `service` seconds; returns
+    /// the completion time.
+    #[inline]
+    pub fn serve(&mut self, now: Time, service: Time) -> Time {
+        debug_assert!(service >= 0.0, "negative service time");
+        let start = now.max(self.free_at);
+        self.free_at = start + service;
+        self.busy_accum += service;
+        self.served += 1;
+        self.free_at
+    }
+
+    /// Time the station becomes idle.
+    pub fn free_at(&self) -> Time {
+        self.free_at
+    }
+
+    /// Total busy seconds accumulated.
+    pub fn busy(&self) -> Time {
+        self.busy_accum
+    }
+
+    /// Number of items served.
+    pub fn served(&self) -> u64 {
+        self.served
+    }
+}
+
+/// c identical servers with a shared FIFO queue (e.g. a pool of dispatch
+/// threads). Completion time = service start on the earliest-free server.
+#[derive(Clone, Debug)]
+pub struct MultiServer {
+    free_at: Vec<Time>,
+}
+
+impl MultiServer {
+    /// Pool of `c` idle servers.
+    pub fn new(c: usize) -> Self {
+        assert!(c > 0);
+        Self {
+            free_at: vec![0.0; c],
+        }
+    }
+
+    /// Enqueue work arriving at `now` needing `service` seconds.
+    pub fn serve(&mut self, now: Time, service: Time) -> Time {
+        // Earliest-free server; linear scan is fine for the small pools
+        // we model (daemon thread counts, not cluster cores).
+        let (idx, _) = self
+            .free_at
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        let start = now.max(self.free_at[idx]);
+        self.free_at[idx] = start + service;
+        self.free_at[idx]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, "c");
+        q.push(1.0, "a");
+        q.push(2.0, "b");
+        let order: Vec<_> = std::iter::from_fn(|| q.pop()).map(|(_, p)| p).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn fifo_among_ties() {
+        let mut q = EventQueue::new();
+        for i in 0..100 {
+            q.push(5.0, i);
+        }
+        let order: Vec<_> = std::iter::from_fn(|| q.pop()).map(|(_, p)| p).collect();
+        assert_eq!(order, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut q = EventQueue::new();
+        q.push(1.0, ());
+        q.push(1.0, ());
+        q.push(4.0, ());
+        let mut last = 0.0;
+        while let Some((t, _)) = q.pop() {
+            assert!(t >= last);
+            last = t;
+            assert_eq!(q.now(), t);
+        }
+        assert_eq!(q.popped(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "past")]
+    fn rejects_past_events() {
+        let mut q = EventQueue::new();
+        q.push(5.0, ());
+        q.pop();
+        q.push(1.0, ());
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite")]
+    fn rejects_nan_time() {
+        let mut q: EventQueue<()> = EventQueue::new();
+        q.push(f64::NAN, ());
+    }
+
+    #[test]
+    fn push_after_uses_now() {
+        let mut q = EventQueue::new();
+        q.push(2.0, 0);
+        q.pop();
+        q.push_after(3.0, 1);
+        let (t, _) = q.pop().unwrap();
+        assert_eq!(t, 5.0);
+    }
+
+    #[test]
+    fn station_serializes() {
+        let mut s = ServiceStation::new();
+        assert_eq!(s.serve(0.0, 2.0), 2.0);
+        assert_eq!(s.serve(0.0, 2.0), 4.0); // queued behind the first
+        assert_eq!(s.serve(10.0, 1.0), 11.0); // idle gap
+        assert_eq!(s.busy(), 5.0);
+        assert_eq!(s.served(), 3);
+    }
+
+    #[test]
+    fn multiserver_parallelism() {
+        let mut m = MultiServer::new(2);
+        assert_eq!(m.serve(0.0, 4.0), 4.0);
+        assert_eq!(m.serve(0.0, 4.0), 4.0); // second server
+        assert_eq!(m.serve(0.0, 1.0), 5.0); // queues on earliest-free
+    }
+}

@@ -1,0 +1,12 @@
+//! Discrete-event simulation core.
+//!
+//! The paper's measurements ran on a real 1408-core cluster; here the
+//! cluster and the scheduler control plane are simulated in virtual time
+//! (see DESIGN.md §2 for why the substitution preserves the measured
+//! behaviour). This module provides the generic machinery: a
+//! deterministic event queue, a virtual clock and serial service
+//! stations (the scheduler daemon is one).
+
+mod engine;
+
+pub use engine::{EventQueue, MultiServer, ServiceStation, Time};

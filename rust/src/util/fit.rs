@@ -1,0 +1,154 @@
+//! Least-squares fitting, including the paper's headline fit:
+//! ΔT = t_s · n^α_s, fitted as a line in log–log space
+//! (log ΔT = log t_s + α_s · log n). Table 10 of the paper reports
+//! exactly these two parameters per scheduler.
+
+/// Result of a simple linear regression y = a + b·x.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Line {
+    /// Intercept a.
+    pub intercept: f64,
+    /// Slope b.
+    pub slope: f64,
+    /// Coefficient of determination.
+    pub r2: f64,
+}
+
+/// Ordinary least squares on (x, y) pairs. Panics if fewer than 2 points.
+pub fn linear_regression(xs: &[f64], ys: &[f64]) -> Line {
+    assert_eq!(xs.len(), ys.len(), "x/y length mismatch");
+    assert!(xs.len() >= 2, "need at least 2 points to fit a line");
+    let n = xs.len() as f64;
+    let sx: f64 = xs.iter().sum();
+    let sy: f64 = ys.iter().sum();
+    let sxx: f64 = xs.iter().map(|x| x * x).sum();
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| x * y).sum();
+    let denom = n * sxx - sx * sx;
+    assert!(
+        denom.abs() > 1e-300,
+        "degenerate x values in linear regression"
+    );
+    let slope = (n * sxy - sx * sy) / denom;
+    let intercept = (sy - slope * sx) / n;
+    // R^2
+    let my = sy / n;
+    let ss_tot: f64 = ys.iter().map(|y| (y - my) * (y - my)).sum();
+    let ss_res: f64 = xs
+        .iter()
+        .zip(ys)
+        .map(|(x, y)| {
+            let e = y - (intercept + slope * x);
+            e * e
+        })
+        .sum();
+    let r2 = if ss_tot <= 0.0 {
+        1.0
+    } else {
+        1.0 - ss_res / ss_tot
+    };
+    Line {
+        intercept,
+        slope,
+        r2,
+    }
+}
+
+/// Fitted power law ΔT = t_s · n^α_s.
+#[derive(Clone, Copy, Debug)]
+pub struct PowerLawFit {
+    /// Marginal scheduler latency t_s (seconds). "Smaller is better".
+    pub t_s: f64,
+    /// Nonlinear exponent α_s. "Smaller is better".
+    pub alpha_s: f64,
+    /// R² of the log–log fit.
+    pub r2: f64,
+}
+
+impl PowerLawFit {
+    /// Evaluate the model ΔT(n).
+    pub fn delta_t(&self, n: f64) -> f64 {
+        self.t_s * n.powf(self.alpha_s)
+    }
+}
+
+/// Fit ΔT = t_s n^α_s by OLS in log–log space. Points with non-positive
+/// n or ΔT are skipped (they carry no information for a power law and
+/// occur only as shot noise at tiny n). Panics if fewer than 2 usable
+/// points remain.
+pub fn fit_power_law(ns: &[f64], delta_ts: &[f64]) -> PowerLawFit {
+    assert_eq!(ns.len(), delta_ts.len());
+    let (mut xs, mut ys) = (Vec::new(), Vec::new());
+    for (&n, &dt) in ns.iter().zip(delta_ts) {
+        if n > 0.0 && dt > 0.0 {
+            xs.push(n.ln());
+            ys.push(dt.ln());
+        }
+    }
+    let line = linear_regression(&xs, &ys);
+    PowerLawFit {
+        t_s: line.intercept.exp(),
+        alpha_s: line.slope,
+        r2: line.r2,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_line() {
+        let xs = [0.0, 1.0, 2.0, 3.0];
+        let ys = [1.0, 3.0, 5.0, 7.0];
+        let l = linear_regression(&xs, &ys);
+        assert!((l.intercept - 1.0).abs() < 1e-12);
+        assert!((l.slope - 2.0).abs() < 1e-12);
+        assert!((l.r2 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn noisy_line_r2_below_one() {
+        let xs = [0.0, 1.0, 2.0, 3.0, 4.0];
+        let ys = [0.1, 0.9, 2.2, 2.8, 4.1];
+        let l = linear_regression(&xs, &ys);
+        assert!((l.slope - 1.0).abs() < 0.1);
+        assert!(l.r2 > 0.97 && l.r2 < 1.0);
+    }
+
+    #[test]
+    fn power_law_exact_recovery() {
+        // The paper's Slurm fit: t_s = 2.2, alpha_s = 1.3.
+        let ns: [f64; 4] = [4.0, 8.0, 48.0, 240.0];
+        let dts: Vec<f64> = ns.iter().map(|n| 2.2 * n.powf(1.3)).collect();
+        let fit = fit_power_law(&ns, &dts);
+        assert!((fit.t_s - 2.2).abs() < 1e-9, "t_s={}", fit.t_s);
+        assert!((fit.alpha_s - 1.3).abs() < 1e-9, "alpha={}", fit.alpha_s);
+        assert!((fit.r2 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn power_law_skips_nonpositive_points() {
+        let ns: [f64; 5] = [1.0, 4.0, 8.0, 48.0, 240.0];
+        let mut dts: Vec<f64> = ns.iter().map(|n| 33.0 * n.powf(1.0)).collect();
+        dts[0] = 0.0; // shot-noise zero at n=1 must be ignored
+        let fit = fit_power_law(&ns, &dts);
+        assert!((fit.t_s - 33.0).abs() < 1e-9);
+        assert!((fit.alpha_s - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn model_eval_roundtrip() {
+        let fit = PowerLawFit {
+            t_s: 3.4,
+            alpha_s: 1.1,
+            r2: 1.0,
+        };
+        assert!((fit.delta_t(240.0) - 3.4 * 240f64.powf(1.1)).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn regression_needs_two_points() {
+        linear_regression(&[1.0], &[1.0]);
+    }
+}

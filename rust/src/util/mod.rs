@@ -1,0 +1,16 @@
+//! Small self-contained utilities. The offline crate set has no `rand`,
+//! `serde`, `clap`, `criterion` or `proptest`, so the pieces we need from
+//! them are implemented here: a deterministic PRNG + distributions,
+//! running statistics and least-squares fitting, ASCII table/plot
+//! rendering, and a miniature property-testing harness.
+
+pub mod fit;
+pub mod plot;
+pub mod prng;
+pub mod prop;
+pub mod stats;
+pub mod table;
+
+pub use fit::{fit_power_law, linear_regression, PowerLawFit};
+pub use prng::{Prng, SplitMix64};
+pub use stats::Summary;

@@ -1,0 +1,177 @@
+//! ASCII scatter/line plots, log–log capable — used to render Figures 4–7
+//! in the terminal the way the paper renders them on log-log axes.
+
+/// One named series of (x, y) points.
+#[derive(Clone, Debug)]
+pub struct Series {
+    /// Legend label.
+    pub label: String,
+    /// Glyph used for this series' points.
+    pub glyph: char,
+    /// Data points.
+    pub points: Vec<(f64, f64)>,
+}
+
+/// An ASCII plot canvas.
+#[derive(Clone, Debug)]
+pub struct Plot {
+    title: String,
+    x_label: String,
+    y_label: String,
+    log_x: bool,
+    log_y: bool,
+    width: usize,
+    height: usize,
+    series: Vec<Series>,
+}
+
+impl Plot {
+    /// New plot with axis labels.
+    pub fn new(title: impl Into<String>, x_label: impl Into<String>, y_label: impl Into<String>) -> Self {
+        Self {
+            title: title.into(),
+            x_label: x_label.into(),
+            y_label: y_label.into(),
+            log_x: false,
+            log_y: false,
+            width: 64,
+            height: 20,
+            series: Vec::new(),
+        }
+    }
+
+    /// Use log-log axes (points with non-positive coords are dropped).
+    pub fn loglog(mut self) -> Self {
+        self.log_x = true;
+        self.log_y = true;
+        self
+    }
+
+    /// Canvas size in characters.
+    pub fn size(mut self, width: usize, height: usize) -> Self {
+        self.width = width.max(16);
+        self.height = height.max(8);
+        self
+    }
+
+    /// Add a series.
+    pub fn series(&mut self, label: impl Into<String>, glyph: char, points: Vec<(f64, f64)>) -> &mut Self {
+        self.series.push(Series {
+            label: label.into(),
+            glyph,
+            points,
+        });
+        self
+    }
+
+    fn tx(&self, x: f64) -> Option<f64> {
+        if self.log_x {
+            (x > 0.0).then(|| x.ln())
+        } else {
+            Some(x)
+        }
+    }
+
+    fn ty(&self, y: f64) -> Option<f64> {
+        if self.log_y {
+            (y > 0.0).then(|| y.ln())
+        } else {
+            Some(y)
+        }
+    }
+
+    /// Render to a string.
+    pub fn render(&self) -> String {
+        let mut pts: Vec<(f64, f64, char)> = Vec::new();
+        for s in &self.series {
+            for &(x, y) in &s.points {
+                if let (Some(tx), Some(ty)) = (self.tx(x), self.ty(y)) {
+                    pts.push((tx, ty, s.glyph));
+                }
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("-- {} --\n", self.title));
+        }
+        if pts.is_empty() {
+            out.push_str("(no plottable points)\n");
+            return out;
+        }
+        let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+        let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &(x, y, _) in &pts {
+            x0 = x0.min(x);
+            x1 = x1.max(x);
+            y0 = y0.min(y);
+            y1 = y1.max(y);
+        }
+        if (x1 - x0).abs() < 1e-12 {
+            x1 = x0 + 1.0;
+        }
+        if (y1 - y0).abs() < 1e-12 {
+            y1 = y0 + 1.0;
+        }
+        let mut grid = vec![vec![' '; self.width]; self.height];
+        for &(x, y, g) in &pts {
+            let cx = ((x - x0) / (x1 - x0) * (self.width - 1) as f64).round() as usize;
+            let cy = ((y - y0) / (y1 - y0) * (self.height - 1) as f64).round() as usize;
+            let row = self.height - 1 - cy;
+            // Later series overwrite earlier ones; '*' marks collisions of
+            // different glyphs.
+            let cell = &mut grid[row][cx];
+            *cell = if *cell == ' ' || *cell == g { g } else { '*' };
+        }
+        let inv = |v: f64| if self.log_y { v.exp() } else { v };
+        let invx = |v: f64| if self.log_x { v.exp() } else { v };
+        out.push_str(&format!("{} (top={:.3})\n", self.y_label, inv(y1)));
+        for row in &grid {
+            out.push('|');
+            out.extend(row.iter());
+            out.push('\n');
+        }
+        out.push('+');
+        out.push_str(&"-".repeat(self.width));
+        out.push('\n');
+        out.push_str(&format!(
+            " {}: {:.3} .. {:.3}   (y bottom={:.3})\n",
+            self.x_label,
+            invx(x0),
+            invx(x1),
+            inv(y0)
+        ));
+        for s in &self.series {
+            out.push_str(&format!("   {} {}\n", s.glyph, s.label));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_points() {
+        let mut p = Plot::new("t", "n", "dt").size(32, 10);
+        p.series("s", 'o', vec![(1.0, 1.0), (2.0, 4.0), (3.0, 9.0)]);
+        let r = p.render();
+        assert!(r.contains("-- t --"));
+        assert!(r.matches('o').count() >= 3);
+    }
+
+    #[test]
+    fn loglog_drops_nonpositive() {
+        let mut p = Plot::new("t", "n", "dt").loglog().size(32, 10);
+        p.series("s", '#', vec![(0.0, 1.0), (-1.0, 2.0), (10.0, 100.0), (100.0, 1000.0)]);
+        let r = p.render();
+        // 2 plotted points + 1 legend glyph; the non-positive points drop.
+        assert!(r.matches('#').count() == 3, "{r}");
+    }
+
+    #[test]
+    fn empty_plot_ok() {
+        let p = Plot::new("t", "x", "y");
+        assert!(p.render().contains("no plottable points"));
+    }
+}

@@ -1,0 +1,301 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! `SplitMix64` seeds `Prng` (xoshiro256**), which provides uniform,
+//! exponential, normal and lognormal variates. Determinism matters: every
+//! simulated trial is reproducible from `(experiment seed, trial index)`.
+
+/// SplitMix64 — tiny, full-period seeder (Steele et al., 2014).
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    /// Create from a seed.
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    /// Next 64 random bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256** — the main generator (Blackman & Vigna, 2018).
+#[derive(Clone, Debug)]
+pub struct Prng {
+    s: [u64; 4],
+    /// Cached second normal variate from the Box–Muller pair.
+    cached_normal: Option<f64>,
+}
+
+impl Prng {
+    /// Seed via SplitMix64, per the xoshiro authors' recommendation.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+            cached_normal: None,
+        }
+    }
+
+    /// Derive an independent stream (e.g. per trial / per node).
+    pub fn fork(&mut self, stream: u64) -> Prng {
+        Prng::new(self.next_u64() ^ stream.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
+    /// Next 64 random bits.
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        // 53 high bits → [0,1) with full double precision.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in [0, n). n must be > 0.
+    pub fn below(&mut self, n: u64) -> u64 {
+        // Lemire's multiply-shift rejection-free-enough method; bias is
+        // negligible for n ≪ 2^64 and determinism is what we care about.
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    pub fn range_u64(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Bernoulli trial.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Exponential variate with the given mean.
+    pub fn exponential(&mut self, mean: f64) -> f64 {
+        let u = 1.0 - self.f64(); // (0,1], avoids ln(0)
+        -mean * u.ln()
+    }
+
+    /// Standard normal via Box–Muller (cached pair).
+    #[inline]
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.cached_normal.take() {
+            return z;
+        }
+        let (u1, u2) = (1.0 - self.f64(), self.f64());
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.cached_normal = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Lognormal variate with *linear-space* mean `mean` and coefficient of
+    /// variation `cv` (σ/μ). Used for service-time jitter: mean-preserving,
+    /// strictly positive.
+    pub fn lognormal_mean_cv(&mut self, mean: f64, cv: f64) -> f64 {
+        if cv <= 0.0 || mean <= 0.0 {
+            return mean;
+        }
+        let sigma2 = (1.0 + cv * cv).ln();
+        let mu = mean.ln() - 0.5 * sigma2;
+        (mu + sigma2.sqrt() * self.normal()).exp()
+    }
+
+    /// Sample from a precomputed lognormal (hot-path variant of
+    /// [`Prng::lognormal_mean_cv`]).
+    pub fn lognormal(&mut self, gen: &LognormalGen) -> f64 {
+        if gen.sigma == 0.0 {
+            return gen.mean;
+        }
+        (gen.mu + gen.sigma * self.normal()).exp()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick a uniformly random element index.
+    pub fn choose_index(&mut self, len: usize) -> usize {
+        assert!(len > 0, "choose_index on empty range");
+        self.below(len as u64) as usize
+    }
+}
+
+/// Precomputed lognormal distribution: mean-preserving with a given
+/// coefficient of variation. The per-sample cost drops from four
+/// transcendentals (ln, ln, sqrt, exp) to one exp — this matters in the
+/// simulators' jitter path, which draws one sample per task event.
+#[derive(Clone, Copy, Debug)]
+pub struct LognormalGen {
+    mean: f64,
+    mu: f64,
+    sigma: f64,
+}
+
+impl LognormalGen {
+    /// From linear-space mean and coefficient of variation.
+    pub fn new(mean: f64, cv: f64) -> Self {
+        if cv <= 0.0 || mean <= 0.0 {
+            return Self {
+                mean,
+                mu: 0.0,
+                sigma: 0.0,
+            };
+        }
+        let sigma2 = (1.0 + cv * cv).ln();
+        Self {
+            mean,
+            mu: mean.ln() - 0.5 * sigma2,
+            sigma: sigma2.sqrt(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn precomputed_lognormal_matches_direct() {
+        // Same seed ⇒ identical samples from both paths.
+        let mut a = Prng::new(3);
+        let mut b = Prng::new(3);
+        let gen = LognormalGen::new(2.5, 0.3);
+        for _ in 0..1000 {
+            let x = a.lognormal_mean_cv(2.5, 0.3);
+            let y = b.lognormal(&gen);
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn precomputed_lognormal_zero_cv() {
+        let mut p = Prng::new(1);
+        let gen = LognormalGen::new(4.0, 0.0);
+        assert_eq!(p.lognormal(&gen), 4.0);
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Prng::new(42);
+        let mut b = Prng::new(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Prng::new(1);
+        let mut b = Prng::new(2);
+        let same = (0..100).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 3);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut p = Prng::new(7);
+        for _ in 0..10_000 {
+            let x = p.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_is_half() {
+        let mut p = Prng::new(11);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| p.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut p = Prng::new(13);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| p.exponential(3.0)).sum::<f64>() / n as f64;
+        assert!((mean - 3.0).abs() < 0.1, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut p = Prng::new(17);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| p.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn lognormal_mean_preserving_and_positive() {
+        let mut p = Prng::new(19);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| p.lognormal_mean_cv(2.5, 0.3)).collect();
+        assert!(xs.iter().all(|&x| x > 0.0));
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        assert!((mean - 2.5).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn lognormal_zero_cv_is_constant() {
+        let mut p = Prng::new(23);
+        assert_eq!(p.lognormal_mean_cv(4.0, 0.0), 4.0);
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut p = Prng::new(29);
+        for _ in 0..10_000 {
+            assert!(p.below(7) < 7);
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut p = Prng::new(31);
+        let mut xs: Vec<u32> = (0..100).collect();
+        p.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn fork_streams_are_independent() {
+        let mut root = Prng::new(5);
+        let mut a = root.fork(1);
+        let mut b = root.fork(2);
+        let same = (0..100).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 3);
+    }
+}

@@ -1,0 +1,108 @@
+//! Miniature property-based testing harness.
+//!
+//! The offline crate set has no `proptest`/`quickcheck`, so this module
+//! supplies the small subset we need: seeded generators + a `forall`
+//! runner that reports the failing case count and seed. Shrinking is
+//! deliberately omitted — cases are reported with their seed so they can
+//! be replayed deterministically.
+
+use super::prng::Prng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct PropConfig {
+    /// Number of random cases to run.
+    pub cases: u32,
+    /// Base seed; case i uses seed `seed + i`.
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        Self {
+            cases: 64,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+/// Run `prop` on `cases` generated inputs; panics with the seed of the
+/// first failing case. `gen` receives a fresh deterministic PRNG per case.
+pub fn forall<T: std::fmt::Debug>(
+    config: PropConfig,
+    mut gen: impl FnMut(&mut Prng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..config.cases {
+        let seed = config.seed.wrapping_add(case as u64);
+        let mut rng = Prng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed at case {case} (replay seed {seed:#x}):\n  input: {input:?}\n  {msg}"
+            );
+        }
+    }
+}
+
+/// Like `forall` but with default config.
+pub fn check<T: std::fmt::Debug>(
+    gen: impl FnMut(&mut Prng) -> T,
+    prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    forall(PropConfig::default(), gen, prop)
+}
+
+/// Assert helper: build a `Result` from a condition.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check(
+            |rng| rng.range_u64(0, 100),
+            |&x| ensure(x <= 100, "bounded"),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports_seed() {
+        check(
+            |rng| rng.range_u64(0, 100),
+            |&x| ensure(x > 100, "impossible"),
+        );
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let mut seen = Vec::new();
+        forall(
+            PropConfig { cases: 5, seed: 9 },
+            |rng| rng.next_u64(),
+            |&x| {
+                seen.push(x);
+                Ok(())
+            },
+        );
+        let mut seen2 = Vec::new();
+        forall(
+            PropConfig { cases: 5, seed: 9 },
+            |rng| rng.next_u64(),
+            |&x| {
+                seen2.push(x);
+                Ok(())
+            },
+        );
+        assert_eq!(seen, seen2);
+    }
+}

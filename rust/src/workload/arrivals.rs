@@ -1,0 +1,94 @@
+//! Arrival processes: when tasks reach the scheduler.
+//!
+//! The Table 9 benchmark submits everything at t=0 (one job array); the
+//! paper's §1/§5 discussion of *on-demand* vs *batch* scheduling is
+//! about sustained arrival streams — big data jobs "are expected to
+//! execute immediately; that is, they tend not to wait in batch
+//! queues". These processes stamp `submit_at` to model that.
+
+use super::types::Workload;
+use crate::util::prng::Prng;
+
+/// Arrival process for a workload.
+#[derive(Clone, Copy, Debug)]
+pub enum ArrivalProcess {
+    /// Everything at t = 0 (the Table 9 job-array benchmark).
+    AllAtOnce,
+    /// Poisson arrivals at `rate` tasks/second.
+    Poisson {
+        /// Mean arrival rate (tasks/s).
+        rate: f64,
+    },
+    /// On/off bursts: `burst` tasks arrive together every `period` s.
+    Bursty {
+        /// Tasks per burst.
+        burst: u32,
+        /// Seconds between bursts.
+        period: f64,
+    },
+}
+
+impl ArrivalProcess {
+    /// Stamp submit times onto a workload (in task order).
+    pub fn apply(&self, workload: &mut Workload, seed: u64) {
+        let mut rng = Prng::new(seed ^ 0xA221_7A15);
+        match *self {
+            ArrivalProcess::AllAtOnce => {
+                for t in &mut workload.tasks {
+                    t.submit_at = 0.0;
+                }
+            }
+            ArrivalProcess::Poisson { rate } => {
+                assert!(rate > 0.0, "rate must be positive");
+                let mut now = 0.0;
+                for t in &mut workload.tasks {
+                    now += rng.exponential(1.0 / rate);
+                    t.submit_at = now;
+                }
+            }
+            ArrivalProcess::Bursty { burst, period } => {
+                assert!(burst > 0 && period > 0.0);
+                for (i, t) in workload.tasks.iter_mut().enumerate() {
+                    t.submit_at = (i as u32 / burst) as f64 * period;
+                }
+            }
+        }
+    }
+}
+
+/// Offered load ρ = arrival rate × mean task time / processors.
+pub fn offered_load(rate: f64, mean_task_time: f64, processors: u64) -> f64 {
+    rate * mean_task_time / processors as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::WorkloadBuilder;
+
+    #[test]
+    fn poisson_rate_approximates() {
+        let mut w = WorkloadBuilder::constant(1.0).tasks(10_000).build();
+        ArrivalProcess::Poisson { rate: 50.0 }.apply(&mut w, 1);
+        let last = w.tasks.last().unwrap().submit_at;
+        let rate = 10_000.0 / last;
+        assert!((rate - 50.0).abs() < 2.5, "rate={rate}");
+        // Monotone non-decreasing submit times.
+        assert!(w.tasks.windows(2).all(|p| p[1].submit_at >= p[0].submit_at));
+    }
+
+    #[test]
+    fn bursts_group_tasks() {
+        let mut w = WorkloadBuilder::constant(1.0).tasks(10).build();
+        ArrivalProcess::Bursty { burst: 4, period: 10.0 }.apply(&mut w, 0);
+        assert_eq!(w.tasks[0].submit_at, 0.0);
+        assert_eq!(w.tasks[3].submit_at, 0.0);
+        assert_eq!(w.tasks[4].submit_at, 10.0);
+        assert_eq!(w.tasks[9].submit_at, 20.0);
+    }
+
+    #[test]
+    fn load_arithmetic() {
+        assert!((offered_load(100.0, 5.0, 1000) - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,188 @@
+//! Workload generation: constant task times (the paper's benchmark) and
+//! variable task-time distributions (used to exercise the U_v model of
+//! Section 4).
+
+use super::types::{TaskSpec, Workload};
+use crate::util::prng::Prng;
+
+/// Distribution of task durations.
+#[derive(Clone, Copy, Debug)]
+pub enum TaskTimeDist {
+    /// Every task takes exactly t seconds (Table 9 style).
+    Constant(f64),
+    /// Uniform in [lo, hi).
+    Uniform(f64, f64),
+    /// Exponential with the given mean.
+    Exponential(f64),
+    /// Lognormal with linear-space mean and coefficient of variation.
+    Lognormal { mean: f64, cv: f64 },
+}
+
+impl TaskTimeDist {
+    /// Draw one duration.
+    pub fn sample(&self, rng: &mut Prng) -> f64 {
+        match *self {
+            TaskTimeDist::Constant(t) => t,
+            TaskTimeDist::Uniform(lo, hi) => rng.range_f64(lo, hi),
+            TaskTimeDist::Exponential(mean) => rng.exponential(mean),
+            TaskTimeDist::Lognormal { mean, cv } => rng.lognormal_mean_cv(mean, cv),
+        }
+    }
+
+    /// Expected value.
+    pub fn mean(&self) -> f64 {
+        match *self {
+            TaskTimeDist::Constant(t) => t,
+            TaskTimeDist::Uniform(lo, hi) => 0.5 * (lo + hi),
+            TaskTimeDist::Exponential(mean) => mean,
+            TaskTimeDist::Lognormal { mean, .. } => mean,
+        }
+    }
+}
+
+/// Builder for array-style workloads.
+#[derive(Clone, Debug)]
+pub struct WorkloadBuilder {
+    dist: TaskTimeDist,
+    n_tasks: u64,
+    label: String,
+    mem_mb: i64,
+    seed: u64,
+    n_jobs: u32,
+}
+
+impl WorkloadBuilder {
+    /// Constant-duration tasks.
+    pub fn constant(t: f64) -> Self {
+        Self::with_dist(TaskTimeDist::Constant(t))
+    }
+
+    /// Tasks drawn from an arbitrary distribution.
+    pub fn with_dist(dist: TaskTimeDist) -> Self {
+        Self {
+            dist,
+            n_tasks: 0,
+            label: String::new(),
+            mem_mb: 2048,
+            seed: 0,
+            n_jobs: 1,
+        }
+    }
+
+    /// Number of tasks N.
+    pub fn tasks(mut self, n: u64) -> Self {
+        self.n_tasks = n;
+        self
+    }
+
+    /// Label for reports.
+    pub fn label(mut self, l: impl Into<String>) -> Self {
+        self.label = l.into();
+        self
+    }
+
+    /// Per-task memory (MB).
+    pub fn mem_mb(mut self, m: i64) -> Self {
+        self.mem_mb = m;
+        self
+    }
+
+    /// Seed for sampled durations.
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    /// Split tasks round-robin across this many job arrays.
+    pub fn jobs(mut self, n: u32) -> Self {
+        self.n_jobs = n.max(1);
+        self
+    }
+
+    /// Materialize.
+    pub fn build(self) -> Workload {
+        let mut rng = Prng::new(self.seed ^ 0x5EED_F00D);
+        let mut tasks = Vec::with_capacity(self.n_tasks as usize);
+        for i in 0..self.n_tasks {
+            let mut t = TaskSpec::array(
+                i as u32,
+                (i % self.n_jobs as u64) as u32,
+                self.dist.sample(&mut rng),
+            );
+            t.mem_mb = self.mem_mb;
+            tasks.push(t);
+        }
+        Workload {
+            tasks,
+            label: self.label,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, ensure};
+
+    #[test]
+    fn constant_workload() {
+        let w = WorkloadBuilder::constant(5.0).tasks(10).label("x").build();
+        assert_eq!(w.len(), 10);
+        assert!(w.tasks.iter().all(|t| t.duration == 5.0));
+        w.validate().unwrap();
+    }
+
+    #[test]
+    fn seeded_reproducibility() {
+        let a = WorkloadBuilder::with_dist(TaskTimeDist::Exponential(3.0))
+            .tasks(100)
+            .seed(7)
+            .build();
+        let b = WorkloadBuilder::with_dist(TaskTimeDist::Exponential(3.0))
+            .tasks(100)
+            .seed(7)
+            .build();
+        for (x, y) in a.tasks.iter().zip(&b.tasks) {
+            assert_eq!(x.duration, y.duration);
+        }
+    }
+
+    #[test]
+    fn job_split_round_robin() {
+        let w = WorkloadBuilder::constant(1.0).tasks(10).jobs(3).build();
+        assert_eq!(w.tasks[0].job, 0);
+        assert_eq!(w.tasks[1].job, 1);
+        assert_eq!(w.tasks[2].job, 2);
+        assert_eq!(w.tasks[3].job, 0);
+    }
+
+    #[test]
+    fn dist_means() {
+        assert_eq!(TaskTimeDist::Constant(4.0).mean(), 4.0);
+        assert_eq!(TaskTimeDist::Uniform(2.0, 6.0).mean(), 4.0);
+    }
+
+    #[test]
+    fn prop_generated_workloads_valid_and_positive() {
+        check(
+            |rng| {
+                let n = rng.range_u64(1, 500);
+                let mean = rng.range_f64(0.5, 30.0);
+                let cv = rng.range_f64(0.0, 1.5);
+                (n, mean, cv)
+            },
+            |&(n, mean, cv)| {
+                let w = WorkloadBuilder::with_dist(TaskTimeDist::Lognormal { mean, cv })
+                    .tasks(n)
+                    .seed(n)
+                    .build();
+                w.validate()?;
+                ensure(
+                    w.tasks.iter().all(|t| t.duration > 0.0),
+                    "non-positive duration",
+                )?;
+                ensure(w.len() as u64 == n, "length mismatch")
+            },
+        );
+    }
+}

@@ -1,0 +1,15 @@
+//! Workloads: tasks, jobs (arrays, dependencies), generators for the
+//! paper's benchmark task sets (Table 9) and for variable-task-time
+//! experiments, plus trace read/write.
+
+mod arrivals;
+mod generator;
+mod table9;
+mod trace;
+mod types;
+
+pub use arrivals::{offered_load, ArrivalProcess};
+pub use generator::{TaskTimeDist, WorkloadBuilder};
+pub use table9::{table9_sets, Table9Set, TABLE9_JOB_TIME_PER_PROC};
+pub use trace::{read_trace, write_trace, TraceRecord};
+pub use types::{JobId, JobKind, TaskId, TaskSpec, Workload};

@@ -1,0 +1,92 @@
+//! The paper's Table 9 benchmark parameter sets.
+//!
+//! Four constant-task-time sets sized so every set does the same total
+//! work: T_job per processor = 240 s on P = 1408 cores (93.7 processor-
+//! hours in total).
+
+use super::generator::WorkloadBuilder;
+use super::types::Workload;
+
+/// Per-processor isolated job time shared by all Table 9 sets (seconds).
+pub const TABLE9_JOB_TIME_PER_PROC: f64 = 240.0;
+
+/// One column of Table 9.
+#[derive(Clone, Copy, Debug)]
+pub struct Table9Set {
+    /// "Rapid" / "Fast" / "Medium" / "Long".
+    pub name: &'static str,
+    /// Task time t (seconds).
+    pub task_time: f64,
+    /// Tasks per processor n.
+    pub tasks_per_proc: u32,
+}
+
+impl Table9Set {
+    /// Total tasks N for a given processor count.
+    pub fn total_tasks(&self, processors: u64) -> u64 {
+        self.tasks_per_proc as u64 * processors
+    }
+
+    /// Materialize the workload for `processors` cores.
+    pub fn workload(&self, processors: u64) -> Workload {
+        WorkloadBuilder::constant(self.task_time)
+            .label(self.name)
+            .tasks(self.total_tasks(processors))
+            .build()
+    }
+}
+
+/// The four Table 9 parameter sets.
+pub fn table9_sets() -> [Table9Set; 4] {
+    [
+        Table9Set {
+            name: "rapid",
+            task_time: 1.0,
+            tasks_per_proc: 240,
+        },
+        Table9Set {
+            name: "fast",
+            task_time: 5.0,
+            tasks_per_proc: 48,
+        },
+        Table9Set {
+            name: "medium",
+            task_time: 30.0,
+            tasks_per_proc: 8,
+        },
+        Table9Set {
+            name: "long",
+            task_time: 60.0,
+            tasks_per_proc: 4,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sets_match_paper_totals() {
+        let p = 1408;
+        let sets = table9_sets();
+        let totals: Vec<u64> = sets.iter().map(|s| s.total_tasks(p)).collect();
+        assert_eq!(totals, vec![337_920, 67_584, 11_264, 5_632]);
+        for s in &sets {
+            // Constant processor time across sets: t * n = 240 s.
+            assert_eq!(s.task_time * s.tasks_per_proc as f64, TABLE9_JOB_TIME_PER_PROC);
+        }
+        // 93.7 processor-hours total.
+        let hours = TABLE9_JOB_TIME_PER_PROC * p as f64 / 3600.0;
+        assert!((hours - 93.9).abs() < 0.3, "hours={hours}");
+    }
+
+    #[test]
+    fn workload_materialization() {
+        let w = table9_sets()[3].workload(4);
+        assert_eq!(w.len(), 16);
+        assert_eq!(w.total_work(), 960.0);
+        assert_eq!(w.label, "long");
+        w.validate().unwrap();
+    }
+}

@@ -1,0 +1,127 @@
+//! Per-task execution trace read/write (CSV). The harness writes traces
+//! so experiments can be inspected/replotted offline; the end-to-end
+//! example replays one.
+
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+/// One per-task execution record.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceRecord {
+    /// Task id.
+    pub task: u32,
+    /// Node it ran on.
+    pub node: u32,
+    /// Slot it ran on.
+    pub slot: u32,
+    /// Submission time (virtual s).
+    pub submit: f64,
+    /// Execution start time.
+    pub start: f64,
+    /// Execution end time.
+    pub end: f64,
+}
+
+impl TraceRecord {
+    /// Scheduler-induced wait for this task.
+    pub fn wait(&self) -> f64 {
+        self.start - self.submit
+    }
+}
+
+/// Write records as CSV.
+pub fn write_trace(path: impl AsRef<Path>, records: &[TraceRecord]) -> std::io::Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "task,node,slot,submit,start,end")?;
+    for r in records {
+        writeln!(
+            w,
+            "{},{},{},{:.6},{:.6},{:.6}",
+            r.task, r.node, r.slot, r.submit, r.start, r.end
+        )?;
+    }
+    w.flush()
+}
+
+/// Read records back.
+pub fn read_trace(path: impl AsRef<Path>) -> std::io::Result<Vec<TraceRecord>> {
+    let f = std::fs::File::open(path)?;
+    let reader = std::io::BufReader::new(f);
+    let mut out = Vec::new();
+    for (i, line) in reader.lines().enumerate() {
+        let line = line?;
+        if i == 0 || line.trim().is_empty() {
+            continue; // header
+        }
+        let cells: Vec<&str> = line.split(',').collect();
+        if cells.len() != 6 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("bad trace line {i}: {line}"),
+            ));
+        }
+        let parse_f = |s: &str| {
+            s.parse::<f64>().map_err(|e| {
+                std::io::Error::new(std::io::ErrorKind::InvalidData, format!("line {i}: {e}"))
+            })
+        };
+        let parse_u = |s: &str| {
+            s.parse::<u32>().map_err(|e| {
+                std::io::Error::new(std::io::ErrorKind::InvalidData, format!("line {i}: {e}"))
+            })
+        };
+        out.push(TraceRecord {
+            task: parse_u(cells[0])?,
+            node: parse_u(cells[1])?,
+            slot: parse_u(cells[2])?,
+            submit: parse_f(cells[3])?,
+            start: parse_f(cells[4])?,
+            end: parse_f(cells[5])?,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let recs = vec![
+            TraceRecord {
+                task: 0,
+                node: 1,
+                slot: 33,
+                submit: 0.0,
+                start: 2.25,
+                end: 3.25,
+            },
+            TraceRecord {
+                task: 1,
+                node: 0,
+                slot: 2,
+                submit: 0.0,
+                start: 2.5,
+                end: 7.5,
+            },
+        ];
+        let path = std::env::temp_dir().join("sssched_trace_test.csv");
+        write_trace(&path, &recs).unwrap();
+        let back = read_trace(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].task, 0);
+        assert!((back[0].wait() - 2.25).abs() < 1e-9);
+        assert!((back[1].end - 7.5).abs() < 1e-9);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        let path = std::env::temp_dir().join("sssched_trace_bad.csv");
+        std::fs::write(&path, "task,node,slot,submit,start,end\n1,2,3\n").unwrap();
+        assert!(read_trace(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

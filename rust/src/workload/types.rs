@@ -1,0 +1,180 @@
+//! Core workload types.
+
+/// Task identifier, dense and 0-based within a workload.
+pub type TaskId = u32;
+/// Job identifier.
+pub type JobId = u32;
+
+/// What flavour of job a task belongs to — mirrors the paper's Figure 2
+/// characterization (single-process / job array / parallel / service).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobKind {
+    /// Independent single-process task (possibly part of a job array).
+    Array,
+    /// Synchronously parallel job: all tasks must start together.
+    Parallel,
+    /// Long-running service job.
+    Service,
+}
+
+/// One schedulable task.
+#[derive(Clone, Debug)]
+pub struct TaskSpec {
+    /// Dense id.
+    pub id: TaskId,
+    /// Job (array) this task belongs to.
+    pub job: JobId,
+    /// Job flavour.
+    pub kind: JobKind,
+    /// Isolated execution time t (virtual seconds).
+    pub duration: f64,
+    /// Cores required (1 for the paper's benchmark tasks).
+    pub cores: u32,
+    /// Memory required (MB). The paper's Slurm config used
+    /// DefMemPerCPU=2048.
+    pub mem_mb: i64,
+    /// Submission time (0 for the paper's batch-submitted arrays).
+    pub submit_at: f64,
+    /// Task ids that must complete before this task may start (DAG
+    /// dependencies; empty for array tasks).
+    pub deps: Vec<TaskId>,
+}
+
+impl TaskSpec {
+    /// Simple 1-core array task.
+    pub fn array(id: TaskId, job: JobId, duration: f64) -> Self {
+        Self {
+            id,
+            job,
+            kind: JobKind::Array,
+            duration,
+            cores: 1,
+            mem_mb: 2048,
+            submit_at: 0.0,
+            deps: Vec::new(),
+        }
+    }
+}
+
+/// A workload: a set of tasks plus metadata.
+#[derive(Clone, Debug, Default)]
+pub struct Workload {
+    /// All tasks, indexed by `TaskId`.
+    pub tasks: Vec<TaskSpec>,
+    /// Human-readable label (e.g. "rapid", "fast").
+    pub label: String,
+}
+
+impl Workload {
+    /// Number of tasks.
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    /// Sum of isolated task durations (total processor-seconds of work).
+    pub fn total_work(&self) -> f64 {
+        self.tasks.iter().map(|t| t.duration).sum()
+    }
+
+    /// Isolated job execution time per processor, T_job = total work / P,
+    /// assuming perfect balance (exact for the paper's constant-time sets).
+    pub fn t_job_per_proc(&self, processors: u64) -> f64 {
+        self.total_work() / processors as f64
+    }
+
+    /// Validate ids are dense and dependencies acyclic (topological check).
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, t) in self.tasks.iter().enumerate() {
+            if t.id as usize != i {
+                return Err(format!("task id {} at index {i} not dense", t.id));
+            }
+            if t.duration < 0.0 || !t.duration.is_finite() {
+                return Err(format!("task {} has invalid duration {}", t.id, t.duration));
+            }
+            for &d in &t.deps {
+                if d as usize >= self.tasks.len() {
+                    return Err(format!("task {} depends on unknown task {d}", t.id));
+                }
+            }
+        }
+        // Kahn's algorithm for cycle detection.
+        let n = self.tasks.len();
+        let mut indeg = vec![0usize; n];
+        let mut out: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for t in &self.tasks {
+            for &d in &t.deps {
+                indeg[t.id as usize] += 1;
+                out[d as usize].push(t.id as usize);
+            }
+        }
+        let mut ready: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut seen = 0;
+        while let Some(i) = ready.pop() {
+            seen += 1;
+            for &j in &out[i] {
+                indeg[j] -= 1;
+                if indeg[j] == 0 {
+                    ready.push(j);
+                }
+            }
+        }
+        if seen != n {
+            return Err("dependency cycle detected".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wl(tasks: Vec<TaskSpec>) -> Workload {
+        Workload {
+            tasks,
+            label: "t".into(),
+        }
+    }
+
+    #[test]
+    fn totals() {
+        let w = wl(vec![
+            TaskSpec::array(0, 0, 5.0),
+            TaskSpec::array(1, 0, 5.0),
+            TaskSpec::array(2, 0, 5.0),
+            TaskSpec::array(3, 0, 5.0),
+        ]);
+        assert_eq!(w.total_work(), 20.0);
+        assert_eq!(w.t_job_per_proc(2), 10.0);
+        w.validate().unwrap();
+    }
+
+    #[test]
+    fn detects_cycle() {
+        let mut a = TaskSpec::array(0, 0, 1.0);
+        let mut b = TaskSpec::array(1, 0, 1.0);
+        a.deps = vec![1];
+        b.deps = vec![0];
+        assert!(wl(vec![a, b]).validate().unwrap_err().contains("cycle"));
+    }
+
+    #[test]
+    fn detects_bad_ids() {
+        let t = TaskSpec::array(5, 0, 1.0);
+        assert!(wl(vec![t]).validate().is_err());
+    }
+
+    #[test]
+    fn dag_ok() {
+        let mut b = TaskSpec::array(1, 0, 1.0);
+        b.deps = vec![0];
+        let mut c = TaskSpec::array(2, 0, 1.0);
+        c.deps = vec![0, 1];
+        wl(vec![TaskSpec::array(0, 0, 1.0), b, c]).validate().unwrap();
+    }
+}

@@ -1,0 +1,166 @@
+//! Calibration integration tests: the simulated Table 9 runtimes and
+//! Table 10 fits land near the paper's measurements at full scale.
+
+use sssched::cluster::ClusterSpec;
+use sssched::config::SchedulerChoice;
+use sssched::model::fit_from_runs;
+use sssched::sched::{make_scheduler, RunOptions};
+use sssched::workload::table9_sets;
+
+fn full_cluster() -> ClusterSpec {
+    ClusterSpec::supercloud()
+}
+
+/// Simulate one Table 9 cell (single trial).
+fn simulate(choice: SchedulerChoice, set_idx: usize) -> f64 {
+    let cluster = full_cluster();
+    let sched = make_scheduler(choice);
+    let set = table9_sets()[set_idx];
+    let w = set.workload(cluster.total_cores());
+    sched
+        .run(&w, &cluster, 99, &RunOptions::default())
+        .t_total
+}
+
+#[test]
+fn slurm_table9_within_tolerance() {
+    let paper = [2783.7, 610.3, 271.0, 283.7];
+    for (i, &expect) in paper.iter().enumerate() {
+        let got = simulate(SchedulerChoice::Slurm, i);
+        let ratio = got / expect;
+        assert!(
+            (0.7..1.3).contains(&ratio),
+            "slurm set {i}: sim {got:.0}s vs paper {expect:.0}s (ratio {ratio:.2})"
+        );
+    }
+}
+
+#[test]
+fn gridengine_table9_within_tolerance() {
+    let paper = [3070.7, 626.3, 278.0, 276.7];
+    for (i, &expect) in paper.iter().enumerate() {
+        let got = simulate(SchedulerChoice::GridEngine, i);
+        let ratio = got / expect;
+        assert!(
+            (0.7..1.3).contains(&ratio),
+            "ge set {i}: sim {got:.0} vs paper {expect:.0} (ratio {ratio:.2})"
+        );
+    }
+}
+
+#[test]
+fn mesos_table9_within_tolerance() {
+    let paper = [1793.7, 365.7, 280.3, 305.7];
+    for (i, &expect) in paper.iter().enumerate() {
+        let got = simulate(SchedulerChoice::Mesos, i);
+        let ratio = got / expect;
+        assert!(
+            (0.7..1.3).contains(&ratio),
+            "mesos set {i}: sim {got:.0} vs paper {expect:.0} (ratio {ratio:.2})"
+        );
+    }
+}
+
+#[test]
+fn yarn_table9_within_tolerance_and_rapid_prohibitive() {
+    let paper = [1840.3, 487.0, 378.0]; // fast, medium, long
+    for (i, &expect) in paper.iter().enumerate() {
+        let got = simulate(SchedulerChoice::Yarn, i + 1);
+        let ratio = got / expect;
+        assert!(
+            (0.7..1.3).contains(&ratio),
+            "yarn set {}: sim {got:.0} vs paper {expect:.0} (ratio {ratio:.2})",
+            i + 1
+        );
+    }
+    // Rapid set projected prohibitive, like the paper's abandoned runs.
+    let cluster = full_cluster();
+    let sched = make_scheduler(SchedulerChoice::Yarn);
+    let rapid = table9_sets()[0].workload(cluster.total_cores());
+    assert!(sched.projected_runtime(&rapid, &cluster) > 3600.0);
+}
+
+#[test]
+fn table10_fits_near_paper() {
+    // Fit over the four Table 9 points, one trial each (the bench does
+    // the full fig4 sweep; this is the cheap regression guard).
+    let cluster = full_cluster();
+    let tolerances = [
+        (SchedulerChoice::Slurm, 2.2, 1.3, 0.8, 0.15),
+        (SchedulerChoice::GridEngine, 2.8, 1.3, 0.9, 0.15),
+        (SchedulerChoice::Mesos, 3.4, 1.1, 1.2, 0.15),
+    ];
+    for (choice, ts_paper, al_paper, ts_tol, al_tol) in tolerances {
+        let sched = make_scheduler(choice);
+        let runs: Vec<_> = table9_sets()
+            .iter()
+            .map(|set| {
+                let w = set.workload(cluster.total_cores());
+                sched.run(&w, &cluster, 123, &RunOptions::default())
+            })
+            .collect();
+        let fit = fit_from_runs(&runs);
+        assert!(
+            (fit.t_s - ts_paper).abs() < ts_tol,
+            "{}: t_s {:.2} vs paper {ts_paper}",
+            sched.name(),
+            fit.t_s
+        );
+        assert!(
+            (fit.alpha_s - al_paper).abs() < al_tol,
+            "{}: alpha {:.2} vs paper {al_paper}",
+            sched.name(),
+            fit.alpha_s
+        );
+    }
+}
+
+#[test]
+fn trial_scatter_is_small_like_paper() {
+    // Table 9 triples scatter by <2%; our jitter should match.
+    let cluster = full_cluster();
+    let sched = make_scheduler(SchedulerChoice::Slurm);
+    let set = table9_sets()[1]; // fast
+    let w = set.workload(cluster.total_cores());
+    let runs: Vec<f64> = (0..3)
+        .map(|s| sched.run(&w, &cluster, 500 + s, &RunOptions::default()).t_total)
+        .collect();
+    let mean = runs.iter().sum::<f64>() / 3.0;
+    for r in &runs {
+        assert!(
+            (r / mean - 1.0).abs() < 0.05,
+            "trial scatter too large: {runs:?}"
+        );
+    }
+    // ...but not zero (the paper's trials differ).
+    assert!(runs.windows(2).any(|w| (w[0] - w[1]).abs() > 1e-6));
+}
+
+#[test]
+fn utilization_below_10pct_for_one_second_tasks() {
+    // The abstract's headline: "utilization ... decreases to <10% for
+    // computations lasting only a few seconds" (1 s tasks).
+    for choice in [SchedulerChoice::Slurm, SchedulerChoice::GridEngine] {
+        let cluster = full_cluster();
+        let sched = make_scheduler(choice);
+        let w = table9_sets()[0].workload(cluster.total_cores());
+        let r = sched.run(&w, &cluster, 7, &RunOptions::default());
+        assert!(
+            r.utilization() < 0.10,
+            "{}: U={:.3}",
+            sched.name(),
+            r.utilization()
+        );
+    }
+}
+
+#[test]
+fn paper_anchor_daemon_throughput() {
+    // N / T_total on the rapid set ≈ paper-implied daemon throughput.
+    let got = simulate(SchedulerChoice::Slurm, 0);
+    let throughput = 337_920.0 / got;
+    assert!(
+        (throughput - 121.0).abs() < 15.0,
+        "slurm daemon throughput {throughput:.0}/s vs paper-implied ~121/s"
+    );
+}

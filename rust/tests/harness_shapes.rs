@@ -1,0 +1,85 @@
+//! Harness shape checks at CI scale: every table/figure runner executes
+//! and its paper-shape assertions pass on the shape-preserving
+//! scaled-down cluster (see make_scheduler_scaled).
+
+use sssched::config::ExperimentConfig;
+use sssched::harness;
+use sssched::multilevel::MultilevelParams;
+
+fn ci_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.scale_down = 8; // 5 nodes × 32 = 160-ish cores
+    cfg.trials = 1;
+    cfg
+}
+
+fn artifacts() -> &'static str {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")
+}
+
+#[test]
+fn table9_runs_and_checks() {
+    let rep = harness::table9(&ci_cfg());
+    assert_eq!(rep.sweeps.len(), 4);
+    rep.check_shape(0.35).unwrap();
+    let rendered = rep.render().render();
+    assert!(rendered.contains("Slurm"));
+    assert!(rendered.contains("abandoned"));
+}
+
+#[test]
+fn table10_runs_and_checks() {
+    let rep = harness::table10(&ci_cfg(), Some(artifacts()));
+    rep.check_shape().unwrap();
+    // PJRT path actually used.
+    assert!(
+        rep.fits.iter().all(|f| f.pjrt_fit.is_some()),
+        "PJRT fit missing"
+    );
+}
+
+#[test]
+fn fig4_runs_and_checks() {
+    let rep = harness::fig4(&ci_cfg());
+    rep.check_shape().unwrap();
+    let plots = rep.render_plots();
+    assert!(plots.contains("Figure 4a"));
+    assert!(plots.contains("Figure 4d"));
+    let csv = rep.to_csv();
+    assert!(csv.lines().count() > 20);
+}
+
+#[test]
+fn fig5_runs_and_checks() {
+    let rep = harness::fig5(&ci_cfg(), Some(artifacts()));
+    rep.check_shape().unwrap();
+    assert!(rep.used_pjrt, "fig5 model curves should use the artifact");
+    assert!(rep.render_plot().contains("Figure 5"));
+}
+
+#[test]
+fn fig6_runs_and_checks() {
+    let rep = harness::fig6(&ci_cfg(), &MultilevelParams::default());
+    rep.check_shape().unwrap();
+    assert_eq!(rep.panels.len(), 3);
+    for p in &rep.panels {
+        let red = p.reduction_at_max_n().unwrap();
+        assert!(red >= 10.0, "{}: reduction {red:.0}x", p.scheduler);
+    }
+}
+
+#[test]
+fn fig7_runs_and_checks() {
+    let rep = harness::fig7(&ci_cfg(), &MultilevelParams::default());
+    rep.check_shape().unwrap();
+    let table = rep.render_table().render();
+    assert!(table.contains("U multilevel"));
+}
+
+#[test]
+fn features_render_all_tables() {
+    for cat in sssched::features::FeatureCategory::all() {
+        let t = sssched::features::feature_table(cat);
+        assert!(!t.is_empty());
+    }
+}

@@ -1,0 +1,290 @@
+//! Property-based tests over the coordinator invariants: conservation
+//! of tasks, causality, utilization bounds, monotonicity, and fit
+//! round-trips — across random workloads, clusters and all scheduler
+//! models (the proptest role; see util::prop for the harness).
+
+use sssched::cluster::ClusterSpec;
+use sssched::config::SchedulerChoice;
+use sssched::multilevel::{MapMode, Multilevel, MultilevelParams};
+use sssched::sched::{make_scheduler, RunOptions, Scheduler};
+use sssched::util::fit::fit_power_law;
+use sssched::util::prng::Prng;
+use sssched::util::prop::{ensure, forall, PropConfig};
+use sssched::workload::{TaskTimeDist, Workload, WorkloadBuilder};
+
+struct Case {
+    choice: SchedulerChoice,
+    nodes: u32,
+    cores: u32,
+    n_tasks: u64,
+    dist: TaskTimeDist,
+    seed: u64,
+}
+
+impl std::fmt::Debug for Case {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Case({:?}, {}x{}, {} tasks, {:?}, seed {})",
+            self.choice, self.nodes, self.cores, self.n_tasks, self.dist, self.seed
+        )
+    }
+}
+
+fn gen_case(rng: &mut Prng) -> Case {
+    let choices = [
+        SchedulerChoice::Slurm,
+        SchedulerChoice::GridEngine,
+        SchedulerChoice::Mesos,
+        SchedulerChoice::Yarn,
+        SchedulerChoice::IdealFifo,
+    ];
+    let dists = [
+        TaskTimeDist::Constant(rng.range_f64(0.5, 60.0)),
+        TaskTimeDist::Uniform(0.5, rng.range_f64(1.0, 30.0)),
+        TaskTimeDist::Exponential(rng.range_f64(1.0, 20.0)),
+        TaskTimeDist::Lognormal {
+            mean: rng.range_f64(1.0, 20.0),
+            cv: rng.range_f64(0.1, 1.0),
+        },
+    ];
+    Case {
+        choice: choices[rng.choose_index(choices.len())],
+        nodes: rng.range_u64(1, 4) as u32,
+        cores: rng.range_u64(2, 8) as u32,
+        n_tasks: rng.range_u64(1, 400),
+        dist: dists[rng.choose_index(dists.len())],
+        seed: rng.next_u64(),
+    }
+}
+
+fn run_case(case: &Case) -> (sssched::sched::RunResult, Workload) {
+    let cluster = ClusterSpec::homogeneous(case.nodes, case.cores, 64 * 1024, 2);
+    let w = WorkloadBuilder::with_dist(case.dist)
+        .tasks(case.n_tasks)
+        .seed(case.seed)
+        .label("prop")
+        .build();
+    let sched = make_scheduler(case.choice);
+    let r = sched.run(&w, &cluster, case.seed, &RunOptions::with_trace());
+    (r, w)
+}
+
+#[test]
+fn prop_all_tasks_complete_exactly_once() {
+    forall(
+        PropConfig { cases: 40, seed: 0xA11 },
+        gen_case,
+        |case| {
+            let (r, w) = run_case(case);
+            let trace = r.trace.as_ref().unwrap();
+            ensure(
+                trace.len() == w.len(),
+                format!("{} records for {} tasks", trace.len(), w.len()),
+            )?;
+            let mut ids: Vec<u32> = trace.iter().map(|t| t.task).collect();
+            ids.sort_unstable();
+            ids.dedup();
+            ensure(ids.len() == w.len(), "duplicate or missing task ids")
+        },
+    );
+}
+
+#[test]
+fn prop_no_core_oversubscription() {
+    // At no instant do more tasks run on a slot than the slot can hold:
+    // per-slot intervals must not overlap.
+    forall(
+        PropConfig { cases: 30, seed: 0xB22 },
+        gen_case,
+        |case| {
+            let (r, _) = run_case(case);
+            let trace = r.trace.as_ref().unwrap();
+            let mut by_slot: std::collections::BTreeMap<u32, Vec<(f64, f64)>> =
+                Default::default();
+            for rec in trace {
+                by_slot.entry(rec.slot).or_default().push((rec.start, rec.end));
+            }
+            for (slot, mut iv) in by_slot {
+                iv.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                for w in iv.windows(2) {
+                    ensure(
+                        w[1].0 >= w[0].1 - 1e-9,
+                        format!("slot {slot}: overlap {:?} then {:?}", w[0], w[1]),
+                    )?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_result_invariants_and_bounds() {
+    forall(
+        PropConfig { cases: 40, seed: 0xC33 },
+        gen_case,
+        |case| {
+            let (r, w) = run_case(case);
+            r.check_invariants()?;
+            ensure(r.n_tasks == w.len() as u64, "task count")?;
+            let u = r.utilization();
+            ensure((0.0..=1.0 + 1e-9).contains(&u), format!("U={u}"))?;
+            ensure(r.delta_t() >= -1e-9, format!("ΔT={}", r.delta_t()))?;
+            // Makespan at least the longest single task.
+            let max_task = w.tasks.iter().map(|t| t.duration).fold(0.0, f64::max);
+            ensure(
+                r.t_total >= max_task - 1e-9,
+                format!("t_total {} < longest task {max_task}", r.t_total),
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_ideal_fifo_is_a_lower_bound() {
+    forall(
+        PropConfig { cases: 25, seed: 0xD44 },
+        gen_case,
+        |case| {
+            let (r, w) = run_case(case);
+            let cluster = ClusterSpec::homogeneous(case.nodes, case.cores, 64 * 1024, 2);
+            let ideal = make_scheduler(SchedulerChoice::IdealFifo).run(
+                &w,
+                &cluster,
+                0,
+                &RunOptions::default(),
+            );
+            ensure(
+                r.t_total >= ideal.t_total - 1e-6,
+                format!(
+                    "{:?} beat the zero-overhead bound: {} < {}",
+                    case.choice, r.t_total, ideal.t_total
+                ),
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_multilevel_never_loses_work() {
+    forall(
+        PropConfig { cases: 25, seed: 0xE55 },
+        |rng| {
+            let mut c = gen_case(rng);
+            c.choice = [
+                SchedulerChoice::Slurm,
+                SchedulerChoice::GridEngine,
+                SchedulerChoice::Mesos,
+            ][rng.choose_index(3)];
+            (c, rng.chance(0.5))
+        },
+        |(case, siso)| {
+            let cluster = ClusterSpec::homogeneous(case.nodes, case.cores, 64 * 1024, 2);
+            let w = WorkloadBuilder::with_dist(case.dist)
+                .tasks(case.n_tasks)
+                .seed(case.seed)
+                .build();
+            let inner = make_scheduler(case.choice);
+            let params = MultilevelParams {
+                mode: if *siso { MapMode::Siso } else { MapMode::Mimo },
+                ..Default::default()
+            };
+            let ml = Multilevel::new(inner.as_ref(), params);
+            let agg = ml.aggregate(&w, cluster.total_cores(), case.seed);
+            agg.validate()?;
+            ensure(
+                agg.total_work() >= w.total_work() - 1e-9,
+                "aggregation lost work",
+            )?;
+            ensure(
+                agg.len() <= w.len().max(cluster.total_cores() as usize),
+                "more bundles than inputs",
+            )?;
+            let r = ml.run(&w, &cluster, case.seed, &RunOptions::default());
+            r.check_invariants()?;
+            // ΔT accounting vs the ORIGINAL workload.
+            ensure(
+                (r.t_job - w.t_job_per_proc(cluster.total_cores())).abs() < 1e-9,
+                "t_job must reference the original workload",
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_fit_recovers_synthetic_parameters() {
+    forall(
+        PropConfig { cases: 60, seed: 0xF66 },
+        |rng| {
+            let t_s = rng.range_f64(0.5, 40.0);
+            let alpha = rng.range_f64(0.8, 1.6);
+            let k = rng.range_u64(3, 12) as usize;
+            let noise = rng.range_f64(0.0, 0.02);
+            (t_s, alpha, k, noise, rng.next_u64())
+        },
+        |&(t_s, alpha, k, noise, seed)| {
+            let mut rng = Prng::new(seed);
+            let ns: Vec<f64> = (0..k).map(|i| 2f64.powi(i as i32 + 1)).collect();
+            let dts: Vec<f64> = ns
+                .iter()
+                .map(|&n| t_s * n.powf(alpha) * (1.0 + noise * (rng.f64() - 0.5)))
+                .collect();
+            let fit = fit_power_law(&ns, &dts);
+            ensure(
+                (fit.alpha_s - alpha).abs() < 0.05 + noise * 5.0,
+                format!("alpha {} vs {alpha}", fit.alpha_s),
+            )?;
+            ensure(
+                (fit.t_s / t_s - 1.0).abs() < 0.10 + noise * 10.0,
+                format!("t_s {} vs {t_s}", fit.t_s),
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_determinism_across_runs() {
+    forall(
+        PropConfig { cases: 20, seed: 0x1777 },
+        gen_case,
+        |case| {
+            let (a, _) = run_case(case);
+            let (b, _) = run_case(case);
+            ensure(a.t_total == b.t_total, "same seed, different makespan")?;
+            ensure(a.events == b.events, "same seed, different event count")
+        },
+    );
+}
+
+#[test]
+fn prop_scheduler_overhead_monotone_in_task_count() {
+    // More tasks at the same task time never finish sooner.
+    forall(
+        PropConfig { cases: 20, seed: 0x1888 },
+        |rng| {
+            let mut c = gen_case(rng);
+            c.dist = TaskTimeDist::Constant(rng.range_f64(1.0, 10.0));
+            c.n_tasks = rng.range_u64(10, 200);
+            c
+        },
+        |case| {
+            let cluster = ClusterSpec::homogeneous(case.nodes, case.cores, 64 * 1024, 2);
+            let sched = make_scheduler(case.choice);
+            let w1 = WorkloadBuilder::with_dist(case.dist)
+                .tasks(case.n_tasks)
+                .seed(case.seed)
+                .build();
+            let w2 = WorkloadBuilder::with_dist(case.dist)
+                .tasks(case.n_tasks * 2)
+                .seed(case.seed)
+                .build();
+            let r1 = sched.run(&w1, &cluster, case.seed, &RunOptions::default());
+            let r2 = sched.run(&w2, &cluster, case.seed, &RunOptions::default());
+            ensure(
+                r2.t_total >= r1.t_total * 0.95,
+                format!("2x tasks finished early: {} vs {}", r2.t_total, r1.t_total),
+            )
+        },
+    );
+}

@@ -1,0 +1,183 @@
+//! Integration: PJRT execution of the AOT artifacts from rust, checked
+//! against the rust-native implementations. Requires `make artifacts`.
+
+use sssched::runtime::{shapes, ArtifactSuite, PjrtFit};
+use sssched::util::fit::fit_power_law;
+
+fn suite() -> ArtifactSuite {
+    ArtifactSuite::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+        .expect("artifacts missing — run `make artifacts`")
+}
+
+#[test]
+fn powerlaw_fit_matches_rust_fit() {
+    let mut s = suite();
+    // Synthetic series at the paper's Table 10 parameters.
+    let mk = |t_s: f64, alpha: f64| -> Vec<(f64, f64)> {
+        [4.0, 8.0, 48.0, 240.0]
+            .iter()
+            .map(|&n: &f64| (n, t_s * n.powf(alpha)))
+            .collect()
+    };
+    let series = vec![mk(2.2, 1.3), mk(2.8, 1.3), mk(3.4, 1.1), mk(33.0, 1.0)];
+    let fits = s.powerlaw_fit(&series).unwrap();
+    assert_eq!(fits.len(), 4);
+    for (fit, pts) in fits.iter().zip(&series) {
+        let ns: Vec<f64> = pts.iter().map(|p| p.0).collect();
+        let dts: Vec<f64> = pts.iter().map(|p| p.1).collect();
+        let rust_fit = fit_power_law(&ns, &dts);
+        // f32 kernel vs f64 rust: agree to ~1e-3 relative.
+        assert!(
+            (fit.t_s - rust_fit.t_s).abs() / rust_fit.t_s < 2e-3,
+            "t_s pjrt={} rust={}",
+            fit.t_s,
+            rust_fit.t_s
+        );
+        assert!((fit.alpha_s - rust_fit.alpha_s).abs() < 2e-3);
+        assert!(fit.r2 > 0.999);
+    }
+}
+
+#[test]
+fn powerlaw_fit_skips_nonpositive_points() {
+    let mut s = suite();
+    // ΔT = 0 at small n (shot noise) must be masked out, matching the
+    // rust fitter's behaviour.
+    let series = vec![vec![
+        (1.0, 0.0),
+        (4.0, 2.2 * 4f64.powf(1.3)),
+        (8.0, 2.2 * 8f64.powf(1.3)),
+        (240.0, 2.2 * 240f64.powf(1.3)),
+    ]];
+    let fits = s.powerlaw_fit(&series).unwrap();
+    assert!((fits[0].t_s - 2.2).abs() < 0.01, "t_s={}", fits[0].t_s);
+    assert!((fits[0].alpha_s - 1.3).abs() < 0.01);
+}
+
+#[test]
+fn powerlaw_fit_rejects_degenerate_series() {
+    let mut s = suite();
+    assert!(s.powerlaw_fit(&[vec![(4.0, 10.0)]]).is_err()); // 1 point
+    assert!(s
+        .powerlaw_fit(&[vec![(0.0, 0.0), (-1.0, -5.0)]])
+        .is_err()); // no positive points
+}
+
+#[test]
+fn utilization_curves_match_model() {
+    let mut s = suite();
+    let fits = [
+        PjrtFit {
+            t_s: 2.2,
+            alpha_s: 1.3,
+            r2: 1.0,
+        },
+        PjrtFit {
+            t_s: 33.0,
+            alpha_s: 1.0,
+            r2: 1.0,
+        },
+    ];
+    let t_grid: Vec<f64> = (0..shapes::UTIL_T)
+        .map(|i| 0.5 * 1.1f64.powi(i as i32))
+        .collect();
+    let (approx, exact) = s.utilization_curves(&fits, &t_grid).unwrap();
+    assert_eq!(approx.len(), 2);
+    for (i, f) in fits.iter().enumerate() {
+        for (j, &t) in t_grid.iter().enumerate() {
+            let want_a = sssched::model::u_constant_approx(f.t_s, t);
+            let n = 240.0 / t;
+            let want_e = sssched::model::u_constant_exact(f.t_s, f.alpha_s, t, n);
+            assert!(
+                (approx[i][j] - want_a).abs() < 1e-4,
+                "approx[{i}][{j}] {} vs {}",
+                approx[i][j],
+                want_a
+            );
+            assert!((exact[i][j] - want_e).abs() < 1e-4);
+        }
+    }
+}
+
+#[test]
+fn analytics_payload_executes() {
+    let mut s = suite();
+    let x = vec![1.0f32; shapes::ANALYTICS_B * shapes::ANALYTICS_D];
+    let w = vec![0.5f32; shapes::ANALYTICS_D * shapes::ANALYTICS_F];
+    let (feats, checksum) = s.analytics(&x, &w).unwrap();
+    assert_eq!(feats.len(), shapes::ANALYTICS_F);
+    // relu(1·0.5·D) summed over B: each feature = B * D * 0.5.
+    let expect = (shapes::ANALYTICS_B * shapes::ANALYTICS_D) as f32 * 0.5;
+    for &f in &feats {
+        assert!((f - expect).abs() < expect * 1e-5, "{f} vs {expect}");
+    }
+    let sum: f32 = feats.iter().sum();
+    assert!((checksum - sum).abs() < sum.abs() * 1e-5);
+}
+
+#[test]
+fn uvar_matches_rust_model() {
+    let mut s = suite();
+    // Mixed per-processor mean task times.
+    let tp: Vec<f64> = (0..1408).map(|i| 1.0 + (i % 60) as f64).collect();
+    let t_s = 2.2;
+    let got = s.u_variable(&tp, t_s).unwrap();
+    let want = sssched::model::u_variable(t_s, &tp);
+    assert!(
+        (got - want).abs() < 1e-4,
+        "pjrt U_v={got} vs rust {want}"
+    );
+}
+
+#[test]
+fn uvar_uniform_reduces_to_constant_model() {
+    let mut s = suite();
+    let tp = vec![5.0; 100];
+    let got = s.u_variable(&tp, 2.2).unwrap();
+    let want = sssched::model::u_constant_approx(2.2, 5.0);
+    assert!((got - want).abs() < 1e-5, "{got} vs {want}");
+}
+
+#[test]
+fn uvar_validates_variable_task_time_simulation() {
+    // Section 4's claim, end to end: simulate a variable-duration
+    // workload, compute U_v from the per-processor mean task times via
+    // the PJRT kernel, compare with the sim's measured utilization.
+    use sssched::cluster::ClusterSpec;
+    use sssched::config::SchedulerChoice;
+    use sssched::sched::{make_scheduler, RunOptions};
+    use sssched::workload::{TaskTimeDist, WorkloadBuilder};
+
+    let cluster = ClusterSpec::homogeneous(4, 8, 64 * 1024, 2);
+    let sched = make_scheduler(SchedulerChoice::Slurm);
+    let w = WorkloadBuilder::with_dist(TaskTimeDist::Lognormal { mean: 8.0, cv: 0.4 })
+        .tasks(32 * 24)
+        .seed(9)
+        .build();
+    let r = sched.run(&w, &cluster, 9, &RunOptions::with_trace());
+    // Per-processor mean task time from the trace.
+    let trace = r.trace.as_ref().unwrap();
+    let mut sums = vec![0.0f64; r.processors as usize];
+    let mut counts = vec![0u32; r.processors as usize];
+    for rec in trace {
+        sums[rec.slot as usize] += rec.end - rec.start;
+        counts[rec.slot as usize] += 1;
+    }
+    let means: Vec<f64> = sums
+        .iter()
+        .zip(&counts)
+        .filter(|(_, &c)| c > 0)
+        .map(|(&s, &c)| s / c as f64)
+        .collect();
+    // Effective t_s of this sim from a constant-time probe.
+    let probe = WorkloadBuilder::constant(8.0).tasks(32 * 24).build();
+    let pr = sched.run(&probe, &cluster, 9, &RunOptions::default());
+    let t_s_eff = (1.0 / pr.utilization() - 1.0) * 8.0;
+    let mut s = suite();
+    let u_v = s.u_variable(&means, t_s_eff).unwrap();
+    assert!(
+        (u_v - r.utilization()).abs() < 0.10,
+        "U_v model {u_v:.3} vs measured {:.3}",
+        r.utilization()
+    );
+}

@@ -1,0 +1,134 @@
+//! Cross-module integration: workload → scheduler → model → trace I/O,
+//! plus failure injection (down nodes) and submission-mode ablation.
+
+use sssched::cluster::{ClusterSpec, NodeState};
+use sssched::config::SchedulerChoice;
+use sssched::model::{u_constant_approx, u_constant_exact};
+use sssched::sched::{make_scheduler, RunOptions};
+use sssched::workload::{read_trace, write_trace, WorkloadBuilder};
+
+#[test]
+fn trace_roundtrip_through_disk() {
+    let cluster = ClusterSpec::homogeneous(2, 4, 32 * 1024, 2);
+    let sched = make_scheduler(SchedulerChoice::Slurm);
+    let w = WorkloadBuilder::constant(2.0).tasks(32).label("io").build();
+    let r = sched.run(&w, &cluster, 5, &RunOptions::with_trace());
+    let trace = r.trace.clone().unwrap();
+    let path = std::env::temp_dir().join("sssched_sim_trace.csv");
+    write_trace(&path, &trace).unwrap();
+    let back = read_trace(&path).unwrap();
+    assert_eq!(back.len(), trace.len());
+    for (a, b) in trace.iter().zip(&back) {
+        assert_eq!(a.task, b.task);
+        assert!((a.start - b.start).abs() < 1e-5);
+        assert!((a.end - b.end).abs() < 1e-5);
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn down_nodes_stretch_makespan() {
+    let mut cluster = ClusterSpec::homogeneous(4, 4, 32 * 1024, 2);
+    let sched = make_scheduler(SchedulerChoice::Mesos);
+    let w = WorkloadBuilder::constant(5.0).tasks(64).build();
+    let healthy = sched.run(&w, &cluster, 3, &RunOptions::default());
+    cluster.set_state(0, NodeState::Down);
+    cluster.set_state(1, NodeState::Draining);
+    let degraded = sched.run(&w, &cluster, 3, &RunOptions::default());
+    assert_eq!(degraded.processors, 8);
+    assert!(
+        degraded.t_total > healthy.t_total * 1.5,
+        "half the cluster down: {} vs {}",
+        degraded.t_total,
+        healthy.t_total
+    );
+    degraded.check_invariants().unwrap();
+}
+
+#[test]
+fn measured_utilization_tracks_model() {
+    // The sim's U(t) curve should sit near the paper's U_c(t) model
+    // evaluated at the sim's own fitted t_s — self-consistency of
+    // Section 4 vs Section 5.
+    let cluster = ClusterSpec::supercloud();
+    let sched = make_scheduler(SchedulerChoice::Slurm);
+    let p = cluster.total_cores();
+    let mut points = Vec::new();
+    for n in [8u64, 48, 240] {
+        let t = 240.0 / n as f64;
+        let w = WorkloadBuilder::constant(t).tasks(n * p).build();
+        let r = sched.run(&w, &cluster, 11, &RunOptions::default());
+        points.push((n as f64, t, r.delta_t(), r.utilization()));
+    }
+    let fit = sssched::util::fit::fit_power_law(
+        &points.iter().map(|p| p.0).collect::<Vec<_>>(),
+        &points.iter().map(|p| p.2).collect::<Vec<_>>(),
+    );
+    for &(n, t, _, u_measured) in &points {
+        let u_exact = u_constant_exact(fit.t_s, fit.alpha_s, t, n);
+        assert!(
+            (u_measured - u_exact).abs() < 0.12,
+            "n={n}: measured U={u_measured:.3} vs model {u_exact:.3}"
+        );
+        let _ = u_constant_approx(fit.t_s, t);
+    }
+}
+
+#[test]
+fn array_vs_individual_submission_ablation() {
+    // The paper: "jobs were submitted as job arrays because they
+    // introduce much less scheduler latency than ... individual jobs".
+    // Individual submission pays the per-job submit cost N times
+    // serially; arrays amortize it. We model this by comparing the
+    // array submit cost (base + per-task) against N individual
+    // submissions (N × base).
+    use sssched::sched::calibration::slurm_params;
+    let p = slurm_params();
+    let n = 10_000.0;
+    let array_cost = p.submit_cost_base + p.submit_cost_per_task * n;
+    let individual_cost = p.submit_cost_base * n;
+    assert!(
+        individual_cost > array_cost * 100.0,
+        "individual {individual_cost}s vs array {array_cost}s"
+    );
+}
+
+#[test]
+fn variable_task_times_average_like_constant() {
+    // Section 4's claim: constant-task-time curves predict variable
+    // mixes via the per-processor average task time.
+    let cluster = ClusterSpec::homogeneous(4, 8, 64 * 1024, 2);
+    let sched = make_scheduler(SchedulerChoice::Slurm);
+    let p = cluster.total_cores();
+    let n = 16u64;
+    // Variable: lognormal mean 5 s.
+    let wv = WorkloadBuilder::with_dist(sssched::workload::TaskTimeDist::Lognormal {
+        mean: 5.0,
+        cv: 0.5,
+    })
+    .tasks(n * p)
+    .seed(3)
+    .build();
+    let rv = sched.run(&wv, &cluster, 3, &RunOptions::default());
+    // Constant 5 s.
+    let wc = WorkloadBuilder::constant(5.0).tasks(n * p).build();
+    let rc = sched.run(&wc, &cluster, 3, &RunOptions::default());
+    assert!(
+        (rv.utilization() - rc.utilization()).abs() < 0.12,
+        "variable U={:.3} vs constant U={:.3}",
+        rv.utilization(),
+        rc.utilization()
+    );
+}
+
+#[test]
+fn waits_grow_with_queue_depth() {
+    let cluster = ClusterSpec::homogeneous(2, 4, 32 * 1024, 2);
+    let sched = make_scheduler(SchedulerChoice::GridEngine);
+    let shallow = WorkloadBuilder::constant(1.0).tasks(8).build();
+    let deep = WorkloadBuilder::constant(1.0).tasks(400).build();
+    let r1 = sched.run(&shallow, &cluster, 9, &RunOptions::default());
+    let r2 = sched.run(&deep, &cluster, 9, &RunOptions::default());
+    assert!(r2.waits.mean() > r1.waits.mean() * 2.0);
+    assert!(r2.waits.max() > r1.waits.max());
+}
