@@ -2,19 +2,19 @@
 //!
 //! This is the repo's integration proof. It:
 //!
-//! 1. loads the AOT-compiled Pallas analytics kernel via PJRT (L1/L2 →
+//! 1. opens the analytics kernel through the artifact suite (L1/L2 →
 //!    runtime) and calibrates how long one batch takes *under the same
 //!    worker concurrency the benchmark will use*;
 //! 2. runs a *realtime* mini-cluster — leader + P worker threads — where
-//!    every task executes real analytics batches through PJRT, sweeping
-//!    the task duration t at fixed total work per worker (the paper's
-//!    benchmark design, §5) under an injected marginal scheduler latency
-//!    t_s (L3 coordinator);
+//!    every task executes real analytics batches through the kernel,
+//!    sweeping the task duration t at fixed total work per worker (the
+//!    paper's benchmark design, §5) under an injected marginal scheduler
+//!    latency t_s (L3 coordinator);
 //! 3. measures wall-clock utilization U(t), fits ΔT = t_s·n^α through
-//!    the PJRT power-law artifact, and compares the measured curve with
+//!    the suite's power-law kernel, and compares the measured curve with
 //!    the paper's model U⁻¹ ≈ 1 + t_s/t — on real hardware, end to end.
 //!
-//! Run: `cargo run --release --example end_to_end` (after `make artifacts`)
+//! Run: `cargo run --release --example end_to_end`
 
 use sssched::exec::{RealtimeCoordinator, RealtimeParams, RtTask, RtWork};
 use sssched::model::u_constant_approx;
@@ -58,11 +58,10 @@ fn batch_seconds(run: &RunResult, batches_per_task: u32) -> f64 {
     busy / (trace.len() as f64 * batches_per_task as f64)
 }
 
-fn main() -> anyhow::Result<()> {
-    let suite = ArtifactSuite::load("artifacts")
-        .map_err(|e| anyhow::anyhow!("{e}\nhint: run `make artifacts` first"))?;
-    println!("PJRT platform: {}", suite.platform());
-    drop(suite); // workers own their clients
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let suite = ArtifactSuite::load("artifacts")?;
+    println!("kernel backend: {}", suite.platform());
+    drop(suite); // workers own their backends
 
     // ---- 1. Calibrate the analytics batch under real concurrency
     // (zero injected overhead, all workers busy).
@@ -85,7 +84,7 @@ fn main() -> anyhow::Result<()> {
         let t_actual = batches as f64 * batch_s;
         let n_tasks = n_per_worker * WORKERS as u32;
         let run = coordinator(TS).run(&analytics_tasks(n_tasks, batches, t_actual))?;
-        run.check_invariants().map_err(|e| anyhow::anyhow!(e))?;
+        run.check_invariants()?;
         let u_model = u_constant_approx(TS, t_actual);
         table.row(&[
             fnum(t_actual * 1e3),
@@ -100,11 +99,11 @@ fn main() -> anyhow::Result<()> {
     }
     println!("{}", table.render());
 
-    // ---- 3. Fit the latency model through the PJRT Pallas kernel.
+    // ---- 3. Fit the latency model through the artifact-suite kernel.
     let mut suite = ArtifactSuite::load("artifacts")?;
     let fit = suite.powerlaw_fit(&[fit_points])?[0];
     println!(
-        "PJRT power-law fit of the realtime runs: ΔT ≈ {:.3} · n^{:.2} (R²={:.3})",
+        "power-law fit of the realtime runs: ΔT ≈ {:.3} · n^{:.2} (R²={:.3})",
         fit.t_s, fit.alpha_s, fit.r2
     );
     println!("injected marginal latency t_s = {TS} s/task");

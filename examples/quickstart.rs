@@ -2,8 +2,8 @@
 //!
 //! 1. Build the paper's cluster and a short-task workload.
 //! 2. Simulate it under the Slurm-like scheduler.
-//! 3. Fit the latency model ΔT = t_s·n^α_s through the AOT-compiled
-//!    Pallas kernel running on PJRT (falling back to the rust fit).
+//! 3. Fit the latency model ΔT = t_s·n^α_s through the artifact-suite
+//!    kernel path (and the direct rust fit for comparison).
 //!
 //! Run: `cargo run --release --example quickstart`
 
@@ -13,7 +13,7 @@ use sssched::sched::{make_scheduler_scaled, RunOptions};
 use sssched::util::fit::fit_power_law;
 use sssched::workload::WorkloadBuilder;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     // A SuperCloud scaled down 4x (11 nodes × 32 cores), with daemon
     // costs scaled up 4x so the saturation knee — and hence the fitted
     // (t_s, α) — matches the paper's full-size cluster (DESIGN.md §11).
@@ -39,19 +39,18 @@ fn main() -> anyhow::Result<()> {
         points.push((n as f64, run.delta_t()));
     }
 
-    // Fit the paper's model, preferring the PJRT/Pallas path.
+    // Fit the paper's model through the artifact-suite kernel path.
     let ns: Vec<f64> = points.iter().map(|p| p.0).collect();
     let dts: Vec<f64> = points.iter().map(|p| p.1).collect();
-    match sssched::runtime::ArtifactSuite::load("artifacts") {
-        Ok(mut suite) => {
-            let fit = suite.powerlaw_fit(&[points])?[0];
-            println!(
-                "\nPJRT fit:  ΔT ≈ {:.2} · n^{:.2}   (R²={:.3})",
-                fit.t_s, fit.alpha_s, fit.r2
-            );
-        }
-        Err(_) => println!("\n(artifacts not built — run `make artifacts` for the PJRT fit)"),
-    }
+    let mut suite = sssched::runtime::ArtifactSuite::load("artifacts")?;
+    let fit = suite.powerlaw_fit(&[points])?[0];
+    println!(
+        "\nsuite fit ({}):  ΔT ≈ {:.2} · n^{:.2}   (R²={:.3})",
+        suite.platform(),
+        fit.t_s,
+        fit.alpha_s,
+        fit.r2
+    );
     let rust_fit = fit_power_law(&ns, &dts);
     println!(
         "rust fit:  ΔT ≈ {:.2} · n^{:.2}   (R²={:.3})",

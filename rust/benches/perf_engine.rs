@@ -1,21 +1,91 @@
-//! Perf bench: hot-path microbenchmarks feeding EXPERIMENTS.md §Perf.
+//! Perf bench: hot-path microbenchmarks + the sweep-executor
+//! throughput benchmark feeding README §Performance and the
+//! `BENCH_perf.json` trajectory artifact.
 //!
 //! * event-queue throughput (push+pop)
 //! * full scheduler-simulation events/s (the L3 hot path)
 //! * realtime coordinator dispatch rate (channel round-trip)
-//! * PJRT power-law fit latency (the L1/L2 hot path from rust)
+//! * artifact-suite power-law fit latency (the L1/L2 hot path from rust)
+//! * serial vs parallel fig4-style sweep: cells/s, events/s, wall-clock
+//!   speedup, and a bit-identity check between `jobs=1` and `jobs=N`
+//!
+//! Usage: `cargo bench --bench perf_engine -- [--quick] [--jobs N]
+//! [--out FILE]` (default out: BENCH_perf.json in the working dir).
 
 use sssched::cluster::ClusterSpec;
-use sssched::config::SchedulerChoice;
+use sssched::config::{ExperimentConfig, SchedulerChoice};
 use sssched::exec::{RealtimeCoordinator, RealtimeParams, RtTask, RtWork};
+use sssched::harness::{run_sweeps, SchedulerSweep, SweepSpec};
 use sssched::sched::{make_scheduler, RunOptions};
 use sssched::sim::EventQueue;
-use sssched::workload::WorkloadBuilder;
 use std::time::Instant;
 
+struct SweepStats {
+    wall_s: f64,
+    cells: u64,
+    events: u64,
+}
+
+fn sweep_stats(sweeps: &[SchedulerSweep], wall_s: f64) -> SweepStats {
+    let mut cells = 0u64;
+    let mut events = 0u64;
+    for s in sweeps {
+        for p in &s.points {
+            cells += p.trials.len() as u64;
+            events += p.trials.iter().map(|r| r.events).sum::<u64>();
+        }
+    }
+    SweepStats {
+        wall_s,
+        cells,
+        events,
+    }
+}
+
+/// Bitwise comparison of two sweep batches (the `jobs` invariance the
+/// executor promises).
+fn assert_bit_identical(a: &[SchedulerSweep], b: &[SchedulerSweep]) {
+    assert_eq!(a.len(), b.len(), "sweep count differs");
+    for (sa, sb) in a.iter().zip(b) {
+        assert_eq!(sa.scheduler, sb.scheduler);
+        assert_eq!(sa.skipped, sb.skipped, "{}: skipped differ", sa.scheduler);
+        assert_eq!(sa.points.len(), sb.points.len());
+        for (pa, pb) in sa.points.iter().zip(&sb.points) {
+            assert_eq!(pa.n, pb.n);
+            assert_eq!(pa.trials.len(), pb.trials.len());
+            for (ra, rb) in pa.trials.iter().zip(&pb.trials) {
+                assert_eq!(
+                    ra.t_total.to_bits(),
+                    rb.t_total.to_bits(),
+                    "{} n={}: t_total {} vs {}",
+                    sa.scheduler,
+                    pa.n,
+                    ra.t_total,
+                    rb.t_total
+                );
+                assert_eq!(ra.events, rb.events, "{} n={}: events", sa.scheduler, pa.n);
+                assert_eq!(ra.daemon_busy.to_bits(), rb.daemon_busy.to_bits());
+                assert_eq!(ra.waits.count(), rb.waits.count());
+                assert_eq!(ra.waits.mean().to_bits(), rb.waits.mean().to_bits());
+            }
+        }
+    }
+}
+
 fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let quick = argv.iter().any(|a| a == "--quick");
+    let opt = |name: &str| -> Option<String> {
+        argv.iter()
+            .position(|a| a == name)
+            .and_then(|i| argv.get(i + 1))
+            .cloned()
+    };
+    let par_jobs: u32 = opt("--jobs").and_then(|v| v.parse().ok()).unwrap_or(4);
+    let out_path = opt("--out").unwrap_or_else(|| "BENCH_perf.json".to_string());
+
     // ---- 1. Raw event queue.
-    let n = 2_000_000u64;
+    let n = if quick { 500_000u64 } else { 2_000_000u64 };
     let t0 = Instant::now();
     let mut q: EventQueue<u64> = EventQueue::new();
     let mut acc = 0u64;
@@ -29,14 +99,16 @@ fn main() {
     while let Some((_, v)) = q.pop() {
         acc = acc.wrapping_add(v);
     }
-    let dt = t0.elapsed().as_secs_f64();
-    println!(
-        "event queue: {:.2}M push+pop/s (checksum {acc})",
-        2.0 * n as f64 / dt / 1e6
-    );
+    let queue_mops = 2.0 * n as f64 / t0.elapsed().as_secs_f64() / 1e6;
+    println!("event queue: {queue_mops:.2}M push+pop/s (checksum {acc})");
 
     // ---- 2. Scheduler sims, events/s.
-    let cluster = ClusterSpec::supercloud();
+    let cluster = if quick {
+        ClusterSpec::homogeneous(11, 32, 64 * 1024, 11)
+    } else {
+        ClusterSpec::supercloud()
+    };
+    let mut sim_rates: Vec<(String, f64)> = Vec::new();
     for choice in [
         SchedulerChoice::Slurm,
         SchedulerChoice::Mesos,
@@ -44,22 +116,24 @@ fn main() {
         SchedulerChoice::IdealFifo,
     ] {
         let sched = make_scheduler(choice);
-        let w = WorkloadBuilder::constant(5.0)
+        let w = sssched::workload::WorkloadBuilder::constant(5.0)
             .tasks(48 * cluster.total_cores())
             .label("bench")
             .build();
         let t0 = Instant::now();
         let r = sched.run(&w, &cluster, 1, &RunOptions::default());
         let dt = t0.elapsed().as_secs_f64();
+        let rate = r.events as f64 / dt / 1e6;
         println!(
             "{:<12} sim: {:>7} tasks, {:>8} events in {:.3}s = {:.2}M events/s ({:.0}x realtime)",
             sched.name(),
             r.n_tasks,
             r.events,
             dt,
-            r.events as f64 / dt / 1e6,
+            rate,
             r.t_total / dt,
         );
+        sim_rates.push((sched.name().to_string(), rate));
     }
 
     // ---- 3. Realtime dispatch rate (zero-work tasks).
@@ -68,7 +142,7 @@ fn main() {
         dispatch_overhead: 0.0,
         artifacts_dir: None,
     });
-    let tasks: Vec<RtTask> = (0..20_000)
+    let tasks: Vec<RtTask> = (0..if quick { 5_000 } else { 20_000 })
         .map(|id| RtTask {
             id,
             nominal: 0.0,
@@ -77,40 +151,136 @@ fn main() {
         .collect();
     let t0 = Instant::now();
     let r = coord.run(&tasks).unwrap();
-    let dt = t0.elapsed().as_secs_f64();
+    let dispatch_rate = r.n_tasks as f64 / t0.elapsed().as_secs_f64();
     println!(
         "realtime coordinator: {:.0} dispatches/s ({} tasks in {:.3}s)",
-        r.n_tasks as f64 / dt,
+        dispatch_rate,
         r.n_tasks,
-        dt
+        t0.elapsed().as_secs_f64()
     );
 
-    // ---- 4. PJRT fit latency.
-    match sssched::runtime::ArtifactSuite::load("artifacts") {
-        Ok(mut suite) => {
-            let series: Vec<Vec<(f64, f64)>> = (0..4)
-                .map(|s| {
-                    (0..16)
-                        .map(|k| {
-                            let n = 2f64.powi(k % 8);
-                            (n, (2.0 + s as f64) * n.powf(1.2))
-                        })
-                        .collect()
-                })
-                .collect();
-            // Warmup + timed.
+    // ---- 4. Artifact-suite fit latency.
+    let mut fit_ms_per_call = f64::NAN;
+    if let Ok(mut suite) = sssched::runtime::ArtifactSuite::load("artifacts") {
+        let series: Vec<Vec<(f64, f64)>> = (0..4)
+            .map(|s| {
+                (0..16)
+                    .map(|k| {
+                        let n = 2f64.powi(k % 8);
+                        (n, (2.0 + s as f64) * n.powf(1.2))
+                    })
+                    .collect()
+            })
+            .collect();
+        // Warmup + timed.
+        let _ = suite.powerlaw_fit(&series).unwrap();
+        let iters = 200;
+        let t0 = Instant::now();
+        for _ in 0..iters {
             let _ = suite.powerlaw_fit(&series).unwrap();
-            let iters = 200;
-            let t0 = Instant::now();
-            for _ in 0..iters {
-                let _ = suite.powerlaw_fit(&series).unwrap();
-            }
-            let dt = t0.elapsed().as_secs_f64();
-            println!(
-                "pjrt powerlaw_fit: {:.3} ms/call (4 series x 16 pts, {iters} iters)",
-                dt / iters as f64 * 1e3
-            );
         }
-        Err(_) => println!("pjrt fit: artifacts missing (run `make artifacts`)"),
+        fit_ms_per_call = t0.elapsed().as_secs_f64() / iters as f64 * 1e3;
+        println!(
+            "powerlaw_fit [{}]: {fit_ms_per_call:.3} ms/call (4 series x 16 pts, {iters} iters)",
+            suite.platform()
+        );
+    }
+
+    // ---- 5. Sweep executor: serial vs parallel fig4-style sweep.
+    let mut cfg = ExperimentConfig::default();
+    cfg.scale_down = 8; // 5 nodes × 32 = 160 cores, shape-preserving
+    cfg.trials = if quick { 1 } else { 3 };
+    let specs: Vec<SweepSpec> = SchedulerChoice::paper_four()
+        .iter()
+        .map(|&c| (c, None))
+        .collect();
+
+    cfg.jobs = 1;
+    let t0 = Instant::now();
+    let serial = run_sweeps(&specs, &cfg, &cfg.n_sweep.clone());
+    let serial_stats = sweep_stats(&serial, t0.elapsed().as_secs_f64());
+
+    cfg.jobs = par_jobs;
+    let t0 = Instant::now();
+    let parallel = run_sweeps(&specs, &cfg, &cfg.n_sweep.clone());
+    let par_stats = sweep_stats(&parallel, t0.elapsed().as_secs_f64());
+
+    assert_bit_identical(&serial, &parallel);
+    let speedup = serial_stats.wall_s / par_stats.wall_s;
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    println!(
+        "sweep jobs=1:  {:>3} cells, {:>9} events in {:.3}s = {:.1} cells/s, {:.2}M events/s",
+        serial_stats.cells,
+        serial_stats.events,
+        serial_stats.wall_s,
+        serial_stats.cells as f64 / serial_stats.wall_s,
+        serial_stats.events as f64 / serial_stats.wall_s / 1e6,
+    );
+    println!(
+        "sweep jobs={par_jobs}:  {:>3} cells, {:>9} events in {:.3}s = {:.1} cells/s, {:.2}M events/s",
+        par_stats.cells,
+        par_stats.events,
+        par_stats.wall_s,
+        par_stats.cells as f64 / par_stats.wall_s,
+        par_stats.events as f64 / par_stats.wall_s / 1e6,
+    );
+    println!(
+        "sweep speedup: {speedup:.2}x with --jobs {par_jobs} on {cores} available cores; \
+         outputs bit-identical: yes"
+    );
+
+    // ---- Machine-readable perf trajectory.
+    let sims_json: Vec<String> = sim_rates
+        .iter()
+        .map(|(name, rate)| format!("    {{\"name\": \"{name}\", \"mevents_per_s\": {rate:.4}}}"))
+        .collect();
+    let json = format!(
+        "{{\n\
+         \x20 \"bench\": \"perf_engine\",\n\
+         \x20 \"quick\": {quick},\n\
+         \x20 \"available_cores\": {cores},\n\
+         \x20 \"event_queue_mops\": {queue_mops:.4},\n\
+         \x20 \"sims\": [\n{sims}\n  ],\n\
+         \x20 \"realtime_dispatch_per_s\": {dispatch_rate:.1},\n\
+         \x20 \"powerlaw_fit_ms_per_call\": {fit_ms},\n\
+         \x20 \"sweep\": {{\n\
+         \x20   \"scale_down\": {scale_down},\n\
+         \x20   \"trials\": {trials},\n\
+         \x20   \"cells\": {cells},\n\
+         \x20   \"events\": {events},\n\
+         \x20   \"serial_wall_s\": {sw:.4},\n\
+         \x20   \"parallel_jobs\": {pj},\n\
+         \x20   \"parallel_wall_s\": {pw:.4},\n\
+         \x20   \"serial_cells_per_s\": {scps:.2},\n\
+         \x20   \"parallel_cells_per_s\": {pcps:.2},\n\
+         \x20   \"serial_mevents_per_s\": {seps:.4},\n\
+         \x20   \"parallel_mevents_per_s\": {peps:.4},\n\
+         \x20   \"speedup\": {speedup:.3},\n\
+         \x20   \"bit_identical\": true\n\
+         \x20 }}\n\
+         }}\n",
+        sims = sims_json.join(",\n"),
+        fit_ms = if fit_ms_per_call.is_finite() {
+            format!("{fit_ms_per_call:.4}")
+        } else {
+            "null".to_string()
+        },
+        scale_down = cfg.scale_down,
+        trials = cfg.trials,
+        cells = serial_stats.cells,
+        events = serial_stats.events,
+        sw = serial_stats.wall_s,
+        pj = par_jobs,
+        pw = par_stats.wall_s,
+        scps = serial_stats.cells as f64 / serial_stats.wall_s,
+        pcps = par_stats.cells as f64 / par_stats.wall_s,
+        seps = serial_stats.events as f64 / serial_stats.wall_s / 1e6,
+        peps = par_stats.events as f64 / par_stats.wall_s / 1e6,
+    );
+    match std::fs::write(&out_path, &json) {
+        Ok(()) => println!("wrote {out_path}"),
+        Err(e) => eprintln!("could not write {out_path}: {e}"),
     }
 }

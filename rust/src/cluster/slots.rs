@@ -29,30 +29,52 @@ pub struct SlotPool {
 impl SlotPool {
     /// Build a pool over all Up nodes of the spec.
     pub fn new(spec: &ClusterSpec) -> Self {
-        let mut node_of = Vec::new();
-        let mut free = Vec::new();
+        let mut pool = Self::empty();
+        pool.reinit(spec);
+        pool
+    }
+
+    /// A zero-capacity pool — the resting state of a
+    /// [`crate::sim::SimScratch`] before its first run.
+    pub fn empty() -> Self {
+        Self {
+            node_of: Vec::new(),
+            free: Vec::new(),
+            busy: Vec::new(),
+            mem_free: Vec::new(),
+            mem_total: Vec::new(),
+            busy_count: 0,
+        }
+    }
+
+    /// Rebuild the pool over `spec` in place, reusing every backing
+    /// allocation (the free-list stack, busy flags and memory tables).
+    /// The result is bit-identical to [`SlotPool::new`] — same slot ids,
+    /// same free-stack pop order — so simulations that reuse a pool
+    /// across trials stay deterministic.
+    pub fn reinit(&mut self, spec: &ClusterSpec) {
+        self.node_of.clear();
+        self.free.clear();
+        self.busy.clear();
+        self.mem_free.clear();
+        self.mem_total.clear();
+        self.busy_count = 0;
         for node in &spec.nodes {
             if node.state != NodeState::Up {
                 continue;
             }
             for _ in 0..node.cores {
-                let id = node_of.len() as SlotId;
-                node_of.push(node.id);
-                free.push(id);
+                let id = self.node_of.len() as SlotId;
+                self.node_of.push(node.id);
+                self.free.push(id);
             }
         }
         // Pop order: slot 0 first (free is a stack).
-        free.reverse();
-        let n = node_of.len();
-        let mem_total: Vec<i64> = spec.nodes.iter().map(|n| n.mem_mb as i64).collect();
-        Self {
-            node_of,
-            free,
-            busy: vec![false; n],
-            mem_free: mem_total.clone(),
-            mem_total,
-            busy_count: 0,
-        }
+        self.free.reverse();
+        self.busy.resize(self.node_of.len(), false);
+        self.mem_total
+            .extend(spec.nodes.iter().map(|n| n.mem_mb as i64));
+        self.mem_free.extend_from_slice(&self.mem_total);
     }
 
     /// Total slot count.
@@ -189,6 +211,28 @@ mod tests {
         let s = p.alloc(0).unwrap();
         p.release(s, 0);
         p.release(s, 0);
+    }
+
+    #[test]
+    fn reinit_matches_fresh_pool() {
+        let spec_a = ClusterSpec::homogeneous(4, 4, 1000, 2);
+        let spec_b = ClusterSpec::homogeneous(2, 8, 500, 2);
+        let mut reused = SlotPool::new(&spec_a);
+        // Dirty the pool, then rebuild over a different cluster.
+        reused.alloc(100).unwrap();
+        reused.alloc(100).unwrap();
+        reused.reinit(&spec_b);
+        let fresh = SlotPool::new(&spec_b);
+        assert_eq!(reused.capacity(), fresh.capacity());
+        assert_eq!(reused.free_count(), fresh.free_count());
+        assert_eq!(reused.busy_count(), 0);
+        reused.check_invariants().unwrap();
+        // Identical allocation order after reinit.
+        let mut a = reused;
+        let mut b = fresh;
+        for _ in 0..b.capacity() {
+            assert_eq!(a.alloc(100), b.alloc(100));
+        }
     }
 
     #[test]

@@ -73,6 +73,10 @@ pub struct ExperimentConfig {
     /// experiment stays shape-faithful since n per processor is what
     /// matters; used by quick CI runs).
     pub scale_down: u32,
+    /// Worker threads for sweep execution (`--jobs`). Defaults to
+    /// `std::thread::available_parallelism()`; results are bit-identical
+    /// for every value (see `harness::parallel`).
+    pub jobs: u32,
 }
 
 impl Default for ExperimentConfig {
@@ -87,6 +91,7 @@ impl Default for ExperimentConfig {
             n_sweep: vec![4, 8, 16, 32, 48, 96, 240],
             out_dir: "out".into(),
             scale_down: 1,
+            jobs: crate::harness::default_jobs() as u32,
         }
     }
 }
@@ -102,6 +107,11 @@ impl ExperimentConfig {
         (self.nodes / self.scale_down.max(1)).max(1)
     }
 
+    /// Sweep worker-thread count (≥ 1).
+    pub fn effective_jobs(&self) -> usize {
+        self.jobs.max(1) as usize
+    }
+
     /// Load from a parsed TOML map (unknown keys rejected to catch typos).
     pub fn from_map(map: &BTreeMap<String, TomlValue>) -> Result<Self, String> {
         let mut cfg = Self::default();
@@ -115,6 +125,7 @@ impl ExperimentConfig {
                     cfg.seed = value.as_i64().ok_or_else(|| bad(key))? as u64
                 }
                 "experiment.scale_down" => cfg.scale_down = get_u32(value, key)?,
+                "experiment.jobs" => cfg.jobs = get_u32(value, key)?,
                 "experiment.out_dir" => {
                     cfg.out_dir = value.as_str().ok_or_else(|| bad(key))?.to_string()
                 }
@@ -175,6 +186,9 @@ impl ExperimentConfig {
         if self.n_sweep.is_empty() || self.n_sweep.iter().any(|&n| n == 0) {
             return Err("n_sweep must be non-empty, positive".into());
         }
+        if self.jobs == 0 {
+            return Err("jobs must be >= 1".into());
+        }
         Ok(())
     }
 }
@@ -233,6 +247,15 @@ n_sweep = [4, 240]
     fn rejects_invalid() {
         assert!(ExperimentConfig::from_toml("[experiment]\ntrials = 0").is_err());
         assert!(ExperimentConfig::from_toml("[experiment]\nschedulers = [\"bogus\"]").is_err());
+    }
+
+    #[test]
+    fn jobs_parse_and_validate() {
+        let c = ExperimentConfig::from_toml("[experiment]\njobs = 4").unwrap();
+        assert_eq!(c.jobs, 4);
+        assert_eq!(c.effective_jobs(), 4);
+        assert!(ExperimentConfig::from_toml("[experiment]\njobs = 0").is_err());
+        assert!(ExperimentConfig::default().effective_jobs() >= 1);
     }
 
     #[test]

@@ -79,8 +79,9 @@ impl RealtimeCoordinator {
     }
 
     /// Execute all tasks; returns a [`RunResult`] in wall-clock seconds
-    /// plus the per-task trace.
-    pub fn run(&self, tasks: &[RtTask]) -> anyhow::Result<RunResult> {
+    /// plus the per-task trace. (String-typed error — the offline crate
+    /// set has no `anyhow`.)
+    pub fn run(&self, tasks: &[RtTask]) -> Result<RunResult, String> {
         let p = self.params.workers.max(1);
         let epoch = Instant::now();
         let (done_tx, done_rx) = mpsc::channel::<Completion>();

@@ -1,7 +1,7 @@
 //! Figure 4: ΔT vs tasks-per-processor (log–log), measured trials plus
 //! the fitted power-law model line, one panel per scheduler.
 
-use super::sweep::{run_sweep, SchedulerSweep};
+use super::sweep::{run_sweeps, SchedulerSweep, SweepSpec};
 use crate::config::ExperimentConfig;
 use crate::util::fit::{fit_power_law, PowerLawFit};
 use crate::util::plot::Plot;
@@ -23,13 +23,12 @@ pub struct Fig4Report {
     pub panels: Vec<Fig4Panel>,
 }
 
-/// Run Figure 4.
+/// Run Figure 4. All schedulers' cells execute in one parallel batch.
 pub fn fig4(cfg: &ExperimentConfig) -> Fig4Report {
-    let panels = cfg
-        .schedulers
-        .iter()
-        .map(|&choice| {
-            let sweep = run_sweep(choice, cfg, &cfg.n_sweep, None);
+    let specs: Vec<SweepSpec> = cfg.schedulers.iter().map(|&c| (c, None)).collect();
+    let panels = run_sweeps(&specs, cfg, &cfg.n_sweep)
+        .into_iter()
+        .map(|sweep| {
             let pts = sweep.fit_points();
             let ns: Vec<f64> = pts.iter().map(|p| p.0).collect();
             let dts: Vec<f64> = pts.iter().map(|p| p.1).collect();

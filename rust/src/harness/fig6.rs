@@ -2,7 +2,7 @@
 //! (LLMapReduce) on Slurm, Grid Engine and Mesos — compared against the
 //! regular (non-multilevel) runs to measure the ΔT reduction factors.
 
-use super::sweep::{run_sweep, SchedulerSweep};
+use super::sweep::{run_sweeps, SchedulerSweep, SweepSpec};
 use crate::config::{ExperimentConfig, SchedulerChoice};
 use crate::multilevel::MultilevelParams;
 use crate::util::plot::Plot;
@@ -47,20 +47,23 @@ pub fn fig6_schedulers() -> [SchedulerChoice; 3] {
     ]
 }
 
-/// Run Figure 6.
+/// Run Figure 6. All six sweeps (3 schedulers × regular/multilevel)
+/// execute as one parallel cell batch.
 pub fn fig6(cfg: &ExperimentConfig, ml_params: &MultilevelParams) -> Fig6Report {
-    let panels = fig6_schedulers()
-        .iter()
-        .map(|&choice| {
-            let regular = run_sweep(choice, cfg, &cfg.n_sweep, None);
-            let multilevel = run_sweep(choice, cfg, &cfg.n_sweep, Some(ml_params));
-            Fig6Panel {
-                scheduler: regular.scheduler.clone(),
-                regular,
-                multilevel,
-            }
-        })
-        .collect();
+    let mut specs: Vec<SweepSpec> = Vec::new();
+    for &choice in fig6_schedulers().iter() {
+        specs.push((choice, None));
+        specs.push((choice, Some(ml_params)));
+    }
+    let mut sweeps = run_sweeps(&specs, cfg, &cfg.n_sweep).into_iter();
+    let mut panels = Vec::with_capacity(3);
+    while let (Some(regular), Some(multilevel)) = (sweeps.next(), sweeps.next()) {
+        panels.push(Fig6Panel {
+            scheduler: regular.scheduler.clone(),
+            regular,
+            multilevel,
+        });
+    }
     Fig6Report { panels }
 }
 

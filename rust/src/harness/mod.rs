@@ -11,10 +11,16 @@
 //! | `fig6`     | Figure 6 — ΔT vs n with multilevel scheduling |
 //! | `fig7`     | Figure 7 — utilization, regular vs multilevel |
 
+//! All six experiment runners route their `(scheduler, n, trial)`
+//! cells through the deterministic parallel executor in [`parallel`];
+//! `--jobs` (or `ExperimentConfig::jobs`) picks the worker count and
+//! results are bit-identical for every choice of it.
+
 mod fig4;
 mod fig5;
 mod fig6;
 mod fig7;
+mod parallel;
 mod sweep;
 mod table10;
 mod table9;
@@ -23,6 +29,7 @@ pub use fig4::{fig4, Fig4Report};
 pub use fig5::{fig5, fig5_from, Fig5Report};
 pub use fig6::{fig6, Fig6Report};
 pub use fig7::{fig7, Fig7Report};
-pub use sweep::{run_sweep, SchedulerSweep, SweepPoint, PROHIBITIVE_SECS};
+pub use parallel::{default_jobs, run_cells};
+pub use sweep::{run_sweep, run_sweeps, SchedulerSweep, SweepPoint, SweepSpec, PROHIBITIVE_SECS};
 pub use table10::{table10, Table10Report};
 pub use table9::{table9, Table9Report};

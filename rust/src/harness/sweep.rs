@@ -1,12 +1,19 @@
-//! Shared sweep machinery: run a scheduler over a set of
+//! Shared sweep machinery: run schedulers over a set of
 //! tasks-per-processor values at fixed per-processor work (the paper's
 //! T_job = 240 s), several trials each.
+//!
+//! Since this PR, sweeps execute on the deterministic parallel cell
+//! executor ([`super::parallel::run_cells`]): every `(scheduler, n,
+//! trial)` cell derives its seed exactly as the serial code did, so the
+//! assembled results are bit-identical for any `--jobs` value.
 
 use crate::cluster::ClusterSpec;
 use crate::config::{ExperimentConfig, SchedulerChoice};
 use crate::multilevel::{Multilevel, MultilevelParams};
 use crate::sched::{make_scheduler_scaled, RunOptions, RunResult, Scheduler};
 use crate::workload::{Workload, WorkloadBuilder, TABLE9_JOB_TIME_PER_PROC};
+
+use super::parallel::run_cells;
 
 /// Runs projected past this virtual-seconds bound are skipped, like the
 /// paper's abandoned YARN rapid trials.
@@ -79,6 +86,124 @@ fn workload_for(n: u32, processors: u64, label: &str) -> Workload {
         .build()
 }
 
+/// One sweep request: a scheduler choice, optionally routed through the
+/// LLMapReduce-style aggregator (Figures 6–7).
+pub type SweepSpec<'a> = (SchedulerChoice, Option<&'a MultilevelParams>);
+
+/// One executable simulation cell of a sweep batch.
+struct Cell<'a> {
+    /// Index into the spec/sweep list.
+    sweep: usize,
+    /// Index into that sweep's points.
+    point: usize,
+    /// Tasks per processor (for diagnostics).
+    n: u32,
+    /// Derived seed — same formula as the seed repo's serial loop.
+    seed: u64,
+    /// Workload shared by every cell at this n.
+    workload: &'a Workload,
+}
+
+/// Run every `(scheduler, n, trial)` cell of `specs` × `n_values` ×
+/// `cfg.trials` on `cfg.effective_jobs()` worker threads and assemble
+/// per-spec sweeps. Cell seeds and result ordering are independent of
+/// the worker count, so outputs are bit-identical for any `jobs`.
+pub fn run_sweeps(
+    specs: &[SweepSpec],
+    cfg: &ExperimentConfig,
+    n_values: &[u32],
+) -> Vec<SchedulerSweep> {
+    let cluster = cluster_of(cfg);
+    let processors = cluster.total_cores();
+    // Scaled daemon costs keep the experiment shape-invariant on
+    // scaled-down clusters (see make_scheduler_scaled).
+    let schedulers: Vec<Box<dyn Scheduler>> = specs
+        .iter()
+        .map(|&(choice, _)| make_scheduler_scaled(choice, cfg.scale_down))
+        .collect();
+
+    // One workload per n, shared by every spec and trial at that n.
+    let workloads: Vec<(u32, f64, Workload)> = n_values
+        .iter()
+        .map(|&n| {
+            let t = TABLE9_JOB_TIME_PER_PROC / n as f64;
+            let label = format!("n{n}");
+            (n, t, workload_for(n, processors, &label))
+        })
+        .collect();
+
+    // Skeleton sweeps + the flat cell list (cells ordered by sweep,
+    // then point, then trial — reassembly below relies on this).
+    let mut sweeps: Vec<SchedulerSweep> = Vec::with_capacity(specs.len());
+    let mut cells: Vec<Cell> = Vec::new();
+    for (si, &(_, ml)) in specs.iter().enumerate() {
+        let inner = schedulers[si].as_ref();
+        let mut points = Vec::new();
+        let mut skipped = Vec::new();
+        for &(n, t, ref workload) in &workloads {
+            let projected = match ml {
+                Some(params) => Multilevel::new(inner, params.clone())
+                    .projected_runtime(workload, &cluster),
+                None => inner.projected_runtime(workload, &cluster),
+            };
+            if projected > PROHIBITIVE_SECS {
+                skipped.push(n);
+                continue;
+            }
+            let point = points.len();
+            for trial in 0..cfg.trials {
+                let seed = cfg
+                    .seed
+                    .wrapping_add(trial as u64)
+                    .wrapping_add((n as u64) << 20);
+                cells.push(Cell {
+                    sweep: si,
+                    point,
+                    n,
+                    seed,
+                    workload,
+                });
+            }
+            points.push(SweepPoint {
+                n,
+                t,
+                trials: Vec::with_capacity(cfg.trials as usize),
+            });
+        }
+        sweeps.push(SchedulerSweep {
+            scheduler: match ml {
+                Some(_) => format!("{}+multilevel", inner.name()),
+                None => inner.name().to_string(),
+            },
+            points,
+            skipped,
+        });
+    }
+
+    let results = run_cells(cfg.effective_jobs(), &cells, |cell, scratch| {
+        let inner = schedulers[cell.sweep].as_ref();
+        let options = RunOptions::default();
+        let r = match specs[cell.sweep].1 {
+            Some(params) => Multilevel::new(inner, params.clone()).run_with_scratch(
+                cell.workload,
+                &cluster,
+                cell.seed,
+                &options,
+                scratch,
+            ),
+            None => inner.run_with_scratch(cell.workload, &cluster, cell.seed, &options, scratch),
+        };
+        r.check_invariants()
+            .unwrap_or_else(|e| panic!("{} n={}: {e}", inner.name(), cell.n));
+        r
+    });
+
+    for (cell, result) in cells.iter().zip(results) {
+        sweeps[cell.sweep].points[cell.point].trials.push(result);
+    }
+    sweeps
+}
+
 /// Run `choice` over `n_values`, `cfg.trials` trials each. When
 /// `multilevel` is given, the workload is routed through the
 /// LLMapReduce-style aggregator first (Figures 6–7).
@@ -88,57 +213,9 @@ pub fn run_sweep(
     n_values: &[u32],
     multilevel: Option<&MultilevelParams>,
 ) -> SchedulerSweep {
-    let cluster = cluster_of(cfg);
-    let processors = cluster.total_cores();
-    // Scaled daemon costs keep the experiment shape-invariant on
-    // scaled-down clusters (see make_scheduler_scaled).
-    let inner = make_scheduler_scaled(choice, cfg.scale_down);
-    let mut points = Vec::new();
-    let mut skipped = Vec::new();
-
-    for &n in n_values {
-        let t = TABLE9_JOB_TIME_PER_PROC / n as f64;
-        let label = format!("n{n}");
-        let workload = workload_for(n, processors, &label);
-        let projected = match multilevel {
-            Some(ml) => Multilevel::new(inner.as_ref(), ml.clone())
-                .projected_runtime(&workload, &cluster),
-            None => inner.projected_runtime(&workload, &cluster),
-        };
-        if projected > PROHIBITIVE_SECS {
-            skipped.push(n);
-            continue;
-        }
-        let mut trials = Vec::with_capacity(cfg.trials as usize);
-        for trial in 0..cfg.trials {
-            let seed = cfg
-                .seed
-                .wrapping_add(trial as u64)
-                .wrapping_add((n as u64) << 20);
-            let r = match multilevel {
-                Some(ml) => Multilevel::new(inner.as_ref(), ml.clone()).run(
-                    &workload,
-                    &cluster,
-                    seed,
-                    &RunOptions::default(),
-                ),
-                None => inner.run(&workload, &cluster, seed, &RunOptions::default()),
-            };
-            r.check_invariants()
-                .unwrap_or_else(|e| panic!("{} n={n}: {e}", inner.name()));
-            trials.push(r);
-        }
-        points.push(SweepPoint { n, t, trials });
-    }
-
-    SchedulerSweep {
-        scheduler: match multilevel {
-            Some(_) => format!("{}+multilevel", inner.name()),
-            None => inner.name().to_string(),
-        },
-        points,
-        skipped,
-    }
+    run_sweeps(&[(choice, multilevel)], cfg, n_values)
+        .pop()
+        .expect("one spec in, one sweep out")
 }
 
 #[cfg(test)]
@@ -182,5 +259,31 @@ mod tests {
         cfg.trials = 2;
         let s = run_sweep(SchedulerChoice::Slurm, &cfg, &[4, 8], None);
         assert_eq!(s.fit_points().len(), 4);
+    }
+
+    #[test]
+    fn batched_sweeps_match_individual_sweeps() {
+        let cfg = quick_cfg();
+        let ml = MultilevelParams::default();
+        let batch = run_sweeps(
+            &[
+                (SchedulerChoice::Slurm, None),
+                (SchedulerChoice::Mesos, Some(&ml)),
+            ],
+            &cfg,
+            &[4, 8],
+        );
+        let solo_slurm = run_sweep(SchedulerChoice::Slurm, &cfg, &[4, 8], None);
+        let solo_mesos = run_sweep(SchedulerChoice::Mesos, &cfg, &[4, 8], Some(&ml));
+        for (a, b) in [(&batch[0], &solo_slurm), (&batch[1], &solo_mesos)] {
+            assert_eq!(a.scheduler, b.scheduler);
+            assert_eq!(a.points.len(), b.points.len());
+            for (pa, pb) in a.points.iter().zip(&b.points) {
+                for (ra, rb) in pa.trials.iter().zip(&pb.trials) {
+                    assert_eq!(ra.t_total.to_bits(), rb.t_total.to_bits());
+                    assert_eq!(ra.events, rb.events);
+                }
+            }
+        }
     }
 }

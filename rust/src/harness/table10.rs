@@ -6,7 +6,7 @@
 //! AOT-compiled Pallas kernel via PJRT — and reports both, asserting
 //! they agree.
 
-use super::sweep::{run_sweep, SchedulerSweep};
+use super::sweep::{run_sweeps, SchedulerSweep, SweepSpec};
 use crate::config::ExperimentConfig;
 use crate::sched::calibration::paper_table10;
 use crate::util::fit::{fit_power_law, PowerLawFit};
@@ -30,14 +30,14 @@ pub struct Table10Report {
     pub fits: Vec<SchedulerFit>,
 }
 
-/// Run the sweep and fit. `artifacts_dir` enables the PJRT fit path.
+/// Run the sweep and fit. `artifacts_dir` enables the artifact-suite
+/// fit path. All schedulers' cells execute in one parallel batch.
 pub fn table10(cfg: &ExperimentConfig, artifacts_dir: Option<&str>) -> Table10Report {
     let mut suite = artifacts_dir.and_then(|d| crate::runtime::ArtifactSuite::load(d).ok());
-    let fits = cfg
-        .schedulers
-        .iter()
-        .map(|&choice| {
-            let sweep = run_sweep(choice, cfg, &cfg.n_sweep, None);
+    let specs: Vec<SweepSpec> = cfg.schedulers.iter().map(|&c| (c, None)).collect();
+    let fits = run_sweeps(&specs, cfg, &cfg.n_sweep)
+        .into_iter()
+        .map(|sweep| {
             let pts = sweep.fit_points();
             let ns: Vec<f64> = pts.iter().map(|p| p.0).collect();
             let dts: Vec<f64> = pts.iter().map(|p| p.1).collect();

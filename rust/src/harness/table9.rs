@@ -1,7 +1,7 @@
 //! Table 9: runtimes of the four constant-task-time sets on the four
 //! schedulers, three trials each.
 
-use super::sweep::{run_sweep, SchedulerSweep};
+use super::sweep::{run_sweeps, SchedulerSweep, SweepSpec};
 use crate::config::ExperimentConfig;
 use crate::sched::calibration::paper_table9_runtimes;
 use crate::util::table::{fnum, Table};
@@ -15,16 +15,12 @@ pub struct Table9Report {
     pub trials: u32,
 }
 
-/// Run Table 9.
+/// Run Table 9. All schedulers' cells execute in one parallel batch.
 pub fn table9(cfg: &ExperimentConfig) -> Table9Report {
     let ns: Vec<u32> = table9_sets().iter().map(|s| s.tasks_per_proc).collect();
-    let sweeps = cfg
-        .schedulers
-        .iter()
-        .map(|&c| run_sweep(c, cfg, &ns, None))
-        .collect();
+    let specs: Vec<SweepSpec> = cfg.schedulers.iter().map(|&c| (c, None)).collect();
     Table9Report {
-        sweeps,
+        sweeps: run_sweeps(&specs, cfg, &ns),
         trials: cfg.trials,
     }
 }

@@ -14,10 +14,11 @@
 //!   policies with EASY backfill, and an ideal-FIFO reference);
 //! * [`multilevel`] — LLMapReduce-style aggregation (paper §5.3);
 //! * [`model`] — the Section 4 latency/utilization equations + fitting;
-//! * [`runtime`] — PJRT execution of the AOT-compiled Pallas kernels
-//!   (power-law fit, U_v reduction, analytics payload);
-//! * [`exec`] — a realtime leader/worker mini-cluster running real PJRT
-//!   payloads (examples/end_to_end.rs);
+//! * [`runtime`] — the model-kernel suite (power-law fit, U_v
+//!   reduction, analytics payload); native backend offline, with the
+//!   AOT/PJRT path gated out until the crate set carries `xla`;
+//! * [`exec`] — a realtime leader/worker mini-cluster running real
+//!   kernel payloads (examples/end_to_end.rs);
 //! * [`harness`], [`features`] — regenerate every table and figure;
 //! * [`api`] — a DRMAA-like session API for scripting experiments;
 //! * [`config`], [`cli`], [`util`] — config files, CLI, and the PRNG /

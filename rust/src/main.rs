@@ -8,7 +8,9 @@
 //!   validate    run every experiment's shape checks at reduced scale
 //!
 //! Common options: --config <toml>, --quick (scaled-down cluster),
-//! --trials N, --out-dir <dir>, --artifacts <dir>, --csv.
+//! --trials N, --jobs N (sweep worker threads; results are
+//! bit-identical for any value), --out-dir <dir>, --artifacts <dir>,
+//! --csv.
 
 use sssched::cli::Args;
 use sssched::config::ExperimentConfig;
@@ -50,7 +52,7 @@ fn usage() {
          commands:\n\
          \x20 features   [--table 1..7] [--csv]\n\
          \x20 experiment <table9|table10|fig4|fig5|fig6|fig7|all> \
-         [--config f] [--quick] [--trials N] [--out-dir d] [--artifacts d] [--csv]\n\
+         [--config f] [--quick] [--trials N] [--jobs N] [--out-dir d] [--artifacts d] [--csv]\n\
          \x20 serve      [--workers N] [--tasks N] [--task-ms MS] \
          [--payload sleep|spin|analytics] [--ts SECS] [--artifacts d]\n\
          \x20 validate   [--quick]"
@@ -68,6 +70,9 @@ fn load_config(args: &Args) -> Result<ExperimentConfig, String> {
     }
     if let Some(t) = args.opt("trials") {
         cfg.trials = t.parse().map_err(|_| "bad --trials")?;
+    }
+    if let Some(j) = args.opt("jobs") {
+        cfg.jobs = j.parse().map_err(|_| "bad --jobs")?;
     }
     if let Some(d) = args.opt("out-dir") {
         cfg.out_dir = d.to_string();
@@ -156,7 +161,7 @@ fn cmd_experiment(args: &Args) -> i32 {
                 println!("{}", rep.render_plot());
                 println!(
                     "(model curves computed via {})",
-                    if rep.used_pjrt { "PJRT artifact" } else { "rust fallback" }
+                    if rep.used_pjrt { "artifact suite" } else { "rust fallback" }
                 );
                 write_out(&cfg, "fig5.csv", &rep.to_csv());
             }

@@ -118,16 +118,22 @@ impl<'a> Scheduler for Multilevel<'a> {
         self.inner.name()
     }
 
-    fn run(
+    fn run_with_scratch(
         &self,
         workload: &Workload,
         cluster: &ClusterSpec,
         seed: u64,
         options: &RunOptions,
+        scratch: &mut crate::sim::SimScratch,
     ) -> RunResult {
         let processors = cluster.total_cores();
+        // The aggregated workload is P tasks — small next to the N-task
+        // input — so building it per run is off the zero-alloc critical
+        // path; the inner simulation reuses the scratch.
         let aggregated = self.aggregate(workload, processors, seed);
-        let mut result = self.inner.run(&aggregated, cluster, seed, options);
+        let mut result = self
+            .inner
+            .run_with_scratch(&aggregated, cluster, seed, options, scratch);
         // ΔT and U are defined against the ORIGINAL workload's isolated
         // job time — the mapper overheads count as scheduler-path
         // overhead, exactly as in the paper's Figure 6/7 accounting.

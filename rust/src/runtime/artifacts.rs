@@ -1,14 +1,28 @@
-//! Typed wrappers over the AOT artifacts.
+//! Typed artifact suite: the four model kernels behind one facade.
 //!
-//! Each wrapper owns the padding/unpadding logic for its artifact's
-//! fixed AOT shapes (see `python/compile/model.py`):
+//! The shape constants and validation contracts mirror the AOT
+//! artifacts' fixed shapes (see `python/compile/model.py`):
 //!
 //! * `powerlaw_fit`  — (S=8, K=32) masked log-log OLS → (t_s, α, R²)
 //! * `utilization`   — (S=8) fits × (T=64) task-time grid → U curves
 //! * `analytics`     — (B=256, D=64) × (D, F=32) map-task payload
+//! * `uvar`          — (P≤2048) per-processor mean task times → U_v
+//!
+//! Execution is the native backend in [`super::native`] (the xla/PJRT
+//! backend is gated out of the offline build; see the module docs of
+//! [`crate::runtime`]).
 
-use super::pjrt::PjrtRuntime;
-use anyhow::{ensure, Context, Result};
+use super::native;
+use super::{Result, RuntimeError};
+use std::path::Path;
+
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)+) => {
+        if !$cond {
+            return Err(RuntimeError(format!($($arg)+)));
+        }
+    };
+}
 
 /// Fixed AOT shape constants (mirror python/compile/model.py).
 pub mod shapes {
@@ -28,7 +42,7 @@ pub mod shapes {
     pub const UVAR_P: usize = 2048;
 }
 
-/// One power-law fit result from the PJRT path.
+/// One power-law fit result from the artifact suite.
 #[derive(Clone, Copy, Debug)]
 pub struct PjrtFit {
     /// Marginal latency t_s.
@@ -39,26 +53,34 @@ pub struct PjrtFit {
     pub r2: f64,
 }
 
-/// Runtime facade exposing the three artifacts as typed calls.
+/// Facade exposing the four kernels as typed calls.
 pub struct ArtifactSuite {
-    rt: PjrtRuntime,
+    platform: &'static str,
 }
 
 impl ArtifactSuite {
-    /// Load the suite from an artifacts directory, compiling all three
-    /// HLO artifacts eagerly.
-    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Self> {
-        let mut rt = PjrtRuntime::cpu(dir)?;
-        for name in ["powerlaw_fit", "utilization", "analytics", "uvar"] {
-            rt.load(name)
-                .with_context(|| format!("artifact {name} (run `make artifacts`)"))?;
-        }
-        Ok(Self { rt })
+    /// Open the suite rooted at an artifacts directory. The native
+    /// backend needs nothing from disk, so this always succeeds; the
+    /// directory is only probed to report honestly whether the AOT HLO
+    /// artifacts are present (`platform()`).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let have_hlo = ["powerlaw_fit", "utilization", "analytics", "uvar"]
+            .iter()
+            .all(|name| dir.join(format!("{name}.hlo.txt")).exists());
+        Ok(Self {
+            platform: if have_hlo {
+                "native (hlo artifacts present; xla backend gated out offline)"
+            } else {
+                "native"
+            },
+        })
     }
 
-    /// Batched power-law fit through the Pallas kernel: one entry per
-    /// series of (n, ΔT) observations. Series longer than K=32 points
-    /// or batches larger than S=8 are rejected.
+    /// Batched power-law fit: one entry per series of (n, ΔT)
+    /// observations. Series longer than K=32 points or batches larger
+    /// than S=8 are rejected; non-positive points are masked out, and a
+    /// series needs at least 2 positive points.
     pub fn powerlaw_fit(&mut self, series: &[Vec<(f64, f64)>]) -> Result<Vec<PjrtFit>> {
         use shapes::{FIT_K, FIT_S};
         ensure!(
@@ -66,9 +88,7 @@ impl ArtifactSuite {
             "at most {FIT_S} series per call, got {}",
             series.len()
         );
-        let mut x = vec![0f32; FIT_S * FIT_K];
-        let mut y = vec![0f32; FIT_S * FIT_K];
-        let mut m = vec![0f32; FIT_S * FIT_K];
+        let mut out = Vec::with_capacity(series.len());
         for (s, pts) in series.iter().enumerate() {
             let valid: Vec<(f64, f64)> = pts
                 .iter()
@@ -85,27 +105,14 @@ impl ArtifactSuite {
                 "series {s} has {} points, max {FIT_K}",
                 valid.len()
             );
-            for (k, &(n, dt)) in valid.iter().enumerate() {
-                x[s * FIT_K + k] = (n.ln()) as f32;
-                y[s * FIT_K + k] = (dt.ln()) as f32;
-                m[s * FIT_K + k] = 1.0;
-            }
+            let fit = native::powerlaw_fit_series(&valid);
+            out.push(PjrtFit {
+                t_s: fit.t_s,
+                alpha_s: fit.alpha_s,
+                r2: fit.r2,
+            });
         }
-        let dims = [shapes::FIT_S as i64, FIT_K as i64];
-        let inputs = [
-            PjrtRuntime::literal_f32(&x, &dims)?,
-            PjrtRuntime::literal_f32(&y, &dims)?,
-            PjrtRuntime::literal_f32(&m, &dims)?,
-        ];
-        let out = self.rt.load("powerlaw_fit")?.run_f32(&inputs)?;
-        ensure!(out.len() == 3, "powerlaw_fit returns (t_s, alpha, r2)");
-        Ok((0..series.len())
-            .map(|s| PjrtFit {
-                t_s: out[0][s] as f64,
-                alpha_s: out[1][s] as f64,
-                r2: out[2][s] as f64,
-            })
-            .collect())
+        Ok(out)
     }
 
     /// Model utilization curves U_c(t) (approx, exact) for up to S=8
@@ -122,31 +129,14 @@ impl ArtifactSuite {
             "t_grid must have exactly {UTIL_T} points, got {}",
             t_grid.len()
         );
-        let mut ts = vec![1.0f32; FIT_S];
-        let mut al = vec![1.0f32; FIT_S];
-        for (i, f) in fits.iter().enumerate() {
-            ts[i] = f.t_s as f32;
-            al[i] = f.alpha_s as f32;
+        let mut approx = Vec::with_capacity(fits.len());
+        let mut exact = Vec::with_capacity(fits.len());
+        for f in fits {
+            let (a, e) = native::utilization_curves_series(f.t_s, f.alpha_s, t_grid);
+            approx.push(a);
+            exact.push(e);
         }
-        let tg: Vec<f32> = t_grid.iter().map(|&t| t as f32).collect();
-        let inputs = [
-            PjrtRuntime::literal_f32(&ts, &[FIT_S as i64])?,
-            PjrtRuntime::literal_f32(&al, &[FIT_S as i64])?,
-            PjrtRuntime::literal_f32(&tg, &[UTIL_T as i64])?,
-        ];
-        let out = self.rt.load("utilization")?.run_f32(&inputs)?;
-        ensure!(out.len() == 2, "utilization returns (approx, exact)");
-        let unpack = |flat: &Vec<f32>| -> Vec<Vec<f64>> {
-            (0..fits.len())
-                .map(|s| {
-                    flat[s * UTIL_T..(s + 1) * UTIL_T]
-                        .iter()
-                        .map(|&v| v as f64)
-                        .collect()
-                })
-                .collect()
-        };
-        Ok((unpack(&out[0]), unpack(&out[1])))
+        Ok((approx, exact))
     }
 
     /// Run the analytics map-task payload on one (B, D) record batch.
@@ -155,18 +145,18 @@ impl ArtifactSuite {
         use shapes::{ANALYTICS_B, ANALYTICS_D, ANALYTICS_F};
         ensure!(x.len() == ANALYTICS_B * ANALYTICS_D, "x must be B*D");
         ensure!(w.len() == ANALYTICS_D * ANALYTICS_F, "w must be D*F");
-        let inputs = [
-            PjrtRuntime::literal_f32(x, &[ANALYTICS_B as i64, ANALYTICS_D as i64])?,
-            PjrtRuntime::literal_f32(w, &[ANALYTICS_D as i64, ANALYTICS_F as i64])?,
-        ];
-        let out = self.rt.load("analytics")?.run_f32(&inputs)?;
-        ensure!(out.len() == 2, "analytics returns (features, checksum)");
-        Ok((out[0].clone(), out[1][0]))
+        Ok(native::analytics_payload(
+            x,
+            w,
+            ANALYTICS_B,
+            ANALYTICS_D,
+            ANALYTICS_F,
+        ))
     }
 
     /// Variable-task-time utilization U_v (paper §4 per-processor
-    /// averaging) through the Pallas reduction: per-processor mean task
-    /// times (≤ P=2048 entries) + marginal latency → U.
+    /// averaging): per-processor mean task times (≤ P=2048 entries) +
+    /// marginal latency → U.
     pub fn u_variable(&mut self, per_proc_mean_t: &[f64], t_s: f64) -> Result<f64> {
         use shapes::UVAR_P;
         ensure!(
@@ -178,24 +168,61 @@ impl ArtifactSuite {
             per_proc_mean_t.iter().all(|&t| t > 0.0),
             "per-processor mean task times must be positive"
         );
-        let mut tp = vec![0f32; UVAR_P];
-        let mut mask = vec![0f32; UVAR_P];
-        for (i, &t) in per_proc_mean_t.iter().enumerate() {
-            tp[i] = t as f32;
-            mask[i] = 1.0;
-        }
-        let inputs = [
-            PjrtRuntime::literal_f32(&tp, &[UVAR_P as i64])?,
-            PjrtRuntime::literal_f32(&mask, &[UVAR_P as i64])?,
-            PjrtRuntime::literal_f32(&[t_s as f32], &[1])?,
-        ];
-        let out = self.rt.load("uvar")?.run_f32(&inputs)?;
-        ensure!(out.len() == 1 && out[0].len() == 1, "uvar returns a scalar");
-        Ok(out[0][0] as f64)
+        Ok(native::uvar_reduce(per_proc_mean_t, t_s))
     }
 
-    /// PJRT platform name.
+    /// Backend name.
     pub fn platform(&self) -> String {
-        self.rt.platform()
+        self.platform.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn suite() -> ArtifactSuite {
+        ArtifactSuite::load("artifacts").unwrap()
+    }
+
+    #[test]
+    fn load_succeeds_without_artifacts_dir() {
+        let s = ArtifactSuite::load("definitely/not/a/dir").unwrap();
+        assert!(s.platform().contains("native"));
+    }
+
+    #[test]
+    fn powerlaw_validates_shapes() {
+        let mut s = suite();
+        assert!(s.powerlaw_fit(&[vec![(4.0, 10.0)]]).is_err()); // 1 point
+        assert!(s.powerlaw_fit(&[vec![(0.0, 0.0), (-1.0, -5.0)]]).is_err());
+        let too_many: Vec<Vec<(f64, f64)>> =
+            vec![vec![(4.0, 1.0), (8.0, 2.0)]; shapes::FIT_S + 1];
+        assert!(s.powerlaw_fit(&too_many).is_err());
+    }
+
+    #[test]
+    fn utilization_requires_full_grid() {
+        let mut s = suite();
+        let fit = PjrtFit {
+            t_s: 2.2,
+            alpha_s: 1.3,
+            r2: 1.0,
+        };
+        assert!(s.utilization_curves(&[fit], &[1.0, 2.0]).is_err());
+        let grid: Vec<f64> = (0..shapes::UTIL_T).map(|i| 1.0 + i as f64).collect();
+        let (a, e) = s.utilization_curves(&[fit], &grid).unwrap();
+        assert_eq!(a.len(), 1);
+        assert_eq!(e[0].len(), shapes::UTIL_T);
+    }
+
+    #[test]
+    fn uvar_validates_inputs() {
+        let mut s = suite();
+        assert!(s.u_variable(&[], 2.2).is_err());
+        assert!(s.u_variable(&[0.0], 2.2).is_err());
+        let got = s.u_variable(&[5.0; 100], 2.2).unwrap();
+        let want = crate::model::u_constant_approx(2.2, 5.0);
+        assert!((got - want).abs() < 1e-12);
     }
 }

@@ -1,10 +1,40 @@
-//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from the
-//! Layer-3 (rust) hot path. Python/JAX is build-time only — see
-//! `python/compile/aot.py`. Interchange format is HLO *text* (the image's
-//! xla_extension 0.5.1 rejects jax>=0.5 serialized protos).
+//! Execution runtime for the AOT-compiled model kernels.
+//!
+//! The seed executed Pallas-lowered HLO artifacts (`artifacts/*.hlo.txt`,
+//! produced by `python/compile/aot.py`) through the `xla` crate's PJRT
+//! CPU client — but neither `xla` nor `anyhow` exists in the offline
+//! crate set this repo must build against, so the seed did not compile.
+//! The suite now ships a **native backend**: the same four kernels
+//! (masked log-log OLS power-law fit, utilization curves, the analytics
+//! map-task payload, and the U_v reduction), implemented in Rust with
+//! identical shape/validation contracts, behind the unchanged
+//! [`ArtifactSuite`] API. Callers — fig5, table10, the realtime
+//! workers, examples — are source-compatible; reintroducing a PJRT
+//! backend later only means adding a second arm behind
+//! [`ArtifactSuite`].
 
 mod artifacts;
-mod pjrt;
+mod native;
 
 pub use artifacts::{shapes, ArtifactSuite, PjrtFit};
-pub use pjrt::{Artifact, PjrtRuntime};
+
+/// Runtime error (string-typed — the offline crate set has no `anyhow`).
+#[derive(Clone, Debug)]
+pub struct RuntimeError(pub String);
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+impl From<String> for RuntimeError {
+    fn from(s: String) -> Self {
+        Self(s)
+    }
+}
+
+/// Result alias for runtime operations.
+pub type Result<T> = std::result::Result<T, RuntimeError>;

@@ -1,0 +1,102 @@
+//! Native implementations of the four AOT kernels.
+//!
+//! Each function mirrors the corresponding Pallas kernel's math (see
+//! `python/compile/kernels/`): same inputs, same reductions, f64
+//! accumulation (the HLO kernels ran in f32; callers' tolerances cover
+//! both). Validation/padding lives in [`super::artifacts`]; these are
+//! the raw compute bodies.
+
+use crate::model::{u_constant_approx, u_constant_exact, u_variable};
+use crate::util::fit::{fit_power_law, PowerLawFit};
+use crate::workload::TABLE9_JOB_TIME_PER_PROC;
+
+/// Masked log-log OLS power-law fit over one series of positive
+/// (n, ΔT) points (`powerlaw_fit.hlo.txt` equivalent).
+pub fn powerlaw_fit_series(points: &[(f64, f64)]) -> PowerLawFit {
+    let ns: Vec<f64> = points.iter().map(|p| p.0).collect();
+    let dts: Vec<f64> = points.iter().map(|p| p.1).collect();
+    fit_power_law(&ns, &dts)
+}
+
+/// Approximate + exact utilization curves for one (t_s, α_s) fit over a
+/// task-time grid (`utilization.hlo.txt` equivalent). n is derived from
+/// the paper's fixed per-processor work T_job = 240 s.
+pub fn utilization_curves_series(t_s: f64, alpha_s: f64, t_grid: &[f64]) -> (Vec<f64>, Vec<f64>) {
+    let approx = t_grid.iter().map(|&t| u_constant_approx(t_s, t)).collect();
+    let exact = t_grid
+        .iter()
+        .map(|&t| {
+            let n = TABLE9_JOB_TIME_PER_PROC / t;
+            u_constant_exact(t_s, alpha_s, t, n)
+        })
+        .collect();
+    (approx, exact)
+}
+
+/// Analytics map-task payload (`analytics.hlo.txt` equivalent):
+/// features = Σ_b relu(x · w), checksum = Σ_f features.
+/// `x` is row-major (b, d), `w` row-major (d, f).
+pub fn analytics_payload(x: &[f32], w: &[f32], b: usize, d: usize, f: usize) -> (Vec<f32>, f32) {
+    debug_assert_eq!(x.len(), b * d);
+    debug_assert_eq!(w.len(), d * f);
+    let mut features = vec![0f64; f];
+    for bi in 0..b {
+        let row = &x[bi * d..(bi + 1) * d];
+        for fi in 0..f {
+            let mut acc = 0f64;
+            for (di, &xv) in row.iter().enumerate() {
+                acc += xv as f64 * w[di * f + fi] as f64;
+            }
+            features[fi] += acc.max(0.0);
+        }
+    }
+    let checksum: f64 = features.iter().sum();
+    (
+        features.into_iter().map(|v| v as f32).collect(),
+        checksum as f32,
+    )
+}
+
+/// Variable-task-time utilization reduction (`uvar.hlo.txt`
+/// equivalent).
+pub fn uvar_reduce(per_proc_mean_t: &[f64], t_s: f64) -> f64 {
+    u_variable(t_s, per_proc_mean_t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn powerlaw_recovers_synthetic() {
+        let pts: Vec<(f64, f64)> = [4.0f64, 8.0, 48.0, 240.0]
+            .iter()
+            .map(|&n| (n, 2.2 * n.powf(1.3)))
+            .collect();
+        let fit = powerlaw_fit_series(&pts);
+        assert!((fit.t_s - 2.2).abs() < 1e-9);
+        assert!((fit.alpha_s - 1.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn analytics_uniform_inputs() {
+        let (b, d, f) = (4, 8, 3);
+        let x = vec![1.0f32; b * d];
+        let w = vec![0.5f32; d * f];
+        let (feats, checksum) = analytics_payload(&x, &w, b, d, f);
+        // Each feature: b batches × relu(d × 0.5).
+        for &v in &feats {
+            assert!((v - (b * d) as f32 * 0.5).abs() < 1e-6);
+        }
+        assert!((checksum - feats.iter().sum::<f32>()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn analytics_relu_clamps_negatives() {
+        let (b, d, f) = (1, 2, 1);
+        let x = vec![1.0f32, 1.0];
+        let w = vec![-3.0f32, 1.0];
+        let (feats, _) = analytics_payload(&x, &w, b, d, f);
+        assert_eq!(feats[0], 0.0);
+    }
+}

@@ -19,6 +19,7 @@
 //! labels "parallel jobs".
 
 use crate::cluster::ClusterSpec;
+use crate::sim::SimScratch;
 use crate::util::stats::Summary;
 
 /// Queue-management policy.
@@ -98,9 +99,21 @@ impl BatchQueueSim {
         Self { policy }
     }
 
-    /// Simulate `jobs` on `cluster`. Jobs must fit the cluster
-    /// (cores <= total cores) or they are rejected with an error.
+    /// Simulate `jobs` on `cluster` with a fresh scratch (allocating).
+    /// Jobs must fit the cluster (cores <= total cores) or they are
+    /// rejected with an error.
     pub fn run(&self, jobs: &[BatchJob], cluster: &ClusterSpec) -> Result<BatchRunResult, String> {
+        self.run_with_scratch(jobs, cluster, &mut SimScratch::new())
+    }
+
+    /// Simulate `jobs` reusing `scratch`'s pending-order and running-set
+    /// buffers (bit-identical to [`BatchQueueSim::run`]).
+    pub fn run_with_scratch(
+        &self,
+        jobs: &[BatchJob],
+        cluster: &ClusterSpec,
+        scratch: &mut SimScratch,
+    ) -> Result<BatchRunResult, String> {
         let total_cores = cluster.total_cores() as u32;
         for j in jobs {
             if j.cores == 0 || j.cores > total_cores {
@@ -114,22 +127,35 @@ impl BatchQueueSim {
             }
         }
 
-        // Running set: (end_time, cores). Pending: indices into `jobs`.
-        let mut pending: Vec<usize> = (0..jobs.len()).collect();
+        // Running set: (end_time, cores, job index). Pending: indices
+        // into `jobs`, submission-ordered. Only these two buffers are
+        // used here, so clear them directly instead of a full
+        // `scratch.begin` (which would rebuild the per-core slot pool
+        // this simulator never touches).
+        let SimScratch {
+            job_order: pending,
+            running,
+            ..
+        } = scratch;
+        pending.clear();
+        running.clear();
+        pending.extend(0..jobs.len() as u32);
         pending.sort_by(|&a, &b| {
-            jobs[a]
+            jobs[a as usize]
                 .submit_at
-                .partial_cmp(&jobs[b].submit_at)
-                .unwrap()
+                .total_cmp(&jobs[b as usize].submit_at)
                 .then(a.cmp(&b))
         });
-        let mut running: Vec<(f64, u32, usize)> = Vec::new(); // (end, cores, job)
         let mut free = total_cores;
         let mut now = 0.0f64;
         let mut outcomes: Vec<Option<JobOutcome>> = vec![None; jobs.len()];
         let mut usage: std::collections::BTreeMap<u32, f64> = Default::default();
         let mut waits = Summary::new();
         let mut makespan = 0.0f64;
+        // Per-instant work lists, hoisted out of the loop so iterations
+        // reuse their capacity.
+        let mut arrived: Vec<u32> = Vec::new();
+        let mut started: Vec<u32> = Vec::new();
 
         // Event-free loop: advance to the next decision instant (a
         // completion or an arrival), then start everything startable.
@@ -145,23 +171,25 @@ impl BatchQueueSim {
             });
 
             // Queue of arrived pending jobs, ordered by policy.
-            let mut arrived: Vec<usize> = pending
-                .iter()
-                .copied()
-                .filter(|&i| jobs[i].submit_at <= now + 1e-12)
-                .collect();
+            arrived.clear();
+            arrived.extend(
+                pending
+                    .iter()
+                    .copied()
+                    .filter(|&i| jobs[i as usize].submit_at <= now + 1e-12),
+            );
             self.order(&mut arrived, jobs, &usage);
 
             // Start jobs per policy.
-            let mut started: Vec<usize> = Vec::new();
-            let mut blocked_head: Option<usize> = None;
-            for &i in &arrived {
-                let j = &jobs[i];
+            started.clear();
+            let mut blocked_head: Option<u32> = None;
+            for &i in arrived.iter() {
+                let j = &jobs[i as usize];
                 if blocked_head.is_none() && j.cores <= free {
                     free -= j.cores;
                     let end = now + j.duration;
                     running.push((end, j.cores, i));
-                    outcomes[i] = Some(JobOutcome {
+                    outcomes[i as usize] = Some(JobOutcome {
                         id: j.id,
                         start: now,
                         end,
@@ -179,15 +207,15 @@ impl BatchQueueSim {
                 } else if self.policy == QueuePolicy::FcfsBackfill {
                     // EASY backfill: shadow time = earliest instant the
                     // head job could start given current running jobs.
-                    let head = &jobs[blocked_head.unwrap()];
-                    let (shadow, spare) = shadow_time(free, head.cores, &running);
+                    let head = &jobs[blocked_head.unwrap() as usize];
+                    let (shadow, spare) = shadow_time(free, head.cores, running);
                     let fits_now = j.cores <= free;
                     let no_delay = now + j.duration <= shadow + 1e-9 || j.cores <= spare;
                     if fits_now && no_delay {
                         free -= j.cores;
                         let end = now + j.duration;
                         running.push((end, j.cores, i));
-                        outcomes[i] = Some(JobOutcome {
+                        outcomes[i as usize] = Some(JobOutcome {
                             id: j.id,
                             start: now,
                             end,
@@ -211,7 +239,7 @@ impl BatchQueueSim {
                 .fold(f64::INFINITY, f64::min);
             let next_arrival = pending
                 .iter()
-                .map(|&i| jobs[i].submit_at)
+                .map(|&i| jobs[i as usize].submit_at)
                 .filter(|&t| t > now + 1e-12)
                 .fold(f64::INFINITY, f64::min);
             let next = next_end.min(next_arrival);
@@ -238,7 +266,7 @@ impl BatchQueueSim {
 
     fn order(
         &self,
-        queue: &mut [usize],
+        queue: &mut [u32],
         jobs: &[BatchJob],
         usage: &std::collections::BTreeMap<u32, f64>,
     ) {
@@ -246,17 +274,17 @@ impl BatchQueueSim {
             QueuePolicy::Fcfs | QueuePolicy::FcfsBackfill => {} // arrival order already
             QueuePolicy::Priority => {
                 queue.sort_by(|&a, &b| {
-                    jobs[b]
+                    jobs[b as usize]
                         .priority
-                        .cmp(&jobs[a].priority)
+                        .cmp(&jobs[a as usize].priority)
                         .then(a.cmp(&b))
                 });
             }
             QueuePolicy::Fairshare => {
                 queue.sort_by(|&a, &b| {
-                    let ua = usage.get(&jobs[a].user).copied().unwrap_or(0.0);
-                    let ub = usage.get(&jobs[b].user).copied().unwrap_or(0.0);
-                    ua.partial_cmp(&ub).unwrap().then(a.cmp(&b))
+                    let ua = usage.get(&jobs[a as usize].user).copied().unwrap_or(0.0);
+                    let ub = usage.get(&jobs[b as usize].user).copied().unwrap_or(0.0);
+                    ua.total_cmp(&ub).then(a.cmp(&b))
                 });
             }
         }
@@ -265,9 +293,9 @@ impl BatchQueueSim {
 
 /// Earliest time `need` cores are simultaneously free, and the spare
 /// cores left at that time (for the backfill window test).
-fn shadow_time(mut free: u32, need: u32, running: &[(f64, u32, usize)]) -> (f64, u32) {
+fn shadow_time(mut free: u32, need: u32, running: &[(f64, u32, u32)]) -> (f64, u32) {
     let mut ends: Vec<(f64, u32)> = running.iter().map(|&(e, c, _)| (e, c)).collect();
-    ends.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    ends.sort_by(|a, b| a.0.total_cmp(&b.0));
     for &(end, cores) in &ends {
         if free >= need {
             break;
@@ -399,6 +427,24 @@ mod tests {
         assert!(BatchQueueSim::new(QueuePolicy::Fcfs)
             .run(&jobs, &cluster(8))
             .is_err());
+    }
+
+    #[test]
+    fn scratch_reuse_matches_fresh() {
+        let jobs = vec![job(0, 4, 10.0), job(1, 8, 10.0), job(2, 4, 5.0)];
+        let mut scratch = SimScratch::new();
+        for policy in [QueuePolicy::Fcfs, QueuePolicy::FcfsBackfill, QueuePolicy::Priority] {
+            let sim = BatchQueueSim::new(policy);
+            let warm = sim
+                .run_with_scratch(&jobs, &cluster(8), &mut scratch)
+                .unwrap();
+            let fresh = sim.run(&jobs, &cluster(8)).unwrap();
+            assert_eq!(warm.makespan.to_bits(), fresh.makespan.to_bits());
+            for (a, b) in warm.outcomes.iter().zip(&fresh.outcomes) {
+                assert_eq!(a.start.to_bits(), b.start.to_bits());
+                assert_eq!(a.end.to_bits(), b.end.to_bits());
+            }
+        }
     }
 
     #[test]

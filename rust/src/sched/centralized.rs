@@ -20,12 +20,11 @@
 
 use super::result::{RunOptions, RunResult};
 use super::Scheduler;
-use crate::cluster::{ClusterSpec, SlotPool};
-use crate::sim::{EventQueue, ServiceStation};
+use crate::cluster::ClusterSpec;
+use crate::sim::{ServiceStation, SimEv, SimScratch};
 use crate::util::prng::{LognormalGen, Prng};
 use crate::util::stats::Summary;
 use crate::workload::{TraceRecord, Workload};
-use std::collections::VecDeque;
 
 /// Tunable mechanism parameters for a centralized scheduler.
 #[derive(Clone, Debug)]
@@ -81,31 +80,18 @@ impl CentralizedSim {
     }
 }
 
-enum Ev {
-    /// A task's submission reaches the daemon (late arrival or
-    /// individual-job submission).
-    Arrive { task: u32 },
-    /// Periodic scheduling cycle.
-    Cycle,
-    /// Task begins executing on its slot.
-    Start { task: u32, slot: u32 },
-    /// Task finished executing.
-    End { task: u32, slot: u32 },
-    /// Slot finished teardown and is reusable.
-    SlotFree { slot: u32 },
-}
-
 impl Scheduler for CentralizedSim {
     fn name(&self) -> &'static str {
         self.params.name
     }
 
-    fn run(
+    fn run_with_scratch(
         &self,
         workload: &Workload,
         cluster: &ClusterSpec,
         seed: u64,
         options: &RunOptions,
+        scratch: &mut SimScratch,
     ) -> RunResult {
         let p = &self.params;
         let mut rng = Prng::new(seed ^ 0xCE47_4A11);
@@ -115,25 +101,32 @@ impl Scheduler for CentralizedSim {
         let g_launch = LognormalGen::new(p.launch_mean, p.launch_cv);
         let g_teardown = LognormalGen::new(p.teardown_mean, p.launch_cv);
         let g_submit = LognormalGen::new(p.submit_cost_job, p.jitter_cv);
-        let mut q: EventQueue<Ev> = EventQueue::new();
-        let mut pool = SlotPool::new(cluster);
-        let mut daemon = ServiceStation::new();
         let n = workload.len();
+        scratch.begin(cluster, n, options.collect_trace);
+        let SimScratch {
+            queue: q,
+            pending,
+            pool,
+            slot_mem,
+            trace,
+            trace_idx,
+            ..
+        } = scratch;
+        let mut daemon = ServiceStation::new();
 
         // Pending queue. Array mode: everything submitted at t<=0 in one
         // sbatch/qsub call; later arrivals (and individual mode) come in
         // through Arrive events that each pay a submission cost.
-        let mut pending: VecDeque<u32> = VecDeque::new();
         if options.individual_submission {
             for t in &workload.tasks {
-                q.push(t.submit_at.max(0.0), Ev::Arrive { task: t.id });
+                q.push(t.submit_at.max(0.0), SimEv::Arrive { task: t.id });
             }
         } else {
             for t in &workload.tasks {
                 if t.submit_at <= 0.0 {
                     pending.push_back(t.id);
                 } else {
-                    q.push(t.submit_at, Ev::Arrive { task: t.id });
+                    q.push(t.submit_at, SimEv::Arrive { task: t.id });
                 }
             }
             if !pending.is_empty() {
@@ -143,32 +136,19 @@ impl Scheduler for CentralizedSim {
                 );
             }
         }
-        q.push(daemon.free_at().max(0.0), Ev::Cycle);
+        q.push(daemon.free_at().max(0.0), SimEv::Tick);
 
         let mut makespan: f64 = 0.0;
         let mut completed: usize = 0;
         let mut waits = Summary::new();
-        let mut trace: Vec<TraceRecord> = if options.collect_trace {
-            Vec::with_capacity(n)
-        } else {
-            Vec::new()
-        };
-        // task id -> index into `trace` (u32::MAX = not yet started)
-        let mut trace_idx: Vec<u32> = if options.collect_trace {
-            vec![u32::MAX; n]
-        } else {
-            Vec::new()
-        };
-        // memory held by each slot's current task
-        let mut slot_mem: Vec<i64> = vec![0; pool.capacity()];
 
         while let Some((now, ev)) = q.pop() {
             match ev {
-                Ev::Arrive { task } => {
+                SimEv::Arrive { task } => {
                     daemon.serve(now, rng.lognormal(&g_submit));
                     pending.push_back(task);
                 }
-                Ev::Cycle => {
+                SimEv::Tick => {
                     // Queue-management scan, capped.
                     let scan = p.scan_cost_per_pending * pending.len().min(p.scan_cap) as f64;
                     if scan > 0.0 {
@@ -185,13 +165,13 @@ impl Scheduler for CentralizedSim {
                         slot_mem[slot as usize] = task.mem_mb;
                         let fin = daemon.serve(now, rng.lognormal(&g_sched));
                         let launch = rng.lognormal(&g_launch);
-                        q.push(fin + p.rpc + launch, Ev::Start { task: task_id, slot });
+                        q.push(fin + p.rpc + launch, SimEv::Start { task: task_id, slot });
                     }
                     if completed < n {
-                        q.push(now + p.cycle_interval, Ev::Cycle);
+                        q.push(now + p.cycle_interval, SimEv::Tick);
                     }
                 }
-                Ev::Start { task, slot } => {
+                SimEv::Start { task, slot } => {
                     let spec = &workload.tasks[task as usize];
                     waits.add(now - spec.submit_at);
                     if options.collect_trace {
@@ -205,9 +185,9 @@ impl Scheduler for CentralizedSim {
                             end: 0.0, // patched on End
                         });
                     }
-                    q.push(now + spec.duration, Ev::End { task, slot });
+                    q.push(now + spec.duration, SimEv::End { task, slot });
                 }
-                Ev::End { task, slot } => {
+                SimEv::End { task, slot } => {
                     completed += 1;
                     makespan = makespan.max(now);
                     if options.collect_trace {
@@ -215,16 +195,18 @@ impl Scheduler for CentralizedSim {
                     }
                     let fin = daemon.serve(now, rng.lognormal(&g_complete));
                     let teardown = rng.lognormal(&g_teardown);
-                    q.push(fin + teardown, Ev::SlotFree { slot });
+                    q.push(fin + teardown, SimEv::SlotFree { slot });
                 }
-                Ev::SlotFree { slot } => {
+                SimEv::SlotFree { slot } => {
                     pool.release(slot, slot_mem[slot as usize]);
                 }
+                SimEv::Stage { .. } => unreachable!("centralized sim emits no Stage events"),
             }
         }
 
         debug_assert_eq!(completed, n, "all tasks must complete");
         let processors = cluster.total_cores();
+        let events = q.popped();
         RunResult {
             scheduler: p.name.to_string(),
             workload: workload.label.clone(),
@@ -232,10 +214,10 @@ impl Scheduler for CentralizedSim {
             processors,
             t_total: makespan,
             t_job: workload.t_job_per_proc(processors),
-            events: q.popped(),
+            events,
             daemon_busy: daemon.busy(),
             waits,
-            trace: options.collect_trace.then_some(trace),
+            trace: options.collect_trace.then(|| std::mem::take(trace)),
         }
     }
 
@@ -282,6 +264,26 @@ mod tests {
         assert_eq!(a.t_total, b.t_total);
         let c = sim.run(&w, &quick_cluster(), 8, &RunOptions::default());
         assert_ne!(a.t_total, c.t_total);
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_identical() {
+        let sim = CentralizedSim::new(calibration::slurm_params());
+        let cluster = quick_cluster();
+        let w1 = WorkloadBuilder::constant(1.0).tasks(100).build();
+        let w2 = WorkloadBuilder::constant(3.0).tasks(40).build();
+        let mut scratch = SimScratch::new();
+        // Warm the scratch on an unrelated run, then re-run both
+        // workloads: results must match fresh-scratch runs exactly.
+        sim.run_with_scratch(&w2, &cluster, 9, &RunOptions::with_trace(), &mut scratch);
+        for (w, seed) in [(&w1, 7u64), (&w2, 8)] {
+            let warm =
+                sim.run_with_scratch(w, &cluster, seed, &RunOptions::with_trace(), &mut scratch);
+            let fresh = sim.run(w, &cluster, seed, &RunOptions::with_trace());
+            assert_eq!(warm.t_total.to_bits(), fresh.t_total.to_bits());
+            assert_eq!(warm.events, fresh.events);
+            assert_eq!(warm.trace.as_ref().unwrap(), fresh.trace.as_ref().unwrap());
+        }
     }
 
     #[test]

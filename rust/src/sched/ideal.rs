@@ -8,7 +8,7 @@
 use super::result::{RunOptions, RunResult};
 use super::Scheduler;
 use crate::cluster::{ClusterSpec, SlotPool};
-use crate::sim::EventQueue;
+use crate::sim::{EventQueue, SimEv, SimScratch};
 use crate::util::stats::Summary;
 use crate::workload::{TraceRecord, Workload};
 use std::collections::VecDeque;
@@ -16,36 +16,38 @@ use std::collections::VecDeque;
 /// The ideal zero-overhead scheduler.
 pub struct IdealFifo;
 
-enum Ev {
-    End { slot: u32 },
-}
-
 impl Scheduler for IdealFifo {
     fn name(&self) -> &'static str {
         "IdealFIFO"
     }
 
-    fn run(
+    fn run_with_scratch(
         &self,
         workload: &Workload,
         cluster: &ClusterSpec,
         _seed: u64,
         options: &RunOptions,
+        scratch: &mut SimScratch,
     ) -> RunResult {
-        let mut q: EventQueue<Ev> = EventQueue::new();
-        let mut pool = SlotPool::new(cluster);
         let n = workload.len();
-        let mut pending: VecDeque<u32> = (0..n as u32).collect();
-        let mut slot_mem: Vec<i64> = vec![0; pool.capacity()];
+        scratch.begin(cluster, n, options.collect_trace);
+        let SimScratch {
+            queue: q,
+            pending,
+            pool,
+            slot_mem,
+            trace,
+            ..
+        } = scratch;
+        pending.extend(0..n as u32);
         let mut makespan: f64 = 0.0;
         let mut waits = Summary::new();
-        let mut trace = Vec::new();
 
         // Fill every slot at t=0; refill instantly on completion.
         let dispatch = |now: f64,
                             pending: &mut VecDeque<u32>,
                             pool: &mut SlotPool,
-                            q: &mut EventQueue<Ev>,
+                            q: &mut EventQueue<SimEv>,
                             slot_mem: &mut [i64],
                             waits: &mut Summary,
                             trace: &mut Vec<TraceRecord>| {
@@ -67,18 +69,35 @@ impl Scheduler for IdealFifo {
                         end: now + task.duration,
                     });
                 }
-                q.push(now + task.duration, Ev::End { slot });
+                q.push(now + task.duration, SimEv::End { task: task_id, slot });
             }
         };
 
-        dispatch(0.0, &mut pending, &mut pool, &mut q, &mut slot_mem, &mut waits, &mut trace);
-        while let Some((now, Ev::End { slot })) = q.pop() {
+        dispatch(
+            0.0,
+            &mut *pending,
+            &mut *pool,
+            &mut *q,
+            slot_mem.as_mut_slice(),
+            &mut waits,
+            &mut *trace,
+        );
+        while let Some((now, SimEv::End { slot, .. })) = q.pop() {
             makespan = makespan.max(now);
             pool.release(slot, slot_mem[slot as usize]);
-            dispatch(now, &mut pending, &mut pool, &mut q, &mut slot_mem, &mut waits, &mut trace);
+            dispatch(
+                now,
+                &mut *pending,
+                &mut *pool,
+                &mut *q,
+                slot_mem.as_mut_slice(),
+                &mut waits,
+                &mut *trace,
+            );
         }
 
         let processors = cluster.total_cores();
+        let events = q.popped();
         RunResult {
             scheduler: "IdealFIFO".into(),
             workload: workload.label.clone(),
@@ -86,10 +105,10 @@ impl Scheduler for IdealFifo {
             processors,
             t_total: makespan,
             t_job: workload.t_job_per_proc(processors),
-            events: q.popped(),
+            events,
             daemon_busy: 0.0,
             waits,
-            trace: options.collect_trace.then_some(trace),
+            trace: options.collect_trace.then(|| std::mem::take(trace)),
         }
     }
 }

@@ -18,12 +18,11 @@
 
 use super::result::{RunOptions, RunResult};
 use super::Scheduler;
-use crate::cluster::{ClusterSpec, SlotPool};
-use crate::sim::{EventQueue, ServiceStation};
+use crate::cluster::ClusterSpec;
+use crate::sim::{ServiceStation, SimEv, SimScratch};
 use crate::util::prng::{LognormalGen, Prng};
 use crate::util::stats::Summary;
 use crate::workload::{TraceRecord, Workload};
-use std::collections::VecDeque;
 
 /// Mechanism parameters for the Mesos-like model.
 #[derive(Clone, Debug)]
@@ -70,30 +69,18 @@ impl MesosSim {
     }
 }
 
-enum Ev {
-    /// A task's submission reaches the framework.
-    Arrive { task: u32 },
-    /// Allocator round: offer free resources to the framework.
-    OfferRound,
-    /// Task starts executing (executor up).
-    Start { task: u32, slot: u32 },
-    /// Task finished.
-    End { task: u32, slot: u32 },
-    /// Slot resources back in the allocator's pool.
-    SlotFree { slot: u32 },
-}
-
 impl Scheduler for MesosSim {
     fn name(&self) -> &'static str {
         self.params.name
     }
 
-    fn run(
+    fn run_with_scratch(
         &self,
         workload: &Workload,
         cluster: &ClusterSpec,
         seed: u64,
         options: &RunOptions,
+        scratch: &mut SimScratch,
     ) -> RunResult {
         let p = &self.params;
         let mut rng = Prng::new(seed ^ 0x4E50_05E5);
@@ -102,40 +89,40 @@ impl Scheduler for MesosSim {
         let g_launch = LognormalGen::new(p.launch_cost_per_task, p.jitter_cv);
         let g_complete = LognormalGen::new(p.complete_cost_per_task, p.jitter_cv);
         let g_exec = LognormalGen::new(p.executor_startup_mean, p.executor_startup_cv);
-        let mut q: EventQueue<Ev> = EventQueue::new();
-        let mut pool = SlotPool::new(cluster);
-        let mut master = ServiceStation::new();
         let n = workload.len();
+        scratch.begin(cluster, n, options.collect_trace);
+        let SimScratch {
+            queue: q,
+            pending,
+            pool,
+            slot_mem,
+            trace,
+            trace_idx,
+            ..
+        } = scratch;
+        let mut master = ServiceStation::new();
 
-        let mut pending: VecDeque<u32> = VecDeque::new();
         for t in &workload.tasks {
             if t.submit_at <= 0.0 && !options.individual_submission {
                 pending.push_back(t.id);
             } else {
-                q.push(t.submit_at.max(0.0), Ev::Arrive { task: t.id });
+                q.push(t.submit_at.max(0.0), SimEv::Arrive { task: t.id });
             }
         }
-        let mut slot_mem: Vec<i64> = vec![0; pool.capacity()];
         let mut makespan: f64 = 0.0;
         let mut completed = 0usize;
         let mut waits = Summary::new();
-        let mut trace: Vec<TraceRecord> = Vec::new();
-        let mut trace_idx: Vec<u32> = if options.collect_trace {
-            vec![u32::MAX; n]
-        } else {
-            Vec::new()
-        };
 
         // Framework registration; first offer round follows.
-        q.push(p.framework_latency, Ev::OfferRound);
+        q.push(p.framework_latency, SimEv::Tick);
 
         while let Some((now, ev)) = q.pop() {
             match ev {
-                Ev::Arrive { task } => {
+                SimEv::Arrive { task } => {
                     master.serve(now, rng.lognormal(&g_launch));
                     pending.push_back(task);
                 }
-                Ev::OfferRound => {
+                SimEv::Tick => {
                     if pool.free_count() > 0 && !pending.is_empty() {
                         // One offer batch covering all currently-free agents.
                         let t_off = master.serve(now, rng.lognormal(&g_offer));
@@ -152,14 +139,14 @@ impl Scheduler for MesosSim {
                             slot_mem[slot as usize] = task.mem_mb;
                             let fin = master.serve(respond_at, rng.lognormal(&g_launch));
                             let exec = rng.lognormal(&g_exec);
-                            q.push(fin + p.rpc + exec, Ev::Start { task: task_id, slot });
+                            q.push(fin + p.rpc + exec, SimEv::Start { task: task_id, slot });
                         }
                     }
                     if completed < n {
-                        q.push(now + p.offer_interval, Ev::OfferRound);
+                        q.push(now + p.offer_interval, SimEv::Tick);
                     }
                 }
-                Ev::Start { task, slot } => {
+                SimEv::Start { task, slot } => {
                     let spec = &workload.tasks[task as usize];
                     waits.add(now - spec.submit_at);
                     if options.collect_trace {
@@ -173,25 +160,27 @@ impl Scheduler for MesosSim {
                             end: 0.0,
                         });
                     }
-                    q.push(now + spec.duration, Ev::End { task, slot });
+                    q.push(now + spec.duration, SimEv::End { task, slot });
                 }
-                Ev::End { task, slot } => {
+                SimEv::End { task, slot } => {
                     completed += 1;
                     makespan = makespan.max(now);
                     if options.collect_trace {
                         trace[trace_idx[task as usize] as usize].end = now;
                     }
                     let fin = master.serve(now, rng.lognormal(&g_complete));
-                    q.push(fin + p.agent_teardown, Ev::SlotFree { slot });
+                    q.push(fin + p.agent_teardown, SimEv::SlotFree { slot });
                 }
-                Ev::SlotFree { slot } => {
+                SimEv::SlotFree { slot } => {
                     pool.release(slot, slot_mem[slot as usize]);
                 }
+                SimEv::Stage { .. } => unreachable!("mesos sim emits no Stage events"),
             }
         }
 
         debug_assert_eq!(completed, n);
         let processors = cluster.total_cores();
+        let events = q.popped();
         RunResult {
             scheduler: p.name.to_string(),
             workload: workload.label.clone(),
@@ -199,10 +188,10 @@ impl Scheduler for MesosSim {
             processors,
             t_total: makespan,
             t_job: workload.t_job_per_proc(processors),
-            events: q.popped(),
+            events,
             daemon_busy: master.busy(),
             waits,
-            trace: options.collect_trace.then_some(trace),
+            trace: options.collect_trace.then(|| std::mem::take(trace)),
         }
     }
 

@@ -34,6 +34,7 @@ pub use result::{RunOptions, RunResult};
 
 use crate::cluster::ClusterSpec;
 use crate::config::SchedulerChoice;
+pub use crate::sim::SimScratch;
 use crate::workload::Workload;
 
 /// A scheduler simulator: runs a workload on a cluster in virtual time.
@@ -41,14 +42,30 @@ pub trait Scheduler: Send + Sync {
     /// Display name ("Slurm", "Mesos", ...).
     fn name(&self) -> &'static str;
 
-    /// Simulate one trial. `seed` controls all stochastic jitter; equal
-    /// seeds give bit-identical results.
+    /// Simulate one trial with a fresh [`SimScratch`] (allocating).
+    /// `seed` controls all stochastic jitter; equal seeds give
+    /// bit-identical results.
     fn run(
         &self,
         workload: &Workload,
         cluster: &ClusterSpec,
         seed: u64,
         options: &RunOptions,
+    ) -> RunResult {
+        self.run_with_scratch(workload, cluster, seed, options, &mut SimScratch::new())
+    }
+
+    /// Simulate one trial reusing `scratch`'s warm buffers (the
+    /// zero-allocation path for sweeps). The result is bit-identical to
+    /// [`Scheduler::run`] regardless of what the scratch previously
+    /// executed.
+    fn run_with_scratch(
+        &self,
+        workload: &Workload,
+        cluster: &ClusterSpec,
+        seed: u64,
+        options: &RunOptions,
+        scratch: &mut SimScratch,
     ) -> RunResult;
 
     /// Rough lower-bound estimate of the simulated makespan (virtual

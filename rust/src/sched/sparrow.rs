@@ -14,7 +14,8 @@
 
 use super::result::{RunOptions, RunResult};
 use super::Scheduler;
-use crate::cluster::{ClusterSpec, SlotPool};
+use crate::cluster::ClusterSpec;
+use crate::sim::SimScratch;
 use crate::util::prng::Prng;
 use crate::util::stats::Summary;
 use crate::workload::{TraceRecord, Workload};
@@ -63,24 +64,30 @@ impl Scheduler for SparrowSim {
         self.params.name
     }
 
-    fn run(
+    fn run_with_scratch(
         &self,
         workload: &Workload,
         cluster: &ClusterSpec,
         seed: u64,
         options: &RunOptions,
+        scratch: &mut SimScratch,
     ) -> RunResult {
         let p = &self.params;
         let mut rng = Prng::new(seed ^ 0x5BA2_2063);
-        let pool = SlotPool::new(cluster); // for slot->node mapping
+        scratch.begin(cluster, workload.len(), options.collect_trace);
+        let SimScratch {
+            pool,
+            busy_until,
+            trace,
+            ..
+        } = scratch;
         let slots = pool.capacity();
         assert!(slots > 0, "empty cluster");
 
         // Per-slot local queues: we only need the backlog (busy-until)
         // per slot — tasks placed by least-backlog-of-d-probes run FIFO.
-        let mut busy_until = vec![0.0f64; slots];
+        busy_until.resize(slots, 0.0f64);
         let mut waits = Summary::new();
-        let mut trace: Vec<TraceRecord> = Vec::new();
         let mut makespan = 0.0f64;
 
         for task in &workload.tasks {
@@ -122,7 +129,7 @@ impl Scheduler for SparrowSim {
             events: workload.len() as u64,
             daemon_busy: 0.0, // no central daemon — the point
             waits,
-            trace: options.collect_trace.then_some(trace),
+            trace: options.collect_trace.then(|| std::mem::take(trace)),
         }
     }
 }
@@ -195,5 +202,21 @@ mod tests {
         let a = sim.run(&w, &cluster(), 7, &RunOptions::default());
         let b = sim.run(&w, &cluster(), 7, &RunOptions::default());
         assert_eq!(a.t_total, b.t_total);
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_identical() {
+        let sim = SparrowSim::new(SparrowParams::default());
+        let w1 = WorkloadBuilder::constant(2.0).tasks(100).build();
+        let w2 = WorkloadBuilder::constant(1.0).tasks(40).build();
+        let mut scratch = SimScratch::new();
+        sim.run_with_scratch(&w1, &cluster(), 3, &RunOptions::with_trace(), &mut scratch);
+        for (w, seed) in [(&w1, 7u64), (&w2, 8)] {
+            let warm =
+                sim.run_with_scratch(w, &cluster(), seed, &RunOptions::with_trace(), &mut scratch);
+            let fresh = sim.run(w, &cluster(), seed, &RunOptions::with_trace());
+            assert_eq!(warm.t_total.to_bits(), fresh.t_total.to_bits());
+            assert_eq!(warm.trace.as_ref().unwrap(), fresh.trace.as_ref().unwrap());
+        }
     }
 }

@@ -20,12 +20,11 @@
 
 use super::result::{RunOptions, RunResult};
 use super::Scheduler;
-use crate::cluster::{ClusterSpec, SlotPool};
-use crate::sim::{EventQueue, ServiceStation};
+use crate::cluster::ClusterSpec;
+use crate::sim::{ServiceStation, SimEv, SimScratch};
 use crate::util::prng::{LognormalGen, Prng};
 use crate::util::stats::Summary;
 use crate::workload::{TraceRecord, Workload};
-use std::collections::VecDeque;
 
 /// Mechanism parameters for the YARN-like model.
 #[derive(Clone, Debug)]
@@ -71,32 +70,18 @@ impl YarnSim {
     }
 }
 
-enum Ev {
-    /// An application submission reaches the RM.
-    Arrive { task: u32 },
-    /// RM scheduling pass (aligned to NM heartbeats).
-    Heartbeat,
-    /// AM container is up; task container launches next.
-    AmReady { task: u32, slot: u32 },
-    /// Task container starts executing.
-    Start { task: u32, slot: u32 },
-    /// Task finished.
-    End { task: u32, slot: u32 },
-    /// Slot cleaned up and reusable.
-    SlotFree { slot: u32 },
-}
-
 impl Scheduler for YarnSim {
     fn name(&self) -> &'static str {
         self.params.name
     }
 
-    fn run(
+    fn run_with_scratch(
         &self,
         workload: &Workload,
         cluster: &ClusterSpec,
         seed: u64,
         options: &RunOptions,
+        scratch: &mut SimScratch,
     ) -> RunResult {
         let p = &self.params;
         let mut rng = Prng::new(seed ^ 0x7A42_4EAD);
@@ -104,39 +89,39 @@ impl Scheduler for YarnSim {
         let g_rm = LognormalGen::new(p.rm_cost_per_app, p.jitter_cv);
         let g_complete = LognormalGen::new(p.complete_cost_per_app, p.jitter_cv);
         let g_am = LognormalGen::new(p.am_startup_mean, p.am_startup_cv);
-        let mut q: EventQueue<Ev> = EventQueue::new();
-        let mut pool = SlotPool::new(cluster);
-        let mut rm = ServiceStation::new();
         let n = workload.len();
+        scratch.begin(cluster, n, options.collect_trace);
+        let SimScratch {
+            queue: q,
+            pending,
+            pool,
+            slot_mem,
+            trace,
+            trace_idx,
+            ..
+        } = scratch;
+        let mut rm = ServiceStation::new();
 
-        let mut pending: VecDeque<u32> = VecDeque::new();
         for t in &workload.tasks {
             if t.submit_at <= 0.0 && !options.individual_submission {
                 pending.push_back(t.id);
             } else {
-                q.push(t.submit_at.max(0.0), Ev::Arrive { task: t.id });
+                q.push(t.submit_at.max(0.0), SimEv::Arrive { task: t.id });
             }
         }
-        let mut slot_mem: Vec<i64> = vec![0; pool.capacity()];
         let mut makespan: f64 = 0.0;
         let mut completed = 0usize;
         let mut waits = Summary::new();
-        let mut trace: Vec<TraceRecord> = Vec::new();
-        let mut trace_idx: Vec<u32> = if options.collect_trace {
-            vec![u32::MAX; n]
-        } else {
-            Vec::new()
-        };
 
-        q.push(p.nm_heartbeat, Ev::Heartbeat);
+        q.push(p.nm_heartbeat, SimEv::Tick);
 
         while let Some((now, ev)) = q.pop() {
             match ev {
-                Ev::Arrive { task } => {
+                SimEv::Arrive { task } => {
                     rm.serve(now, rng.lognormal(&g_rm));
                     pending.push_back(task);
                 }
-                Ev::Heartbeat => {
+                SimEv::Tick => {
                     // Heartbeating NMs report free containers; RM grants
                     // AM containers for queued applications.
                     while !pending.is_empty() {
@@ -149,17 +134,18 @@ impl Scheduler for YarnSim {
                         slot_mem[slot as usize] = task.mem_mb;
                         let fin = rm.serve(now, rng.lognormal(&g_rm));
                         let am = rng.lognormal(&g_am);
-                        q.push(fin + p.rpc + am, Ev::AmReady { task: task_id, slot });
+                        q.push(fin + p.rpc + am, SimEv::Stage { task: task_id, slot });
                     }
                     if completed < n {
-                        q.push(now + p.nm_heartbeat, Ev::Heartbeat);
+                        q.push(now + p.nm_heartbeat, SimEv::Tick);
                     }
                 }
-                Ev::AmReady { task, slot } => {
-                    // AM asks for its task container; launch on same node.
-                    q.push(now + p.container_launch, Ev::Start { task, slot });
+                SimEv::Stage { task, slot } => {
+                    // AM is up; it asks for its task container, launched
+                    // on the same node.
+                    q.push(now + p.container_launch, SimEv::Start { task, slot });
                 }
-                Ev::Start { task, slot } => {
+                SimEv::Start { task, slot } => {
                     let spec = &workload.tasks[task as usize];
                     waits.add(now - spec.submit_at);
                     if options.collect_trace {
@@ -173,18 +159,18 @@ impl Scheduler for YarnSim {
                             end: 0.0,
                         });
                     }
-                    q.push(now + spec.duration, Ev::End { task, slot });
+                    q.push(now + spec.duration, SimEv::End { task, slot });
                 }
-                Ev::End { task, slot } => {
+                SimEv::End { task, slot } => {
                     completed += 1;
                     makespan = makespan.max(now);
                     if options.collect_trace {
                         trace[trace_idx[task as usize] as usize].end = now;
                     }
                     let fin = rm.serve(now, rng.lognormal(&g_complete));
-                    q.push(fin + p.teardown, Ev::SlotFree { slot });
+                    q.push(fin + p.teardown, SimEv::SlotFree { slot });
                 }
-                Ev::SlotFree { slot } => {
+                SimEv::SlotFree { slot } => {
                     pool.release(slot, slot_mem[slot as usize]);
                 }
             }
@@ -192,6 +178,7 @@ impl Scheduler for YarnSim {
 
         debug_assert_eq!(completed, n);
         let processors = cluster.total_cores();
+        let events = q.popped();
         RunResult {
             scheduler: p.name.to_string(),
             workload: workload.label.clone(),
@@ -199,10 +186,10 @@ impl Scheduler for YarnSim {
             processors,
             t_total: makespan,
             t_job: workload.t_job_per_proc(processors),
-            events: q.popped(),
+            events,
             daemon_busy: rm.busy(),
             waits,
-            trace: options.collect_trace.then_some(trace),
+            trace: options.collect_trace.then(|| std::mem::take(trace)),
         }
     }
 

@@ -122,6 +122,17 @@ impl<T> EventQueue<T> {
         self.push(now + delay, payload);
     }
 
+    /// Rewind to the empty t = 0 state while keeping the heap's backing
+    /// allocation — the zero-alloc path for running many trials through
+    /// one queue (see [`crate::sim::SimScratch`]). Behaviour after
+    /// `reset` is bit-identical to a freshly constructed queue.
+    pub fn reset(&mut self) {
+        self.heap.clear();
+        self.seq = 0;
+        self.now = 0.0;
+        self.popped = 0;
+    }
+
     /// Pop the earliest event, advancing the clock to its time.
     pub fn pop(&mut self) -> Option<(Time, T)> {
         let e = self.heap.pop()?;
@@ -188,6 +199,8 @@ impl ServiceStation {
 #[derive(Clone, Debug)]
 pub struct MultiServer {
     free_at: Vec<Time>,
+    busy_accum: Time,
+    served: u64,
 }
 
 impl MultiServer {
@@ -196,23 +209,90 @@ impl MultiServer {
         assert!(c > 0);
         Self {
             free_at: vec![0.0; c],
+            busy_accum: 0.0,
+            served: 0,
         }
     }
 
     /// Enqueue work arriving at `now` needing `service` seconds.
     pub fn serve(&mut self, now: Time, service: Time) -> Time {
+        debug_assert!(service >= 0.0, "negative service time");
         // Earliest-free server; linear scan is fine for the small pools
-        // we model (daemon thread counts, not cluster cores).
-        let (idx, _) = self
+        // we model (daemon thread counts, not cluster cores). total_cmp
+        // keeps the selection total even if a free-time ever goes NaN —
+        // partial_cmp().unwrap() here could panic mid-simulation.
+        let idx = self
             .free_at
             .iter()
             .enumerate()
-            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .unwrap();
+            .min_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .expect("MultiServer has at least one server");
         let start = now.max(self.free_at[idx]);
         self.free_at[idx] = start + service;
+        self.busy_accum += service;
+        self.served += 1;
         self.free_at[idx]
     }
+
+    /// Total busy seconds accumulated across all servers (same
+    /// accounting as [`ServiceStation::busy`]).
+    pub fn busy(&self) -> Time {
+        self.busy_accum
+    }
+
+    /// Number of items served.
+    pub fn served(&self) -> u64 {
+        self.served
+    }
+}
+
+/// Event payload shared by all scheduler simulators.
+///
+/// The seed gave each simulator its own private event enum, which made
+/// every `Scheduler::run` allocate a fresh `EventQueue<Ev>`; one
+/// concrete payload type lets [`crate::sim::SimScratch`] own a single
+/// reusable queue across backends and trials. Variants cover the union
+/// of the per-scheduler machines; each backend uses the subset it
+/// needs.
+#[derive(Clone, Copy, Debug)]
+pub enum SimEv {
+    /// A task's submission reaches the control plane (late arrival or
+    /// individual-job submission).
+    Arrive {
+        /// Task id.
+        task: u32,
+    },
+    /// Periodic control-plane pass: scheduling cycle (centralized),
+    /// allocator offer round (Mesos) or NodeManager heartbeat (YARN).
+    Tick,
+    /// Intermediate launch stage bound to a slot (YARN's
+    /// ApplicationMaster becoming ready).
+    Stage {
+        /// Task id.
+        task: u32,
+        /// Slot the task holds.
+        slot: u32,
+    },
+    /// Task begins executing on its slot.
+    Start {
+        /// Task id.
+        task: u32,
+        /// Slot the task holds.
+        slot: u32,
+    },
+    /// Task finished executing.
+    End {
+        /// Task id.
+        task: u32,
+        /// Slot the task holds.
+        slot: u32,
+    },
+    /// Slot finished teardown and is reusable.
+    SlotFree {
+        /// Freed slot.
+        slot: u32,
+    },
 }
 
 #[cfg(test)]
@@ -296,5 +376,38 @@ mod tests {
         assert_eq!(m.serve(0.0, 4.0), 4.0);
         assert_eq!(m.serve(0.0, 4.0), 4.0); // second server
         assert_eq!(m.serve(0.0, 1.0), 5.0); // queues on earliest-free
+    }
+
+    #[test]
+    fn multiserver_accounting_matches_station() {
+        let mut m = MultiServer::new(2);
+        m.serve(0.0, 4.0);
+        m.serve(0.0, 4.0);
+        m.serve(0.0, 1.0);
+        assert_eq!(m.busy(), 9.0);
+        assert_eq!(m.served(), 3);
+        // Single-server pool degenerates to a ServiceStation.
+        let mut one = MultiServer::new(1);
+        let mut st = ServiceStation::new();
+        for (now, svc) in [(0.0, 2.0), (1.0, 3.0), (10.0, 0.5)] {
+            assert_eq!(one.serve(now, svc), st.serve(now, svc));
+        }
+        assert_eq!(one.busy(), st.busy());
+        assert_eq!(one.served(), st.served());
+    }
+
+    #[test]
+    fn reset_queue_behaves_like_fresh() {
+        let mut q = EventQueue::new();
+        q.push(3.0, 1u32);
+        q.push(7.0, 2);
+        q.pop();
+        q.reset();
+        assert_eq!(q.now(), 0.0);
+        assert_eq!(q.popped(), 0);
+        assert!(q.is_empty());
+        // Past-time pushes are legal again after reset.
+        q.push(1.0, 9);
+        assert_eq!(q.pop(), Some((1.0, 9)));
     }
 }

@@ -4,9 +4,12 @@
 //! cluster and the scheduler control plane are simulated in virtual time
 //! (see DESIGN.md §2 for why the substitution preserves the measured
 //! behaviour). This module provides the generic machinery: a
-//! deterministic event queue, a virtual clock and serial service
-//! stations (the scheduler daemon is one).
+//! deterministic event queue, a virtual clock, serial service stations
+//! (the scheduler daemon is one), and [`SimScratch`] — the reusable
+//! buffer set that makes repeated trials allocation-free.
 
 mod engine;
+mod scratch;
 
-pub use engine::{EventQueue, MultiServer, ServiceStation, Time};
+pub use engine::{EventQueue, MultiServer, ServiceStation, SimEv, Time};
+pub use scratch::SimScratch;

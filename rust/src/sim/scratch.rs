@@ -1,0 +1,127 @@
+//! Reusable per-worker simulation buffers — the zero-allocation core.
+//!
+//! Every `Scheduler::run` in the seed allocated its event-queue heap,
+//! pending queue, slot pool, trace buffers and per-slot memory table
+//! from scratch, once per trial. A sweep runs hundreds of trials, so
+//! the allocator churn (and the cold pages behind it) sat directly on
+//! the hot path. [`SimScratch`] owns all of those buffers; a worker
+//! thread creates one and threads it through
+//! [`crate::sched::Scheduler::run_with_scratch`] for every cell it
+//! executes, so repeated trials reuse warm, already-sized allocations.
+//!
+//! Correctness contract: [`SimScratch::begin`] rewinds every buffer to
+//! the state a fresh allocation would have, so a run through a reused
+//! scratch is bit-identical to a run through a new one. The
+//! `parallel_determinism` integration test pins this down.
+
+use super::engine::{EventQueue, SimEv};
+use crate::cluster::{ClusterSpec, SlotPool};
+use crate::workload::TraceRecord;
+use std::collections::VecDeque;
+
+/// Warm buffers for one simulation worker.
+pub struct SimScratch {
+    /// Shared event queue (all simulators use the [`SimEv`] payload).
+    pub queue: EventQueue<SimEv>,
+    /// Pending-task FIFO (task ids).
+    pub pending: VecDeque<u32>,
+    /// Core-slot pool, rebuilt in place per run via [`SlotPool::reinit`].
+    pub pool: SlotPool,
+    /// Memory (MB) held by each slot's current task.
+    pub slot_mem: Vec<i64>,
+    /// Per-task trace records (only filled when the run collects traces).
+    pub trace: Vec<TraceRecord>,
+    /// task id -> index into `trace` (`u32::MAX` = not yet started).
+    pub trace_idx: Vec<u32>,
+    /// Per-slot busy-until times (Sparrow's worker backlogs).
+    pub busy_until: Vec<f64>,
+    /// Pending job order (batch-queue simulator).
+    pub job_order: Vec<u32>,
+    /// Running set `(end_time, cores, job index)` (batch-queue simulator).
+    pub running: Vec<(f64, u32, u32)>,
+}
+
+impl SimScratch {
+    /// Empty scratch; buffers grow on first use and stay warm after.
+    pub fn new() -> Self {
+        Self {
+            queue: EventQueue::new(),
+            pending: VecDeque::new(),
+            pool: SlotPool::empty(),
+            slot_mem: Vec::new(),
+            trace: Vec::new(),
+            trace_idx: Vec::new(),
+            busy_until: Vec::new(),
+            job_order: Vec::new(),
+            running: Vec::new(),
+        }
+    }
+
+    /// Rewind every buffer for a run of `n_tasks` tasks on `cluster`.
+    /// After this call the scratch is indistinguishable from freshly
+    /// allocated state (modulo retained capacity).
+    pub fn begin(&mut self, cluster: &ClusterSpec, n_tasks: usize, collect_trace: bool) {
+        self.queue.reset();
+        self.pending.clear();
+        self.pool.reinit(cluster);
+        self.slot_mem.clear();
+        self.slot_mem.resize(self.pool.capacity(), 0);
+        self.trace.clear();
+        self.trace_idx.clear();
+        self.busy_until.clear();
+        self.job_order.clear();
+        self.running.clear();
+        if collect_trace {
+            self.trace.reserve(n_tasks);
+            self.trace_idx.resize(n_tasks, u32::MAX);
+        }
+    }
+
+}
+
+impl Default for SimScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn begin_rewinds_everything() {
+        let cluster = ClusterSpec::homogeneous(2, 4, 1024, 2);
+        let mut s = SimScratch::new();
+        s.begin(&cluster, 10, true);
+        // Dirty every buffer.
+        s.queue.push(1.0, SimEv::Tick);
+        s.pending.push_back(3);
+        s.pool.alloc(100).unwrap();
+        s.slot_mem[0] = 7;
+        s.trace_idx[0] = 5;
+        s.busy_until.push(9.0);
+        s.job_order.push(1);
+        s.running.push((1.0, 2, 3));
+        s.begin(&cluster, 4, true);
+        assert!(s.queue.is_empty());
+        assert_eq!(s.queue.now(), 0.0);
+        assert!(s.pending.is_empty());
+        assert_eq!(s.pool.busy_count(), 0);
+        assert_eq!(s.slot_mem, vec![0; 8]);
+        assert!(s.trace.is_empty());
+        assert_eq!(s.trace_idx, vec![u32::MAX; 4]);
+        assert!(s.busy_until.is_empty());
+        assert!(s.job_order.is_empty());
+        assert!(s.running.is_empty());
+    }
+
+    #[test]
+    fn trace_buffers_skipped_when_untraced() {
+        let cluster = ClusterSpec::homogeneous(1, 2, 1024, 1);
+        let mut s = SimScratch::new();
+        s.begin(&cluster, 1000, false);
+        assert!(s.trace_idx.is_empty());
+        assert!(s.trace.is_empty());
+    }
+}

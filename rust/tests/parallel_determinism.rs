@@ -1,0 +1,151 @@
+//! Parallel-executor determinism: a fig4-style sweep run with `jobs=1`
+//! and `jobs=4` must produce bit-identical `RunResult`s per cell
+//! (t_total, events, daemon_busy, waits), and scratch reuse must be
+//! observationally identical to fresh allocation.
+
+use sssched::config::{ExperimentConfig, SchedulerChoice};
+use sssched::harness::{run_sweeps, SchedulerSweep, SweepSpec};
+use sssched::multilevel::MultilevelParams;
+
+fn cfg_with_jobs(jobs: u32) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.scale_down = 11; // 4 nodes × 32 = 128 cores — fast in CI
+    cfg.trials = 2;
+    cfg.jobs = jobs;
+    cfg
+}
+
+fn assert_sweeps_bit_identical(a: &[SchedulerSweep], b: &[SchedulerSweep]) {
+    assert_eq!(a.len(), b.len());
+    for (sa, sb) in a.iter().zip(b) {
+        assert_eq!(sa.scheduler, sb.scheduler);
+        assert_eq!(sa.skipped, sb.skipped, "{}: skipped set", sa.scheduler);
+        assert_eq!(sa.points.len(), sb.points.len(), "{}", sa.scheduler);
+        for (pa, pb) in sa.points.iter().zip(&sb.points) {
+            assert_eq!(pa.n, pb.n);
+            assert_eq!(pa.trials.len(), pb.trials.len());
+            for (trial, (ra, rb)) in pa.trials.iter().zip(&pb.trials).enumerate() {
+                let ctx = format!("{} n={} trial={trial}", sa.scheduler, pa.n);
+                assert_eq!(ra.n_tasks, rb.n_tasks, "{ctx}: n_tasks");
+                assert_eq!(
+                    ra.t_total.to_bits(),
+                    rb.t_total.to_bits(),
+                    "{ctx}: t_total {} vs {}",
+                    ra.t_total,
+                    rb.t_total
+                );
+                assert_eq!(ra.events, rb.events, "{ctx}: events");
+                assert_eq!(
+                    ra.daemon_busy.to_bits(),
+                    rb.daemon_busy.to_bits(),
+                    "{ctx}: daemon_busy"
+                );
+                assert_eq!(ra.waits.count(), rb.waits.count(), "{ctx}: wait count");
+                assert_eq!(
+                    ra.waits.mean().to_bits(),
+                    rb.waits.mean().to_bits(),
+                    "{ctx}: wait mean"
+                );
+                assert_eq!(
+                    ra.waits.min().to_bits(),
+                    rb.waits.min().to_bits(),
+                    "{ctx}: wait min"
+                );
+                assert_eq!(
+                    ra.waits.max().to_bits(),
+                    rb.waits.max().to_bits(),
+                    "{ctx}: wait max"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fig4_sweep_bit_identical_jobs_1_vs_4() {
+    let n_values = [4u32, 8, 16, 48];
+    let specs: Vec<SweepSpec> = SchedulerChoice::paper_four()
+        .iter()
+        .map(|&c| (c, None))
+        .collect();
+    let serial = run_sweeps(&specs, &cfg_with_jobs(1), &n_values);
+    let parallel = run_sweeps(&specs, &cfg_with_jobs(4), &n_values);
+    assert_sweeps_bit_identical(&serial, &parallel);
+    // Sanity: the sweep actually simulated something.
+    assert!(serial
+        .iter()
+        .any(|s| s.points.iter().any(|p| !p.trials.is_empty())));
+}
+
+#[test]
+fn multilevel_sweep_bit_identical_jobs_1_vs_4() {
+    let ml = MultilevelParams::default();
+    let n_values = [8u32, 48, 240];
+    let specs: Vec<SweepSpec> = vec![
+        (SchedulerChoice::Slurm, None),
+        (SchedulerChoice::Slurm, Some(&ml)),
+        (SchedulerChoice::Mesos, Some(&ml)),
+    ];
+    let serial = run_sweeps(&specs, &cfg_with_jobs(1), &n_values);
+    let parallel = run_sweeps(&specs, &cfg_with_jobs(4), &n_values);
+    assert_sweeps_bit_identical(&serial, &parallel);
+}
+
+#[test]
+fn oversubscribed_jobs_still_identical() {
+    // More workers than cells: executor must not duplicate or drop.
+    let n_values = [4u32, 8];
+    let specs: Vec<SweepSpec> = vec![(SchedulerChoice::GridEngine, None)];
+    let mut cfg = cfg_with_jobs(1);
+    cfg.trials = 1;
+    let serial = run_sweeps(&specs, &cfg, &n_values);
+    cfg.jobs = 16;
+    let wide = run_sweeps(&specs, &cfg, &n_values);
+    assert_sweeps_bit_identical(&serial, &wide);
+}
+
+#[test]
+fn scratch_reuse_matches_fresh_runs_across_backends() {
+    use sssched::cluster::ClusterSpec;
+    use sssched::sched::{make_scheduler, RunOptions, SimScratch};
+    use sssched::workload::WorkloadBuilder;
+
+    let cluster = ClusterSpec::homogeneous(2, 8, 32 * 1024, 2);
+    let w_small = WorkloadBuilder::constant(2.0).tasks(48).build();
+    let w_big = WorkloadBuilder::constant(1.0).tasks(200).build();
+    let mut scratch = SimScratch::new();
+    for choice in [
+        SchedulerChoice::Slurm,
+        SchedulerChoice::GridEngine,
+        SchedulerChoice::Mesos,
+        SchedulerChoice::Yarn,
+        SchedulerChoice::IdealFifo,
+    ] {
+        let sched = make_scheduler(choice);
+        // Interleave workload sizes so each reuse shrinks or grows the
+        // buffers — the cases where stale state would show.
+        for (w, seed) in [(&w_big, 11u64), (&w_small, 12), (&w_big, 13)] {
+            let warm = sched.run_with_scratch(
+                w,
+                &cluster,
+                seed,
+                &RunOptions::with_trace(),
+                &mut scratch,
+            );
+            let fresh = sched.run(w, &cluster, seed, &RunOptions::with_trace());
+            assert_eq!(
+                warm.t_total.to_bits(),
+                fresh.t_total.to_bits(),
+                "{}: t_total",
+                sched.name()
+            );
+            assert_eq!(warm.events, fresh.events, "{}: events", sched.name());
+            assert_eq!(
+                warm.trace.as_ref().unwrap(),
+                fresh.trace.as_ref().unwrap(),
+                "{}: trace",
+                sched.name()
+            );
+        }
+    }
+}
