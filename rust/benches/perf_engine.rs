@@ -16,7 +16,7 @@ use sssched::cluster::ClusterSpec;
 use sssched::config::{ExperimentConfig, SchedulerChoice};
 use sssched::exec::{RealtimeCoordinator, RealtimeParams, RtTask, RtWork};
 use sssched::harness::{run_sweeps, SchedulerSweep, SweepSpec};
-use sssched::sched::{make_scheduler, RunOptions};
+use sssched::sched::{make_scheduler, RunOptions, SimScratch};
 use sssched::sim::EventQueue;
 use std::time::Instant;
 
@@ -136,6 +136,41 @@ fn main() {
         sim_rates.push((sched.name().to_string(), rate));
     }
 
+    // ---- 2b. Kernel-loop events/s on the warm-scratch path.
+    //
+    // Since the unified-kernel refactor every backend runs its events
+    // through `sim::Kernel` + `SchedPolicy` hooks; this isolates the
+    // steady-state loop (repeated trials, reused scratch) so the
+    // BENCH_perf.json trajectory tracks that the policy indirection
+    // stays within noise (<5%) of the pre-refactor per-backend loops
+    // (compare `kernel_warm_mevents_per_s` across commits).
+    let kernel_warm_rate = {
+        let sched = make_scheduler(SchedulerChoice::Slurm);
+        let w = sssched::workload::WorkloadBuilder::constant(5.0)
+            .tasks(24 * cluster.total_cores())
+            .label("kernel-bench")
+            .build();
+        let mut scratch = SimScratch::new();
+        // Warm-up run sizes every buffer.
+        let warm = sched.run_with_scratch(&w, &cluster, 0, &RunOptions::default(), &mut scratch);
+        let iters = if quick { 3u64 } else { 8 };
+        let t0 = Instant::now();
+        let mut events = 0u64;
+        for i in 0..iters {
+            let r =
+                sched.run_with_scratch(&w, &cluster, i + 1, &RunOptions::default(), &mut scratch);
+            events += r.events;
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let rate = events as f64 / dt / 1e6;
+        println!(
+            "kernel loop (warm scratch): {events} events over {iters} trials in {dt:.3}s \
+             = {rate:.2}M events/s (warm-up run: {} events)",
+            warm.events
+        );
+        rate
+    };
+
     // ---- 3. Realtime dispatch rate (zero-work tasks).
     let coord = RealtimeCoordinator::new(RealtimeParams {
         workers: 2,
@@ -242,6 +277,7 @@ fn main() {
          \x20 \"quick\": {quick},\n\
          \x20 \"available_cores\": {cores},\n\
          \x20 \"event_queue_mops\": {queue_mops:.4},\n\
+         \x20 \"kernel_warm_mevents_per_s\": {kernel_warm_rate:.4},\n\
          \x20 \"sims\": [\n{sims}\n  ],\n\
          \x20 \"realtime_dispatch_per_s\": {dispatch_rate:.1},\n\
          \x20 \"powerlaw_fit_ms_per_call\": {fit_ms},\n\

@@ -1,8 +1,18 @@
 //! Hand-rolled CLI argument parsing (clap is not in the offline crate
 //! set). Flags are `--name value` or `--name` (boolean); the first
 //! non-flag token is the subcommand.
+//!
+//! Boolean flags are declared in [`BOOL_FLAGS`]: a known-boolean flag
+//! never consumes the following token as its value, so
+//! `sssched experiment --quick fig4` parses `fig4` as the positional it
+//! is instead of as the value of `--quick` (the historical bug this
+//! set fixes). Unknown `--flag token` pairs still bind greedily, which
+//! keeps forward compatibility for new valued options.
 
 use std::collections::BTreeMap;
+
+/// Flags the CLI treats as boolean: they never take a value.
+pub const BOOL_FLAGS: &[&str] = &["quick", "csv", "full"];
 
 /// Parsed command line.
 #[derive(Clone, Debug, Default)]
@@ -18,8 +28,17 @@ pub struct Args {
 }
 
 impl Args {
-    /// Parse from an iterator of tokens (excluding `argv[0]`).
+    /// Parse from an iterator of tokens (excluding `argv[0]`), with the
+    /// default [`BOOL_FLAGS`] set.
     pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args, String> {
+        Self::parse_with_bools(args, BOOL_FLAGS)
+    }
+
+    /// Parse with an explicit set of known-boolean flag names.
+    pub fn parse_with_bools<I: IntoIterator<Item = String>>(
+        args: I,
+        bool_flags: &[&str],
+    ) -> Result<Args, String> {
         let mut out = Args::default();
         let mut iter = args.into_iter().peekable();
         while let Some(tok) = iter.next() {
@@ -29,12 +48,14 @@ impl Args {
                 }
                 if let Some((k, v)) = name.split_once('=') {
                     out.options.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&name) {
+                    out.flags.push(name.to_string());
                 } else if iter
                     .peek()
                     .map(|nxt| !nxt.starts_with("--"))
                     .unwrap_or(false)
                 {
-                    let v = iter.next().unwrap();
+                    let v = iter.next().expect("peeked value exists");
                     out.options.insert(name.to_string(), v);
                 } else {
                     out.flags.push(name.to_string());
@@ -106,5 +127,46 @@ mod tests {
         let a = parse("cmd --quick --n 3");
         assert!(a.flag("quick"));
         assert_eq!(a.opt("n"), Some("3"));
+    }
+
+    #[test]
+    fn boolean_flag_does_not_swallow_positional() {
+        // Regression: `--quick fig4` used to parse as quick=fig4,
+        // losing the positional entirely.
+        let a = parse("experiment --quick fig4");
+        assert_eq!(a.command.as_deref(), Some("experiment"));
+        assert!(a.flag("quick"));
+        assert_eq!(a.positionals, vec!["fig4"]);
+        assert_eq!(a.opt("quick"), None);
+
+        // Even as the first token, the subcommand survives.
+        let a = parse("--quick validate");
+        assert!(a.flag("quick"));
+        assert_eq!(a.command.as_deref(), Some("validate"));
+    }
+
+    #[test]
+    fn boolean_flag_equals_form_still_binds() {
+        let a = parse("cmd --quick=yes run");
+        assert_eq!(a.opt("quick"), Some("yes"));
+        assert_eq!(a.positionals, vec!["run"]);
+    }
+
+    #[test]
+    fn unknown_flags_still_bind_values() {
+        let a = parse("cmd --workers 4 next");
+        assert_eq!(a.opt("workers"), Some("4"));
+        assert_eq!(a.positionals, vec!["next"]);
+    }
+
+    #[test]
+    fn custom_bool_set() {
+        let a = Args::parse_with_bools(
+            "cmd --verbose run".split_whitespace().map(String::from),
+            &["verbose"],
+        )
+        .unwrap();
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positionals, vec!["run"]);
     }
 }

@@ -15,6 +15,8 @@ pub enum SchedulerChoice {
     Mesos,
     /// Hadoop-YARN-like AM-per-job scheduler (open-source big data).
     Yarn,
+    /// Sparrow-like decentralized two-choices scheduler (research).
+    Sparrow,
     /// Idealized zero-overhead FIFO baseline (testing reference).
     IdealFifo,
 }
@@ -27,6 +29,7 @@ impl SchedulerChoice {
             "gridengine" | "ge" | "sge" => Ok(Self::GridEngine),
             "mesos" => Ok(Self::Mesos),
             "yarn" | "hadoop-yarn" | "hadoopyarn" => Ok(Self::Yarn),
+            "sparrow" => Ok(Self::Sparrow),
             "ideal" | "fifo" | "ideal-fifo" => Ok(Self::IdealFifo),
             other => Err(format!("unknown scheduler `{other}`")),
         }
@@ -39,6 +42,7 @@ impl SchedulerChoice {
             Self::GridEngine => "GridEngine",
             Self::Mesos => "Mesos",
             Self::Yarn => "Hadoop YARN",
+            Self::Sparrow => "Sparrow",
             Self::IdealFifo => "IdealFIFO",
         }
     }
@@ -46,6 +50,20 @@ impl SchedulerChoice {
     /// The paper's four measured schedulers.
     pub fn paper_four() -> [Self; 4] {
         [Self::Slurm, Self::GridEngine, Self::Mesos, Self::Yarn]
+    }
+
+    /// Every simulated scheduler family (the `scenarios` experiment's
+    /// default set: the paper's four plus the research-family Sparrow
+    /// and the zero-overhead reference).
+    pub fn all_simulated() -> [Self; 6] {
+        [
+            Self::Slurm,
+            Self::GridEngine,
+            Self::Mesos,
+            Self::Yarn,
+            Self::Sparrow,
+            Self::IdealFifo,
+        ]
     }
 }
 
@@ -77,6 +95,13 @@ pub struct ExperimentConfig {
     /// `std::thread::available_parallelism()`; results are bit-identical
     /// for every value (see `harness::parallel`).
     pub jobs: u32,
+    /// Tasks per processor for the `scenarios` experiment (each
+    /// scenario workload carries `scenario_n × P` tasks of
+    /// `240 / scenario_n` seconds, the Table 9 per-processor work).
+    pub scenario_n: u32,
+    /// Offered load ρ for the `scenarios` Poisson-arrival workload
+    /// (arrival rate = ρ·P / task time).
+    pub arrival_rho: f64,
 }
 
 impl Default for ExperimentConfig {
@@ -92,6 +117,8 @@ impl Default for ExperimentConfig {
             out_dir: "out".into(),
             scale_down: 1,
             jobs: crate::harness::default_jobs() as u32,
+            scenario_n: 8,
+            arrival_rho: 0.7,
         }
     }
 }
@@ -126,6 +153,10 @@ impl ExperimentConfig {
                 }
                 "experiment.scale_down" => cfg.scale_down = get_u32(value, key)?,
                 "experiment.jobs" => cfg.jobs = get_u32(value, key)?,
+                "experiment.scenario_n" => cfg.scenario_n = get_u32(value, key)?,
+                "experiment.arrival_rho" => {
+                    cfg.arrival_rho = value.as_f64().ok_or_else(|| bad(key))?
+                }
                 "experiment.out_dir" => {
                     cfg.out_dir = value.as_str().ok_or_else(|| bad(key))?.to_string()
                 }
@@ -188,6 +219,12 @@ impl ExperimentConfig {
         }
         if self.jobs == 0 {
             return Err("jobs must be >= 1".into());
+        }
+        if self.scenario_n == 0 {
+            return Err("scenario_n must be >= 1".into());
+        }
+        if !(self.arrival_rho.is_finite() && self.arrival_rho > 0.0 && self.arrival_rho < 1.0) {
+            return Err("arrival_rho must be in (0, 1)".into());
         }
         Ok(())
     }
@@ -273,6 +310,22 @@ n_sweep = [4, 240]
             SchedulerChoice::GridEngine
         );
         assert_eq!(SchedulerChoice::parse("YARN").unwrap(), SchedulerChoice::Yarn);
+        assert_eq!(
+            SchedulerChoice::parse("Sparrow").unwrap(),
+            SchedulerChoice::Sparrow
+        );
         assert!(SchedulerChoice::parse("pbs").is_err());
+    }
+
+    #[test]
+    fn scenario_keys_parse_and_validate() {
+        let c = ExperimentConfig::from_toml(
+            "[experiment]\nscenario_n = 16\narrival_rho = 0.5",
+        )
+        .unwrap();
+        assert_eq!(c.scenario_n, 16);
+        assert!((c.arrival_rho - 0.5).abs() < 1e-12);
+        assert!(ExperimentConfig::from_toml("[experiment]\nscenario_n = 0").is_err());
+        assert!(ExperimentConfig::from_toml("[experiment]\narrival_rho = 1.5").is_err());
     }
 }

@@ -10,6 +10,7 @@
 //! | `fig5`     | Figure 5 — utilization vs task time, approx/exact models |
 //! | `fig6`     | Figure 6 — ΔT vs n with multilevel scheduling |
 //! | `fig7`     | Figure 7 — utilization, regular vs multilevel |
+//! | `scenarios`| workload-space sweep: array / multicore / DAG / gang / arrivals × all schedulers |
 
 //! All six experiment runners route their `(scheduler, n, trial)`
 //! cells through the deterministic parallel executor in [`parallel`];
@@ -21,6 +22,7 @@ mod fig5;
 mod fig6;
 mod fig7;
 mod parallel;
+mod scenarios;
 mod sweep;
 mod table10;
 mod table9;
@@ -30,6 +32,7 @@ pub use fig5::{fig5, fig5_from, Fig5Report};
 pub use fig6::{fig6, Fig6Report};
 pub use fig7::{fig7, Fig7Report};
 pub use parallel::{default_jobs, run_cells};
+pub use scenarios::{scenarios, ScenarioCell, ScenariosReport, GANG_SIZE};
 pub use sweep::{run_sweep, run_sweeps, SchedulerSweep, SweepPoint, SweepSpec, PROHIBITIVE_SECS};
 pub use table10::{table10, Table10Report};
 pub use table9::{table9, Table9Report};

@@ -1,0 +1,361 @@
+//! `scenarios` experiment: ΔT and utilization across the full workload
+//! space — job arrays, DAG chains, gang-scheduled parallel jobs,
+//! multi-core tasks and arrival processes — on every simulated
+//! scheduler family.
+//!
+//! The paper's Table 9 benchmark exercises exactly one point of the
+//! workload space of its Figure 2 (independent 1-core array tasks, all
+//! submitted at t = 0). The unified kernel executes the remaining
+//! dimensions for every backend at once, so this runner sweeps the
+//! cross product {array, multicore, dag-chain, gang, poisson, burst} ×
+//! {Slurm, GridEngine, Mesos, YARN, Sparrow, IdealFIFO}, with the same
+//! per-processor work (T_job = 240 s) as the Table 9 sets.
+//!
+//! Cells run on the deterministic parallel executor, so results are
+//! bit-identical for every `--jobs` value.
+
+use super::parallel::run_cells;
+use super::sweep::PROHIBITIVE_SECS;
+use crate::config::{ExperimentConfig, SchedulerChoice};
+use crate::sched::{make_scheduler_scaled, RunOptions, RunResult, Scheduler};
+use crate::util::table::{fnum, Table};
+use crate::workload::{ArrivalProcess, Workload, WorkloadBuilder, TABLE9_JOB_TIME_PER_PROC};
+
+/// Gang width used by the gang scenario (also the DAG chain depth).
+pub const GANG_SIZE: u32 = 8;
+
+/// One (scenario, scheduler) cell of the sweep.
+pub struct ScenarioCell {
+    /// Scenario name ("array", "dag-chain", ...).
+    pub scenario: &'static str,
+    /// Scheduler display name.
+    pub scheduler: String,
+    /// One result per trial (empty iff skipped as prohibitive).
+    pub trials: Vec<RunResult>,
+}
+
+impl ScenarioCell {
+    /// Mean ΔT across trials.
+    pub fn mean_delta_t(&self) -> f64 {
+        self.trials.iter().map(|r| r.delta_t()).sum::<f64>() / self.trials.len().max(1) as f64
+    }
+
+    /// Mean utilization across trials.
+    pub fn mean_utilization(&self) -> f64 {
+        self.trials.iter().map(|r| r.utilization()).sum::<f64>()
+            / self.trials.len().max(1) as f64
+    }
+
+    /// Mean of the per-trial mean scheduler-induced waits.
+    pub fn mean_wait(&self) -> f64 {
+        self.trials.iter().map(|r| r.waits.mean()).sum::<f64>()
+            / self.trials.len().max(1) as f64
+    }
+}
+
+/// Full scenarios sweep.
+pub struct ScenariosReport {
+    /// All (scenario, scheduler) cells, scenario-major.
+    pub cells: Vec<ScenarioCell>,
+    /// Cells skipped as prohibitive (the YARN-rapid treatment).
+    pub skipped: Vec<(&'static str, String)>,
+    /// Tasks per processor n.
+    pub n: u32,
+    /// Constant task time t = T_job / n.
+    pub t: f64,
+}
+
+fn scenario_workloads(cfg: &ExperimentConfig, processors: u64) -> Vec<(&'static str, Workload)> {
+    let n = cfg.scenario_n.max(1);
+    let t = TABLE9_JOB_TIME_PER_PROC / n as f64;
+    let total = n as u64 * processors;
+    let rate = cfg.arrival_rho * processors as f64 / t;
+    let base = |label: &str| WorkloadBuilder::constant(t).seed(cfg.seed).label(label);
+    let out = vec![
+        ("array", base("array").tasks(total).build()),
+        (
+            "multicore",
+            base("multicore").tasks((total / 2).max(1)).cores(2).build(),
+        ),
+        (
+            "dag-chain",
+            base("dag-chain").tasks(total).dag_chains(GANG_SIZE).build(),
+        ),
+        ("gang", base("gang").tasks(total).gangs(GANG_SIZE).build()),
+        (
+            "poisson",
+            base("poisson")
+                .tasks(total)
+                .arrivals(ArrivalProcess::Poisson { rate })
+                .build(),
+        ),
+        (
+            "burst",
+            base("burst")
+                .tasks(total)
+                .arrivals(ArrivalProcess::Bursty {
+                    burst: processors.max(1) as u32,
+                    period: t,
+                })
+                .build(),
+        ),
+    ];
+    for (name, w) in &out {
+        w.validate()
+            .unwrap_or_else(|e| panic!("scenario {name} workload invalid: {e}"));
+    }
+    out
+}
+
+/// Run the scenarios sweep: every scenario × every simulated scheduler
+/// family × `cfg.trials`, in one deterministic parallel batch.
+pub fn scenarios(cfg: &ExperimentConfig) -> ScenariosReport {
+    let cluster = crate::cluster::ClusterSpec::homogeneous(
+        cfg.effective_nodes(),
+        cfg.cores_per_node,
+        cfg.mem_mb,
+        (cfg.effective_nodes() / 2).max(1),
+    );
+    let processors = cluster.total_cores();
+    let workloads = scenario_workloads(cfg, processors);
+    let choices = SchedulerChoice::all_simulated();
+    let schedulers: Vec<Box<dyn Scheduler>> = choices
+        .iter()
+        .map(|&c| make_scheduler_scaled(c, cfg.scale_down))
+        .collect();
+
+    // Flat cell list: (scenario idx, scheduler idx, trial) with seeds
+    // derived independently of execution order.
+    struct Cell<'a> {
+        sched: usize,
+        /// Index into the assembled report cells (set at creation so
+        /// reassembly is a direct index, not a name lookup).
+        slot: usize,
+        workload: &'a Workload,
+        seed: u64,
+    }
+    let mut cells: Vec<Cell> = Vec::new();
+    let mut out: Vec<ScenarioCell> = Vec::new();
+    let mut skipped: Vec<(&'static str, String)> = Vec::new();
+    for (si, &(name, ref workload)) in workloads.iter().enumerate() {
+        for (ki, sched) in schedulers.iter().enumerate() {
+            if sched.projected_runtime(workload, &cluster) > PROHIBITIVE_SECS {
+                skipped.push((name, sched.name().to_string()));
+                continue;
+            }
+            for trial in 0..cfg.trials {
+                cells.push(Cell {
+                    sched: ki,
+                    slot: out.len(),
+                    workload,
+                    seed: cfg
+                        .seed
+                        .wrapping_add(trial as u64)
+                        .wrapping_add((si as u64) << 24)
+                        .wrapping_add((ki as u64) << 16),
+                });
+            }
+            out.push(ScenarioCell {
+                scenario: name,
+                scheduler: sched.name().to_string(),
+                trials: Vec::with_capacity(cfg.trials as usize),
+            });
+        }
+    }
+
+    let results = run_cells(cfg.effective_jobs(), &cells, |cell, scratch| {
+        let sched = schedulers[cell.sched].as_ref();
+        let r = sched.run_with_scratch(
+            cell.workload,
+            &cluster,
+            cell.seed,
+            &RunOptions::default(),
+            scratch,
+        );
+        r.check_invariants().unwrap_or_else(|e| {
+            panic!(
+                "{} on {}: {e}",
+                sched.name(),
+                cell.workload.label
+            )
+        });
+        r
+    });
+    for (cell, result) in cells.iter().zip(results) {
+        out[cell.slot].trials.push(result);
+    }
+
+    ScenariosReport {
+        cells: out,
+        skipped,
+        n: cfg.scenario_n.max(1),
+        t: TABLE9_JOB_TIME_PER_PROC / cfg.scenario_n.max(1) as f64,
+    }
+}
+
+impl ScenariosReport {
+    /// Rendered summary table.
+    pub fn render_table(&self) -> Table {
+        let mut t = Table::new(
+            format!(
+                "Scenarios — ΔT and utilization across workload shapes \
+                 (n={}, t={} s)",
+                self.n,
+                fnum(self.t)
+            ),
+            &["scenario", "scheduler", "ΔT (s)", "U", "mean wait (s)"],
+        );
+        for c in &self.cells {
+            t.row(&[
+                c.scenario.to_string(),
+                c.scheduler.clone(),
+                fnum(c.mean_delta_t()),
+                format!("{:.3}", c.mean_utilization()),
+                fnum(c.mean_wait()),
+            ]);
+        }
+        for (scenario, sched) in &self.skipped {
+            t.row(&[
+                scenario.to_string(),
+                sched.clone(),
+                "(skipped)".into(),
+                "-".into(),
+                "-".into(),
+            ]);
+        }
+        t
+    }
+
+    /// CSV series (scenario, scheduler, trial, delta_t, utilization).
+    pub fn to_csv(&self) -> String {
+        let mut t = Table::new(
+            "",
+            &["scenario", "scheduler", "trial", "delta_t_s", "utilization"],
+        );
+        for c in &self.cells {
+            for (trial, r) in c.trials.iter().enumerate() {
+                t.row(&[
+                    c.scenario.to_string(),
+                    c.scheduler.clone(),
+                    trial.to_string(),
+                    format!("{:.3}", r.delta_t()),
+                    format!("{:.4}", r.utilization()),
+                ]);
+            }
+        }
+        t.to_csv()
+    }
+
+    fn cell(&self, scenario: &str, scheduler: &str) -> Option<&ScenarioCell> {
+        self.cells
+            .iter()
+            .find(|c| c.scenario == scenario && c.scheduler == scheduler)
+    }
+
+    /// Structural shape checks (loose bounds — mechanisms, not
+    /// calibration): the zero-overhead reference behaves exactly, DAG
+    /// chains serialize, gangs pack, and every non-skipped cell ran all
+    /// its trials.
+    pub fn check_shape(&self, trials: u32) -> Result<(), String> {
+        for c in &self.cells {
+            if c.trials.len() != trials as usize {
+                return Err(format!(
+                    "{} × {}: {} of {trials} trials ran",
+                    c.scenario,
+                    c.scheduler,
+                    c.trials.len()
+                ));
+            }
+        }
+        let ideal_array = self
+            .cell("array", "IdealFIFO")
+            .ok_or("missing ideal array cell")?;
+        if ideal_array.mean_delta_t().abs() > 1e-6 {
+            return Err(format!(
+                "ideal array ΔT={} should be ~0",
+                ideal_array.mean_delta_t()
+            ));
+        }
+        let ideal_chain = self
+            .cell("dag-chain", "IdealFIFO")
+            .ok_or("missing ideal dag-chain cell")?;
+        let chain_floor = GANG_SIZE as f64 * self.t * 0.999;
+        for r in &ideal_chain.trials {
+            if r.t_total < chain_floor {
+                return Err(format!(
+                    "dag-chain t_total {} below serial floor {chain_floor}",
+                    r.t_total
+                ));
+            }
+        }
+        let ideal_gang = self
+            .cell("gang", "IdealFIFO")
+            .ok_or("missing ideal gang cell")?;
+        if ideal_gang.mean_utilization() < 0.99 {
+            return Err(format!(
+                "ideal gang utilization {} should pack perfectly",
+                ideal_gang.mean_utilization()
+            ));
+        }
+        // Real control planes cost something on every scenario.
+        for c in &self.cells {
+            if c.scheduler != "IdealFIFO" && c.mean_delta_t() < 0.0 {
+                return Err(format!(
+                    "{} × {}: negative ΔT {}",
+                    c.scenario,
+                    c.scheduler,
+                    c.mean_delta_t()
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.scale_down = 11; // 4 nodes × 32 = 128 cores
+        cfg.trials = 1;
+        cfg.scenario_n = 4;
+        cfg
+    }
+
+    #[test]
+    fn scenarios_run_and_pass_shape_checks() {
+        let cfg = quick_cfg();
+        let rep = scenarios(&cfg);
+        rep.check_shape(cfg.trials).unwrap();
+        // 6 scenarios × 6 schedulers, minus any prohibitive skips.
+        assert_eq!(rep.cells.len() + rep.skipped.len(), 36);
+        assert!(!rep.to_csv().is_empty());
+    }
+
+    #[test]
+    fn scenarios_deterministic_across_jobs() {
+        let mut a_cfg = quick_cfg();
+        a_cfg.jobs = 1;
+        let mut b_cfg = quick_cfg();
+        b_cfg.jobs = 4;
+        let a = scenarios(&a_cfg);
+        let b = scenarios(&b_cfg);
+        assert_eq!(a.cells.len(), b.cells.len());
+        for (ca, cb) in a.cells.iter().zip(&b.cells) {
+            assert_eq!(ca.scenario, cb.scenario);
+            assert_eq!(ca.scheduler, cb.scheduler);
+            for (ra, rb) in ca.trials.iter().zip(&cb.trials) {
+                assert_eq!(
+                    ra.t_total.to_bits(),
+                    rb.t_total.to_bits(),
+                    "{} × {}",
+                    ca.scenario,
+                    ca.scheduler
+                );
+                assert_eq!(ra.events, rb.events);
+            }
+        }
+    }
+}

@@ -3,7 +3,8 @@
 //!
 //! Subcommands:
 //!   features    render the paper's feature-comparison Tables 1–7
-//!   experiment  run table9 | table10 | fig4 | fig5 | fig6 | fig7 | all
+//!   experiment  run table9 | table10 | fig4 | fig5 | fig6 | fig7 |
+//!               scenarios | all
 //!   serve       realtime mini-cluster (leader + worker threads, PJRT payloads)
 //!   validate    run every experiment's shape checks at reduced scale
 //!
@@ -51,7 +52,7 @@ fn usage() {
         "usage: sssched <command> [options]\n\
          commands:\n\
          \x20 features   [--table 1..7] [--csv]\n\
-         \x20 experiment <table9|table10|fig4|fig5|fig6|fig7|all> \
+         \x20 experiment <table9|table10|fig4|fig5|fig6|fig7|scenarios|all> \
          [--config f] [--quick] [--trials N] [--jobs N] [--out-dir d] [--artifacts d] [--csv]\n\
          \x20 serve      [--workers N] [--tasks N] [--task-ms MS] \
          [--payload sleep|spin|analytics] [--ts SECS] [--artifacts d]\n\
@@ -177,6 +178,16 @@ fn cmd_experiment(args: &Args) -> i32 {
                 println!("{}", rep.render_table().render());
                 write_out(&cfg, "fig7.csv", &rep.render_table().to_csv());
             }
+            "scenarios" => {
+                let rep = harness::scenarios(&cfg);
+                println!("{}", rep.render_table().render());
+                if let Err(e) = rep.check_shape(cfg.trials) {
+                    eprintln!("shape check FAILED: {e}");
+                    return 1;
+                }
+                println!("shape checks: OK");
+                write_out(&cfg, "scenarios.csv", &rep.to_csv());
+            }
             other => {
                 eprintln!("unknown experiment `{other}`");
                 return 2;
@@ -185,7 +196,7 @@ fn cmd_experiment(args: &Args) -> i32 {
         0
     };
     if what == "all" {
-        for name in ["table9", "table10", "fig4", "fig5", "fig6", "fig7"] {
+        for name in ["table9", "table10", "fig4", "fig5", "fig6", "fig7", "scenarios"] {
             let rc = run(name);
             if rc != 0 {
                 return rc;
@@ -279,6 +290,10 @@ fn cmd_validate(args: &Args) -> i32 {
     check("fig5 shapes", harness::fig5(&cfg, Some(&arts)).check_shape());
     check("fig6 shapes", harness::fig6(&cfg, &ml).check_shape());
     check("fig7 shapes", harness::fig7(&cfg, &ml).check_shape());
+    check(
+        "scenarios shapes",
+        harness::scenarios(&cfg).check_shape(cfg.trials),
+    );
     if failures == 0 {
         println!("all shape checks passed");
         0

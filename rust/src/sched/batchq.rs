@@ -17,10 +17,19 @@
 //! Jobs here are rigid parallel jobs (need `cores` slots simultaneously,
 //! all started together — "gang" launch), the workload class Figure 2
 //! labels "parallel jobs".
+//!
+//! Since the kernel refactor this module is a [`SchedPolicy`] like the
+//! others: the event loop, multi-core slot packing and wait/trace
+//! accounting live in [`crate::sim::Kernel`]; only the queue-ordering
+//! and backfill decisions remain here. The simulator stays
+//! zero-overhead (it isolates *policy* effects; latency effects live in
+//! the Table 9 simulators).
 
 use crate::cluster::ClusterSpec;
-use crate::sim::SimScratch;
+use crate::sim::{Kernel, KernelCtx, Launch, SchedPolicy, SimScratch, Time};
+use crate::sched::RunOptions;
 use crate::util::stats::Summary;
+use crate::workload::{TaskId, TaskSpec, Workload};
 
 /// Queue-management policy.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -86,11 +95,119 @@ pub struct BatchRunResult {
     pub outcomes: Vec<JobOutcome>,
 }
 
-/// Batch-queue simulator (virtual time, zero scheduler overhead — this
-/// module isolates *policy* effects; latency effects live in the
-/// Table 9 simulators).
+/// Batch-queue simulator (virtual time, zero scheduler overhead).
 pub struct BatchQueueSim {
     policy: QueuePolicy,
+}
+
+/// The ordering/backfill policy driven by the kernel: dispatch
+/// opportunities arise at submission, on arrivals, and on slot release.
+struct BatchPolicy<'a> {
+    policy: QueuePolicy,
+    jobs: &'a [BatchJob],
+    usage: std::collections::BTreeMap<u32, f64>,
+    /// Running set `(end_time, cores, job index)` for backfill shadows.
+    running: Vec<(f64, u32, u32)>,
+}
+
+impl BatchPolicy<'_> {
+    fn order(&self, queue: &mut [TaskId]) {
+        match self.policy {
+            QueuePolicy::Fcfs | QueuePolicy::FcfsBackfill => {} // arrival order already
+            QueuePolicy::Priority => {
+                queue.sort_by(|&a, &b| {
+                    self.jobs[b as usize]
+                        .priority
+                        .cmp(&self.jobs[a as usize].priority)
+                        .then(a.cmp(&b))
+                });
+            }
+            QueuePolicy::Fairshare => {
+                queue.sort_by(|&a, &b| {
+                    let ua = self.usage.get(&self.jobs[a as usize].user).copied().unwrap_or(0.0);
+                    let ub = self.usage.get(&self.jobs[b as usize].user).copied().unwrap_or(0.0);
+                    ua.total_cmp(&ub).then(a.cmp(&b))
+                });
+            }
+        }
+    }
+
+    fn started(&mut self, idx: TaskId, now: Time) {
+        let j = &self.jobs[idx as usize];
+        self.running.push((now + j.duration, j.cores, idx));
+        *self.usage.entry(j.user).or_default() += j.cores as f64 * j.duration;
+    }
+
+    /// One policy-ordered dispatch pass over the pending queue.
+    fn drain(&mut self, ctx: &mut KernelCtx, now: Time) {
+        let mut queue = ctx.pending_snapshot();
+        self.order(&mut queue);
+        let mut blocked_head: Option<TaskId> = None;
+        for idx in queue {
+            if blocked_head.is_none() {
+                if ctx.try_dispatch(idx, &mut |_, _| Launch::start(now)) {
+                    self.started(idx, now);
+                } else {
+                    // Head-of-line blocked.
+                    blocked_head = Some(idx);
+                    if self.policy != QueuePolicy::FcfsBackfill {
+                        break; // strict policies stop here
+                    }
+                }
+            } else {
+                // EASY backfill: shadow time = earliest instant the
+                // head job could start given current running jobs.
+                let j = &self.jobs[idx as usize];
+                let head = &self.jobs[blocked_head.expect("head set") as usize];
+                let free = ctx.free_slots() as u32;
+                let (shadow, spare) = shadow_time(free, head.cores, &self.running);
+                let fits_now = j.cores <= free;
+                let no_delay = now + j.duration <= shadow + 1e-9 || j.cores <= spare;
+                if fits_now
+                    && no_delay
+                    && ctx.try_dispatch(idx, &mut |_, _| Launch::start(now))
+                {
+                    self.started(idx, now);
+                }
+            }
+        }
+    }
+}
+
+impl SchedPolicy for BatchPolicy<'_> {
+    fn label(&self) -> String {
+        "BatchQueue".into()
+    }
+
+    fn on_submit(&mut self, ctx: &mut KernelCtx, _batch: usize) {
+        self.drain(ctx, 0.0);
+    }
+
+    fn on_arrive(&mut self, ctx: &mut KernelCtx, now: Time, _task: TaskId) {
+        // Defer until every same-instant arrival/release has landed:
+        // backfill reservations must see the completed instant, exactly
+        // as the pre-kernel decision-instant loop did.
+        if !ctx.has_more_events_at(now) {
+            self.drain(ctx, now);
+        }
+    }
+
+    fn on_complete(
+        &mut self,
+        _ctx: &mut KernelCtx,
+        now: Time,
+        task: TaskId,
+        _slot: u32,
+    ) -> Option<Time> {
+        self.running.retain(|&(_, _, t)| t != task);
+        Some(now) // zero teardown: slots are reusable instantly
+    }
+
+    fn on_slot_free(&mut self, ctx: &mut KernelCtx, now: Time) {
+        if !ctx.has_more_events_at(now) {
+            self.drain(ctx, now);
+        }
+    }
 }
 
 impl BatchQueueSim {
@@ -106,8 +223,8 @@ impl BatchQueueSim {
         self.run_with_scratch(jobs, cluster, &mut SimScratch::new())
     }
 
-    /// Simulate `jobs` reusing `scratch`'s pending-order and running-set
-    /// buffers (bit-identical to [`BatchQueueSim::run`]).
+    /// Simulate `jobs` reusing `scratch`'s warm buffers (bit-identical
+    /// to [`BatchQueueSim::run`]).
     pub fn run_with_scratch(
         &self,
         jobs: &[BatchJob],
@@ -125,169 +242,79 @@ impl BatchQueueSim {
             if !(j.duration.is_finite() && j.duration >= 0.0) {
                 return Err(format!("job {} has invalid duration", j.id));
             }
+            if !j.submit_at.is_finite() || j.submit_at < 0.0 {
+                return Err(format!("job {} has invalid submit time", j.id));
+            }
         }
-
-        // Running set: (end_time, cores, job index). Pending: indices
-        // into `jobs`, submission-ordered. Only these two buffers are
-        // used here, so clear them directly instead of a full
-        // `scratch.begin` (which would rebuild the per-core slot pool
-        // this simulator never touches).
-        let SimScratch {
-            job_order: pending,
-            running,
-            ..
-        } = scratch;
-        pending.clear();
-        running.clear();
-        pending.extend(0..jobs.len() as u32);
-        pending.sort_by(|&a, &b| {
-            jobs[a as usize]
-                .submit_at
-                .total_cmp(&jobs[b as usize].submit_at)
-                .then(a.cmp(&b))
-        });
-        let mut free = total_cores;
-        let mut now = 0.0f64;
-        let mut outcomes: Vec<Option<JobOutcome>> = vec![None; jobs.len()];
-        let mut usage: std::collections::BTreeMap<u32, f64> = Default::default();
-        let mut waits = Summary::new();
-        let mut makespan = 0.0f64;
-        // Per-instant work lists, hoisted out of the loop so iterations
-        // reuse their capacity.
-        let mut arrived: Vec<u32> = Vec::new();
-        let mut started: Vec<u32> = Vec::new();
-
-        // Event-free loop: advance to the next decision instant (a
-        // completion or an arrival), then start everything startable.
-        loop {
-            // Complete running jobs at `now`.
-            running.retain(|&(end, cores, _)| {
-                if end <= now + 1e-12 {
-                    free += cores;
-                    false
-                } else {
-                    true
-                }
+        if jobs.is_empty() {
+            return Ok(BatchRunResult {
+                makespan: 0.0,
+                work: 0.0,
+                utilization: 1.0,
+                waits: Summary::new(),
+                outcomes: Vec::new(),
             });
-
-            // Queue of arrived pending jobs, ordered by policy.
-            arrived.clear();
-            arrived.extend(
-                pending
-                    .iter()
-                    .copied()
-                    .filter(|&i| jobs[i as usize].submit_at <= now + 1e-12),
-            );
-            self.order(&mut arrived, jobs, &usage);
-
-            // Start jobs per policy.
-            started.clear();
-            let mut blocked_head: Option<u32> = None;
-            for &i in arrived.iter() {
-                let j = &jobs[i as usize];
-                if blocked_head.is_none() && j.cores <= free {
-                    free -= j.cores;
-                    let end = now + j.duration;
-                    running.push((end, j.cores, i));
-                    outcomes[i as usize] = Some(JobOutcome {
-                        id: j.id,
-                        start: now,
-                        end,
-                    });
-                    waits.add(now - j.submit_at);
-                    *usage.entry(j.user).or_default() += j.cores as f64 * j.duration;
-                    makespan = makespan.max(end);
-                    started.push(i);
-                } else if blocked_head.is_none() {
-                    // Head-of-line blocked.
-                    blocked_head = Some(i);
-                    if self.policy != QueuePolicy::FcfsBackfill {
-                        break; // strict policies stop here
-                    }
-                } else if self.policy == QueuePolicy::FcfsBackfill {
-                    // EASY backfill: shadow time = earliest instant the
-                    // head job could start given current running jobs.
-                    let head = &jobs[blocked_head.unwrap() as usize];
-                    let (shadow, spare) = shadow_time(free, head.cores, running);
-                    let fits_now = j.cores <= free;
-                    let no_delay = now + j.duration <= shadow + 1e-9 || j.cores <= spare;
-                    if fits_now && no_delay {
-                        free -= j.cores;
-                        let end = now + j.duration;
-                        running.push((end, j.cores, i));
-                        outcomes[i as usize] = Some(JobOutcome {
-                            id: j.id,
-                            start: now,
-                            end,
-                        });
-                        waits.add(now - j.submit_at);
-                        *usage.entry(j.user).or_default() += j.cores as f64 * j.duration;
-                        makespan = makespan.max(end);
-                        started.push(i);
-                    }
-                }
-            }
-            pending.retain(|i| !started.contains(i));
-
-            if pending.is_empty() && running.is_empty() {
-                break;
-            }
-            // Advance time: earliest completion or next arrival.
-            let next_end = running
-                .iter()
-                .map(|&(e, _, _)| e)
-                .fold(f64::INFINITY, f64::min);
-            let next_arrival = pending
-                .iter()
-                .map(|&i| jobs[i as usize].submit_at)
-                .filter(|&t| t > now + 1e-12)
-                .fold(f64::INFINITY, f64::min);
-            let next = next_end.min(next_arrival);
-            if !next.is_finite() {
-                return Err("deadlock: pending jobs but no future event".into());
-            }
-            now = next;
         }
 
+        // View the rigid jobs as multi-core kernel tasks. Memory is a
+        // nominal 1 MB: batch-queue policy effects are core-count-only.
+        let tasks: Vec<TaskSpec> = jobs
+            .iter()
+            .enumerate()
+            .map(|(i, j)| {
+                let mut t = TaskSpec::array(i as u32, i as u32, j.duration);
+                t.cores = j.cores;
+                t.mem_mb = 1;
+                t.submit_at = j.submit_at;
+                t
+            })
+            .collect();
+        let workload = Workload {
+            tasks,
+            label: "batchq".into(),
+        };
+        let mut policy = BatchPolicy {
+            policy: self.policy,
+            jobs,
+            usage: Default::default(),
+            running: Vec::new(),
+        };
+        let r = Kernel::run(
+            &mut policy,
+            &workload,
+            cluster,
+            &RunOptions::with_trace(),
+            scratch,
+        );
+
+        let trace = r.trace.as_ref().expect("batchq runs collect traces");
+        let mut outcomes = vec![
+            JobOutcome {
+                id: 0,
+                start: 0.0,
+                end: 0.0
+            };
+            jobs.len()
+        ];
+        for rec in trace {
+            outcomes[rec.task as usize] = JobOutcome {
+                id: jobs[rec.task as usize].id,
+                start: rec.start,
+                end: rec.end,
+            };
+        }
         let work: f64 = jobs.iter().map(|j| j.cores as f64 * j.duration).sum();
-        let outcomes: Vec<JobOutcome> = outcomes.into_iter().map(|o| o.unwrap()).collect();
         Ok(BatchRunResult {
-            makespan,
+            makespan: r.t_total,
             work,
-            utilization: if makespan > 0.0 {
-                work / (makespan * total_cores as f64)
+            utilization: if r.t_total > 0.0 {
+                work / (r.t_total * total_cores as f64)
             } else {
                 1.0
             },
-            waits,
+            waits: r.waits,
             outcomes,
         })
-    }
-
-    fn order(
-        &self,
-        queue: &mut [u32],
-        jobs: &[BatchJob],
-        usage: &std::collections::BTreeMap<u32, f64>,
-    ) {
-        match self.policy {
-            QueuePolicy::Fcfs | QueuePolicy::FcfsBackfill => {} // arrival order already
-            QueuePolicy::Priority => {
-                queue.sort_by(|&a, &b| {
-                    jobs[b as usize]
-                        .priority
-                        .cmp(&jobs[a as usize].priority)
-                        .then(a.cmp(&b))
-                });
-            }
-            QueuePolicy::Fairshare => {
-                queue.sort_by(|&a, &b| {
-                    let ua = usage.get(&jobs[a as usize].user).copied().unwrap_or(0.0);
-                    let ub = usage.get(&jobs[b as usize].user).copied().unwrap_or(0.0);
-                    ua.total_cmp(&ub).then(a.cmp(&b))
-                });
-            }
-        }
     }
 }
 
@@ -333,9 +360,8 @@ mod tests {
 
     #[test]
     fn fcfs_head_of_line_blocks() {
-        // big job (8 cores) then small (1 core): on 8 cores with a 4-core
-        // job running... simplified: j0 takes all 8 for 10 s; j1 small
-        // waits behind j2 big under FCFS.
+        // j0 takes all 8 cores for 10 s; j1 big waits; j2 small waits
+        // behind j1 under strict FCFS.
         let jobs = vec![job(0, 8, 10.0), job(1, 8, 10.0), job(2, 1, 1.0)];
         let r = BatchQueueSim::new(QueuePolicy::Fcfs)
             .run(&jobs, &cluster(8))
@@ -455,5 +481,15 @@ mod tests {
             .unwrap();
         assert!((r.utilization - 1.0).abs() < 1e-9, "u={}", r.utilization);
         assert_eq!(r.makespan, 16.0);
+    }
+
+    #[test]
+    fn empty_job_list_is_fine() {
+        let r = BatchQueueSim::new(QueuePolicy::Fcfs)
+            .run(&[], &cluster(8))
+            .unwrap();
+        assert_eq!(r.makespan, 0.0);
+        assert_eq!(r.utilization, 1.0);
+        assert!(r.outcomes.is_empty());
     }
 }

@@ -1,4 +1,4 @@
-//! Centralized cycle-based scheduler simulator — the mechanism shared by
+//! Centralized cycle-based scheduler policy — the mechanism shared by
 //! the Slurm-like and Grid-Engine-like models.
 //!
 //! Structure (mirrors slurmctld / sge_qmaster):
@@ -17,14 +17,16 @@
 //! right side of Figure 4; at long task times per-task cycle waits and
 //! stagger dominate, giving the shallow left side — together the
 //! measured α_s ≈ 1.3 of Table 10.
+//!
+//! The event loop itself lives in [`crate::sim::Kernel`]; this file is
+//! only the policy: submission/scan/dispatch/completion pricing.
 
 use super::result::{RunOptions, RunResult};
 use super::Scheduler;
 use crate::cluster::ClusterSpec;
-use crate::sim::{ServiceStation, SimEv, SimScratch};
+use crate::sim::{Kernel, KernelCtx, Launch, SchedPolicy, ServiceStation, SimEv, SimScratch, Time};
 use crate::util::prng::{LognormalGen, Prng};
-use crate::util::stats::Summary;
-use crate::workload::{TraceRecord, Workload};
+use crate::workload::{TaskId, Workload};
 
 /// Tunable mechanism parameters for a centralized scheduler.
 #[derive(Clone, Debug)]
@@ -80,6 +82,78 @@ impl CentralizedSim {
     }
 }
 
+/// Per-run policy state: the daemon station plus precomputed jitter
+/// distributions (hot path: one sample per event).
+struct CentralizedPolicy<'p> {
+    p: &'p CentralizedParams,
+    rng: Prng,
+    g_sched: LognormalGen,
+    g_complete: LognormalGen,
+    g_launch: LognormalGen,
+    g_teardown: LognormalGen,
+    g_submit: LognormalGen,
+    daemon: ServiceStation,
+}
+
+impl SchedPolicy for CentralizedPolicy<'_> {
+    fn label(&self) -> String {
+        self.p.name.to_string()
+    }
+
+    fn on_submit(&mut self, ctx: &mut KernelCtx, batch: usize) {
+        // Array mode: everything at t<=0 arrived in one sbatch/qsub
+        // call whose parsing cost scales with the array length.
+        if batch > 0 {
+            self.daemon.serve(
+                0.0,
+                self.p.submit_cost_base + self.p.submit_cost_per_task * batch as f64,
+            );
+        }
+        ctx.push(self.daemon.free_at().max(0.0), SimEv::Tick);
+    }
+
+    fn on_arrive(&mut self, _ctx: &mut KernelCtx, now: Time, _task: TaskId) {
+        self.daemon.serve(now, self.rng.lognormal(&self.g_submit));
+    }
+
+    fn tick_interval(&self) -> Option<Time> {
+        Some(self.p.cycle_interval)
+    }
+
+    fn on_tick(&mut self, ctx: &mut KernelCtx, now: Time) {
+        // Queue-management scan, capped.
+        let scan = self.p.scan_cost_per_pending * ctx.pending_len().min(self.p.scan_cap) as f64;
+        if scan > 0.0 {
+            let cost = self.rng.lognormal_mean_cv(scan, self.p.jitter_cv);
+            self.daemon.serve(now, cost);
+        }
+        // Dispatch onto every free slot.
+        let (daemon, rng) = (&mut self.daemon, &mut self.rng);
+        let (g_sched, g_launch, rpc) = (&self.g_sched, &self.g_launch, self.p.rpc);
+        ctx.drain_fifo(&mut |_, _| {
+            let fin = daemon.serve(now, rng.lognormal(g_sched));
+            let launch = rng.lognormal(g_launch);
+            Launch::start(fin + rpc + launch)
+        });
+    }
+
+    fn on_complete(
+        &mut self,
+        _ctx: &mut KernelCtx,
+        now: Time,
+        _task: TaskId,
+        _slot: u32,
+    ) -> Option<Time> {
+        let fin = self.daemon.serve(now, self.rng.lognormal(&self.g_complete));
+        let teardown = self.rng.lognormal(&self.g_teardown);
+        Some(fin + teardown)
+    }
+
+    fn daemon_busy(&self) -> f64 {
+        self.daemon.busy()
+    }
+}
+
 impl Scheduler for CentralizedSim {
     fn name(&self) -> &'static str {
         self.params.name
@@ -94,144 +168,25 @@ impl Scheduler for CentralizedSim {
         scratch: &mut SimScratch,
     ) -> RunResult {
         let p = &self.params;
-        let mut rng = Prng::new(seed ^ 0xCE47_4A11);
-        // Precomputed jitter distributions (hot path: one sample per event).
-        let g_sched = LognormalGen::new(p.sched_cost_per_task, p.jitter_cv);
-        let g_complete = LognormalGen::new(p.complete_cost_per_task, p.jitter_cv);
-        let g_launch = LognormalGen::new(p.launch_mean, p.launch_cv);
-        let g_teardown = LognormalGen::new(p.teardown_mean, p.launch_cv);
-        let g_submit = LognormalGen::new(p.submit_cost_job, p.jitter_cv);
-        let n = workload.len();
-        scratch.begin(cluster, n, options.collect_trace);
-        let SimScratch {
-            queue: q,
-            pending,
-            pool,
-            slot_mem,
-            trace,
-            trace_idx,
-            ..
-        } = scratch;
-        let mut daemon = ServiceStation::new();
-
-        // Pending queue. Array mode: everything submitted at t<=0 in one
-        // sbatch/qsub call; later arrivals (and individual mode) come in
-        // through Arrive events that each pay a submission cost.
-        if options.individual_submission {
-            for t in &workload.tasks {
-                q.push(t.submit_at.max(0.0), SimEv::Arrive { task: t.id });
-            }
-        } else {
-            for t in &workload.tasks {
-                if t.submit_at <= 0.0 {
-                    pending.push_back(t.id);
-                } else {
-                    q.push(t.submit_at, SimEv::Arrive { task: t.id });
-                }
-            }
-            if !pending.is_empty() {
-                daemon.serve(
-                    0.0,
-                    p.submit_cost_base + p.submit_cost_per_task * pending.len() as f64,
-                );
-            }
-        }
-        q.push(daemon.free_at().max(0.0), SimEv::Tick);
-
-        let mut makespan: f64 = 0.0;
-        let mut completed: usize = 0;
-        let mut waits = Summary::new();
-
-        while let Some((now, ev)) = q.pop() {
-            match ev {
-                SimEv::Arrive { task } => {
-                    daemon.serve(now, rng.lognormal(&g_submit));
-                    pending.push_back(task);
-                }
-                SimEv::Tick => {
-                    // Queue-management scan, capped.
-                    let scan = p.scan_cost_per_pending * pending.len().min(p.scan_cap) as f64;
-                    if scan > 0.0 {
-                        daemon.serve(now, jit(&mut rng, scan, p.jitter_cv));
-                    }
-                    // Dispatch onto every free slot.
-                    while !pending.is_empty() {
-                        let task_id = *pending.front().unwrap();
-                        let task = &workload.tasks[task_id as usize];
-                        let Some(slot) = pool.alloc(task.mem_mb) else {
-                            break;
-                        };
-                        pending.pop_front();
-                        slot_mem[slot as usize] = task.mem_mb;
-                        let fin = daemon.serve(now, rng.lognormal(&g_sched));
-                        let launch = rng.lognormal(&g_launch);
-                        q.push(fin + p.rpc + launch, SimEv::Start { task: task_id, slot });
-                    }
-                    if completed < n {
-                        q.push(now + p.cycle_interval, SimEv::Tick);
-                    }
-                }
-                SimEv::Start { task, slot } => {
-                    let spec = &workload.tasks[task as usize];
-                    waits.add(now - spec.submit_at);
-                    if options.collect_trace {
-                        trace_idx[task as usize] = trace.len() as u32;
-                        trace.push(TraceRecord {
-                            task,
-                            node: pool.node_of(slot),
-                            slot,
-                            submit: spec.submit_at,
-                            start: now,
-                            end: 0.0, // patched on End
-                        });
-                    }
-                    q.push(now + spec.duration, SimEv::End { task, slot });
-                }
-                SimEv::End { task, slot } => {
-                    completed += 1;
-                    makespan = makespan.max(now);
-                    if options.collect_trace {
-                        trace[trace_idx[task as usize] as usize].end = now;
-                    }
-                    let fin = daemon.serve(now, rng.lognormal(&g_complete));
-                    let teardown = rng.lognormal(&g_teardown);
-                    q.push(fin + teardown, SimEv::SlotFree { slot });
-                }
-                SimEv::SlotFree { slot } => {
-                    pool.release(slot, slot_mem[slot as usize]);
-                }
-                SimEv::Stage { .. } => unreachable!("centralized sim emits no Stage events"),
-            }
-        }
-
-        debug_assert_eq!(completed, n, "all tasks must complete");
-        let processors = cluster.total_cores();
-        let events = q.popped();
-        RunResult {
-            scheduler: p.name.to_string(),
-            workload: workload.label.clone(),
-            n_tasks: n as u64,
-            processors,
-            t_total: makespan,
-            t_job: workload.t_job_per_proc(processors),
-            events,
-            daemon_busy: daemon.busy(),
-            waits,
-            trace: options.collect_trace.then(|| std::mem::take(trace)),
-        }
+        let mut policy = CentralizedPolicy {
+            p,
+            rng: Prng::new(seed ^ 0xCE47_4A11),
+            g_sched: LognormalGen::new(p.sched_cost_per_task, p.jitter_cv),
+            g_complete: LognormalGen::new(p.complete_cost_per_task, p.jitter_cv),
+            g_launch: LognormalGen::new(p.launch_mean, p.launch_cv),
+            g_teardown: LognormalGen::new(p.teardown_mean, p.launch_cv),
+            g_submit: LognormalGen::new(p.submit_cost_job, p.jitter_cv),
+            daemon: ServiceStation::new(),
+        };
+        Kernel::run(&mut policy, workload, cluster, options, scratch)
     }
 
     fn projected_runtime(&self, workload: &Workload, cluster: &ClusterSpec) -> f64 {
         // Max of the work bound and the central-daemon throughput bound.
         let p = cluster.total_cores() as f64;
-        let per_task =
-            self.params.sched_cost_per_task + self.params.complete_cost_per_task;
+        let per_task = self.params.sched_cost_per_task + self.params.complete_cost_per_task;
         (workload.total_work() / p).max(workload.len() as f64 * per_task)
     }
-}
-
-fn jit(rng: &mut Prng, mean: f64, cv: f64) -> f64 {
-    rng.lognormal_mean_cv(mean, cv)
 }
 
 #[cfg(test)]
@@ -315,5 +270,35 @@ mod tests {
         // Per-task daemon work scales ~10x; the fixed submission cost
         // damps the ratio.
         assert!(b.daemon_busy > a.daemon_busy * 3.0);
+    }
+
+    #[test]
+    fn dag_dependencies_respected_under_cycles() {
+        // A chain through the centralized control plane: children must
+        // not start before their parent's completion has been processed.
+        let sim = CentralizedSim::new(calibration::slurm_params());
+        let w = WorkloadBuilder::constant(2.0)
+            .tasks(24)
+            .dag_chains(4)
+            .label("dag")
+            .build();
+        let r = sim.run(&w, &quick_cluster(), 3, &RunOptions::with_trace());
+        r.check_invariants().unwrap();
+        let trace = r.trace.as_ref().unwrap();
+        let mut start = vec![0.0f64; 24];
+        let mut end = vec![0.0f64; 24];
+        for rec in trace {
+            start[rec.task as usize] = rec.start;
+            end[rec.task as usize] = rec.end;
+        }
+        for t in &w.tasks {
+            for &d in &t.deps {
+                assert!(
+                    start[t.id as usize] >= end[d as usize] - 1e-9,
+                    "task {} started before dep {d} finished",
+                    t.id
+                );
+            }
+        }
     }
 }

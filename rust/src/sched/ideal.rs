@@ -4,17 +4,51 @@
 //! t-second tasks on P slots is exactly `ceil(N/P) · t` and utilization
 //! is 1 when N divides P. Property tests compare the real simulators
 //! against this floor.
+//!
+//! As a [`SchedPolicy`] this is the minimal event-driven policy: no
+//! ticks, no daemon — dispatch happens at submission, on every slot
+//! release, and whenever dependencies unblock.
 
 use super::result::{RunOptions, RunResult};
 use super::Scheduler;
-use crate::cluster::{ClusterSpec, SlotPool};
-use crate::sim::{EventQueue, SimEv, SimScratch};
-use crate::util::stats::Summary;
-use crate::workload::{TraceRecord, Workload};
-use std::collections::VecDeque;
+use crate::cluster::ClusterSpec;
+use crate::sim::{Kernel, KernelCtx, Launch, SchedPolicy, SimScratch, Time};
+use crate::workload::{TaskId, Workload};
 
 /// The ideal zero-overhead scheduler.
 pub struct IdealFifo;
+
+/// Zero-overhead policy: every dispatch is free and instantaneous.
+struct IdealPolicy;
+
+impl SchedPolicy for IdealPolicy {
+    fn label(&self) -> String {
+        "IdealFIFO".into()
+    }
+
+    fn on_submit(&mut self, ctx: &mut KernelCtx, _batch: usize) {
+        // Fill every slot at t=0; refills happen on slot release.
+        ctx.drain_fifo(&mut |_, _| Launch::start(0.0));
+    }
+
+    fn on_arrive(&mut self, ctx: &mut KernelCtx, now: Time, _task: TaskId) {
+        ctx.drain_fifo(&mut |_, _| Launch::start(now));
+    }
+
+    fn on_complete(
+        &mut self,
+        _ctx: &mut KernelCtx,
+        now: Time,
+        _task: TaskId,
+        _slot: u32,
+    ) -> Option<Time> {
+        Some(now) // slots are reusable instantly
+    }
+
+    fn on_slot_free(&mut self, ctx: &mut KernelCtx, now: Time) {
+        ctx.drain_fifo(&mut |_, _| Launch::start(now));
+    }
+}
 
 impl Scheduler for IdealFifo {
     fn name(&self) -> &'static str {
@@ -29,87 +63,7 @@ impl Scheduler for IdealFifo {
         options: &RunOptions,
         scratch: &mut SimScratch,
     ) -> RunResult {
-        let n = workload.len();
-        scratch.begin(cluster, n, options.collect_trace);
-        let SimScratch {
-            queue: q,
-            pending,
-            pool,
-            slot_mem,
-            trace,
-            ..
-        } = scratch;
-        pending.extend(0..n as u32);
-        let mut makespan: f64 = 0.0;
-        let mut waits = Summary::new();
-
-        // Fill every slot at t=0; refill instantly on completion.
-        let dispatch = |now: f64,
-                            pending: &mut VecDeque<u32>,
-                            pool: &mut SlotPool,
-                            q: &mut EventQueue<SimEv>,
-                            slot_mem: &mut [i64],
-                            waits: &mut Summary,
-                            trace: &mut Vec<TraceRecord>| {
-            while let Some(&task_id) = pending.front() {
-                let task = &workload.tasks[task_id as usize];
-                let Some(slot) = pool.alloc(task.mem_mb) else {
-                    break;
-                };
-                pending.pop_front();
-                slot_mem[slot as usize] = task.mem_mb;
-                waits.add(now - task.submit_at);
-                if options.collect_trace {
-                    trace.push(TraceRecord {
-                        task: task_id,
-                        node: pool.node_of(slot),
-                        slot,
-                        submit: task.submit_at,
-                        start: now,
-                        end: now + task.duration,
-                    });
-                }
-                q.push(now + task.duration, SimEv::End { task: task_id, slot });
-            }
-        };
-
-        dispatch(
-            0.0,
-            &mut *pending,
-            &mut *pool,
-            &mut *q,
-            slot_mem.as_mut_slice(),
-            &mut waits,
-            &mut *trace,
-        );
-        while let Some((now, SimEv::End { slot, .. })) = q.pop() {
-            makespan = makespan.max(now);
-            pool.release(slot, slot_mem[slot as usize]);
-            dispatch(
-                now,
-                &mut *pending,
-                &mut *pool,
-                &mut *q,
-                slot_mem.as_mut_slice(),
-                &mut waits,
-                &mut *trace,
-            );
-        }
-
-        let processors = cluster.total_cores();
-        let events = q.popped();
-        RunResult {
-            scheduler: "IdealFIFO".into(),
-            workload: workload.label.clone(),
-            n_tasks: n as u64,
-            processors,
-            t_total: makespan,
-            t_job: workload.t_job_per_proc(processors),
-            events,
-            daemon_busy: 0.0,
-            waits,
-            trace: options.collect_trace.then(|| std::mem::take(trace)),
-        }
+        Kernel::run(&mut IdealPolicy, workload, cluster, options, scratch)
     }
 }
 
@@ -138,5 +92,25 @@ mod tests {
         assert!((r.t_total - 4.0).abs() < 1e-9);
         // U = (12/4) / 4 = 0.75
         assert!((r.utilization() - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dag_chain_is_exactly_serial() {
+        let cluster = ClusterSpec::homogeneous(1, 4, 32 * 1024, 1);
+        // 8 tasks of 2 s in chains of 4 on 4 slots: two chains run in
+        // parallel, each strictly serial -> exactly 8 s.
+        let w = WorkloadBuilder::constant(2.0).tasks(8).dag_chains(4).build();
+        let r = IdealFifo.run(&w, &cluster, 0, &RunOptions::default());
+        assert!((r.t_total - 8.0).abs() < 1e-9, "t_total={}", r.t_total);
+    }
+
+    #[test]
+    fn gang_makespan_matches_rigid_packing() {
+        let cluster = ClusterSpec::homogeneous(1, 4, 32 * 1024, 1);
+        // Two gangs of 4 × 3 s on 4 slots: strictly one gang at a time.
+        let w = WorkloadBuilder::constant(3.0).tasks(8).gangs(4).build();
+        let r = IdealFifo.run(&w, &cluster, 0, &RunOptions::default());
+        assert!((r.t_total - 6.0).abs() < 1e-9, "t_total={}", r.t_total);
+        assert!((r.utilization() - 1.0).abs() < 1e-9);
     }
 }

@@ -1,4 +1,4 @@
-//! Mesos-like two-level scheduler simulator.
+//! Mesos-like two-level scheduler policy.
 //!
 //! Mechanism (mirrors mesos-master + one framework scheduler):
 //!
@@ -15,14 +15,16 @@
 //! Per-task master cost is mostly flat (offers amortize over batches) ⇒
 //! fitted α_s ≈ 1.1 with t_s between Grid Engine and YARN, as the paper
 //! measures (Table 10), and lower ΔT than Slurm/GE at high n (Figure 4c).
+//!
+//! The event loop lives in [`crate::sim::Kernel`]; this file only
+//! prices offer rounds, launches and status updates.
 
 use super::result::{RunOptions, RunResult};
 use super::Scheduler;
 use crate::cluster::ClusterSpec;
-use crate::sim::{ServiceStation, SimEv, SimScratch};
+use crate::sim::{Kernel, KernelCtx, Launch, SchedPolicy, ServiceStation, SimEv, SimScratch, Time};
 use crate::util::prng::{LognormalGen, Prng};
-use crate::util::stats::Summary;
-use crate::workload::{TraceRecord, Workload};
+use crate::workload::{TaskId, Workload};
 
 /// Mechanism parameters for the Mesos-like model.
 #[derive(Clone, Debug)]
@@ -69,6 +71,68 @@ impl MesosSim {
     }
 }
 
+/// Per-run policy state: the master station + jitter distributions.
+struct MesosPolicy<'p> {
+    p: &'p MesosParams,
+    rng: Prng,
+    g_offer: LognormalGen,
+    g_launch: LognormalGen,
+    g_complete: LognormalGen,
+    g_exec: LognormalGen,
+    master: ServiceStation,
+}
+
+impl SchedPolicy for MesosPolicy<'_> {
+    fn label(&self) -> String {
+        self.p.name.to_string()
+    }
+
+    fn on_submit(&mut self, ctx: &mut KernelCtx, _batch: usize) {
+        // Framework registration; first offer round follows.
+        ctx.push(self.p.framework_latency, SimEv::Tick);
+    }
+
+    fn on_arrive(&mut self, _ctx: &mut KernelCtx, now: Time, _task: TaskId) {
+        self.master.serve(now, self.rng.lognormal(&self.g_launch));
+    }
+
+    fn tick_interval(&self) -> Option<Time> {
+        Some(self.p.offer_interval)
+    }
+
+    fn on_tick(&mut self, ctx: &mut KernelCtx, now: Time) {
+        if ctx.free_slots() > 0 && ctx.pending_len() > 0 {
+            // One offer batch covering all currently-free agents.
+            let t_off = self.master.serve(now, self.rng.lognormal(&self.g_offer));
+            let respond_at = t_off + self.p.rpc + self.p.framework_latency;
+            // Framework accepts: one launch per pending task that fits
+            // the offered resources.
+            let (master, rng) = (&mut self.master, &mut self.rng);
+            let (g_launch, g_exec, rpc) = (&self.g_launch, &self.g_exec, self.p.rpc);
+            ctx.drain_fifo(&mut |_, _| {
+                let fin = master.serve(respond_at, rng.lognormal(g_launch));
+                let exec = rng.lognormal(g_exec);
+                Launch::start(fin + rpc + exec)
+            });
+        }
+    }
+
+    fn on_complete(
+        &mut self,
+        _ctx: &mut KernelCtx,
+        now: Time,
+        _task: TaskId,
+        _slot: u32,
+    ) -> Option<Time> {
+        let fin = self.master.serve(now, self.rng.lognormal(&self.g_complete));
+        Some(fin + self.p.agent_teardown)
+    }
+
+    fn daemon_busy(&self) -> f64 {
+        self.master.busy()
+    }
+}
+
 impl Scheduler for MesosSim {
     fn name(&self) -> &'static str {
         self.params.name
@@ -83,122 +147,21 @@ impl Scheduler for MesosSim {
         scratch: &mut SimScratch,
     ) -> RunResult {
         let p = &self.params;
-        let mut rng = Prng::new(seed ^ 0x4E50_05E5);
-        // Precomputed jitter distributions (hot path).
-        let g_offer = LognormalGen::new(p.offer_batch_cost, p.jitter_cv);
-        let g_launch = LognormalGen::new(p.launch_cost_per_task, p.jitter_cv);
-        let g_complete = LognormalGen::new(p.complete_cost_per_task, p.jitter_cv);
-        let g_exec = LognormalGen::new(p.executor_startup_mean, p.executor_startup_cv);
-        let n = workload.len();
-        scratch.begin(cluster, n, options.collect_trace);
-        let SimScratch {
-            queue: q,
-            pending,
-            pool,
-            slot_mem,
-            trace,
-            trace_idx,
-            ..
-        } = scratch;
-        let mut master = ServiceStation::new();
-
-        for t in &workload.tasks {
-            if t.submit_at <= 0.0 && !options.individual_submission {
-                pending.push_back(t.id);
-            } else {
-                q.push(t.submit_at.max(0.0), SimEv::Arrive { task: t.id });
-            }
-        }
-        let mut makespan: f64 = 0.0;
-        let mut completed = 0usize;
-        let mut waits = Summary::new();
-
-        // Framework registration; first offer round follows.
-        q.push(p.framework_latency, SimEv::Tick);
-
-        while let Some((now, ev)) = q.pop() {
-            match ev {
-                SimEv::Arrive { task } => {
-                    master.serve(now, rng.lognormal(&g_launch));
-                    pending.push_back(task);
-                }
-                SimEv::Tick => {
-                    if pool.free_count() > 0 && !pending.is_empty() {
-                        // One offer batch covering all currently-free agents.
-                        let t_off = master.serve(now, rng.lognormal(&g_offer));
-                        let respond_at = t_off + p.rpc + p.framework_latency;
-                        // Framework accepts: one launch per pending task that
-                        // fits the offered resources.
-                        while !pending.is_empty() {
-                            let task_id = *pending.front().unwrap();
-                            let task = &workload.tasks[task_id as usize];
-                            let Some(slot) = pool.alloc(task.mem_mb) else {
-                                break;
-                            };
-                            pending.pop_front();
-                            slot_mem[slot as usize] = task.mem_mb;
-                            let fin = master.serve(respond_at, rng.lognormal(&g_launch));
-                            let exec = rng.lognormal(&g_exec);
-                            q.push(fin + p.rpc + exec, SimEv::Start { task: task_id, slot });
-                        }
-                    }
-                    if completed < n {
-                        q.push(now + p.offer_interval, SimEv::Tick);
-                    }
-                }
-                SimEv::Start { task, slot } => {
-                    let spec = &workload.tasks[task as usize];
-                    waits.add(now - spec.submit_at);
-                    if options.collect_trace {
-                        trace_idx[task as usize] = trace.len() as u32;
-                        trace.push(TraceRecord {
-                            task,
-                            node: pool.node_of(slot),
-                            slot,
-                            submit: spec.submit_at,
-                            start: now,
-                            end: 0.0,
-                        });
-                    }
-                    q.push(now + spec.duration, SimEv::End { task, slot });
-                }
-                SimEv::End { task, slot } => {
-                    completed += 1;
-                    makespan = makespan.max(now);
-                    if options.collect_trace {
-                        trace[trace_idx[task as usize] as usize].end = now;
-                    }
-                    let fin = master.serve(now, rng.lognormal(&g_complete));
-                    q.push(fin + p.agent_teardown, SimEv::SlotFree { slot });
-                }
-                SimEv::SlotFree { slot } => {
-                    pool.release(slot, slot_mem[slot as usize]);
-                }
-                SimEv::Stage { .. } => unreachable!("mesos sim emits no Stage events"),
-            }
-        }
-
-        debug_assert_eq!(completed, n);
-        let processors = cluster.total_cores();
-        let events = q.popped();
-        RunResult {
-            scheduler: p.name.to_string(),
-            workload: workload.label.clone(),
-            n_tasks: n as u64,
-            processors,
-            t_total: makespan,
-            t_job: workload.t_job_per_proc(processors),
-            events,
-            daemon_busy: master.busy(),
-            waits,
-            trace: options.collect_trace.then(|| std::mem::take(trace)),
-        }
+        let mut policy = MesosPolicy {
+            p,
+            rng: Prng::new(seed ^ 0x4E50_05E5),
+            g_offer: LognormalGen::new(p.offer_batch_cost, p.jitter_cv),
+            g_launch: LognormalGen::new(p.launch_cost_per_task, p.jitter_cv),
+            g_complete: LognormalGen::new(p.complete_cost_per_task, p.jitter_cv),
+            g_exec: LognormalGen::new(p.executor_startup_mean, p.executor_startup_cv),
+            master: ServiceStation::new(),
+        };
+        Kernel::run(&mut policy, workload, cluster, options, scratch)
     }
 
     fn projected_runtime(&self, workload: &Workload, cluster: &ClusterSpec) -> f64 {
         let p = cluster.total_cores() as f64;
-        let per_task =
-            self.params.launch_cost_per_task + self.params.complete_cost_per_task;
+        let per_task = self.params.launch_cost_per_task + self.params.complete_cost_per_task;
         (workload.total_work() / p).max(workload.len() as f64 * per_task)
     }
 }
@@ -240,5 +203,32 @@ mod tests {
         let r = sim.run(&w, &cluster(), 5, &RunOptions::default());
         assert!(r.delta_t() > 0.0);
         assert!(r.utilization() > 0.8, "u={}", r.utilization());
+    }
+
+    #[test]
+    fn gang_jobs_start_together_through_offers() {
+        let sim = MesosSim::new(calibration::mesos_params());
+        let w = WorkloadBuilder::constant(10.0)
+            .tasks(32)
+            .gangs(4)
+            .label("g")
+            .build();
+        let r = sim.run(&w, &cluster(), 6, &RunOptions::with_trace());
+        r.check_invariants().unwrap();
+        // Members of each gang must be dispatched in the same offer
+        // round: their starts differ only by per-task launch costs,
+        // far below the 1 s offer interval.
+        let trace = r.trace.as_ref().unwrap();
+        for job in 0..8u32 {
+            let starts: Vec<f64> = trace
+                .iter()
+                .filter(|t| w.tasks[t.task as usize].job == job)
+                .map(|t| t.start)
+                .collect();
+            assert_eq!(starts.len(), 4);
+            let lo = starts.iter().cloned().fold(f64::INFINITY, f64::min);
+            let hi = starts.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            assert!(hi - lo < 5.0, "gang {job} start skew {}", hi - lo);
+        }
     }
 }

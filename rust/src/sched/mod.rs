@@ -13,8 +13,19 @@
 //!   container runs (the paper: "Hadoop YARN has greater overhead for
 //!   each job, including launching an application master process for
 //!   each job").
+//! * [`sparrow`] — decentralized power-of-two-choices placement
+//!   (research family).
+//! * [`batchq`] — batch-queue policies (FCFS / priority / fairshare /
+//!   EASY backfill) over rigid parallel jobs.
 //! * [`ideal`] — zero-overhead FIFO used as a correctness reference
 //!   (T_total == ceil(N/P)·t exactly, U == 1).
+//!
+//! Since the kernel refactor every backend is a
+//! [`crate::sim::SchedPolicy`]: the event loop, slot packing, gang
+//! dispatch, dependency gating and result assembly live once in
+//! [`crate::sim::Kernel`]; each file here contributes only mechanism
+//! parameters and policy pricing. A new policy is a ~100-line file, not
+//! a ~300-line fork of the loop.
 //!
 //! The power law ΔT = t_s·n^α_s is *not* hard-coded anywhere: it
 //! emerges from daemon queueing, cycle waits and per-task overheads.
@@ -110,6 +121,16 @@ pub fn make_scheduler_scaled(choice: SchedulerChoice, k: u32) -> Box<dyn Schedul
             p.complete_cost_per_app *= k;
             Box::new(yarn::YarnSim::new(p))
         }
+        SchedulerChoice::Sparrow => {
+            // No central daemon to saturate; scale the per-task
+            // overheads so ΔT per task keeps its proportion.
+            let d = sparrow::SparrowParams::default();
+            Box::new(sparrow::SparrowSim::new(sparrow::SparrowParams {
+                probe_rtt: d.probe_rtt * k,
+                launch_overhead: d.launch_overhead * k,
+                ..d
+            }))
+        }
         SchedulerChoice::IdealFifo => Box::new(ideal::IdealFifo),
     }
 }
@@ -125,6 +146,9 @@ pub fn make_scheduler(choice: SchedulerChoice) -> Box<dyn Scheduler> {
         )),
         SchedulerChoice::Mesos => Box::new(mesos::MesosSim::new(calibration::mesos_params())),
         SchedulerChoice::Yarn => Box::new(yarn::YarnSim::new(calibration::yarn_params())),
+        SchedulerChoice::Sparrow => Box::new(sparrow::SparrowSim::new(
+            sparrow::SparrowParams::default(),
+        )),
         SchedulerChoice::IdealFifo => Box::new(ideal::IdealFifo),
     }
 }

@@ -11,14 +11,20 @@
 //! the centralized Table 10 schedulers ("distributed scheduler
 //! architecture would allow for greater resilience but could cost the
 //! scheduler in performance", §3.2.6).
+//!
+//! As a [`SchedPolicy`] Sparrow does its own capacity bookkeeping:
+//! tasks are *placed* into per-slot backlogs (`busy_until`) the moment
+//! they become ready, not allocated kernel slots, so
+//! [`SchedPolicy::on_complete`] returns `None` and the kernel emits no
+//! `SlotFree` events. Multi-core tasks claim several distinct backlog
+//! slots; gangs place all members with a common synchronized start.
 
 use super::result::{RunOptions, RunResult};
 use super::Scheduler;
 use crate::cluster::ClusterSpec;
-use crate::sim::SimScratch;
+use crate::sim::{Kernel, KernelCtx, SchedPolicy, SimEv, SimScratch, Time};
 use crate::util::prng::Prng;
-use crate::util::stats::Summary;
-use crate::workload::{TraceRecord, Workload};
+use crate::workload::{JobKind, TaskId, Workload};
 
 /// Sparrow-model parameters.
 #[derive(Clone, Debug)]
@@ -59,6 +65,145 @@ impl SparrowSim {
     }
 }
 
+struct SparrowPolicy<'p> {
+    p: &'p SparrowParams,
+    rng: Prng,
+}
+
+impl SparrowPolicy<'_> {
+    /// Probe d random slots, preferring the least-backlogged; slots in
+    /// `taken` (already claimed by this task/gang) are skipped by a
+    /// deterministic linear advance so concurrent claims stay distinct.
+    fn probe(&mut self, busy: &[f64], taken: &[usize]) -> usize {
+        let slots = busy.len();
+        let mut best = self.rng.choose_index(slots);
+        for _ in 1..self.p.probes.max(1) {
+            let probe = self.rng.choose_index(slots);
+            if busy[probe] < busy[best] {
+                best = probe;
+            }
+        }
+        while taken.contains(&best) {
+            best = (best + 1) % slots;
+        }
+        best
+    }
+
+    /// Place every ready pending task. Gangs wait until all members
+    /// are ready, then place with a synchronized start.
+    fn place_ready(&mut self, ctx: &mut KernelCtx, now: Time) {
+        let slots = ctx.capacity();
+        assert!(slots > 0, "empty cluster");
+        if ctx.busy_until().len() < slots {
+            ctx.busy_until().resize(slots, 0.0);
+        }
+        for tid in ctx.pending_snapshot() {
+            let task = &ctx.workload().tasks[tid as usize];
+            if task.kind == JobKind::Parallel {
+                if !ctx.gang_all_ready(task.job) {
+                    continue; // placed when the last member arrives
+                }
+                let members = ctx.pending_members(task.job);
+                let gang_cores: usize = members
+                    .iter()
+                    .map(|&m| ctx.workload().tasks[m as usize].cores.max(1) as usize)
+                    .sum();
+                assert!(
+                    gang_cores <= slots,
+                    "gang {} needs {gang_cores} cores; cluster has {slots}",
+                    task.job
+                );
+                // Probe per member, then synchronize the start.
+                let mut taken: Vec<usize> = Vec::new();
+                let mut placements: Vec<(TaskId, usize, usize)> = Vec::new();
+                let mut start_all = 0.0f64;
+                for &m in &members {
+                    let spec = &ctx.workload().tasks[m as usize];
+                    let first = taken.len();
+                    let mut worst_busy = 0.0f64;
+                    for _ in 0..spec.cores.max(1) {
+                        let s = self.probe(ctx.busy_until(), &taken);
+                        worst_busy = worst_busy.max(ctx.busy_until()[s]);
+                        taken.push(s);
+                    }
+                    let overhead = self.p.probe_rtt
+                        + self
+                            .rng
+                            .lognormal_mean_cv(self.p.launch_overhead, self.p.jitter_cv);
+                    let raw = worst_busy.max(spec.submit_at).max(now) + overhead;
+                    start_all = start_all.max(raw);
+                    placements.push((m, first, taken.len() - first));
+                }
+                for (m, first, count) in placements {
+                    let dur = ctx.workload().tasks[m as usize].duration;
+                    for &s in &taken[first..first + count] {
+                        ctx.busy_until()[s] = start_all + dur;
+                    }
+                    ctx.take_task(m);
+                    let slot = taken[first] as u32;
+                    ctx.push(start_all, SimEv::Start { task: m, slot });
+                }
+            } else {
+                if !ctx.take_task(tid) {
+                    continue; // already placed as part of a gang
+                }
+                assert!(
+                    task.cores.max(1) as usize <= slots,
+                    "task {} needs {} cores; cluster has {slots}",
+                    task.id,
+                    task.cores
+                );
+                // Batch sampling: probe d random slots per core.
+                let mut taken: Vec<usize> = Vec::new();
+                let mut worst_busy = 0.0f64;
+                for _ in 0..task.cores.max(1) {
+                    let s = self.probe(ctx.busy_until(), &taken);
+                    worst_busy = worst_busy.max(ctx.busy_until()[s]);
+                    taken.push(s);
+                }
+                let overhead = self.p.probe_rtt
+                    + self
+                        .rng
+                        .lognormal_mean_cv(self.p.launch_overhead, self.p.jitter_cv);
+                let start = worst_busy.max(task.submit_at).max(now) + overhead;
+                let end = start + task.duration;
+                for &s in &taken {
+                    ctx.busy_until()[s] = end;
+                }
+                ctx.push(start, SimEv::Start { task: tid, slot: taken[0] as u32 });
+            }
+        }
+    }
+}
+
+impl SchedPolicy for SparrowPolicy<'_> {
+    fn label(&self) -> String {
+        self.p.name.to_string()
+    }
+
+    fn on_submit(&mut self, ctx: &mut KernelCtx, _batch: usize) {
+        self.place_ready(ctx, 0.0);
+    }
+
+    fn on_arrive(&mut self, ctx: &mut KernelCtx, now: Time, _task: TaskId) {
+        self.place_ready(ctx, now);
+    }
+
+    fn on_deps_ready(&mut self, ctx: &mut KernelCtx, now: Time) {
+        self.place_ready(ctx, now);
+    }
+
+    fn on_complete(
+        &mut self,
+        _ctx: &mut KernelCtx,
+        _now: Time,
+        _task: TaskId,
+        _slot: u32,
+    ) -> Option<Time> {
+        None // backlog bookkeeping happened at placement time
+    }
+}
+
 impl Scheduler for SparrowSim {
     fn name(&self) -> &'static str {
         self.params.name
@@ -72,65 +217,11 @@ impl Scheduler for SparrowSim {
         options: &RunOptions,
         scratch: &mut SimScratch,
     ) -> RunResult {
-        let p = &self.params;
-        let mut rng = Prng::new(seed ^ 0x5BA2_2063);
-        scratch.begin(cluster, workload.len(), options.collect_trace);
-        let SimScratch {
-            pool,
-            busy_until,
-            trace,
-            ..
-        } = scratch;
-        let slots = pool.capacity();
-        assert!(slots > 0, "empty cluster");
-
-        // Per-slot local queues: we only need the backlog (busy-until)
-        // per slot — tasks placed by least-backlog-of-d-probes run FIFO.
-        busy_until.resize(slots, 0.0f64);
-        let mut waits = Summary::new();
-        let mut makespan = 0.0f64;
-
-        for task in &workload.tasks {
-            // Batch sampling: probe d distinct random slots.
-            let mut best = rng.choose_index(slots);
-            for _ in 1..p.probes.max(1) {
-                let probe = rng.choose_index(slots);
-                if busy_until[probe] < busy_until[best] {
-                    best = probe;
-                }
-            }
-            let overhead = p.probe_rtt
-                + rng.lognormal_mean_cv(p.launch_overhead, p.jitter_cv);
-            let start = busy_until[best].max(task.submit_at) + overhead;
-            let end = start + task.duration;
-            busy_until[best] = end;
-            makespan = makespan.max(end);
-            waits.add(start - task.submit_at);
-            if options.collect_trace {
-                trace.push(TraceRecord {
-                    task: task.id,
-                    node: pool.node_of(best as u32),
-                    slot: best as u32,
-                    submit: task.submit_at,
-                    start,
-                    end,
-                });
-            }
-        }
-
-        let processors = cluster.total_cores();
-        RunResult {
-            scheduler: p.name.to_string(),
-            workload: workload.label.clone(),
-            n_tasks: workload.len() as u64,
-            processors,
-            t_total: makespan,
-            t_job: workload.t_job_per_proc(processors),
-            events: workload.len() as u64,
-            daemon_busy: 0.0, // no central daemon — the point
-            waits,
-            trace: options.collect_trace.then(|| std::mem::take(trace)),
-        }
+        let mut policy = SparrowPolicy {
+            p: &self.params,
+            rng: Prng::new(seed ^ 0x5BA2_2063),
+        };
+        Kernel::run(&mut policy, workload, cluster, options, scratch)
     }
 }
 
@@ -217,6 +308,53 @@ mod tests {
             let fresh = sim.run(w, &cluster(), seed, &RunOptions::with_trace());
             assert_eq!(warm.t_total.to_bits(), fresh.t_total.to_bits());
             assert_eq!(warm.trace.as_ref().unwrap(), fresh.trace.as_ref().unwrap());
+        }
+    }
+
+    #[test]
+    fn gang_members_start_together() {
+        let sim = SparrowSim::new(SparrowParams::default());
+        let w = WorkloadBuilder::constant(2.0)
+            .tasks(32)
+            .gangs(8)
+            .label("g")
+            .build();
+        let r = sim.run(&w, &cluster(), 11, &RunOptions::with_trace());
+        r.check_invariants().unwrap();
+        let trace = r.trace.as_ref().unwrap();
+        for job in 0..4u32 {
+            let starts: Vec<f64> = trace
+                .iter()
+                .filter(|t| w.tasks[t.task as usize].job == job)
+                .map(|t| t.start)
+                .collect();
+            assert_eq!(starts.len(), 8);
+            for &s in &starts {
+                assert!((s - starts[0]).abs() < 1e-12, "gang {job} skew");
+            }
+        }
+    }
+
+    #[test]
+    fn dag_children_start_after_parents() {
+        let sim = SparrowSim::new(SparrowParams::default());
+        let w = WorkloadBuilder::constant(1.0)
+            .tasks(64)
+            .dag_chains(8)
+            .build();
+        let r = sim.run(&w, &cluster(), 13, &RunOptions::with_trace());
+        r.check_invariants().unwrap();
+        let trace = r.trace.as_ref().unwrap();
+        let mut start = vec![0.0f64; 64];
+        let mut end = vec![0.0f64; 64];
+        for rec in trace {
+            start[rec.task as usize] = rec.start;
+            end[rec.task as usize] = rec.end;
+        }
+        for t in &w.tasks {
+            for &d in &t.deps {
+                assert!(start[t.id as usize] >= end[d as usize] - 1e-9);
+            }
         }
     }
 }

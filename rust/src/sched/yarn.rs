@@ -1,4 +1,4 @@
-//! Hadoop-YARN-like scheduler simulator.
+//! Hadoop-YARN-like scheduler policy.
 //!
 //! Mechanism (mirrors ResourceManager + NodeManagers, Hadoop 2.7):
 //!
@@ -17,14 +17,17 @@
 //! α_s ≈ 1.0 with a huge t_s ≈ 33 s (Table 10), and rapid-task runs
 //! become prohibitive (the paper abandoned them; the harness skips them
 //! via [`Scheduler::projected_runtime`]).
+//!
+//! The event loop lives in [`crate::sim::Kernel`]; this is the only
+//! policy that uses the kernel's `Stage` hook (AM ready → container
+//! launch).
 
 use super::result::{RunOptions, RunResult};
 use super::Scheduler;
 use crate::cluster::ClusterSpec;
-use crate::sim::{ServiceStation, SimEv, SimScratch};
+use crate::sim::{Kernel, KernelCtx, Launch, SchedPolicy, ServiceStation, SimEv, SimScratch, Time};
 use crate::util::prng::{LognormalGen, Prng};
-use crate::util::stats::Summary;
-use crate::workload::{TraceRecord, Workload};
+use crate::workload::{TaskId, Workload};
 
 /// Mechanism parameters for the YARN-like model.
 #[derive(Clone, Debug)]
@@ -70,6 +73,67 @@ impl YarnSim {
     }
 }
 
+/// Per-run policy state: the ResourceManager station + jitter gens.
+struct YarnPolicy<'p> {
+    p: &'p YarnParams,
+    rng: Prng,
+    g_rm: LognormalGen,
+    g_complete: LognormalGen,
+    g_am: LognormalGen,
+    rm: ServiceStation,
+}
+
+impl SchedPolicy for YarnPolicy<'_> {
+    fn label(&self) -> String {
+        self.p.name.to_string()
+    }
+
+    fn on_submit(&mut self, ctx: &mut KernelCtx, _batch: usize) {
+        ctx.push(self.p.nm_heartbeat, SimEv::Tick);
+    }
+
+    fn on_arrive(&mut self, _ctx: &mut KernelCtx, now: Time, _task: TaskId) {
+        self.rm.serve(now, self.rng.lognormal(&self.g_rm));
+    }
+
+    fn tick_interval(&self) -> Option<Time> {
+        Some(self.p.nm_heartbeat)
+    }
+
+    fn on_tick(&mut self, ctx: &mut KernelCtx, now: Time) {
+        // Heartbeating NMs report free containers; RM grants AM
+        // containers for queued applications.
+        let (rm, rng) = (&mut self.rm, &mut self.rng);
+        let (g_rm, g_am, rpc) = (&self.g_rm, &self.g_am, self.p.rpc);
+        ctx.drain_fifo(&mut |_, _| {
+            let fin = rm.serve(now, rng.lognormal(g_rm));
+            let am = rng.lognormal(g_am);
+            Launch::staged(fin + rpc + am)
+        });
+    }
+
+    fn on_stage(&mut self, ctx: &mut KernelCtx, now: Time, task: TaskId, slot: u32) {
+        // AM is up; it asks for its task container, launched on the
+        // same node.
+        ctx.push(now + self.p.container_launch, SimEv::Start { task, slot });
+    }
+
+    fn on_complete(
+        &mut self,
+        _ctx: &mut KernelCtx,
+        now: Time,
+        _task: TaskId,
+        _slot: u32,
+    ) -> Option<Time> {
+        let fin = self.rm.serve(now, self.rng.lognormal(&self.g_complete));
+        Some(fin + self.p.teardown)
+    }
+
+    fn daemon_busy(&self) -> f64 {
+        self.rm.busy()
+    }
+}
+
 impl Scheduler for YarnSim {
     fn name(&self) -> &'static str {
         self.params.name
@@ -84,113 +148,15 @@ impl Scheduler for YarnSim {
         scratch: &mut SimScratch,
     ) -> RunResult {
         let p = &self.params;
-        let mut rng = Prng::new(seed ^ 0x7A42_4EAD);
-        // Precomputed jitter distributions (hot path).
-        let g_rm = LognormalGen::new(p.rm_cost_per_app, p.jitter_cv);
-        let g_complete = LognormalGen::new(p.complete_cost_per_app, p.jitter_cv);
-        let g_am = LognormalGen::new(p.am_startup_mean, p.am_startup_cv);
-        let n = workload.len();
-        scratch.begin(cluster, n, options.collect_trace);
-        let SimScratch {
-            queue: q,
-            pending,
-            pool,
-            slot_mem,
-            trace,
-            trace_idx,
-            ..
-        } = scratch;
-        let mut rm = ServiceStation::new();
-
-        for t in &workload.tasks {
-            if t.submit_at <= 0.0 && !options.individual_submission {
-                pending.push_back(t.id);
-            } else {
-                q.push(t.submit_at.max(0.0), SimEv::Arrive { task: t.id });
-            }
-        }
-        let mut makespan: f64 = 0.0;
-        let mut completed = 0usize;
-        let mut waits = Summary::new();
-
-        q.push(p.nm_heartbeat, SimEv::Tick);
-
-        while let Some((now, ev)) = q.pop() {
-            match ev {
-                SimEv::Arrive { task } => {
-                    rm.serve(now, rng.lognormal(&g_rm));
-                    pending.push_back(task);
-                }
-                SimEv::Tick => {
-                    // Heartbeating NMs report free containers; RM grants
-                    // AM containers for queued applications.
-                    while !pending.is_empty() {
-                        let task_id = *pending.front().unwrap();
-                        let task = &workload.tasks[task_id as usize];
-                        let Some(slot) = pool.alloc(task.mem_mb) else {
-                            break;
-                        };
-                        pending.pop_front();
-                        slot_mem[slot as usize] = task.mem_mb;
-                        let fin = rm.serve(now, rng.lognormal(&g_rm));
-                        let am = rng.lognormal(&g_am);
-                        q.push(fin + p.rpc + am, SimEv::Stage { task: task_id, slot });
-                    }
-                    if completed < n {
-                        q.push(now + p.nm_heartbeat, SimEv::Tick);
-                    }
-                }
-                SimEv::Stage { task, slot } => {
-                    // AM is up; it asks for its task container, launched
-                    // on the same node.
-                    q.push(now + p.container_launch, SimEv::Start { task, slot });
-                }
-                SimEv::Start { task, slot } => {
-                    let spec = &workload.tasks[task as usize];
-                    waits.add(now - spec.submit_at);
-                    if options.collect_trace {
-                        trace_idx[task as usize] = trace.len() as u32;
-                        trace.push(TraceRecord {
-                            task,
-                            node: pool.node_of(slot),
-                            slot,
-                            submit: spec.submit_at,
-                            start: now,
-                            end: 0.0,
-                        });
-                    }
-                    q.push(now + spec.duration, SimEv::End { task, slot });
-                }
-                SimEv::End { task, slot } => {
-                    completed += 1;
-                    makespan = makespan.max(now);
-                    if options.collect_trace {
-                        trace[trace_idx[task as usize] as usize].end = now;
-                    }
-                    let fin = rm.serve(now, rng.lognormal(&g_complete));
-                    q.push(fin + p.teardown, SimEv::SlotFree { slot });
-                }
-                SimEv::SlotFree { slot } => {
-                    pool.release(slot, slot_mem[slot as usize]);
-                }
-            }
-        }
-
-        debug_assert_eq!(completed, n);
-        let processors = cluster.total_cores();
-        let events = q.popped();
-        RunResult {
-            scheduler: p.name.to_string(),
-            workload: workload.label.clone(),
-            n_tasks: n as u64,
-            processors,
-            t_total: makespan,
-            t_job: workload.t_job_per_proc(processors),
-            events,
-            daemon_busy: rm.busy(),
-            waits,
-            trace: options.collect_trace.then(|| std::mem::take(trace)),
-        }
+        let mut policy = YarnPolicy {
+            p,
+            rng: Prng::new(seed ^ 0x7A42_4EAD),
+            g_rm: LognormalGen::new(p.rm_cost_per_app, p.jitter_cv),
+            g_complete: LognormalGen::new(p.complete_cost_per_app, p.jitter_cv),
+            g_am: LognormalGen::new(p.am_startup_mean, p.am_startup_cv),
+            rm: ServiceStation::new(),
+        };
+        Kernel::run(&mut policy, workload, cluster, options, scratch)
     }
 
     fn projected_runtime(&self, workload: &Workload, cluster: &ClusterSpec) -> f64 {
@@ -242,5 +208,24 @@ mod tests {
         let projected = sim.projected_runtime(&w, &cluster());
         // 240 tasks/proc × (1 s + ~33 s AM) ≈ 2+ hours.
         assert!(projected > 3600.0, "projected={projected}");
+    }
+
+    #[test]
+    fn multicore_tasks_hold_all_their_containers() {
+        let sim = YarnSim::new(calibration::yarn_params());
+        let w = WorkloadBuilder::constant(20.0)
+            .tasks(8)
+            .cores(4)
+            .label("mc")
+            .build();
+        // 8 tasks × 4 cores on 16 slots: two waves; each wave pays one
+        // AM startup, so T_total ≈ 2 × (hb + AM + launch + 20 s).
+        let r = sim.run(&w, &cluster(), 5, &RunOptions::with_trace());
+        r.check_invariants().unwrap();
+        assert!(
+            r.t_total > 2.0 * 20.0 + 31.0,
+            "multi-core waves must serialize: t_total={}",
+            r.t_total
+        );
     }
 }

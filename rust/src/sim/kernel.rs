@@ -1,0 +1,964 @@
+//! Unified control-plane kernel: one event loop, many policies.
+//!
+//! Before this module every scheduler backend hand-rolled the same
+//! `while let Some((now, ev)) = q.pop()` loop with duplicated
+//! submission seeding, trace/wait/makespan accounting, slot
+//! alloc/release and `RunResult` assembly — and every one of them
+//! ignored the `cores`, `deps`, `submit_at` and `JobKind::Parallel`
+//! dimensions that [`crate::workload::TaskSpec`] already declares.
+//! [`Kernel::run`] owns all of that *mechanism* once; a backend is now
+//! a [`SchedPolicy`] — pure policy logic (when does a dispatch happen,
+//! what does the daemon charge for it) expressed through hooks:
+//!
+//! * [`SchedPolicy::on_submit`] — seed the first control-plane event
+//!   (periodic tick, or an immediate dispatch for event-driven
+//!   policies) and charge batch-submission costs;
+//! * [`SchedPolicy::on_arrive`] — a deferred submission reached the
+//!   control plane (charge per-job submission cost);
+//! * [`SchedPolicy::on_tick`] — the periodic pass (scheduling cycle,
+//!   offer round, heartbeat): scan costs + dispatch via
+//!   [`KernelCtx::drain_fifo`];
+//! * [`SchedPolicy::on_dispatch`] is expressed as the closure those
+//!   drain helpers call per task: it prices one launch and returns a
+//!   [`Launch`] (start time, optionally via an intermediate `Stage`);
+//! * [`SchedPolicy::on_complete`] — completion bookkeeping; returns
+//!   when the task's slots become reusable;
+//! * [`SchedPolicy::on_slot_free`] / [`SchedPolicy::on_deps_ready`] —
+//!   dispatch opportunities for event-driven (tickless) policies.
+//!
+//! The kernel makes the dormant workload dimensions real for every
+//! policy at once:
+//!
+//! * **multi-core tasks** — `cores > 1` allocates that many slots
+//!   all-or-nothing (with rollback that restores the free-stack order,
+//!   so the `cores == 1` path is bit-identical to the historical
+//!   per-backend loops);
+//! * **DAG dependencies** — `deps` gate admission to the pending queue
+//!   via an indegree table + CSR edge list; children are admitted the
+//!   moment their last parent's `End` event fires;
+//! * **gang scheduling** — `JobKind::Parallel` jobs dispatch
+//!   all-or-nothing once every member is ready, and a blocked gang is
+//!   skipped over so later tasks can backfill around it;
+//! * **arrival processes** — `submit_at > 0` tasks arrive through
+//!   `Arrive` events (see [`crate::workload::ArrivalProcess`]).
+//!
+//! Determinism contract: for workloads using none of the new
+//! dimensions (1-core, dep-free, all-at-once `Array` tasks — the
+//! paper's benchmark shape), the kernel replays the exact event and
+//! RNG-draw sequence of the pre-kernel per-backend loops, so
+//! `t_total`, `daemon_busy` and traces are bit-identical to the
+//! pre-refactor implementation (`tests/golden_array.rs` pins this).
+
+use super::engine::{EventQueue, SimEv, Time};
+use super::scratch::SimScratch;
+use crate::cluster::{ClusterSpec, SlotId, SlotPool};
+use crate::sched::{RunOptions, RunResult};
+use crate::util::stats::Summary;
+use crate::workload::{JobId, JobKind, TaskId, TraceRecord, Workload};
+use std::collections::VecDeque;
+
+/// How one dispatched task enters execution.
+#[derive(Clone, Copy, Debug)]
+pub struct Launch {
+    /// Absolute virtual time of the launch event.
+    pub at: Time,
+    /// Route through an intermediate `Stage` event (e.g. YARN's
+    /// ApplicationMaster becoming ready) instead of starting directly.
+    pub via_stage: bool,
+}
+
+impl Launch {
+    /// Start executing at `at`.
+    pub fn start(at: Time) -> Self {
+        Self {
+            at,
+            via_stage: false,
+        }
+    }
+
+    /// Reach an intermediate launch stage at `at`; the policy's
+    /// [`SchedPolicy::on_stage`] hook decides what happens next.
+    pub fn staged(at: Time) -> Self {
+        Self {
+            at,
+            via_stage: true,
+        }
+    }
+}
+
+/// Per-dispatch pricing callback: given `(task, primary slot)`, charge
+/// whatever control-plane costs apply and say when the task launches.
+pub type LaunchFn<'c> = dyn FnMut(TaskId, SlotId) -> Launch + 'c;
+
+/// A scheduler policy driven by [`Kernel::run`]. Hooks default to
+/// no-ops so event-driven and tick-driven policies implement only what
+/// they use.
+pub trait SchedPolicy {
+    /// Display name used in [`RunResult::scheduler`].
+    fn label(&self) -> String;
+
+    /// Called once after the kernel has seeded the pending queue
+    /// (batch submissions) and `Arrive` events (deferred submissions).
+    /// `batch` is the number of tasks submitted at t = 0 as one batch.
+    /// Tick-driven policies push their first `Tick` here; event-driven
+    /// policies dispatch directly.
+    fn on_submit(&mut self, ctx: &mut KernelCtx, batch: usize);
+
+    /// A deferred submission reached the control plane (the task has
+    /// already been admitted to the pending queue if its dependencies
+    /// are satisfied).
+    fn on_arrive(&mut self, _ctx: &mut KernelCtx, _now: Time, _task: TaskId) {}
+
+    /// Periodic control-plane pass (scheduling cycle / offer round /
+    /// heartbeat). Only called when [`SchedPolicy::tick_interval`]
+    /// returns `Some`.
+    fn on_tick(&mut self, _ctx: &mut KernelCtx, _now: Time) {}
+
+    /// Interval between periodic passes; `None` for event-driven
+    /// policies. The kernel re-schedules the next tick while tasks
+    /// remain incomplete.
+    fn tick_interval(&self) -> Option<Time> {
+        None
+    }
+
+    /// An intermediate launch stage fired (a dispatch returned
+    /// [`Launch::staged`]). Policies that never stage keep the default.
+    fn on_stage(&mut self, _ctx: &mut KernelCtx, _now: Time, _task: TaskId, _slot: SlotId) {
+        unreachable!("policy emitted no Stage events but one fired");
+    }
+
+    /// A task finished executing. Charge completion costs and return
+    /// the time its slots become reusable, or `None` if the policy
+    /// does its own capacity bookkeeping (e.g. Sparrow's per-worker
+    /// backlogs never allocate kernel slots).
+    fn on_complete(&mut self, ctx: &mut KernelCtx, now: Time, task: TaskId, slot: SlotId)
+        -> Option<Time>;
+
+    /// A slot finished teardown and was returned to the pool.
+    /// Event-driven policies dispatch here.
+    fn on_slot_free(&mut self, _ctx: &mut KernelCtx, _now: Time) {}
+
+    /// One or more dependency-blocked tasks just became ready (their
+    /// last parent completed). Policies with no periodic tick and no
+    /// slot bookkeeping (Sparrow) dispatch here.
+    fn on_deps_ready(&mut self, _ctx: &mut KernelCtx, _now: Time) {}
+
+    /// Seconds the central daemon / master spent busy, for
+    /// [`RunResult::daemon_busy`].
+    fn daemon_busy(&self) -> f64 {
+        0.0
+    }
+}
+
+/// Mutable simulation state handed to policy hooks: the event queue,
+/// pending queue, slot pool and the shared dispatch mechanism
+/// (multi-core packing, gang all-or-nothing, dependency admission).
+pub struct KernelCtx<'w, 's> {
+    workload: &'w Workload,
+    queue: &'s mut EventQueue<SimEv>,
+    pending: &'s mut VecDeque<TaskId>,
+    pool: &'s mut SlotPool,
+    slot_mem: &'s mut Vec<i64>,
+    trace: &'s mut Vec<TraceRecord>,
+    trace_idx: &'s mut Vec<u32>,
+    busy_until: &'s mut Vec<f64>,
+    // Dependency gating (built only when the workload has deps).
+    has_deps: bool,
+    indeg: &'s mut Vec<u32>,
+    dep_off: &'s mut Vec<u32>,
+    dep_edges: &'s mut Vec<u32>,
+    submitted: &'s mut Vec<bool>,
+    // Gang scheduling (built only when the workload has Parallel jobs).
+    has_gang: bool,
+    gang_total: &'s mut Vec<u32>,
+    gang_ready: &'s mut Vec<u32>,
+    // Multi-core slot packing (built only when any task needs > 1 core).
+    extra_span: &'s mut Vec<(u32, u32)>,
+    extra_slots: &'s mut Vec<SlotId>,
+    // Kernel-owned accounting.
+    collect_trace: bool,
+    completed: usize,
+    makespan: f64,
+    waits: Summary,
+}
+
+impl<'w> KernelCtx<'w, '_> {
+    /// The workload being simulated (lives as long as the run, so the
+    /// reference can be held across mutable ctx calls).
+    pub fn workload(&self) -> &'w Workload {
+        self.workload
+    }
+
+    /// Schedule a raw simulation event (policies use this for their
+    /// first `Tick` and for `Stage` → `Start` transitions).
+    pub fn push(&mut self, at: Time, ev: SimEv) {
+        self.queue.push(at, ev);
+    }
+
+    /// Number of currently free core slots.
+    pub fn free_slots(&self) -> usize {
+        self.pool.free_count()
+    }
+
+    /// Total core-slot capacity of the cluster.
+    pub fn capacity(&self) -> usize {
+        self.pool.capacity()
+    }
+
+    /// Number of tasks admitted and awaiting dispatch.
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// True if further events are queued at exactly this timestamp.
+    /// Policies that must see a *complete* instant (all same-time
+    /// releases/arrivals applied) before making dispatch decisions —
+    /// e.g. EASY backfill's reservation test — defer their drain until
+    /// this returns false.
+    pub fn has_more_events_at(&self, now: Time) -> bool {
+        self.queue.next_time() == Some(now)
+    }
+
+    /// Snapshot of the pending queue in FIFO order (for policies that
+    /// re-order by priority/fairshare before dispatching).
+    pub fn pending_snapshot(&self) -> Vec<TaskId> {
+        self.pending.iter().copied().collect()
+    }
+
+    /// Per-slot busy-until table for policies that model worker-local
+    /// backlogs instead of allocating kernel slots (Sparrow).
+    pub fn busy_until(&mut self) -> &mut Vec<f64> {
+        &mut *self.busy_until
+    }
+
+    /// True when every member of a `Parallel` job is admitted and
+    /// waiting in the pending queue (the gang can be dispatched).
+    pub fn gang_all_ready(&self, job: JobId) -> bool {
+        if !self.has_gang {
+            return false;
+        }
+        let j = job as usize;
+        self.gang_total[j] > 0 && self.gang_ready[j] == self.gang_total[j]
+    }
+
+    /// Pending members of a `Parallel` job, in queue order. Non-gang
+    /// tasks that happen to share the job id are not members.
+    pub fn pending_members(&self, job: JobId) -> Vec<TaskId> {
+        self.pending
+            .iter()
+            .copied()
+            .filter(|&t| {
+                let spec = &self.workload.tasks[t as usize];
+                spec.job == job && spec.kind == JobKind::Parallel
+            })
+            .collect()
+    }
+
+    /// Remove `task` from the pending queue (with gang-readiness
+    /// bookkeeping). Returns false if it was not pending. For policies
+    /// that place tasks without kernel slot allocation; pair with
+    /// [`KernelCtx::push`]ing the `Start` event.
+    pub fn take_task(&mut self, task: TaskId) -> bool {
+        let Some(pos) = self.pending.iter().position(|&t| t == task) else {
+            return false;
+        };
+        self.remove_pending_at(pos);
+        true
+    }
+
+    /// The standard FIFO dispatch drain shared by the tick-driven
+    /// policies: walk the pending queue in order, allocate slots
+    /// (multi-core all-or-nothing), dispatch gangs atomically, skip
+    /// over blocked gangs so later tasks backfill, and stop at the
+    /// first ordinary task that does not fit (head-of-line blocking,
+    /// exactly as the historical per-backend loops did). `launch`
+    /// prices each dispatch.
+    ///
+    /// Allocation note: the pure-array path allocates nothing
+    /// (`tried_gangs` only allocates on first push), preserving the
+    /// zero-alloc sweep contract; gang attempts allocate small
+    /// member/rollback vectors, bounded by gangs per pass.
+    pub fn drain_fifo(&mut self, launch: &mut LaunchFn) {
+        let mut i = 0usize;
+        let mut tried_gangs: Vec<JobId> = Vec::new();
+        while i < self.pending.len() {
+            let tid = self.pending[i];
+            let task = &self.workload.tasks[tid as usize];
+            if task.kind == JobKind::Parallel {
+                let job = task.job;
+                if tried_gangs.contains(&job) {
+                    i += 1;
+                    continue;
+                }
+                if self.gang_all_ready(job) && self.try_dispatch_gang(job, launch) {
+                    // Members were removed at/after index i: re-examine i.
+                    continue;
+                }
+                tried_gangs.push(job);
+                i += 1;
+                continue;
+            }
+            match self.alloc_task(tid) {
+                Some(primary) => {
+                    self.remove_pending_at(i);
+                    let l = launch(tid, primary);
+                    self.emit_launch(tid, primary, l);
+                    // The next element shifted into position i.
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// Attempt to dispatch one specific pending task (policies that
+    /// impose their own queue order — priority, fairshare, backfill —
+    /// call this per candidate). Returns false if the task is not
+    /// pending or its slots cannot all be allocated.
+    pub fn try_dispatch(&mut self, task: TaskId, launch: &mut LaunchFn) -> bool {
+        let Some(pos) = self.pending.iter().position(|&t| t == task) else {
+            return false;
+        };
+        let Some(primary) = self.alloc_task(task) else {
+            return false;
+        };
+        self.remove_pending_at(pos);
+        let l = launch(task, primary);
+        self.emit_launch(task, primary, l);
+        true
+    }
+
+    // ---- internal mechanism -------------------------------------------------
+
+    fn remove_pending_at(&mut self, pos: usize) {
+        let tid = self.pending.remove(pos).expect("pending index in range");
+        if self.has_gang {
+            let t = &self.workload.tasks[tid as usize];
+            if t.kind == JobKind::Parallel {
+                self.gang_ready[t.job as usize] -= 1;
+            }
+        }
+    }
+
+    /// Admit a submitted task: enqueue it if its dependencies are met.
+    fn admit(&mut self, tid: TaskId) {
+        if self.has_deps {
+            self.submitted[tid as usize] = true;
+            if self.indeg[tid as usize] > 0 {
+                return;
+            }
+        }
+        self.enqueue_ready(tid);
+    }
+
+    fn enqueue_ready(&mut self, tid: TaskId) {
+        self.pending.push_back(tid);
+        if self.has_gang {
+            let t = &self.workload.tasks[tid as usize];
+            if t.kind == JobKind::Parallel {
+                self.gang_ready[t.job as usize] += 1;
+            }
+        }
+    }
+
+    /// Allocate every slot a task needs, all-or-nothing. The primary
+    /// slot carries the task's memory; extra slots (cores > 1) carry
+    /// none. On failure the allocations are rolled back in reverse so
+    /// the pool's free-stack order is exactly as before the attempt.
+    fn alloc_task(&mut self, tid: TaskId) -> Option<SlotId> {
+        let task = &self.workload.tasks[tid as usize];
+        let primary = self.pool.alloc(task.mem_mb)?;
+        self.slot_mem[primary as usize] = task.mem_mb;
+        if task.cores > 1 {
+            let start = self.extra_slots.len() as u32;
+            for _ in 1..task.cores {
+                match self.pool.alloc(0) {
+                    Some(s) => {
+                        self.slot_mem[s as usize] = 0;
+                        self.extra_slots.push(s);
+                    }
+                    None => {
+                        while self.extra_slots.len() as u32 > start {
+                            let s = self.extra_slots.pop().expect("non-empty");
+                            self.pool.release(s, 0);
+                        }
+                        self.pool.release(primary, task.mem_mb);
+                        return None;
+                    }
+                }
+            }
+            self.extra_span[tid as usize] = (start, task.cores - 1);
+        }
+        Some(primary)
+    }
+
+    /// Undo a successful [`KernelCtx::alloc_task`] (gang rollback).
+    /// Must be called in reverse allocation order.
+    fn undo_alloc(&mut self, tid: TaskId, primary: SlotId) {
+        let task = &self.workload.tasks[tid as usize];
+        if task.cores > 1 {
+            let (start, len) = self.extra_span[tid as usize];
+            debug_assert_eq!((start + len) as usize, self.extra_slots.len());
+            for _ in 0..len {
+                let s = self.extra_slots.pop().expect("non-empty");
+                self.pool.release(s, 0);
+            }
+            self.extra_span[tid as usize] = (0, 0);
+        }
+        self.pool.release(primary, task.mem_mb);
+    }
+
+    /// All-or-nothing gang dispatch: allocate slots for every pending
+    /// member of `job`, roll everything back if any member fails.
+    fn try_dispatch_gang(&mut self, job: JobId, launch: &mut LaunchFn) -> bool {
+        let members: Vec<(usize, TaskId)> = self
+            .pending
+            .iter()
+            .enumerate()
+            .filter(|&(_, &t)| {
+                let spec = &self.workload.tasks[t as usize];
+                spec.job == job && spec.kind == JobKind::Parallel
+            })
+            .map(|(i, &t)| (i, t))
+            .collect();
+        let mut allocated: Vec<(TaskId, SlotId)> = Vec::with_capacity(members.len());
+        for &(_, t) in &members {
+            match self.alloc_task(t) {
+                Some(p) => allocated.push((t, p)),
+                None => {
+                    for &(t2, p2) in allocated.iter().rev() {
+                        self.undo_alloc(t2, p2);
+                    }
+                    return false;
+                }
+            }
+        }
+        for &(idx, _) in members.iter().rev() {
+            self.remove_pending_at(idx);
+        }
+        for (t, p) in allocated {
+            let l = launch(t, p);
+            self.emit_launch(t, p, l);
+        }
+        true
+    }
+
+    fn emit_launch(&mut self, task: TaskId, slot: SlotId, l: Launch) {
+        let ev = if l.via_stage {
+            SimEv::Stage { task, slot }
+        } else {
+            SimEv::Start { task, slot }
+        };
+        self.queue.push(l.at, ev);
+    }
+
+    /// `Start` event: record wait + trace, schedule the `End`.
+    fn handle_start(&mut self, now: Time, task: TaskId, slot: SlotId) {
+        let spec = &self.workload.tasks[task as usize];
+        self.waits.add(now - spec.submit_at);
+        if self.collect_trace {
+            self.trace_idx[task as usize] = self.trace.len() as u32;
+            self.trace.push(TraceRecord {
+                task,
+                node: self.pool.node_of(slot),
+                slot,
+                submit: spec.submit_at,
+                start: now,
+                end: 0.0, // patched on End
+            });
+        }
+        self.queue.push(now + spec.duration, SimEv::End { task, slot });
+    }
+
+    /// `End` event bookkeeping (before the policy's completion hook).
+    fn handle_end(&mut self, now: Time, task: TaskId) {
+        self.completed += 1;
+        self.makespan = self.makespan.max(now);
+        if self.collect_trace {
+            self.trace[self.trace_idx[task as usize] as usize].end = now;
+        }
+    }
+
+    /// Decrement dependents' indegrees; admit newly-ready tasks.
+    /// Returns true if any task was admitted.
+    fn propagate_deps(&mut self, task: TaskId) -> bool {
+        let a = self.dep_off[task as usize] as usize;
+        let b = self.dep_off[task as usize + 1] as usize;
+        let mut any = false;
+        for i in a..b {
+            let d = self.dep_edges[i];
+            self.indeg[d as usize] -= 1;
+            if self.indeg[d as usize] == 0 && self.submitted[d as usize] {
+                self.enqueue_ready(d);
+                any = true;
+            }
+        }
+        any
+    }
+}
+
+/// The unified simulation driver. See the module docs for the event
+/// loop / policy-hook contract.
+pub struct Kernel;
+
+impl Kernel {
+    /// Run `policy` over `workload` on `cluster`, reusing `scratch`'s
+    /// warm buffers, and assemble the [`RunResult`].
+    pub fn run(
+        policy: &mut dyn SchedPolicy,
+        workload: &Workload,
+        cluster: &ClusterSpec,
+        options: &RunOptions,
+        scratch: &mut SimScratch,
+    ) -> RunResult {
+        let n = workload.len();
+        scratch.begin(cluster, n, options.collect_trace);
+
+        // One pass over the task list decides which optional mechanisms
+        // this run needs; plain array workloads skip all of them.
+        let mut has_deps = false;
+        let mut has_gang = false;
+        let mut has_multicore = false;
+        let mut max_job = 0u32;
+        for t in &workload.tasks {
+            has_deps |= !t.deps.is_empty();
+            has_gang |= t.kind == JobKind::Parallel;
+            has_multicore |= t.cores > 1;
+            max_job = max_job.max(t.job);
+        }
+
+        if has_deps {
+            scratch.indeg.resize(n, 0);
+            scratch.submitted.resize(n, false);
+            // CSR of dep -> dependents edges.
+            scratch.dep_off.resize(n + 1, 0);
+            for t in &workload.tasks {
+                scratch.indeg[t.id as usize] = t.deps.len() as u32;
+                for &d in &t.deps {
+                    scratch.dep_off[d as usize + 1] += 1;
+                }
+            }
+            for i in 0..n {
+                let below = scratch.dep_off[i];
+                scratch.dep_off[i + 1] += below;
+            }
+            let total = scratch.dep_off[n] as usize;
+            scratch.dep_edges.resize(total, 0);
+            let mut cursor: Vec<u32> = scratch.dep_off[..n].to_vec();
+            for t in &workload.tasks {
+                for &d in &t.deps {
+                    let c = &mut cursor[d as usize];
+                    scratch.dep_edges[*c as usize] = t.id;
+                    *c += 1;
+                }
+            }
+        }
+        if has_gang {
+            scratch.gang_total.resize(max_job as usize + 1, 0);
+            scratch.gang_ready.resize(max_job as usize + 1, 0);
+            for t in &workload.tasks {
+                if t.kind == JobKind::Parallel {
+                    scratch.gang_total[t.job as usize] += 1;
+                }
+            }
+        }
+        if has_multicore {
+            scratch.extra_span.resize(n, (0, 0));
+        }
+
+        let SimScratch {
+            queue,
+            pending,
+            pool,
+            slot_mem,
+            trace,
+            trace_idx,
+            busy_until,
+            indeg,
+            dep_off,
+            dep_edges,
+            submitted,
+            gang_total,
+            gang_ready,
+            extra_span,
+            extra_slots,
+        } = scratch;
+        let mut ctx = KernelCtx {
+            workload,
+            queue,
+            pending,
+            pool,
+            slot_mem,
+            trace,
+            trace_idx,
+            busy_until,
+            has_deps,
+            indeg,
+            dep_off,
+            dep_edges,
+            submitted,
+            has_gang,
+            gang_total,
+            gang_ready,
+            extra_span,
+            extra_slots,
+            collect_trace: options.collect_trace,
+            completed: 0,
+            makespan: 0.0,
+            waits: Summary::new(),
+        };
+
+        // Seed submissions: batch tasks (t <= 0, array mode) go straight
+        // to admission; everything else arrives through Arrive events.
+        let mut batch = 0usize;
+        for t in &workload.tasks {
+            if t.submit_at <= 0.0 && !options.individual_submission {
+                batch += 1;
+                ctx.admit(t.id);
+            } else {
+                ctx.queue
+                    .push(t.submit_at.max(0.0), SimEv::Arrive { task: t.id });
+            }
+        }
+        policy.on_submit(&mut ctx, batch);
+
+        while let Some((now, ev)) = ctx.queue.pop() {
+            match ev {
+                SimEv::Arrive { task } => {
+                    ctx.admit(task);
+                    policy.on_arrive(&mut ctx, now, task);
+                }
+                SimEv::Tick => {
+                    policy.on_tick(&mut ctx, now);
+                    if ctx.completed < n {
+                        if let Some(interval) = policy.tick_interval() {
+                            assert!(
+                                !(ctx.queue.is_empty() && ctx.pool.busy_count() == 0),
+                                "kernel stalled: {} of {n} tasks can never be \
+                                 dispatched (cores/memory exceed cluster capacity?)",
+                                n - ctx.completed,
+                            );
+                            ctx.queue.push(now + interval, SimEv::Tick);
+                        }
+                    }
+                }
+                SimEv::Stage { task, slot } => policy.on_stage(&mut ctx, now, task, slot),
+                SimEv::Start { task, slot } => ctx.handle_start(now, task, slot),
+                SimEv::End { task, slot } => {
+                    ctx.handle_end(now, task);
+                    if ctx.has_deps && ctx.propagate_deps(task) {
+                        policy.on_deps_ready(&mut ctx, now);
+                    }
+                    if let Some(free_at) = policy.on_complete(&mut ctx, now, task, slot) {
+                        ctx.queue.push(free_at, SimEv::SlotFree { slot });
+                        if !ctx.extra_span.is_empty() {
+                            let (s0, len) = ctx.extra_span[task as usize];
+                            for k in 0..len {
+                                let s = ctx.extra_slots[(s0 + k) as usize];
+                                ctx.queue.push(free_at, SimEv::SlotFree { slot: s });
+                            }
+                        }
+                    }
+                }
+                SimEv::SlotFree { slot } => {
+                    ctx.pool.release(slot, ctx.slot_mem[slot as usize]);
+                    policy.on_slot_free(&mut ctx, now);
+                }
+            }
+        }
+
+        // Hard check (not debug-only): an event-driven policy with an
+        // undispatchable task drains the queue and would otherwise
+        // return silently-truncated results in release builds.
+        assert_eq!(
+            ctx.completed, n,
+            "kernel finished with incomplete workload: {} of {n} tasks \
+             completed (cores/memory exceed cluster capacity, or a gang \
+             can never assemble?)",
+            ctx.completed,
+        );
+        let processors = cluster.total_cores();
+        let events = ctx.queue.popped();
+        RunResult {
+            scheduler: policy.label(),
+            workload: workload.label.clone(),
+            n_tasks: n as u64,
+            processors,
+            t_total: ctx.makespan,
+            t_job: workload.t_job_per_proc(processors),
+            events,
+            daemon_busy: policy.daemon_busy(),
+            waits: ctx.waits,
+            trace: options.collect_trace.then(|| std::mem::take(ctx.trace)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::TaskSpec;
+
+    /// Minimal zero-overhead policy used to exercise kernel mechanism
+    /// in isolation (real policies live in `crate::sched`).
+    struct InstantPolicy;
+
+    impl SchedPolicy for InstantPolicy {
+        fn label(&self) -> String {
+            "Instant".into()
+        }
+        fn on_submit(&mut self, ctx: &mut KernelCtx, _batch: usize) {
+            ctx.drain_fifo(&mut |_, _| Launch::start(0.0));
+        }
+        fn on_arrive(&mut self, ctx: &mut KernelCtx, now: Time, _task: TaskId) {
+            ctx.drain_fifo(&mut |_, _| Launch::start(now));
+        }
+        fn on_complete(
+            &mut self,
+            _ctx: &mut KernelCtx,
+            now: Time,
+            _task: TaskId,
+            _slot: SlotId,
+        ) -> Option<Time> {
+            Some(now)
+        }
+        fn on_slot_free(&mut self, ctx: &mut KernelCtx, now: Time) {
+            ctx.drain_fifo(&mut |_, _| Launch::start(now));
+        }
+    }
+
+    fn cluster() -> ClusterSpec {
+        ClusterSpec::homogeneous(2, 4, 32 * 1024, 2)
+    }
+
+    fn run(w: &Workload) -> RunResult {
+        let mut scratch = SimScratch::new();
+        Kernel::run(
+            &mut InstantPolicy,
+            w,
+            &cluster(),
+            &RunOptions::with_trace(),
+            &mut scratch,
+        )
+    }
+
+    #[test]
+    fn array_workload_matches_ideal_arithmetic() {
+        // 16 tasks of 3 s on 8 slots: two waves, 6 s.
+        let tasks = (0..16).map(|i| TaskSpec::array(i, 0, 3.0)).collect();
+        let w = Workload {
+            tasks,
+            label: "k".into(),
+        };
+        let r = run(&w);
+        r.check_invariants().unwrap();
+        assert!((r.t_total - 6.0).abs() < 1e-9, "t_total={}", r.t_total);
+        assert_eq!(r.trace.as_ref().unwrap().len(), 16);
+    }
+
+    #[test]
+    fn dag_chain_serializes() {
+        // 4-task chain of 2 s tasks: must take exactly 8 s even with
+        // 8 free slots.
+        let mut tasks: Vec<TaskSpec> = (0..4).map(|i| TaskSpec::array(i, 0, 2.0)).collect();
+        for i in 1..4 {
+            tasks[i as usize].deps = vec![i - 1];
+        }
+        let w = Workload {
+            tasks,
+            label: "chain".into(),
+        };
+        let r = run(&w);
+        r.check_invariants().unwrap();
+        assert!((r.t_total - 8.0).abs() < 1e-9, "t_total={}", r.t_total);
+        // Dependency order respected in the trace.
+        let trace = r.trace.as_ref().unwrap();
+        let mut start = vec![0.0; 4];
+        let mut end = vec![0.0; 4];
+        for rec in trace {
+            start[rec.task as usize] = rec.start;
+            end[rec.task as usize] = rec.end;
+        }
+        for i in 1..4 {
+            assert!(start[i] >= end[i - 1] - 1e-9, "task {i} started early");
+        }
+    }
+
+    #[test]
+    fn multicore_tasks_pack_slots() {
+        // 4 tasks needing 4 cores each on 8 slots: two waves of two.
+        let tasks = (0..4)
+            .map(|i| {
+                let mut t = TaskSpec::array(i, 0, 5.0);
+                t.cores = 4;
+                t
+            })
+            .collect();
+        let w = Workload {
+            tasks,
+            label: "mc".into(),
+        };
+        let r = run(&w);
+        r.check_invariants().unwrap();
+        assert!((r.t_total - 10.0).abs() < 1e-9, "t_total={}", r.t_total);
+    }
+
+    #[test]
+    fn gang_waits_for_all_members() {
+        // Gang of 3 tasks (job 7) arriving at different times plus one
+        // filler: the gang must not start before its last member
+        // arrives, and must start together.
+        let mut tasks: Vec<TaskSpec> = (0..3)
+            .map(|i| {
+                let mut t = TaskSpec::array(i, 7, 4.0);
+                t.kind = JobKind::Parallel;
+                t.submit_at = i as f64; // last member at t=2
+                t
+            })
+            .collect();
+        tasks.push(TaskSpec::array(3, 1, 1.0));
+        let w = Workload {
+            tasks,
+            label: "gang".into(),
+        };
+        let r = run(&w);
+        r.check_invariants().unwrap();
+        let trace = r.trace.as_ref().unwrap();
+        let gang_starts: Vec<f64> = trace
+            .iter()
+            .filter(|t| t.task < 3)
+            .map(|t| t.start)
+            .collect();
+        assert_eq!(gang_starts.len(), 3);
+        for &s in &gang_starts {
+            assert!((s - gang_starts[0]).abs() < 1e-9, "gang start skew");
+            assert!(s >= 2.0 - 1e-9, "gang started before last member");
+        }
+        // The filler task backfilled at t=0 while the gang waited.
+        let filler = trace.iter().find(|t| t.task == 3).unwrap();
+        assert!(filler.start < 1e-9, "filler did not backfill");
+    }
+
+    #[test]
+    fn gang_blocked_on_capacity_lets_backfill_through() {
+        // Gang needs 6 of 8 slots but 4 are held by a long task; a
+        // short 1-core task behind the gang backfills immediately.
+        let mut tasks: Vec<TaskSpec> = Vec::new();
+        let mut hog = TaskSpec::array(0, 0, 10.0);
+        hog.cores = 4;
+        tasks.push(hog);
+        for i in 1..=6 {
+            let mut t = TaskSpec::array(i, 9, 2.0);
+            t.kind = JobKind::Parallel;
+            tasks.push(t);
+        }
+        tasks.push(TaskSpec::array(7, 1, 1.0));
+        let w = Workload {
+            tasks,
+            label: "gb".into(),
+        };
+        let r = run(&w);
+        r.check_invariants().unwrap();
+        let trace = r.trace.as_ref().unwrap();
+        let filler = trace.iter().find(|t| t.task == 7).unwrap();
+        assert!(filler.start < 1e-9, "filler should backfill past the gang");
+        for rec in trace.iter().filter(|t| (1..=6).contains(&t.task)) {
+            assert!(rec.start >= 10.0 - 1e-9, "gang ran before capacity freed");
+        }
+    }
+
+    #[test]
+    fn late_arrivals_wait_for_submission() {
+        let mut tasks: Vec<TaskSpec> = (0..4).map(|i| TaskSpec::array(i, 0, 1.0)).collect();
+        tasks[3].submit_at = 50.0;
+        let w = Workload {
+            tasks,
+            label: "arr".into(),
+        };
+        let r = run(&w);
+        r.check_invariants().unwrap();
+        let trace = r.trace.as_ref().unwrap();
+        let late = trace.iter().find(|t| t.task == 3).unwrap();
+        assert!((late.start - 50.0).abs() < 1e-9);
+        assert!((r.t_total - 51.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "kernel stalled")]
+    fn stall_detection_fires_for_oversized_tasks() {
+        struct TickedPolicy;
+        impl SchedPolicy for TickedPolicy {
+            fn label(&self) -> String {
+                "Ticked".into()
+            }
+            fn on_submit(&mut self, ctx: &mut KernelCtx, _batch: usize) {
+                ctx.push(0.0, SimEv::Tick);
+            }
+            fn tick_interval(&self) -> Option<Time> {
+                Some(1.0)
+            }
+            fn on_tick(&mut self, ctx: &mut KernelCtx, now: Time) {
+                ctx.drain_fifo(&mut |_, _| Launch::start(now));
+            }
+            fn on_complete(
+                &mut self,
+                _ctx: &mut KernelCtx,
+                now: Time,
+                _task: TaskId,
+                _slot: SlotId,
+            ) -> Option<Time> {
+                Some(now)
+            }
+        }
+        let mut t = TaskSpec::array(0, 0, 1.0);
+        t.cores = 1000; // cluster has 8 slots
+        let w = Workload {
+            tasks: vec![t],
+            label: "stall".into(),
+        };
+        let mut scratch = SimScratch::new();
+        Kernel::run(
+            &mut TickedPolicy,
+            &w,
+            &cluster(),
+            &RunOptions::default(),
+            &mut scratch,
+        );
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_identical_across_mechanisms() {
+        // A deps+gang+multicore workload, then a plain array workload,
+        // through one scratch: results must match fresh-scratch runs.
+        let mut fancy: Vec<TaskSpec> = (0..12).map(|i| TaskSpec::array(i, 0, 2.0)).collect();
+        for i in 4..8 {
+            fancy[i].deps = vec![i as u32 - 4];
+        }
+        for i in 8..12 {
+            fancy[i].kind = JobKind::Parallel;
+            fancy[i].job = 5;
+        }
+        fancy[0].cores = 2;
+        let fancy = Workload {
+            tasks: fancy,
+            label: "f".into(),
+        };
+        let plain = Workload {
+            tasks: (0..20).map(|i| TaskSpec::array(i, 0, 1.0)).collect(),
+            label: "p".into(),
+        };
+        let mut scratch = SimScratch::new();
+        for w in [&fancy, &plain, &fancy] {
+            let warm = Kernel::run(
+                &mut InstantPolicy,
+                w,
+                &cluster(),
+                &RunOptions::with_trace(),
+                &mut scratch,
+            );
+            let fresh = run(w);
+            assert_eq!(warm.t_total.to_bits(), fresh.t_total.to_bits());
+            assert_eq!(warm.events, fresh.events);
+            assert_eq!(warm.trace.as_ref().unwrap(), fresh.trace.as_ref().unwrap());
+        }
+    }
+}

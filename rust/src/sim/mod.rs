@@ -9,7 +9,9 @@
 //! buffer set that makes repeated trials allocation-free.
 
 mod engine;
+mod kernel;
 mod scratch;
 
 pub use engine::{EventQueue, MultiServer, ServiceStation, SimEv, Time};
+pub use kernel::{Kernel, KernelCtx, Launch, LaunchFn, SchedPolicy};
 pub use scratch::SimScratch;

@@ -9,6 +9,10 @@
 //! [`crate::sched::Scheduler::run_with_scratch`] for every cell it
 //! executes, so repeated trials reuse warm, already-sized allocations.
 //!
+//! Since the kernel refactor (see [`crate::sim::Kernel`]) the scratch
+//! also carries the dependency, gang and multi-core tables; they are
+//! sized lazily per run, so plain array workloads never touch them.
+//!
 //! Correctness contract: [`SimScratch::begin`] rewinds every buffer to
 //! the state a fresh allocation would have, so a run through a reused
 //! scratch is bit-identical to a run through a new one. The
@@ -23,7 +27,7 @@ use std::collections::VecDeque;
 pub struct SimScratch {
     /// Shared event queue (all simulators use the [`SimEv`] payload).
     pub queue: EventQueue<SimEv>,
-    /// Pending-task FIFO (task ids).
+    /// Pending-task FIFO (task ids), dependency-gated by the kernel.
     pub pending: VecDeque<u32>,
     /// Core-slot pool, rebuilt in place per run via [`SlotPool::reinit`].
     pub pool: SlotPool,
@@ -35,10 +39,23 @@ pub struct SimScratch {
     pub trace_idx: Vec<u32>,
     /// Per-slot busy-until times (Sparrow's worker backlogs).
     pub busy_until: Vec<f64>,
-    /// Pending job order (batch-queue simulator).
-    pub job_order: Vec<u32>,
-    /// Running set `(end_time, cores, job index)` (batch-queue simulator).
-    pub running: Vec<(f64, u32, u32)>,
+    /// Unmet-dependency count per task (DAG workloads only).
+    pub indeg: Vec<u32>,
+    /// CSR offsets of the dep -> dependents edge list.
+    pub dep_off: Vec<u32>,
+    /// CSR edges: dependents of each task, grouped by dependency.
+    pub dep_edges: Vec<u32>,
+    /// Whether each task's submission has reached the control plane
+    /// (DAG workloads only; gates admission of late-ready children).
+    pub submitted: Vec<bool>,
+    /// Parallel-job member counts by job id (gang workloads only).
+    pub gang_total: Vec<u32>,
+    /// Parallel-job members currently pending, by job id.
+    pub gang_ready: Vec<u32>,
+    /// Per-task (start, len) span into `extra_slots` (multi-core only).
+    pub extra_span: Vec<(u32, u32)>,
+    /// Arena of extra (non-primary) slots held by multi-core tasks.
+    pub extra_slots: Vec<u32>,
 }
 
 impl SimScratch {
@@ -52,8 +69,14 @@ impl SimScratch {
             trace: Vec::new(),
             trace_idx: Vec::new(),
             busy_until: Vec::new(),
-            job_order: Vec::new(),
-            running: Vec::new(),
+            indeg: Vec::new(),
+            dep_off: Vec::new(),
+            dep_edges: Vec::new(),
+            submitted: Vec::new(),
+            gang_total: Vec::new(),
+            gang_ready: Vec::new(),
+            extra_span: Vec::new(),
+            extra_slots: Vec::new(),
         }
     }
 
@@ -69,14 +92,19 @@ impl SimScratch {
         self.trace.clear();
         self.trace_idx.clear();
         self.busy_until.clear();
-        self.job_order.clear();
-        self.running.clear();
+        self.indeg.clear();
+        self.dep_off.clear();
+        self.dep_edges.clear();
+        self.submitted.clear();
+        self.gang_total.clear();
+        self.gang_ready.clear();
+        self.extra_span.clear();
+        self.extra_slots.clear();
         if collect_trace {
             self.trace.reserve(n_tasks);
             self.trace_idx.resize(n_tasks, u32::MAX);
         }
     }
-
 }
 
 impl Default for SimScratch {
@@ -101,8 +129,14 @@ mod tests {
         s.slot_mem[0] = 7;
         s.trace_idx[0] = 5;
         s.busy_until.push(9.0);
-        s.job_order.push(1);
-        s.running.push((1.0, 2, 3));
+        s.indeg.push(2);
+        s.dep_off.push(1);
+        s.dep_edges.push(4);
+        s.submitted.push(true);
+        s.gang_total.push(3);
+        s.gang_ready.push(1);
+        s.extra_span.push((0, 2));
+        s.extra_slots.push(6);
         s.begin(&cluster, 4, true);
         assert!(s.queue.is_empty());
         assert_eq!(s.queue.now(), 0.0);
@@ -112,8 +146,14 @@ mod tests {
         assert!(s.trace.is_empty());
         assert_eq!(s.trace_idx, vec![u32::MAX; 4]);
         assert!(s.busy_until.is_empty());
-        assert!(s.job_order.is_empty());
-        assert!(s.running.is_empty());
+        assert!(s.indeg.is_empty());
+        assert!(s.dep_off.is_empty());
+        assert!(s.dep_edges.is_empty());
+        assert!(s.submitted.is_empty());
+        assert!(s.gang_total.is_empty());
+        assert!(s.gang_ready.is_empty());
+        assert!(s.extra_span.is_empty());
+        assert!(s.extra_slots.is_empty());
     }
 
     #[test]

@@ -1,8 +1,11 @@
 //! Workload generation: constant task times (the paper's benchmark) and
 //! variable task-time distributions (used to exercise the U_v model of
-//! Section 4).
+//! Section 4), plus the structured dimensions the kernel executes —
+//! multi-core tasks, DAG chains, gang-scheduled parallel jobs and
+//! arrival processes.
 
-use super::types::{TaskSpec, Workload};
+use super::arrivals::ArrivalProcess;
+use super::types::{JobKind, TaskSpec, Workload};
 use crate::util::prng::Prng;
 
 /// Distribution of task durations.
@@ -40,7 +43,9 @@ impl TaskTimeDist {
     }
 }
 
-/// Builder for array-style workloads.
+/// Builder for workloads: array-style by default, with optional
+/// multi-core tasks, linear DAG chains, gang-scheduled parallel jobs
+/// and arrival processes.
 #[derive(Clone, Debug)]
 pub struct WorkloadBuilder {
     dist: TaskTimeDist,
@@ -49,6 +54,10 @@ pub struct WorkloadBuilder {
     mem_mb: i64,
     seed: u64,
     n_jobs: u32,
+    cores: u32,
+    chain_len: u32,
+    gang_size: u32,
+    arrivals: Option<ArrivalProcess>,
 }
 
 impl WorkloadBuilder {
@@ -66,6 +75,10 @@ impl WorkloadBuilder {
             mem_mb: 2048,
             seed: 0,
             n_jobs: 1,
+            cores: 1,
+            chain_len: 1,
+            gang_size: 1,
+            arrivals: None,
         }
     }
 
@@ -87,7 +100,7 @@ impl WorkloadBuilder {
         self
     }
 
-    /// Seed for sampled durations.
+    /// Seed for sampled durations (and arrival times).
     pub fn seed(mut self, s: u64) -> Self {
         self.seed = s;
         self
@@ -99,23 +112,70 @@ impl WorkloadBuilder {
         self
     }
 
+    /// Cores required by every task (slot-packing exercised for > 1).
+    pub fn cores(mut self, c: u32) -> Self {
+        self.cores = c.max(1);
+        self
+    }
+
+    /// Chain consecutive groups of `len` tasks into linear DAGs: task i
+    /// depends on task i-1 within its chain. `len <= 1` disables.
+    pub fn dag_chains(mut self, len: u32) -> Self {
+        self.chain_len = len.max(1);
+        self
+    }
+
+    /// Group consecutive `size`-task blocks into gang-scheduled
+    /// (`JobKind::Parallel`) jobs that start all-or-nothing. Overrides
+    /// the [`WorkloadBuilder::jobs`] round-robin job assignment.
+    /// `size <= 1` disables.
+    pub fn gangs(mut self, size: u32) -> Self {
+        self.gang_size = size.max(1);
+        self
+    }
+
+    /// Stamp submission times from an arrival process instead of the
+    /// all-at-once batch default.
+    pub fn arrivals(mut self, process: ArrivalProcess) -> Self {
+        self.arrivals = Some(process);
+        self
+    }
+
     /// Materialize.
     pub fn build(self) -> Workload {
+        assert!(
+            self.gang_size <= 1 || self.chain_len <= 1,
+            "gangs + dag_chains: a dependency between gang members can never \
+             be satisfied (the gang waits for all members, the member waits \
+             for the gang)"
+        );
         let mut rng = Prng::new(self.seed ^ 0x5EED_F00D);
         let mut tasks = Vec::with_capacity(self.n_tasks as usize);
         for i in 0..self.n_tasks {
-            let mut t = TaskSpec::array(
-                i as u32,
-                (i % self.n_jobs as u64) as u32,
-                self.dist.sample(&mut rng),
-            );
+            let job = if self.gang_size > 1 {
+                (i / self.gang_size as u64) as u32
+            } else {
+                (i % self.n_jobs as u64) as u32
+            };
+            let mut t = TaskSpec::array(i as u32, job, self.dist.sample(&mut rng));
             t.mem_mb = self.mem_mb;
+            t.cores = self.cores;
+            if self.gang_size > 1 {
+                t.kind = JobKind::Parallel;
+            }
+            if self.chain_len > 1 && i % self.chain_len as u64 != 0 {
+                t.deps = vec![i as u32 - 1];
+            }
             tasks.push(t);
         }
-        Workload {
+        let mut workload = Workload {
             tasks,
             label: self.label,
+        };
+        if let Some(process) = self.arrivals {
+            process.apply(&mut workload, self.seed);
         }
+        workload
     }
 }
 
@@ -123,6 +183,7 @@ impl WorkloadBuilder {
 mod tests {
     use super::*;
     use crate::util::prop::{check, ensure};
+    use crate::workload::ArrivalProcess;
 
     #[test]
     fn constant_workload() {
@@ -160,6 +221,55 @@ mod tests {
     fn dist_means() {
         assert_eq!(TaskTimeDist::Constant(4.0).mean(), 4.0);
         assert_eq!(TaskTimeDist::Uniform(2.0, 6.0).mean(), 4.0);
+    }
+
+    #[test]
+    fn dag_chains_link_consecutive_tasks() {
+        let w = WorkloadBuilder::constant(1.0).tasks(7).dag_chains(3).build();
+        w.validate().unwrap();
+        // Chains: [0,1,2], [3,4,5], [6].
+        assert!(w.tasks[0].deps.is_empty());
+        assert_eq!(w.tasks[1].deps, vec![0]);
+        assert_eq!(w.tasks[2].deps, vec![1]);
+        assert!(w.tasks[3].deps.is_empty());
+        assert_eq!(w.tasks[4].deps, vec![3]);
+        assert!(w.tasks[6].deps.is_empty());
+    }
+
+    #[test]
+    fn gangs_group_blocks_as_parallel_jobs() {
+        let w = WorkloadBuilder::constant(1.0).tasks(8).gangs(4).build();
+        w.validate().unwrap();
+        assert!(w.tasks.iter().all(|t| t.kind == JobKind::Parallel));
+        assert_eq!(w.tasks[0].job, 0);
+        assert_eq!(w.tasks[3].job, 0);
+        assert_eq!(w.tasks[4].job, 1);
+        assert_eq!(w.tasks[7].job, 1);
+    }
+
+    #[test]
+    fn cores_and_arrivals_stamp_tasks() {
+        let w = WorkloadBuilder::constant(2.0)
+            .tasks(100)
+            .cores(4)
+            .arrivals(ArrivalProcess::Poisson { rate: 10.0 })
+            .seed(3)
+            .build();
+        w.validate().unwrap();
+        assert!(w.tasks.iter().all(|t| t.cores == 4));
+        assert!(w.tasks.last().unwrap().submit_at > 0.0);
+        // Monotone non-decreasing submit times (task order = arrival order).
+        assert!(w.tasks.windows(2).all(|p| p[1].submit_at >= p[0].submit_at));
+        // Same seed reproduces arrivals.
+        let v = WorkloadBuilder::constant(2.0)
+            .tasks(100)
+            .cores(4)
+            .arrivals(ArrivalProcess::Poisson { rate: 10.0 })
+            .seed(3)
+            .build();
+        for (a, b) in w.tasks.iter().zip(&v.tasks) {
+            assert_eq!(a.submit_at.to_bits(), b.submit_at.to_bits());
+        }
     }
 
     #[test]

@@ -54,6 +54,15 @@ impl TaskSpec {
             deps: Vec::new(),
         }
     }
+
+    /// Member of a synchronously-parallel (gang-scheduled) job.
+    pub fn parallel(id: TaskId, job: JobId, duration: f64, cores: u32) -> Self {
+        Self {
+            kind: JobKind::Parallel,
+            cores,
+            ..Self::array(id, job, duration)
+        }
+    }
 }
 
 /// A workload: a set of tasks plus metadata.
@@ -76,9 +85,11 @@ impl Workload {
         self.tasks.is_empty()
     }
 
-    /// Sum of isolated task durations (total processor-seconds of work).
+    /// Total processor-seconds of work: Σ duration × cores. For the
+    /// paper's 1-core benchmark tasks this is the plain duration sum;
+    /// multi-core tasks count every core they occupy.
     pub fn total_work(&self) -> f64 {
-        self.tasks.iter().map(|t| t.duration).sum()
+        self.tasks.iter().map(|t| t.duration * t.cores as f64).sum()
     }
 
     /// Isolated job execution time per processor, T_job = total work / P,
@@ -87,7 +98,8 @@ impl Workload {
         self.total_work() / processors as f64
     }
 
-    /// Validate ids are dense and dependencies acyclic (topological check).
+    /// Validate ids are dense, per-task resources sane, and
+    /// dependencies acyclic (topological check).
     pub fn validate(&self) -> Result<(), String> {
         for (i, t) in self.tasks.iter().enumerate() {
             if t.id as usize != i {
@@ -96,9 +108,24 @@ impl Workload {
             if t.duration < 0.0 || !t.duration.is_finite() {
                 return Err(format!("task {} has invalid duration {}", t.id, t.duration));
             }
+            if t.cores == 0 {
+                return Err(format!("task {} requires zero cores", t.id));
+            }
+            if t.mem_mb <= 0 {
+                return Err(format!("task {} has non-positive mem_mb {}", t.id, t.mem_mb));
+            }
+            if !t.submit_at.is_finite() {
+                return Err(format!(
+                    "task {} has non-finite submit_at {}",
+                    t.id, t.submit_at
+                ));
+            }
             for &d in &t.deps {
                 if d as usize >= self.tasks.len() {
                     return Err(format!("task {} depends on unknown task {d}", t.id));
+                }
+                if d == t.id {
+                    return Err(format!("task {} depends on itself", t.id));
                 }
             }
         }
@@ -176,5 +203,47 @@ mod tests {
         let mut c = TaskSpec::array(2, 0, 1.0);
         c.deps = vec![0, 1];
         wl(vec![TaskSpec::array(0, 0, 1.0), b, c]).validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_zero_cores() {
+        let mut t = TaskSpec::array(0, 0, 1.0);
+        t.cores = 0;
+        assert!(wl(vec![t]).validate().unwrap_err().contains("zero cores"));
+    }
+
+    #[test]
+    fn rejects_non_positive_memory() {
+        let mut t = TaskSpec::array(0, 0, 1.0);
+        t.mem_mb = 0;
+        assert!(wl(vec![t]).validate().unwrap_err().contains("mem_mb"));
+        let mut t = TaskSpec::array(0, 0, 1.0);
+        t.mem_mb = -5;
+        assert!(wl(vec![t]).validate().is_err());
+    }
+
+    #[test]
+    fn rejects_non_finite_submit_time() {
+        let mut t = TaskSpec::array(0, 0, 1.0);
+        t.submit_at = f64::NAN;
+        assert!(wl(vec![t]).validate().unwrap_err().contains("submit_at"));
+        let mut t = TaskSpec::array(0, 0, 1.0);
+        t.submit_at = f64::INFINITY;
+        assert!(wl(vec![t]).validate().is_err());
+    }
+
+    #[test]
+    fn rejects_self_dependency() {
+        let mut t = TaskSpec::array(0, 0, 1.0);
+        t.deps = vec![0];
+        assert!(wl(vec![t]).validate().unwrap_err().contains("itself"));
+    }
+
+    #[test]
+    fn parallel_helper_sets_kind() {
+        let t = TaskSpec::parallel(3, 1, 2.0, 4);
+        assert_eq!(t.kind, JobKind::Parallel);
+        assert_eq!(t.cores, 4);
+        assert_eq!(t.job, 1);
     }
 }

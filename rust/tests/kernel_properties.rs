@@ -1,0 +1,203 @@
+//! Property tests for the unified control-plane kernel: every backend,
+//! run through `sim::Kernel` on random workloads mixing DAG chains,
+//! gangs, multi-core tasks and arrival processes, must satisfy the
+//! result invariants, complete every task exactly once, respect
+//! dependencies, and stay bit-identical under scratch reuse.
+
+use sssched::cluster::ClusterSpec;
+use sssched::config::SchedulerChoice;
+use sssched::sched::{make_scheduler, RunOptions, SimScratch};
+use sssched::util::prng::Prng;
+use sssched::util::prop::{ensure, forall, PropConfig};
+use sssched::workload::{ArrivalProcess, Workload, WorkloadBuilder};
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Shape {
+    Array,
+    Multicore,
+    DagChain,
+    Gang,
+    Poisson,
+    Burst,
+}
+
+#[derive(Debug)]
+struct Case {
+    choice: SchedulerChoice,
+    shape: Shape,
+    n_tasks: u64,
+    task_time: f64,
+    seed: u64,
+}
+
+fn gen_case(rng: &mut Prng) -> Case {
+    let choices = SchedulerChoice::all_simulated();
+    let shapes = [
+        Shape::Array,
+        Shape::Multicore,
+        Shape::DagChain,
+        Shape::Gang,
+        Shape::Poisson,
+        Shape::Burst,
+    ];
+    Case {
+        choice: choices[rng.choose_index(choices.len())],
+        shape: shapes[rng.choose_index(shapes.len())],
+        n_tasks: rng.range_u64(1, 160),
+        task_time: rng.range_f64(0.5, 8.0),
+        seed: rng.next_u64(),
+    }
+}
+
+fn cluster() -> ClusterSpec {
+    // 2 nodes × 8 cores: enough headroom for 4-wide gangs of 2-core
+    // tasks on every backend.
+    ClusterSpec::homogeneous(2, 8, 64 * 1024, 2)
+}
+
+fn build_workload(case: &Case) -> Workload {
+    let b = WorkloadBuilder::constant(case.task_time)
+        .tasks(case.n_tasks)
+        .seed(case.seed)
+        .label("prop");
+    match case.shape {
+        Shape::Array => b.build(),
+        Shape::Multicore => b.cores(2).build(),
+        Shape::DagChain => b.dag_chains(4).build(),
+        Shape::Gang => b.gangs(4).build(),
+        Shape::Poisson => b.arrivals(ArrivalProcess::Poisson { rate: 4.0 }).build(),
+        Shape::Burst => b
+            .arrivals(ArrivalProcess::Bursty {
+                burst: 16,
+                period: 5.0,
+            })
+            .build(),
+    }
+}
+
+#[test]
+fn prop_kernel_backends_complete_all_workload_shapes() {
+    forall(
+        PropConfig {
+            cases: 60,
+            seed: 0x2B1D,
+        },
+        gen_case,
+        |case| {
+            let w = build_workload(case);
+            w.validate()?;
+            let sched = make_scheduler(case.choice);
+            let r = sched.run(&w, &cluster(), case.seed, &RunOptions::with_trace());
+            r.check_invariants()?;
+            let trace = r.trace.as_ref().expect("trace collected");
+            ensure(
+                trace.len() == w.len(),
+                format!("{} records for {} tasks", trace.len(), w.len()),
+            )?;
+            let mut ids: Vec<u32> = trace.iter().map(|t| t.task).collect();
+            ids.sort_unstable();
+            ids.dedup();
+            ensure(ids.len() == w.len(), "duplicate or missing task ids")?;
+
+            // Dependencies: children never start before parents end.
+            let mut start = vec![0.0f64; w.len()];
+            let mut end = vec![0.0f64; w.len()];
+            for rec in trace {
+                start[rec.task as usize] = rec.start;
+                end[rec.task as usize] = rec.end;
+            }
+            for t in &w.tasks {
+                for &d in &t.deps {
+                    ensure(
+                        start[t.id as usize] >= end[d as usize] - 1e-9,
+                        format!("task {} started before dep {d} finished", t.id),
+                    )?;
+                }
+                ensure(
+                    start[t.id as usize] >= t.submit_at - 1e-9,
+                    format!("task {} started before submission", t.id),
+                )?;
+            }
+
+            // Gangs: members are dispatched in one all-or-nothing pass,
+            // so their starts differ only by per-task launch overheads
+            // (zero for IdealFIFO, synchronized exactly for Sparrow),
+            // never by a scheduling wave.
+            if case.shape == Shape::Gang {
+                let exact = matches!(
+                    case.choice,
+                    SchedulerChoice::IdealFifo | SchedulerChoice::Sparrow
+                );
+                // Non-exact backends: bounded by launch-overhead jitter
+                // (YARN's ~31 s AM startups dominate); a missed wave
+                // would skew by a full task time + AM (> 30 s).
+                let tol = if exact { 1e-9 } else { 15.0 };
+                for t in &w.tasks {
+                    let first = w
+                        .tasks
+                        .iter()
+                        .find(|o| o.job == t.job)
+                        .expect("job has members");
+                    ensure(
+                        (start[t.id as usize] - start[first.id as usize]).abs() <= tol,
+                        format!("gang {} start skew on task {}", t.job, t.id),
+                    )?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_scratch_reuse_bit_identical_across_shapes() {
+    let mut scratch = SimScratch::new();
+    forall(
+        PropConfig {
+            cases: 30,
+            seed: 0x3C2E,
+        },
+        gen_case,
+        |case| {
+            let w = build_workload(case);
+            let sched = make_scheduler(case.choice);
+            let warm = sched.run_with_scratch(
+                &w,
+                &cluster(),
+                case.seed,
+                &RunOptions::with_trace(),
+                &mut scratch,
+            );
+            let fresh = sched.run(&w, &cluster(), case.seed, &RunOptions::with_trace());
+            ensure(
+                warm.t_total.to_bits() == fresh.t_total.to_bits(),
+                format!("t_total differs: {} vs {}", warm.t_total, fresh.t_total),
+            )?;
+            ensure(warm.events == fresh.events, "event count differs")?;
+            ensure(
+                warm.daemon_busy.to_bits() == fresh.daemon_busy.to_bits(),
+                "daemon_busy differs",
+            )?;
+            ensure(
+                warm.trace.as_ref() == fresh.trace.as_ref(),
+                "traces differ",
+            )
+        },
+    );
+}
+
+#[test]
+fn individual_submission_still_runs_through_kernel() {
+    let options = RunOptions {
+        individual_submission: true,
+        collect_trace: true,
+    };
+    let w = WorkloadBuilder::constant(2.0).tasks(48).label("ind").build();
+    for choice in SchedulerChoice::all_simulated() {
+        let sched = make_scheduler(choice);
+        let r = sched.run(&w, &cluster(), 5, &options);
+        r.check_invariants()
+            .unwrap_or_else(|e| panic!("{}: {e}", sched.name()));
+        assert_eq!(r.trace.as_ref().unwrap().len(), 48, "{}", sched.name());
+    }
+}
