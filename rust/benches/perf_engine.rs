@@ -4,6 +4,11 @@
 //!
 //! * event-queue throughput (push+pop)
 //! * full scheduler-simulation events/s (the L3 hot path)
+//! * preemption-heavy kernel loop: evictions/s + warm events/s, with a
+//!   counting-allocator assert that warm-scratch preemption runs stay
+//!   allocation-flat (per-run allocations are a small constant that
+//!   does not scale with workload size — nothing allocates on the
+//!   evict/requeue/resume hot path after warmup)
 //! * realtime coordinator dispatch rate (channel round-trip)
 //! * artifact-suite power-law fit latency (the L1/L2 hot path from rust)
 //! * serial vs parallel fig4-style sweep: cells/s, events/s, wall-clock
@@ -16,9 +21,57 @@ use sssched::cluster::ClusterSpec;
 use sssched::config::{ExperimentConfig, SchedulerChoice};
 use sssched::exec::{RealtimeCoordinator, RealtimeParams, RtTask, RtWork};
 use sssched::harness::{run_sweeps, SchedulerSweep, SweepSpec};
+use sssched::sched::combinators::{make_preemptive, Order};
 use sssched::sched::{make_scheduler, RunOptions, SimScratch};
 use sssched::sim::EventQueue;
+use sssched::workload::{TaskSpec, Workload};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::time::Instant;
+
+/// Allocation-counting wrapper around the system allocator, used to
+/// assert the warm-scratch preemption path allocates nothing per
+/// event. Counting is flag-gated so the timed benchmarks elsewhere in
+/// this binary pay only a relaxed load per allocation, not a shared
+/// atomic RMW that could skew the published sweep numbers; it is
+/// switched on only around the preemption flatness measurement. Counts
+/// allocations and reallocations (frees are irrelevant to the
+/// zero-alloc contract).
+struct CountingAlloc;
+
+static COUNTING: AtomicBool = AtomicBool::new(false);
+static ALLOC_COUNT: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOC_COUNT.load(Ordering::Relaxed)
+}
 
 struct SweepStats {
     wall_s: f64,
@@ -171,6 +224,82 @@ fn main() {
         rate
     };
 
+    // ---- 2c. Preemption-heavy kernel loop (warm scratch): evictions/s
+    // plus an allocation-flatness assert — after warmup, a preemption
+    // run's allocations are a small per-run constant (policy setup +
+    // result labels), independent of workload size: nothing allocates
+    // on the evict/requeue/resume hot path.
+    let preempt_bench_workload = |waves: u64| -> Workload {
+        let cores = cluster.total_cores();
+        let mut tasks: Vec<TaskSpec> = Vec::new();
+        for i in 0..waves * cores {
+            let mut t = TaskSpec::array(i as u32, i as u32, 5.0);
+            t.preemptible = true;
+            tasks.push(t);
+        }
+        for k in 0..cores / 2 {
+            let id = (waves * cores + k) as u32;
+            let mut t = TaskSpec::array(id, id, 1.0);
+            t.priority = 10;
+            t.submit_at = 0.5 + (k % 32) as f64 * 2.0;
+            tasks.push(t);
+        }
+        Workload {
+            tasks,
+            label: "preempt-bench".into(),
+        }
+    };
+    let (preempt_rate, preempt_evictions_per_s, preempt_allocs_per_run) = {
+        let sched = make_preemptive(SchedulerChoice::Slurm, 1, Order::Priority);
+        let big = preempt_bench_workload(16);
+        let small = preempt_bench_workload(4);
+        let mut scratch = SimScratch::new();
+        // Warm-up on the big workload sizes every buffer.
+        sched.run_with_scratch(&big, &cluster, 0, &RunOptions::default(), &mut scratch);
+        let iters = if quick { 2u64 } else { 5 };
+        let t0 = Instant::now();
+        let mut events = 0u64;
+        let mut evictions = 0u64;
+        for i in 0..iters {
+            let r = sched.run_with_scratch(
+                &big,
+                &cluster,
+                i + 1,
+                &RunOptions::default(),
+                &mut scratch,
+            );
+            events += r.events;
+            evictions += r.preemptions;
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        assert!(evictions > 0, "preemption bench executed no evictions");
+        COUNTING.store(true, Ordering::Relaxed);
+        let before_small = allocs();
+        sched.run_with_scratch(&small, &cluster, 97, &RunOptions::default(), &mut scratch);
+        let small_allocs = allocs() - before_small;
+        let before_big = allocs();
+        sched.run_with_scratch(&big, &cluster, 98, &RunOptions::default(), &mut scratch);
+        let big_allocs = allocs() - before_big;
+        COUNTING.store(false, Ordering::Relaxed);
+        assert!(
+            small_allocs < 512 && big_allocs < 512,
+            "warm preemption run allocates per event: small={small_allocs} big={big_allocs}"
+        );
+        assert!(
+            big_allocs <= small_allocs + 64 && small_allocs <= big_allocs + 64,
+            "warm preemption allocations scale with workload size: \
+             small={small_allocs} big={big_allocs}"
+        );
+        let rate = events as f64 / dt / 1e6;
+        let eps = evictions as f64 / dt;
+        println!(
+            "preempt loop (warm scratch): {events} events, {evictions} evictions over \
+             {iters} trials in {dt:.3}s = {rate:.2}M events/s, {eps:.0} evictions/s; \
+             allocs/run small={small_allocs} big={big_allocs} (flat)"
+        );
+        (rate, eps, big_allocs)
+    };
+
     // ---- 3. Realtime dispatch rate (zero-work tasks).
     let coord = RealtimeCoordinator::new(RealtimeParams {
         workers: 2,
@@ -278,6 +407,9 @@ fn main() {
          \x20 \"available_cores\": {cores},\n\
          \x20 \"event_queue_mops\": {queue_mops:.4},\n\
          \x20 \"kernel_warm_mevents_per_s\": {kernel_warm_rate:.4},\n\
+         \x20 \"preempt_warm_mevents_per_s\": {preempt_rate:.4},\n\
+         \x20 \"preempt_evictions_per_s\": {preempt_evictions_per_s:.1},\n\
+         \x20 \"preempt_warm_allocs_per_run\": {preempt_allocs_per_run},\n\
          \x20 \"sims\": [\n{sims}\n  ],\n\
          \x20 \"realtime_dispatch_per_s\": {dispatch_rate:.1},\n\
          \x20 \"powerlaw_fit_ms_per_call\": {fit_ms},\n\

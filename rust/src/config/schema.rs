@@ -102,6 +102,12 @@ pub struct ExperimentConfig {
     /// Offered load ρ for the `scenarios` Poisson-arrival workload
     /// (arrival rate = ρ·P / task time).
     pub arrival_rho: f64,
+    /// Checkpoint-cost sweep for the `preempt` experiment, as fractions
+    /// of the task time t (0.0 = free eviction).
+    pub preempt_cost_fracs: Vec<f64>,
+    /// Fraction of `preempt`-experiment tasks that are high-priority
+    /// foreground arrivals (the rest is preemptible background).
+    pub preempt_hi_frac: f64,
 }
 
 impl Default for ExperimentConfig {
@@ -119,6 +125,8 @@ impl Default for ExperimentConfig {
             jobs: crate::harness::default_jobs() as u32,
             scenario_n: 8,
             arrival_rho: 0.7,
+            preempt_cost_fracs: vec![0.0, 0.25],
+            preempt_hi_frac: 0.25,
         }
     }
 }
@@ -156,6 +164,19 @@ impl ExperimentConfig {
                 "experiment.scenario_n" => cfg.scenario_n = get_u32(value, key)?,
                 "experiment.arrival_rho" => {
                     cfg.arrival_rho = value.as_f64().ok_or_else(|| bad(key))?
+                }
+                "experiment.preempt_hi_frac" => {
+                    cfg.preempt_hi_frac = value.as_f64().ok_or_else(|| bad(key))?
+                }
+                "experiment.preempt_cost_fracs" => {
+                    let arr = match value {
+                        TomlValue::Array(xs) => xs,
+                        _ => return Err(bad(key)),
+                    };
+                    cfg.preempt_cost_fracs = arr
+                        .iter()
+                        .map(|v| v.as_f64().ok_or_else(|| bad(key)))
+                        .collect::<Result<_, _>>()?;
                 }
                 "experiment.out_dir" => {
                     cfg.out_dir = value.as_str().ok_or_else(|| bad(key))?.to_string()
@@ -225,6 +246,20 @@ impl ExperimentConfig {
         }
         if !(self.arrival_rho.is_finite() && self.arrival_rho > 0.0 && self.arrival_rho < 1.0) {
             return Err("arrival_rho must be in (0, 1)".into());
+        }
+        if self.preempt_cost_fracs.is_empty()
+            || self
+                .preempt_cost_fracs
+                .iter()
+                .any(|&f| !f.is_finite() || f < 0.0)
+        {
+            return Err("preempt_cost_fracs must be non-empty, finite, >= 0".into());
+        }
+        if !(self.preempt_hi_frac.is_finite()
+            && self.preempt_hi_frac > 0.0
+            && self.preempt_hi_frac < 1.0)
+        {
+            return Err("preempt_hi_frac must be in (0, 1)".into());
         }
         Ok(())
     }
@@ -315,6 +350,22 @@ n_sweep = [4, 240]
             SchedulerChoice::Sparrow
         );
         assert!(SchedulerChoice::parse("pbs").is_err());
+    }
+
+    #[test]
+    fn preempt_keys_parse_and_validate() {
+        let c = ExperimentConfig::from_toml(
+            "[experiment]\npreempt_hi_frac = 0.4\npreempt_cost_fracs = [0.0, 0.5, 2.0]",
+        )
+        .unwrap();
+        assert!((c.preempt_hi_frac - 0.4).abs() < 1e-12);
+        assert_eq!(c.preempt_cost_fracs, vec![0.0, 0.5, 2.0]);
+        assert!(
+            ExperimentConfig::from_toml("[experiment]\npreempt_hi_frac = 1.5").is_err()
+        );
+        assert!(
+            ExperimentConfig::from_toml("[experiment]\npreempt_cost_fracs = [-1.0]").is_err()
+        );
     }
 
     #[test]

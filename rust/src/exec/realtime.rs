@@ -165,7 +165,9 @@ impl RealtimeCoordinator {
             events: 0,
             daemon_busy: self.params.dispatch_overhead * tasks.len() as f64,
             waits,
+            preemptions: 0,
             trace: Some(trace),
+            spans: None,
         })
     }
 }

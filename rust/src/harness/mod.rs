@@ -11,6 +11,7 @@
 //! | `fig6`     | Figure 6 — ΔT vs n with multilevel scheduling |
 //! | `fig7`     | Figure 7 — utilization, regular vs multilevel |
 //! | `scenarios`| workload-space sweep: array / multicore / DAG / gang / arrivals × all schedulers |
+//! | `preempt`  | preemption sweep: checkpoint cost × ordering × all schedulers, fairness vs ΔT |
 
 //! All six experiment runners route their `(scheduler, n, trial)`
 //! cells through the deterministic parallel executor in [`parallel`];
@@ -32,7 +33,9 @@ pub use fig5::{fig5, fig5_from, Fig5Report};
 pub use fig6::{fig6, Fig6Report};
 pub use fig7::{fig7, Fig7Report};
 pub use parallel::{default_jobs, run_cells};
-pub use scenarios::{scenarios, ScenarioCell, ScenariosReport, GANG_SIZE};
+pub use scenarios::{
+    preempt, scenarios, PreemptCell, PreemptReport, ScenarioCell, ScenariosReport, GANG_SIZE,
+};
 pub use sweep::{run_sweep, run_sweeps, SchedulerSweep, SweepPoint, SweepSpec, PROHIBITIVE_SECS};
 pub use table10::{table10, Table10Report};
 pub use table9::{table9, Table9Report};

@@ -13,13 +13,25 @@
 //!
 //! Cells run on the deterministic parallel executor, so results are
 //! bit-identical for every `--jobs` value.
+//!
+//! The `preempt` experiment family lives here too: a priority-mixed
+//! workload (preemptible low-priority background saturating the
+//! cluster + high-priority Poisson foreground arrivals) swept over
+//! checkpoint-cost fractions × ordering disciplines × every scheduler
+//! family, each run under the [`combinators::Preemptive`] wrapper. It
+//! measures fairness-vs-ΔT (per-priority-class queueing delays) and
+//! preemption-overhead-vs-utilization.
 
 use super::parallel::run_cells;
 use super::sweep::PROHIBITIVE_SECS;
 use crate::config::{ExperimentConfig, SchedulerChoice};
+use crate::sched::combinators::{self, Order};
 use crate::sched::{make_scheduler_scaled, RunOptions, RunResult, Scheduler};
+use crate::util::prng::Prng;
 use crate::util::table::{fnum, Table};
-use crate::workload::{ArrivalProcess, Workload, WorkloadBuilder, TABLE9_JOB_TIME_PER_PROC};
+use crate::workload::{
+    ArrivalProcess, TaskSpec, Workload, WorkloadBuilder, TABLE9_JOB_TIME_PER_PROC,
+};
 
 /// Gang width used by the gang scenario (also the DAG chain depth).
 pub const GANG_SIZE: u32 = 8;
@@ -34,22 +46,25 @@ pub struct ScenarioCell {
     pub trials: Vec<RunResult>,
 }
 
+/// Mean of `f` over a cell's trials (0 for empty/skipped cells).
+fn trial_mean(trials: &[RunResult], f: impl Fn(&RunResult) -> f64) -> f64 {
+    trials.iter().map(f).sum::<f64>() / trials.len().max(1) as f64
+}
+
 impl ScenarioCell {
     /// Mean ΔT across trials.
     pub fn mean_delta_t(&self) -> f64 {
-        self.trials.iter().map(|r| r.delta_t()).sum::<f64>() / self.trials.len().max(1) as f64
+        trial_mean(&self.trials, |r| r.delta_t())
     }
 
     /// Mean utilization across trials.
     pub fn mean_utilization(&self) -> f64 {
-        self.trials.iter().map(|r| r.utilization()).sum::<f64>()
-            / self.trials.len().max(1) as f64
+        trial_mean(&self.trials, |r| r.utilization())
     }
 
     /// Mean of the per-trial mean scheduler-induced waits.
     pub fn mean_wait(&self) -> f64 {
-        self.trials.iter().map(|r| r.waits.mean()).sum::<f64>()
-            / self.trials.len().max(1) as f64
+        trial_mean(&self.trials, |r| r.waits.mean())
     }
 }
 
@@ -312,6 +327,410 @@ impl ScenariosReport {
     }
 }
 
+// ---- the `preempt` experiment family --------------------------------------
+
+/// One (checkpoint-cost, ordering, scheduler) cell of the preempt sweep.
+pub struct PreemptCell {
+    /// Checkpoint cost as a fraction of the task time t.
+    pub cost_frac: f64,
+    /// Ordering discipline under the preemption wrapper.
+    pub order: Order,
+    /// Scheduler display name (e.g. "Slurm+prio+preempt").
+    pub scheduler: String,
+    /// One traced result per trial.
+    pub trials: Vec<RunResult>,
+}
+
+impl PreemptCell {
+    /// Mean utilization across trials.
+    pub fn mean_utilization(&self) -> f64 {
+        trial_mean(&self.trials, |r| r.utilization())
+    }
+
+    /// Mean ΔT across trials.
+    pub fn mean_delta_t(&self) -> f64 {
+        trial_mean(&self.trials, |r| r.delta_t())
+    }
+
+    /// Mean evictions per trial.
+    pub fn mean_preemptions(&self) -> f64 {
+        trial_mean(&self.trials, |r| r.preemptions as f64)
+    }
+}
+
+/// Per-class queueing-delay sums and counts of one trial's trace:
+/// `(hi_sum, hi_count, lo_sum, lo_count)`.
+///
+/// Delay is (end − submit) − duration — the task's whole non-execution
+/// latency — NOT the wait before its first dispatch. A preempted
+/// background task often starts at t ≈ 0 and then loses time to
+/// evictions, requeues and checkpoint drains; first-dispatch wait would
+/// record that as zero and systematically understate the penalty the
+/// low-priority class pays, which is the very axis this experiment
+/// measures.
+fn class_delay_sums(
+    r: &RunResult,
+    hi_from: u32,
+    bg_dur: f64,
+    fg_dur: f64,
+) -> (f64, u64, f64, u64) {
+    let (mut hi_sum, mut hi_n, mut lo_sum, mut lo_n) = (0.0, 0u64, 0.0, 0u64);
+    let trace = r.trace.as_ref().expect("preempt cells collect traces");
+    for rec in trace {
+        if rec.task >= hi_from {
+            hi_sum += rec.end - rec.submit - fg_dur;
+            hi_n += 1;
+        } else {
+            lo_sum += rec.end - rec.submit - bg_dur;
+            lo_n += 1;
+        }
+    }
+    (hi_sum, hi_n, lo_sum, lo_n)
+}
+
+/// Full preempt sweep report.
+pub struct PreemptReport {
+    /// All cells, cost-major then ordering then scheduler.
+    pub cells: Vec<PreemptCell>,
+    /// Cells skipped as prohibitive.
+    pub skipped: Vec<(f64, String)>,
+    /// First foreground (high-priority) task id — tasks `>= hi_from`
+    /// are the arriving foreground class.
+    pub hi_from: u32,
+    /// Tasks per processor n.
+    pub n: u32,
+    /// Base task time t (background tasks run 2t, foreground t/2).
+    pub t: f64,
+}
+
+impl PreemptReport {
+    /// Mean queueing delay of the (hi, lo) priority classes of one
+    /// cell, across its trials (see [`class_delay_sums`]).
+    pub fn mean_delay_by_class(&self, cell: &PreemptCell) -> (f64, f64) {
+        let (mut hi_sum, mut hi_n, mut lo_sum, mut lo_n) = (0.0, 0u64, 0.0, 0u64);
+        for r in &cell.trials {
+            let (hs, hn, ls, ln) =
+                class_delay_sums(r, self.hi_from, 2.0 * self.t, 0.5 * self.t);
+            hi_sum += hs;
+            hi_n += hn;
+            lo_sum += ls;
+            lo_n += ln;
+        }
+        (hi_sum / hi_n.max(1) as f64, lo_sum / lo_n.max(1) as f64)
+    }
+}
+
+/// Shared shape parameters of the preempt workload, derived once so
+/// the workload builder and the report's class split (`hi_from`)
+/// cannot drift apart.
+#[derive(Clone, Copy)]
+struct PreemptShape {
+    /// Base task time t (bg tasks run 2t, fg t/2).
+    t: f64,
+    /// Total task count.
+    total: u64,
+    /// Background (preemptible) task count; foreground ids start here.
+    bg: u64,
+}
+
+fn preempt_shape(cfg: &ExperimentConfig, processors: u64) -> PreemptShape {
+    let n = cfg.scenario_n.max(1) as u64;
+    let t = TABLE9_JOB_TIME_PER_PROC / n as f64;
+    let total = (n * processors).max(4);
+    let hi = ((total as f64 * cfg.preempt_hi_frac).round() as u64).clamp(1, total - 1);
+    PreemptShape {
+        t,
+        total,
+        bg: total - hi,
+    }
+}
+
+/// Priority-mixed preemption workload: `1 − hi_frac` of the tasks are
+/// preemptible low-priority 2t background tasks submitted at t = 0
+/// (saturating the cluster), the rest high-priority t/2 foreground
+/// tasks arriving Poisson over roughly the first half of the
+/// background span. Deterministic in (cfg.seed, cost_frac).
+fn preempt_workload(cfg: &ExperimentConfig, processors: u64, cost_frac: f64) -> Workload {
+    let PreemptShape { t, total, bg } = preempt_shape(cfg, processors);
+    let hi = total - bg;
+    let mut tasks: Vec<TaskSpec> = Vec::with_capacity(total as usize);
+    for i in 0..bg {
+        let mut task = TaskSpec::array(i as u32, i as u32, 2.0 * t);
+        task.preemptible = true;
+        task.checkpoint_cost = cost_frac * t;
+        task.user = (i % 2) as u32;
+        tasks.push(task);
+    }
+    let bg_span = (bg as f64 / processors as f64) * 2.0 * t;
+    let rate = hi as f64 / (0.5 * bg_span).max(t);
+    let mut rng = Prng::new(cfg.seed ^ 0x9EEE_47);
+    let mut now = 0.0;
+    for k in 0..hi {
+        let id = (bg + k) as u32;
+        let mut task = TaskSpec::array(id, id, 0.5 * t);
+        task.priority = 10;
+        task.user = 2 + (k % 2) as u32;
+        now += rng.exponential(1.0 / rate);
+        task.submit_at = now;
+        tasks.push(task);
+    }
+    let w = Workload {
+        tasks,
+        label: "preempt".into(),
+    };
+    w.validate()
+        .unwrap_or_else(|e| panic!("preempt workload invalid: {e}"));
+    w
+}
+
+/// Run the preempt sweep: checkpoint-cost fractions × {priority,
+/// fairshare} ordering × every scheduler family, all under the
+/// preemption wrapper, in one deterministic parallel batch.
+pub fn preempt(cfg: &ExperimentConfig) -> PreemptReport {
+    let cluster = crate::cluster::ClusterSpec::homogeneous(
+        cfg.effective_nodes(),
+        cfg.cores_per_node,
+        cfg.mem_mb,
+        (cfg.effective_nodes() / 2).max(1),
+    );
+    let processors = cluster.total_cores();
+    let choices = SchedulerChoice::all_simulated();
+    let orders = [Order::Priority, Order::Fairshare];
+
+    struct Cell<'a> {
+        sched: usize,
+        slot: usize,
+        workload: &'a Workload,
+        seed: u64,
+    }
+    // One workload per cost fraction (shared across schedulers/orders).
+    let workloads: Vec<(f64, Workload)> = cfg
+        .preempt_cost_fracs
+        .iter()
+        .map(|&f| (f, preempt_workload(cfg, processors, f)))
+        .collect();
+    let schedulers: Vec<(Order, Box<dyn Scheduler>)> = orders
+        .iter()
+        .flat_map(|&o| {
+            choices
+                .iter()
+                .map(move |&c| (o, combinators::make_preemptive(c, cfg.scale_down, o)))
+        })
+        .collect();
+
+    let mut cells: Vec<Cell> = Vec::new();
+    let mut out: Vec<PreemptCell> = Vec::new();
+    let mut skipped: Vec<(f64, String)> = Vec::new();
+    for (wi, &(cost_frac, ref workload)) in workloads.iter().enumerate() {
+        for (ki, (order, sched)) in schedulers.iter().enumerate() {
+            if sched.projected_runtime(workload, &cluster) > PROHIBITIVE_SECS {
+                skipped.push((cost_frac, sched.name().to_string()));
+                continue;
+            }
+            for trial in 0..cfg.trials {
+                cells.push(Cell {
+                    sched: ki,
+                    slot: out.len(),
+                    workload,
+                    seed: cfg
+                        .seed
+                        .wrapping_add(trial as u64)
+                        .wrapping_add((wi as u64) << 32)
+                        .wrapping_add((ki as u64) << 16),
+                });
+            }
+            out.push(PreemptCell {
+                cost_frac,
+                order: *order,
+                scheduler: sched.name().to_string(),
+                trials: Vec::with_capacity(cfg.trials as usize),
+            });
+        }
+    }
+
+    let results = run_cells(cfg.effective_jobs(), &cells, |cell, scratch| {
+        let sched = schedulers[cell.sched].1.as_ref();
+        let r = sched.run_with_scratch(
+            cell.workload,
+            &cluster,
+            cell.seed,
+            &RunOptions::with_trace(),
+            scratch,
+        );
+        r.check_invariants()
+            .unwrap_or_else(|e| panic!("{} on preempt: {e}", sched.name()));
+        r
+    });
+    for (cell, result) in cells.iter().zip(results) {
+        out[cell.slot].trials.push(result);
+    }
+
+    let shape = preempt_shape(cfg, processors);
+    PreemptReport {
+        cells: out,
+        skipped,
+        hi_from: shape.bg as u32,
+        n: cfg.scenario_n.max(1),
+        t: shape.t,
+    }
+}
+
+impl PreemptReport {
+    /// Rendered summary table: fairness (per-class waits) vs ΔT, and
+    /// preemption overhead vs utilization.
+    pub fn render_table(&self) -> Table {
+        let mut table = Table::new(
+            format!(
+                "Preemption — fairness vs ΔT and overhead vs utilization \
+                 (n={}, t={} s; bg 2t preemptible, fg t/2 at priority 10)",
+                self.n,
+                fnum(self.t)
+            ),
+            &[
+                "cost/t",
+                "order",
+                "scheduler",
+                "ΔT (s)",
+                "U",
+                "evictions",
+                "hi delay (s)",
+                "lo delay (s)",
+            ],
+        );
+        for c in &self.cells {
+            let (hi, lo) = self.mean_delay_by_class(c);
+            table.row(&[
+                format!("{:.2}", c.cost_frac),
+                c.order.label().to_string(),
+                c.scheduler.clone(),
+                fnum(c.mean_delta_t()),
+                format!("{:.3}", c.mean_utilization()),
+                format!("{:.1}", c.mean_preemptions()),
+                fnum(hi),
+                fnum(lo),
+            ]);
+        }
+        for (cost, sched) in &self.skipped {
+            table.row(&[
+                format!("{cost:.2}"),
+                "-".into(),
+                sched.clone(),
+                "(skipped)".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+            ]);
+        }
+        table
+    }
+
+    /// CSV series.
+    pub fn to_csv(&self) -> String {
+        let mut table = Table::new(
+            "",
+            &[
+                "cost_frac",
+                "order",
+                "scheduler",
+                "trial",
+                "delta_t_s",
+                "utilization",
+                "preemptions",
+                "hi_delay_s",
+                "lo_delay_s",
+            ],
+        );
+        for c in &self.cells {
+            for (trial, r) in c.trials.iter().enumerate() {
+                // Per-trial class delays, matching the per-trial
+                // columns beside them.
+                let (hs, hn, ls, ln) =
+                    class_delay_sums(r, self.hi_from, 2.0 * self.t, 0.5 * self.t);
+                table.row(&[
+                    format!("{:.3}", c.cost_frac),
+                    c.order.label().to_string(),
+                    c.scheduler.clone(),
+                    trial.to_string(),
+                    format!("{:.3}", r.delta_t()),
+                    format!("{:.4}", r.utilization()),
+                    r.preemptions.to_string(),
+                    format!("{:.3}", hs / hn.max(1) as f64),
+                    format!("{:.3}", ls / ln.max(1) as f64),
+                ]);
+            }
+        }
+        table.to_csv()
+    }
+
+    /// Structural shape checks: every cell ran all trials; the
+    /// reference (IdealFIFO + priority + preemption, cheapest
+    /// checkpoint) actually evicts; preemption favours the
+    /// high-priority class there; and no run lost work (per-task span
+    /// sums stay within duration).
+    pub fn check_shape(&self, trials: u32) -> Result<(), String> {
+        for c in &self.cells {
+            if c.trials.len() != trials as usize {
+                return Err(format!(
+                    "cost {} × {}: {} of {trials} trials ran",
+                    c.cost_frac,
+                    c.scheduler,
+                    c.trials.len()
+                ));
+            }
+        }
+        let min_cost = self
+            .cells
+            .iter()
+            .map(|c| c.cost_frac)
+            .fold(f64::INFINITY, f64::min);
+        let ideal = self
+            .cells
+            .iter()
+            .find(|c| {
+                c.cost_frac == min_cost
+                    && c.order == Order::Priority
+                    && c.scheduler.starts_with("IdealFIFO")
+            })
+            .ok_or("missing ideal preempt cell")?;
+        if ideal.mean_preemptions() <= 0.0 {
+            return Err("ideal preempt cell executed no evictions".into());
+        }
+        let (hi, lo) = self.mean_delay_by_class(ideal);
+        if hi >= lo {
+            return Err(format!(
+                "preemption should favour the high-priority class: hi={hi} lo={lo}"
+            ));
+        }
+        for c in &self.cells {
+            for r in &c.trials {
+                let spans = r
+                    .spans
+                    .as_ref()
+                    .ok_or("preempt trial missing span accounting")?;
+                let mut executed = vec![0.0f64; r.n_tasks as usize];
+                for s in spans {
+                    executed[s.task as usize] += s.seconds();
+                }
+                for (task, &ex) in executed.iter().enumerate() {
+                    let dur = if (task as u32) < self.hi_from {
+                        2.0 * self.t
+                    } else {
+                        0.5 * self.t
+                    };
+                    if ex > dur + 1e-6 {
+                        return Err(format!(
+                            "{}: task {task} executed {ex} > duration {dur}",
+                            c.scheduler
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -332,6 +751,42 @@ mod tests {
         // 6 scenarios × 6 schedulers, minus any prohibitive skips.
         assert_eq!(rep.cells.len() + rep.skipped.len(), 36);
         assert!(!rep.to_csv().is_empty());
+    }
+
+    #[test]
+    fn preempt_runs_and_passes_shape_checks() {
+        let cfg = quick_cfg();
+        let rep = preempt(&cfg);
+        rep.check_shape(cfg.trials).unwrap();
+        // 2 cost fracs × 2 orders × 6 schedulers, minus skips.
+        assert_eq!(rep.cells.len() + rep.skipped.len(), 24);
+        assert!(!rep.to_csv().is_empty());
+    }
+
+    #[test]
+    fn preempt_deterministic_across_jobs() {
+        let mut a_cfg = quick_cfg();
+        a_cfg.jobs = 1;
+        let mut b_cfg = quick_cfg();
+        b_cfg.jobs = 4;
+        let a = preempt(&a_cfg);
+        let b = preempt(&b_cfg);
+        assert_eq!(a.cells.len(), b.cells.len());
+        for (ca, cb) in a.cells.iter().zip(&b.cells) {
+            assert_eq!(ca.scheduler, cb.scheduler);
+            assert_eq!(ca.cost_frac, cb.cost_frac);
+            for (ra, rb) in ca.trials.iter().zip(&cb.trials) {
+                assert_eq!(
+                    ra.t_total.to_bits(),
+                    rb.t_total.to_bits(),
+                    "{} cost {}",
+                    ca.scheduler,
+                    ca.cost_frac
+                );
+                assert_eq!(ra.events, rb.events);
+                assert_eq!(ra.preemptions, rb.preemptions);
+            }
+        }
     }
 
     #[test]

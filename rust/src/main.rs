@@ -4,7 +4,7 @@
 //! Subcommands:
 //!   features    render the paper's feature-comparison Tables 1–7
 //!   experiment  run table9 | table10 | fig4 | fig5 | fig6 | fig7 |
-//!               scenarios | all
+//!               scenarios | preempt | all
 //!   serve       realtime mini-cluster (leader + worker threads, PJRT payloads)
 //!   validate    run every experiment's shape checks at reduced scale
 //!
@@ -52,7 +52,7 @@ fn usage() {
         "usage: sssched <command> [options]\n\
          commands:\n\
          \x20 features   [--table 1..7] [--csv]\n\
-         \x20 experiment <table9|table10|fig4|fig5|fig6|fig7|scenarios|all> \
+         \x20 experiment <table9|table10|fig4|fig5|fig6|fig7|scenarios|preempt|all> \
          [--config f] [--quick] [--trials N] [--jobs N] [--out-dir d] [--artifacts d] [--csv]\n\
          \x20 serve      [--workers N] [--tasks N] [--task-ms MS] \
          [--payload sleep|spin|analytics] [--ts SECS] [--artifacts d]\n\
@@ -188,6 +188,16 @@ fn cmd_experiment(args: &Args) -> i32 {
                 println!("shape checks: OK");
                 write_out(&cfg, "scenarios.csv", &rep.to_csv());
             }
+            "preempt" => {
+                let rep = harness::preempt(&cfg);
+                println!("{}", rep.render_table().render());
+                if let Err(e) = rep.check_shape(cfg.trials) {
+                    eprintln!("shape check FAILED: {e}");
+                    return 1;
+                }
+                println!("shape checks: OK");
+                write_out(&cfg, "preempt.csv", &rep.to_csv());
+            }
             other => {
                 eprintln!("unknown experiment `{other}`");
                 return 2;
@@ -196,7 +206,16 @@ fn cmd_experiment(args: &Args) -> i32 {
         0
     };
     if what == "all" {
-        for name in ["table9", "table10", "fig4", "fig5", "fig6", "fig7", "scenarios"] {
+        for name in [
+            "table9",
+            "table10",
+            "fig4",
+            "fig5",
+            "fig6",
+            "fig7",
+            "scenarios",
+            "preempt",
+        ] {
             let rc = run(name);
             if rc != 0 {
                 return rc;
@@ -293,6 +312,10 @@ fn cmd_validate(args: &Args) -> i32 {
     check(
         "scenarios shapes",
         harness::scenarios(&cfg).check_shape(cfg.trials),
+    );
+    check(
+        "preempt shapes",
+        harness::preempt(&cfg).check_shape(cfg.trials),
     );
     if failures == 0 {
         println!("all shape checks passed");

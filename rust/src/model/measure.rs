@@ -52,7 +52,9 @@ mod tests {
             events: 0,
             daemon_busy: 0.0,
             waits: Summary::new(),
+            preemptions: 0,
             trace: None,
+            spans: None,
         }
     }
 

@@ -118,6 +118,14 @@ impl<'a> Scheduler for Multilevel<'a> {
         self.inner.name()
     }
 
+    fn make_policy<'b>(&'b self, _seed: u64) -> Option<Box<dyn crate::sim::SchedPolicy + 'b>> {
+        // Multilevel is a workload transformation around an inner
+        // scheduler, not a single kernel policy: the preemption /
+        // ordering combinators cannot wrap it directly (wrap the inner
+        // backend instead).
+        None
+    }
+
     fn run_with_scratch(
         &self,
         workload: &Workload,

@@ -20,14 +20,19 @@
 //!
 //! Since the kernel refactor this module is a [`SchedPolicy`] like the
 //! others: the event loop, multi-core slot packing and wait/trace
-//! accounting live in [`crate::sim::Kernel`]; only the queue-ordering
-//! and backfill decisions remain here. The simulator stays
-//! zero-overhead (it isolates *policy* effects; latency effects live in
-//! the Table 9 simulators).
+//! accounting live in [`crate::sim::Kernel`]; and since the combinator
+//! extraction the queue ordering and EASY backfill live in
+//! [`crate::sched::combinators`] ([`OrderedDrain`]) — this file only
+//! maps [`BatchJob`]s onto kernel tasks and keeps the per-run
+//! running/usage state. The regression tests in `combinators` pin the
+//! extracted drain bit-identical to the historical in-module one. The
+//! simulator stays zero-overhead (it isolates *policy* effects; latency
+//! effects live in the Table 9 simulators).
 
 use crate::cluster::ClusterSpec;
-use crate::sim::{Kernel, KernelCtx, Launch, SchedPolicy, SimScratch, Time};
+use crate::sched::combinators::{FairTracker, Order, OrderedDrain};
 use crate::sched::RunOptions;
+use crate::sim::{Kernel, KernelCtx, Launch, SchedPolicy, SimScratch, Time};
 use crate::util::stats::Summary;
 use crate::workload::{TaskId, TaskSpec, Workload};
 
@@ -102,85 +107,59 @@ pub struct BatchQueueSim {
 
 /// The ordering/backfill policy driven by the kernel: dispatch
 /// opportunities arise at submission, on arrivals, and on slot release.
-struct BatchPolicy<'a> {
-    policy: QueuePolicy,
-    jobs: &'a [BatchJob],
-    usage: std::collections::BTreeMap<u32, f64>,
+/// Ordering and backfill decisions are delegated to the shared
+/// [`OrderedDrain`] combinator.
+struct BatchPolicy {
+    drain: OrderedDrain,
+    usage: FairTracker,
     /// Running set `(end_time, cores, job index)` for backfill shadows.
     running: Vec<(f64, u32, u32)>,
 }
 
-impl BatchPolicy<'_> {
-    fn order(&self, queue: &mut [TaskId]) {
-        match self.policy {
-            QueuePolicy::Fcfs | QueuePolicy::FcfsBackfill => {} // arrival order already
-            QueuePolicy::Priority => {
-                queue.sort_by(|&a, &b| {
-                    self.jobs[b as usize]
-                        .priority
-                        .cmp(&self.jobs[a as usize].priority)
-                        .then(a.cmp(&b))
-                });
-            }
-            QueuePolicy::Fairshare => {
-                queue.sort_by(|&a, &b| {
-                    let ua = self.usage.get(&self.jobs[a as usize].user).copied().unwrap_or(0.0);
-                    let ub = self.usage.get(&self.jobs[b as usize].user).copied().unwrap_or(0.0);
-                    ua.total_cmp(&ub).then(a.cmp(&b))
-                });
-            }
-        }
-    }
-
-    fn started(&mut self, idx: TaskId, now: Time) {
-        let j = &self.jobs[idx as usize];
-        self.running.push((now + j.duration, j.cores, idx));
-        *self.usage.entry(j.user).or_default() += j.cores as f64 * j.duration;
-    }
-
+impl BatchPolicy {
     /// One policy-ordered dispatch pass over the pending queue.
-    fn drain(&mut self, ctx: &mut KernelCtx, now: Time) {
-        let mut queue = ctx.pending_snapshot();
-        self.order(&mut queue);
-        let mut blocked_head: Option<TaskId> = None;
-        for idx in queue {
-            if blocked_head.is_none() {
-                if ctx.try_dispatch(idx, &mut |_, _| Launch::start(now)) {
-                    self.started(idx, now);
-                } else {
-                    // Head-of-line blocked.
-                    blocked_head = Some(idx);
-                    if self.policy != QueuePolicy::FcfsBackfill {
-                        break; // strict policies stop here
-                    }
-                }
-            } else {
-                // EASY backfill: shadow time = earliest instant the
-                // head job could start given current running jobs.
-                let j = &self.jobs[idx as usize];
-                let head = &self.jobs[blocked_head.expect("head set") as usize];
-                let free = ctx.free_slots() as u32;
-                let (shadow, spare) = shadow_time(free, head.cores, &self.running);
-                let fits_now = j.cores <= free;
-                let no_delay = now + j.duration <= shadow + 1e-9 || j.cores <= spare;
-                if fits_now
-                    && no_delay
-                    && ctx.try_dispatch(idx, &mut |_, _| Launch::start(now))
-                {
-                    self.started(idx, now);
-                }
-            }
+    fn pass(&mut self, ctx: &mut KernelCtx, now: Time) {
+        self.drain.drain(
+            ctx,
+            now,
+            &mut self.usage,
+            &mut self.running,
+            &mut |_, _| Launch::start(now),
+        );
+    }
+}
+
+impl QueuePolicy {
+    /// The combinator expressing this queue-management policy.
+    fn as_drain(self) -> OrderedDrain {
+        match self {
+            QueuePolicy::Fcfs => OrderedDrain {
+                order: Order::Fifo,
+                backfill: false,
+            },
+            QueuePolicy::FcfsBackfill => OrderedDrain {
+                order: Order::Fifo,
+                backfill: true,
+            },
+            QueuePolicy::Priority => OrderedDrain {
+                order: Order::Priority,
+                backfill: false,
+            },
+            QueuePolicy::Fairshare => OrderedDrain {
+                order: Order::Fairshare,
+                backfill: false,
+            },
         }
     }
 }
 
-impl SchedPolicy for BatchPolicy<'_> {
+impl SchedPolicy for BatchPolicy {
     fn label(&self) -> String {
         "BatchQueue".into()
     }
 
     fn on_submit(&mut self, ctx: &mut KernelCtx, _batch: usize) {
-        self.drain(ctx, 0.0);
+        self.pass(ctx, 0.0);
     }
 
     fn on_arrive(&mut self, ctx: &mut KernelCtx, now: Time, _task: TaskId) {
@@ -188,7 +167,7 @@ impl SchedPolicy for BatchPolicy<'_> {
         // backfill reservations must see the completed instant, exactly
         // as the pre-kernel decision-instant loop did.
         if !ctx.has_more_events_at(now) {
-            self.drain(ctx, now);
+            self.pass(ctx, now);
         }
     }
 
@@ -205,7 +184,7 @@ impl SchedPolicy for BatchPolicy<'_> {
 
     fn on_slot_free(&mut self, ctx: &mut KernelCtx, now: Time) {
         if !ctx.has_more_events_at(now) {
-            self.drain(ctx, now);
+            self.pass(ctx, now);
         }
     }
 }
@@ -266,6 +245,8 @@ impl BatchQueueSim {
                 t.cores = j.cores;
                 t.mem_mb = 1;
                 t.submit_at = j.submit_at;
+                t.priority = j.priority;
+                t.user = j.user;
                 t
             })
             .collect();
@@ -274,9 +255,8 @@ impl BatchQueueSim {
             label: "batchq".into(),
         };
         let mut policy = BatchPolicy {
-            policy: self.policy,
-            jobs,
-            usage: Default::default(),
+            drain: self.policy.as_drain(),
+            usage: FairTracker::new(),
             running: Vec::new(),
         };
         let r = Kernel::run(
@@ -315,27 +295,6 @@ impl BatchQueueSim {
             waits: r.waits,
             outcomes,
         })
-    }
-}
-
-/// Earliest time `need` cores are simultaneously free, and the spare
-/// cores left at that time (for the backfill window test).
-fn shadow_time(mut free: u32, need: u32, running: &[(f64, u32, u32)]) -> (f64, u32) {
-    let mut ends: Vec<(f64, u32)> = running.iter().map(|&(e, c, _)| (e, c)).collect();
-    ends.sort_by(|a, b| a.0.total_cmp(&b.0));
-    for &(end, cores) in &ends {
-        if free >= need {
-            break;
-        }
-        free += cores;
-        if free >= need {
-            return (end, free - need);
-        }
-    }
-    if free >= need {
-        (0.0, free - need)
-    } else {
-        (f64::INFINITY, 0)
     }
 }
 

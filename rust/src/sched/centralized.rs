@@ -159,16 +159,9 @@ impl Scheduler for CentralizedSim {
         self.params.name
     }
 
-    fn run_with_scratch(
-        &self,
-        workload: &Workload,
-        cluster: &ClusterSpec,
-        seed: u64,
-        options: &RunOptions,
-        scratch: &mut SimScratch,
-    ) -> RunResult {
+    fn make_policy<'a>(&'a self, seed: u64) -> Option<Box<dyn SchedPolicy + 'a>> {
         let p = &self.params;
-        let mut policy = CentralizedPolicy {
+        Some(Box::new(CentralizedPolicy {
             p,
             rng: Prng::new(seed ^ 0xCE47_4A11),
             g_sched: LognormalGen::new(p.sched_cost_per_task, p.jitter_cv),
@@ -177,8 +170,19 @@ impl Scheduler for CentralizedSim {
             g_teardown: LognormalGen::new(p.teardown_mean, p.launch_cv),
             g_submit: LognormalGen::new(p.submit_cost_job, p.jitter_cv),
             daemon: ServiceStation::new(),
-        };
-        Kernel::run(&mut policy, workload, cluster, options, scratch)
+        }))
+    }
+
+    fn run_with_scratch(
+        &self,
+        workload: &Workload,
+        cluster: &ClusterSpec,
+        seed: u64,
+        options: &RunOptions,
+        scratch: &mut SimScratch,
+    ) -> RunResult {
+        let mut policy = self.make_policy(seed).expect("centralized is kernel-driven");
+        Kernel::run(policy.as_mut(), workload, cluster, options, scratch)
     }
 
     fn projected_runtime(&self, workload: &Workload, cluster: &ClusterSpec) -> f64 {

@@ -55,6 +55,10 @@ impl Scheduler for IdealFifo {
         "IdealFIFO"
     }
 
+    fn make_policy<'a>(&'a self, _seed: u64) -> Option<Box<dyn SchedPolicy + 'a>> {
+        Some(Box::new(IdealPolicy))
+    }
+
     fn run_with_scratch(
         &self,
         workload: &Workload,

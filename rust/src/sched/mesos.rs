@@ -138,6 +138,19 @@ impl Scheduler for MesosSim {
         self.params.name
     }
 
+    fn make_policy<'a>(&'a self, seed: u64) -> Option<Box<dyn SchedPolicy + 'a>> {
+        let p = &self.params;
+        Some(Box::new(MesosPolicy {
+            p,
+            rng: Prng::new(seed ^ 0x4E50_05E5),
+            g_offer: LognormalGen::new(p.offer_batch_cost, p.jitter_cv),
+            g_launch: LognormalGen::new(p.launch_cost_per_task, p.jitter_cv),
+            g_complete: LognormalGen::new(p.complete_cost_per_task, p.jitter_cv),
+            g_exec: LognormalGen::new(p.executor_startup_mean, p.executor_startup_cv),
+            master: ServiceStation::new(),
+        }))
+    }
+
     fn run_with_scratch(
         &self,
         workload: &Workload,
@@ -146,17 +159,8 @@ impl Scheduler for MesosSim {
         options: &RunOptions,
         scratch: &mut SimScratch,
     ) -> RunResult {
-        let p = &self.params;
-        let mut policy = MesosPolicy {
-            p,
-            rng: Prng::new(seed ^ 0x4E50_05E5),
-            g_offer: LognormalGen::new(p.offer_batch_cost, p.jitter_cv),
-            g_launch: LognormalGen::new(p.launch_cost_per_task, p.jitter_cv),
-            g_complete: LognormalGen::new(p.complete_cost_per_task, p.jitter_cv),
-            g_exec: LognormalGen::new(p.executor_startup_mean, p.executor_startup_cv),
-            master: ServiceStation::new(),
-        };
-        Kernel::run(&mut policy, workload, cluster, options, scratch)
+        let mut policy = self.make_policy(seed).expect("mesos is kernel-driven");
+        Kernel::run(policy.as_mut(), workload, cluster, options, scratch)
     }
 
     fn projected_runtime(&self, workload: &Workload, cluster: &ClusterSpec) -> f64 {

@@ -35,16 +35,18 @@
 pub mod batchq;
 pub mod calibration;
 pub mod centralized;
+pub mod combinators;
 pub mod ideal;
 pub mod mesos;
 mod result;
 pub mod sparrow;
 pub mod yarn;
 
-pub use result::{RunOptions, RunResult};
+pub use result::{ExecSpan, RunOptions, RunResult};
 
 use crate::cluster::ClusterSpec;
 use crate::config::SchedulerChoice;
+use crate::sim::SchedPolicy;
 pub use crate::sim::SimScratch;
 use crate::workload::Workload;
 
@@ -52,6 +54,16 @@ use crate::workload::Workload;
 pub trait Scheduler: Send + Sync {
     /// Display name ("Slurm", "Mesos", ...).
     fn name(&self) -> &'static str;
+
+    /// Construct this backend's [`SchedPolicy`] for one trial, if the
+    /// backend is kernel-policy-driven. The policy combinators
+    /// ([`combinators::Ordered`], [`combinators::Preemptive`]) wrap the
+    /// returned object and drive it through [`crate::sim::Kernel`]
+    /// themselves. `None` for wrapper schedulers that are not a single
+    /// kernel policy (e.g. multilevel aggregation).
+    fn make_policy<'a>(&'a self, _seed: u64) -> Option<Box<dyn SchedPolicy + 'a>> {
+        None
+    }
 
     /// Simulate one trial with a fresh [`SimScratch`] (allocating).
     /// `seed` controls all stochastic jitter; equal seeds give

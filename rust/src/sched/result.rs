@@ -25,6 +25,33 @@ impl RunOptions {
     }
 }
 
+/// One contiguous productive execution span of a task on a slot.
+///
+/// Without preemption every task runs exactly one span; a preempted
+/// task's work is split across several (one per dispatch), and the sum
+/// of its span lengths equals its duration — the "no lost work"
+/// contract `tests/preemption_properties.rs` pins. Checkpoint drain
+/// time after an eviction is slot *occupancy*, not productive work, and
+/// is deliberately excluded.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ExecSpan {
+    /// Task id.
+    pub task: u32,
+    /// Primary slot the span executed on.
+    pub slot: u32,
+    /// Span start (virtual s).
+    pub start: f64,
+    /// Span end: completion or eviction instant (virtual s).
+    pub end: f64,
+}
+
+impl ExecSpan {
+    /// Span length in seconds.
+    pub fn seconds(&self) -> f64 {
+        self.end - self.start
+    }
+}
+
 /// Outcome of one simulated (or realtime) trial.
 #[derive(Clone, Debug)]
 pub struct RunResult {
@@ -47,8 +74,15 @@ pub struct RunResult {
     pub daemon_busy: f64,
     /// Summary of per-task scheduler-induced wait times.
     pub waits: Summary,
+    /// Evictions executed by the kernel's preemption subsystem (0 for
+    /// workloads without preemptible tasks).
+    pub preemptions: u64,
     /// Optional full trace.
     pub trace: Option<Vec<TraceRecord>>,
+    /// Productive execution spans, split at evictions. Collected only
+    /// for traced runs of preemption-enabled workloads; `None`
+    /// otherwise, so non-preempt results are unchanged.
+    pub spans: Option<Vec<ExecSpan>>,
 }
 
 impl RunResult {
@@ -106,6 +140,13 @@ impl RunResult {
                 }
             }
         }
+        if let Some(spans) = &self.spans {
+            for s in spans {
+                if s.end + 1e-9 < s.start || s.end > self.t_total + 1e-6 {
+                    return Err(format!("non-causal span {s:?}"));
+                }
+            }
+        }
         Ok(())
     }
 }
@@ -125,7 +166,9 @@ mod tests {
             events: 0,
             daemon_busy: 0.0,
             waits: Summary::new(),
+            preemptions: 0,
             trace: None,
+            spans: None,
         }
     }
 

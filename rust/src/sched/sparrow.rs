@@ -209,6 +209,16 @@ impl Scheduler for SparrowSim {
         self.params.name
     }
 
+    fn make_policy<'a>(&'a self, seed: u64) -> Option<Box<dyn SchedPolicy + 'a>> {
+        // Note: Sparrow places tasks into worker backlogs instead of
+        // kernel slots, so it never yields evictable victims — wrapping
+        // it in the preemption combinators is safe but inert.
+        Some(Box::new(SparrowPolicy {
+            p: &self.params,
+            rng: Prng::new(seed ^ 0x5BA2_2063),
+        }))
+    }
+
     fn run_with_scratch(
         &self,
         workload: &Workload,
@@ -217,11 +227,8 @@ impl Scheduler for SparrowSim {
         options: &RunOptions,
         scratch: &mut SimScratch,
     ) -> RunResult {
-        let mut policy = SparrowPolicy {
-            p: &self.params,
-            rng: Prng::new(seed ^ 0x5BA2_2063),
-        };
-        Kernel::run(&mut policy, workload, cluster, options, scratch)
+        let mut policy = self.make_policy(seed).expect("sparrow is kernel-driven");
+        Kernel::run(policy.as_mut(), workload, cluster, options, scratch)
     }
 }
 

@@ -139,6 +139,18 @@ impl Scheduler for YarnSim {
         self.params.name
     }
 
+    fn make_policy<'a>(&'a self, seed: u64) -> Option<Box<dyn SchedPolicy + 'a>> {
+        let p = &self.params;
+        Some(Box::new(YarnPolicy {
+            p,
+            rng: Prng::new(seed ^ 0x7A42_4EAD),
+            g_rm: LognormalGen::new(p.rm_cost_per_app, p.jitter_cv),
+            g_complete: LognormalGen::new(p.complete_cost_per_app, p.jitter_cv),
+            g_am: LognormalGen::new(p.am_startup_mean, p.am_startup_cv),
+            rm: ServiceStation::new(),
+        }))
+    }
+
     fn run_with_scratch(
         &self,
         workload: &Workload,
@@ -147,16 +159,8 @@ impl Scheduler for YarnSim {
         options: &RunOptions,
         scratch: &mut SimScratch,
     ) -> RunResult {
-        let p = &self.params;
-        let mut policy = YarnPolicy {
-            p,
-            rng: Prng::new(seed ^ 0x7A42_4EAD),
-            g_rm: LognormalGen::new(p.rm_cost_per_app, p.jitter_cv),
-            g_complete: LognormalGen::new(p.complete_cost_per_app, p.jitter_cv),
-            g_am: LognormalGen::new(p.am_startup_mean, p.am_startup_cv),
-            rm: ServiceStation::new(),
-        };
-        Kernel::run(&mut policy, workload, cluster, options, scratch)
+        let mut policy = self.make_policy(seed).expect("yarn is kernel-driven");
+        Kernel::run(policy.as_mut(), workload, cluster, options, scratch)
     }
 
     fn projected_runtime(&self, workload: &Workload, cluster: &ClusterSpec) -> f64 {

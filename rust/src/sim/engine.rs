@@ -287,6 +287,32 @@ pub enum SimEv {
         task: u32,
         /// Slot the task holds.
         slot: u32,
+        /// Dispatch epoch the `End` was scheduled under. The kernel
+        /// bumps a task's epoch on every start, resume and eviction, so
+        /// an `End` left in flight by a preemption is recognisably
+        /// stale and ignored. Always 0 for workloads without
+        /// preemptible tasks.
+        epoch: u32,
+    },
+    /// Kernel-executed eviction of a running task (scheduled by
+    /// [`crate::sim::KernelCtx::request_preempt`]). Carries the victim's
+    /// dispatch epoch so an eviction that races a same-instant `End` or
+    /// restart becomes a no-op instead of evicting the wrong run.
+    Preempt {
+        /// Task id.
+        task: u32,
+        /// Dispatch epoch the eviction was requested against.
+        epoch: u32,
+    },
+    /// A previously-evicted task restarts on a slot (emitted instead of
+    /// `Start` when the kernel's dispatch mechanism re-launches a
+    /// preempted task; policies observe it via
+    /// [`crate::sim::SchedPolicy::on_resume`]).
+    Resume {
+        /// Task id.
+        task: u32,
+        /// Slot the task restarts on.
+        slot: u32,
     },
     /// Slot finished teardown and is reusable.
     SlotFree {

@@ -42,6 +42,38 @@
 //! * **arrival processes** — `submit_at > 0` tasks arrive through
 //!   `Arrive` events (see [`crate::workload::ArrivalProcess`]).
 //!
+//! **Preemption subsystem.** When a workload contains preemptible
+//! tasks ([`crate::workload::TaskSpec::preemptible`]) the kernel
+//! activates evict/requeue mechanics on top of the same event loop:
+//!
+//! * policies *choose* victims through
+//!   [`SchedPolicy::on_preempt_candidates`] (fired after arrivals and
+//!   ticks while work is queued); the kernel *executes* the eviction —
+//!   [`KernelCtx::request_preempt`] validates the victim (preemptible,
+//!   running, kernel-allocated slots; gang-aware all-or-nothing) and
+//!   schedules a `Preempt` event;
+//! * an eviction closes the victim's productive span (partial work is
+//!   preserved: `remaining -= executed`), invalidates its in-flight
+//!   `End` via a per-task dispatch epoch, holds the slots for the
+//!   task's `checkpoint_cost` before releasing them through the normal
+//!   `SlotFree` path (extra multi-core slots in the same order the
+//!   `End` path uses), and requeues the task at the back of the
+//!   pending queue (so FIFO drains hand the freed slot to the task
+//!   that triggered the eviction; ordering combinators re-sort);
+//! * re-dispatch goes through the ordinary drain mechanics — a
+//!   previously-evicted task launches via a `Resume` event (or is
+//!   detected on the staged `Start` path) that runs it for exactly its
+//!   remaining work, and notifies the policy via
+//!   [`SchedPolicy::on_resume`];
+//! * ties always favour work: an `End` and a `Preempt` at the same
+//!   instant resolve in insertion order, and the epoch check turns the
+//!   loser into a no-op, so a task is never both completed and evicted.
+//!
+//! Every preemption buffer lives in [`SimScratch`] and is sized only
+//! when the workload opts in, so non-preempt runs execute the exact
+//! pre-subsystem instruction sequence (bit-identical results) and
+//! warm-scratch preempt runs stay allocation-free on the hot path.
+//!
 //! Determinism contract: for workloads using none of the new
 //! dimensions (1-core, dep-free, all-at-once `Array` tasks — the
 //! paper's benchmark shape), the kernel replays the exact event and
@@ -52,7 +84,7 @@
 use super::engine::{EventQueue, SimEv, Time};
 use super::scratch::SimScratch;
 use crate::cluster::{ClusterSpec, SlotId, SlotPool};
-use crate::sched::{RunOptions, RunResult};
+use crate::sched::{ExecSpan, RunOptions, RunResult};
 use crate::util::stats::Summary;
 use crate::workload::{JobId, JobKind, TaskId, TraceRecord, Workload};
 use std::collections::VecDeque;
@@ -143,6 +175,22 @@ pub trait SchedPolicy {
     /// slot bookkeeping (Sparrow) dispatch here.
     fn on_deps_ready(&mut self, _ctx: &mut KernelCtx, _now: Time) {}
 
+    /// Preemption decision point, fired after each arrival and each
+    /// periodic tick while the pending queue is non-empty — only for
+    /// workloads containing preemptible tasks. Append victim task ids
+    /// to `out`; the kernel validates each through
+    /// [`KernelCtx::request_preempt`] (gang members expand to a whole-
+    /// gang eviction) and executes the evictions. The default selects
+    /// no victims, so preemption is strictly opt-in per policy.
+    fn on_preempt_candidates(&mut self, _ctx: &mut KernelCtx, _now: Time, _out: &mut Vec<TaskId>) {
+    }
+
+    /// A previously-evicted task restarted on `slot` for its remaining
+    /// work. Its re-dispatch was priced by the ordinary launch closure;
+    /// this hook is for restart-specific bookkeeping (counting resumes,
+    /// fairshare adjustments).
+    fn on_resume(&mut self, _ctx: &mut KernelCtx, _now: Time, _task: TaskId, _slot: SlotId) {}
+
     /// Seconds the central daemon / master spent busy, for
     /// [`RunResult::daemon_busy`].
     fn daemon_busy(&self) -> f64 {
@@ -175,6 +223,16 @@ pub struct KernelCtx<'w, 's> {
     // Multi-core slot packing (built only when any task needs > 1 core).
     extra_span: &'s mut Vec<(u32, u32)>,
     extra_slots: &'s mut Vec<SlotId>,
+    // Preemption subsystem (built only when a task is preemptible).
+    has_preempt: bool,
+    remaining: &'s mut Vec<f64>,
+    span_start: &'s mut Vec<f64>,
+    run_slot: &'s mut Vec<u32>,
+    epoch: &'s mut Vec<u32>,
+    evictions: &'s mut Vec<u32>,
+    kernel_alloc: &'s mut Vec<bool>,
+    spans: &'s mut Vec<ExecSpan>,
+    preempt_count: u64,
     // Kernel-owned accounting.
     collect_trace: bool,
     completed: usize,
@@ -223,6 +281,156 @@ impl<'w> KernelCtx<'w, '_> {
     /// re-order by priority/fairshare before dispatching).
     pub fn pending_snapshot(&self) -> Vec<TaskId> {
         self.pending.iter().copied().collect()
+    }
+
+    /// Iterate the pending queue in order without copying it.
+    pub fn pending_ids(&self) -> impl Iterator<Item = TaskId> + '_ {
+        self.pending.iter().copied()
+    }
+
+    /// Mutable contiguous view of the pending queue for ordering
+    /// combinators (see `crate::sched::combinators`). Contract: callers
+    /// may only *permute* the slice (sort, rotate); inserting, removing
+    /// or replacing ids would corrupt the kernel's gang bookkeeping.
+    pub fn pending_reorder(&mut self) -> &mut [TaskId] {
+        self.pending.make_contiguous()
+    }
+
+    /// True when the kernel's preemption subsystem is active for this
+    /// run (the workload contains at least one preemptible task).
+    pub fn preempt_enabled(&self) -> bool {
+        self.has_preempt
+    }
+
+    /// Collect every currently-evictable task into `out`: running,
+    /// marked preemptible, and holding kernel-allocated slots (policies
+    /// that do their own capacity bookkeeping, like Sparrow, never
+    /// produce evictable tasks).
+    pub fn preemptible_running(&self, out: &mut Vec<TaskId>) {
+        if !self.has_preempt {
+            return;
+        }
+        for t in &self.workload.tasks {
+            let i = t.id as usize;
+            if t.preemptible && self.run_slot[i] != u32::MAX && self.kernel_alloc[i] {
+                out.push(t.id);
+            }
+        }
+    }
+
+    /// Start time of a task's current execution span (`NAN` if the
+    /// task is not running or preemption is inactive).
+    pub fn span_start_of(&self, task: TaskId) -> Time {
+        if self.has_preempt {
+            self.span_start[task as usize]
+        } else {
+            f64::NAN
+        }
+    }
+
+    /// Remaining productive work of a task (its full duration when it
+    /// has not run yet or preemption is inactive).
+    pub fn remaining_of(&self, task: TaskId) -> f64 {
+        if self.has_preempt {
+            self.remaining[task as usize]
+        } else {
+            self.workload.tasks[task as usize].duration
+        }
+    }
+
+    /// How many times a task has been evicted so far this run.
+    pub fn eviction_count(&self, task: TaskId) -> u32 {
+        if self.has_preempt {
+            self.evictions[task as usize]
+        } else {
+            0
+        }
+    }
+
+    /// Core slots currently held by the running members of a parallel
+    /// job (what a whole-gang eviction would free).
+    pub fn running_gang_cores(&self, job: JobId) -> usize {
+        if !self.has_preempt {
+            return 0;
+        }
+        self.workload
+            .tasks
+            .iter()
+            .filter(|t| {
+                t.job == job
+                    && t.kind == JobKind::Parallel
+                    && self.run_slot[t.id as usize] != u32::MAX
+            })
+            .map(|t| t.cores as usize)
+            .sum()
+    }
+
+    /// Whether [`KernelCtx::request_preempt`] would accept `task` right
+    /// now (the same validation, no side effects): the task must be
+    /// running on kernel-allocated slots and marked preemptible. Gang
+    /// members are judged as a whole-gang all-or-nothing eviction —
+    /// refused if any running member is non-preemptible, or any member
+    /// is mid-launch or pending (a partial eviction would break gang
+    /// atomicity). Victim-selection policies check this before
+    /// accounting freed capacity, so a refusal never leaves phantom
+    /// in-flight evictions on their books.
+    pub fn evictable(&self, task: TaskId) -> bool {
+        if !self.has_preempt {
+            return false;
+        }
+        let spec = &self.workload.tasks[task as usize];
+        if spec.kind == JobKind::Parallel {
+            let mut any_running = false;
+            for t in &self.workload.tasks {
+                if t.job != spec.job || t.kind != JobKind::Parallel {
+                    continue;
+                }
+                let i = t.id as usize;
+                if self.run_slot[i] != u32::MAX {
+                    if !t.preemptible || !self.kernel_alloc[i] {
+                        return false;
+                    }
+                    any_running = true;
+                } else if self.kernel_alloc[i] || self.pending.contains(&t.id) {
+                    // Mid-launch or requeued member: evicting the rest
+                    // would leave the gang in a mixed state.
+                    return false;
+                }
+            }
+            any_running
+        } else {
+            let i = task as usize;
+            spec.preemptible && self.run_slot[i] != u32::MAX && self.kernel_alloc[i]
+        }
+    }
+
+    /// Request the eviction of `task` at `now`, validating it through
+    /// [`KernelCtx::evictable`]. On success `Preempt` events are
+    /// scheduled at `now` (one per running gang member for parallel
+    /// jobs); a victim that completes or restarts in the meantime turns
+    /// its eviction into a no-op (the dispatch epoch moved on). Returns
+    /// whether the request was accepted.
+    pub fn request_preempt(&mut self, now: Time, task: TaskId) -> bool {
+        if !self.evictable(task) {
+            return false;
+        }
+        let spec = &self.workload.tasks[task as usize];
+        if spec.kind == JobKind::Parallel {
+            for tid in 0..self.workload.tasks.len() as u32 {
+                let t = &self.workload.tasks[tid as usize];
+                if t.job == spec.job
+                    && t.kind == JobKind::Parallel
+                    && self.run_slot[tid as usize] != u32::MAX
+                {
+                    let epoch = self.epoch[tid as usize];
+                    self.queue.push(now, SimEv::Preempt { task: tid, epoch });
+                }
+            }
+        } else {
+            let epoch = self.epoch[task as usize];
+            self.queue.push(now, SimEv::Preempt { task, epoch });
+        }
+        true
     }
 
     /// Per-slot busy-until table for policies that model worker-local
@@ -360,6 +568,48 @@ impl<'w> KernelCtx<'w, '_> {
         }
     }
 
+    /// Execute one validated eviction: close the productive span,
+    /// preserve the partial work, invalidate the in-flight `End`,
+    /// schedule the slot releases after the checkpoint drain (the same
+    /// primary-then-extras order the `End` path uses, so the pool's
+    /// free-stack evolution matches a completion at the same instant),
+    /// and requeue the task.
+    fn execute_evict(&mut self, now: Time, task: TaskId) {
+        let spec = &self.workload.tasks[task as usize];
+        let i = task as usize;
+        let primary = self.run_slot[i];
+        debug_assert!(primary != u32::MAX, "evicting idle task {task}");
+        if self.collect_trace {
+            self.spans.push(ExecSpan {
+                task,
+                slot: primary,
+                start: self.span_start[i],
+                end: now,
+            });
+        }
+        let executed = now - self.span_start[i];
+        self.remaining[i] = (self.remaining[i] - executed).max(0.0);
+        self.epoch[i] += 1; // the in-flight End is now stale
+        self.evictions[i] += 1;
+        self.preempt_count += 1;
+        self.span_start[i] = f64::NAN;
+        self.run_slot[i] = u32::MAX;
+        self.kernel_alloc[i] = false;
+        let free_at = now + spec.checkpoint_cost;
+        self.queue.push(free_at, SimEv::SlotFree { slot: primary });
+        if !self.extra_span.is_empty() {
+            let (s0, len) = self.extra_span[i];
+            for k in 0..len {
+                let s = self.extra_slots[(s0 + k) as usize];
+                self.queue.push(free_at, SimEv::SlotFree { slot: s });
+            }
+        }
+        // Requeue at the back: under a plain FIFO drain the task that
+        // triggered the eviction (already queued ahead) wins the freed
+        // slot; ordering combinators re-impose their discipline anyway.
+        self.enqueue_ready(task);
+    }
+
     /// Allocate every slot a task needs, all-or-nothing. The primary
     /// slot carries the task's memory; extra slots (cores > 1) carry
     /// none. On failure the allocations are rolled back in reverse so
@@ -388,6 +638,9 @@ impl<'w> KernelCtx<'w, '_> {
             }
             self.extra_span[tid as usize] = (start, task.cores - 1);
         }
+        if self.has_preempt {
+            self.kernel_alloc[tid as usize] = true;
+        }
         Some(primary)
     }
 
@@ -405,6 +658,9 @@ impl<'w> KernelCtx<'w, '_> {
             self.extra_span[tid as usize] = (0, 0);
         }
         self.pool.release(primary, task.mem_mb);
+        if self.has_preempt {
+            self.kernel_alloc[tid as usize] = false;
+        }
     }
 
     /// All-or-nothing gang dispatch: allocate slots for every pending
@@ -445,28 +701,49 @@ impl<'w> KernelCtx<'w, '_> {
     fn emit_launch(&mut self, task: TaskId, slot: SlotId, l: Launch) {
         let ev = if l.via_stage {
             SimEv::Stage { task, slot }
+        } else if self.has_preempt && self.evictions[task as usize] > 0 {
+            SimEv::Resume { task, slot }
         } else {
             SimEv::Start { task, slot }
         };
         self.queue.push(l.at, ev);
     }
 
-    /// `Start` event: record wait + trace, schedule the `End`.
-    fn handle_start(&mut self, now: Time, task: TaskId, slot: SlotId) {
+    /// `Start`/`Resume` event: record wait + trace (first start only),
+    /// open the execution span and schedule the `End`. Returns whether
+    /// this was the restart of a previously-evicted task (staged
+    /// launches re-enter through `Start`, so the kernel detects resumes
+    /// here rather than trusting the event variant).
+    fn handle_start(&mut self, now: Time, task: TaskId, slot: SlotId) -> bool {
         let spec = &self.workload.tasks[task as usize];
-        self.waits.add(now - spec.submit_at);
-        if self.collect_trace {
-            self.trace_idx[task as usize] = self.trace.len() as u32;
-            self.trace.push(TraceRecord {
-                task,
-                node: self.pool.node_of(slot),
-                slot,
-                submit: spec.submit_at,
-                start: now,
-                end: 0.0, // patched on End
-            });
+        let resumed = self.has_preempt && self.evictions[task as usize] > 0;
+        if !resumed {
+            self.waits.add(now - spec.submit_at);
+            if self.collect_trace {
+                self.trace_idx[task as usize] = self.trace.len() as u32;
+                self.trace.push(TraceRecord {
+                    task,
+                    node: self.pool.node_of(slot),
+                    slot,
+                    submit: spec.submit_at,
+                    start: now,
+                    end: 0.0, // patched on End
+                });
+            }
         }
-        self.queue.push(now + spec.duration, SimEv::End { task, slot });
+        if self.has_preempt {
+            let i = task as usize;
+            self.epoch[i] += 1;
+            self.span_start[i] = now;
+            self.run_slot[i] = slot;
+            let epoch = self.epoch[i];
+            self.queue
+                .push(now + self.remaining[i], SimEv::End { task, slot, epoch });
+        } else {
+            self.queue
+                .push(now + spec.duration, SimEv::End { task, slot, epoch: 0 });
+        }
+        resumed
     }
 
     /// `End` event bookkeeping (before the policy's completion hook).
@@ -475,6 +752,30 @@ impl<'w> KernelCtx<'w, '_> {
         self.makespan = self.makespan.max(now);
         if self.collect_trace {
             self.trace[self.trace_idx[task as usize] as usize].end = now;
+        }
+        if self.has_gang {
+            // A completed member leaves its gang, so a later eviction
+            // of the surviving members can still reassemble and
+            // re-dispatch the remainder all-or-nothing.
+            let t = &self.workload.tasks[task as usize];
+            if t.kind == JobKind::Parallel {
+                self.gang_total[t.job as usize] -= 1;
+            }
+        }
+        if self.has_preempt {
+            let i = task as usize;
+            if self.collect_trace {
+                self.spans.push(ExecSpan {
+                    task,
+                    slot: self.run_slot[i],
+                    start: self.span_start[i],
+                    end: now,
+                });
+            }
+            self.remaining[i] = 0.0;
+            self.span_start[i] = f64::NAN;
+            self.run_slot[i] = u32::MAX;
+            self.kernel_alloc[i] = false;
         }
     }
 
@@ -518,11 +819,13 @@ impl Kernel {
         let mut has_deps = false;
         let mut has_gang = false;
         let mut has_multicore = false;
+        let mut has_preempt = false;
         let mut max_job = 0u32;
         for t in &workload.tasks {
             has_deps |= !t.deps.is_empty();
             has_gang |= t.kind == JobKind::Parallel;
             has_multicore |= t.cores > 1;
+            has_preempt |= t.preemptible;
             max_job = max_job.max(t.job);
         }
 
@@ -564,6 +867,16 @@ impl Kernel {
         if has_multicore {
             scratch.extra_span.resize(n, (0, 0));
         }
+        if has_preempt {
+            scratch
+                .remaining
+                .extend(workload.tasks.iter().map(|t| t.duration));
+            scratch.span_start.resize(n, f64::NAN);
+            scratch.run_slot.resize(n, u32::MAX);
+            scratch.epoch.resize(n, 0);
+            scratch.evictions.resize(n, 0);
+            scratch.kernel_alloc.resize(n, false);
+        }
 
         let SimScratch {
             queue,
@@ -581,6 +894,14 @@ impl Kernel {
             gang_ready,
             extra_span,
             extra_slots,
+            remaining,
+            span_start,
+            run_slot,
+            epoch,
+            evictions,
+            kernel_alloc,
+            preempt_victims,
+            spans,
         } = scratch;
         let mut ctx = KernelCtx {
             workload,
@@ -601,6 +922,15 @@ impl Kernel {
             gang_ready,
             extra_span,
             extra_slots,
+            has_preempt,
+            remaining,
+            span_start,
+            run_slot,
+            epoch,
+            evictions,
+            kernel_alloc,
+            spans,
+            preempt_count: 0,
             collect_trace: options.collect_trace,
             completed: 0,
             makespan: 0.0,
@@ -626,9 +956,15 @@ impl Kernel {
                 SimEv::Arrive { task } => {
                     ctx.admit(task);
                     policy.on_arrive(&mut ctx, now, task);
+                    if has_preempt {
+                        preemption_pass(policy, &mut ctx, now, preempt_victims);
+                    }
                 }
                 SimEv::Tick => {
                     policy.on_tick(&mut ctx, now);
+                    if has_preempt {
+                        preemption_pass(policy, &mut ctx, now, preempt_victims);
+                    }
                     if ctx.completed < n {
                         if let Some(interval) = policy.tick_interval() {
                             assert!(
@@ -642,8 +978,31 @@ impl Kernel {
                     }
                 }
                 SimEv::Stage { task, slot } => policy.on_stage(&mut ctx, now, task, slot),
-                SimEv::Start { task, slot } => ctx.handle_start(now, task, slot),
-                SimEv::End { task, slot } => {
+                SimEv::Start { task, slot } => {
+                    // Staged launches of evicted tasks re-enter here, so
+                    // resumes are detected rather than event-tagged.
+                    if ctx.handle_start(now, task, slot) {
+                        policy.on_resume(&mut ctx, now, task, slot);
+                    }
+                }
+                SimEv::Resume { task, slot } => {
+                    ctx.handle_start(now, task, slot);
+                    policy.on_resume(&mut ctx, now, task, slot);
+                }
+                SimEv::Preempt { task, epoch } => {
+                    // Stale if the victim completed or restarted since
+                    // the request (its dispatch epoch moved on).
+                    if has_preempt
+                        && ctx.epoch[task as usize] == epoch
+                        && ctx.run_slot[task as usize] != u32::MAX
+                    {
+                        ctx.execute_evict(now, task);
+                    }
+                }
+                SimEv::End { task, slot, epoch } => {
+                    if has_preempt && ctx.epoch[task as usize] != epoch {
+                        continue; // stale End: the task was evicted out of this run
+                    }
                     ctx.handle_end(now, task);
                     if ctx.has_deps && ctx.propagate_deps(task) {
                         policy.on_deps_ready(&mut ctx, now);
@@ -688,8 +1047,30 @@ impl Kernel {
             events,
             daemon_busy: policy.daemon_busy(),
             waits: ctx.waits,
+            preemptions: ctx.preempt_count,
             trace: options.collect_trace.then(|| std::mem::take(ctx.trace)),
+            spans: (options.collect_trace && has_preempt)
+                .then(|| std::mem::take(ctx.spans)),
         }
+    }
+}
+
+/// One preemption decision round: the policy nominates victims, the
+/// kernel validates and schedules the evictions. `victims` is the
+/// warm scratch buffer, so steady-state passes allocate nothing.
+fn preemption_pass(
+    policy: &mut dyn SchedPolicy,
+    ctx: &mut KernelCtx,
+    now: Time,
+    victims: &mut Vec<TaskId>,
+) {
+    if ctx.pending.is_empty() {
+        return;
+    }
+    victims.clear();
+    policy.on_preempt_candidates(ctx, now, victims);
+    for &v in victims.iter() {
+        ctx.request_preempt(now, v);
     }
 }
 
@@ -923,6 +1304,224 @@ mod tests {
             &RunOptions::default(),
             &mut scratch,
         );
+    }
+
+    /// [`InstantPolicy`] plus priority preemption: nominate every
+    /// running preemptible task whose priority is below the best
+    /// pending priority.
+    struct PreemptingInstant;
+
+    impl SchedPolicy for PreemptingInstant {
+        fn label(&self) -> String {
+            "PreemptingInstant".into()
+        }
+        fn on_submit(&mut self, ctx: &mut KernelCtx, _batch: usize) {
+            ctx.drain_fifo(&mut |_, _| Launch::start(0.0));
+        }
+        fn on_arrive(&mut self, ctx: &mut KernelCtx, now: Time, _task: TaskId) {
+            ctx.drain_fifo(&mut |_, _| Launch::start(now));
+        }
+        fn on_complete(
+            &mut self,
+            _ctx: &mut KernelCtx,
+            now: Time,
+            _task: TaskId,
+            _slot: SlotId,
+        ) -> Option<Time> {
+            Some(now)
+        }
+        fn on_slot_free(&mut self, ctx: &mut KernelCtx, now: Time) {
+            ctx.drain_fifo(&mut |_, _| Launch::start(now));
+        }
+        fn on_preempt_candidates(
+            &mut self,
+            ctx: &mut KernelCtx,
+            _now: Time,
+            out: &mut Vec<TaskId>,
+        ) {
+            let w = ctx.workload();
+            let best = ctx
+                .pending_ids()
+                .map(|t| w.tasks[t as usize].priority)
+                .max()
+                .unwrap_or(i32::MIN);
+            let mut cands = Vec::new();
+            ctx.preemptible_running(&mut cands);
+            out.extend(
+                cands
+                    .into_iter()
+                    .filter(|&v| w.tasks[v as usize].priority < best),
+            );
+        }
+    }
+
+    fn run_preempting(w: &Workload, cluster: &ClusterSpec) -> RunResult {
+        let mut scratch = SimScratch::new();
+        Kernel::run(
+            &mut PreemptingInstant,
+            w,
+            cluster,
+            &RunOptions::with_trace(),
+            &mut scratch,
+        )
+    }
+
+    #[test]
+    fn preemption_splits_work_and_preserves_total() {
+        // One slot. Background 10 s preemptible task; a priority-1
+        // 1 s task arrives at t=2, evicts it, and the background task
+        // resumes with exactly 8 s of work left.
+        let one_slot = ClusterSpec::homogeneous(1, 1, 32 * 1024, 1);
+        let mut bg = TaskSpec::array(0, 0, 10.0);
+        bg.preemptible = true;
+        let mut fg = TaskSpec::array(1, 1, 1.0);
+        fg.submit_at = 2.0;
+        fg.priority = 1;
+        let w = Workload {
+            tasks: vec![bg, fg],
+            label: "pre".into(),
+        };
+        let r = run_preempting(&w, &one_slot);
+        r.check_invariants().unwrap();
+        assert_eq!(r.preemptions, 1);
+        assert!((r.t_total - 11.0).abs() < 1e-9, "t_total={}", r.t_total);
+        let spans = r.spans.as_ref().unwrap();
+        assert_eq!(spans.len(), 3, "bg split into two spans + fg: {spans:?}");
+        let bg_work: f64 = spans.iter().filter(|s| s.task == 0).map(|s| s.seconds()).sum();
+        assert!((bg_work - 10.0).abs() < 1e-9, "no lost work: {bg_work}");
+        // The foreground task ran immediately after the eviction.
+        let fg_span = spans.iter().find(|s| s.task == 1).unwrap();
+        assert!((fg_span.start - 2.0).abs() < 1e-9);
+        assert!((fg_span.end - 3.0).abs() < 1e-9);
+        // Trace still has one record per task, spanning first start to
+        // final end.
+        let trace = r.trace.as_ref().unwrap();
+        assert_eq!(trace.len(), 2);
+        let bg_rec = trace.iter().find(|t| t.task == 0).unwrap();
+        assert!((bg_rec.start - 0.0).abs() < 1e-9);
+        assert!((bg_rec.end - 11.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn checkpoint_cost_delays_slot_release() {
+        let one_slot = ClusterSpec::homogeneous(1, 1, 32 * 1024, 1);
+        let mut bg = TaskSpec::array(0, 0, 10.0);
+        bg.preemptible = true;
+        bg.checkpoint_cost = 1.0;
+        let mut fg = TaskSpec::array(1, 1, 1.0);
+        fg.submit_at = 2.0;
+        fg.priority = 1;
+        let w = Workload {
+            tasks: vec![bg, fg],
+            label: "ckpt".into(),
+        };
+        let r = run_preempting(&w, &one_slot);
+        r.check_invariants().unwrap();
+        // Evict at 2, slot drains until 3, fg runs [3,4], bg [4,12].
+        assert!((r.t_total - 12.0).abs() < 1e-9, "t_total={}", r.t_total);
+        let spans = r.spans.as_ref().unwrap();
+        let fg_span = spans.iter().find(|s| s.task == 1).unwrap();
+        assert!((fg_span.start - 3.0).abs() < 1e-9, "{fg_span:?}");
+    }
+
+    #[test]
+    fn gang_eviction_is_all_or_nothing() {
+        // Two-slot cluster; a 2-member preemptible gang holds both
+        // slots; a priority-1 arrival evicts the WHOLE gang, runs, and
+        // the gang reassembles with its remaining work.
+        let two_slots = ClusterSpec::homogeneous(1, 2, 32 * 1024, 1);
+        let mut tasks: Vec<TaskSpec> = (0..2)
+            .map(|i| {
+                let mut t = TaskSpec::array(i, 7, 10.0);
+                t.kind = JobKind::Parallel;
+                t.preemptible = true;
+                t
+            })
+            .collect();
+        let mut fg = TaskSpec::array(2, 1, 1.0);
+        fg.submit_at = 2.0;
+        fg.priority = 1;
+        tasks.push(fg);
+        let w = Workload {
+            tasks,
+            label: "gangpre".into(),
+        };
+        let r = run_preempting(&w, &two_slots);
+        r.check_invariants().unwrap();
+        assert_eq!(r.preemptions, 2, "both members evicted");
+        assert!((r.t_total - 11.0).abs() < 1e-9, "t_total={}", r.t_total);
+        let spans = r.spans.as_ref().unwrap();
+        // Each member: [0,2] then [3,11]; resumes synchronized.
+        for task in 0..2u32 {
+            let mut s: Vec<&ExecSpan> = spans.iter().filter(|s| s.task == task).collect();
+            s.sort_by(|a, b| a.start.total_cmp(&b.start));
+            assert_eq!(s.len(), 2);
+            assert!((s[0].start - 0.0).abs() < 1e-9);
+            assert!((s[0].end - 2.0).abs() < 1e-9);
+            assert!((s[1].start - 3.0).abs() < 1e-9);
+            assert!((s[1].end - 11.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn non_preemptible_tasks_are_refused() {
+        // Background task is NOT preemptible (the foreground one is,
+        // which activates the subsystem): the nomination is refused and
+        // the arrival simply waits.
+        let one_slot = ClusterSpec::homogeneous(1, 1, 32 * 1024, 1);
+        let bg = TaskSpec::array(0, 0, 10.0);
+        let mut fg = TaskSpec::array(1, 1, 1.0);
+        fg.submit_at = 2.0;
+        fg.priority = 1;
+        fg.preemptible = true;
+        let w = Workload {
+            tasks: vec![bg, fg],
+            label: "nopre".into(),
+        };
+        let r = run_preempting(&w, &one_slot);
+        r.check_invariants().unwrap();
+        assert_eq!(r.preemptions, 0);
+        assert!((r.t_total - 11.0).abs() < 1e-9);
+        let trace = r.trace.as_ref().unwrap();
+        let fg_rec = trace.iter().find(|t| t.task == 1).unwrap();
+        assert!((fg_rec.start - 10.0).abs() < 1e-9, "fg must wait");
+    }
+
+    #[test]
+    fn preempt_scratch_reuse_matches_fresh() {
+        // A preemption-heavy run through a warm scratch is bit-identical
+        // to a fresh one, and a plain run AFTER a preempt run is
+        // unaffected by the leftover buffers.
+        let one_slot = ClusterSpec::homogeneous(1, 1, 32 * 1024, 1);
+        let mut bg = TaskSpec::array(0, 0, 10.0);
+        bg.preemptible = true;
+        let mut fg = TaskSpec::array(1, 1, 1.0);
+        fg.submit_at = 2.0;
+        fg.priority = 1;
+        let pre = Workload {
+            tasks: vec![bg, fg],
+            label: "pre".into(),
+        };
+        let plain = Workload {
+            tasks: (0..8).map(|i| TaskSpec::array(i, 0, 1.0)).collect(),
+            label: "plain".into(),
+        };
+        let mut scratch = SimScratch::new();
+        for w in [&pre, &plain, &pre] {
+            let warm = Kernel::run(
+                &mut PreemptingInstant,
+                w,
+                &one_slot,
+                &RunOptions::with_trace(),
+                &mut scratch,
+            );
+            let fresh = run_preempting(w, &one_slot);
+            assert_eq!(warm.t_total.to_bits(), fresh.t_total.to_bits());
+            assert_eq!(warm.events, fresh.events);
+            assert_eq!(warm.preemptions, fresh.preemptions);
+            assert_eq!(warm.trace.as_ref().unwrap(), fresh.trace.as_ref().unwrap());
+            assert_eq!(warm.spans, fresh.spans);
+        }
     }
 
     #[test]

@@ -56,6 +56,29 @@ pub struct SimScratch {
     pub extra_span: Vec<(u32, u32)>,
     /// Arena of extra (non-primary) slots held by multi-core tasks.
     pub extra_slots: Vec<u32>,
+    /// Remaining productive seconds per task (preemption only; progress
+    /// preserved across evictions).
+    pub remaining: Vec<f64>,
+    /// Start time of each task's current execution span (`NAN` when the
+    /// task is not running; preemption only).
+    pub span_start: Vec<f64>,
+    /// Primary slot of each task's current run (`u32::MAX` when not
+    /// running; preemption only).
+    pub run_slot: Vec<u32>,
+    /// Per-task dispatch epoch, bumped on start/resume/evict to
+    /// invalidate in-flight `End` events (preemption only).
+    pub epoch: Vec<u32>,
+    /// Per-task eviction count (preemption only).
+    pub evictions: Vec<u32>,
+    /// Whether a task's current run holds kernel-pool slots (false for
+    /// policies doing their own capacity bookkeeping, e.g. Sparrow;
+    /// preemption only).
+    pub kernel_alloc: Vec<bool>,
+    /// Victim-collection buffer handed to
+    /// [`crate::sim::SchedPolicy::on_preempt_candidates`].
+    pub preempt_victims: Vec<u32>,
+    /// Executed-span records (traced preemption runs only).
+    pub spans: Vec<crate::sched::ExecSpan>,
 }
 
 impl SimScratch {
@@ -77,6 +100,14 @@ impl SimScratch {
             gang_ready: Vec::new(),
             extra_span: Vec::new(),
             extra_slots: Vec::new(),
+            remaining: Vec::new(),
+            span_start: Vec::new(),
+            run_slot: Vec::new(),
+            epoch: Vec::new(),
+            evictions: Vec::new(),
+            kernel_alloc: Vec::new(),
+            preempt_victims: Vec::new(),
+            spans: Vec::new(),
         }
     }
 
@@ -100,6 +131,14 @@ impl SimScratch {
         self.gang_ready.clear();
         self.extra_span.clear();
         self.extra_slots.clear();
+        self.remaining.clear();
+        self.span_start.clear();
+        self.run_slot.clear();
+        self.epoch.clear();
+        self.evictions.clear();
+        self.kernel_alloc.clear();
+        self.preempt_victims.clear();
+        self.spans.clear();
         if collect_trace {
             self.trace.reserve(n_tasks);
             self.trace_idx.resize(n_tasks, u32::MAX);
@@ -137,6 +176,19 @@ mod tests {
         s.gang_ready.push(1);
         s.extra_span.push((0, 2));
         s.extra_slots.push(6);
+        s.remaining.push(1.5);
+        s.span_start.push(2.0);
+        s.run_slot.push(3);
+        s.epoch.push(1);
+        s.evictions.push(2);
+        s.kernel_alloc.push(true);
+        s.preempt_victims.push(0);
+        s.spans.push(crate::sched::ExecSpan {
+            task: 0,
+            slot: 0,
+            start: 0.0,
+            end: 1.0,
+        });
         s.begin(&cluster, 4, true);
         assert!(s.queue.is_empty());
         assert_eq!(s.queue.now(), 0.0);
@@ -154,6 +206,14 @@ mod tests {
         assert!(s.gang_ready.is_empty());
         assert!(s.extra_span.is_empty());
         assert!(s.extra_slots.is_empty());
+        assert!(s.remaining.is_empty());
+        assert!(s.span_start.is_empty());
+        assert!(s.run_slot.is_empty());
+        assert!(s.epoch.is_empty());
+        assert!(s.evictions.is_empty());
+        assert!(s.kernel_alloc.is_empty());
+        assert!(s.preempt_victims.is_empty());
+        assert!(s.spans.is_empty());
     }
 
     #[test]

@@ -58,6 +58,10 @@ pub struct WorkloadBuilder {
     chain_len: u32,
     gang_size: u32,
     arrivals: Option<ArrivalProcess>,
+    priority: i32,
+    users: u32,
+    preemptible: bool,
+    checkpoint_cost: f64,
 }
 
 impl WorkloadBuilder {
@@ -79,6 +83,10 @@ impl WorkloadBuilder {
             chain_len: 1,
             gang_size: 1,
             arrivals: None,
+            priority: 0,
+            users: 1,
+            preemptible: false,
+            checkpoint_cost: 0.0,
         }
     }
 
@@ -141,6 +149,27 @@ impl WorkloadBuilder {
         self
     }
 
+    /// Static priority for every task (combinator ordering).
+    pub fn priority(mut self, p: i32) -> Self {
+        self.priority = p;
+        self
+    }
+
+    /// Spread tasks round-robin across `n` users (fairshare ordering).
+    pub fn users(mut self, n: u32) -> Self {
+        self.users = n.max(1);
+        self
+    }
+
+    /// Mark every task evictable by preemption-capable policies, with
+    /// the given checkpoint/restart overhead (seconds of slot drain per
+    /// eviction).
+    pub fn preemptible(mut self, checkpoint_cost: f64) -> Self {
+        self.preemptible = true;
+        self.checkpoint_cost = checkpoint_cost;
+        self
+    }
+
     /// Materialize.
     pub fn build(self) -> Workload {
         assert!(
@@ -160,6 +189,10 @@ impl WorkloadBuilder {
             let mut t = TaskSpec::array(i as u32, job, self.dist.sample(&mut rng));
             t.mem_mb = self.mem_mb;
             t.cores = self.cores;
+            t.priority = self.priority;
+            t.user = (i % self.users as u64) as u32;
+            t.preemptible = self.preemptible;
+            t.checkpoint_cost = self.checkpoint_cost;
             if self.gang_size > 1 {
                 t.kind = JobKind::Parallel;
             }
@@ -270,6 +303,22 @@ mod tests {
         for (a, b) in w.tasks.iter().zip(&v.tasks) {
             assert_eq!(a.submit_at.to_bits(), b.submit_at.to_bits());
         }
+    }
+
+    #[test]
+    fn preempt_and_fairness_knobs_stamp_tasks() {
+        let w = WorkloadBuilder::constant(1.0)
+            .tasks(6)
+            .users(3)
+            .priority(4)
+            .preemptible(0.25)
+            .build();
+        w.validate().unwrap();
+        assert!(w.tasks.iter().all(|t| t.preemptible));
+        assert!(w.tasks.iter().all(|t| t.checkpoint_cost == 0.25));
+        assert!(w.tasks.iter().all(|t| t.priority == 4));
+        let users: Vec<u32> = w.tasks.iter().map(|t| t.user).collect();
+        assert_eq!(users, vec![0, 1, 2, 0, 1, 2]);
     }
 
     #[test]

@@ -38,6 +38,21 @@ pub struct TaskSpec {
     /// Task ids that must complete before this task may start (DAG
     /// dependencies; empty for array tasks).
     pub deps: Vec<TaskId>,
+    /// Static priority (higher = sooner) consulted by the
+    /// priority/fairshare policy combinators; 0 for the paper's
+    /// benchmark tasks, which are all equal.
+    pub priority: i32,
+    /// Owning user, for fairshare accounting (accumulated core-seconds
+    /// per user order the queue).
+    pub user: u32,
+    /// Whether a preemption-capable policy may evict this task while it
+    /// runs (Slurm `PreemptMode`-style opt-in; the kernel refuses to
+    /// evict non-preemptible tasks).
+    pub preemptible: bool,
+    /// Checkpoint/restart overhead (virtual s): after an eviction the
+    /// task's slots stay occupied this long (checkpoint drain) before
+    /// they are released; the task itself loses no progress.
+    pub checkpoint_cost: f64,
 }
 
 impl TaskSpec {
@@ -52,6 +67,10 @@ impl TaskSpec {
             mem_mb: 2048,
             submit_at: 0.0,
             deps: Vec::new(),
+            priority: 0,
+            user: 0,
+            preemptible: false,
+            checkpoint_cost: 0.0,
         }
     }
 
@@ -118,6 +137,12 @@ impl Workload {
                 return Err(format!(
                     "task {} has non-finite submit_at {}",
                     t.id, t.submit_at
+                ));
+            }
+            if !(t.checkpoint_cost.is_finite() && t.checkpoint_cost >= 0.0) {
+                return Err(format!(
+                    "task {} has invalid checkpoint_cost {}",
+                    t.id, t.checkpoint_cost
                 ));
             }
             for &d in &t.deps {
@@ -237,6 +262,28 @@ mod tests {
         let mut t = TaskSpec::array(0, 0, 1.0);
         t.deps = vec![0];
         assert!(wl(vec![t]).validate().unwrap_err().contains("itself"));
+    }
+
+    #[test]
+    fn rejects_invalid_checkpoint_cost() {
+        let mut t = TaskSpec::array(0, 0, 1.0);
+        t.checkpoint_cost = f64::NAN;
+        assert!(wl(vec![t])
+            .validate()
+            .unwrap_err()
+            .contains("checkpoint_cost"));
+        let mut t = TaskSpec::array(0, 0, 1.0);
+        t.checkpoint_cost = -1.0;
+        assert!(wl(vec![t]).validate().is_err());
+    }
+
+    #[test]
+    fn preemption_fields_default_off() {
+        let t = TaskSpec::array(0, 0, 1.0);
+        assert!(!t.preemptible);
+        assert_eq!(t.checkpoint_cost, 0.0);
+        assert_eq!(t.priority, 0);
+        assert_eq!(t.user, 0);
     }
 
     #[test]

@@ -14,8 +14,10 @@ use sssched::cluster::ClusterSpec;
 use sssched::config::SchedulerChoice;
 use sssched::multilevel::{Multilevel, MultilevelParams};
 use sssched::sched::batchq::{BatchJob, BatchQueueSim, QueuePolicy};
+use sssched::sched::combinators::{make_preemptive, Order};
 use sssched::sched::{make_scheduler, RunOptions, Scheduler};
-use sssched::workload::WorkloadBuilder;
+use sssched::sim::Kernel;
+use sssched::workload::{TaskSpec, Workload, WorkloadBuilder};
 use std::path::PathBuf;
 
 fn snapshot_path() -> PathBuf {
@@ -23,6 +25,13 @@ fn snapshot_path() -> PathBuf {
         .join("tests")
         .join("golden")
         .join("array_t_total.txt")
+}
+
+fn preempt_snapshot_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("golden")
+        .join("preempt_t_total.txt")
 }
 
 fn cluster() -> ClusterSpec {
@@ -68,11 +77,74 @@ fn compute_lines() -> Vec<String> {
     lines
 }
 
-#[test]
-fn golden_array_results_are_pinned() {
-    let lines = compute_lines();
-    let path = snapshot_path();
-    match std::fs::read_to_string(&path) {
+/// Deterministic preemption workload: 24 preemptible 8 s background
+/// tasks + 8 priority-10 2 s foreground tasks arriving on a fixed
+/// stagger. Exercises evict / checkpoint-drain / resume on the
+/// centralized backend.
+fn preempt_workload() -> Workload {
+    let mut tasks: Vec<TaskSpec> = Vec::new();
+    for i in 0..24u32 {
+        let mut t = TaskSpec::array(i, i, 8.0);
+        t.preemptible = true;
+        t.checkpoint_cost = 0.5;
+        t.user = i % 2;
+        tasks.push(t);
+    }
+    for k in 0..8u32 {
+        let mut t = TaskSpec::array(24 + k, 24 + k, 2.0);
+        t.priority = 10;
+        t.user = 2;
+        t.submit_at = 1.5 * k as f64 + 0.25;
+        tasks.push(t);
+    }
+    Workload {
+        tasks,
+        label: "golden-preempt".into(),
+    }
+}
+
+/// `name seed t_total_bits preemptions` lines for the preemption /
+/// fairness-combinator runs (separate snapshot so the pre-existing
+/// array snapshot stays byte-identical).
+fn compute_preempt_lines() -> Vec<String> {
+    let cluster = cluster();
+    let mut lines = Vec::new();
+    let wp = preempt_workload();
+    let wf = WorkloadBuilder::constant(1.0)
+        .tasks(200)
+        .users(3)
+        .label("golden-fair")
+        .build();
+    for seed in [1u64, 2, 3] {
+        // Preemption-enabled centralized run (Slurm + priority +
+        // preemption wrapper).
+        let pre = make_preemptive(SchedulerChoice::Slurm, 1, Order::Priority);
+        let r = pre.run(&wp, &cluster, seed, &RunOptions::default());
+        lines.push(format!(
+            "Slurm+prio+preempt {seed} {:016x} {}",
+            r.t_total.to_bits(),
+            r.preemptions
+        ));
+        // Fairshare-combinator run: the Slurm policy under
+        // combinators::Ordered(Fairshare) on a 3-user array workload.
+        let slurm = make_scheduler(SchedulerChoice::Slurm);
+        let inner = slurm.make_policy(seed).expect("slurm is kernel-driven");
+        let mut policy =
+            sssched::sched::combinators::Ordered::new(Order::Fairshare, inner);
+        let r = Kernel::run(
+            &mut policy,
+            &wf,
+            &cluster,
+            &RunOptions::default(),
+            &mut sssched::sched::SimScratch::new(),
+        );
+        lines.push(format!("Slurm+fair {seed} {:016x} 0", r.t_total.to_bits()));
+    }
+    lines
+}
+
+fn assert_snapshot(path: &std::path::Path, lines: &[String]) {
+    match std::fs::read_to_string(path) {
         Ok(expected) => {
             let expected: Vec<&str> = expected.lines().filter(|l| !l.is_empty()).collect();
             assert_eq!(
@@ -83,10 +155,10 @@ fn golden_array_results_are_pinned() {
                 expected.len(),
                 lines.len()
             );
-            for (e, got) in expected.iter().zip(&lines) {
+            for (e, got) in expected.iter().zip(lines) {
                 assert_eq!(
                     *e, got,
-                    "array-workload result drifted from golden snapshot {}",
+                    "result drifted from golden snapshot {}",
                     path.display()
                 );
             }
@@ -94,13 +166,28 @@ fn golden_array_results_are_pinned() {
         Err(_) => {
             std::fs::create_dir_all(path.parent().expect("has parent"))
                 .expect("create tests/golden");
-            std::fs::write(&path, lines.join("\n") + "\n").expect("write snapshot");
+            std::fs::write(path, lines.join("\n") + "\n").expect("write snapshot");
             eprintln!(
                 "golden snapshot seeded at {} — commit it to pin results",
                 path.display()
             );
         }
     }
+}
+
+#[test]
+fn golden_preempt_results_are_pinned() {
+    assert_snapshot(&preempt_snapshot_path(), &compute_preempt_lines());
+}
+
+#[test]
+fn golden_preempt_recomputation_is_stable() {
+    assert_eq!(compute_preempt_lines(), compute_preempt_lines());
+}
+
+#[test]
+fn golden_array_results_are_pinned() {
+    assert_snapshot(&snapshot_path(), &compute_lines());
 }
 
 #[test]

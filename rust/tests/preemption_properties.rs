@@ -1,0 +1,313 @@
+//! Property suite locking down the kernel preemption subsystem: across
+//! random workload mixes (plain, multi-core, gang-scheduled) on every
+//! backend wrapped by the ordering + preemption combinators, assert
+//!
+//! * **no lost work** — every task's executed span lengths sum to its
+//!   duration (never more), even through arbitrary evict/resume chains;
+//! * **no double-allocated slots** — execution spans on one slot never
+//!   overlap after evict/requeue cycles;
+//! * **gang atomicity** — no gang member keeps running across a
+//!   sibling's eviction instant (whole-gang all-or-nothing);
+//! * **determinism** — warm-scratch reuse is bit-identical, and the
+//!   `preempt` experiment is bit-identical for every `--jobs` value.
+
+use sssched::config::{ExperimentConfig, SchedulerChoice};
+use sssched::harness;
+use sssched::sched::combinators::{make_preemptive, Order};
+use sssched::sched::{RunOptions, RunResult, SimScratch};
+use sssched::util::prng::Prng;
+use sssched::util::prop::{ensure, forall, PropConfig};
+use sssched::workload::{JobKind, TaskSpec, Workload};
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Flavor {
+    Plain,
+    Multicore,
+    Gang,
+}
+
+#[derive(Debug)]
+struct Case {
+    choice: SchedulerChoice,
+    order: Order,
+    flavor: Flavor,
+    bg: u64,
+    fg: u64,
+    bg_time: f64,
+    cost: f64,
+    seed: u64,
+}
+
+fn gen_case(rng: &mut Prng) -> Case {
+    let choices = SchedulerChoice::all_simulated();
+    let orders = [Order::Priority, Order::Fairshare];
+    let flavors = [Flavor::Plain, Flavor::Multicore, Flavor::Gang];
+    Case {
+        choice: choices[rng.choose_index(choices.len())],
+        order: orders[rng.choose_index(orders.len())],
+        flavor: flavors[rng.choose_index(flavors.len())],
+        bg: rng.range_u64(4, 40),
+        fg: rng.range_u64(1, 12),
+        bg_time: rng.range_f64(2.0, 10.0),
+        cost: if rng.chance(0.5) {
+            0.0
+        } else {
+            rng.range_f64(0.0, 1.0)
+        },
+        seed: rng.next_u64(),
+    }
+}
+
+fn cluster() -> sssched::cluster::ClusterSpec {
+    // 2 nodes × 8 cores: headroom for 4-wide gangs of 2-core tasks.
+    sssched::cluster::ClusterSpec::homogeneous(2, 8, 64 * 1024, 2)
+}
+
+/// Preemptible background (flavored) + high-priority staggered
+/// foreground arrivals, deterministic in `case.seed`.
+fn build_workload(case: &Case) -> Workload {
+    let mut rng = Prng::new(case.seed ^ 0x9EE4_5EED);
+    let mut tasks: Vec<TaskSpec> = Vec::new();
+    let bg = match case.flavor {
+        Flavor::Gang => (case.bg / 4).max(1) * 4, // whole gangs of 4
+        _ => case.bg,
+    };
+    for i in 0..bg {
+        let job = if case.flavor == Flavor::Gang {
+            (i / 4) as u32
+        } else {
+            i as u32
+        };
+        let mut t = TaskSpec::array(i as u32, job, case.bg_time);
+        t.preemptible = true;
+        t.checkpoint_cost = case.cost;
+        t.user = (i % 3) as u32;
+        match case.flavor {
+            Flavor::Multicore => t.cores = 2,
+            Flavor::Gang => t.kind = JobKind::Parallel,
+            Flavor::Plain => {}
+        }
+        tasks.push(t);
+    }
+    let span = (bg as f64 * case.bg_time / 16.0).max(case.bg_time);
+    for k in 0..case.fg {
+        let id = (bg + k) as u32;
+        let mut t = TaskSpec::array(id, id, case.bg_time / 4.0);
+        t.priority = 10;
+        t.user = 3;
+        t.submit_at = rng.range_f64(0.0, span);
+        tasks.push(t);
+    }
+    let w = Workload {
+        tasks,
+        label: "prop-preempt".into(),
+    };
+    w.validate().expect("generated workload valid");
+    w
+}
+
+/// Last completion instant per task (= end of its final span).
+fn last_ends(r: &RunResult) -> Vec<f64> {
+    let spans = r.spans.as_ref().expect("preempt runs record spans");
+    let mut last = vec![f64::NEG_INFINITY; r.n_tasks as usize];
+    for s in spans {
+        if s.end > last[s.task as usize] {
+            last[s.task as usize] = s.end;
+        }
+    }
+    last
+}
+
+#[test]
+fn prop_no_lost_work_and_no_slot_overlap() {
+    forall(
+        PropConfig {
+            cases: 60,
+            seed: 0x9E4E,
+        },
+        gen_case,
+        |case| {
+            let w = build_workload(case);
+            let sched = make_preemptive(case.choice, 1, case.order);
+            let r = sched.run(&w, &cluster(), case.seed, &RunOptions::with_trace());
+            r.check_invariants()?;
+            let spans = r.spans.as_ref().expect("spans collected");
+
+            // Executed work per task: sum of span lengths must equal
+            // the duration — never more (no duplicated execution),
+            // never less (completed tasks ran fully).
+            let mut executed = vec![0.0f64; w.len()];
+            for s in spans {
+                ensure(
+                    s.end >= s.start - 1e-9,
+                    format!("negative span {s:?}"),
+                )?;
+                executed[s.task as usize] += s.end - s.start;
+            }
+            for t in &w.tasks {
+                let ex = executed[t.id as usize];
+                ensure(
+                    (ex - t.duration).abs() < 1e-6,
+                    format!(
+                        "task {} executed {ex}, duration {} (lost or duplicated work)",
+                        t.id, t.duration
+                    ),
+                )?;
+            }
+
+            // Spans on one slot never overlap: evict/requeue cannot
+            // double-allocate a slot.
+            let mut by_slot: std::collections::BTreeMap<u32, Vec<(f64, f64)>> =
+                std::collections::BTreeMap::new();
+            for s in spans {
+                by_slot.entry(s.slot).or_default().push((s.start, s.end));
+            }
+            for (slot, list) in by_slot.iter_mut() {
+                list.sort_by(|a, b| a.0.total_cmp(&b.0));
+                for pair in list.windows(2) {
+                    ensure(
+                        pair[1].0 >= pair[0].1 - 1e-9,
+                        format!(
+                            "slot {slot} double-allocated: spans {:?} and {:?} overlap",
+                            pair[0], pair[1]
+                        ),
+                    )?;
+                }
+            }
+
+            // Eviction count consistency: spans = tasks + evictions.
+            ensure(
+                spans.len() as u64 == w.len() as u64 + r.preemptions,
+                format!(
+                    "{} spans for {} tasks and {} evictions",
+                    spans.len(),
+                    w.len(),
+                    r.preemptions
+                ),
+            )?;
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_gang_eviction_atomicity() {
+    forall(
+        PropConfig {
+            cases: 40,
+            seed: 0x6A46,
+        },
+        |rng| {
+            let mut case = gen_case(rng);
+            case.flavor = Flavor::Gang;
+            case
+        },
+        |case| {
+            let w = build_workload(case);
+            let sched = make_preemptive(case.choice, 1, case.order);
+            let r = sched.run(&w, &cluster(), case.seed, &RunOptions::with_trace());
+            r.check_invariants()?;
+            let spans = r.spans.as_ref().expect("spans collected");
+            let last = last_ends(&r);
+
+            // For every non-final (eviction-ended) span of a gang
+            // member, no sibling may keep running across that instant:
+            // its spans either end by then or start after.
+            for sa in spans {
+                let ta = &w.tasks[sa.task as usize];
+                if ta.kind != JobKind::Parallel {
+                    continue;
+                }
+                if sa.end >= last[sa.task as usize] - 1e-9 {
+                    continue; // final span (completion, not eviction)
+                }
+                let evict_at = sa.end;
+                for sb in spans {
+                    let tb = &w.tasks[sb.task as usize];
+                    if sb.task == sa.task
+                        || tb.kind != JobKind::Parallel
+                        || tb.job != ta.job
+                    {
+                        continue;
+                    }
+                    ensure(
+                        sb.end <= evict_at + 1e-6 || sb.start >= evict_at - 1e-6,
+                        format!(
+                            "gang {} atomicity violated: member {} ran {:?} across \
+                             member {}'s eviction at {evict_at}",
+                            ta.job,
+                            sb.task,
+                            (sb.start, sb.end),
+                            sa.task
+                        ),
+                    )?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_preempt_scratch_reuse_bit_identical() {
+    let mut scratch = SimScratch::new();
+    forall(
+        PropConfig {
+            cases: 25,
+            seed: 0x5C4A,
+        },
+        gen_case,
+        |case| {
+            let w = build_workload(case);
+            let sched = make_preemptive(case.choice, 1, case.order);
+            let warm = sched.run_with_scratch(
+                &w,
+                &cluster(),
+                case.seed,
+                &RunOptions::with_trace(),
+                &mut scratch,
+            );
+            let fresh = sched.run(&w, &cluster(), case.seed, &RunOptions::with_trace());
+            ensure(
+                warm.t_total.to_bits() == fresh.t_total.to_bits(),
+                format!("t_total differs: {} vs {}", warm.t_total, fresh.t_total),
+            )?;
+            ensure(warm.events == fresh.events, "event count differs")?;
+            ensure(warm.preemptions == fresh.preemptions, "preemptions differ")?;
+            ensure(warm.trace == fresh.trace, "traces differ")?;
+            ensure(warm.spans == fresh.spans, "spans differ")
+        },
+    );
+}
+
+#[test]
+fn preempt_experiment_bit_identical_for_any_jobs() {
+    let mut base = ExperimentConfig::default();
+    base.scale_down = 11; // 4 nodes × 32 cores
+    base.trials = 1;
+    base.scenario_n = 4;
+    let mut a_cfg = base.clone();
+    a_cfg.jobs = 1;
+    let mut b_cfg = base.clone();
+    b_cfg.jobs = 4;
+    let a = harness::preempt(&a_cfg);
+    let b = harness::preempt(&b_cfg);
+    assert_eq!(a.cells.len(), b.cells.len());
+    assert!(!a.cells.is_empty());
+    for (ca, cb) in a.cells.iter().zip(&b.cells) {
+        assert_eq!(ca.scheduler, cb.scheduler);
+        for (ra, rb) in ca.trials.iter().zip(&cb.trials) {
+            assert_eq!(
+                ra.t_total.to_bits(),
+                rb.t_total.to_bits(),
+                "{} cost {}",
+                ca.scheduler,
+                ca.cost_frac
+            );
+            assert_eq!(ra.events, rb.events);
+            assert_eq!(ra.preemptions, rb.preemptions);
+            assert_eq!(ra.waits.mean().to_bits(), rb.waits.mean().to_bits());
+            assert_eq!(ra.spans, rb.spans);
+        }
+    }
+}
