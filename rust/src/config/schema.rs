@@ -108,6 +108,12 @@ pub struct ExperimentConfig {
     /// Fraction of `preempt`-experiment tasks that are high-priority
     /// foreground arrivals (the rest is preemptible background).
     pub preempt_hi_frac: f64,
+    /// Service-footprint sweep for the `service` experiment: fractions
+    /// of the cluster's cores pinned by long-running service tasks.
+    pub service_fracs: Vec<f64>,
+    /// Observation window (virtual s) of the `service` experiment's
+    /// horizon-bounded runs.
+    pub service_horizon: f64,
 }
 
 impl Default for ExperimentConfig {
@@ -127,6 +133,8 @@ impl Default for ExperimentConfig {
             arrival_rho: 0.7,
             preempt_cost_fracs: vec![0.0, 0.25],
             preempt_hi_frac: 0.25,
+            service_fracs: vec![0.25, 0.5],
+            service_horizon: 240.0,
         }
     }
 }
@@ -177,6 +185,19 @@ impl ExperimentConfig {
                         .iter()
                         .map(|v| v.as_f64().ok_or_else(|| bad(key)))
                         .collect::<Result<_, _>>()?;
+                }
+                "experiment.service_fracs" => {
+                    let arr = match value {
+                        TomlValue::Array(xs) => xs,
+                        _ => return Err(bad(key)),
+                    };
+                    cfg.service_fracs = arr
+                        .iter()
+                        .map(|v| v.as_f64().ok_or_else(|| bad(key)))
+                        .collect::<Result<_, _>>()?;
+                }
+                "experiment.service_horizon" => {
+                    cfg.service_horizon = value.as_f64().ok_or_else(|| bad(key))?
                 }
                 "experiment.out_dir" => {
                     cfg.out_dir = value.as_str().ok_or_else(|| bad(key))?.to_string()
@@ -260,6 +281,17 @@ impl ExperimentConfig {
             && self.preempt_hi_frac < 1.0)
         {
             return Err("preempt_hi_frac must be in (0, 1)".into());
+        }
+        if self.service_fracs.is_empty()
+            || self
+                .service_fracs
+                .iter()
+                .any(|&f| !f.is_finite() || !(0.0..1.0).contains(&f))
+        {
+            return Err("service_fracs must be non-empty, finite, in [0, 1)".into());
+        }
+        if !(self.service_horizon.is_finite() && self.service_horizon > 0.0) {
+            return Err("service_horizon must be finite and > 0".into());
         }
         Ok(())
     }
@@ -366,6 +398,19 @@ n_sweep = [4, 240]
         assert!(
             ExperimentConfig::from_toml("[experiment]\npreempt_cost_fracs = [-1.0]").is_err()
         );
+    }
+
+    #[test]
+    fn service_keys_parse_and_validate() {
+        let c = ExperimentConfig::from_toml(
+            "[experiment]\nservice_fracs = [0.1, 0.6]\nservice_horizon = 120.0",
+        )
+        .unwrap();
+        assert_eq!(c.service_fracs, vec![0.1, 0.6]);
+        assert!((c.service_horizon - 120.0).abs() < 1e-12);
+        assert!(ExperimentConfig::from_toml("[experiment]\nservice_fracs = [1.5]").is_err());
+        assert!(ExperimentConfig::from_toml("[experiment]\nservice_fracs = []").is_err());
+        assert!(ExperimentConfig::from_toml("[experiment]\nservice_horizon = 0").is_err());
     }
 
     #[test]

@@ -166,6 +166,8 @@ impl RealtimeCoordinator {
             daemon_busy: self.params.dispatch_overhead * tasks.len() as f64,
             waits,
             preemptions: 0,
+            horizon: None,
+            busy_core_seconds: 0.0,
             trace: Some(trace),
             spans: None,
         })

@@ -12,8 +12,9 @@
 //! | `fig7`     | Figure 7 — utilization, regular vs multilevel |
 //! | `scenarios`| workload-space sweep: array / multicore / DAG / gang / arrivals × all schedulers |
 //! | `preempt`  | preemption sweep: checkpoint cost × ordering × all schedulers, fairness vs ΔT |
+//! | `service`  | service-footprint sweep: resident services × Poisson short tasks × all schedulers, windowed utilization |
 
-//! All six experiment runners route their `(scheduler, n, trial)`
+//! All experiment runners route their `(scheduler, n, trial)`
 //! cells through the deterministic parallel executor in [`parallel`];
 //! `--jobs` (or `ExperimentConfig::jobs`) picks the worker count and
 //! results are bit-identical for every choice of it.
@@ -34,7 +35,8 @@ pub use fig6::{fig6, Fig6Report};
 pub use fig7::{fig7, Fig7Report};
 pub use parallel::{default_jobs, run_cells};
 pub use scenarios::{
-    preempt, scenarios, PreemptCell, PreemptReport, ScenarioCell, ScenariosReport, GANG_SIZE,
+    preempt, scenarios, service, PreemptCell, PreemptReport, ScenarioCell, ScenariosReport,
+    ServiceCell, ServiceReport, GANG_SIZE,
 };
 pub use sweep::{run_sweep, run_sweeps, SchedulerSweep, SweepPoint, SweepSpec, PROHIBITIVE_SECS};
 pub use table10::{table10, Table10Report};

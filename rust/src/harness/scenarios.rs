@@ -23,7 +23,7 @@
 //! preemption-overhead-vs-utilization.
 
 use super::parallel::run_cells;
-use super::sweep::PROHIBITIVE_SECS;
+use super::sweep::{trial_mean, PROHIBITIVE_SECS};
 use crate::config::{ExperimentConfig, SchedulerChoice};
 use crate::sched::combinators::{self, Order};
 use crate::sched::{make_scheduler_scaled, RunOptions, RunResult, Scheduler};
@@ -44,11 +44,6 @@ pub struct ScenarioCell {
     pub scheduler: String,
     /// One result per trial (empty iff skipped as prohibitive).
     pub trials: Vec<RunResult>,
-}
-
-/// Mean of `f` over a cell's trials (0 for empty/skipped cells).
-fn trial_mean(trials: &[RunResult], f: impl Fn(&RunResult) -> f64) -> f64 {
-    trials.iter().map(f).sum::<f64>() / trials.len().max(1) as f64
 }
 
 impl ScenarioCell {
@@ -731,6 +726,321 @@ impl PreemptReport {
     }
 }
 
+// ---- the `service` experiment family --------------------------------------
+
+/// One (service-footprint fraction, scheduler) cell of the service
+/// sweep.
+pub struct ServiceCell {
+    /// Fraction of the cluster's cores pinned by service tasks.
+    pub frac: f64,
+    /// Service task count in this cell's workload (first `svc_count`
+    /// task ids are the service class).
+    pub svc_count: u32,
+    /// Scheduler display name.
+    pub scheduler: String,
+    /// One traced, horizon-bounded result per trial.
+    pub trials: Vec<RunResult>,
+}
+
+/// Per-class dispatch-wait sums of one windowed trial's trace:
+/// `(svc_sum, svc_n, batch_sum, batch_n)`. Batch tasks the window
+/// closed on before they started are absent from the trace and
+/// excluded from the wait mean (the started count beside it exposes
+/// them).
+fn service_class_waits(r: &RunResult, svc_count: u32) -> (f64, u64, f64, u64) {
+    let trace = r.trace.as_ref().expect("service cells collect traces");
+    let (mut ss, mut sn, mut bs, mut bn) = (0.0, 0u64, 0.0, 0u64);
+    for rec in trace {
+        if rec.task < svc_count {
+            ss += rec.start - rec.submit;
+            sn += 1;
+        } else {
+            bs += rec.start - rec.submit;
+            bn += 1;
+        }
+    }
+    (ss, sn, bs, bn)
+}
+
+impl ServiceCell {
+    /// Mean windowed utilization across trials.
+    pub fn mean_utilization(&self) -> f64 {
+        trial_mean(&self.trials, |r| r.utilization())
+    }
+
+    /// Mean dispatch wait of the (service, batch) classes across
+    /// trials, plus the mean fraction of batch tasks that started
+    /// inside the window.
+    pub fn class_waits(&self) -> (f64, f64, f64) {
+        let (mut ss, mut sn, mut bs, mut bn, mut started) = (0.0, 0u64, 0.0, 0u64, 0.0);
+        for r in &self.trials {
+            let (s, n, b, m) = service_class_waits(r, self.svc_count);
+            ss += s;
+            sn += n;
+            bs += b;
+            bn += m;
+            let total = r.n_tasks - self.svc_count as u64;
+            started += if total > 0 { m as f64 / total as f64 } else { 1.0 };
+        }
+        (
+            ss / sn.max(1) as f64,
+            bs / bn.max(1) as f64,
+            started / self.trials.len().max(1) as f64,
+        )
+    }
+}
+
+/// Full service sweep report.
+pub struct ServiceReport {
+    /// All cells, fraction-major then scheduler.
+    pub cells: Vec<ServiceCell>,
+    /// Tasks per processor n of the short-batch stream.
+    pub n: u32,
+    /// Short-batch task time t = T_job / n.
+    pub t: f64,
+    /// Observation window (virtual s).
+    pub horizon: f64,
+}
+
+/// Mixed service + short-batch workload for one footprint fraction:
+/// `round(frac · P)` one-core services resident from t = 0, plus a
+/// Poisson stream of t-second batch tasks offered at `arrival_rho` of
+/// the residual (non-service) capacity, sized to span the whole
+/// window. Deterministic in `cfg.seed` and `frac`.
+fn service_workload(cfg: &ExperimentConfig, processors: u64, frac: f64) -> (Workload, u32) {
+    let n = cfg.scenario_n.max(1) as u64;
+    let t = TABLE9_JOB_TIME_PER_PROC / n as f64;
+    let h = cfg.service_horizon;
+    let svc = ((processors as f64 * frac).round() as u64).min(processors.saturating_sub(1));
+    let residual = (processors - svc).max(1);
+    let rate = cfg.arrival_rho * residual as f64 / t;
+    let n_batch = ((rate * h).ceil() as u64).max(1);
+    let w = WorkloadBuilder::constant(t)
+        .tasks(n_batch)
+        .services(svc, 1)
+        .arrivals(ArrivalProcess::Poisson { rate })
+        .seed(cfg.seed)
+        .label("service")
+        .build();
+    w.validate_for(&RunOptions::with_horizon(h))
+        .unwrap_or_else(|e| panic!("service workload invalid: {e}"));
+    (w, svc as u32)
+}
+
+/// Run the service sweep: every service-footprint fraction × every
+/// simulated scheduler family × `cfg.trials`, horizon-bounded, in one
+/// deterministic parallel batch. No prohibitive-skip pass is needed:
+/// the horizon bounds every run's virtual time (and hence its event
+/// count) regardless of the scheduler's per-task overhead.
+pub fn service(cfg: &ExperimentConfig) -> ServiceReport {
+    let cluster = crate::cluster::ClusterSpec::homogeneous(
+        cfg.effective_nodes(),
+        cfg.cores_per_node,
+        cfg.mem_mb,
+        (cfg.effective_nodes() / 2).max(1),
+    );
+    let processors = cluster.total_cores();
+    let choices = SchedulerChoice::all_simulated();
+    let schedulers: Vec<Box<dyn Scheduler>> = choices
+        .iter()
+        .map(|&c| make_scheduler_scaled(c, cfg.scale_down))
+        .collect();
+    let workloads: Vec<(f64, u32, Workload)> = cfg
+        .service_fracs
+        .iter()
+        .map(|&f| {
+            let (w, svc) = service_workload(cfg, processors, f);
+            (f, svc, w)
+        })
+        .collect();
+
+    struct Cell<'a> {
+        sched: usize,
+        slot: usize,
+        workload: &'a Workload,
+        seed: u64,
+    }
+    let mut cells: Vec<Cell> = Vec::new();
+    let mut out: Vec<ServiceCell> = Vec::new();
+    for (wi, &(frac, svc, ref workload)) in workloads.iter().enumerate() {
+        for (ki, sched) in schedulers.iter().enumerate() {
+            for trial in 0..cfg.trials {
+                cells.push(Cell {
+                    sched: ki,
+                    slot: out.len(),
+                    workload,
+                    seed: cfg
+                        .seed
+                        .wrapping_add(trial as u64)
+                        .wrapping_add((wi as u64) << 40)
+                        .wrapping_add((ki as u64) << 16),
+                });
+            }
+            out.push(ServiceCell {
+                frac,
+                svc_count: svc,
+                scheduler: sched.name().to_string(),
+                trials: Vec::with_capacity(cfg.trials as usize),
+            });
+        }
+    }
+
+    let options = RunOptions {
+        collect_trace: true,
+        horizon: Some(cfg.service_horizon),
+        ..Default::default()
+    };
+    let results = run_cells(cfg.effective_jobs(), &cells, |cell, scratch| {
+        let sched = schedulers[cell.sched].as_ref();
+        let r = sched.run_with_scratch(cell.workload, &cluster, cell.seed, &options, scratch);
+        r.check_invariants()
+            .unwrap_or_else(|e| panic!("{} on service: {e}", sched.name()));
+        r
+    });
+    for (cell, result) in cells.iter().zip(results) {
+        out[cell.slot].trials.push(result);
+    }
+
+    ServiceReport {
+        cells: out,
+        n: cfg.scenario_n.max(1),
+        t: TABLE9_JOB_TIME_PER_PROC / cfg.scenario_n.max(1) as f64,
+        horizon: cfg.service_horizon,
+    }
+}
+
+impl ServiceReport {
+    /// Rendered summary table: windowed utilization plus per-class
+    /// dispatch waits and batch coverage.
+    pub fn render_table(&self) -> Table {
+        let mut table = Table::new(
+            format!(
+                "Service jobs — windowed utilization and per-class wait \
+                 (horizon={} s, batch t={} s at n={})",
+                fnum(self.horizon),
+                fnum(self.t),
+                self.n
+            ),
+            &[
+                "svc frac",
+                "scheduler",
+                "U(window)",
+                "svc wait (s)",
+                "batch wait (s)",
+                "batch started",
+            ],
+        );
+        for c in &self.cells {
+            let (sw, bw, started) = c.class_waits();
+            table.row(&[
+                format!("{:.2}", c.frac),
+                c.scheduler.clone(),
+                format!("{:.3}", c.mean_utilization()),
+                fnum(sw),
+                fnum(bw),
+                format!("{:.2}", started),
+            ]);
+        }
+        table
+    }
+
+    /// CSV series.
+    pub fn to_csv(&self) -> String {
+        let mut table = Table::new(
+            "",
+            &[
+                "service_frac",
+                "scheduler",
+                "trial",
+                "utilization",
+                "busy_core_s",
+                "svc_wait_s",
+                "batch_wait_s",
+                "batch_started",
+                "batch_total",
+            ],
+        );
+        for c in &self.cells {
+            for (trial, r) in c.trials.iter().enumerate() {
+                let (ss, sn, bs, bn) = service_class_waits(r, c.svc_count);
+                table.row(&[
+                    format!("{:.3}", c.frac),
+                    c.scheduler.clone(),
+                    trial.to_string(),
+                    format!("{:.4}", r.utilization()),
+                    format!("{:.3}", r.busy_core_seconds),
+                    format!("{:.3}", ss / sn.max(1) as f64),
+                    format!("{:.3}", bs / bn.max(1) as f64),
+                    bn.to_string(),
+                    (r.n_tasks - c.svc_count as u64).to_string(),
+                ]);
+            }
+        }
+        table.to_csv()
+    }
+
+    /// Structural shape checks: every cell ran all its trials as
+    /// horizon-bounded runs; the zero-overhead reference pins its
+    /// services for the whole window (windowed utilization at least the
+    /// service footprint) and starts them instantly; and every cell
+    /// dispatched some of the batch stream.
+    pub fn check_shape(&self, trials: u32) -> Result<(), String> {
+        for c in &self.cells {
+            if c.trials.len() != trials as usize {
+                return Err(format!(
+                    "frac {} × {}: {} of {trials} trials ran",
+                    c.frac,
+                    c.scheduler,
+                    c.trials.len()
+                ));
+            }
+            for r in &c.trials {
+                if r.horizon != Some(self.horizon) {
+                    return Err(format!(
+                        "{}: result horizon {:?} != {}",
+                        c.scheduler, r.horizon, self.horizon
+                    ));
+                }
+                if (r.t_total - self.horizon).abs() > 1e-9 {
+                    return Err(format!(
+                        "{}: windowed t_total {} != horizon {}",
+                        c.scheduler, r.t_total, self.horizon
+                    ));
+                }
+            }
+            let (_, _, started) = c.class_waits();
+            if started <= 0.0 {
+                return Err(format!(
+                    "frac {} × {}: no batch task started inside the window",
+                    c.frac, c.scheduler
+                ));
+            }
+        }
+        for c in self.cells.iter().filter(|c| c.scheduler == "IdealFIFO") {
+            let floor = c.svc_count as f64
+                / c.trials
+                    .first()
+                    .map(|r| r.processors as f64)
+                    .unwrap_or(f64::INFINITY);
+            if c.mean_utilization() + 1e-9 < floor {
+                return Err(format!(
+                    "ideal frac {}: windowed U {} below service floor {floor}",
+                    c.frac,
+                    c.mean_utilization()
+                ));
+            }
+            let (sw, _, _) = c.class_waits();
+            if sw > 1e-9 {
+                return Err(format!(
+                    "ideal frac {}: services should start instantly, waited {sw}",
+                    c.frac
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -761,6 +1071,61 @@ mod tests {
         // 2 cost fracs × 2 orders × 6 schedulers, minus skips.
         assert_eq!(rep.cells.len() + rep.skipped.len(), 24);
         assert!(!rep.to_csv().is_empty());
+    }
+
+    #[test]
+    fn service_runs_and_passes_shape_checks() {
+        let mut cfg = quick_cfg();
+        cfg.service_horizon = 120.0; // smaller window keeps the test fast
+        let rep = service(&cfg);
+        rep.check_shape(cfg.trials).unwrap();
+        // 2 service fractions × 6 schedulers, nothing skipped (the
+        // horizon bounds every run).
+        assert_eq!(rep.cells.len(), 12);
+        assert!(!rep.to_csv().is_empty());
+        // Higher service footprint -> higher windowed utilization floor
+        // on the zero-overhead reference.
+        let ideal: Vec<&ServiceCell> = rep
+            .cells
+            .iter()
+            .filter(|c| c.scheduler == "IdealFIFO")
+            .collect();
+        assert_eq!(ideal.len(), 2);
+        assert!(ideal[1].frac > ideal[0].frac);
+        assert!(
+            ideal[1].mean_utilization() > ideal[0].mean_utilization() - 1e-9,
+            "U({}) = {} should not drop below U({}) = {}",
+            ideal[1].frac,
+            ideal[1].mean_utilization(),
+            ideal[0].frac,
+            ideal[0].mean_utilization()
+        );
+    }
+
+    #[test]
+    fn service_deterministic_across_jobs() {
+        let mut a_cfg = quick_cfg();
+        a_cfg.service_horizon = 120.0;
+        a_cfg.jobs = 1;
+        let mut b_cfg = a_cfg.clone();
+        b_cfg.jobs = 4;
+        let a = service(&a_cfg);
+        let b = service(&b_cfg);
+        assert_eq!(a.cells.len(), b.cells.len());
+        assert_eq!(a.to_csv(), b.to_csv(), "service CSVs must not depend on --jobs");
+        for (ca, cb) in a.cells.iter().zip(&b.cells) {
+            assert_eq!(ca.scheduler, cb.scheduler);
+            for (ra, rb) in ca.trials.iter().zip(&cb.trials) {
+                assert_eq!(
+                    ra.busy_core_seconds.to_bits(),
+                    rb.busy_core_seconds.to_bits(),
+                    "{} frac {}",
+                    ca.scheduler,
+                    ca.frac
+                );
+                assert_eq!(ra.events, rb.events);
+            }
+        }
     }
 
     #[test]

@@ -30,21 +30,31 @@ pub struct SweepPoint {
     pub trials: Vec<RunResult>,
 }
 
+/// Mean of `f` over a set of trial results, guarding the empty case:
+/// an all-skipped point or cell would otherwise divide by zero and
+/// leak NaN into CSVs and power-law fits. Shared by [`SweepPoint`] and
+/// the scenario/preempt/service cell types.
+pub(crate) fn trial_mean(trials: &[RunResult], f: impl Fn(&RunResult) -> f64) -> f64 {
+    if trials.is_empty() {
+        return 0.0;
+    }
+    trials.iter().map(f).sum::<f64>() / trials.len() as f64
+}
+
 impl SweepPoint {
-    /// Mean T_total across trials.
+    /// Mean T_total across trials (0 when no trials ran).
     pub fn mean_t_total(&self) -> f64 {
-        self.trials.iter().map(|r| r.t_total).sum::<f64>() / self.trials.len() as f64
+        trial_mean(&self.trials, |r| r.t_total)
     }
 
-    /// Mean ΔT across trials.
+    /// Mean ΔT across trials (0 when no trials ran).
     pub fn mean_delta_t(&self) -> f64 {
-        self.trials.iter().map(|r| r.delta_t()).sum::<f64>() / self.trials.len() as f64
+        trial_mean(&self.trials, |r| r.delta_t())
     }
 
-    /// Mean utilization across trials.
+    /// Mean utilization across trials (0 when no trials ran).
     pub fn mean_utilization(&self) -> f64 {
-        self.trials.iter().map(|r| r.utilization()).sum::<f64>()
-            / self.trials.len() as f64
+        trial_mean(&self.trials, |r| r.utilization())
     }
 }
 
@@ -251,6 +261,19 @@ mod tests {
         let s = run_sweep(SchedulerChoice::Mesos, &quick_cfg(), &[8], Some(&ml));
         assert!(s.scheduler.contains("multilevel"));
         assert_eq!(s.points.len(), 1);
+    }
+
+    #[test]
+    fn empty_point_means_are_zero_not_nan() {
+        let p = SweepPoint {
+            n: 4,
+            t: 60.0,
+            trials: Vec::new(),
+        };
+        assert_eq!(p.mean_t_total(), 0.0);
+        assert_eq!(p.mean_delta_t(), 0.0);
+        assert_eq!(p.mean_utilization(), 0.0);
+        assert!(p.mean_t_total().is_finite());
     }
 
     #[test]

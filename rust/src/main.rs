@@ -4,7 +4,7 @@
 //! Subcommands:
 //!   features    render the paper's feature-comparison Tables 1–7
 //!   experiment  run table9 | table10 | fig4 | fig5 | fig6 | fig7 |
-//!               scenarios | preempt | all
+//!               scenarios | preempt | service | all
 //!   serve       realtime mini-cluster (leader + worker threads, PJRT payloads)
 //!   validate    run every experiment's shape checks at reduced scale
 //!
@@ -52,7 +52,7 @@ fn usage() {
         "usage: sssched <command> [options]\n\
          commands:\n\
          \x20 features   [--table 1..7] [--csv]\n\
-         \x20 experiment <table9|table10|fig4|fig5|fig6|fig7|scenarios|preempt|all> \
+         \x20 experiment <table9|table10|fig4|fig5|fig6|fig7|scenarios|preempt|service|all> \
          [--config f] [--quick] [--trials N] [--jobs N] [--out-dir d] [--artifacts d] [--csv]\n\
          \x20 serve      [--workers N] [--tasks N] [--task-ms MS] \
          [--payload sleep|spin|analytics] [--ts SECS] [--artifacts d]\n\
@@ -198,6 +198,16 @@ fn cmd_experiment(args: &Args) -> i32 {
                 println!("shape checks: OK");
                 write_out(&cfg, "preempt.csv", &rep.to_csv());
             }
+            "service" => {
+                let rep = harness::service(&cfg);
+                println!("{}", rep.render_table().render());
+                if let Err(e) = rep.check_shape(cfg.trials) {
+                    eprintln!("shape check FAILED: {e}");
+                    return 1;
+                }
+                println!("shape checks: OK");
+                write_out(&cfg, "service.csv", &rep.to_csv());
+            }
             other => {
                 eprintln!("unknown experiment `{other}`");
                 return 2;
@@ -215,6 +225,7 @@ fn cmd_experiment(args: &Args) -> i32 {
             "fig7",
             "scenarios",
             "preempt",
+            "service",
         ] {
             let rc = run(name);
             if rc != 0 {
@@ -316,6 +327,10 @@ fn cmd_validate(args: &Args) -> i32 {
     check(
         "preempt shapes",
         harness::preempt(&cfg).check_shape(cfg.trials),
+    );
+    check(
+        "service shapes",
+        harness::service(&cfg).check_shape(cfg.trials),
     );
     if failures == 0 {
         println!("all shape checks passed");

@@ -53,6 +53,8 @@ mod tests {
             daemon_busy: 0.0,
             waits: Summary::new(),
             preemptions: 0,
+            horizon: None,
+            busy_core_seconds: 0.0,
             trace: None,
             spans: None,
         }

@@ -76,6 +76,14 @@ impl<'a> Multilevel<'a> {
     /// balanced (LLMapReduce splits the input file list the same way).
     pub fn aggregate(&self, workload: &Workload, bundles: u64, seed: u64) -> Workload {
         assert!(bundles > 0);
+        // Folding a service into a finite mapper bundle would silently
+        // run it as batch work — the exact failure mode the kernel's
+        // horizon guard exists to prevent. Refuse loudly instead.
+        assert!(
+            !workload.has_services(),
+            "multilevel aggregation cannot express JobKind::Service tasks; \
+             run services directly on a backend with RunOptions::horizon"
+        );
         let mut rng = Prng::new(seed ^ 0x11A9_0D0C);
         let p = &self.params;
         let mut durations = vec![0.0f64; bundles as usize];
@@ -180,6 +188,16 @@ mod tests {
         for t in &agg.tasks {
             assert!(t.duration > 10.0 && t.duration < 14.0, "dur={}", t.duration);
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "Service")]
+    fn aggregation_refuses_service_tasks() {
+        let inner = CentralizedSim::new(calibration::slurm_params());
+        let ml = Multilevel::new(&inner, MultilevelParams::default());
+        let mut w = WorkloadBuilder::constant(1.0).tasks(4).build();
+        w.tasks[0].kind = crate::workload::JobKind::Service;
+        ml.aggregate(&w, 2, 0);
     }
 
     #[test]

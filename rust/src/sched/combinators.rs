@@ -158,12 +158,25 @@ impl OrderedDrain {
     ) {
         let mut queue = ctx.pending_snapshot();
         sort_queue(self.order, &ctx.workload().tasks, usage, &mut queue);
+        // A dispatched service never completes, so its cores never free:
+        // an infinite release time keeps shadow_time honest (a head that
+        // needs service-pinned cores has no finite reservation, and
+        // backfill past it is then unconditionally harmless). Its
+        // fairshare charge is its duration (0) — usage is accrued per
+        // completed work, which a service never banks.
+        let frees_at = |spec: &TaskSpec, now: Time| {
+            if spec.kind == JobKind::Service {
+                f64::INFINITY
+            } else {
+                now + spec.duration
+            }
+        };
         let mut blocked_head: Option<TaskId> = None;
         for idx in queue {
             let spec = &ctx.workload().tasks[idx as usize];
             if blocked_head.is_none() {
                 if ctx.try_dispatch(idx, launch) {
-                    running.push((now + spec.duration, spec.cores, idx));
+                    running.push((frees_at(spec, now), spec.cores, idx));
                     usage.charge(spec.user, spec.cores as f64 * spec.duration);
                 } else {
                     // Head-of-line blocked.
@@ -179,9 +192,13 @@ impl OrderedDrain {
                 let free = ctx.free_slots() as u32;
                 let (shadow, spare) = shadow_time(free, head.cores, running);
                 let fits_now = spec.cores <= free;
-                let no_delay = now + spec.duration <= shadow + 1e-9 || spec.cores <= spare;
+                // frees_at, not raw duration: a service candidate holds
+                // its cores forever, so it may only jump the head when
+                // it fits in the spare cores (or the head itself can
+                // never start).
+                let no_delay = frees_at(spec, now) <= shadow + 1e-9 || spec.cores <= spare;
                 if fits_now && no_delay && ctx.try_dispatch(idx, launch) {
-                    running.push((now + spec.duration, spec.cores, idx));
+                    running.push((frees_at(spec, now), spec.cores, idx));
                     usage.charge(spec.user, spec.cores as f64 * spec.duration);
                 }
             }
@@ -844,6 +861,97 @@ mod tests {
                 }
             }
         }
+    }
+
+    // ---- service-aware drain units ----
+
+    /// Minimal zero-overhead policy driving [`OrderedDrain`] with EASY
+    /// backfill, for service-in-queue semantics.
+    struct DrainPolicy {
+        drain: OrderedDrain,
+        usage: FairTracker,
+        running: Vec<(f64, u32, u32)>,
+    }
+
+    impl DrainPolicy {
+        fn pass(&mut self, ctx: &mut KernelCtx, now: Time) {
+            self.drain.drain(
+                ctx,
+                now,
+                &mut self.usage,
+                &mut self.running,
+                &mut |_, _| Launch::start(now),
+            );
+        }
+    }
+
+    impl SchedPolicy for DrainPolicy {
+        fn label(&self) -> String {
+            "Drain".into()
+        }
+        fn on_submit(&mut self, ctx: &mut KernelCtx, _batch: usize) {
+            self.pass(ctx, 0.0);
+        }
+        fn on_complete(
+            &mut self,
+            _ctx: &mut KernelCtx,
+            now: Time,
+            task: TaskId,
+            _slot: SlotId,
+        ) -> Option<Time> {
+            self.running.retain(|&(_, _, t)| t != task);
+            Some(now)
+        }
+        fn on_slot_free(&mut self, ctx: &mut KernelCtx, now: Time) {
+            if !ctx.has_more_events_at(now) {
+                self.pass(ctx, now);
+            }
+        }
+    }
+
+    #[test]
+    fn backfill_treats_service_pinned_cores_as_never_freeing() {
+        // 4 slots: 3 services pin 3 of them for the whole window. The
+        // 2-core head task can never start inside the window (no finite
+        // reservation exists), so the 1-core tasks behind it must
+        // backfill onto the single free slot instead of being starved
+        // by a shadow time computed from the services' 0 "durations".
+        let mut tasks: Vec<TaskSpec> = (0..3).map(|i| TaskSpec::service(i, i, 1)).collect();
+        let mut head = TaskSpec::array(3, 3, 5.0);
+        head.cores = 2;
+        tasks.push(head);
+        tasks.push(TaskSpec::array(4, 4, 1.0));
+        tasks.push(TaskSpec::array(5, 5, 1.0));
+        let w = Workload {
+            tasks,
+            label: "svc-drain".into(),
+        };
+        let cl = ClusterSpec::homogeneous(1, 4, 32 * 1024, 1);
+        let mut policy = DrainPolicy {
+            drain: OrderedDrain {
+                order: Order::Fifo,
+                backfill: true,
+            },
+            usage: FairTracker::new(),
+            running: Vec::new(),
+        };
+        let options = RunOptions {
+            collect_trace: true,
+            horizon: Some(10.0),
+            ..Default::default()
+        };
+        let r = Kernel::run(&mut policy, &w, &cl, &options, &mut SimScratch::new());
+        r.check_invariants().unwrap();
+        let trace = r.trace.as_ref().unwrap();
+        // Services + the two 1-core tasks ran; the 2-core head could not.
+        assert_eq!(trace.len(), 5, "{trace:?}");
+        assert!(trace.iter().all(|t| t.task != 3), "head cannot start");
+        let t4 = trace.iter().find(|t| t.task == 4).unwrap();
+        let t5 = trace.iter().find(|t| t.task == 5).unwrap();
+        assert!((t4.start - 0.0).abs() < 1e-9, "first backfill at t=0");
+        assert!((t5.start - 1.0).abs() < 1e-9, "second backfill at t=1");
+        // 3 services × 10 s + 2 × 1 s on 4×10 core-seconds.
+        assert!((r.busy_core_seconds - 32.0).abs() < 1e-9);
     }
 
     // ---- ordering / fair-share combinator units ----

@@ -13,6 +13,14 @@ pub struct RunOptions {
     /// cost serially) instead of as one job array — the paper notes
     /// arrays "introduce much less scheduler latency".
     pub individual_submission: bool,
+    /// Horizon-bounded run: the event loop executes only events at
+    /// `t <= horizon`, [`crate::workload::JobKind::Service`] tasks
+    /// occupy their slots from dispatch until the horizon, and the
+    /// result carries windowed accounting ([`RunResult::horizon`],
+    /// [`RunResult::busy_core_seconds`]). `None` (the default) is the
+    /// classic run-to-completion mode; service tasks are rejected there
+    /// because they never complete.
+    pub horizon: Option<f64>,
 }
 
 impl RunOptions {
@@ -20,6 +28,15 @@ impl RunOptions {
     pub fn with_trace() -> Self {
         Self {
             collect_trace: true,
+            ..Default::default()
+        }
+    }
+
+    /// Horizon-bounded (windowed) options — the only mode in which
+    /// `JobKind::Service` tasks are valid.
+    pub fn with_horizon(horizon: f64) -> Self {
+        Self {
+            horizon: Some(horizon),
             ..Default::default()
         }
     }
@@ -77,6 +94,15 @@ pub struct RunResult {
     /// Evictions executed by the kernel's preemption subsystem (0 for
     /// workloads without preemptible tasks).
     pub preemptions: u64,
+    /// Observation window of a horizon-bounded run ([`RunOptions::horizon`]);
+    /// `None` for classic run-to-completion trials. When set, `t_total`
+    /// equals the window length.
+    pub horizon: Option<f64>,
+    /// Productive core-seconds executed inside the window: the integral
+    /// of [`ExecSpan`]s (clipped to the horizon) weighted by each task's
+    /// core count. Always 0 for horizonless runs, whose utilization
+    /// derives from `t_job / t_total` instead.
+    pub busy_core_seconds: f64,
     /// Optional full trace.
     pub trace: Option<Vec<TraceRecord>>,
     /// Productive execution spans, split at evictions. Collected only
@@ -92,8 +118,19 @@ impl RunResult {
         self.t_total - self.t_job
     }
 
-    /// Utilization U = T_job / T_total (Figure 5/7 y-axis).
+    /// Utilization. Horizon-bounded runs use the windowed definition
+    /// `busy_core_seconds / (P · horizon)` — the fraction of the
+    /// cluster's core-time inside the window spent on productive work —
+    /// because service tasks have no meaningful completion time.
+    /// Horizonless runs keep the paper's U = T_job / T_total
+    /// (Figure 5/7 y-axis).
     pub fn utilization(&self) -> f64 {
+        if let Some(h) = self.horizon {
+            if h <= 0.0 || self.processors == 0 {
+                return 0.0;
+            }
+            return self.busy_core_seconds / (h * self.processors as f64);
+        }
         if self.t_total <= 0.0 {
             return 0.0;
         }
@@ -110,7 +147,9 @@ impl RunResult {
         if !(self.t_total.is_finite() && self.t_total >= 0.0) {
             return Err(format!("bad t_total {}", self.t_total));
         }
-        if self.t_total + 1e-9 < self.t_job {
+        if self.horizon.is_none() && self.t_total + 1e-9 < self.t_job {
+            // A horizon-bounded run legitimately observes less than the
+            // workload's isolated job time — the window simply closed.
             return Err(format!(
                 "t_total {} < t_job {} — faster than physically possible",
                 self.t_total, self.t_job
@@ -120,12 +159,71 @@ impl RunResult {
         if !(0.0..=1.0 + 1e-9).contains(&u) {
             return Err(format!("utilization {u} out of range"));
         }
+        if !(self.daemon_busy.is_finite() && self.daemon_busy >= 0.0) {
+            return Err(format!("bad daemon_busy {}", self.daemon_busy));
+        }
+        if self.waits.count() > self.n_tasks {
+            return Err(format!(
+                "{} wait observations for {} tasks",
+                self.waits.count(),
+                self.n_tasks
+            ));
+        }
+        if self.waits.count() > 0 && (self.waits.min() < -1e-9 || !self.waits.mean().is_finite()) {
+            return Err(format!(
+                "negative or non-finite waits: min {} mean {}",
+                self.waits.min(),
+                self.waits.mean()
+            ));
+        }
+        match self.horizon {
+            Some(h) => {
+                if !(h.is_finite() && h > 0.0) {
+                    return Err(format!("bad horizon {h}"));
+                }
+                let cap = h * self.processors as f64;
+                if !(self.busy_core_seconds >= 0.0 && self.busy_core_seconds <= cap * (1.0 + 1e-9))
+                {
+                    return Err(format!(
+                        "busy_core_seconds {} outside [0, P·h = {cap}]",
+                        self.busy_core_seconds
+                    ));
+                }
+            }
+            None => {
+                if self.busy_core_seconds != 0.0 {
+                    return Err(format!(
+                        "horizonless run carries busy_core_seconds {}",
+                        self.busy_core_seconds
+                    ));
+                }
+                // Preemption accounting: a traced preempt run records
+                // one span per dispatch, so spans = completions (= N,
+                // every task finishes in a horizonless run) + evictions.
+                if let (Some(spans), Some(_)) = (&self.spans, &self.trace) {
+                    if spans.len() as u64 != self.n_tasks + self.preemptions {
+                        return Err(format!(
+                            "{} spans for {} tasks + {} preemptions",
+                            spans.len(),
+                            self.n_tasks,
+                            self.preemptions
+                        ));
+                    }
+                }
+            }
+        }
         if let Some(trace) = &self.trace {
-            if trace.len() as u64 != self.n_tasks {
+            // A window can close before every task starts; a
+            // run-to-completion trial must start (and record) them all.
+            // Either way a task never has more than one record.
+            if trace.len() as u64 > self.n_tasks
+                || (self.horizon.is_none() && (trace.len() as u64) < self.n_tasks)
+            {
                 return Err(format!(
-                    "trace has {} records for {} tasks",
+                    "trace has {} records for {} tasks (horizon {:?})",
                     trace.len(),
-                    self.n_tasks
+                    self.n_tasks,
+                    self.horizon
                 ));
             }
             for r in trace {
@@ -167,6 +265,8 @@ mod tests {
             daemon_busy: 0.0,
             waits: Summary::new(),
             preemptions: 0,
+            horizon: None,
+            busy_core_seconds: 0.0,
             trace: None,
             spans: None,
         }
@@ -185,5 +285,82 @@ mod tests {
     fn invariant_catches_impossible_runs() {
         assert!(result(100.0, 240.0).check_invariants().is_err());
         assert!(result(f64::NAN, 1.0).check_invariants().is_err());
+    }
+
+    #[test]
+    fn windowed_utilization_uses_busy_core_seconds() {
+        // 2 processors, 10 s window, 15 busy core-seconds -> U = 0.75.
+        let mut r = result(10.0, 240.0); // t_job > window is fine with a horizon
+        r.horizon = Some(10.0);
+        r.busy_core_seconds = 15.0;
+        assert!((r.utilization() - 0.75).abs() < 1e-12);
+        r.check_invariants().unwrap();
+        // Busy time above P·h is an accounting bug.
+        r.busy_core_seconds = 25.0;
+        assert!(r.check_invariants().is_err());
+    }
+
+    #[test]
+    fn invariant_catches_bad_accounting() {
+        let mut r = result(300.0, 240.0);
+        r.daemon_busy = -1.0;
+        assert!(r.check_invariants().unwrap_err().contains("daemon_busy"));
+        let mut r = result(300.0, 240.0);
+        r.daemon_busy = f64::NAN;
+        assert!(r.check_invariants().is_err());
+        // More wait observations than tasks.
+        let mut r = result(300.0, 240.0);
+        r.waits = Summary::of(&[1.0; 11]);
+        assert!(r.check_invariants().unwrap_err().contains("wait"));
+        // Negative waits.
+        let mut r = result(300.0, 240.0);
+        r.waits = Summary::of(&[-2.0]);
+        assert!(r.check_invariants().is_err());
+        // Horizonless runs must not carry windowed busy time.
+        let mut r = result(300.0, 240.0);
+        r.busy_core_seconds = 1.0;
+        assert!(r.check_invariants().is_err());
+    }
+
+    #[test]
+    fn invariant_checks_span_count_against_preemptions() {
+        let mut r = result(300.0, 240.0);
+        r.n_tasks = 2;
+        r.preemptions = 1;
+        r.trace = Some(vec![
+            TraceRecord {
+                task: 0,
+                node: 0,
+                slot: 0,
+                submit: 0.0,
+                start: 0.0,
+                end: 5.0,
+            },
+            TraceRecord {
+                task: 1,
+                node: 0,
+                slot: 1,
+                submit: 0.0,
+                start: 0.0,
+                end: 3.0,
+            },
+        ]);
+        // 2 tasks + 1 eviction must yield 3 spans; 2 is a lost span.
+        let spans = |n: usize| {
+            Some(
+                (0..n)
+                    .map(|i| ExecSpan {
+                        task: i as u32,
+                        slot: 0,
+                        start: 0.0,
+                        end: 1.0,
+                    })
+                    .collect::<Vec<_>>(),
+            )
+        };
+        r.spans = spans(3);
+        r.check_invariants().unwrap();
+        r.spans = spans(2);
+        assert!(r.check_invariants().unwrap_err().contains("spans"));
     }
 }

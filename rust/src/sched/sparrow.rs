@@ -74,6 +74,11 @@ impl SparrowPolicy<'_> {
     /// Probe d random slots, preferring the least-backlogged; slots in
     /// `taken` (already claimed by this task/gang) are skipped by a
     /// deterministic linear advance so concurrent claims stay distinct.
+    /// Workers pinned by a service for the whole window carry an
+    /// infinite backlog; when every probe lands on one, fall back to a
+    /// deterministic full scan so a batch task is not starved by probe
+    /// luck while finite workers exist (no-op for service-free runs,
+    /// where every backlog is finite).
     fn probe(&mut self, busy: &[f64], taken: &[usize]) -> usize {
         let slots = busy.len();
         let mut best = self.rng.choose_index(slots);
@@ -85,6 +90,16 @@ impl SparrowPolicy<'_> {
         }
         while taken.contains(&best) {
             best = (best + 1) % slots;
+        }
+        if !busy[best].is_finite() {
+            if let Some((i, _)) = busy
+                .iter()
+                .enumerate()
+                .filter(|&(i, b)| b.is_finite() && !taken.contains(&i))
+                .min_by(|a, b| a.1.total_cmp(b.1))
+            {
+                best = i;
+            }
         }
         best
     }
@@ -134,6 +149,12 @@ impl SparrowPolicy<'_> {
                     start_all = start_all.max(raw);
                     placements.push((m, first, taken.len() - first));
                 }
+                if !start_all.is_finite() {
+                    // Every probed worker is pinned by a service for the
+                    // whole window: the gang cannot assemble; leave it
+                    // pending for a later pass.
+                    continue;
+                }
                 for (m, first, count) in placements {
                     let dur = ctx.workload().tasks[m as usize].duration;
                     for &s in &taken[first..first + count] {
@@ -144,9 +165,6 @@ impl SparrowPolicy<'_> {
                     ctx.push(start_all, SimEv::Start { task: m, slot });
                 }
             } else {
-                if !ctx.take_task(tid) {
-                    continue; // already placed as part of a gang
-                }
                 assert!(
                     task.cores.max(1) as usize <= slots,
                     "task {} needs {} cores; cluster has {slots}",
@@ -166,7 +184,21 @@ impl SparrowPolicy<'_> {
                         .rng
                         .lognormal_mean_cv(self.p.launch_overhead, self.p.jitter_cv);
                 let start = worst_busy.max(task.submit_at).max(now) + overhead;
-                let end = start + task.duration;
+                if !start.is_finite() {
+                    // Every worker is pinned by a service for the whole
+                    // window: leave the task pending for a later pass.
+                    continue;
+                }
+                if !ctx.take_task(tid) {
+                    continue; // already placed as part of a gang
+                }
+                // A service holds its workers until the horizon: an
+                // infinite backlog keeps later probes away from them.
+                let end = if task.kind == JobKind::Service {
+                    f64::INFINITY
+                } else {
+                    start + task.duration
+                };
                 for &s in &taken {
                     ctx.busy_until()[s] = end;
                 }
@@ -340,6 +372,41 @@ mod tests {
                 assert!((s - starts[0]).abs() < 1e-12, "gang {job} skew");
             }
         }
+    }
+
+    #[test]
+    fn services_pin_workers_and_batch_flows_around_them() {
+        use crate::workload::{TaskSpec, Workload};
+        // 32 worker slots, 16 pinned by services for the whole window;
+        // the 32 batch tasks must all land on the finite-backlog half
+        // (the probe fallback guarantees it) and complete well before
+        // the 20 s horizon.
+        let mut tasks: Vec<TaskSpec> = (0..16).map(|i| TaskSpec::service(i, i, 1)).collect();
+        for i in 16..48 {
+            tasks.push(TaskSpec::array(i, i, 1.0));
+        }
+        let w = Workload {
+            tasks,
+            label: "svc".into(),
+        };
+        let sim = SparrowSim::new(SparrowParams::default());
+        let options = RunOptions {
+            collect_trace: true,
+            horizon: Some(20.0),
+            ..Default::default()
+        };
+        let r = sim.run(&w, &cluster(), 7, &options);
+        r.check_invariants().unwrap();
+        let trace = r.trace.as_ref().unwrap();
+        assert_eq!(trace.len(), 48, "every task started inside the window");
+        for rec in trace.iter().filter(|t| t.task < 16) {
+            assert!((rec.end - 20.0).abs() < 1e-9, "service clipped to horizon");
+        }
+        for rec in trace.iter().filter(|t| t.task >= 16) {
+            assert!(rec.end < 5.0, "batch task delayed: {rec:?}");
+        }
+        // Services alone pin half the window's core-time.
+        assert!(r.utilization() > 0.5, "U={}", r.utilization());
     }
 
     #[test]

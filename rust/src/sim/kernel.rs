@@ -74,6 +74,22 @@
 //! pre-subsystem instruction sequence (bit-identical results) and
 //! warm-scratch preempt runs stay allocation-free on the hot path.
 //!
+//! **Service jobs & horizon-bounded runs.** When
+//! [`RunOptions::horizon`] is set the loop becomes a windowed
+//! observation instead of a run-to-completion: only events at
+//! `t <= horizon` execute, [`JobKind::Service`] tasks occupy their
+//! slots from dispatch until the window closes (they are dispatched and
+//! priced like any other launch but never schedule an `End`), and the
+//! kernel integrates `busy_core_seconds` — every execution span,
+//! clipped to the horizon and weighted by the task's core count — for
+//! the windowed utilization in [`RunResult`]. Services compose with the
+//! preemption subsystem (they are valid eviction victims with the usual
+//! checkpoint semantics, resuming for the rest of the window). Without
+//! a horizon a `Service` task has no valid semantics, so the kernel
+//! refuses to run it (see [`crate::workload::Workload::validate_for`])
+//! instead of the historical silent run-as-batch. Horizonless runs take
+//! the exact pre-horizon code path: results stay bit-identical.
+//!
 //! Determinism contract: for workloads using none of the new
 //! dimensions (1-core, dep-free, all-at-once `Array` tasks — the
 //! paper's benchmark shape), the kernel replays the exact event and
@@ -233,6 +249,10 @@ pub struct KernelCtx<'w, 's> {
     kernel_alloc: &'s mut Vec<bool>,
     spans: &'s mut Vec<ExecSpan>,
     preempt_count: u64,
+    // Windowed accounting (built only for horizon-bounded runs).
+    horizon: Option<Time>,
+    win_start: &'s mut Vec<f64>,
+    busy_core_seconds: f64,
     // Kernel-owned accounting.
     collect_trace: bool,
     completed: usize,
@@ -587,6 +607,18 @@ impl<'w> KernelCtx<'w, '_> {
                 end: now,
             });
         }
+        if self.horizon.is_some() {
+            // Close the windowed span now: an evicted task may never
+            // restart before the window ends, so its trace record must
+            // already reflect the progress observed so far (a later End
+            // or the window-close pass overwrites it if it does run
+            // again).
+            self.busy_core_seconds += spec.cores as f64 * (now - self.win_start[i]);
+            self.win_start[i] = f64::NAN;
+            if self.collect_trace {
+                self.trace[self.trace_idx[i] as usize].end = now;
+            }
+        }
         let executed = now - self.span_start[i];
         self.remaining[i] = (self.remaining[i] - executed).max(0.0);
         self.epoch[i] += 1; // the in-flight End is now stale
@@ -731,15 +763,24 @@ impl<'w> KernelCtx<'w, '_> {
                 });
             }
         }
+        if self.horizon.is_some() {
+            self.win_start[task as usize] = now;
+        }
+        // A service runs until the horizon: it opens its span (and, under
+        // preemption, its epoch/slot bookkeeping so it stays evictable)
+        // but never schedules an `End`.
+        let service = spec.kind == JobKind::Service;
         if self.has_preempt {
             let i = task as usize;
             self.epoch[i] += 1;
             self.span_start[i] = now;
             self.run_slot[i] = slot;
             let epoch = self.epoch[i];
-            self.queue
-                .push(now + self.remaining[i], SimEv::End { task, slot, epoch });
-        } else {
+            if !service {
+                self.queue
+                    .push(now + self.remaining[i], SimEv::End { task, slot, epoch });
+            }
+        } else if !service {
             self.queue
                 .push(now + spec.duration, SimEv::End { task, slot, epoch: 0 });
         }
@@ -750,6 +791,12 @@ impl<'w> KernelCtx<'w, '_> {
     fn handle_end(&mut self, now: Time, task: TaskId) {
         self.completed += 1;
         self.makespan = self.makespan.max(now);
+        if self.horizon.is_some() {
+            let i = task as usize;
+            let cores = self.workload.tasks[i].cores as f64;
+            self.busy_core_seconds += cores * (now - self.win_start[i]);
+            self.win_start[i] = f64::NAN;
+        }
         if self.collect_trace {
             self.trace[self.trace_idx[task as usize] as usize].end = now;
         }
@@ -820,14 +867,33 @@ impl Kernel {
         let mut has_gang = false;
         let mut has_multicore = false;
         let mut has_preempt = false;
+        let mut has_service = false;
         let mut max_job = 0u32;
         for t in &workload.tasks {
             has_deps |= !t.deps.is_empty();
             has_gang |= t.kind == JobKind::Parallel;
             has_multicore |= t.cores > 1;
             has_preempt |= t.preemptible;
+            has_service |= t.kind == JobKind::Service;
             max_job = max_job.max(t.job);
         }
+        let horizon = options.horizon;
+        if let Some(h) = horizon {
+            assert!(
+                h.is_finite() && h > 0.0,
+                "RunOptions.horizon must be finite and > 0, got {h}"
+            );
+        }
+        // Hard check (not debug-only): running a Service task without a
+        // horizon would silently simulate it as a batch task that
+        // "completes" after its placeholder duration — wrong in every
+        // metric. Workload::validate_for reports the same condition as
+        // a recoverable error before a run reaches the kernel.
+        assert!(
+            !has_service || horizon.is_some(),
+            "workload contains JobKind::Service tasks but RunOptions.horizon is None: \
+             services never complete and require a horizon-bounded run"
+        );
 
         if has_deps {
             scratch.indeg.resize(n, 0);
@@ -877,6 +943,9 @@ impl Kernel {
             scratch.evictions.resize(n, 0);
             scratch.kernel_alloc.resize(n, false);
         }
+        if horizon.is_some() {
+            scratch.win_start.resize(n, f64::NAN);
+        }
 
         let SimScratch {
             queue,
@@ -902,6 +971,7 @@ impl Kernel {
             kernel_alloc,
             preempt_victims,
             spans,
+            win_start,
         } = scratch;
         let mut ctx = KernelCtx {
             workload,
@@ -931,6 +1001,9 @@ impl Kernel {
             kernel_alloc,
             spans,
             preempt_count: 0,
+            horizon,
+            win_start,
+            busy_core_seconds: 0.0,
             collect_trace: options.collect_trace,
             completed: 0,
             makespan: 0.0,
@@ -951,7 +1024,16 @@ impl Kernel {
         }
         policy.on_submit(&mut ctx, batch);
 
-        while let Some((now, ev)) = ctx.queue.pop() {
+        loop {
+            if let Some(h) = horizon {
+                // Windowed run: events past the horizon never execute
+                // (queued launches/ends/ticks beyond it are simply
+                // unobserved). Horizonless runs skip this peek entirely.
+                if !matches!(ctx.queue.next_time(), Some(t) if t <= h) {
+                    break;
+                }
+            }
+            let Some((now, ev)) = ctx.queue.pop() else { break };
             match ev {
                 SimEv::Arrive { task } => {
                     ctx.admit(task);
@@ -1025,16 +1107,43 @@ impl Kernel {
             }
         }
 
-        // Hard check (not debug-only): an event-driven policy with an
-        // undispatchable task drains the queue and would otherwise
-        // return silently-truncated results in release builds.
-        assert_eq!(
-            ctx.completed, n,
-            "kernel finished with incomplete workload: {} of {n} tasks \
-             completed (cores/memory exceed cluster capacity, or a gang \
-             can never assemble?)",
-            ctx.completed,
-        );
+        if let Some(h) = horizon {
+            // Window close: clip every still-open execution span to the
+            // horizon — services by construction, plus batch tasks whose
+            // `End` lies beyond the window.
+            for t in &workload.tasks {
+                let i = t.id as usize;
+                let s = ctx.win_start[i];
+                if s.is_nan() {
+                    continue;
+                }
+                ctx.busy_core_seconds += t.cores as f64 * (h - s);
+                if ctx.collect_trace {
+                    ctx.trace[ctx.trace_idx[i] as usize].end = h;
+                    if has_preempt {
+                        ctx.spans.push(ExecSpan {
+                            task: t.id,
+                            slot: ctx.run_slot[i],
+                            start: ctx.span_start[i],
+                            end: h,
+                        });
+                    }
+                }
+            }
+        } else {
+            // Hard check (not debug-only): an event-driven policy with an
+            // undispatchable task drains the queue and would otherwise
+            // return silently-truncated results in release builds. A
+            // horizon-bounded run is exempt — the window closing before
+            // every task completes is its normal outcome.
+            assert_eq!(
+                ctx.completed, n,
+                "kernel finished with incomplete workload: {} of {n} tasks \
+                 completed (cores/memory exceed cluster capacity, or a gang \
+                 can never assemble?)",
+                ctx.completed,
+            );
+        }
         let processors = cluster.total_cores();
         let events = ctx.queue.popped();
         RunResult {
@@ -1042,12 +1151,14 @@ impl Kernel {
             workload: workload.label.clone(),
             n_tasks: n as u64,
             processors,
-            t_total: ctx.makespan,
+            t_total: horizon.unwrap_or(ctx.makespan),
             t_job: workload.t_job_per_proc(processors),
             events,
             daemon_busy: policy.daemon_busy(),
             waits: ctx.waits,
             preemptions: ctx.preempt_count,
+            horizon,
+            busy_core_seconds: ctx.busy_core_seconds,
             trace: options.collect_trace.then(|| std::mem::take(ctx.trace)),
             spans: (options.collect_trace && has_preempt)
                 .then(|| std::mem::take(ctx.spans)),
@@ -1261,6 +1372,158 @@ mod tests {
         let late = trace.iter().find(|t| t.task == 3).unwrap();
         assert!((late.start - 50.0).abs() < 1e-9);
         assert!((r.t_total - 51.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "horizon")]
+    fn service_without_horizon_panics_instead_of_running_as_batch() {
+        let w = Workload {
+            tasks: vec![TaskSpec::service(0, 0, 1)],
+            label: "svc".into(),
+        };
+        run(&w); // RunOptions::with_trace() has no horizon
+    }
+
+    fn run_windowed(w: &Workload, horizon: f64) -> RunResult {
+        let mut scratch = SimScratch::new();
+        let options = RunOptions {
+            collect_trace: true,
+            horizon: Some(horizon),
+            ..Default::default()
+        };
+        Kernel::run(&mut InstantPolicy, w, &cluster(), &options, &mut scratch)
+    }
+
+    #[test]
+    fn services_occupy_slots_until_the_horizon() {
+        // 8 slots: 4 one-core services pin half the cluster for the
+        // whole 6 s window; 8 × 3 s batch tasks fill the other half in
+        // two exact waves. Every core-second is productive: U = 1.
+        let mut tasks: Vec<TaskSpec> =
+            (0..4).map(|i| TaskSpec::service(i, i, 1)).collect();
+        for i in 4..12 {
+            tasks.push(TaskSpec::array(i, i, 3.0));
+        }
+        let w = Workload {
+            tasks,
+            label: "svc".into(),
+        };
+        let r = run_windowed(&w, 6.0);
+        r.check_invariants().unwrap();
+        assert_eq!(r.horizon, Some(6.0));
+        assert!((r.t_total - 6.0).abs() < 1e-9);
+        assert!(
+            (r.busy_core_seconds - 48.0).abs() < 1e-9,
+            "busy={}",
+            r.busy_core_seconds
+        );
+        assert!((r.utilization() - 1.0).abs() < 1e-9);
+        let trace = r.trace.as_ref().unwrap();
+        assert_eq!(trace.len(), 12);
+        for rec in trace.iter().filter(|t| t.task < 4) {
+            assert_eq!(rec.start, 0.0, "service {} starts immediately", rec.task);
+            assert_eq!(rec.end, 6.0, "service {} clipped to horizon", rec.task);
+        }
+    }
+
+    #[test]
+    fn window_clips_batch_tasks_mid_flight() {
+        // 12 × 3 s tasks on 8 slots, window of 4 s: the first wave
+        // completes (24 core-s), the 4-task second wave runs [3, 4)
+        // before the window closes (4 core-s).
+        let tasks = (0..12).map(|i| TaskSpec::array(i, 0, 3.0)).collect();
+        let w = Workload {
+            tasks,
+            label: "clip".into(),
+        };
+        let r = run_windowed(&w, 4.0);
+        r.check_invariants().unwrap();
+        assert!(
+            (r.busy_core_seconds - 28.0).abs() < 1e-9,
+            "busy={}",
+            r.busy_core_seconds
+        );
+        assert!((r.utilization() - 28.0 / 32.0).abs() < 1e-9);
+        let trace = r.trace.as_ref().unwrap();
+        assert_eq!(trace.len(), 12, "every task started inside the window");
+        assert_eq!(
+            trace.iter().filter(|t| (t.end - 4.0).abs() < 1e-9).count(),
+            4,
+            "second wave clipped at the horizon"
+        );
+    }
+
+    #[test]
+    fn evicted_service_resumes_and_is_clipped_at_horizon() {
+        // 2 slots pinned by preemptible services; a priority-1 1 s task
+        // arrives at t=2. Both services are nominated, the foreground
+        // task and one service reclaim the slots instantly, the other
+        // service resumes at t=3. No idle core-seconds: U = 1.
+        let mut tasks: Vec<TaskSpec> = (0..2)
+            .map(|i| {
+                let mut t = TaskSpec::service(i, i, 1);
+                t.preemptible = true;
+                t
+            })
+            .collect();
+        let mut fg = TaskSpec::array(2, 2, 1.0);
+        fg.submit_at = 2.0;
+        fg.priority = 1;
+        tasks.push(fg);
+        let w = Workload {
+            tasks,
+            label: "svc-pre".into(),
+        };
+        let two_slots = ClusterSpec::homogeneous(1, 2, 32 * 1024, 1);
+        let options = RunOptions {
+            collect_trace: true,
+            horizon: Some(10.0),
+            ..Default::default()
+        };
+        let r = Kernel::run(
+            &mut PreemptingInstant,
+            &w,
+            &two_slots,
+            &options,
+            &mut SimScratch::new(),
+        );
+        r.check_invariants().unwrap();
+        assert_eq!(r.preemptions, 2);
+        assert!(
+            (r.busy_core_seconds - 20.0).abs() < 1e-9,
+            "busy={}",
+            r.busy_core_seconds
+        );
+        assert!((r.utilization() - 1.0).abs() < 1e-9);
+        // 2 evict spans + 1 foreground End span + 2 window-close spans.
+        let spans = r.spans.as_ref().unwrap();
+        assert_eq!(spans.len(), 5, "{spans:?}");
+        for task in 0..2u32 {
+            let last = spans
+                .iter()
+                .filter(|s| s.task == task)
+                .map(|s| s.end)
+                .fold(f64::NEG_INFINITY, f64::max);
+            assert!((last - 10.0).abs() < 1e-9, "service {task} not clipped");
+        }
+        let fg_span = spans.iter().find(|s| s.task == 2).unwrap();
+        assert!((fg_span.start - 2.0).abs() < 1e-9 && (fg_span.end - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn horizonless_runs_are_unchanged_by_the_window_machinery() {
+        // The exact arithmetic of the pre-horizon kernel must hold, and
+        // the result must carry no windowed accounting.
+        let tasks = (0..16).map(|i| TaskSpec::array(i, 0, 3.0)).collect();
+        let w = Workload {
+            tasks,
+            label: "k".into(),
+        };
+        let r = run(&w);
+        r.check_invariants().unwrap();
+        assert_eq!(r.horizon, None);
+        assert_eq!(r.busy_core_seconds, 0.0);
+        assert!((r.t_total - 6.0).abs() < 1e-9);
     }
 
     #[test]

@@ -79,6 +79,10 @@ pub struct SimScratch {
     pub preempt_victims: Vec<u32>,
     /// Executed-span records (traced preemption runs only).
     pub spans: Vec<crate::sched::ExecSpan>,
+    /// Start time of each task's currently-open execution span for
+    /// windowed `busy_core_seconds` accounting (`NAN` when the task is
+    /// not running; horizon-bounded runs only).
+    pub win_start: Vec<f64>,
 }
 
 impl SimScratch {
@@ -108,6 +112,7 @@ impl SimScratch {
             kernel_alloc: Vec::new(),
             preempt_victims: Vec::new(),
             spans: Vec::new(),
+            win_start: Vec::new(),
         }
     }
 
@@ -139,6 +144,7 @@ impl SimScratch {
         self.kernel_alloc.clear();
         self.preempt_victims.clear();
         self.spans.clear();
+        self.win_start.clear();
         if collect_trace {
             self.trace.reserve(n_tasks);
             self.trace_idx.resize(n_tasks, u32::MAX);
@@ -189,6 +195,7 @@ mod tests {
             start: 0.0,
             end: 1.0,
         });
+        s.win_start.push(3.0);
         s.begin(&cluster, 4, true);
         assert!(s.queue.is_empty());
         assert_eq!(s.queue.now(), 0.0);
@@ -214,6 +221,7 @@ mod tests {
         assert!(s.kernel_alloc.is_empty());
         assert!(s.preempt_victims.is_empty());
         assert!(s.spans.is_empty());
+        assert!(s.win_start.is_empty());
     }
 
     #[test]

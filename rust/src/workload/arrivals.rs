@@ -6,7 +6,7 @@
 //! execute immediately; that is, they tend not to wait in batch
 //! queues". These processes stamp `submit_at` to model that.
 
-use super::types::Workload;
+use super::types::{JobKind, Workload};
 use crate::util::prng::Prng;
 
 /// Arrival process for a workload.
@@ -29,26 +29,32 @@ pub enum ArrivalProcess {
 }
 
 impl ArrivalProcess {
-    /// Stamp submit times onto a workload (in task order).
+    /// Stamp submit times onto a workload (in task order). Service
+    /// tasks are left untouched: they model resident daemons that are
+    /// up from t = 0, not part of the arriving stream.
     pub fn apply(&self, workload: &mut Workload, seed: u64) {
         let mut rng = Prng::new(seed ^ 0xA221_7A15);
+        let arriving = workload
+            .tasks
+            .iter_mut()
+            .filter(|t| t.kind != JobKind::Service);
         match *self {
             ArrivalProcess::AllAtOnce => {
-                for t in &mut workload.tasks {
+                for t in arriving {
                     t.submit_at = 0.0;
                 }
             }
             ArrivalProcess::Poisson { rate } => {
                 assert!(rate > 0.0, "rate must be positive");
                 let mut now = 0.0;
-                for t in &mut workload.tasks {
+                for t in arriving {
                     now += rng.exponential(1.0 / rate);
                     t.submit_at = now;
                 }
             }
             ArrivalProcess::Bursty { burst, period } => {
                 assert!(burst > 0 && period > 0.0);
-                for (i, t) in workload.tasks.iter_mut().enumerate() {
+                for (i, t) in arriving.enumerate() {
                     t.submit_at = (i as u32 / burst) as f64 * period;
                 }
             }

@@ -62,6 +62,8 @@ pub struct WorkloadBuilder {
     users: u32,
     preemptible: bool,
     checkpoint_cost: f64,
+    svc_count: u64,
+    svc_cores: u32,
 }
 
 impl WorkloadBuilder {
@@ -87,6 +89,8 @@ impl WorkloadBuilder {
             users: 1,
             preemptible: false,
             checkpoint_cost: 0.0,
+            svc_count: 0,
+            svc_cores: 1,
         }
     }
 
@@ -170,6 +174,18 @@ impl WorkloadBuilder {
         self
     }
 
+    /// Prepend `count` long-running service tasks of `cores` cores each
+    /// (`JobKind::Service`, submitted at t = 0, each its own job). The
+    /// batch tasks declared via [`WorkloadBuilder::tasks`] follow with
+    /// shifted ids; chains/gangs/arrivals apply to the batch portion
+    /// only. Workloads with services run only under
+    /// `RunOptions::horizon` (see `Workload::validate_for`).
+    pub fn services(mut self, count: u64, cores: u32) -> Self {
+        self.svc_count = count;
+        self.svc_cores = cores.max(1);
+        self
+    }
+
     /// Materialize.
     pub fn build(self) -> Workload {
         assert!(
@@ -179,14 +195,27 @@ impl WorkloadBuilder {
              for the gang)"
         );
         let mut rng = Prng::new(self.seed ^ 0x5EED_F00D);
-        let mut tasks = Vec::with_capacity(self.n_tasks as usize);
+        let svc = self.svc_count;
+        let mut tasks = Vec::with_capacity((svc + self.n_tasks) as usize);
+        for s in 0..svc {
+            let mut t = TaskSpec::service(s as u32, s as u32, self.svc_cores);
+            t.mem_mb = self.mem_mb;
+            t.user = (s % self.users as u64) as u32;
+            t.preemptible = self.preemptible;
+            t.checkpoint_cost = self.checkpoint_cost;
+            tasks.push(t);
+        }
         for i in 0..self.n_tasks {
-            let job = if self.gang_size > 1 {
-                (i / self.gang_size as u64) as u32
-            } else {
-                (i % self.n_jobs as u64) as u32
-            };
-            let mut t = TaskSpec::array(i as u32, job, self.dist.sample(&mut rng));
+            // Batch-portion index `i`; dense global id follows the
+            // services. Job ids are offset past the service jobs.
+            let id = svc + i;
+            let job = svc as u32
+                + if self.gang_size > 1 {
+                    (i / self.gang_size as u64) as u32
+                } else {
+                    (i % self.n_jobs as u64) as u32
+                };
+            let mut t = TaskSpec::array(id as u32, job, self.dist.sample(&mut rng));
             t.mem_mb = self.mem_mb;
             t.cores = self.cores;
             t.priority = self.priority;
@@ -197,7 +226,7 @@ impl WorkloadBuilder {
                 t.kind = JobKind::Parallel;
             }
             if self.chain_len > 1 && i % self.chain_len as u64 != 0 {
-                t.deps = vec![i as u32 - 1];
+                t.deps = vec![id as u32 - 1];
             }
             tasks.push(t);
         }
@@ -319,6 +348,39 @@ mod tests {
         assert!(w.tasks.iter().all(|t| t.priority == 4));
         let users: Vec<u32> = w.tasks.iter().map(|t| t.user).collect();
         assert_eq!(users, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn services_prepend_and_batch_shifts() {
+        let w = WorkloadBuilder::constant(2.0)
+            .tasks(6)
+            .services(3, 2)
+            .dag_chains(3)
+            .arrivals(ArrivalProcess::Poisson { rate: 5.0 })
+            .seed(11)
+            .build();
+        w.validate().unwrap();
+        assert_eq!(w.len(), 9);
+        for t in &w.tasks[..3] {
+            assert_eq!(t.kind, JobKind::Service);
+            assert_eq!(t.cores, 2);
+            assert_eq!(t.submit_at, 0.0, "services are resident, not arriving");
+        }
+        // Batch chains link within the batch portion only: [3,4,5], [6,7,8].
+        assert!(w.tasks[3].deps.is_empty());
+        assert_eq!(w.tasks[4].deps, vec![3]);
+        assert_eq!(w.tasks[5].deps, vec![4]);
+        assert!(w.tasks[6].deps.is_empty());
+        // Arrivals stamped on batch tasks only, in order.
+        assert!(w.tasks[3].submit_at > 0.0);
+        assert!(w.tasks[3..].windows(2).all(|p| p[1].submit_at >= p[0].submit_at));
+        // Service-free builds are unchanged by the services machinery.
+        let plain = WorkloadBuilder::constant(2.0).tasks(6).seed(11).build();
+        let with0 = WorkloadBuilder::constant(2.0).tasks(6).services(0, 4).seed(11).build();
+        for (a, b) in plain.tasks.iter().zip(&with0.tasks) {
+            assert_eq!(a.duration.to_bits(), b.duration.to_bits());
+            assert_eq!(a.job, b.job);
+        }
     }
 
     #[test]

@@ -82,6 +82,18 @@ impl TaskSpec {
             ..Self::array(id, job, duration)
         }
     }
+
+    /// Long-running service task: occupies `cores` slots from dispatch
+    /// until the run's horizon (`RunOptions::horizon` — required; see
+    /// [`Workload::validate_for`]). `duration` is meaningless for a
+    /// service and is set to 0 so it cannot leak into work totals.
+    pub fn service(id: TaskId, job: JobId, cores: u32) -> Self {
+        Self {
+            kind: JobKind::Service,
+            cores,
+            ..Self::array(id, job, 0.0)
+        }
+    }
 }
 
 /// A workload: a set of tasks plus metadata.
@@ -104,11 +116,23 @@ impl Workload {
         self.tasks.is_empty()
     }
 
-    /// Total processor-seconds of work: Σ duration × cores. For the
-    /// paper's 1-core benchmark tasks this is the plain duration sum;
-    /// multi-core tasks count every core they occupy.
+    /// Total processor-seconds of *batch* work: Σ duration × cores over
+    /// non-service tasks. For the paper's 1-core benchmark tasks this
+    /// is the plain duration sum; multi-core tasks count every core
+    /// they occupy. Service tasks are excluded — they have no finite
+    /// work, and counting a placeholder `duration` for them would
+    /// poison the T_job denominator of every derived utilization.
     pub fn total_work(&self) -> f64 {
-        self.tasks.iter().map(|t| t.duration * t.cores as f64).sum()
+        self.tasks
+            .iter()
+            .filter(|t| t.kind != JobKind::Service)
+            .map(|t| t.duration * t.cores as f64)
+            .sum()
+    }
+
+    /// True if the workload contains any `JobKind::Service` task.
+    pub fn has_services(&self) -> bool {
+        self.tasks.iter().any(|t| t.kind == JobKind::Service)
     }
 
     /// Isolated job execution time per processor, T_job = total work / P,
@@ -152,6 +176,14 @@ impl Workload {
                 if d == t.id {
                     return Err(format!("task {} depends on itself", t.id));
                 }
+                if self.tasks[d as usize].kind == JobKind::Service {
+                    // A service never completes, so a dependent would
+                    // never be admitted — a structural deadlock.
+                    return Err(format!(
+                        "task {} depends on service task {d}, which never completes",
+                        t.id
+                    ));
+                }
             }
         }
         // Kahn's algorithm for cycle detection.
@@ -177,6 +209,34 @@ impl Workload {
         }
         if seen != n {
             return Err("dependency cycle detected".into());
+        }
+        Ok(())
+    }
+
+    /// [`Workload::validate`] plus run-mode compatibility checks:
+    /// `JobKind::Service` tasks never complete, so running them without
+    /// [`crate::sched::RunOptions::horizon`] would (before this check)
+    /// silently simulate them as batch tasks that "finish" after
+    /// `duration` seconds — wrong in every metric. Harness runners call
+    /// this before simulating; [`crate::sim::Kernel::run`] enforces the
+    /// same rule with a hard panic as a last line of defence.
+    pub fn validate_for(&self, options: &crate::sched::RunOptions) -> Result<(), String> {
+        self.validate()?;
+        match options.horizon {
+            None => {
+                if let Some(t) = self.tasks.iter().find(|t| t.kind == JobKind::Service) {
+                    return Err(format!(
+                        "task {} is a Service job but RunOptions.horizon is not set; \
+                         services never complete and require a horizon-bounded run",
+                        t.id
+                    ));
+                }
+            }
+            Some(h) => {
+                if !(h.is_finite() && h > 0.0) {
+                    return Err(format!("RunOptions.horizon must be finite and > 0, got {h}"));
+                }
+            }
         }
         Ok(())
     }
@@ -292,5 +352,54 @@ mod tests {
         assert_eq!(t.kind, JobKind::Parallel);
         assert_eq!(t.cores, 4);
         assert_eq!(t.job, 1);
+    }
+
+    #[test]
+    fn service_helper_sets_kind_and_zero_duration() {
+        let t = TaskSpec::service(2, 7, 4);
+        assert_eq!(t.kind, JobKind::Service);
+        assert_eq!(t.cores, 4);
+        assert_eq!(t.duration, 0.0);
+    }
+
+    #[test]
+    fn total_work_excludes_services() {
+        let w = wl(vec![
+            TaskSpec::service(0, 0, 8),
+            TaskSpec::array(1, 1, 5.0),
+            TaskSpec::array(2, 1, 5.0),
+        ]);
+        assert_eq!(w.total_work(), 10.0);
+        assert!(w.has_services());
+    }
+
+    #[test]
+    fn rejects_dependency_on_a_service() {
+        let svc = TaskSpec::service(0, 0, 1);
+        let mut child = TaskSpec::array(1, 1, 1.0);
+        child.deps = vec![0];
+        let err = wl(vec![svc, child]).validate().unwrap_err();
+        assert!(err.contains("service"), "{err}");
+        // A service depending ON a batch task (setup-then-serve) is fine.
+        let setup = TaskSpec::array(0, 0, 1.0);
+        let mut svc = TaskSpec::service(1, 1, 1);
+        svc.deps = vec![0];
+        wl(vec![setup, svc]).validate().unwrap();
+    }
+
+    #[test]
+    fn service_without_horizon_is_rejected() {
+        use crate::sched::RunOptions;
+        let w = wl(vec![TaskSpec::service(0, 0, 1), TaskSpec::array(1, 1, 1.0)]);
+        let err = w.validate_for(&RunOptions::default()).unwrap_err();
+        assert!(err.contains("horizon"), "{err}");
+        w.validate_for(&RunOptions::with_horizon(100.0)).unwrap();
+        // Bad horizons are rejected too.
+        assert!(w.validate_for(&RunOptions::with_horizon(f64::NAN)).is_err());
+        assert!(w.validate_for(&RunOptions::with_horizon(0.0)).is_err());
+        // Batch-only workloads don't need a horizon.
+        wl(vec![TaskSpec::array(0, 0, 1.0)])
+            .validate_for(&RunOptions::default())
+            .unwrap();
     }
 }

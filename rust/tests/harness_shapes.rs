@@ -77,6 +77,24 @@ fn fig7_runs_and_checks() {
 }
 
 #[test]
+fn service_runs_and_checks() {
+    let mut cfg = ci_cfg();
+    cfg.service_horizon = 120.0;
+    let rep = harness::service(&cfg);
+    rep.check_shape(cfg.trials).unwrap();
+    let table = rep.render_table().render();
+    assert!(table.contains("U(window)"));
+    assert!(table.contains("batch started"));
+    // Every trial is horizon-bounded with windowed accounting.
+    for c in &rep.cells {
+        for r in &c.trials {
+            assert_eq!(r.horizon, Some(120.0));
+            assert!(r.busy_core_seconds > 0.0, "{}", c.scheduler);
+        }
+    }
+}
+
+#[test]
 fn features_render_all_tables() {
     for cat in sssched::features::FeatureCategory::all() {
         let t = sssched::features::feature_table(cat);

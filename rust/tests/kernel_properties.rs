@@ -6,10 +6,11 @@
 
 use sssched::cluster::ClusterSpec;
 use sssched::config::SchedulerChoice;
-use sssched::sched::{make_scheduler, RunOptions, SimScratch};
+use sssched::sched::combinators::{make_preemptive, Order};
+use sssched::sched::{make_scheduler, RunOptions, RunResult, SimScratch};
 use sssched::util::prng::Prng;
 use sssched::util::prop::{ensure, forall, PropConfig};
-use sssched::workload::{ArrivalProcess, Workload, WorkloadBuilder};
+use sssched::workload::{ArrivalProcess, TaskSpec, Workload, WorkloadBuilder};
 
 #[derive(Debug, Clone, Copy, PartialEq)]
 enum Shape {
@@ -186,11 +187,207 @@ fn prop_scratch_reuse_bit_identical_across_shapes() {
     );
 }
 
+// ---- service-in-the-mix window properties ---------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum BatchShape {
+    Array,
+    DagChain,
+    Gang,
+}
+
+#[derive(Debug)]
+struct SvcCase {
+    choice: SchedulerChoice,
+    shape: BatchShape,
+    services: u64,
+    n_batch: u64,
+    task_time: f64,
+    horizon: f64,
+    preemptible: bool,
+    seed: u64,
+}
+
+fn gen_svc_case(rng: &mut Prng) -> SvcCase {
+    let choices = SchedulerChoice::all_simulated();
+    let shapes = [BatchShape::Array, BatchShape::DagChain, BatchShape::Gang];
+    let task_time = rng.range_f64(0.5, 6.0);
+    SvcCase {
+        choice: choices[rng.choose_index(choices.len())],
+        shape: shapes[rng.choose_index(shapes.len())],
+        services: rng.range_u64(1, 7),
+        n_batch: rng.range_u64(1, 80),
+        task_time,
+        horizon: task_time * rng.range_f64(1.0, 6.0),
+        preemptible: rng.chance(0.5),
+        seed: rng.next_u64(),
+    }
+}
+
+fn build_svc_workload(case: &SvcCase) -> Workload {
+    let mut b = WorkloadBuilder::constant(case.task_time)
+        .tasks(case.n_batch)
+        .services(case.services, 1)
+        .seed(case.seed)
+        .label("svc-prop");
+    b = match case.shape {
+        BatchShape::Array => b,
+        BatchShape::DagChain => b.dag_chains(4),
+        BatchShape::Gang => b.gangs(4),
+    };
+    if case.preemptible {
+        b = b.preemptible(0.0);
+    }
+    b.build()
+}
+
+/// Per-slot execution intervals of a windowed run: from spans when the
+/// preemption subsystem collected them, else from the trace (identical
+/// for eviction-free runs). All tasks are 1-core in these cases, so the
+/// intervals fully describe slot occupancy.
+fn slot_intervals(r: &RunResult) -> Vec<(u32, f64, f64)> {
+    match &r.spans {
+        Some(spans) => spans.iter().map(|s| (s.slot, s.start, s.end)).collect(),
+        None => r
+            .trace
+            .as_ref()
+            .expect("traced run")
+            .iter()
+            .map(|t| (t.slot, t.start, t.end))
+            .collect(),
+    }
+}
+
+fn check_windowed_run(r: &RunResult, w: &Workload, horizon: f64) -> Result<(), String> {
+    r.check_invariants()?;
+    let trace = r.trace.as_ref().expect("trace collected");
+    ensure(trace.len() <= w.len(), "more trace records than tasks")?;
+    let mut ids: Vec<u32> = trace.iter().map(|t| t.task).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    ensure(ids.len() == trace.len(), "duplicate task ids in trace")?;
+    for rec in trace {
+        ensure(
+            rec.end <= horizon + 1e-9,
+            format!("record past horizon: {rec:?}"),
+        )?;
+        ensure(
+            rec.start >= rec.submit - 1e-9 && rec.end >= rec.start - 1e-9,
+            format!("non-causal record {rec:?}"),
+        )?;
+    }
+    // Window-clipped span accounting: busy_core_seconds is exactly the
+    // integral of the observed (1-core) execution intervals.
+    let intervals = slot_intervals(r);
+    let expected: f64 = intervals.iter().map(|&(_, s, e)| e - s).sum();
+    ensure(
+        (r.busy_core_seconds - expected).abs() < 1e-6,
+        format!(
+            "busy_core_seconds {} != span integral {expected}",
+            r.busy_core_seconds
+        ),
+    )?;
+    // No slot double-allocation: intervals on one slot never overlap.
+    let mut by_slot = intervals;
+    by_slot.sort_by(|a, b| a.0.cmp(&b.0).then(a.1.total_cmp(&b.1)));
+    for pair in by_slot.windows(2) {
+        let (s0, _, e0) = pair[0];
+        let (s1, b1, _) = pair[1];
+        ensure(
+            s0 != s1 || b1 >= e0 - 1e-9,
+            format!("slot {s0} double-booked: {pair:?}"),
+        )?;
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_service_mixes_clip_spans_and_never_double_book_slots() {
+    forall(
+        PropConfig {
+            cases: 60,
+            seed: 0x5E41_1CE,
+        },
+        gen_svc_case,
+        |case| {
+            let w = build_svc_workload(case);
+            let options = RunOptions {
+                collect_trace: true,
+                horizon: Some(case.horizon),
+                ..Default::default()
+            };
+            w.validate_for(&options)?;
+            let sched = make_scheduler(case.choice);
+            let r = sched.run(&w, &cluster(), case.seed, &options);
+            check_windowed_run(&r, &w, case.horizon)?;
+            // Every service that started is clipped to the horizon or
+            // was last seen at its eviction instant — it never "ends"
+            // earlier on its own.
+            let trace = r.trace.as_ref().expect("traced");
+            for rec in trace.iter().filter(|t| t.task < case.services as u32) {
+                ensure(
+                    r.preemptions > 0 || (rec.end - case.horizon).abs() < 1e-9,
+                    format!("service completed early: {rec:?}"),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn service_mix_with_preemption_keeps_window_accounting() {
+    // A saturated cluster of preemptible services + staggered
+    // high-priority short tasks under the Preemptive wrapper: evictions
+    // must happen, and the windowed accounting must still integrate
+    // exactly over the split spans with no slot double-booking.
+    let cl = cluster(); // 16 slots
+    let horizon = 30.0;
+    let mut tasks: Vec<TaskSpec> = (0..16)
+        .map(|i| {
+            let mut t = TaskSpec::service(i, i, 1);
+            t.preemptible = true;
+            t
+        })
+        .collect();
+    for k in 0..12u32 {
+        let mut t = TaskSpec::array(16 + k, 16 + k, 2.0);
+        t.priority = 10;
+        t.submit_at = 1.0 + 0.5 * k as f64;
+        tasks.push(t);
+    }
+    let w = Workload {
+        tasks,
+        label: "svc-pre".into(),
+    };
+    let options = RunOptions {
+        collect_trace: true,
+        horizon: Some(horizon),
+        ..Default::default()
+    };
+    w.validate_for(&options).unwrap();
+    for choice in [
+        SchedulerChoice::IdealFifo,
+        SchedulerChoice::Slurm,
+        SchedulerChoice::Mesos,
+    ] {
+        let sched = make_preemptive(choice, 1, Order::Priority);
+        let r = sched.run(&w, &cl, 3, &options);
+        check_windowed_run(&r, &w, horizon).unwrap_or_else(|e| panic!("{}: {e}", sched.name()));
+        if choice == SchedulerChoice::IdealFifo {
+            assert!(r.preemptions > 0, "saturated ideal cluster must evict");
+            // All 28 tasks ran inside the generous window.
+            assert_eq!(r.trace.as_ref().unwrap().len(), 28);
+        }
+    }
+}
+
 #[test]
 fn individual_submission_still_runs_through_kernel() {
     let options = RunOptions {
         individual_submission: true,
         collect_trace: true,
+        ..Default::default()
     };
     let w = WorkloadBuilder::constant(2.0).tasks(48).label("ind").build();
     for choice in SchedulerChoice::all_simulated() {
