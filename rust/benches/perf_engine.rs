@@ -9,6 +9,10 @@
 //!   allocation-flat (per-run allocations are a small constant that
 //!   does not scale with workload size — nothing allocates on the
 //!   evict/requeue/resume hot path after warmup)
+//! * indexed-queue scale sweep: warm events/s per (scheduler, n) up to
+//!   n = 100k, the fitted log-log wall-time exponent, the eager-sort vs
+//!   incremental ordered-queue speedup (asserted ≥ 5×, bit-identical),
+//!   and a flat-allocation assert at the largest n
 //! * realtime coordinator dispatch rate (channel round-trip)
 //! * artifact-suite power-law fit latency (the L1/L2 hot path from rust)
 //! * serial vs parallel fig4-style sweep: cells/s, events/s, wall-clock
@@ -20,10 +24,14 @@
 use sssched::cluster::ClusterSpec;
 use sssched::config::{ExperimentConfig, SchedulerChoice};
 use sssched::exec::{RealtimeCoordinator, RealtimeParams, RtTask, RtWork};
-use sssched::harness::{run_sweeps, SchedulerSweep, SweepSpec};
-use sssched::sched::combinators::{make_preemptive, Order};
-use sssched::sched::{make_scheduler, RunOptions, SimScratch};
+use sssched::harness::{
+    run_sweeps, scale_array_workload, scale_cluster as scale_cluster_of, scale_preempt_workload,
+    SchedulerSweep, SweepSpec,
+};
+use sssched::sched::combinators::{make_preemptive, Order, OrderedSim};
+use sssched::sched::{make_scheduler, RunOptions, Scheduler, SimScratch};
 use sssched::sim::EventQueue;
+use sssched::util::fit::fit_power_law;
 use sssched::workload::{TaskSpec, Workload};
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -300,6 +308,148 @@ fn main() {
         (rate, eps, big_allocs)
     };
 
+    // ---- 2d. Indexed-queue scale sweep (the `scale` experiment's
+    // bench-side mirror): warm-scratch events/s per (scheduler, n), the
+    // fitted log-log wall-time-vs-n exponent, the eager-sort vs
+    // incremental ordered-queue speedup (asserted ≥ 5×, bit-identical),
+    // and a flag-gated counting-allocator assert that warm runs at the
+    // largest n stay flat-allocation.
+    let scale_ns: Vec<u32> = if quick {
+        vec![2_000, 8_000, 32_000]
+    } else {
+        vec![10_000, 50_000, 100_000]
+    };
+    let scale_procs: u32 = 1_000;
+    // Shared with the `scale` experiment so the bench mirrors the exact
+    // cluster shape the experiment measures.
+    let scale_cluster = scale_cluster_of(scale_procs);
+    let scale_rows: Vec<Box<dyn Scheduler>> = vec![
+        make_scheduler(SchedulerChoice::Slurm),
+        make_scheduler(SchedulerChoice::Sparrow),
+        make_scheduler(SchedulerChoice::IdealFifo),
+        Box::new(OrderedSim::new(
+            make_scheduler(SchedulerChoice::IdealFifo),
+            Order::Priority,
+            "IdealFIFO+prio",
+        )),
+        make_preemptive(SchedulerChoice::IdealFifo, 1, Order::Priority),
+    ];
+    let mut scale_cells: Vec<(String, u32, f64, u64)> = Vec::new(); // (name, n, wall, events)
+    let mut scale_exponents: Vec<(String, f64, f64)> = Vec::new(); // (name, alpha, r2)
+    for sched in &scale_rows {
+        let name = sched.name().to_string();
+        let preemptive = name.ends_with("+preempt");
+        let mut scratch = SimScratch::new();
+        let (mut xs, mut ys) = (Vec::new(), Vec::new());
+        for &n in &scale_ns {
+            let w = if preemptive {
+                scale_preempt_workload(n, scale_procs)
+            } else {
+                scale_array_workload(n)
+            };
+            // Warm-up sizes the buffers; the timed run is steady-state.
+            sched.run_with_scratch(&w, &scale_cluster, 7, &RunOptions::default(), &mut scratch);
+            let t0 = Instant::now();
+            let r =
+                sched.run_with_scratch(&w, &scale_cluster, 7, &RunOptions::default(), &mut scratch);
+            let wall = t0.elapsed().as_secs_f64().max(1e-9);
+            println!(
+                "scale {:<20} n={:>6}: {:>8} events in {:.4}s = {:.2}M events/s",
+                name,
+                n,
+                r.events,
+                wall,
+                r.events as f64 / wall / 1e6
+            );
+            xs.push(n as f64);
+            ys.push(wall);
+            scale_cells.push((name.clone(), n, wall, r.events));
+        }
+        let fit = fit_power_law(&xs, &ys);
+        println!("scale {name:<20} wall-time exponent alpha={:.3} (R²={:.3})", fit.alpha_s, fit.r2);
+        scale_exponents.push((name, fit.alpha_s, fit.r2));
+    }
+
+    // Eager-sort oracle vs incremental ordered queue: bit-identical
+    // results, and the wall-clock speedup the de-quadratized queue buys.
+    let speedup_n: u32 = if quick { 8_000 } else { 50_000 };
+    let (ordered_speedup, ordered_eager_wall, ordered_incr_wall) = {
+        let w = scale_array_workload(speedup_n);
+        let incr = OrderedSim::new(
+            make_scheduler(SchedulerChoice::IdealFifo),
+            Order::Priority,
+            "IdealFIFO+prio",
+        );
+        let eager = OrderedSim::new_eager(
+            make_scheduler(SchedulerChoice::IdealFifo),
+            Order::Priority,
+            "IdealFIFO+prio",
+        );
+        let time_one = |s: &OrderedSim| {
+            let mut scratch = SimScratch::new();
+            s.run_with_scratch(&w, &scale_cluster, 3, &RunOptions::default(), &mut scratch);
+            let t0 = Instant::now();
+            let r = s.run_with_scratch(&w, &scale_cluster, 3, &RunOptions::default(), &mut scratch);
+            (t0.elapsed().as_secs_f64().max(1e-9), r)
+        };
+        let (wi, ri) = time_one(&incr);
+        let (we, re) = time_one(&eager);
+        assert_eq!(
+            ri.t_total.to_bits(),
+            re.t_total.to_bits(),
+            "incremental ordered queue diverged from the eager-sort oracle"
+        );
+        assert_eq!(ri.events, re.events, "ordered event counts diverged");
+        let speedup = we / wi;
+        println!(
+            "ordered queue @ n={speedup_n}: eager sort {we:.3}s vs incremental {wi:.3}s \
+             = {speedup:.1}x speedup (bit-identical: yes)"
+        );
+        assert!(
+            speedup >= 5.0,
+            "incremental ordered queue speedup {speedup:.2}x below the 5x floor at n={speedup_n}"
+        );
+        (speedup, we, wi)
+    };
+
+    // Flat-allocation assert at the largest n: a warm ordered run's
+    // allocation count is a small per-run constant, independent of n.
+    let (scale_allocs_small, scale_allocs_big) = {
+        let small = scale_array_workload(scale_ns[0]);
+        let big = scale_array_workload(*scale_ns.last().expect("non-empty scale_ns"));
+        let sched = OrderedSim::new(
+            make_scheduler(SchedulerChoice::IdealFifo),
+            Order::Priority,
+            "IdealFIFO+prio",
+        );
+        let mut scratch = SimScratch::new();
+        // Warm on the big shape so every buffer reaches its max size.
+        sched.run_with_scratch(&big, &scale_cluster, 11, &RunOptions::default(), &mut scratch);
+        COUNTING.store(true, Ordering::Relaxed);
+        let before_small = allocs();
+        sched.run_with_scratch(&small, &scale_cluster, 12, &RunOptions::default(), &mut scratch);
+        let small_allocs = allocs() - before_small;
+        let before_big = allocs();
+        sched.run_with_scratch(&big, &scale_cluster, 13, &RunOptions::default(), &mut scratch);
+        let big_allocs = allocs() - before_big;
+        COUNTING.store(false, Ordering::Relaxed);
+        assert!(
+            small_allocs < 512 && big_allocs < 512,
+            "warm scale run allocates per event: small={small_allocs} big={big_allocs}"
+        );
+        assert!(
+            big_allocs <= small_allocs + 64 && small_allocs <= big_allocs + 64,
+            "warm scale allocations grow with n: small={small_allocs} big={big_allocs}"
+        );
+        println!(
+            "scale flat-alloc: warm ordered runs allocate small={small_allocs} \
+             big={big_allocs} (n={} vs n={})",
+            scale_ns[0],
+            scale_ns.last().expect("non-empty")
+        );
+        (small_allocs, big_allocs)
+    };
+
     // ---- 3. Realtime dispatch rate (zero-work tasks).
     let coord = RealtimeCoordinator::new(RealtimeParams {
         workers: 2,
@@ -400,6 +550,24 @@ fn main() {
         .iter()
         .map(|(name, rate)| format!("    {{\"name\": \"{name}\", \"mevents_per_s\": {rate:.4}}}"))
         .collect();
+    let scale_rows_json: Vec<String> = scale_cells
+        .iter()
+        .map(|(name, n, wall, events)| {
+            format!(
+                "      {{\"scheduler\": \"{name}\", \"n\": {n}, \"wall_s\": {wall:.5}, \
+                 \"events\": {events}, \"mevents_per_s\": {:.4}}}",
+                *events as f64 / wall / 1e6
+            )
+        })
+        .collect();
+    let scale_exp_json: Vec<String> = scale_exponents
+        .iter()
+        .map(|(name, alpha, r2)| {
+            format!(
+                "      {{\"scheduler\": \"{name}\", \"alpha\": {alpha:.4}, \"r2\": {r2:.4}}}"
+            )
+        })
+        .collect();
     let json = format!(
         "{{\n\
          \x20 \"bench\": \"perf_engine\",\n\
@@ -411,6 +579,18 @@ fn main() {
          \x20 \"preempt_evictions_per_s\": {preempt_evictions_per_s:.1},\n\
          \x20 \"preempt_warm_allocs_per_run\": {preempt_allocs_per_run},\n\
          \x20 \"sims\": [\n{sims}\n  ],\n\
+         \x20 \"scale\": {{\n\
+         \x20   \"procs\": {scale_procs},\n\
+         \x20   \"scale_mevents_per_s\": [\n{scale_rows}\n    ],\n\
+         \x20   \"exponents\": [\n{scale_exps}\n    ],\n\
+         \x20   \"ordered_speedup_n\": {speedup_n},\n\
+         \x20   \"ordered_eager_wall_s\": {oew:.5},\n\
+         \x20   \"ordered_incremental_wall_s\": {oiw:.5},\n\
+         \x20   \"ordered_speedup\": {osp:.3},\n\
+         \x20   \"flat_allocs_small\": {sas},\n\
+         \x20   \"flat_allocs_big\": {sab},\n\
+         \x20   \"bit_identical\": true\n\
+         \x20 }},\n\
          \x20 \"realtime_dispatch_per_s\": {dispatch_rate:.1},\n\
          \x20 \"powerlaw_fit_ms_per_call\": {fit_ms},\n\
          \x20 \"sweep\": {{\n\
@@ -430,6 +610,13 @@ fn main() {
          \x20 }}\n\
          }}\n",
         sims = sims_json.join(",\n"),
+        scale_rows = scale_rows_json.join(",\n"),
+        scale_exps = scale_exp_json.join(",\n"),
+        oew = ordered_eager_wall,
+        oiw = ordered_incr_wall,
+        osp = ordered_speedup,
+        sas = scale_allocs_small,
+        sab = scale_allocs_big,
         fit_ms = if fit_ms_per_call.is_finite() {
             format!("{fit_ms_per_call:.4}")
         } else {

@@ -3,6 +3,44 @@
 //! Tracks free/busy core slots and per-node memory, and enforces the key
 //! invariant the property tests lean on: a slot is never double-allocated
 //! and memory is never oversubscribed.
+//!
+//! # The indexed free structure
+//!
+//! The original pool kept one global free-slot stack and served a
+//! memory-constrained allocation with an O(P) `rposition` scan plus an
+//! O(P) `Vec::remove` memmove — quadratic over a run once memory
+//! pressure makes the top of the stack unusable. The pool is now
+//! indexed, while reproducing the legacy pop choice **bit-identically**:
+//!
+//! * every freed slot gets a globally unique, monotonically increasing
+//!   **free sequence number**; the legacy "rposition over a LIFO stack"
+//!   choice is exactly *the fitting free slot with the highest seq*;
+//! * a **lazy global LIFO** (`free_lifo`) of `(slot, seq)` entries
+//!   serves the common case in O(1): the top live entry is the max-seq
+//!   free slot overall, so whenever its node has enough memory (always,
+//!   for `mem_mb == 0` or an unconstrained cluster) it is the answer.
+//!   Entries invalidated by a slow-path allocation are left in place and
+//!   skipped when they surface — each entry is pushed and popped at most
+//!   once, so maintenance stays amortized O(1);
+//! * **per-node LIFO free lists** (`node_free`) hold each node's free
+//!   slots in seq order (top = that node's max seq), so the slow path
+//!   only has to choose among *nodes*;
+//! * a **tournament (segment) tree over nodes** answers the slow-path
+//!   query "which node with `mem_free >= m` holds the highest-seq free
+//!   slot?" by storing, per range, the max available memory among
+//!   non-empty nodes and the max top-of-list seq. The tree is maintained
+//!   *lazily*: fast-path allocations and releases only mark the touched
+//!   node dirty (O(1)); dirty leaves are flushed right before a
+//!   slow-path query, so workloads that never hit memory pressure never
+//!   pay for the tree at all.
+//!
+//! Equivalence argument (pinned by `tests/pool_equivalence.rs` against a
+//! verbatim copy of the legacy implementation): within a node the top of
+//! the free list has that node's max seq, so the global max-seq fitting
+//! slot is always some node's list top; the fast path returns it when
+//! the overall max-seq slot fits, and the tree query returns it
+//! otherwise. Releases push a fresh max seq exactly like the legacy
+//! stack push.
 
 use super::nodes::{ClusterSpec, NodeId, NodeState};
 
@@ -14,9 +52,6 @@ pub type SlotId = u32;
 pub struct SlotPool {
     /// slot -> node
     node_of: Vec<NodeId>,
-    /// free-slot stack (LIFO keeps placement cache-friendly and matches
-    /// the "pack onto recently freed resources" behaviour of cons_res)
-    free: Vec<SlotId>,
     /// busy flags, by slot
     busy: Vec<bool>,
     /// per-node free memory (MB)
@@ -24,6 +59,30 @@ pub struct SlotPool {
     /// per-node total memory (MB)
     mem_total: Vec<i64>,
     busy_count: usize,
+    /// Lazy global LIFO of `(slot, seq)`; an entry is live iff the slot
+    /// is free and `slot_seq` still matches. LIFO keeps placement
+    /// cache-friendly and matches cons_res's "pack onto recently freed
+    /// resources" behaviour, exactly as the legacy stack did.
+    free_lifo: Vec<(SlotId, u64)>,
+    /// Current free-sequence number per slot (stale while busy).
+    slot_seq: Vec<u64>,
+    /// Monotone counter behind `slot_seq`.
+    next_seq: u64,
+    /// Live free-slot count (the lazy stack may hold dead entries).
+    free_n: usize,
+    /// Per-node free lists, bottom-to-top in seq order.
+    node_free: Vec<Vec<SlotId>>,
+    /// First leaf index of the tournament tree (tree is 1-based,
+    /// `leaf_base + node` is node's leaf).
+    leaf_base: usize,
+    /// Per-range max `mem_free` among nodes with a non-empty free list
+    /// (`i64::MIN` when the range has none) — the eligibility prune.
+    tree_avail: Vec<i64>,
+    /// Per-range max top-of-list seq among non-empty nodes (0 if none).
+    tree_seq: Vec<u64>,
+    /// Nodes whose leaf is out of date (flushed before tree queries).
+    dirty: Vec<u32>,
+    dirty_flag: Vec<bool>,
 }
 
 impl SlotPool {
@@ -39,42 +98,91 @@ impl SlotPool {
     pub fn empty() -> Self {
         Self {
             node_of: Vec::new(),
-            free: Vec::new(),
             busy: Vec::new(),
             mem_free: Vec::new(),
             mem_total: Vec::new(),
             busy_count: 0,
+            free_lifo: Vec::new(),
+            slot_seq: Vec::new(),
+            next_seq: 0,
+            free_n: 0,
+            node_free: Vec::new(),
+            leaf_base: 0,
+            tree_avail: Vec::new(),
+            tree_seq: Vec::new(),
+            dirty: Vec::new(),
+            dirty_flag: Vec::new(),
         }
     }
 
     /// Rebuild the pool over `spec` in place, reusing every backing
-    /// allocation (the free-list stack, busy flags and memory tables).
-    /// The result is bit-identical to [`SlotPool::new`] — same slot ids,
-    /// same free-stack pop order — so simulations that reuse a pool
-    /// across trials stay deterministic.
+    /// allocation (the lazy stack, per-node lists, busy flags, memory
+    /// tables and the tree). The result is bit-identical to
+    /// [`SlotPool::new`] — same slot ids, same pop order — so
+    /// simulations that reuse a pool across trials stay deterministic.
     pub fn reinit(&mut self, spec: &ClusterSpec) {
         self.node_of.clear();
-        self.free.clear();
         self.busy.clear();
         self.mem_free.clear();
         self.mem_total.clear();
         self.busy_count = 0;
+        self.free_lifo.clear();
+        self.slot_seq.clear();
+        self.next_seq = 0;
+        self.dirty.clear();
+        let n_nodes = spec.nodes.len();
+        // Keep (never shrink) the outer per-node vec so inner list
+        // capacity survives trials; only the first `n_nodes` entries are
+        // ever indexed.
+        if self.node_free.len() < n_nodes {
+            self.node_free.resize_with(n_nodes, Vec::new);
+        }
+        for list in &mut self.node_free {
+            list.clear();
+        }
         for node in &spec.nodes {
             if node.state != NodeState::Up {
                 continue;
             }
             for _ in 0..node.cores {
-                let id = self.node_of.len() as SlotId;
                 self.node_of.push(node.id);
-                self.free.push(id);
             }
         }
-        // Pop order: slot 0 first (free is a stack).
-        self.free.reverse();
-        self.busy.resize(self.node_of.len(), false);
+        let cap = self.node_of.len();
+        self.busy.resize(cap, false);
+        self.slot_seq.resize(cap, 0);
         self.mem_total
             .extend(spec.nodes.iter().map(|n| n.mem_mb as i64));
         self.mem_free.extend_from_slice(&self.mem_total);
+        // Legacy pop order: slot 0 first. Descending-id pushes give slot
+        // 0 the highest seq (top of the LIFO) and leave each node's list
+        // topped by its lowest slot id.
+        for id in (0..cap as SlotId).rev() {
+            self.next_seq += 1;
+            self.slot_seq[id as usize] = self.next_seq;
+            self.free_lifo.push((id, self.next_seq));
+            self.node_free[self.node_of[id as usize] as usize].push(id);
+        }
+        self.free_n = cap;
+        // Tree: full rebuild from the leaves.
+        let m = n_nodes.next_power_of_two().max(1);
+        self.leaf_base = m;
+        self.tree_avail.clear();
+        self.tree_avail.resize(2 * m, i64::MIN);
+        self.tree_seq.clear();
+        self.tree_seq.resize(2 * m, 0);
+        for n in 0..n_nodes {
+            if let Some(&top) = self.node_free[n].last() {
+                self.tree_avail[m + n] = self.mem_free[n];
+                self.tree_seq[m + n] = self.slot_seq[top as usize];
+            }
+        }
+        for t in (1..m).rev() {
+            self.tree_avail[t] = self.tree_avail[2 * t].max(self.tree_avail[2 * t + 1]);
+            self.tree_seq[t] = self.tree_seq[2 * t].max(self.tree_seq[2 * t + 1]);
+        }
+        self.dirty_flag.clear();
+        self.dirty_flag.resize(n_nodes, false);
     }
 
     /// Total slot count.
@@ -84,7 +192,7 @@ impl SlotPool {
 
     /// Currently free slot count.
     pub fn free_count(&self) -> usize {
-        self.free.len()
+        self.free_n
     }
 
     /// Currently busy slot count.
@@ -97,26 +205,130 @@ impl SlotPool {
         self.node_of[slot as usize]
     }
 
-    /// Allocate one slot requiring `mem_mb` on its node. Returns `None`
-    /// if no slot satisfies the request.
-    pub fn alloc(&mut self, mem_mb: i64) -> Option<SlotId> {
-        // Fast path: top of stack has enough memory (homogeneous common
-        // case). Otherwise scan the free stack for a fitting node.
-        let pos = self
-            .free
-            .iter()
-            .rposition(|&s| self.mem_free[self.node_of[s as usize] as usize] >= mem_mb)?;
-        let slot = self.free.remove(pos);
-        let node = self.node_of[slot as usize] as usize;
+    #[inline]
+    fn mark_dirty(&mut self, node: usize) {
+        if !self.dirty_flag[node] {
+            self.dirty_flag[node] = true;
+            self.dirty.push(node as u32);
+        }
+    }
+
+    /// Bring dirty leaves (and their ancestor ranges) up to date.
+    /// Amortized against the fast-path operations that marked them.
+    fn flush_dirty(&mut self) {
+        while let Some(node) = self.dirty.pop() {
+            let n = node as usize;
+            self.dirty_flag[n] = false;
+            let mut t = self.leaf_base + n;
+            let (avail, seq) = match self.node_free[n].last() {
+                Some(&top) => (self.mem_free[n], self.slot_seq[top as usize]),
+                None => (i64::MIN, 0),
+            };
+            if self.tree_avail[t] == avail && self.tree_seq[t] == seq {
+                continue;
+            }
+            self.tree_avail[t] = avail;
+            self.tree_seq[t] = seq;
+            t /= 2;
+            while t >= 1 {
+                let (l, r) = (2 * t, 2 * t + 1);
+                let na = self.tree_avail[l].max(self.tree_avail[r]);
+                let ns = self.tree_seq[l].max(self.tree_seq[r]);
+                if self.tree_avail[t] == na && self.tree_seq[t] == ns {
+                    break; // ancestors already consistent
+                }
+                self.tree_avail[t] = na;
+                self.tree_seq[t] = ns;
+                t /= 2;
+            }
+        }
+    }
+
+    /// Max-seq node whose free memory covers `mem`, over tree range `t`.
+    /// Descends into the higher-seq child first and prunes ranges with
+    /// no eligible node (`tree_avail < mem`); a hit that equals its
+    /// range's overall max seq is globally optimal, which short-circuits
+    /// the sibling visit on the common (memory-rich) path.
+    fn query_best(&self, t: usize, mem: i64) -> Option<(u64, usize)> {
+        if self.tree_avail[t] < mem {
+            return None;
+        }
+        if t >= self.leaf_base {
+            // An eligible leaf: non-empty (avail > MIN) and fitting.
+            return Some((self.tree_seq[t], t - self.leaf_base));
+        }
+        let (l, r) = (2 * t, 2 * t + 1);
+        let (first, second) = if self.tree_seq[l] >= self.tree_seq[r] {
+            (l, r)
+        } else {
+            (r, l)
+        };
+        match self.query_best(first, mem) {
+            Some(hit) if hit.0 == self.tree_seq[first] => Some(hit),
+            best => {
+                let other = self.query_best(second, mem);
+                match (best, other) {
+                    (Some(a), Some(b)) => Some(if a.0 >= b.0 { a } else { b }),
+                    (a, b) => a.or(b),
+                }
+            }
+        }
+    }
+
+    /// Shared allocation epilogue once a slot has been chosen and popped
+    /// from its node list.
+    fn take(&mut self, slot: SlotId, node: usize, mem_mb: i64) -> SlotId {
         self.mem_free[node] -= mem_mb;
         debug_assert!(self.mem_free[node] >= 0);
         debug_assert!(!self.busy[slot as usize], "double allocation of slot {slot}");
         self.busy[slot as usize] = true;
         self.busy_count += 1;
-        Some(slot)
+        self.free_n -= 1;
+        self.mark_dirty(node);
+        slot
     }
 
-    /// Release a slot and its memory.
+    /// Allocate one slot requiring `mem_mb` on its node. Returns `None`
+    /// if no slot satisfies the request. The chosen slot is exactly the
+    /// one the legacy stack scan returned: the most recently freed slot
+    /// whose node has enough memory.
+    pub fn alloc(&mut self, mem_mb: i64) -> Option<SlotId> {
+        if self.free_n == 0 {
+            return None;
+        }
+        // Skim dead entries (slot re-allocated via the slow path, or
+        // re-freed under a newer seq). Each entry dies at most once.
+        while let Some(&(s, q)) = self.free_lifo.last() {
+            if self.busy[s as usize] || self.slot_seq[s as usize] != q {
+                self.free_lifo.pop();
+            } else {
+                break;
+            }
+        }
+        if let Some(&(top, _)) = self.free_lifo.last() {
+            let node = self.node_of[top as usize] as usize;
+            if self.mem_free[node] >= mem_mb {
+                // Fast path: the overall most recently freed slot fits
+                // (always, for mem_mb == 0 on a homogeneous cluster) —
+                // a plain O(1) stack pop, tree untouched.
+                self.free_lifo.pop();
+                let popped = self.node_free[node].pop();
+                debug_assert_eq!(popped, Some(top), "node free-list desynced");
+                return Some(self.take(top, node, mem_mb));
+            }
+        }
+        // Slow path (memory pressure): ask the tree for the node whose
+        // top free slot is the max-seq fitting choice.
+        self.flush_dirty();
+        let (_, node) = self.query_best(1, mem_mb)?;
+        let slot = self.node_free[node]
+            .pop()
+            .expect("tree eligibility implies a non-empty node list");
+        Some(self.take(slot, node, mem_mb))
+    }
+
+    /// Release a slot and its memory. The slot takes a fresh (maximal)
+    /// free sequence number — the legacy push-to-top-of-stack.
     pub fn release(&mut self, slot: SlotId, mem_mb: i64) {
         let idx = slot as usize;
         assert!(self.busy[idx], "release of free slot {slot}");
@@ -128,24 +340,60 @@ impl SlotPool {
             self.mem_free[node] <= self.mem_total[node],
             "memory over-release on node {node}"
         );
-        self.free.push(slot);
+        self.next_seq += 1;
+        self.slot_seq[idx] = self.next_seq;
+        self.free_lifo.push((slot, self.next_seq));
+        self.node_free[node].push(slot);
+        self.free_n += 1;
+        self.mark_dirty(node);
     }
 
     /// Invariant check used by property tests: busy+free counts conserve
-    /// capacity and no slot is both busy and free.
+    /// capacity, no slot is both busy and free, per-node lists are
+    /// seq-ordered and consistent with the lazy stack.
     pub fn check_invariants(&self) -> Result<(), String> {
-        if self.free.len() + self.busy_count != self.capacity() {
+        if self.free_n + self.busy_count != self.capacity() {
             return Err(format!(
                 "slot conservation violated: free={} busy={} cap={}",
-                self.free.len(),
+                self.free_n,
                 self.busy_count,
                 self.capacity()
             ));
         }
-        for &s in &self.free {
-            if self.busy[s as usize] {
-                return Err(format!("slot {s} both busy and free"));
+        let mut listed = 0usize;
+        for (node, list) in self.node_free.iter().enumerate() {
+            let mut last_seq = 0u64;
+            for &s in list {
+                if self.busy[s as usize] {
+                    return Err(format!("slot {s} both busy and free"));
+                }
+                if self.node_of[s as usize] as usize != node {
+                    return Err(format!("slot {s} listed under wrong node {node}"));
+                }
+                let seq = self.slot_seq[s as usize];
+                if seq <= last_seq {
+                    return Err(format!("node {node} free list out of seq order"));
+                }
+                last_seq = seq;
+                listed += 1;
             }
+        }
+        if listed != self.free_n {
+            return Err(format!(
+                "node lists hold {listed} slots but free count is {}",
+                self.free_n
+            ));
+        }
+        let live = self
+            .free_lifo
+            .iter()
+            .filter(|&&(s, q)| !self.busy[s as usize] && self.slot_seq[s as usize] == q)
+            .count();
+        if live != self.free_n {
+            return Err(format!(
+                "lazy stack holds {live} live entries but free count is {}",
+                self.free_n
+            ));
         }
         for (node, (&f, &t)) in self.mem_free.iter().zip(&self.mem_total).enumerate() {
             if f < 0 || f > t {
@@ -185,11 +433,8 @@ mod tests {
         }
         assert_eq!(slots.len(), 16);
         assert!(p.alloc(0).is_none());
-        // All distinct
-        let mut sorted = slots.clone();
-        sorted.sort_unstable();
-        sorted.dedup();
-        assert_eq!(sorted.len(), 16);
+        // All distinct, popped in ascending-id (legacy stack) order.
+        assert_eq!(slots, (0..16).collect::<Vec<SlotId>>());
     }
 
     #[test]
@@ -201,6 +446,34 @@ mod tests {
             got += 1;
         }
         assert_eq!(got, 8); // 2 per node × 4 nodes
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn mem_pressure_pops_most_recent_fitting_slot() {
+        // 2 nodes × 2 cores, 1000 MB each. Drain node 0's memory, then a
+        // constrained alloc must take node 1's most recently freed slot
+        // even though node 0's slots top the stack order.
+        let sp = ClusterSpec::homogeneous(2, 2, 1000, 2);
+        let mut p = SlotPool::new(&sp);
+        let a = p.alloc(900).unwrap(); // slot 0 (node 0)
+        assert_eq!(a, 0);
+        let b = p.alloc(900).unwrap(); // node 0 full -> slot 2 (node 1)
+        assert_eq!(b, 2);
+        // Free both; stack top is now slot 2 (freed last).
+        p.release(a, 900);
+        p.release(b, 900);
+        // A big request fits either node; the legacy choice is the most
+        // recently freed slot: slot 2.
+        assert_eq!(p.alloc(900), Some(2));
+        // Node 1 is now exhausted for big requests; next goes to node 0
+        // via the slow path, picking its most recent free slot (0).
+        assert_eq!(p.alloc(900), Some(0));
+        // Nothing fits any more at 900 MB, but 0-MB allocs still drain
+        // the remaining slots in stack order.
+        assert_eq!(p.alloc(900), None);
+        assert_eq!(p.alloc(0), Some(1));
+        assert_eq!(p.alloc(0), Some(3));
         p.check_invariants().unwrap();
     }
 
@@ -245,6 +518,22 @@ mod tests {
     }
 
     #[test]
+    fn down_node_never_chosen_by_the_tree() {
+        // The down node keeps memory-table entries but owns no slots;
+        // constrained allocs must never select it.
+        let mut sp = ClusterSpec::homogeneous(3, 2, 1000, 3);
+        sp.set_state(1, NodeState::Down);
+        let mut p = SlotPool::new(&sp);
+        let mut got = Vec::new();
+        while let Some(s) = p.alloc(400) {
+            got.push(p.node_of(s));
+        }
+        assert_eq!(got.len(), 4); // 2 slots × 2 up nodes
+        assert!(got.iter().all(|&n| n != 1));
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
     fn prop_random_alloc_release_conserves() {
         check(
             |rng| {
@@ -262,6 +551,50 @@ mod tests {
                         }
                     } else if let Some(s) = held.pop() {
                         p.release(s, 100);
+                    }
+                    p.check_invariants()?;
+                    ensure(
+                        p.busy_count() == held.len(),
+                        format!("busy {} != held {}", p.busy_count(), held.len()),
+                    )?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_random_mem_pressure_conserves() {
+        // Heavier differential-style property: random mixed-size allocs
+        // with random-order releases keep every invariant while the lazy
+        // stack accumulates and skims dead entries.
+        check(
+            |rng| {
+                let ops: Vec<(bool, u8, u8)> = (0..300)
+                    .map(|_| {
+                        (
+                            rng.chance(0.55),
+                            rng.below(4) as u8,
+                            rng.below(8) as u8,
+                        )
+                    })
+                    .collect();
+                ops
+            },
+            |ops| {
+                let mems = [0i64, 100, 450, 900];
+                let mut p = SlotPool::new(&spec());
+                let mut held: Vec<(SlotId, i64)> = Vec::new();
+                for &(is_alloc, mem_i, pick) in ops {
+                    if is_alloc {
+                        let m = mems[mem_i as usize % mems.len()];
+                        if let Some(s) = p.alloc(m) {
+                            held.push((s, m));
+                        }
+                    } else if !held.is_empty() {
+                        let i = pick as usize % held.len();
+                        let (s, m) = held.swap_remove(i);
+                        p.release(s, m);
                     }
                     p.check_invariants()?;
                     ensure(

@@ -114,6 +114,12 @@ pub struct ExperimentConfig {
     /// Observation window (virtual s) of the `service` experiment's
     /// horizon-bounded runs.
     pub service_horizon: f64,
+    /// Total-task-count sweep of the `scale` experiment (the 10⁴–10⁵
+    /// short-job regime of Byun et al.).
+    pub scale_ns: Vec<u32>,
+    /// Cluster core counts of the `scale` experiment; each must be a
+    /// positive multiple of `harness::SCALE_CORES_PER_NODE` (25).
+    pub scale_procs: Vec<u32>,
 }
 
 impl Default for ExperimentConfig {
@@ -135,6 +141,8 @@ impl Default for ExperimentConfig {
             preempt_hi_frac: 0.25,
             service_fracs: vec![0.25, 0.5],
             service_horizon: 240.0,
+            scale_ns: vec![1_000, 3_000, 10_000, 30_000, 100_000],
+            scale_procs: vec![1_000, 10_000],
         }
     }
 }
@@ -198,6 +206,28 @@ impl ExperimentConfig {
                 }
                 "experiment.service_horizon" => {
                     cfg.service_horizon = value.as_f64().ok_or_else(|| bad(key))?
+                }
+                "experiment.scale_ns" => {
+                    let arr = match value {
+                        TomlValue::Array(xs) => xs,
+                        _ => return Err(bad(key)),
+                    };
+                    // Range-checked (not `as`-cast) so a negative value
+                    // is rejected instead of wrapping to a huge count.
+                    cfg.scale_ns = arr
+                        .iter()
+                        .map(|v| get_u32(v, key))
+                        .collect::<Result<_, _>>()?;
+                }
+                "experiment.scale_procs" => {
+                    let arr = match value {
+                        TomlValue::Array(xs) => xs,
+                        _ => return Err(bad(key)),
+                    };
+                    cfg.scale_procs = arr
+                        .iter()
+                        .map(|v| get_u32(v, key))
+                        .collect::<Result<_, _>>()?;
                 }
                 "experiment.out_dir" => {
                     cfg.out_dir = value.as_str().ok_or_else(|| bad(key))?.to_string()
@@ -292,6 +322,17 @@ impl ExperimentConfig {
         }
         if !(self.service_horizon.is_finite() && self.service_horizon > 0.0) {
             return Err("service_horizon must be finite and > 0".into());
+        }
+        if self.scale_ns.is_empty() || self.scale_ns.iter().any(|&n| n == 0) {
+            return Err("scale_ns must be non-empty, positive".into());
+        }
+        let cpn = crate::harness::SCALE_CORES_PER_NODE;
+        if self.scale_procs.is_empty()
+            || self.scale_procs.iter().any(|&p| p == 0 || p % cpn != 0)
+        {
+            return Err(format!(
+                "scale_procs must be non-empty, positive multiples of {cpn}"
+            ));
         }
         Ok(())
     }
@@ -411,6 +452,22 @@ n_sweep = [4, 240]
         assert!(ExperimentConfig::from_toml("[experiment]\nservice_fracs = [1.5]").is_err());
         assert!(ExperimentConfig::from_toml("[experiment]\nservice_fracs = []").is_err());
         assert!(ExperimentConfig::from_toml("[experiment]\nservice_horizon = 0").is_err());
+    }
+
+    #[test]
+    fn scale_keys_parse_and_validate() {
+        let c = ExperimentConfig::from_toml(
+            "[experiment]\nscale_ns = [500, 2000]\nscale_procs = [100]",
+        )
+        .unwrap();
+        assert_eq!(c.scale_ns, vec![500, 2000]);
+        assert_eq!(c.scale_procs, vec![100]);
+        assert!(ExperimentConfig::from_toml("[experiment]\nscale_ns = []").is_err());
+        assert!(ExperimentConfig::from_toml("[experiment]\nscale_procs = [0]").is_err());
+        // Negative values must be rejected, not wrapped to huge u32s.
+        assert!(ExperimentConfig::from_toml("[experiment]\nscale_ns = [-1]").is_err());
+        // Non-multiple of the scale cluster's cores-per-node.
+        assert!(ExperimentConfig::from_toml("[experiment]\nscale_procs = [1001]").is_err());
     }
 
     #[test]

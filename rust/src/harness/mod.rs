@@ -13,6 +13,7 @@
 //! | `scenarios`| workload-space sweep: array / multicore / DAG / gang / arrivals × all schedulers |
 //! | `preempt`  | preemption sweep: checkpoint cost × ordering × all schedulers, fairness vs ΔT |
 //! | `service`  | service-footprint sweep: resident services × Poisson short tasks × all schedulers, windowed utilization |
+//! | `scale`    | simulator wall-time scaling at 10⁴–10⁵ tasks: n × P × all schedulers + ordered/preemptive rows, fitted log-log exponent |
 
 //! All experiment runners route their `(scheduler, n, trial)`
 //! cells through the deterministic parallel executor in [`parallel`];
@@ -24,6 +25,7 @@ mod fig5;
 mod fig6;
 mod fig7;
 mod parallel;
+mod scale;
 mod scenarios;
 mod sweep;
 mod table10;
@@ -34,6 +36,10 @@ pub use fig5::{fig5, fig5_from, Fig5Report};
 pub use fig6::{fig6, Fig6Report};
 pub use fig7::{fig7, Fig7Report};
 pub use parallel::{default_jobs, run_cells};
+pub use scale::{
+    scale, scale_array_workload, scale_cluster, scale_preempt_workload, ScaleCell, ScaleFit,
+    ScaleReport, SCALE_ALPHA_CEILING, SCALE_CORES_PER_NODE, SCALE_GATE_MIN_N, SCALE_PREEMPT_BG,
+};
 pub use scenarios::{
     preempt, scenarios, service, PreemptCell, PreemptReport, ScenarioCell, ScenariosReport,
     ServiceCell, ServiceReport, GANG_SIZE,

@@ -1,0 +1,603 @@
+//! `scale` experiment: simulator wall-clock scaling at 10⁴–10⁵ tasks.
+//!
+//! The paper's experiments stop at thousands of tasks, but the regime
+//! Byun et al. ("Node-Based Job Scheduling for Large Scale Simulations
+//! of Short Running Jobs") identify as decisive is 10⁴–10⁵ short jobs —
+//! where the *simulator itself* used to become the bottleneck: the
+//! legacy `Ordered`/`Preemptive` combinators re-sorted the whole
+//! pending queue per event, `take_task`/`try_dispatch` scanned it per
+//! dispatch, and memory-constrained `SlotPool` allocations scanned and
+//! memmoved the free stack, all quadratic.
+//!
+//! This runner measures the *wall time* of simulating n ∈
+//! `cfg.scale_ns` tasks on P ∈ `cfg.scale_procs` cores for every
+//! scheduler family plus the ordered/preemptive wrapper rows, fits the
+//! log-log wall-time-vs-n exponent with [`crate::util::fit`], and (in
+//! [`ScaleReport::check_shape`]) gates the ordered/preemptive rows at
+//! exponent ≤ 1.25 while asserting the incremental ordered queue is
+//! bit-identical to the legacy eager-sort oracle.
+//!
+//! Methodology notes:
+//!
+//! * each cell runs twice through one warm scratch — the first run
+//!   sizes every buffer, the second is timed — so the measurement sees
+//!   the steady-state (zero-allocation) path;
+//! * simulated outputs (events, t_total, preemptions) are bit-identical
+//!   for every `--jobs` value as usual; wall times are measured per
+//!   cell and are machine-dependent, so they are excluded from the
+//!   determinism contract. For clean exponents run with `--jobs 1`
+//!   (the CI perf-smoke step does);
+//! * there is no prohibitive-skip pass: n here is a *total* task count
+//!   (n/P stays ≤ 100 tasks per processor), so virtual makespans stay
+//!   small even for the slow control planes.
+
+use super::parallel::run_cells;
+use crate::config::{ExperimentConfig, SchedulerChoice};
+use crate::sched::combinators::{self, Order, OrderedSim};
+use crate::sched::{make_scheduler, RunOptions, Scheduler};
+use crate::util::fit::fit_power_law;
+use crate::util::table::{fnum, Table};
+use crate::workload::{TaskSpec, Workload};
+use std::time::Instant;
+
+/// Cores per node of the scale clusters (`scale_procs` entries must be
+/// multiples of this; 25 divides the round 1k/10k core counts).
+pub const SCALE_CORES_PER_NODE: u32 = 25;
+
+/// Preemptible background tasks of the preemptive-row workload (the
+/// victim pool; kept small so victim-selection passes stay cheap and
+/// the measured scaling is the queue machinery, not the victim sort).
+pub const SCALE_PREEMPT_BG: u32 = 64;
+
+/// Smallest max-n for which the exponent gate is meaningful: below
+/// this, cells run in microseconds and the fit is timer noise.
+pub const SCALE_GATE_MIN_N: u32 = 8000;
+
+/// Fitted log-log exponent ceiling for the ordered/preemptive rows.
+pub const SCALE_ALPHA_CEILING: f64 = 1.25;
+
+/// One measured (P, scheduler, n) cell.
+pub struct ScaleCell {
+    /// Cluster core count P.
+    pub procs: u32,
+    /// Scheduler display name.
+    pub scheduler: String,
+    /// Foreground task count n (the preemptive row adds P resident
+    /// tasks on top; see [`scale_preempt_workload`]).
+    pub n: u32,
+    /// Wall seconds of the timed (second, warm-scratch) run.
+    pub wall_s: f64,
+    /// Simulation events processed by the timed run.
+    pub events: u64,
+    /// Simulated makespan (determinism-checked).
+    pub t_total: f64,
+    /// Evictions executed (preemptive row only).
+    pub preemptions: u64,
+}
+
+impl ScaleCell {
+    /// Millions of simulation events per wall second.
+    pub fn mevents_per_s(&self) -> f64 {
+        self.events as f64 / self.wall_s.max(1e-12) / 1e6
+    }
+}
+
+/// Fitted wall-time power law of one (P, scheduler) row.
+pub struct ScaleFit {
+    /// Cluster core count P.
+    pub procs: u32,
+    /// Scheduler display name.
+    pub scheduler: String,
+    /// Log-log slope of wall seconds vs n.
+    pub alpha: f64,
+    /// R² of the fit.
+    pub r2: f64,
+    /// Whether this row is held to [`SCALE_ALPHA_CEILING`] (the
+    /// ordered/preemptive paths the tentpole de-quadratized).
+    pub gated: bool,
+}
+
+/// Full scale sweep.
+pub struct ScaleReport {
+    /// All cells, procs-major then scheduler then n.
+    pub cells: Vec<ScaleCell>,
+    /// One fit per (procs, scheduler).
+    pub fits: Vec<ScaleFit>,
+    /// The n sweep.
+    pub ns: Vec<u32>,
+    /// The P sweep.
+    pub procs: Vec<u32>,
+    /// Whether cells were timed serially (`jobs == 1`). Parallel runs
+    /// time cells under CPU contention, so the exponent gate only
+    /// applies to serial timings (the CI smoke passes `--jobs 1`).
+    pub serial_timing: bool,
+}
+
+/// The shared array workload of the plain and ordered rows: n one-core
+/// 1 s tasks, batch-submitted, with mixed priorities/users so the
+/// ordering machinery has real work (plain backends ignore both).
+pub fn scale_array_workload(n: u32) -> Workload {
+    let tasks = (0..n)
+        .map(|i| {
+            let mut t = TaskSpec::array(i, i, 1.0);
+            t.priority = (i % 8) as i32;
+            t.user = i % 4;
+            t
+        })
+        .collect();
+    Workload {
+        tasks,
+        label: format!("scale-n{n}"),
+    }
+}
+
+/// The preemptive-row workload: the cluster is saturated at t = 0 by
+/// [`SCALE_PREEMPT_BG`] preemptible background tasks plus
+/// non-preemptible fillers, and n high-priority 1 s foreground tasks
+/// arrive on a deterministic uniform schedule at half the background
+/// pool's service rate — so early arrivals must evict their way in and
+/// the rest stream through the recovered slots. Total tasks: n + P.
+pub fn scale_preempt_workload(n: u32, procs: u32) -> Workload {
+    let bg = SCALE_PREEMPT_BG.min(procs / 4).max(1);
+    let fill = procs - bg;
+    let rate = 0.5 * bg as f64; // foreground arrivals per virtual second
+    let long = n as f64 / rate + 5.0;
+    let mut tasks: Vec<TaskSpec> = Vec::with_capacity((procs + n) as usize);
+    let mut id = 0u32;
+    for _ in 0..bg {
+        let mut t = TaskSpec::array(id, id, long);
+        t.preemptible = true;
+        t.checkpoint_cost = 0.05;
+        tasks.push(t);
+        id += 1;
+    }
+    for _ in 0..fill {
+        tasks.push(TaskSpec::array(id, id, long));
+        id += 1;
+    }
+    for k in 0..n {
+        let mut t = TaskSpec::array(id, id, 1.0);
+        t.priority = 10;
+        t.submit_at = 0.05 + k as f64 / rate;
+        tasks.push(t);
+        id += 1;
+    }
+    Workload {
+        tasks,
+        label: format!("scale-pre-n{n}"),
+    }
+}
+
+/// Whether a scheduler row uses the preemptive workload.
+fn is_preemptive_row(name: &str) -> bool {
+    name.ends_with("+preempt")
+}
+
+/// Whether a row's fitted exponent is gated (the ordered/preemptive
+/// combinator paths).
+fn is_gated_row(name: &str) -> bool {
+    name.contains("+prio")
+}
+
+/// The scale scheduler set: every simulated family at calibrated
+/// (unscaled) costs, plus the ordered and preemptive wrapper rows over
+/// the zero-overhead reference (isolating the queue machinery).
+fn scale_schedulers() -> Vec<Box<dyn Scheduler>> {
+    let mut v: Vec<Box<dyn Scheduler>> = SchedulerChoice::all_simulated()
+        .iter()
+        .map(|&c| make_scheduler(c))
+        .collect();
+    v.push(Box::new(OrderedSim::new(
+        make_scheduler(SchedulerChoice::IdealFifo),
+        Order::Priority,
+        "IdealFIFO+prio",
+    )));
+    v.push(combinators::make_preemptive(
+        SchedulerChoice::IdealFifo,
+        1,
+        Order::Priority,
+    ));
+    v
+}
+
+/// The homogeneous cluster the scale experiment (and `perf_engine`'s
+/// bench-side mirror) runs on: `procs / SCALE_CORES_PER_NODE` nodes of
+/// `SCALE_CORES_PER_NODE` cores and 64 GB each.
+pub fn scale_cluster(procs: u32) -> crate::cluster::ClusterSpec {
+    assert!(
+        procs >= SCALE_CORES_PER_NODE && procs % SCALE_CORES_PER_NODE == 0,
+        "scale_procs entries must be positive multiples of {SCALE_CORES_PER_NODE}, got {procs}"
+    );
+    crate::cluster::ClusterSpec::homogeneous(
+        procs / SCALE_CORES_PER_NODE,
+        SCALE_CORES_PER_NODE,
+        64 * 1024,
+        8,
+    )
+}
+
+/// Run the scale sweep.
+pub fn scale(cfg: &ExperimentConfig) -> ScaleReport {
+    let schedulers = scale_schedulers();
+    // One array + one preempt workload per (P, n); preempt workloads
+    // depend on P through the filler count.
+    let array_workloads: Vec<(u32, Workload)> = cfg
+        .scale_ns
+        .iter()
+        .map(|&n| (n, scale_array_workload(n)))
+        .collect();
+    let preempt_workloads: Vec<(u32, u32, Workload)> = cfg
+        .scale_procs
+        .iter()
+        .flat_map(|&p| {
+            cfg.scale_ns
+                .iter()
+                .map(move |&n| (p, n, scale_preempt_workload(n, p)))
+        })
+        .collect();
+
+    struct Cell<'a> {
+        sched: usize,
+        procs: u32,
+        n: u32,
+        seed: u64,
+        workload: &'a Workload,
+        cluster: crate::cluster::ClusterSpec,
+    }
+    let mut cells: Vec<Cell> = Vec::new();
+    for &procs in &cfg.scale_procs {
+        let cluster = scale_cluster(procs);
+        for (ki, sched) in schedulers.iter().enumerate() {
+            let preemptive = is_preemptive_row(sched.name());
+            for (ni, &n) in cfg.scale_ns.iter().enumerate() {
+                let workload = if preemptive {
+                    &preempt_workloads
+                        .iter()
+                        .find(|&&(p, wn, _)| p == procs && wn == n)
+                        .expect("preempt workload built for every (P, n)")
+                        .2
+                } else {
+                    &array_workloads[ni].1
+                };
+                cells.push(Cell {
+                    sched: ki,
+                    procs,
+                    n,
+                    seed: cfg
+                        .seed
+                        .wrapping_add((ki as u64) << 16)
+                        .wrapping_add((n as u64) << 24)
+                        .wrapping_add(procs as u64),
+                    workload,
+                    cluster: cluster.clone(),
+                });
+            }
+        }
+    }
+
+    let results = run_cells(cfg.effective_jobs(), &cells, |cell, scratch| {
+        let sched = schedulers[cell.sched].as_ref();
+        let options = RunOptions::default();
+        // Warm-up run sizes every scratch buffer for this shape…
+        sched.run_with_scratch(cell.workload, &cell.cluster, cell.seed, &options, scratch);
+        // …so the timed run measures the steady-state hot path.
+        let t0 = Instant::now();
+        let r = sched.run_with_scratch(cell.workload, &cell.cluster, cell.seed, &options, scratch);
+        let wall = t0.elapsed().as_secs_f64();
+        r.check_invariants()
+            .unwrap_or_else(|e| panic!("{} scale n={}: {e}", sched.name(), cell.n));
+        (wall, r)
+    });
+
+    let cells: Vec<ScaleCell> = cells
+        .iter()
+        .zip(results)
+        .map(|(cell, (wall_s, r))| ScaleCell {
+            procs: cell.procs,
+            scheduler: schedulers[cell.sched].name().to_string(),
+            n: cell.n,
+            wall_s,
+            events: r.events,
+            t_total: r.t_total,
+            preemptions: r.preemptions,
+        })
+        .collect();
+
+    // Per-(P, scheduler) log-log fits.
+    let mut fits: Vec<ScaleFit> = Vec::new();
+    for &procs in &cfg.scale_procs {
+        for sched in &schedulers {
+            let name = sched.name();
+            let (mut xs, mut ys) = (Vec::new(), Vec::new());
+            for c in cells
+                .iter()
+                .filter(|c| c.procs == procs && c.scheduler == name)
+            {
+                xs.push(c.n as f64);
+                // Clamp away an (unlikely) zero timer reading so the
+                // log-log fit always has usable points.
+                ys.push(c.wall_s.max(1e-9));
+            }
+            if xs.len() < 2 {
+                continue;
+            }
+            let fit = fit_power_law(&xs, &ys);
+            fits.push(ScaleFit {
+                procs,
+                scheduler: name.to_string(),
+                alpha: fit.alpha_s,
+                r2: fit.r2,
+                gated: is_gated_row(name),
+            });
+        }
+    }
+
+    ScaleReport {
+        cells,
+        fits,
+        ns: cfg.scale_ns.clone(),
+        procs: cfg.scale_procs.clone(),
+        serial_timing: cfg.effective_jobs() == 1,
+    }
+}
+
+impl ScaleReport {
+    /// Rendered summary: per-cell throughput plus per-row exponents.
+    pub fn render_table(&self) -> Table {
+        let mut t = Table::new(
+            format!(
+                "Scale — simulator wall time vs n (n up to {}, P up to {})",
+                self.ns.iter().max().copied().unwrap_or(0),
+                self.procs.iter().max().copied().unwrap_or(0),
+            ),
+            &[
+                "P",
+                "scheduler",
+                "n",
+                "events",
+                "wall (s)",
+                "Mev/s",
+                "evictions",
+            ],
+        );
+        for c in &self.cells {
+            t.row(&[
+                c.procs.to_string(),
+                c.scheduler.clone(),
+                c.n.to_string(),
+                c.events.to_string(),
+                format!("{:.4}", c.wall_s),
+                format!("{:.2}", c.mevents_per_s()),
+                c.preemptions.to_string(),
+            ]);
+        }
+        t
+    }
+
+    /// Rendered exponent table.
+    pub fn render_fits(&self) -> Table {
+        let mut t = Table::new(
+            format!(
+                "Scale — fitted log-log exponent of wall time vs n \
+                 (gated rows must stay ≤ {SCALE_ALPHA_CEILING})"
+            ),
+            &["P", "scheduler", "alpha", "R²", "gated"],
+        );
+        for f in &self.fits {
+            t.row(&[
+                f.procs.to_string(),
+                f.scheduler.clone(),
+                format!("{:.3}", f.alpha),
+                format!("{:.3}", f.r2),
+                if f.gated { "yes".into() } else { "-".into() },
+            ]);
+        }
+        t
+    }
+
+    /// CSV series (wall times are machine-dependent; the simulated
+    /// columns are `--jobs`-deterministic).
+    pub fn to_csv(&self) -> String {
+        let mut t = Table::new(
+            "",
+            &[
+                "procs",
+                "scheduler",
+                "n",
+                "events",
+                "t_total_s",
+                "wall_s",
+                "mevents_per_s",
+                "preemptions",
+            ],
+        );
+        for c in &self.cells {
+            t.row(&[
+                c.procs.to_string(),
+                c.scheduler.clone(),
+                c.n.to_string(),
+                c.events.to_string(),
+                fnum(c.t_total),
+                format!("{:.5}", c.wall_s),
+                format!("{:.3}", c.mevents_per_s()),
+                c.preemptions.to_string(),
+            ]);
+        }
+        t.to_csv()
+    }
+
+    /// Structural + performance gates:
+    ///
+    /// * every (P, scheduler, n) cell ran, with sane event counts;
+    /// * every preemptive cell actually evicted;
+    /// * the incremental ordered queue is **bit-identical** to the
+    ///   legacy eager-sort oracle (ordered and preemptive rows at the
+    ///   smallest sweep point);
+    /// * the fitted exponent of every gated (ordered/preemptive) row
+    ///   stays ≤ [`SCALE_ALPHA_CEILING`] — applied only to serially
+    ///   timed runs (`--jobs 1`; parallel cells time each other's CPU
+    ///   contention) that are large enough for the timer to out-vote
+    ///   noise (max n ≥ [`SCALE_GATE_MIN_N`]). The CI smoke step runs
+    ///   with `--jobs 1` so the gate is always live there.
+    pub fn check_shape(&self, cfg: &ExperimentConfig) -> Result<(), String> {
+        let expected = self.procs.len() * scale_schedulers().len() * self.ns.len();
+        if self.cells.len() != expected {
+            return Err(format!(
+                "{} of {expected} scale cells ran",
+                self.cells.len()
+            ));
+        }
+        for c in &self.cells {
+            if c.events < c.n as u64 {
+                return Err(format!(
+                    "{} P={} n={}: only {} events for {} tasks",
+                    c.scheduler, c.procs, c.n, c.events, c.n
+                ));
+            }
+            if !(c.t_total.is_finite() && c.t_total > 0.0) {
+                return Err(format!(
+                    "{} P={} n={}: bad makespan {}",
+                    c.scheduler, c.procs, c.n, c.t_total
+                ));
+            }
+            if is_preemptive_row(&c.scheduler) && c.preemptions == 0 {
+                return Err(format!(
+                    "{} P={} n={}: preemptive row executed no evictions",
+                    c.scheduler, c.procs, c.n
+                ));
+            }
+        }
+        self.check_eager_bit_identity(cfg)?;
+        let max_n = self.ns.iter().max().copied().unwrap_or(0);
+        if self.serial_timing && max_n >= SCALE_GATE_MIN_N {
+            for f in self.fits.iter().filter(|f| f.gated) {
+                if f.alpha.is_nan() || f.alpha > SCALE_ALPHA_CEILING {
+                    return Err(format!(
+                        "{} P={}: fitted exponent {:.3} exceeds the \
+                         {SCALE_ALPHA_CEILING} ceiling (quadratic regression?)",
+                        f.scheduler, f.procs, f.alpha
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The bit-identity assert of the CI smoke step: run the smallest
+    /// (P, n) ordered and preemptive cells through both the incremental
+    /// index and the legacy eager-sort oracle; any divergence in
+    /// makespan bits, event counts or eviction counts trips it.
+    fn check_eager_bit_identity(&self, cfg: &ExperimentConfig) -> Result<(), String> {
+        let (Some(&n), Some(&procs)) =
+            (cfg.scale_ns.iter().min(), cfg.scale_procs.iter().min())
+        else {
+            return Err("empty scale sweep".into());
+        };
+        let cluster = scale_cluster(procs);
+        let seed = cfg.seed ^ 0x5CA1E;
+        let pairs: [(Box<dyn Scheduler>, Box<dyn Scheduler>, Workload); 2] = [
+            (
+                Box::new(OrderedSim::new(
+                    make_scheduler(SchedulerChoice::IdealFifo),
+                    Order::Priority,
+                    "IdealFIFO+prio",
+                )),
+                Box::new(OrderedSim::new_eager(
+                    make_scheduler(SchedulerChoice::IdealFifo),
+                    Order::Priority,
+                    "IdealFIFO+prio",
+                )),
+                scale_array_workload(n),
+            ),
+            (
+                combinators::make_preemptive(SchedulerChoice::IdealFifo, 1, Order::Priority),
+                Box::new(combinators::PreemptiveSim::new_eager(
+                    make_scheduler(SchedulerChoice::IdealFifo),
+                    Order::Priority,
+                    "IdealFIFO+prio+preempt",
+                )),
+                scale_preempt_workload(n, procs),
+            ),
+        ];
+        for (incremental, eager, workload) in &pairs {
+            let a = incremental.run(workload, &cluster, seed, &RunOptions::default());
+            let b = eager.run(workload, &cluster, seed, &RunOptions::default());
+            if a.t_total.to_bits() != b.t_total.to_bits()
+                || a.events != b.events
+                || a.preemptions != b.preemptions
+            {
+                return Err(format!(
+                    "bit-identity tripped for {}: incremental (t={}, ev={}, pre={}) \
+                     vs eager oracle (t={}, ev={}, pre={})",
+                    incremental.name(),
+                    a.t_total,
+                    a.events,
+                    a.preemptions,
+                    b.t_total,
+                    b.events,
+                    b.preemptions,
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.scale_ns = vec![200, 800];
+        cfg.scale_procs = vec![100];
+        cfg.jobs = 1;
+        cfg
+    }
+
+    #[test]
+    fn scale_runs_and_passes_shape_checks() {
+        let cfg = tiny_cfg();
+        let rep = scale(&cfg);
+        rep.check_shape(&cfg).unwrap();
+        // 8 scheduler rows × 2 n values × 1 P value.
+        assert_eq!(rep.cells.len(), 16);
+        assert_eq!(rep.fits.len(), 8);
+        assert_eq!(rep.fits.iter().filter(|f| f.gated).count(), 2);
+        assert!(!rep.to_csv().is_empty());
+    }
+
+    #[test]
+    fn scale_simulated_outputs_deterministic_across_jobs() {
+        let mut a_cfg = tiny_cfg();
+        a_cfg.jobs = 1;
+        let mut b_cfg = tiny_cfg();
+        b_cfg.jobs = 4;
+        let a = scale(&a_cfg);
+        let b = scale(&b_cfg);
+        assert_eq!(a.cells.len(), b.cells.len());
+        for (ca, cb) in a.cells.iter().zip(&b.cells) {
+            assert_eq!(ca.scheduler, cb.scheduler);
+            assert_eq!(ca.n, cb.n);
+            assert_eq!(
+                ca.t_total.to_bits(),
+                cb.t_total.to_bits(),
+                "{} n={}",
+                ca.scheduler,
+                ca.n
+            );
+            assert_eq!(ca.events, cb.events);
+            assert_eq!(ca.preemptions, cb.preemptions);
+        }
+    }
+
+    #[test]
+    fn preempt_workload_shape() {
+        let w = scale_preempt_workload(500, 100);
+        assert_eq!(w.tasks.len(), 600);
+        let preemptible = w.tasks.iter().filter(|t| t.preemptible).count();
+        assert_eq!(preemptible, 25); // min(64, P/4)
+        assert!(w.tasks.iter().filter(|t| t.priority == 10).count() == 500);
+        w.validate().unwrap();
+    }
+}

@@ -4,7 +4,7 @@
 //! Subcommands:
 //!   features    render the paper's feature-comparison Tables 1–7
 //!   experiment  run table9 | table10 | fig4 | fig5 | fig6 | fig7 |
-//!               scenarios | preempt | service | all
+//!               scenarios | preempt | service | scale | all
 //!   serve       realtime mini-cluster (leader + worker threads, PJRT payloads)
 //!   validate    run every experiment's shape checks at reduced scale
 //!
@@ -52,7 +52,7 @@ fn usage() {
         "usage: sssched <command> [options]\n\
          commands:\n\
          \x20 features   [--table 1..7] [--csv]\n\
-         \x20 experiment <table9|table10|fig4|fig5|fig6|fig7|scenarios|preempt|service|all> \
+         \x20 experiment <table9|table10|fig4|fig5|fig6|fig7|scenarios|preempt|service|scale|all> \
          [--config f] [--quick] [--trials N] [--jobs N] [--out-dir d] [--artifacts d] [--csv]\n\
          \x20 serve      [--workers N] [--tasks N] [--task-ms MS] \
          [--payload sleep|spin|analytics] [--ts SECS] [--artifacts d]\n\
@@ -68,6 +68,10 @@ fn load_config(args: &Args) -> Result<ExperimentConfig, String> {
     if args.flag("quick") {
         cfg.scale_down = 8; // 5 nodes × 32 = 160 cores
         cfg.trials = 1;
+        // Reduced-size `scale` sweep (the CI perf-smoke shape): still
+        // large enough for a meaningful wall-time exponent fit.
+        cfg.scale_ns = vec![2_000, 8_000, 32_000];
+        cfg.scale_procs = vec![1_000];
     }
     if let Some(t) = args.opt("trials") {
         cfg.trials = t.parse().map_err(|_| "bad --trials")?;
@@ -208,6 +212,17 @@ fn cmd_experiment(args: &Args) -> i32 {
                 println!("shape checks: OK");
                 write_out(&cfg, "service.csv", &rep.to_csv());
             }
+            "scale" => {
+                let rep = harness::scale(&cfg);
+                println!("{}", rep.render_table().render());
+                println!("{}", rep.render_fits().render());
+                if let Err(e) = rep.check_shape(&cfg) {
+                    eprintln!("shape check FAILED: {e}");
+                    return 1;
+                }
+                println!("shape checks (incl. exponent gate + eager bit-identity): OK");
+                write_out(&cfg, "scale.csv", &rep.to_csv());
+            }
             other => {
                 eprintln!("unknown experiment `{other}`");
                 return 2;
@@ -226,6 +241,7 @@ fn cmd_experiment(args: &Args) -> i32 {
             "scenarios",
             "preempt",
             "service",
+            "scale",
         ] {
             let rc = run(name);
             if rc != 0 {
@@ -302,6 +318,12 @@ fn cmd_validate(args: &Args) -> i32 {
     if !args.flag("full") {
         cfg.scale_down = 8;
         cfg.trials = 1;
+        // Tiny scale sweep: exercises the machinery (and the eager
+        // bit-identity assert) without the multi-second timing cells;
+        // the wall-time exponent gate needs larger n and stays with the
+        // `experiment scale --quick` / CI perf-smoke path.
+        cfg.scale_ns = vec![500, 2_000];
+        cfg.scale_procs = vec![500];
     }
     let arts = artifacts_dir(args);
     let ml = MultilevelParams::default();
@@ -332,6 +354,7 @@ fn cmd_validate(args: &Args) -> i32 {
         "service shapes",
         harness::service(&cfg).check_shape(cfg.trials),
     );
+    check("scale shapes", harness::scale(&cfg).check_shape(&cfg));
     if failures == 0 {
         println!("all shape checks passed");
         0

@@ -19,10 +19,13 @@
 //!   [`shadow_time`] reservations), reusable by any policy that drains
 //!   through [`KernelCtx::try_dispatch`];
 //! * [`Ordered`] / [`Preemptive`] — [`SchedPolicy`] wrappers. `Ordered`
-//!   re-sorts the kernel's pending queue in place (allocation-free)
-//!   before every dispatch opportunity of the inner policy, so the
-//!   inner FIFO drain follows the discipline while still pricing every
-//!   launch with its own cost model. `Preemptive` adds priority
+//!   drives the kernel's incremental ordered ready-queue
+//!   ([`crate::sim::OrderIndex`]) so the inner FIFO drain follows the
+//!   discipline at O(log n) per queue operation (the original
+//!   implementation re-sorted the whole pending queue before every
+//!   dispatch opportunity — the quadratic hot path the `scale`
+//!   experiment measures), while still pricing every launch with the
+//!   inner policy's own cost model. `Preemptive` adds priority
 //!   preemption on top: when the best-priority queued task cannot
 //!   start, it nominates lower-priority preemptible running tasks as
 //!   victims through [`SchedPolicy::on_preempt_candidates`], and the
@@ -35,9 +38,9 @@
 
 use crate::cluster::{ClusterSpec, SlotId};
 use crate::sched::{RunOptions, RunResult, Scheduler};
-use crate::sim::{Kernel, KernelCtx, LaunchFn, SchedPolicy, SimScratch, Time};
+use crate::sim::{Kernel, KernelCtx, LaunchFn, OrderMode, SchedPolicy, SimScratch, Time};
 use crate::workload::{JobKind, TaskId, TaskSpec, Workload};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 
 /// Queue-ordering discipline applied ahead of a dispatch pass.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -136,6 +139,18 @@ pub fn shadow_time(mut free: u32, need: u32, running: &[(f64, u32, u32)]) -> (f6
 /// historical drain, verbatim, parameterized over the launch pricing —
 /// the `running`/`usage` state lives with the caller so tick-driven
 /// and event-driven policies can both reuse it.
+///
+/// Deliberately **not** converted to the incremental
+/// [`crate::sim::OrderIndex`] (unlike [`Ordered`]/[`Preemptive`]): this
+/// drain charges fairshare usage *at dispatch, mid-pass*, while the
+/// legacy (bit-pinned) semantics order the whole pass by the snapshot
+/// taken at pass *start* — a live index would re-rank later candidates
+/// within the same pass and change results; and the EASY-backfill
+/// branch inherently enumerates every queued candidate per pass anyway,
+/// so a per-pass sort is not the asymptotic bottleneck. What this PR
+/// does fix here is the other quadratic half: each
+/// [`KernelCtx::try_dispatch`] call is now an O(1) membership check
+/// instead of a full queue scan.
 #[derive(Clone, Copy, Debug)]
 pub struct OrderedDrain {
     /// Ordering applied to the pending snapshot.
@@ -207,54 +222,72 @@ impl OrderedDrain {
 }
 
 /// [`SchedPolicy`] wrapper imposing a queue-ordering discipline on any
-/// inner policy: the kernel's pending queue is re-sorted in place
-/// before every hook of the inner policy that can dispatch, so the
-/// inner FIFO drain walks it in `order`. Fairshare usage is charged at
-/// completion (`on_complete` is the only dispatch-independent signal a
-/// wrapper observes without breaking the inner policy's pricing), which
-/// keeps the wrapper allocation-free on the hot path.
+/// inner policy. Historically this re-sorted the kernel's entire
+/// pending queue in place before *every* dispatch hook — O(n log n)
+/// per event, the dominant quadratic term of ordered runs at scale. It
+/// now activates the kernel's **incremental** ordered ready-queue
+/// ([`crate::sim::OrderIndex`]): insertions are O(log n), the inner
+/// FIFO drain walks the index in `order`, and fairshare usage charges
+/// are O(1) because usage ranks whole users (no per-task re-keying, no
+/// rebuilds). Dispatch decisions are bit-identical to the eager sort —
+/// [`Ordered::new_eager`] keeps the legacy full-sort path alive as the
+/// differential oracle and perf baseline, and
+/// `tests/pool_equivalence.rs` pins the two against each other.
+///
+/// Fairshare ordering is the wrapper-specific refinement over batchq's
+/// pure fairshare: usage ties break by priority before id (Slurm
+/// multifactor-style). Usage is charged at completion (`on_complete` is
+/// the only dispatch-independent signal a wrapper observes without
+/// breaking the inner policy's pricing), so a freshly evicted victim
+/// ties with the high-priority task that triggered its eviction — a
+/// plain id tie-break would hand the freed slot straight back to the
+/// victim and make preemption pure churn.
 pub struct Ordered<P> {
     order: Order,
-    usage: FairTracker,
     inner: P,
+    /// Oracle mode: rebuild the index with a full legacy-style sort
+    /// before every dispatch hook instead of trusting the incremental
+    /// maintenance. Same results, legacy O(n log n)-per-event cost.
+    eager: bool,
 }
 
 impl<P: SchedPolicy> Ordered<P> {
-    /// Wrap `inner` with `order`.
+    /// Wrap `inner` with `order` (incremental index maintenance).
     pub fn new(order: Order, inner: P) -> Self {
+        Self::with_eager(order, inner, false)
+    }
+
+    /// Wrap `inner` with `order` in eager-sort oracle mode: the ordered
+    /// index is rebuilt by a full sort before every dispatch
+    /// opportunity, reproducing the legacy per-event `sort_queue` cost.
+    /// Results are bit-identical to [`Ordered::new`]; the differential
+    /// suite asserts it and the `scale`/`perf_engine` speedup numbers
+    /// are measured against this baseline.
+    pub fn new_eager(order: Order, inner: P) -> Self {
+        Self::with_eager(order, inner, true)
+    }
+
+    /// Shared constructor behind [`Ordered::new`]/[`Ordered::new_eager`]
+    /// and the `OrderedSim`/`PreemptiveSim` adapters.
+    fn with_eager(order: Order, inner: P, eager: bool) -> Self {
         Self {
             order,
-            usage: FairTracker::new(),
             inner,
+            eager,
         }
     }
 
-    fn reorder(&mut self, ctx: &mut KernelCtx) {
-        if self.order == Order::Fifo {
-            return;
-        }
-        let tasks = &ctx.workload().tasks;
-        let usage = &self.usage;
-        let queue = ctx.pending_reorder();
+    fn mode(&self) -> Option<OrderMode> {
         match self.order {
-            Order::Fairshare => {
-                // Wrapper-specific refinement over batchq's pure
-                // fairshare: usage ties break by priority before id
-                // (Slurm multifactor-style). Usage is charged at
-                // completion, so a freshly evicted victim ties with the
-                // high-priority task that triggered its eviction; a
-                // plain id tie-break would hand the freed slot straight
-                // back to the victim and make preemption pure churn.
-                queue.sort_unstable_by(|&a, &b| {
-                    let (ta, tb) = (&tasks[a as usize], &tasks[b as usize]);
-                    usage
-                        .usage(ta.user)
-                        .total_cmp(&usage.usage(tb.user))
-                        .then(tb.priority.cmp(&ta.priority))
-                        .then(a.cmp(&b))
-                });
-            }
-            _ => sort_queue(self.order, tasks, usage, queue),
+            Order::Fifo => None,
+            Order::Priority => Some(OrderMode::Priority),
+            Order::Fairshare => Some(OrderMode::Fairshare),
+        }
+    }
+
+    fn refresh(&mut self, ctx: &mut KernelCtx) {
+        if self.eager && self.mode().is_some() {
+            ctx.order_rebuild_eager();
         }
     }
 }
@@ -265,17 +298,19 @@ impl<P: SchedPolicy> SchedPolicy for Ordered<P> {
     }
 
     fn on_submit(&mut self, ctx: &mut KernelCtx, batch: usize) {
-        self.reorder(ctx);
+        if let Some(mode) = self.mode() {
+            ctx.enable_order(mode);
+        }
         self.inner.on_submit(ctx, batch);
     }
 
     fn on_arrive(&mut self, ctx: &mut KernelCtx, now: Time, task: TaskId) {
-        self.reorder(ctx);
+        self.refresh(ctx);
         self.inner.on_arrive(ctx, now, task);
     }
 
     fn on_tick(&mut self, ctx: &mut KernelCtx, now: Time) {
-        self.reorder(ctx);
+        self.refresh(ctx);
         self.inner.on_tick(ctx, now);
     }
 
@@ -296,19 +331,18 @@ impl<P: SchedPolicy> SchedPolicy for Ordered<P> {
     ) -> Option<Time> {
         if self.order == Order::Fairshare {
             let spec = &ctx.workload().tasks[task as usize];
-            self.usage
-                .charge(spec.user, spec.cores as f64 * spec.duration);
+            ctx.order_charge(spec.user, spec.cores as f64 * spec.duration);
         }
         self.inner.on_complete(ctx, now, task, slot)
     }
 
     fn on_slot_free(&mut self, ctx: &mut KernelCtx, now: Time) {
-        self.reorder(ctx);
+        self.refresh(ctx);
         self.inner.on_slot_free(ctx, now);
     }
 
     fn on_deps_ready(&mut self, ctx: &mut KernelCtx, now: Time) {
-        self.reorder(ctx);
+        self.refresh(ctx);
         self.inner.on_deps_ready(ctx, now);
     }
 
@@ -335,8 +369,16 @@ impl<P: SchedPolicy> SchedPolicy for Ordered<P> {
 /// over-evict.
 pub struct Preemptive<P> {
     inner: P,
-    /// (slots-free-at, cores) for evictions already requested.
-    inflight: Vec<(Time, usize)>,
+    /// (slots-free-at, cores) for evictions already requested, kept in
+    /// ascending free-at order so expiry is amortized-O(1) front pops —
+    /// the legacy `Vec::retain` swept the whole set on every pass.
+    inflight: VecDeque<(Time, usize)>,
+    /// Running core sum over `inflight` (legacy re-summed per pass).
+    inflight_cores: usize,
+    /// Evictions accepted during the current pass, merged into
+    /// `inflight` only once the pass is known to satisfy the target
+    /// (replaces the legacy truncate-rollback).
+    added: Vec<(Time, usize)>,
     /// Victim-scan scratch.
     cands: Vec<TaskId>,
     /// Gangs already nominated this pass.
@@ -349,7 +391,9 @@ impl<P: SchedPolicy> Preemptive<P> {
     pub fn new(inner: P) -> Self {
         Self {
             inner,
-            inflight: Vec::new(),
+            inflight: VecDeque::new(),
+            inflight_cores: 0,
+            added: Vec::new(),
             cands: Vec::new(),
             picked_jobs: Vec::new(),
             resumes: 0,
@@ -423,19 +467,22 @@ impl<P: SchedPolicy> SchedPolicy for Preemptive<P> {
 
     fn on_preempt_candidates(&mut self, ctx: &mut KernelCtx, now: Time, out: &mut Vec<TaskId>) {
         self.inner.on_preempt_candidates(ctx, now, out);
-        self.inflight.retain(|&(t, _)| t > now);
+        // Expire checkpoint drains whose slots have been released: the
+        // deque is time-ordered, so this is amortized O(1) front pops
+        // (each entry is pushed and popped once) instead of the legacy
+        // O(inflight) retain sweep per pass.
+        while let Some(&(t, c)) = self.inflight.front() {
+            if t > now {
+                break;
+            }
+            self.inflight.pop_front();
+            self.inflight_cores -= c;
+        }
         let tasks = &ctx.workload().tasks;
-        // Best-priority queued task (first in queue order among ties).
-        let Some(head) = ctx
-            .pending_ids()
-            .reduce(|best, t| {
-                if tasks[t as usize].priority > tasks[best as usize].priority {
-                    t
-                } else {
-                    best
-                }
-            })
-        else {
+        // Best-priority queued task, tie-broken by dispatch-order
+        // position exactly as the legacy scan over the eagerly-sorted
+        // queue did (O(log n) under a priority overlay).
+        let Some(head) = ctx.best_priority_pending() else {
             return;
         };
         let head_spec = &tasks[head as usize];
@@ -457,8 +504,7 @@ impl<P: SchedPolicy> SchedPolicy for Preemptive<P> {
         } else {
             head_spec.cores as usize
         };
-        let inflight_cores: usize = self.inflight.iter().map(|&(_, c)| c).sum();
-        let mut avail = ctx.free_slots() + inflight_cores;
+        let mut avail = ctx.free_slots() + self.inflight_cores;
         if avail >= need {
             return; // it can (or soon will) start without evictions
         }
@@ -475,8 +521,8 @@ impl<P: SchedPolicy> SchedPolicy for Preemptive<P> {
                 .then(a.cmp(&b))
         });
         self.picked_jobs.clear();
+        self.added.clear();
         let selected_start = out.len();
-        let inflight_start = self.inflight.len();
         for &v in &self.cands {
             if avail >= need {
                 break;
@@ -502,14 +548,26 @@ impl<P: SchedPolicy> SchedPolicy for Preemptive<P> {
                 continue;
             }
             out.push(v);
-            self.inflight.push((now + spec.checkpoint_cost, freed));
+            self.added.push((now + spec.checkpoint_cost, freed));
             avail += freed;
         }
         if avail < need {
             // The target cannot be satisfied even after evicting every
-            // eligible victim: evicting would only waste work.
+            // eligible victim: evicting would only waste work. Nothing
+            // was merged into `inflight` yet, so rollback is free.
             out.truncate(selected_start);
-            self.inflight.truncate(inflight_start);
+            return;
+        }
+        // Merge the accepted evictions, preserving time order.
+        // Checkpoint costs are uniform in practice, so the insertion
+        // point is at (or within a few entries of) the back.
+        for &(t, c) in &self.added {
+            let mut pos = self.inflight.len();
+            while pos > 0 && self.inflight[pos - 1].0 > t {
+                pos -= 1;
+            }
+            self.inflight.insert(pos, (t, c));
+            self.inflight_cores += c;
         }
     }
 
@@ -573,13 +631,30 @@ pub struct PreemptiveSim {
     inner: Box<dyn Scheduler>,
     order: Order,
     name: &'static str,
+    eager: bool,
 }
 
 impl PreemptiveSim {
     /// Wrap `inner`; `name` is the (static) display name, e.g.
     /// `"Slurm+prio+preempt"`.
     pub fn new(inner: Box<dyn Scheduler>, order: Order, name: &'static str) -> Self {
-        Self { inner, order, name }
+        Self {
+            inner,
+            order,
+            name,
+            eager: false,
+        }
+    }
+
+    /// Same wrapper with the inner [`Ordered`] in eager-sort oracle
+    /// mode (bit-identical results, legacy per-event sort cost).
+    pub fn new_eager(inner: Box<dyn Scheduler>, order: Order, name: &'static str) -> Self {
+        Self {
+            inner,
+            order,
+            name,
+            eager: true,
+        }
     }
 }
 
@@ -603,7 +678,74 @@ impl Scheduler for PreemptiveSim {
                 self.name
             )
         });
-        let mut policy = Preemptive::new(Ordered::new(self.order, inner_policy));
+        let mut policy =
+            Preemptive::new(Ordered::with_eager(self.order, inner_policy, self.eager));
+        let mut r = Kernel::run(&mut policy, workload, cluster, options, scratch);
+        r.scheduler = self.name.to_string();
+        r
+    }
+
+    fn projected_runtime(&self, workload: &Workload, cluster: &ClusterSpec) -> f64 {
+        self.inner.projected_runtime(workload, cluster)
+    }
+}
+
+/// A [`Scheduler`] adapter running an inner backend's policy under
+/// [`Ordered`] alone (no preemption), e.g. `"IdealFIFO+prio"` — the
+/// ordered-policy rows of the `scale` experiment. `eager` selects the
+/// legacy full-sort oracle mode (see [`Ordered::new_eager`]).
+pub struct OrderedSim {
+    inner: Box<dyn Scheduler>,
+    order: Order,
+    name: &'static str,
+    eager: bool,
+}
+
+impl OrderedSim {
+    /// Wrap `inner` with incremental `order` maintenance; `name` is the
+    /// display name, e.g. `"IdealFIFO+prio"`.
+    pub fn new(inner: Box<dyn Scheduler>, order: Order, name: &'static str) -> Self {
+        Self {
+            inner,
+            order,
+            name,
+            eager: false,
+        }
+    }
+
+    /// Same wrapper in eager-sort oracle mode — the perf baseline and
+    /// differential oracle (bit-identical results, legacy cost).
+    pub fn new_eager(inner: Box<dyn Scheduler>, order: Order, name: &'static str) -> Self {
+        Self {
+            inner,
+            order,
+            name,
+            eager: true,
+        }
+    }
+}
+
+impl Scheduler for OrderedSim {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn run_with_scratch(
+        &self,
+        workload: &Workload,
+        cluster: &ClusterSpec,
+        seed: u64,
+        options: &RunOptions,
+        scratch: &mut SimScratch,
+    ) -> RunResult {
+        let inner_policy = self.inner.make_policy(seed).unwrap_or_else(|| {
+            panic!(
+                "{} is not kernel-policy-driven; it cannot run as {}",
+                self.inner.name(),
+                self.name
+            )
+        });
+        let mut policy = Ordered::with_eager(self.order, inner_policy, self.eager);
         let mut r = Kernel::run(&mut policy, workload, cluster, options, scratch);
         r.scheduler = self.name.to_string();
         r

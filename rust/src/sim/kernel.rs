@@ -98,12 +98,12 @@
 //! pre-refactor implementation (`tests/golden_array.rs` pins this).
 
 use super::engine::{EventQueue, SimEv, Time};
+use super::pending::{OrderIndex, OrderMode, PendingList};
 use super::scratch::SimScratch;
 use crate::cluster::{ClusterSpec, SlotId, SlotPool};
 use crate::sched::{ExecSpan, RunOptions, RunResult};
 use crate::util::stats::Summary;
 use crate::workload::{JobId, JobKind, TaskId, TraceRecord, Workload};
-use std::collections::VecDeque;
 
 /// How one dispatched task enters execution.
 #[derive(Clone, Copy, Debug)]
@@ -220,7 +220,10 @@ pub trait SchedPolicy {
 pub struct KernelCtx<'w, 's> {
     workload: &'w Workload,
     queue: &'s mut EventQueue<SimEv>,
-    pending: &'s mut VecDeque<TaskId>,
+    pending: &'s mut PendingList,
+    /// Incremental ordering overlay (inactive unless an `Ordered`
+    /// combinator enables it; see `crate::sched::combinators`).
+    order: &'s mut OrderIndex,
     pool: &'s mut SlotPool,
     slot_mem: &'s mut Vec<i64>,
     trace: &'s mut Vec<TraceRecord>,
@@ -247,6 +250,13 @@ pub struct KernelCtx<'w, 's> {
     epoch: &'s mut Vec<u32>,
     evictions: &'s mut Vec<u32>,
     kernel_alloc: &'s mut Vec<bool>,
+    // Running-preemptible registry: the task ids a
+    // `preemptible_running` scan would return, maintained
+    // incrementally at start/evict/end so victim-selection passes cost
+    // O(running preemptible) instead of O(all tasks) each.
+    rp_list: &'s mut Vec<u32>,
+    rp_pos: &'s mut Vec<u32>,
+    rp_buf: &'s mut Vec<u32>,
     spans: &'s mut Vec<ExecSpan>,
     preempt_count: u64,
     // Windowed accounting (built only for horizon-bounded runs).
@@ -297,23 +307,80 @@ impl<'w> KernelCtx<'w, '_> {
         self.queue.next_time() == Some(now)
     }
 
-    /// Snapshot of the pending queue in FIFO order (for policies that
-    /// re-order by priority/fairshare before dispatching).
+    /// Snapshot of the pending queue in dispatch order: FIFO insertion
+    /// order normally, overlay (priority/fairshare) order when an
+    /// [`Ordered`](crate::sched::combinators::Ordered) combinator is
+    /// active — exactly the order the legacy eagerly-sorted deque
+    /// exposed.
     pub fn pending_snapshot(&self) -> Vec<TaskId> {
-        self.pending.iter().copied().collect()
+        let mut v: Vec<TaskId> = self.pending.iter().collect();
+        if self.order.is_active() {
+            self.order.sort_ids(&mut v, &self.workload.tasks);
+        }
+        v
     }
 
-    /// Iterate the pending queue in order without copying it.
+    /// Iterate the pending queue without copying it, in FIFO insertion
+    /// order. When an ordering overlay is active the *dispatch* order
+    /// differs — order-sensitive callers use [`KernelCtx::pending_snapshot`]
+    /// or [`KernelCtx::best_priority_pending`] instead; the remaining
+    /// users of this iterator are order-insensitive (sums, maxima).
     pub fn pending_ids(&self) -> impl Iterator<Item = TaskId> + '_ {
-        self.pending.iter().copied()
+        self.pending.iter()
     }
 
-    /// Mutable contiguous view of the pending queue for ordering
-    /// combinators (see `crate::sched::combinators`). Contract: callers
-    /// may only *permute* the slice (sort, rotate); inserting, removing
-    /// or replacing ids would corrupt the kernel's gang bookkeeping.
-    pub fn pending_reorder(&mut self) -> &mut [TaskId] {
-        self.pending.make_contiguous()
+    /// Activate the incremental ordering overlay for this run: pending
+    /// tasks dispatch in `mode` order from now on (drains, gang member
+    /// collection and snapshots all follow it). Called once, from the
+    /// `Ordered` combinator's `on_submit`.
+    pub fn enable_order(&mut self, mode: OrderMode) {
+        self.order.enable(mode, &self.workload.tasks, self.pending);
+    }
+
+    /// Whether an ordering overlay is active.
+    pub fn order_active(&self) -> bool {
+        self.order.is_active()
+    }
+
+    /// Charge fairshare usage to `user` (no-op unless the fairshare
+    /// overlay is active). O(1): usage ranks whole users, so the index
+    /// never needs a rebuild.
+    pub fn order_charge(&mut self, user: u32, core_seconds: f64) {
+        self.order.charge(user, core_seconds);
+    }
+
+    /// Differential-oracle hook: rebuild the overlay index from scratch
+    /// with a full legacy-style sort over the pending set. Behaviour is
+    /// bit-identical to the incremental maintenance (the equivalence
+    /// suite asserts it); only the cost differs — this is the baseline
+    /// the `scale` experiment's ordered-queue speedup is measured
+    /// against.
+    pub fn order_rebuild_eager(&mut self) {
+        self.order.rebuild_eager(&self.workload.tasks, self.pending);
+    }
+
+    /// The maximal-priority pending task with the legacy tie-break
+    /// (first in dispatch order among ties) — the head the `Preemptive`
+    /// combinator sizes evictions for. O(log n) under a priority
+    /// overlay, O(users) under fairshare, O(pending) otherwise (the
+    /// legacy scan).
+    pub fn best_priority_pending(&mut self) -> Option<TaskId> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        if self.order.is_active() {
+            return self
+                .order
+                .best_priority_head(self.pending, &self.workload.tasks);
+        }
+        let tasks = &self.workload.tasks;
+        self.pending.iter().reduce(|best, t| {
+            if tasks[t as usize].priority > tasks[best as usize].priority {
+                t
+            } else {
+                best
+            }
+        })
     }
 
     /// True when the kernel's preemption subsystem is active for this
@@ -325,16 +392,41 @@ impl<'w> KernelCtx<'w, '_> {
     /// Collect every currently-evictable task into `out`: running,
     /// marked preemptible, and holding kernel-allocated slots (policies
     /// that do their own capacity bookkeeping, like Sparrow, never
-    /// produce evictable tasks).
-    pub fn preemptible_running(&self, out: &mut Vec<TaskId>) {
+    /// produce evictable tasks). Served from the incrementally
+    /// maintained registry in O(R log R) for R running preemptible
+    /// tasks — the legacy implementation scanned the whole task list
+    /// per call; sorting restores its ascending-id output order.
+    pub fn preemptible_running(&mut self, out: &mut Vec<TaskId>) {
         if !self.has_preempt {
             return;
         }
-        for t in &self.workload.tasks {
-            let i = t.id as usize;
-            if t.preemptible && self.run_slot[i] != u32::MAX && self.kernel_alloc[i] {
-                out.push(t.id);
-            }
+        self.rp_buf.clear();
+        self.rp_buf.extend_from_slice(&self.rp_list[..]);
+        self.rp_buf.sort_unstable();
+        out.extend_from_slice(&self.rp_buf[..]);
+    }
+
+    /// Register a task as running-preemptible (start/resume path).
+    fn rp_add(&mut self, task: TaskId) {
+        let i = task as usize;
+        debug_assert_eq!(self.rp_pos[i], u32::MAX, "task {task} registered twice");
+        self.rp_pos[i] = self.rp_list.len() as u32;
+        self.rp_list.push(task);
+    }
+
+    /// Unregister on evict/end; a task that was never registered
+    /// (non-preemptible, or placed outside the kernel pool) is a no-op.
+    fn rp_remove(&mut self, task: TaskId) {
+        let i = task as usize;
+        let pos = self.rp_pos[i];
+        if pos == u32::MAX {
+            return;
+        }
+        self.rp_pos[i] = u32::MAX;
+        let last = self.rp_list.pop().expect("registry holds the task");
+        if last != task {
+            self.rp_list[pos as usize] = last;
+            self.rp_pos[last as usize] = pos;
         }
     }
 
@@ -411,7 +503,7 @@ impl<'w> KernelCtx<'w, '_> {
                         return false;
                     }
                     any_running = true;
-                } else if self.kernel_alloc[i] || self.pending.contains(&t.id) {
+                } else if self.kernel_alloc[i] || self.pending.contains(t.id) {
                     // Mid-launch or requeued member: evicting the rest
                     // would leave the gang in a mixed state.
                     return false;
@@ -469,28 +561,35 @@ impl<'w> KernelCtx<'w, '_> {
         self.gang_total[j] > 0 && self.gang_ready[j] == self.gang_total[j]
     }
 
-    /// Pending members of a `Parallel` job, in queue order. Non-gang
-    /// tasks that happen to share the job id are not members.
+    /// Pending members of a `Parallel` job, in dispatch order (FIFO, or
+    /// overlay order under an ordering combinator). Non-gang tasks that
+    /// happen to share the job id are not members.
     pub fn pending_members(&self, job: JobId) -> Vec<TaskId> {
-        self.pending
+        let mut v: Vec<TaskId> = self
+            .pending
             .iter()
-            .copied()
             .filter(|&t| {
                 let spec = &self.workload.tasks[t as usize];
                 spec.job == job && spec.kind == JobKind::Parallel
             })
-            .collect()
+            .collect();
+        if self.order.is_active() {
+            self.order.sort_ids(&mut v, &self.workload.tasks);
+        }
+        v
     }
 
     /// Remove `task` from the pending queue (with gang-readiness
     /// bookkeeping). Returns false if it was not pending. For policies
     /// that place tasks without kernel slot allocation; pair with
-    /// [`KernelCtx::push`]ing the `Start` event.
+    /// [`KernelCtx::push`]ing the `Start` event. O(1) — the legacy
+    /// implementation scanned the queue for the task's position on
+    /// every call.
     pub fn take_task(&mut self, task: TaskId) -> bool {
-        let Some(pos) = self.pending.iter().position(|&t| t == task) else {
+        if !self.pending.contains(task) {
             return false;
-        };
-        self.remove_pending_at(pos);
+        }
+        self.remove_pending(task);
         true
     }
 
@@ -505,51 +604,113 @@ impl<'w> KernelCtx<'w, '_> {
     /// Allocation note: the pure-array path allocates nothing
     /// (`tried_gangs` only allocates on first push), preserving the
     /// zero-alloc sweep contract; gang attempts allocate small
-    /// member/rollback vectors, bounded by gangs per pass.
+    /// member/rollback vectors, bounded by gangs per pass. With an
+    /// ordering overlay active, the walk follows the incremental index
+    /// instead — same dispatch decisions the eagerly-sorted legacy
+    /// queue produced, at O((dispatched + 1)·log n) per pass.
     pub fn drain_fifo(&mut self, launch: &mut LaunchFn) {
-        let mut i = 0usize;
+        if self.order.is_active() {
+            self.drain_ordered(launch);
+            return;
+        }
         let mut tried_gangs: Vec<JobId> = Vec::new();
-        while i < self.pending.len() {
-            let tid = self.pending[i];
+        let mut cur = self.pending.first();
+        while let Some(tid) = cur {
             let task = &self.workload.tasks[tid as usize];
             if task.kind == JobKind::Parallel {
                 let job = task.job;
                 if tried_gangs.contains(&job) {
-                    i += 1;
+                    cur = self.pending.next_of(tid);
                     continue;
                 }
                 if self.gang_all_ready(job) && self.try_dispatch_gang(job, launch) {
-                    // Members were removed at/after index i: re-examine i.
+                    // The cursor went with its gang; resume at the first
+                    // survivor after it in the old order by chasing the
+                    // removed nodes' (intentionally stale) next
+                    // pointers — the linked-list equivalent of the old
+                    // "re-examine index i" after a mid-queue removal.
+                    let mut nxt = self.pending.next_of(tid);
+                    while let Some(t) = nxt {
+                        if self.pending.contains(t) {
+                            break;
+                        }
+                        nxt = self.pending.next_of(t);
+                    }
+                    cur = nxt;
                     continue;
                 }
                 tried_gangs.push(job);
-                i += 1;
+                cur = self.pending.next_of(tid);
                 continue;
             }
             match self.alloc_task(tid) {
                 Some(primary) => {
-                    self.remove_pending_at(i);
+                    let nxt = self.pending.next_of(tid);
+                    self.remove_pending(tid);
                     let l = launch(tid, primary);
                     self.emit_launch(tid, primary, l);
-                    // The next element shifted into position i.
+                    cur = nxt;
                 }
                 None => break,
             }
         }
     }
 
+    /// Overlay-ordered drain: pop candidates off the incremental index
+    /// in dispatch order. A blocked ordinary head stops the walk (its
+    /// entry is stashed and survives); blocked or duplicate-attempted
+    /// gang members are stashed and skipped, exactly mirroring the FIFO
+    /// walk's `tried_gangs` semantics over the sorted order.
+    fn drain_ordered(&mut self, launch: &mut LaunchFn) {
+        debug_assert!(self.order.tried_gangs.is_empty());
+        loop {
+            let Some(entry) = self.order.pop_front(self.pending) else {
+                break;
+            };
+            let tid = entry as u32;
+            let task = &self.workload.tasks[tid as usize];
+            if task.kind == JobKind::Parallel {
+                let job = task.job;
+                if self.order.tried_gangs.contains(&job) {
+                    self.order.stash_entry(entry);
+                    continue;
+                }
+                if self.gang_all_ready(job) && self.try_dispatch_gang(job, launch) {
+                    continue; // the entry's task dispatched with its gang
+                }
+                self.order.tried_gangs.push(job);
+                self.order.stash_entry(entry);
+                continue;
+            }
+            match self.alloc_task(tid) {
+                Some(primary) => {
+                    self.remove_pending(tid);
+                    let l = launch(tid, primary);
+                    self.emit_launch(tid, primary, l);
+                }
+                None => {
+                    self.order.stash_entry(entry);
+                    break;
+                }
+            }
+        }
+        self.order.end_walk(&self.workload.tasks);
+    }
+
     /// Attempt to dispatch one specific pending task (policies that
     /// impose their own queue order — priority, fairshare, backfill —
     /// call this per candidate). Returns false if the task is not
-    /// pending or its slots cannot all be allocated.
+    /// pending or its slots cannot all be allocated. Membership is O(1)
+    /// — the legacy implementation paid a full queue scan per call,
+    /// which made every `OrderedDrain` pass quadratic.
     pub fn try_dispatch(&mut self, task: TaskId, launch: &mut LaunchFn) -> bool {
-        let Some(pos) = self.pending.iter().position(|&t| t == task) else {
+        if !self.pending.contains(task) {
             return false;
-        };
+        }
         let Some(primary) = self.alloc_task(task) else {
             return false;
         };
-        self.remove_pending_at(pos);
+        self.remove_pending(task);
         let l = launch(task, primary);
         self.emit_launch(task, primary, l);
         true
@@ -557,8 +718,9 @@ impl<'w> KernelCtx<'w, '_> {
 
     // ---- internal mechanism -------------------------------------------------
 
-    fn remove_pending_at(&mut self, pos: usize) {
-        let tid = self.pending.remove(pos).expect("pending index in range");
+    fn remove_pending(&mut self, tid: TaskId) {
+        let removed = self.pending.remove(tid);
+        debug_assert!(removed, "task {tid} was not pending");
         if self.has_gang {
             let t = &self.workload.tasks[tid as usize];
             if t.kind == JobKind::Parallel {
@@ -580,6 +742,7 @@ impl<'w> KernelCtx<'w, '_> {
 
     fn enqueue_ready(&mut self, tid: TaskId) {
         self.pending.push_back(tid);
+        self.order.push(tid, &self.workload.tasks);
         if self.has_gang {
             let t = &self.workload.tasks[tid as usize];
             if t.kind == JobKind::Parallel {
@@ -627,6 +790,7 @@ impl<'w> KernelCtx<'w, '_> {
         self.span_start[i] = f64::NAN;
         self.run_slot[i] = u32::MAX;
         self.kernel_alloc[i] = false;
+        self.rp_remove(task);
         let free_at = now + spec.checkpoint_cost;
         self.queue.push(free_at, SimEv::SlotFree { slot: primary });
         if !self.extra_span.is_empty() {
@@ -696,20 +860,14 @@ impl<'w> KernelCtx<'w, '_> {
     }
 
     /// All-or-nothing gang dispatch: allocate slots for every pending
-    /// member of `job`, roll everything back if any member fails.
+    /// member of `job` in dispatch order (FIFO, or overlay order when
+    /// an ordering combinator is active — the order the legacy sorted
+    /// queue enumerated them in), roll everything back if any member
+    /// fails.
     fn try_dispatch_gang(&mut self, job: JobId, launch: &mut LaunchFn) -> bool {
-        let members: Vec<(usize, TaskId)> = self
-            .pending
-            .iter()
-            .enumerate()
-            .filter(|&(_, &t)| {
-                let spec = &self.workload.tasks[t as usize];
-                spec.job == job && spec.kind == JobKind::Parallel
-            })
-            .map(|(i, &t)| (i, t))
-            .collect();
+        let members = self.pending_members(job);
         let mut allocated: Vec<(TaskId, SlotId)> = Vec::with_capacity(members.len());
-        for &(_, t) in &members {
+        for &t in &members {
             match self.alloc_task(t) {
                 Some(p) => allocated.push((t, p)),
                 None => {
@@ -720,8 +878,8 @@ impl<'w> KernelCtx<'w, '_> {
                 }
             }
         }
-        for &(idx, _) in members.iter().rev() {
-            self.remove_pending_at(idx);
+        for &t in &members {
+            self.remove_pending(t);
         }
         for (t, p) in allocated {
             let l = launch(t, p);
@@ -775,6 +933,9 @@ impl<'w> KernelCtx<'w, '_> {
             self.epoch[i] += 1;
             self.span_start[i] = now;
             self.run_slot[i] = slot;
+            if spec.preemptible && self.kernel_alloc[i] {
+                self.rp_add(task);
+            }
             let epoch = self.epoch[i];
             if !service {
                 self.queue
@@ -823,6 +984,7 @@ impl<'w> KernelCtx<'w, '_> {
             self.span_start[i] = f64::NAN;
             self.run_slot[i] = u32::MAX;
             self.kernel_alloc[i] = false;
+            self.rp_remove(task);
         }
     }
 
@@ -942,6 +1104,7 @@ impl Kernel {
             scratch.epoch.resize(n, 0);
             scratch.evictions.resize(n, 0);
             scratch.kernel_alloc.resize(n, false);
+            scratch.rp_pos.resize(n, u32::MAX);
         }
         if horizon.is_some() {
             scratch.win_start.resize(n, f64::NAN);
@@ -950,6 +1113,7 @@ impl Kernel {
         let SimScratch {
             queue,
             pending,
+            order,
             pool,
             slot_mem,
             trace,
@@ -969,6 +1133,9 @@ impl Kernel {
             epoch,
             evictions,
             kernel_alloc,
+            rp_list,
+            rp_pos,
+            rp_buf,
             preempt_victims,
             spans,
             win_start,
@@ -977,6 +1144,7 @@ impl Kernel {
             workload,
             queue,
             pending,
+            order,
             pool,
             slot_mem,
             trace,
@@ -999,6 +1167,9 @@ impl Kernel {
             epoch,
             evictions,
             kernel_alloc,
+            rp_list,
+            rp_pos,
+            rp_buf,
             spans,
             preempt_count: 0,
             horizon,

@@ -10,8 +10,10 @@
 
 mod engine;
 mod kernel;
+mod pending;
 mod scratch;
 
 pub use engine::{EventQueue, MultiServer, ServiceStation, SimEv, Time};
 pub use kernel::{Kernel, KernelCtx, Launch, LaunchFn, SchedPolicy};
+pub use pending::{OrderIndex, OrderMode, PendingList};
 pub use scratch::SimScratch;

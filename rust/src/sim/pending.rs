@@ -1,0 +1,734 @@
+//! Indexed pending-queue structures: the kernel's O(1) pending list and
+//! the incremental ordered ready-queue behind the `Ordered`/`Preemptive`
+//! combinators.
+//!
+//! The pre-index kernel kept pending tasks in a `VecDeque` and paid
+//! linear scans on the hot path: `take_task`/`try_dispatch` ran
+//! `position()` over the whole queue per dispatch (quadratic for
+//! event-driven policies like Sparrow that dispatch fresh arrivals from
+//! the queue's back), and the `Ordered` combinator re-sorted the entire
+//! deque before *every* dispatch opportunity (O(n log n) per event ⇒
+//! ~O(n²·log n) per run). This module replaces both:
+//!
+//! * [`PendingList`] — an intrusive doubly-linked list over task ids.
+//!   Membership, insertion and removal are O(1); FIFO iteration order is
+//!   exactly the old deque's insertion order, so plain policies are
+//!   bit-identical.
+//! * [`OrderIndex`] — the incremental ordered ready-queue. Under
+//!   `Order::Priority` it is one lazy-invalidation binary heap keyed by
+//!   the packed `(priority desc, id asc)` total order. Under the
+//!   wrapper's fairshare order `(usage asc, priority desc, id asc)` it
+//!   is *two-level*: one static-keyed heap per user plus a per-user
+//!   usage scalar. Because the fairshare component of the comparator
+//!   depends on the task only through its user, a usage charge moves
+//!   whole users relative to each other but never re-orders tasks
+//!   within a user — so charging is O(1) and **no rebuild is ever
+//!   needed**, which strictly subsumes the "rebuild only on reorders"
+//!   requirement. Entries removed from the pending list elsewhere
+//!   (gang dispatch, Sparrow's `take_task`) are invalidated lazily:
+//!   they are skipped when they surface at a heap top.
+//!
+//! Equivalence contract: enumerating the index (repeated
+//! [`OrderIndex::pop_front`]) yields exactly the permutation the legacy
+//! eager `sort_queue`-style sort produced over the same pending set —
+//! `tests/pool_equivalence.rs` pins this against an inline copy of the
+//! legacy comparators, and [`OrderIndex::rebuild_eager`] keeps the
+//! legacy full-sort path alive as the differential oracle (and as the
+//! perf baseline the `scale` experiment's speedup is measured against).
+
+use crate::workload::{TaskId, TaskSpec};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+const NIL: u32 = u32::MAX;
+
+/// Intrusive doubly-linked pending list over dense task ids.
+///
+/// Replaces the kernel's pending `VecDeque`: same FIFO semantics, O(1)
+/// `push_back`/`remove`/`contains`. Buffers are reused across runs via
+/// [`PendingList::reset`] (see [`crate::sim::SimScratch`]).
+#[derive(Debug, Default)]
+pub struct PendingList {
+    next: Vec<u32>,
+    prev: Vec<u32>,
+    in_q: Vec<bool>,
+    head: u32,
+    tail: u32,
+    len: usize,
+}
+
+impl PendingList {
+    /// Empty list.
+    pub fn new() -> Self {
+        Self {
+            next: Vec::new(),
+            prev: Vec::new(),
+            in_q: Vec::new(),
+            head: NIL,
+            tail: NIL,
+            len: 0,
+        }
+    }
+
+    /// Rewind for a run of `n` tasks, keeping backing allocations.
+    pub fn reset(&mut self, n: usize) {
+        self.next.clear();
+        self.next.resize(n, NIL);
+        self.prev.clear();
+        self.prev.resize(n, NIL);
+        self.in_q.clear();
+        self.in_q.resize(n, false);
+        self.head = NIL;
+        self.tail = NIL;
+        self.len = 0;
+    }
+
+    fn ensure(&mut self, t: TaskId) {
+        let need = t as usize + 1;
+        if self.next.len() < need {
+            self.next.resize(need, NIL);
+            self.prev.resize(need, NIL);
+            self.in_q.resize(need, false);
+        }
+    }
+
+    /// Number of queued tasks.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when nothing is queued.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// True if `t` is queued. O(1).
+    pub fn contains(&self, t: TaskId) -> bool {
+        (t as usize) < self.in_q.len() && self.in_q[t as usize]
+    }
+
+    /// First queued task (FIFO head).
+    pub fn first(&self) -> Option<TaskId> {
+        (self.head != NIL).then_some(self.head)
+    }
+
+    /// Raw successor pointer of `t`.
+    ///
+    /// For a queued `t` this is the next queued task (or `None` at the
+    /// tail). For a task *removed* from the list the pointer is left
+    /// stale on purpose: it still leads (possibly through other removed
+    /// tasks) to the first surviving successor in the old order, which
+    /// is exactly what the kernel's FIFO drain needs to resume its walk
+    /// after a gang dispatch removed the cursor. Callers must check
+    /// [`PendingList::contains`] before trusting the target; the chain
+    /// is only valid until the removed tasks are re-enqueued.
+    pub fn next_of(&self, t: TaskId) -> Option<TaskId> {
+        let n = self.next[t as usize];
+        (n != NIL).then_some(n)
+    }
+
+    /// Append `t` at the back. O(1).
+    pub fn push_back(&mut self, t: TaskId) {
+        self.ensure(t);
+        debug_assert!(!self.in_q[t as usize], "task {t} queued twice");
+        let i = t as usize;
+        self.next[i] = NIL;
+        self.prev[i] = self.tail;
+        if self.tail != NIL {
+            self.next[self.tail as usize] = t;
+        } else {
+            self.head = t;
+        }
+        self.tail = t;
+        self.in_q[i] = true;
+        self.len += 1;
+    }
+
+    /// Remove `t` if queued; returns whether it was. O(1). The removed
+    /// task's `next` pointer is intentionally left stale (see
+    /// [`PendingList::next_of`]).
+    pub fn remove(&mut self, t: TaskId) -> bool {
+        if !self.contains(t) {
+            return false;
+        }
+        let i = t as usize;
+        let (p, n) = (self.prev[i], self.next[i]);
+        if p != NIL {
+            self.next[p as usize] = n;
+        } else {
+            self.head = n;
+        }
+        if n != NIL {
+            self.prev[n as usize] = p;
+        } else {
+            self.tail = p;
+        }
+        self.in_q[i] = false;
+        self.len -= 1;
+        true
+    }
+
+    /// Iterate queued tasks in FIFO order.
+    pub fn iter(&self) -> PendingIter<'_> {
+        PendingIter {
+            list: self,
+            cur: self.head,
+        }
+    }
+}
+
+/// FIFO iterator over a [`PendingList`].
+pub struct PendingIter<'a> {
+    list: &'a PendingList,
+    cur: u32,
+}
+
+impl Iterator for PendingIter<'_> {
+    type Item = TaskId;
+    fn next(&mut self) -> Option<TaskId> {
+        if self.cur == NIL {
+            return None;
+        }
+        let t = self.cur;
+        self.cur = self.list.next[t as usize];
+        Some(t)
+    }
+}
+
+/// Ordering discipline an [`OrderIndex`] maintains.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum OrderMode {
+    /// `(priority desc, id asc)` — `Order::Priority`.
+    #[default]
+    Priority,
+    /// `(usage asc, priority desc, id asc)` — the `Ordered` wrapper's
+    /// fairshare comparator (usage ties break by priority before id).
+    Fairshare,
+}
+
+/// Pack `(priority desc, id asc)` into one `u64` so the heaps compare a
+/// single integer: high word is the bit-inverted order-preserving map of
+/// the i32 priority (smaller = higher priority), low word the id.
+#[inline]
+fn pack(priority: i32, id: TaskId) -> u64 {
+    let inv_prio = !((priority as u32) ^ 0x8000_0000);
+    ((inv_prio as u64) << 32) | id as u64
+}
+
+#[inline]
+fn unpack_id(key: u64) -> TaskId {
+    key as u32
+}
+
+type MinHeap = BinaryHeap<Reverse<u64>>;
+
+/// The incremental ordered ready-queue (see module docs). Owned by the
+/// kernel context and driven by the `Ordered` combinator; every buffer
+/// is reused across runs through [`crate::sim::SimScratch`].
+#[derive(Debug, Default)]
+pub struct OrderIndex {
+    active: bool,
+    mode: OrderMode,
+    /// Priority mode: the single global heap.
+    prio_heap: MinHeap,
+    /// Fairshare mode: dense-user remap (sorted distinct user ids),
+    /// per-user usage and per-user heaps.
+    user_ids: Vec<u32>,
+    usage: Vec<f64>,
+    user_heaps: Vec<MinHeap>,
+    /// Entries popped during a walk that must survive it (blocked head,
+    /// skipped gang members); re-pushed by [`OrderIndex::end_walk`].
+    stash: Vec<u64>,
+    /// Gangs already attempted during the current walk.
+    pub(crate) tried_gangs: Vec<u32>,
+    /// Scratch for [`OrderIndex::rebuild_eager`].
+    rebuild_buf: Vec<TaskId>,
+}
+
+impl OrderIndex {
+    /// Inactive index.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Rewind to the inactive state, keeping backing allocations.
+    pub fn reset(&mut self) {
+        self.active = false;
+        self.prio_heap.clear();
+        self.user_ids.clear();
+        self.usage.clear();
+        for h in &mut self.user_heaps {
+            h.clear();
+        }
+        self.stash.clear();
+        self.tried_gangs.clear();
+        self.rebuild_buf.clear();
+    }
+
+    /// Whether an ordering overlay is active for the current run.
+    pub fn is_active(&self) -> bool {
+        self.active
+    }
+
+    /// Active mode (meaningless while inactive).
+    pub fn mode(&self) -> OrderMode {
+        self.mode
+    }
+
+    /// Activate the overlay and seed it with the already-admitted
+    /// pending set. For fairshare, the dense user remap is built from
+    /// the whole task list so later arrivals hash to a known user.
+    pub fn enable(&mut self, mode: OrderMode, tasks: &[TaskSpec], pending: &PendingList) {
+        self.reset();
+        self.active = true;
+        self.mode = mode;
+        if mode == OrderMode::Fairshare {
+            self.user_ids.extend(tasks.iter().map(|t| t.user));
+            self.user_ids.sort_unstable();
+            self.user_ids.dedup();
+            self.usage.resize(self.user_ids.len(), 0.0);
+            if self.user_heaps.len() < self.user_ids.len() {
+                self.user_heaps
+                    .resize_with(self.user_ids.len(), MinHeap::new);
+            }
+        }
+        for t in pending.iter() {
+            self.push(t, tasks);
+        }
+    }
+
+    #[inline]
+    fn uidx(&self, user: u32) -> usize {
+        self.user_ids
+            .binary_search(&user)
+            .expect("user present in the workload remap")
+    }
+
+    /// Accumulated fairshare usage of `user` (0 while inactive or under
+    /// priority mode).
+    pub fn usage_of(&self, user: u32) -> f64 {
+        if self.active && self.mode == OrderMode::Fairshare {
+            self.usage[self.uidx(user)]
+        } else {
+            0.0
+        }
+    }
+
+    /// Charge fairshare usage. O(1): usage orders whole users, so no
+    /// per-task re-keying (and no rebuild) is ever required.
+    pub fn charge(&mut self, user: u32, core_seconds: f64) {
+        if self.active && self.mode == OrderMode::Fairshare {
+            let i = self.uidx(user);
+            self.usage[i] += core_seconds;
+        }
+    }
+
+    /// Index a newly-admitted pending task. O(log n).
+    pub fn push(&mut self, task: TaskId, tasks: &[TaskSpec]) {
+        if !self.active {
+            return;
+        }
+        let spec = &tasks[task as usize];
+        let key = Reverse(pack(spec.priority, task));
+        match self.mode {
+            OrderMode::Priority => self.prio_heap.push(key),
+            OrderMode::Fairshare => {
+                let u = self.uidx(spec.user);
+                self.user_heaps[u].push(key);
+            }
+        }
+    }
+
+    /// Drop dead entries (tasks no longer pending) off a heap top.
+    fn skim(heap: &mut MinHeap, pending: &PendingList) {
+        while let Some(&Reverse(k)) = heap.peek() {
+            if pending.contains(unpack_id(k)) {
+                break;
+            }
+            heap.pop();
+        }
+    }
+
+    /// First pending task in overlay order without consuming it.
+    pub fn peek_front(&mut self, pending: &PendingList) -> Option<TaskId> {
+        self.best_slot(pending)
+            .map(|(_, key)| unpack_id(key))
+    }
+
+    /// Pop the first pending task in overlay order; the returned packed
+    /// entry can be kept alive across a walk via
+    /// [`OrderIndex::stash_entry`]. Amortized O(log n) (+O(users) under
+    /// fairshare).
+    pub fn pop_front(&mut self, pending: &PendingList) -> Option<u64> {
+        let (slot, key) = self.best_slot(pending)?;
+        let popped = match slot {
+            None => self.prio_heap.pop(),
+            Some(u) => self.user_heaps[u].pop(),
+        };
+        debug_assert_eq!(popped, Some(Reverse(key)));
+        Some(key)
+    }
+
+    /// Locate the minimum live entry: `(owning heap, key)`. `None` heap
+    /// slot means the global priority heap.
+    fn best_slot(&mut self, pending: &PendingList) -> Option<(Option<usize>, u64)> {
+        match self.mode {
+            OrderMode::Priority => {
+                Self::skim(&mut self.prio_heap, pending);
+                self.prio_heap.peek().map(|&Reverse(k)| (None, k))
+            }
+            OrderMode::Fairshare => {
+                // Two-level comparator: (usage[user], packed key). Users
+                // with equal usage interleave their tasks exactly as the
+                // flat legacy sort did, because the packed key carries
+                // the remaining (priority desc, id asc) components.
+                let mut best: Option<(usize, u64)> = None;
+                for u in 0..self.user_ids.len() {
+                    Self::skim(&mut self.user_heaps[u], pending);
+                    let Some(&Reverse(k)) = self.user_heaps[u].peek() else {
+                        continue;
+                    };
+                    let better = match best {
+                        None => true,
+                        Some((bu, bk)) => {
+                            match self.usage[u].total_cmp(&self.usage[bu]) {
+                                std::cmp::Ordering::Less => true,
+                                std::cmp::Ordering::Greater => false,
+                                std::cmp::Ordering::Equal => k < bk,
+                            }
+                        }
+                    };
+                    if better {
+                        best = Some((u, k));
+                    }
+                }
+                best.map(|(u, k)| (Some(u), k))
+            }
+        }
+    }
+
+    /// The head the `Preemptive` combinator targets: the maximal-
+    /// priority pending task, tie-broken by *position in overlay order*
+    /// — exactly what the legacy scan over the eagerly-sorted queue
+    /// returned. O(log n) for priority mode, O(users) for fairshare.
+    pub fn best_priority_head(
+        &mut self,
+        pending: &PendingList,
+        tasks: &[TaskSpec],
+    ) -> Option<TaskId> {
+        match self.mode {
+            // Overlay order IS (priority desc, id asc): the head is the
+            // front of the index.
+            OrderMode::Priority => self.peek_front(pending),
+            // Overlay order is (usage, priority desc, id): each user's
+            // heap top is that user's (max prio, min id) candidate; the
+            // legacy scan picks, among max-priority tasks, the first in
+            // (usage, id) order.
+            OrderMode::Fairshare => {
+                let mut best: Option<(i32, f64, TaskId)> = None;
+                for u in 0..self.user_ids.len() {
+                    Self::skim(&mut self.user_heaps[u], pending);
+                    let Some(&Reverse(k)) = self.user_heaps[u].peek() else {
+                        continue;
+                    };
+                    let id = unpack_id(k);
+                    let prio = tasks[id as usize].priority;
+                    let usage = self.usage[u];
+                    let better = match best {
+                        None => true,
+                        Some((bp, bu, bid)) => {
+                            prio > bp
+                                || (prio == bp
+                                    && (usage < bu || (usage == bu && id < bid)))
+                        }
+                    };
+                    if better {
+                        best = Some((prio, usage, id));
+                    }
+                }
+                best.map(|(_, _, id)| id)
+            }
+        }
+    }
+
+    /// Keep a popped entry alive across the current walk (blocked head
+    /// or skipped gang member that must stay indexed).
+    pub fn stash_entry(&mut self, entry: u64) {
+        self.stash.push(entry);
+    }
+
+    /// Finish a walk: re-push every stashed entry and clear the
+    /// tried-gang scratch. Allocation-free after warm-up.
+    pub fn end_walk(&mut self, tasks: &[TaskSpec]) {
+        while let Some(e) = self.stash.pop() {
+            match self.mode {
+                OrderMode::Priority => self.prio_heap.push(Reverse(e)),
+                OrderMode::Fairshare => {
+                    let user = tasks[unpack_id(e) as usize].user;
+                    let u = self.uidx(user);
+                    self.user_heaps[u].push(Reverse(e));
+                }
+            }
+        }
+        self.tried_gangs.clear();
+    }
+
+    /// Sort `ids` into overlay order (the comparator the legacy eager
+    /// sort applied to the whole queue). Used for order-sensitive
+    /// snapshots (`pending_snapshot`, gang member collection).
+    pub fn sort_ids(&self, ids: &mut [TaskId], tasks: &[TaskSpec]) {
+        match self.mode {
+            OrderMode::Priority => {
+                ids.sort_unstable_by_key(|&t| pack(tasks[t as usize].priority, t));
+            }
+            OrderMode::Fairshare => {
+                ids.sort_unstable_by(|&a, &b| {
+                    let (ta, tb) = (&tasks[a as usize], &tasks[b as usize]);
+                    let (ua, ub) = (self.usage_of(ta.user), self.usage_of(tb.user));
+                    ua.total_cmp(&ub)
+                        .then_with(|| pack(ta.priority, a).cmp(&pack(tb.priority, b)))
+                });
+            }
+        }
+    }
+
+    /// Differential-oracle / perf-baseline path: discard the
+    /// incrementally maintained entries and rebuild the index by a full
+    /// `sort`-style pass over the live pending set — the cost profile of
+    /// the legacy per-event `sort_queue`. The resulting walks are
+    /// bit-identical to the incremental ones (the differential suite
+    /// asserts it); only the per-event cost differs.
+    pub fn rebuild_eager(&mut self, tasks: &[TaskSpec], pending: &PendingList) {
+        if !self.active {
+            return;
+        }
+        let mut buf = std::mem::take(&mut self.rebuild_buf);
+        buf.clear();
+        buf.extend(pending.iter());
+        self.sort_ids(&mut buf, tasks);
+        self.prio_heap.clear();
+        for h in &mut self.user_heaps {
+            h.clear();
+        }
+        for &t in &buf {
+            self.push(t, tasks);
+        }
+        self.rebuild_buf = buf;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn list_fifo_order_and_o1_removal() {
+        let mut l = PendingList::new();
+        l.reset(8);
+        for t in [3u32, 1, 5, 7, 0] {
+            l.push_back(t);
+        }
+        assert_eq!(l.iter().collect::<Vec<_>>(), vec![3, 1, 5, 7, 0]);
+        assert!(l.remove(5));
+        assert!(!l.remove(5));
+        assert!(l.contains(7) && !l.contains(5));
+        assert_eq!(l.iter().collect::<Vec<_>>(), vec![3, 1, 7, 0]);
+        assert!(l.remove(3)); // head
+        assert!(l.remove(0)); // tail
+        assert_eq!(l.iter().collect::<Vec<_>>(), vec![1, 7]);
+        assert_eq!(l.len(), 2);
+        l.push_back(5); // re-enqueue at the back
+        assert_eq!(l.iter().collect::<Vec<_>>(), vec![1, 7, 5]);
+    }
+
+    #[test]
+    fn removed_next_pointers_chain_to_the_first_survivor() {
+        let mut l = PendingList::new();
+        l.reset(6);
+        for t in 0..6 {
+            l.push_back(t);
+        }
+        // Remove a run in the middle; the stale chain from the first
+        // removed node must lead to the first survivor (4).
+        l.remove(1);
+        l.remove(2);
+        l.remove(3);
+        let mut cur = l.next_of(1);
+        while let Some(t) = cur {
+            if l.contains(t) {
+                break;
+            }
+            cur = l.next_of(t);
+        }
+        assert_eq!(cur, Some(4));
+    }
+
+    #[test]
+    fn reset_rewinds_and_auto_grows() {
+        let mut l = PendingList::new();
+        l.reset(2);
+        l.push_back(1);
+        l.reset(2);
+        assert!(l.is_empty() && !l.contains(1));
+        l.push_back(9); // beyond the reset size: auto-grow
+        assert!(l.contains(9));
+        assert_eq!(l.iter().collect::<Vec<_>>(), vec![9]);
+    }
+
+    #[test]
+    fn pack_orders_priority_desc_then_id_asc() {
+        assert!(pack(10, 5) < pack(0, 0), "higher priority first");
+        assert!(pack(0, 1) < pack(0, 2), "id ascending within a level");
+        assert!(pack(0, 99) < pack(-3, 0), "negative priorities last");
+        assert!(pack(i32::MAX, 0) < pack(i32::MIN, 0));
+    }
+
+    fn specs(prios_users: &[(i32, u32)]) -> Vec<TaskSpec> {
+        prios_users
+            .iter()
+            .enumerate()
+            .map(|(i, &(p, u))| {
+                let mut t = crate::workload::TaskSpec::array(i as u32, i as u32, 1.0);
+                t.priority = p;
+                t.user = u;
+                t
+            })
+            .collect()
+    }
+
+    /// Drain the index to a Vec (entries are consumed).
+    fn drain(ix: &mut OrderIndex, pending: &mut PendingList) -> Vec<TaskId> {
+        let mut out = Vec::new();
+        while let Some(e) = ix.pop_front(pending) {
+            let t = e as u32;
+            pending.remove(t);
+            out.push(t);
+        }
+        out
+    }
+
+    #[test]
+    fn priority_index_matches_sorted_order() {
+        let tasks = specs(&[(0, 0), (5, 0), (5, 0), (2, 0), (9, 0)]);
+        let mut pending = PendingList::new();
+        pending.reset(tasks.len());
+        for t in [4u32, 2, 0, 3, 1] {
+            pending.push_back(t);
+        }
+        let mut ix = OrderIndex::new();
+        ix.enable(OrderMode::Priority, &tasks, &pending);
+        assert_eq!(drain(&mut ix, &mut pending), vec![4, 1, 2, 3, 0]);
+    }
+
+    #[test]
+    fn fairshare_two_level_matches_flat_comparator() {
+        // Users 0/1 with unequal usage; equal-usage users interleave by
+        // (priority desc, id).
+        let tasks = specs(&[(0, 0), (7, 1), (0, 1), (3, 0), (3, 2)]);
+        let mut pending = PendingList::new();
+        pending.reset(tasks.len());
+        for t in 0..5 {
+            pending.push_back(t);
+        }
+        let mut ix = OrderIndex::new();
+        ix.enable(OrderMode::Fairshare, &tasks, &pending);
+        ix.charge(1, 50.0);
+        // usage: u0=0, u1=50, u2=0. Flat order by (usage, prio desc, id):
+        // u0/u2 tie at 0 -> 3 (prio 3, id 3), 4 (prio 3, id 4), 0; then
+        // user 1 -> 1 (prio 7), 2.
+        assert_eq!(drain(&mut ix, &mut pending), vec![3, 4, 0, 1, 2]);
+    }
+
+    #[test]
+    fn lazy_invalidation_skips_externally_removed_tasks() {
+        let tasks = specs(&[(1, 0), (2, 0), (3, 0)]);
+        let mut pending = PendingList::new();
+        pending.reset(3);
+        for t in 0..3 {
+            pending.push_back(t);
+        }
+        let mut ix = OrderIndex::new();
+        ix.enable(OrderMode::Priority, &tasks, &pending);
+        pending.remove(2); // external removal (gang/take_task style)
+        assert_eq!(drain(&mut ix, &mut pending), vec![1, 0]);
+        // Re-enqueue: a fresh entry serves it again.
+        pending.push_back(2);
+        ix.push(2, &tasks);
+        assert_eq!(drain(&mut ix, &mut pending), vec![2]);
+    }
+
+    #[test]
+    fn stash_and_end_walk_preserve_entries() {
+        let tasks = specs(&[(1, 0), (2, 0)]);
+        let mut pending = PendingList::new();
+        pending.reset(2);
+        pending.push_back(0);
+        pending.push_back(1);
+        let mut ix = OrderIndex::new();
+        ix.enable(OrderMode::Priority, &tasks, &pending);
+        let e = ix.pop_front(&pending).unwrap();
+        assert_eq!(e as u32, 1);
+        ix.stash_entry(e); // blocked: keep it
+        ix.end_walk(&tasks);
+        assert_eq!(ix.peek_front(&pending), Some(1));
+    }
+
+    #[test]
+    fn prop_index_drain_equals_legacy_sort() {
+        // Differential oracle at the unit level: for random pending sets
+        // and usage charges, draining the incremental index equals the
+        // legacy flat sort with the wrapper comparators.
+        let mut rng = Prng::new(0x0D7E);
+        for case in 0..200u32 {
+            let n = 1 + rng.below(24) as usize;
+            let tasks = specs(
+                &(0..n)
+                    .map(|_| (rng.below(5) as i32, rng.below(4) as u32))
+                    .collect::<Vec<_>>(),
+            );
+            let mut ids: Vec<u32> = (0..n as u32).collect();
+            rng.shuffle(&mut ids);
+            let keep = 1 + rng.below(n as u64) as usize;
+            ids.truncate(keep);
+            let mode = if case % 2 == 0 {
+                OrderMode::Priority
+            } else {
+                OrderMode::Fairshare
+            };
+            let mut pending = PendingList::new();
+            pending.reset(n);
+            for &t in &ids {
+                pending.push_back(t);
+            }
+            let mut ix = OrderIndex::new();
+            ix.enable(mode, &tasks, &pending);
+            let mut usage = vec![0.0f64; 4];
+            for _ in 0..rng.below(4) {
+                let u = rng.below(4) as u32;
+                let c = rng.range_f64(0.0, 30.0);
+                usage[u as usize] += c;
+                ix.charge(u, c);
+            }
+            // Legacy flat sort.
+            let mut expect = ids.clone();
+            match mode {
+                OrderMode::Priority => expect.sort_by(|&a, &b| {
+                    tasks[b as usize]
+                        .priority
+                        .cmp(&tasks[a as usize].priority)
+                        .then(a.cmp(&b))
+                }),
+                OrderMode::Fairshare => expect.sort_by(|&a, &b| {
+                    let (ta, tb) = (&tasks[a as usize], &tasks[b as usize]);
+                    usage[ta.user as usize]
+                        .total_cmp(&usage[tb.user as usize])
+                        .then(tb.priority.cmp(&ta.priority))
+                        .then(a.cmp(&b))
+                }),
+            }
+            let got = drain(&mut ix, &mut pending);
+            assert_eq!(got, expect, "case {case} mode {mode:?}");
+        }
+    }
+}

@@ -19,16 +19,21 @@
 //! `parallel_determinism` integration test pins this down.
 
 use super::engine::{EventQueue, SimEv};
+use super::pending::{OrderIndex, PendingList};
 use crate::cluster::{ClusterSpec, SlotPool};
 use crate::workload::TraceRecord;
-use std::collections::VecDeque;
 
 /// Warm buffers for one simulation worker.
 pub struct SimScratch {
     /// Shared event queue (all simulators use the [`SimEv`] payload).
     pub queue: EventQueue<SimEv>,
-    /// Pending-task FIFO (task ids), dependency-gated by the kernel.
-    pub pending: VecDeque<u32>,
+    /// Pending-task queue (task ids), dependency-gated by the kernel:
+    /// an intrusive linked list with O(1) membership/removal (FIFO
+    /// iteration order matches the historical `VecDeque`).
+    pub pending: PendingList,
+    /// Incremental ordered ready-queue for the `Ordered`/`Preemptive`
+    /// combinators (inactive for plain runs).
+    pub order: OrderIndex,
     /// Core-slot pool, rebuilt in place per run via [`SlotPool::reinit`].
     pub pool: SlotPool,
     /// Memory (MB) held by each slot's current task.
@@ -74,6 +79,14 @@ pub struct SimScratch {
     /// policies doing their own capacity bookkeeping, e.g. Sparrow;
     /// preemption only).
     pub kernel_alloc: Vec<bool>,
+    /// Running-preemptible registry: task ids currently evictable
+    /// (preemption only; mirrors the legacy full-task scan in O(R)).
+    pub rp_list: Vec<u32>,
+    /// task id -> index into `rp_list` (`u32::MAX` = unregistered).
+    pub rp_pos: Vec<u32>,
+    /// Sort scratch for `preemptible_running` (restores the legacy
+    /// ascending-id output order).
+    pub rp_buf: Vec<u32>,
     /// Victim-collection buffer handed to
     /// [`crate::sim::SchedPolicy::on_preempt_candidates`].
     pub preempt_victims: Vec<u32>,
@@ -90,7 +103,8 @@ impl SimScratch {
     pub fn new() -> Self {
         Self {
             queue: EventQueue::new(),
-            pending: VecDeque::new(),
+            pending: PendingList::new(),
+            order: OrderIndex::new(),
             pool: SlotPool::empty(),
             slot_mem: Vec::new(),
             trace: Vec::new(),
@@ -110,6 +124,9 @@ impl SimScratch {
             epoch: Vec::new(),
             evictions: Vec::new(),
             kernel_alloc: Vec::new(),
+            rp_list: Vec::new(),
+            rp_pos: Vec::new(),
+            rp_buf: Vec::new(),
             preempt_victims: Vec::new(),
             spans: Vec::new(),
             win_start: Vec::new(),
@@ -121,7 +138,8 @@ impl SimScratch {
     /// allocated state (modulo retained capacity).
     pub fn begin(&mut self, cluster: &ClusterSpec, n_tasks: usize, collect_trace: bool) {
         self.queue.reset();
-        self.pending.clear();
+        self.pending.reset(n_tasks);
+        self.order.reset();
         self.pool.reinit(cluster);
         self.slot_mem.clear();
         self.slot_mem.resize(self.pool.capacity(), 0);
@@ -142,6 +160,9 @@ impl SimScratch {
         self.epoch.clear();
         self.evictions.clear();
         self.kernel_alloc.clear();
+        self.rp_list.clear();
+        self.rp_pos.clear();
+        self.rp_buf.clear();
         self.preempt_victims.clear();
         self.spans.clear();
         self.win_start.clear();
@@ -188,6 +209,9 @@ mod tests {
         s.epoch.push(1);
         s.evictions.push(2);
         s.kernel_alloc.push(true);
+        s.rp_list.push(1);
+        s.rp_pos.push(0);
+        s.rp_buf.push(2);
         s.preempt_victims.push(0);
         s.spans.push(crate::sched::ExecSpan {
             task: 0,
@@ -219,6 +243,9 @@ mod tests {
         assert!(s.epoch.is_empty());
         assert!(s.evictions.is_empty());
         assert!(s.kernel_alloc.is_empty());
+        assert!(s.rp_list.is_empty());
+        assert!(s.rp_pos.is_empty());
+        assert!(s.rp_buf.is_empty());
         assert!(s.preempt_victims.is_empty());
         assert!(s.spans.is_empty());
         assert!(s.win_start.is_empty());

@@ -1,0 +1,469 @@
+//! Differential equivalence suites for the indexed hot-path structures.
+//!
+//! The perf tentpole replaced three quadratic structures — the
+//! `SlotPool` free stack, the kernel's pending-queue scans and the
+//! `Ordered` combinator's per-event full sort — with incrementally
+//! maintained indexed ones, under a bit-identity contract. This suite
+//! pins that contract from three angles:
+//!
+//! 1. **Pool vs verbatim legacy copy** — [`LegacySlotPool`] below is
+//!    the pre-index implementation, copied verbatim (O(P) `rposition`
+//!    scan + `Vec::remove`). Randomized alloc/release sequences shaped
+//!    like each backend's allocation pattern (uniform-memory arrays,
+//!    LIFO completions, random completions, multi-core bursts with
+//!    failure rollback, memory pressure) must produce identical
+//!    slot-id pop sequences.
+//! 2. **Incremental ordered queue vs the eager sort oracle** —
+//!    end-to-end runs of `Ordered`/`Preemptive` policies over random
+//!    priority/user/core/arrival workloads, executed once with the
+//!    incremental `OrderIndex` and once with `new_eager` (rebuild by
+//!    full legacy-style sort before every dispatch hook), must be
+//!    bit-identical in makespan, event counts, waits and traces.
+//! 3. **Backends under memory pressure** — every scheduler family run
+//!    on a memory-constrained cluster (forcing the pool's slow path
+//!    inside the kernel) stays bit-identical across scratch reuse and
+//!    passes all result invariants.
+
+use sssched::cluster::{ClusterSpec, NodeState, SlotPool};
+use sssched::config::SchedulerChoice;
+use sssched::sched::combinators::{Order, OrderedSim, PreemptiveSim};
+use sssched::sched::{make_scheduler, RunOptions, RunResult, Scheduler, SimScratch};
+use sssched::util::prng::Prng;
+use sssched::workload::{JobKind, TaskSpec, Workload};
+
+// ---- 1. the verbatim legacy pool -----------------------------------------
+
+/// The pre-index `SlotPool`, kept verbatim as the differential oracle:
+/// one global free stack, `rposition` scan for memory-constrained
+/// allocations, `Vec::remove` for mid-stack extraction.
+struct LegacySlotPool {
+    node_of: Vec<u32>,
+    free: Vec<u32>,
+    busy: Vec<bool>,
+    mem_free: Vec<i64>,
+    mem_total: Vec<i64>,
+    busy_count: usize,
+}
+
+impl LegacySlotPool {
+    fn new(spec: &ClusterSpec) -> Self {
+        let mut pool = Self {
+            node_of: Vec::new(),
+            free: Vec::new(),
+            busy: Vec::new(),
+            mem_free: Vec::new(),
+            mem_total: Vec::new(),
+            busy_count: 0,
+        };
+        for node in &spec.nodes {
+            if node.state != NodeState::Up {
+                continue;
+            }
+            for _ in 0..node.cores {
+                let id = pool.node_of.len() as u32;
+                pool.node_of.push(node.id);
+                pool.free.push(id);
+            }
+        }
+        // Pop order: slot 0 first (free is a stack).
+        pool.free.reverse();
+        pool.busy.resize(pool.node_of.len(), false);
+        pool.mem_total
+            .extend(spec.nodes.iter().map(|n| n.mem_mb as i64));
+        pool.mem_free.extend_from_slice(&pool.mem_total);
+        pool
+    }
+
+    fn alloc(&mut self, mem_mb: i64) -> Option<u32> {
+        let pos = self
+            .free
+            .iter()
+            .rposition(|&s| self.mem_free[self.node_of[s as usize] as usize] >= mem_mb)?;
+        let slot = self.free.remove(pos);
+        let node = self.node_of[slot as usize] as usize;
+        self.mem_free[node] -= mem_mb;
+        assert!(!self.busy[slot as usize], "double allocation of slot {slot}");
+        self.busy[slot as usize] = true;
+        self.busy_count += 1;
+        Some(slot)
+    }
+
+    fn release(&mut self, slot: u32, mem_mb: i64) {
+        let idx = slot as usize;
+        assert!(self.busy[idx], "release of free slot {slot}");
+        self.busy[idx] = false;
+        self.busy_count -= 1;
+        let node = self.node_of[idx] as usize;
+        self.mem_free[node] += mem_mb;
+        assert!(
+            self.mem_free[node] <= self.mem_total[node],
+            "memory over-release on node {node}"
+        );
+        self.free.push(slot);
+    }
+
+    fn free_count(&self) -> usize {
+        self.free.len()
+    }
+}
+
+/// Drive both pools with the same operation sequence, asserting
+/// identical observable behaviour after every step.
+struct PoolPair {
+    indexed: SlotPool,
+    legacy: LegacySlotPool,
+    /// (slot, mem) currently held, shared by construction.
+    held: Vec<(u32, i64)>,
+}
+
+impl PoolPair {
+    fn new(spec: &ClusterSpec) -> Self {
+        Self {
+            indexed: SlotPool::new(spec),
+            legacy: LegacySlotPool::new(spec),
+            held: Vec::new(),
+        }
+    }
+
+    fn alloc(&mut self, mem: i64) -> Option<u32> {
+        let a = self.indexed.alloc(mem);
+        let b = self.legacy.alloc(mem);
+        assert_eq!(a, b, "pop order diverged for mem={mem}");
+        assert_eq!(self.indexed.free_count(), self.legacy.free_count());
+        self.indexed.check_invariants().unwrap();
+        if let Some(s) = a {
+            self.held.push((s, mem));
+        }
+        a
+    }
+
+    fn release_at(&mut self, i: usize) {
+        let (s, mem) = self.held.swap_remove(i);
+        self.indexed.release(s, mem);
+        self.legacy.release(s, mem);
+        assert_eq!(self.indexed.free_count(), self.legacy.free_count());
+        self.indexed.check_invariants().unwrap();
+    }
+
+    fn release_last(&mut self) {
+        if !self.held.is_empty() {
+            let i = self.held.len() - 1;
+            self.release_at(i);
+        }
+    }
+}
+
+fn small_cluster() -> ClusterSpec {
+    // 6 nodes × 4 cores, 1000 MB each: tight enough that 300–900 MB
+    // tasks hit per-node memory pressure constantly.
+    ClusterSpec::homogeneous(6, 4, 1000, 2)
+}
+
+#[test]
+fn pool_differential_uniform_memory_lifo() {
+    // Array/table9 shape: every task the same memory, completions in
+    // LIFO order (the homogeneous fast path must stay on the legacy
+    // pop order throughout).
+    let mut pair = PoolPair::new(&small_cluster());
+    let mut rng = Prng::new(0xA11C);
+    for _ in 0..500 {
+        if rng.chance(0.6) {
+            pair.alloc(200);
+        } else {
+            pair.release_last();
+        }
+    }
+}
+
+#[test]
+fn pool_differential_random_release_order() {
+    // Poisson-completion shape: tasks end in arbitrary order, so the
+    // lazy stack accumulates dead entries that must be skimmed
+    // identically to the legacy mid-stack removals.
+    let mut rng = Prng::new(0xBEEF);
+    for trial in 0..20 {
+        let mut pair = PoolPair::new(&small_cluster());
+        for _ in 0..300 {
+            if rng.chance(0.55) {
+                let mem = [0i64, 150, 400, 900][rng.below(4) as usize];
+                pair.alloc(mem);
+            } else if !pair.held.is_empty() {
+                let i = rng.below(pair.held.len() as u64) as usize;
+                pair.release_at(i);
+            }
+        }
+        assert_eq!(
+            pair.indexed.busy_count(),
+            pair.held.len(),
+            "trial {trial}"
+        );
+    }
+}
+
+#[test]
+fn pool_differential_multicore_burst_with_rollback() {
+    // Kernel alloc_task shape: one memory-carrying primary plus k
+    // zero-memory extras, rolled back in reverse on failure — exactly
+    // the gang/multi-core rollback path.
+    let mut rng = Prng::new(0xC0DE);
+    for _ in 0..20 {
+        let mut pair = PoolPair::new(&small_cluster());
+        for _ in 0..120 {
+            if rng.chance(0.6) {
+                let mem = [300i64, 600, 900][rng.below(3) as usize];
+                let cores = 1 + rng.below(6) as usize;
+                // All-or-nothing: primary with memory, extras at 0.
+                let start = pair.held.len();
+                if pair.alloc(mem).is_some() {
+                    let mut ok = true;
+                    for _ in 1..cores {
+                        if pair.alloc(0).is_none() {
+                            ok = false;
+                            break;
+                        }
+                    }
+                    if !ok {
+                        // Roll back in reverse allocation order.
+                        while pair.held.len() > start {
+                            pair.release_last();
+                        }
+                    }
+                }
+            } else if !pair.held.is_empty() {
+                let i = rng.below(pair.held.len() as u64) as usize;
+                pair.release_at(i);
+            }
+        }
+    }
+}
+
+#[test]
+fn pool_differential_exhaustion_and_refill() {
+    // Drain the whole cluster at mixed sizes, then refill, repeatedly:
+    // stresses the None paths and full-stack turnover.
+    let mut pair = PoolPair::new(&small_cluster());
+    let mut rng = Prng::new(0xF112);
+    for _ in 0..6 {
+        loop {
+            let mem = [0i64, 250, 500][rng.below(3) as usize];
+            if pair.alloc(mem).is_none() && pair.alloc(0).is_none() {
+                break; // truly exhausted
+            }
+        }
+        assert_eq!(pair.indexed.free_count(), 0);
+        while !pair.held.is_empty() {
+            let i = rng.below(pair.held.len() as u64) as usize;
+            pair.release_at(i);
+        }
+    }
+}
+
+#[test]
+fn pool_differential_with_down_nodes() {
+    let mut spec = small_cluster();
+    spec.set_state(2, NodeState::Down);
+    let mut pair = PoolPair::new(&spec);
+    let mut rng = Prng::new(0xD03);
+    for _ in 0..300 {
+        if rng.chance(0.6) {
+            let mem = [0i64, 400, 800][rng.below(3) as usize];
+            pair.alloc(mem);
+        } else if !pair.held.is_empty() {
+            let i = rng.below(pair.held.len() as u64) as usize;
+            pair.release_at(i);
+        }
+    }
+}
+
+// ---- 2. incremental ordered queue vs the eager sort oracle ----------------
+
+/// Random workload mixing priorities, users, core counts, staggered
+/// arrivals and (optionally) preemptible background + gangs.
+fn random_ordered_workload(rng: &mut Prng, n: u64, preempt: bool, gangs: bool) -> Workload {
+    let mut tasks: Vec<TaskSpec> = Vec::new();
+    let mut id = 0u32;
+    if preempt {
+        // Saturating preemptible background the foreground can evict.
+        for _ in 0..8 {
+            let mut t = TaskSpec::array(id, id, rng.range_f64(5.0, 15.0));
+            t.preemptible = true;
+            t.checkpoint_cost = if rng.chance(0.5) { 0.0 } else { 0.25 };
+            t.user = rng.below(3) as u32;
+            tasks.push(t);
+            id += 1;
+        }
+    }
+    if gangs {
+        let size = 2 + rng.below(3) as u32;
+        let job = 900;
+        for _ in 0..size {
+            let mut t = TaskSpec::array(id, job, rng.range_f64(0.5, 3.0));
+            t.kind = JobKind::Parallel;
+            t.priority = rng.below(5) as i32;
+            t.user = rng.below(3) as u32;
+            t.submit_at = rng.range_f64(0.0, 2.0);
+            tasks.push(t);
+            id += 1;
+        }
+    }
+    for _ in 0..n {
+        let mut t = TaskSpec::array(id, id, rng.range_f64(0.2, 4.0));
+        t.priority = rng.below(8) as i32;
+        t.user = rng.below(3) as u32;
+        t.cores = 1 + rng.below(2) as u32;
+        if rng.chance(0.5) {
+            t.submit_at = rng.range_f64(0.0, 10.0);
+        }
+        tasks.push(t);
+        id += 1;
+    }
+    let w = Workload {
+        tasks,
+        label: "ordered-diff".into(),
+    };
+    w.validate().expect("random workload valid");
+    w
+}
+
+fn assert_bit_identical(a: &RunResult, b: &RunResult, what: &str) {
+    assert_eq!(a.t_total.to_bits(), b.t_total.to_bits(), "{what}: t_total");
+    assert_eq!(a.events, b.events, "{what}: events");
+    assert_eq!(a.preemptions, b.preemptions, "{what}: preemptions");
+    assert_eq!(a.waits.count(), b.waits.count(), "{what}: wait count");
+    assert_eq!(
+        a.waits.mean().to_bits(),
+        b.waits.mean().to_bits(),
+        "{what}: wait mean"
+    );
+    assert_eq!(a.trace, b.trace, "{what}: trace");
+    assert_eq!(a.spans, b.spans, "{what}: spans");
+}
+
+fn diff_cluster() -> ClusterSpec {
+    ClusterSpec::homogeneous(2, 4, 32 * 1024, 2)
+}
+
+#[test]
+fn ordered_incremental_matches_eager_oracle() {
+    let cl = diff_cluster();
+    for order in [Order::Priority, Order::Fairshare] {
+        for inner in [SchedulerChoice::IdealFifo, SchedulerChoice::Slurm] {
+            let mut rng = Prng::new(0x0DD + order.label().len() as u64);
+            for seed in 0..8u64 {
+                let gangs = seed % 2 == 1;
+                let w = random_ordered_workload(&mut rng, 24, false, gangs);
+                let incr = OrderedSim::new(make_scheduler(inner), order, "diff");
+                let eager = OrderedSim::new_eager(make_scheduler(inner), order, "diff");
+                let a = incr.run(&w, &cl, seed, &RunOptions::with_trace());
+                let b = eager.run(&w, &cl, seed, &RunOptions::with_trace());
+                a.check_invariants().unwrap();
+                assert_bit_identical(
+                    &a,
+                    &b,
+                    &format!("{inner:?}+{} seed {seed} gangs {gangs}", order.label()),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn preemptive_incremental_matches_eager_oracle() {
+    let cl = diff_cluster();
+    for order in [Order::Priority, Order::Fairshare] {
+        let mut rng = Prng::new(0x9E3 + order.label().len() as u64);
+        for seed in 0..8u64 {
+            let w = random_ordered_workload(&mut rng, 20, true, false);
+            let incr = PreemptiveSim::new(
+                make_scheduler(SchedulerChoice::IdealFifo),
+                order,
+                "diff+preempt",
+            );
+            let eager = PreemptiveSim::new_eager(
+                make_scheduler(SchedulerChoice::IdealFifo),
+                order,
+                "diff+preempt",
+            );
+            let a = incr.run(&w, &cl, seed, &RunOptions::with_trace());
+            let b = eager.run(&w, &cl, seed, &RunOptions::with_trace());
+            a.check_invariants().unwrap();
+            assert_bit_identical(&a, &b, &format!("preempt+{} seed {seed}", order.label()));
+        }
+    }
+}
+
+#[test]
+fn ordered_warm_scratch_matches_fresh() {
+    // The incremental index lives in SimScratch: reuse across runs of
+    // different shapes must stay bit-identical to fresh scratches.
+    let cl = diff_cluster();
+    let mut rng = Prng::new(0x5C4A);
+    let w1 = random_ordered_workload(&mut rng, 30, false, true);
+    let w2 = random_ordered_workload(&mut rng, 12, true, false);
+    let ordered = OrderedSim::new(
+        make_scheduler(SchedulerChoice::IdealFifo),
+        Order::Fairshare,
+        "warm",
+    );
+    let pre = PreemptiveSim::new(
+        make_scheduler(SchedulerChoice::IdealFifo),
+        Order::Priority,
+        "warm+preempt",
+    );
+    let mut scratch = SimScratch::new();
+    for seed in 0..3u64 {
+        let warm_o = ordered.run_with_scratch(&w1, &cl, seed, &RunOptions::with_trace(), &mut scratch);
+        let fresh_o = ordered.run(&w1, &cl, seed, &RunOptions::with_trace());
+        assert_bit_identical(&warm_o, &fresh_o, &format!("ordered warm seed {seed}"));
+        let warm_p = pre.run_with_scratch(&w2, &cl, seed, &RunOptions::with_trace(), &mut scratch);
+        let fresh_p = pre.run(&w2, &cl, seed, &RunOptions::with_trace());
+        assert_bit_identical(&warm_p, &fresh_p, &format!("preempt warm seed {seed}"));
+    }
+}
+
+// ---- 3. backends under memory pressure ------------------------------------
+
+/// Memory-hungry workload on a memory-tight cluster: forces the
+/// indexed pool's slow path inside every backend's kernel run.
+fn mem_pressure_workload(rng: &mut Prng, n: u64) -> Workload {
+    let tasks = (0..n)
+        .map(|i| {
+            let mut t = TaskSpec::array(i as u32, i as u32, rng.range_f64(0.5, 3.0));
+            t.mem_mb = [256i64, 512, 900][rng.below(3) as usize];
+            if rng.chance(0.4) {
+                t.submit_at = rng.range_f64(0.0, 5.0);
+            }
+            t
+        })
+        .collect();
+    Workload {
+        tasks,
+        label: "mem-pressure".into(),
+    }
+}
+
+#[test]
+fn all_backends_bit_identical_under_memory_pressure() {
+    // 1000 MB nodes, 4 cores each: three 256 MB tasks fill a node's
+    // memory before its cores, so allocations constantly skip the top
+    // of the free stack.
+    let cl = ClusterSpec::homogeneous(4, 4, 1000, 2);
+    let mut rng = Prng::new(0x3E3);
+    let w = mem_pressure_workload(&mut rng, 48);
+    let mut scratch = SimScratch::new();
+    for choice in SchedulerChoice::all_simulated() {
+        let sched = make_scheduler(choice);
+        let fresh = sched.run(&w, &cl, 11, &RunOptions::with_trace());
+        fresh.check_invariants().unwrap_or_else(|e| {
+            panic!("{} under memory pressure: {e}", sched.name())
+        });
+        let warm = sched.run_with_scratch(&w, &cl, 11, &RunOptions::with_trace(), &mut scratch);
+        assert_bit_identical(&warm, &fresh, sched.name());
+        // Every task must have run somewhere memory allowed: per-node
+        // concurrent memory is checked by the pool's own asserts during
+        // the run; here we double-check the trace landed each task on a
+        // real node.
+        let trace = fresh.trace.as_ref().unwrap();
+        assert_eq!(trace.len(), w.len());
+    }
+}
