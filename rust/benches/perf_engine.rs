@@ -9,6 +9,10 @@
 //!   allocation-flat (per-run allocations are a small constant that
 //!   does not scale with workload size — nothing allocates on the
 //!   evict/requeue/resume hot path after warmup)
+//! * fault-churn kernel loop: kills/s + warm events/s under a rolling
+//!   node-outage plan, with the same flat-allocation assert on the
+//!   retire/kill/requeue/restore path (`churn_mevents_per_s` in
+//!   BENCH_perf.json)
 //! * indexed-queue scale sweep: warm events/s per (scheduler, n) up to
 //!   n = 100k, the fitted log-log wall-time exponent, the eager-sort vs
 //!   incremental ordered-queue speedup (asserted ≥ 5×, bit-identical),
@@ -21,7 +25,7 @@
 //! Usage: `cargo bench --bench perf_engine -- [--quick] [--jobs N]
 //! [--out FILE]` (default out: BENCH_perf.json in the working dir).
 
-use sssched::cluster::ClusterSpec;
+use sssched::cluster::{ClusterSpec, FaultPlan};
 use sssched::config::{ExperimentConfig, SchedulerChoice};
 use sssched::exec::{RealtimeCoordinator, RealtimeParams, RtTask, RtWork};
 use sssched::harness::{
@@ -308,7 +312,75 @@ fn main() {
         (rate, eps, big_allocs)
     };
 
-    // ---- 2d. Indexed-queue scale sweep (the `scale` experiment's
+    // ---- 2d. Fault-churn kernel loop (warm scratch): events/s and
+    // kills/s under a rolling node-outage plan, with the same
+    // flat-allocation contract as the preemption loop — after warmup
+    // nothing on the retire / kill / requeue / restore hot path
+    // allocates.
+    let (churn_rate, churn_kills_per_s, churn_allocs_per_run) = {
+        let sched = make_scheduler(SchedulerChoice::Slurm);
+        let n_nodes = cluster.nodes.len() as u32;
+        let mut plan = FaultPlan::none();
+        for k in 0..n_nodes.min(8) {
+            plan = plan
+                .fail(4.0 + 4.0 * k as f64, k)
+                .recover(6.0 + 4.0 * k as f64, k);
+        }
+        plan.validate().expect("bench fault plan");
+        let opts = RunOptions {
+            faults: plan,
+            ..Default::default()
+        };
+        let churn_workload = |waves: u64| {
+            sssched::workload::WorkloadBuilder::constant(5.0)
+                .tasks(waves * cluster.total_cores())
+                .label("churn-bench")
+                .build()
+        };
+        let big = churn_workload(16);
+        let small = churn_workload(4);
+        let mut scratch = SimScratch::new();
+        // Warm-up run sizes every buffer, fault machinery included.
+        sched.run_with_scratch(&big, &cluster, 0, &opts, &mut scratch);
+        let iters = if quick { 2u64 } else { 5 };
+        let t0 = Instant::now();
+        let mut events = 0u64;
+        let mut kills = 0u64;
+        for i in 0..iters {
+            let r = sched.run_with_scratch(&big, &cluster, i + 1, &opts, &mut scratch);
+            events += r.events;
+            kills += r.kills;
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        assert!(kills > 0, "churn bench executed no kills");
+        COUNTING.store(true, Ordering::Relaxed);
+        let before_small = allocs();
+        sched.run_with_scratch(&small, &cluster, 97, &opts, &mut scratch);
+        let small_allocs = allocs() - before_small;
+        let before_big = allocs();
+        sched.run_with_scratch(&big, &cluster, 98, &opts, &mut scratch);
+        let big_allocs = allocs() - before_big;
+        COUNTING.store(false, Ordering::Relaxed);
+        assert!(
+            small_allocs < 512 && big_allocs < 512,
+            "warm churn run allocates per event: small={small_allocs} big={big_allocs}"
+        );
+        assert!(
+            big_allocs <= small_allocs + 64 && small_allocs <= big_allocs + 64,
+            "warm churn allocations scale with workload size: \
+             small={small_allocs} big={big_allocs}"
+        );
+        let rate = events as f64 / dt / 1e6;
+        let kps = kills as f64 / dt;
+        println!(
+            "churn loop (warm scratch): {events} events, {kills} kills over {iters} trials \
+             in {dt:.3}s = {rate:.2}M events/s, {kps:.0} kills/s; allocs/run \
+             small={small_allocs} big={big_allocs} (flat)"
+        );
+        (rate, kps, big_allocs)
+    };
+
+    // ---- 2e. Indexed-queue scale sweep (the `scale` experiment's
     // bench-side mirror): warm-scratch events/s per (scheduler, n), the
     // fitted log-log wall-time-vs-n exponent, the eager-sort vs
     // incremental ordered-queue speedup (asserted ≥ 5×, bit-identical),
@@ -578,6 +650,9 @@ fn main() {
          \x20 \"preempt_warm_mevents_per_s\": {preempt_rate:.4},\n\
          \x20 \"preempt_evictions_per_s\": {preempt_evictions_per_s:.1},\n\
          \x20 \"preempt_warm_allocs_per_run\": {preempt_allocs_per_run},\n\
+         \x20 \"churn_mevents_per_s\": {churn_rate:.4},\n\
+         \x20 \"churn_kills_per_s\": {churn_kills_per_s:.1},\n\
+         \x20 \"churn_warm_allocs_per_run\": {churn_allocs_per_run},\n\
          \x20 \"sims\": [\n{sims}\n  ],\n\
          \x20 \"scale\": {{\n\
          \x20   \"procs\": {scale_procs},\n\

@@ -1,4 +1,8 @@
-//! Node-level cluster description and state.
+//! Node-level cluster description and state, plus the deterministic
+//! fault plans (`FaultPlan`) that drive mid-run node
+//! failure/drain/recovery in the kernel.
+
+use crate::util::prng::Prng;
 
 /// Identifies a compute node.
 pub type NodeId = u32;
@@ -91,8 +95,208 @@ impl ClusterSpec {
     }
 
     /// Mark a node down (failure injection in tests).
+    ///
+    /// Panics on an out-of-range `id` with a message naming the node,
+    /// so a fault plan referencing a nonexistent node fails loudly
+    /// instead of no-op'ing.
     pub fn set_state(&mut self, id: NodeId, state: NodeState) {
+        assert!(
+            (id as usize) < self.nodes.len(),
+            "ClusterSpec::set_state: node {id} out of range (cluster has {} nodes)",
+            self.nodes.len()
+        );
         self.nodes[id as usize].state = state;
+    }
+}
+
+/// Node-lifecycle transition kind of one [`FaultEvent`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The node dies: its free slots retire immediately, every task
+    /// running there is killed (non-checkpointed work is lost), and
+    /// killed tasks requeue through their retry budget.
+    Fail,
+    /// The node drains: no new placement, but running work finishes;
+    /// slots park as they free instead of returning to the pool.
+    Drain,
+    /// The node returns to service with its full slot complement.
+    Recover,
+}
+
+impl FaultKind {
+    /// Display label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            FaultKind::Fail => "fail",
+            FaultKind::Drain => "drain",
+            FaultKind::Recover => "recover",
+        }
+    }
+}
+
+/// One timed node-lifecycle event of a [`FaultPlan`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultEvent {
+    /// Virtual time (seconds) at which the event fires.
+    pub at: f64,
+    /// Target node.
+    pub node: NodeId,
+    /// Lifecycle transition.
+    pub kind: FaultKind,
+}
+
+/// Deterministic node-lifecycle schedule injected into a kernel run
+/// via `RunOptions::faults`. Events fire in `(at, insertion order)`
+/// order — the event queue's tie-break — so a plan is replayed
+/// bit-identically on every run. An empty plan (the default) leaves
+/// every simulation path untouched.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Events, fired in `(at, insertion order)` order.
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// The empty plan: no node ever changes state.
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// True iff the plan schedules no events (the fault machinery is
+    /// bypassed entirely and runs are bit-identical to pre-fault-plan
+    /// builds).
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Append a failure of `node` at `at` (builder-style).
+    pub fn fail(mut self, at: f64, node: NodeId) -> Self {
+        self.events.push(FaultEvent {
+            at,
+            node,
+            kind: FaultKind::Fail,
+        });
+        self
+    }
+
+    /// Append a drain of `node` at `at` (builder-style).
+    pub fn drain(mut self, at: f64, node: NodeId) -> Self {
+        self.events.push(FaultEvent {
+            at,
+            node,
+            kind: FaultKind::Drain,
+        });
+        self
+    }
+
+    /// Append a recovery of `node` at `at` (builder-style).
+    pub fn recover(mut self, at: f64, node: NodeId) -> Self {
+        self.events.push(FaultEvent {
+            at,
+            node,
+            kind: FaultKind::Recover,
+        });
+        self
+    }
+
+    /// Seeded MTBF/MTTR plan: each node independently draws
+    /// exponential times-to-failure (mean `mtbf`) and times-to-repair
+    /// (mean `mttr`) from its own forked PRNG stream, alternating
+    /// fail/recover until `horizon`. Deterministic in `seed` and
+    /// independent of node iteration order (per-node streams).
+    pub fn seeded(seed: u64, n_nodes: u32, mtbf: f64, mttr: f64, horizon: f64) -> Self {
+        assert!(mtbf.is_finite() && mtbf > 0.0, "mtbf must be finite and > 0");
+        assert!(mttr.is_finite() && mttr > 0.0, "mttr must be finite and > 0");
+        let root = Prng::new(seed ^ 0xFA17_71A5);
+        let mut events: Vec<FaultEvent> = Vec::new();
+        for node in 0..n_nodes {
+            let mut rng = root.fork(node as u64);
+            let mut t = rng.exponential(mtbf);
+            while t < horizon {
+                events.push(FaultEvent {
+                    at: t,
+                    node,
+                    kind: FaultKind::Fail,
+                });
+                let back = t + rng.exponential(mttr);
+                if back >= horizon {
+                    break;
+                }
+                events.push(FaultEvent {
+                    at: back,
+                    node,
+                    kind: FaultKind::Recover,
+                });
+                t = back + rng.exponential(mtbf);
+            }
+        }
+        // Stable sort: ties keep per-node generation order, which is
+        // already lifecycle-consistent per node.
+        events.sort_by(|a, b| a.at.total_cmp(&b.at));
+        Self { events }
+    }
+
+    /// Validate the plan: every event time finite and `>= 0`, and the
+    /// per-node lifecycle consistent when replayed in firing order —
+    /// no fail of an already-failed node, no drain of a non-up node,
+    /// no recovery of a healthy node. (Node-id range is checked
+    /// against the cluster at run time: `ClusterSpec::set_state`
+    /// panics loudly on out-of-range ids.)
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, e) in self.events.iter().enumerate() {
+            if !e.at.is_finite() {
+                return Err(format!(
+                    "fault event {i}: non-finite time {} for node {}",
+                    e.at, e.node
+                ));
+            }
+            if e.at < 0.0 {
+                return Err(format!(
+                    "fault event {i}: time {} is before t=0 (node {})",
+                    e.at, e.node
+                ));
+            }
+        }
+        // Replay in firing order: time-sorted, insertion order on ties
+        // (Vec::sort_by is stable).
+        let mut order: Vec<usize> = (0..self.events.len()).collect();
+        order.sort_by(|&a, &b| self.events[a].at.total_cmp(&self.events[b].at));
+        let mut state: std::collections::HashMap<NodeId, NodeState> =
+            std::collections::HashMap::new();
+        for &i in &order {
+            let e = &self.events[i];
+            let s = state.entry(e.node).or_insert(NodeState::Up);
+            match e.kind {
+                FaultKind::Fail => {
+                    if *s == NodeState::Down {
+                        return Err(format!(
+                            "fault event {i}: node {} fails at t={} but is already down",
+                            e.node, e.at
+                        ));
+                    }
+                    *s = NodeState::Down;
+                }
+                FaultKind::Drain => {
+                    if *s != NodeState::Up {
+                        return Err(format!(
+                            "fault event {i}: node {} drains at t={} but is not up",
+                            e.node, e.at
+                        ));
+                    }
+                    *s = NodeState::Draining;
+                }
+                FaultKind::Recover => {
+                    if *s == NodeState::Up {
+                        return Err(format!(
+                            "fault event {i}: node {} recovers at t={} but is already up",
+                            e.node, e.at
+                        ));
+                    }
+                    *s = NodeState::Up;
+                }
+            }
+        }
+        Ok(())
     }
 }
 
@@ -124,5 +328,82 @@ mod tests {
         let mut c = ClusterSpec::homogeneous(2, 4, 1024, 2);
         c.nodes[1].cores = 16;
         assert_eq!(c.total_cores(), 20);
+    }
+
+    #[test]
+    #[should_panic(expected = "node 4 out of range")]
+    fn set_state_panics_on_out_of_range_node() {
+        let mut c = ClusterSpec::homogeneous(4, 8, 1024, 2);
+        c.set_state(4, NodeState::Down);
+    }
+
+    #[test]
+    fn fault_plan_builder_and_validation() {
+        let plan = FaultPlan::none().fail(2.0, 0).recover(6.0, 0).drain(3.0, 1);
+        assert!(!plan.is_empty());
+        plan.validate().unwrap();
+        assert_eq!(plan.events.len(), 3);
+        assert_eq!(plan.events[0].kind.label(), "fail");
+    }
+
+    #[test]
+    fn fault_plan_rejects_negative_and_non_finite_times() {
+        let neg = FaultPlan::none().fail(-1.0, 0);
+        assert!(neg.validate().unwrap_err().contains("before t=0"));
+        let nan = FaultPlan::none().drain(f64::NAN, 0);
+        assert!(nan.validate().unwrap_err().contains("non-finite"));
+        let inf = FaultPlan::none().recover(f64::INFINITY, 0);
+        assert!(inf.validate().unwrap_err().contains("non-finite"));
+    }
+
+    #[test]
+    fn fault_plan_rejects_lifecycle_inconsistencies() {
+        let double_fail = FaultPlan::none().fail(1.0, 0).fail(2.0, 0);
+        assert!(double_fail.validate().unwrap_err().contains("already down"));
+        let healthy_recover = FaultPlan::none().recover(1.0, 0);
+        assert!(healthy_recover
+            .validate()
+            .unwrap_err()
+            .contains("already up"));
+        let drain_down = FaultPlan::none().fail(1.0, 0).drain(2.0, 0);
+        assert!(drain_down.validate().unwrap_err().contains("not up"));
+        // Draining -> Fail and Down -> Recover -> Fail are legal.
+        FaultPlan::none()
+            .drain(1.0, 0)
+            .fail(2.0, 0)
+            .recover(3.0, 0)
+            .fail(4.0, 0)
+            .validate()
+            .unwrap();
+    }
+
+    #[test]
+    fn fault_plan_validation_replays_in_time_order() {
+        // Insertion order is recover-then-fail, but the fail fires
+        // first in time, so the plan is consistent.
+        FaultPlan::none()
+            .recover(5.0, 0)
+            .fail(1.0, 0)
+            .validate()
+            .unwrap();
+    }
+
+    #[test]
+    fn seeded_fault_plan_is_deterministic_and_valid() {
+        let a = FaultPlan::seeded(7, 4, 50.0, 10.0, 240.0);
+        let b = FaultPlan::seeded(7, 4, 50.0, 10.0, 240.0);
+        assert_eq!(a, b);
+        a.validate().unwrap();
+        assert!(!a.is_empty(), "240 s at MTBF 50 s should draw failures");
+        for w in a.events.windows(2) {
+            assert!(w[0].at <= w[1].at, "events sorted by time");
+        }
+        for e in &a.events {
+            assert!(e.at >= 0.0 && e.at < 240.0);
+            assert!(e.node < 4);
+        }
+        // Different seeds draw different schedules.
+        let c = FaultPlan::seeded(8, 4, 50.0, 10.0, 240.0);
+        assert_ne!(a, c);
     }
 }

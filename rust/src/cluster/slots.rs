@@ -83,6 +83,16 @@ pub struct SlotPool {
     /// Nodes whose leaf is out of date (flushed before tree queries).
     dirty: Vec<u32>,
     dirty_flag: Vec<bool>,
+    /// Per-node placement flag: false once the node is retired mid-run
+    /// (failed or draining). Retired nodes never serve allocations.
+    placeable: Vec<bool>,
+    /// Per-node parked slots: free slots of a retired node, held out of
+    /// the free structure (in their former seq order) until the node is
+    /// restored. Parked slots carry `slot_seq == 0`, which no lazy-stack
+    /// entry can match (live entries always have seq >= 1).
+    parked: Vec<Vec<SlotId>>,
+    /// Total parked slot count across nodes.
+    parked_n: usize,
 }
 
 impl SlotPool {
@@ -112,6 +122,9 @@ impl SlotPool {
             tree_seq: Vec::new(),
             dirty: Vec::new(),
             dirty_flag: Vec::new(),
+            placeable: Vec::new(),
+            parked: Vec::new(),
+            parked_n: 0,
         }
     }
 
@@ -140,6 +153,15 @@ impl SlotPool {
         for list in &mut self.node_free {
             list.clear();
         }
+        if self.parked.len() < n_nodes {
+            self.parked.resize_with(n_nodes, Vec::new);
+        }
+        for list in &mut self.parked {
+            list.clear();
+        }
+        self.parked_n = 0;
+        self.placeable.clear();
+        self.placeable.resize(n_nodes, true);
         for node in &spec.nodes {
             if node.state != NodeState::Up {
                 continue;
@@ -327,8 +349,78 @@ impl SlotPool {
         Some(self.take(slot, node, mem_mb))
     }
 
+    /// Whether `node` currently accepts placement (not retired by a
+    /// mid-run failure or drain).
+    pub fn node_placeable(&self, node: NodeId) -> bool {
+        self.placeable[node as usize]
+    }
+
+    /// Retire a node mid-run (failure or drain): its free slots move to
+    /// the parked list — lazily invalidated in the free-LIFO by zeroing
+    /// their seq, pruned from the tournament tree via the normal dirty
+    /// path — and no future allocation lands there. Busy slots stay
+    /// busy; when they release they park instead of re-entering the
+    /// free structure. Idempotent (a drain followed by a failure of the
+    /// same node retires once).
+    pub fn retire_node(&mut self, node: NodeId) {
+        let n = node as usize;
+        assert!(
+            n < self.placeable.len(),
+            "retire_node: node {node} out of range ({} nodes)",
+            self.placeable.len()
+        );
+        if !self.placeable[n] {
+            return;
+        }
+        self.placeable[n] = false;
+        let mut list = std::mem::take(&mut self.node_free[n]);
+        for &s in &list {
+            // Kill any live lazy-stack entry: live entries carry the
+            // slot's current seq (>= 1), so zeroing can never match.
+            self.slot_seq[s as usize] = 0;
+        }
+        self.free_n -= list.len();
+        self.parked_n += list.len();
+        self.parked[n].append(&mut list);
+        self.node_free[n] = list; // empty, capacity retained
+        self.mark_dirty(n);
+    }
+
+    /// Restore a retired node: parked slots re-enter the free structure
+    /// in their parked order, each under a fresh (maximal) seq — the
+    /// same indexed paths a release uses, so recovered capacity is
+    /// immediately placeable.
+    pub fn restore_node(&mut self, node: NodeId) {
+        let n = node as usize;
+        assert!(
+            n < self.placeable.len(),
+            "restore_node: node {node} out of range ({} nodes)",
+            self.placeable.len()
+        );
+        if self.placeable[n] {
+            return;
+        }
+        self.placeable[n] = true;
+        let mut parked = std::mem::take(&mut self.parked[n]);
+        for &s in &parked {
+            let idx = s as usize;
+            debug_assert!(!self.busy[idx], "parked slot {s} is busy");
+            self.next_seq += 1;
+            self.slot_seq[idx] = self.next_seq;
+            self.free_lifo.push((s, self.next_seq));
+            self.node_free[n].push(s);
+        }
+        self.free_n += parked.len();
+        self.parked_n -= parked.len();
+        parked.clear();
+        self.parked[n] = parked; // empty, capacity retained
+        self.mark_dirty(n);
+    }
+
     /// Release a slot and its memory. The slot takes a fresh (maximal)
-    /// free sequence number — the legacy push-to-top-of-stack.
+    /// free sequence number — the legacy push-to-top-of-stack. If the
+    /// slot's node was retired mid-run, the slot parks instead of
+    /// re-entering the free structure.
     pub fn release(&mut self, slot: SlotId, mem_mb: i64) {
         let idx = slot as usize;
         assert!(self.busy[idx], "release of free slot {slot}");
@@ -340,6 +432,14 @@ impl SlotPool {
             self.mem_free[node] <= self.mem_total[node],
             "memory over-release on node {node}"
         );
+        if !self.placeable[node] {
+            // Zero the seq so a stale lazy-stack entry from an earlier
+            // slow-path alloc of this slot can't resurrect as live.
+            self.slot_seq[idx] = 0;
+            self.parked[node].push(slot);
+            self.parked_n += 1;
+            return;
+        }
         self.next_seq += 1;
         self.slot_seq[idx] = self.next_seq;
         self.free_lifo.push((slot, self.next_seq));
@@ -352,13 +452,43 @@ impl SlotPool {
     /// capacity, no slot is both busy and free, per-node lists are
     /// seq-ordered and consistent with the lazy stack.
     pub fn check_invariants(&self) -> Result<(), String> {
-        if self.free_n + self.busy_count != self.capacity() {
+        if self.free_n + self.busy_count + self.parked_n != self.capacity() {
             return Err(format!(
-                "slot conservation violated: free={} busy={} cap={}",
+                "slot conservation violated: free={} busy={} parked={} cap={}",
                 self.free_n,
                 self.busy_count,
+                self.parked_n,
                 self.capacity()
             ));
+        }
+        let mut parked_seen = 0usize;
+        for (node, list) in self.parked.iter().enumerate() {
+            if !list.is_empty() && self.placeable.get(node).copied().unwrap_or(false) {
+                return Err(format!("placeable node {node} holds parked slots"));
+            }
+            for &s in list {
+                if self.busy[s as usize] {
+                    return Err(format!("slot {s} both busy and parked"));
+                }
+                if self.node_of[s as usize] as usize != node {
+                    return Err(format!("slot {s} parked under wrong node {node}"));
+                }
+                if self.slot_seq[s as usize] != 0 {
+                    return Err(format!("parked slot {s} carries a live seq"));
+                }
+                parked_seen += 1;
+            }
+        }
+        if parked_seen != self.parked_n {
+            return Err(format!(
+                "parked lists hold {parked_seen} slots but parked count is {}",
+                self.parked_n
+            ));
+        }
+        for (node, placeable) in self.placeable.iter().enumerate() {
+            if !placeable && !self.node_free[node].is_empty() {
+                return Err(format!("retired node {node} still lists free slots"));
+            }
         }
         let mut listed = 0usize;
         for (node, list) in self.node_free.iter().enumerate() {
@@ -531,6 +661,169 @@ mod tests {
         assert_eq!(got.len(), 4); // 2 slots × 2 up nodes
         assert!(got.iter().all(|&n| n != 1));
         p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn retire_restore_roundtrip_matches_fresh_order() {
+        let mut p = SlotPool::new(&spec());
+        // Retire node 0 with all slots free, then restore: the pool
+        // must still allocate node 0's slots (under fresh seqs).
+        p.retire_node(0);
+        p.check_invariants().unwrap();
+        assert!(!p.node_placeable(0));
+        assert_eq!(p.free_count(), 12);
+        let mut nodes = Vec::new();
+        let mut held = Vec::new();
+        while let Some(s) = p.alloc(0) {
+            nodes.push(p.node_of(s));
+            held.push(s);
+        }
+        assert_eq!(nodes.len(), 12);
+        assert!(nodes.iter().all(|&n| n != 0), "retired node served an alloc");
+        p.restore_node(0);
+        p.check_invariants().unwrap();
+        assert!(p.node_placeable(0));
+        assert_eq!(p.free_count(), 4);
+        // Restored slots re-enter in parked order: node 0's list was
+        // topped by slot 0 (lowest id), so the last restored push — the
+        // new stack top — is slot 0.
+        assert_eq!(p.alloc(0), Some(0));
+        for s in held {
+            p.release(s, 0);
+        }
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn release_onto_retired_node_parks_until_restore() {
+        let sp = ClusterSpec::homogeneous(2, 2, 1000, 2);
+        let mut p = SlotPool::new(&sp);
+        let a = p.alloc(100).unwrap(); // slot 0, node 0
+        assert_eq!(p.node_of(a), 0);
+        p.retire_node(0);
+        p.check_invariants().unwrap();
+        // Busy slot survives the retire; its release parks it.
+        p.release(a, 100);
+        p.check_invariants().unwrap();
+        assert_eq!(p.busy_count(), 0);
+        assert_eq!(p.free_count(), 2); // node 1 only
+        // Parked slots are unreachable until restore.
+        let mut got = Vec::new();
+        while let Some(s) = p.alloc(0) {
+            got.push(p.node_of(s));
+        }
+        assert!(got.iter().all(|&n| n == 1));
+        p.restore_node(0);
+        p.check_invariants().unwrap();
+        assert_eq!(p.free_count(), 2); // node 0's two parked slots return
+        assert_eq!(p.alloc(500).map(|s| p.node_of(s)), Some(0));
+    }
+
+    #[test]
+    fn retire_is_idempotent_and_tree_skips_retired_nodes() {
+        // Force the slow path (memory pressure) after a retire: the
+        // tree must never select the retired node even though its
+        // memory table still shows free MB.
+        let sp = ClusterSpec::homogeneous(3, 2, 1000, 3);
+        let mut p = SlotPool::new(&sp);
+        // Saturate node memory elsewhere so a 900 MB request must use
+        // the tree.
+        let a = p.alloc(900).unwrap(); // node 0
+        p.retire_node(p.node_of(a)); // drain then...
+        p.retire_node(p.node_of(a)); // ...fail: second retire is a no-op
+        p.check_invariants().unwrap();
+        let mut nodes = Vec::new();
+        while let Some(s) = p.alloc(900) {
+            nodes.push(p.node_of(s));
+        }
+        assert_eq!(nodes.len(), 2, "one 900 MB slot per surviving node");
+        assert!(nodes.iter().all(|&n| n != p.node_of(a)));
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn stale_lifo_entry_cannot_resurrect_a_parked_slot() {
+        // Slow-path alloc leaves a stale (slot, old-seq) entry in the
+        // lazy stack. Parking the slot on release must not let that
+        // entry come back live.
+        let sp = ClusterSpec::homogeneous(2, 2, 1000, 2);
+        let mut p = SlotPool::new(&sp);
+        let a = p.alloc(900).unwrap(); // slot 0 (node 0), fast path
+        let b = p.alloc(900).unwrap(); // node 0 out of memory -> the
+                                       // tree picks slot 2 (node 1),
+                                       // leaving its stale stack entry
+        assert_eq!((a, b), (0, 2));
+        p.retire_node(1);
+        p.release(b, 900); // parks slot 2 on retired node 1
+        p.check_invariants().unwrap();
+        // Slot 2's stale stack entry must not serve this drain.
+        let mut got = Vec::new();
+        while let Some(s) = p.alloc(0) {
+            got.push(s);
+        }
+        assert_eq!(got, vec![1], "only node 0's remaining slot is placeable");
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn prop_random_retire_restore_conserves() {
+        // Random interleaving of alloc/release/retire/restore across a
+        // small cluster keeps every pool invariant.
+        check(
+            |rng| {
+                let ops: Vec<(u8, u8, u8)> = (0..300)
+                    .map(|_| {
+                        (
+                            rng.below(8) as u8,
+                            rng.below(4) as u8,
+                            rng.below(16) as u8,
+                        )
+                    })
+                    .collect();
+                ops
+            },
+            |ops| {
+                let mut p = SlotPool::new(&spec());
+                let mut held: Vec<(SlotId, i64)> = Vec::new();
+                let mut up = [true; 4];
+                for &(op, node, pick) in ops {
+                    let n = (node % 4) as NodeId;
+                    match op {
+                        0..=3 => {
+                            let m = [0i64, 100, 450, 900][(pick % 4) as usize];
+                            if let Some(s) = p.alloc(m) {
+                                ensure(
+                                    up[p.node_of(s) as usize],
+                                    format!("alloc landed on retired node {}", p.node_of(s)),
+                                )?;
+                                held.push((s, m));
+                            }
+                        }
+                        4..=5 => {
+                            if !held.is_empty() {
+                                let i = pick as usize % held.len();
+                                let (s, m) = held.swap_remove(i);
+                                p.release(s, m);
+                            }
+                        }
+                        6 => {
+                            p.retire_node(n);
+                            up[n as usize] = false;
+                        }
+                        _ => {
+                            p.restore_node(n);
+                            up[n as usize] = true;
+                        }
+                    }
+                    p.check_invariants()?;
+                    ensure(
+                        p.busy_count() == held.len(),
+                        format!("busy {} != held {}", p.busy_count(), held.len()),
+                    )?;
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

@@ -114,6 +114,13 @@ pub struct ExperimentConfig {
     /// Observation window (virtual s) of the `service` experiment's
     /// horizon-bounded runs.
     pub service_horizon: f64,
+    /// MTBF sweep for the `churn` experiment, as fractions of the
+    /// observation window: each node draws exponential failures with
+    /// mean `frac × window` (smaller = harsher churn).
+    pub churn_mtbf_fracs: Vec<f64>,
+    /// Mean time-to-repair of the `churn` experiment, as a fraction of
+    /// the observation window.
+    pub churn_mttr_frac: f64,
     /// Total-task-count sweep of the `scale` experiment (the 10⁴–10⁵
     /// short-job regime of Byun et al.).
     pub scale_ns: Vec<u32>,
@@ -141,6 +148,8 @@ impl Default for ExperimentConfig {
             preempt_hi_frac: 0.25,
             service_fracs: vec![0.25, 0.5],
             service_horizon: 240.0,
+            churn_mtbf_fracs: vec![4.0, 1.0, 0.25],
+            churn_mttr_frac: 0.05,
             scale_ns: vec![1_000, 3_000, 10_000, 30_000, 100_000],
             scale_procs: vec![1_000, 10_000],
         }
@@ -206,6 +215,19 @@ impl ExperimentConfig {
                 }
                 "experiment.service_horizon" => {
                     cfg.service_horizon = value.as_f64().ok_or_else(|| bad(key))?
+                }
+                "experiment.churn_mtbf_fracs" => {
+                    let arr = match value {
+                        TomlValue::Array(xs) => xs,
+                        _ => return Err(bad(key)),
+                    };
+                    cfg.churn_mtbf_fracs = arr
+                        .iter()
+                        .map(|v| v.as_f64().ok_or_else(|| bad(key)))
+                        .collect::<Result<_, _>>()?;
+                }
+                "experiment.churn_mttr_frac" => {
+                    cfg.churn_mttr_frac = value.as_f64().ok_or_else(|| bad(key))?
                 }
                 "experiment.scale_ns" => {
                     let arr = match value {
@@ -322,6 +344,17 @@ impl ExperimentConfig {
         }
         if !(self.service_horizon.is_finite() && self.service_horizon > 0.0) {
             return Err("service_horizon must be finite and > 0".into());
+        }
+        if self.churn_mtbf_fracs.is_empty()
+            || self
+                .churn_mtbf_fracs
+                .iter()
+                .any(|&f| !f.is_finite() || f <= 0.0)
+        {
+            return Err("churn_mtbf_fracs must be non-empty, finite, > 0".into());
+        }
+        if !(self.churn_mttr_frac.is_finite() && self.churn_mttr_frac > 0.0) {
+            return Err("churn_mttr_frac must be finite and > 0".into());
         }
         if self.scale_ns.is_empty() || self.scale_ns.iter().any(|&n| n == 0) {
             return Err("scale_ns must be non-empty, positive".into());
@@ -452,6 +485,21 @@ n_sweep = [4, 240]
         assert!(ExperimentConfig::from_toml("[experiment]\nservice_fracs = [1.5]").is_err());
         assert!(ExperimentConfig::from_toml("[experiment]\nservice_fracs = []").is_err());
         assert!(ExperimentConfig::from_toml("[experiment]\nservice_horizon = 0").is_err());
+    }
+
+    #[test]
+    fn churn_keys_parse_and_validate() {
+        let c = ExperimentConfig::from_toml(
+            "[experiment]\nchurn_mtbf_fracs = [2.0, 0.5]\nchurn_mttr_frac = 0.1",
+        )
+        .unwrap();
+        assert_eq!(c.churn_mtbf_fracs, vec![2.0, 0.5]);
+        assert!((c.churn_mttr_frac - 0.1).abs() < 1e-12);
+        assert!(ExperimentConfig::from_toml("[experiment]\nchurn_mtbf_fracs = []").is_err());
+        assert!(
+            ExperimentConfig::from_toml("[experiment]\nchurn_mtbf_fracs = [0.0]").is_err()
+        );
+        assert!(ExperimentConfig::from_toml("[experiment]\nchurn_mttr_frac = 0").is_err());
     }
 
     #[test]

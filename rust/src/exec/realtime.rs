@@ -166,6 +166,10 @@ impl RealtimeCoordinator {
             daemon_busy: self.params.dispatch_overhead * tasks.len() as f64,
             waits,
             preemptions: 0,
+            kills: 0,
+            failed: 0,
+            completed: tasks.len() as u64,
+            wasted_core_seconds: 0.0,
             horizon: None,
             busy_core_seconds: 0.0,
             trace: Some(trace),

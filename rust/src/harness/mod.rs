@@ -13,6 +13,7 @@
 //! | `scenarios`| workload-space sweep: array / multicore / DAG / gang / arrivals × all schedulers |
 //! | `preempt`  | preemption sweep: checkpoint cost × ordering × all schedulers, fairness vs ΔT |
 //! | `service`  | service-footprint sweep: resident services × Poisson short tasks × all schedulers, windowed utilization |
+//! | `churn`    | fault-injection sweep: seeded node failure/repair churn × retry budget × all schedulers, goodput + lost work + completion coverage |
 //! | `scale`    | simulator wall-time scaling at 10⁴–10⁵ tasks: n × P × all schedulers + ordered/preemptive rows, fitted log-log exponent |
 
 //! All experiment runners route their `(scheduler, n, trial)`
@@ -41,8 +42,9 @@ pub use scale::{
     ScaleReport, SCALE_ALPHA_CEILING, SCALE_CORES_PER_NODE, SCALE_GATE_MIN_N, SCALE_PREEMPT_BG,
 };
 pub use scenarios::{
-    preempt, scenarios, service, PreemptCell, PreemptReport, ScenarioCell, ScenariosReport,
-    ServiceCell, ServiceReport, GANG_SIZE,
+    churn, preempt, scenarios, service, ChurnCell, ChurnReport, PreemptCell, PreemptReport,
+    ScenarioCell, ScenariosReport, ServiceCell, ServiceReport, CHURN_ARRIVAL_SPAN,
+    CHURN_RETRY_BUDGETS, GANG_SIZE,
 };
 pub use sweep::{run_sweep, run_sweeps, SchedulerSweep, SweepPoint, SweepSpec, PROHIBITIVE_SECS};
 pub use table10::{table10, Table10Report};

@@ -24,6 +24,7 @@
 
 use super::parallel::run_cells;
 use super::sweep::{trial_mean, PROHIBITIVE_SECS};
+use crate::cluster::FaultPlan;
 use crate::config::{ExperimentConfig, SchedulerChoice};
 use crate::sched::combinators::{self, Order};
 use crate::sched::{make_scheduler_scaled, RunOptions, RunResult, Scheduler};
@@ -1041,6 +1042,477 @@ impl ServiceReport {
     }
 }
 
+// ---- the `churn` experiment family ----------------------------------------
+
+/// Retry budgets swept by the churn experiment: fail-fast (a single
+/// kill exhausts the task) vs the default budget of batch tasks.
+pub const CHURN_RETRY_BUDGETS: [u32; 2] = [0, 3];
+
+/// Fraction of the observation window the Poisson arrival stream
+/// spans. Keeping arrivals inside the first ~45% leaves every task
+/// enough residual window to complete (and to absorb a few retries),
+/// so a fault-free run reaches 100% completion coverage and any
+/// shortfall in a churn cell is attributable to the injected faults.
+pub const CHURN_ARRIVAL_SPAN: f64 = 0.45;
+
+/// One (MTBF row, retry budget, scheduler) cell of the churn sweep.
+pub struct ChurnCell {
+    /// Mean time between failures as a fraction of the horizon;
+    /// `None` is the fault-free control row (MTBF = ∞), the gentlest
+    /// point of the sweep and the CI-gated baseline.
+    pub mtbf_frac: Option<f64>,
+    /// Per-task retry budget of this cell's workload variant.
+    pub retry_budget: u32,
+    /// Scheduler display name.
+    pub scheduler: String,
+    /// One traced, horizon-bounded, fault-injected result per trial.
+    pub trials: Vec<RunResult>,
+}
+
+/// Per-task dispatch counts of one trial folded into a retry
+/// histogram: `hist[k]` = tasks observed with `k` retries (`k + 1`
+/// productive dispatches; kernel-aborted launches never started and
+/// do not count). Tasks the window closed on before any dispatch sit
+/// in `hist[0]`. Fault-free runs carry no span accounting, so the
+/// trace (one record per started task) stands in.
+fn churn_retry_hist(r: &RunResult) -> Vec<u64> {
+    let mut dispatches = vec![0u32; r.n_tasks as usize];
+    if let Some(spans) = &r.spans {
+        for s in spans {
+            dispatches[s.task as usize] += 1;
+        }
+    } else if let Some(trace) = &r.trace {
+        for rec in trace {
+            dispatches[rec.task as usize] += 1;
+        }
+    }
+    let mut hist: Vec<u64> = Vec::new();
+    for &d in &dispatches {
+        let k = d.saturating_sub(1) as usize;
+        if hist.len() <= k {
+            hist.resize(k + 1, 0);
+        }
+        hist[k] += 1;
+    }
+    hist
+}
+
+/// Compact "0:812 1:14 2:1" rendering of a retry histogram.
+fn hist_string(hist: &[u64]) -> String {
+    hist.iter()
+        .enumerate()
+        .filter(|&(k, &n)| n > 0 || k == 0)
+        .map(|(k, n)| format!("{k}:{n}"))
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+impl ChurnCell {
+    /// Mean windowed utilization across trials.
+    pub fn mean_utilization(&self) -> f64 {
+        trial_mean(&self.trials, |r| r.utilization())
+    }
+
+    /// Mean goodput utilization (productive work not later lost to a
+    /// kill) across trials.
+    pub fn mean_goodput(&self) -> f64 {
+        trial_mean(&self.trials, |r| r.goodput_utilization())
+    }
+
+    /// Mean executed-then-lost core-seconds across trials.
+    pub fn mean_wasted(&self) -> f64 {
+        trial_mean(&self.trials, |r| r.wasted_core_seconds)
+    }
+
+    /// Total kills across trials.
+    pub fn kills(&self) -> u64 {
+        self.trials.iter().map(|r| r.kills).sum()
+    }
+
+    /// Total retry-budget exhaustions across trials.
+    pub fn failed(&self) -> u64 {
+        self.trials.iter().map(|r| r.failed).sum()
+    }
+
+    /// Mean completion coverage (`completed / n_tasks`) across trials.
+    pub fn coverage(&self) -> f64 {
+        trial_mean(&self.trials, |r| {
+            r.completed as f64 / r.n_tasks.max(1) as f64
+        })
+    }
+
+    /// Retry histogram pooled over trials ([`churn_retry_hist`]).
+    pub fn retry_hist(&self) -> Vec<u64> {
+        let mut hist: Vec<u64> = Vec::new();
+        for r in &self.trials {
+            for (k, n) in churn_retry_hist(r).into_iter().enumerate() {
+                if hist.len() <= k {
+                    hist.resize(k + 1, 0);
+                }
+                hist[k] += n;
+            }
+        }
+        hist
+    }
+}
+
+/// Full churn sweep report.
+pub struct ChurnReport {
+    /// All cells: the control row first, then MTBF-major × budget,
+    /// scheduler-minor.
+    pub cells: Vec<ChurnCell>,
+    /// Tasks per processor n of the batch stream.
+    pub n: u32,
+    /// Batch task time t = T_job / n.
+    pub t: f64,
+    /// Observation window (virtual s).
+    pub horizon: f64,
+    /// Swept MTBF fractions (of the horizon).
+    pub mtbf_fracs: Vec<f64>,
+    /// MTTR as a fraction of the horizon.
+    pub mttr_frac: f64,
+}
+
+/// Run the churn sweep: {fault-free control} ∪ {MTBF fraction × retry
+/// budget} × every simulated scheduler family × `cfg.trials`,
+/// horizon-bounded, in one deterministic parallel batch. Every cell
+/// of an MTBF row faces the identical seeded failure schedule (plans
+/// are keyed by `(MTBF, trial)`, not by scheduler or budget), so the
+/// goodput/coverage comparison across schedulers is like-for-like.
+/// The horizon bounds every run's virtual time, so no
+/// prohibitive-skip pass is needed.
+pub fn churn(cfg: &ExperimentConfig) -> ChurnReport {
+    let cluster = crate::cluster::ClusterSpec::homogeneous(
+        cfg.effective_nodes(),
+        cfg.cores_per_node,
+        cfg.mem_mb,
+        (cfg.effective_nodes() / 2).max(1),
+    );
+    let processors = cluster.total_cores();
+    let h = cfg.service_horizon;
+    let choices = SchedulerChoice::all_simulated();
+    let schedulers: Vec<Box<dyn Scheduler>> = choices
+        .iter()
+        .map(|&c| make_scheduler_scaled(c, cfg.scale_down))
+        .collect();
+
+    // Pure-batch Poisson stream confined to the first CHURN_ARRIVAL_SPAN
+    // of the window; one workload variant per retry budget.
+    let n_scn = cfg.scenario_n.max(1);
+    let t = TABLE9_JOB_TIME_PER_PROC / n_scn as f64;
+    let rate = cfg.arrival_rho * processors as f64 / t;
+    let n_batch = ((rate * CHURN_ARRIVAL_SPAN * h).ceil() as u64).max(1);
+    let workloads: Vec<Workload> = CHURN_RETRY_BUDGETS
+        .iter()
+        .map(|&budget| {
+            let mut w = WorkloadBuilder::constant(t)
+                .tasks(n_batch)
+                .arrivals(ArrivalProcess::Poisson { rate })
+                .seed(cfg.seed)
+                .label("churn")
+                .build();
+            for task in &mut w.tasks {
+                task.max_retries = budget;
+            }
+            w.validate_for(&RunOptions::with_horizon(h))
+                .unwrap_or_else(|e| panic!("churn workload invalid: {e}"));
+            w
+        })
+        .collect();
+
+    // plans[0] is the fault-free control; seeded plans follow,
+    // MTBF-major then trial.
+    let mut plans: Vec<FaultPlan> = vec![FaultPlan::none()];
+    for (mi, &frac) in cfg.churn_mtbf_fracs.iter().enumerate() {
+        for trial in 0..cfg.trials {
+            let plan = FaultPlan::seeded(
+                cfg.seed
+                    .wrapping_add((mi as u64) << 32)
+                    .wrapping_add(trial as u64),
+                cfg.effective_nodes(),
+                frac * h,
+                cfg.churn_mttr_frac * h,
+                h,
+            );
+            plan.validate()
+                .unwrap_or_else(|e| panic!("seeded churn plan invalid: {e}"));
+            plans.push(plan);
+        }
+    }
+
+    // Row layout: control first (run once, at the largest budget — with
+    // no kills the budget is never consulted), then MTBF × budget.
+    struct Row {
+        mtbf_frac: Option<f64>,
+        mi: Option<usize>,
+        budget_idx: usize,
+    }
+    let mut rows: Vec<Row> = vec![Row {
+        mtbf_frac: None,
+        mi: None,
+        budget_idx: CHURN_RETRY_BUDGETS.len() - 1,
+    }];
+    for (mi, &frac) in cfg.churn_mtbf_fracs.iter().enumerate() {
+        for budget_idx in 0..CHURN_RETRY_BUDGETS.len() {
+            rows.push(Row {
+                mtbf_frac: Some(frac),
+                mi: Some(mi),
+                budget_idx,
+            });
+        }
+    }
+
+    struct Cell<'a> {
+        sched: usize,
+        slot: usize,
+        workload: &'a Workload,
+        plan: usize,
+        seed: u64,
+    }
+    let mut cells: Vec<Cell> = Vec::new();
+    let mut out: Vec<ChurnCell> = Vec::new();
+    for (ri, row) in rows.iter().enumerate() {
+        for (ki, sched) in schedulers.iter().enumerate() {
+            for trial in 0..cfg.trials {
+                cells.push(Cell {
+                    sched: ki,
+                    slot: out.len(),
+                    workload: &workloads[row.budget_idx],
+                    plan: row
+                        .mi
+                        .map_or(0, |mi| 1 + mi * cfg.trials as usize + trial as usize),
+                    seed: cfg
+                        .seed
+                        .wrapping_add(trial as u64)
+                        .wrapping_add((ri as u64) << 40)
+                        .wrapping_add((ki as u64) << 16),
+                });
+            }
+            out.push(ChurnCell {
+                mtbf_frac: row.mtbf_frac,
+                retry_budget: CHURN_RETRY_BUDGETS[row.budget_idx],
+                scheduler: sched.name().to_string(),
+                trials: Vec::with_capacity(cfg.trials as usize),
+            });
+        }
+    }
+
+    let results = run_cells(cfg.effective_jobs(), &cells, |cell, scratch| {
+        let options = RunOptions {
+            collect_trace: true,
+            horizon: Some(h),
+            faults: plans[cell.plan].clone(),
+            ..Default::default()
+        };
+        let sched = schedulers[cell.sched].as_ref();
+        let r = sched.run_with_scratch(cell.workload, &cluster, cell.seed, &options, scratch);
+        r.check_invariants()
+            .unwrap_or_else(|e| panic!("{} on churn: {e}", sched.name()));
+        r
+    });
+    for (cell, result) in cells.iter().zip(results) {
+        out[cell.slot].trials.push(result);
+    }
+
+    ChurnReport {
+        cells: out,
+        n: n_scn,
+        t,
+        horizon: h,
+        mtbf_fracs: cfg.churn_mtbf_fracs.clone(),
+        mttr_frac: cfg.churn_mttr_frac,
+    }
+}
+
+impl ChurnReport {
+    /// Rendered summary table: goodput vs raw windowed utilization,
+    /// lost-work and retry accounting, completion coverage.
+    pub fn render_table(&self) -> Table {
+        let mut table = Table::new(
+            format!(
+                "Node churn — goodput and retry accounting (horizon={} s, \
+                 MTTR={}·h, batch t={} s at n={})",
+                fnum(self.horizon),
+                self.mttr_frac,
+                fnum(self.t),
+                self.n
+            ),
+            &[
+                "MTBF/h",
+                "budget",
+                "scheduler",
+                "U(goodput)",
+                "U(window)",
+                "wasted core-s",
+                "kills",
+                "failed",
+                "coverage",
+                "retries",
+            ],
+        );
+        for c in &self.cells {
+            table.row(&[
+                c.mtbf_frac
+                    .map_or("none".to_string(), |f| format!("{f:.2}")),
+                c.retry_budget.to_string(),
+                c.scheduler.clone(),
+                format!("{:.3}", c.mean_goodput()),
+                format!("{:.3}", c.mean_utilization()),
+                fnum(c.mean_wasted()),
+                c.kills().to_string(),
+                c.failed().to_string(),
+                format!("{:.3}", c.coverage()),
+                hist_string(&c.retry_hist()),
+            ]);
+        }
+        table
+    }
+
+    /// CSV series, one row per trial.
+    pub fn to_csv(&self) -> String {
+        let mut table = Table::new(
+            "",
+            &[
+                "mtbf_frac",
+                "retry_budget",
+                "scheduler",
+                "trial",
+                "utilization",
+                "goodput_utilization",
+                "wasted_core_s",
+                "kills",
+                "failed",
+                "completed",
+                "n_tasks",
+                "retry_hist",
+            ],
+        );
+        for c in &self.cells {
+            for (trial, r) in c.trials.iter().enumerate() {
+                table.row(&[
+                    c.mtbf_frac
+                        .map_or("inf".to_string(), |f| format!("{f:.3}")),
+                    c.retry_budget.to_string(),
+                    c.scheduler.clone(),
+                    trial.to_string(),
+                    format!("{:.6}", r.utilization()),
+                    format!("{:.6}", r.goodput_utilization()),
+                    format!("{:.3}", r.wasted_core_seconds),
+                    r.kills.to_string(),
+                    r.failed.to_string(),
+                    r.completed.to_string(),
+                    r.n_tasks.to_string(),
+                    hist_string(&churn_retry_hist(r)),
+                ]);
+            }
+        }
+        table.to_csv()
+    }
+
+    /// Structural shape checks, including the CI-gated coverage
+    /// baseline: every cell ran all its trials as horizon-bounded
+    /// windows; the fault-free control row kills nothing, loses
+    /// nothing, fails nothing — and the zero-overhead reference
+    /// completes *every* task there (100% coverage; the smoke gate);
+    /// goodput never exceeds raw utilization; observed retries never
+    /// exceed the cell's budget; with a zero budget every kill is a
+    /// failure; and the harshest MTBF row actually kills something.
+    pub fn check_shape(&self, trials: u32) -> Result<(), String> {
+        for c in &self.cells {
+            let label = format!(
+                "mtbf {:?} budget {} × {}",
+                c.mtbf_frac, c.retry_budget, c.scheduler
+            );
+            if c.trials.len() != trials as usize {
+                return Err(format!(
+                    "{label}: {} of {trials} trials ran",
+                    c.trials.len()
+                ));
+            }
+            for r in &c.trials {
+                if r.horizon != Some(self.horizon) {
+                    return Err(format!(
+                        "{label}: result horizon {:?} != {}",
+                        r.horizon, self.horizon
+                    ));
+                }
+                if (r.t_total - self.horizon).abs() > 1e-9 {
+                    return Err(format!(
+                        "{label}: windowed t_total {} != horizon {}",
+                        r.t_total, self.horizon
+                    ));
+                }
+                if r.goodput_utilization() > r.utilization() + 1e-9 {
+                    return Err(format!(
+                        "{label}: goodput {} exceeds utilization {}",
+                        r.goodput_utilization(),
+                        r.utilization()
+                    ));
+                }
+                let hist = churn_retry_hist(r);
+                if hist.len() as u32 > c.retry_budget + 1 {
+                    return Err(format!(
+                        "{label}: observed {} retries, budget {}",
+                        hist.len() - 1,
+                        c.retry_budget
+                    ));
+                }
+                if c.retry_budget == 0 && c.mtbf_frac.is_some() && r.failed != r.kills {
+                    return Err(format!(
+                        "{label}: zero-budget row failed {} != kills {}",
+                        r.failed, r.kills
+                    ));
+                }
+            }
+            if c.mtbf_frac.is_none() {
+                if c.kills() != 0 || c.failed() != 0 || c.mean_wasted() != 0.0 {
+                    return Err(format!(
+                        "control × {}: fault-free row reports kills={} \
+                         failed={} wasted={}",
+                        c.scheduler,
+                        c.kills(),
+                        c.failed(),
+                        c.mean_wasted()
+                    ));
+                }
+                if c.coverage() <= 0.0 {
+                    return Err(format!(
+                        "control × {}: no task completed",
+                        c.scheduler
+                    ));
+                }
+                if c.scheduler == "IdealFIFO" && (c.coverage() - 1.0).abs() > 1e-12 {
+                    return Err(format!(
+                        "control × IdealFIFO: completion coverage {} < 100% — \
+                         the workload no longer fits its window fault-free",
+                        c.coverage()
+                    ));
+                }
+            }
+        }
+        if let Some(harshest) = self
+            .mtbf_fracs
+            .iter()
+            .copied()
+            .min_by(|a, b| a.total_cmp(b))
+        {
+            let kills: u64 = self
+                .cells
+                .iter()
+                .filter(|c| c.mtbf_frac == Some(harshest))
+                .map(|c| c.kills())
+                .sum();
+            if kills == 0 {
+                return Err(format!(
+                    "harshest MTBF row ({harshest}·h) killed nothing — the \
+                     fault machinery was not exercised"
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1124,6 +1596,66 @@ mod tests {
                     ca.frac
                 );
                 assert_eq!(ra.events, rb.events);
+            }
+        }
+    }
+
+    #[test]
+    fn churn_runs_and_passes_shape_checks() {
+        let cfg = quick_cfg();
+        let rep = churn(&cfg);
+        rep.check_shape(cfg.trials).unwrap();
+        // Control row + 3 MTBF fracs × 2 budgets, × 6 schedulers;
+        // nothing skipped (the horizon bounds every run).
+        assert_eq!(
+            rep.cells.len(),
+            (1 + rep.mtbf_fracs.len() * CHURN_RETRY_BUDGETS.len()) * 6
+        );
+        assert!(!rep.to_csv().is_empty());
+        // The harshest row exercises the fault machinery on every
+        // scheduler family combined.
+        let harshest = rep
+            .mtbf_fracs
+            .iter()
+            .copied()
+            .min_by(|a, b| a.total_cmp(b))
+            .unwrap();
+        let harsh_kills: u64 = rep
+            .cells
+            .iter()
+            .filter(|c| c.mtbf_frac == Some(harshest))
+            .map(|c| c.kills())
+            .sum();
+        assert!(harsh_kills > 0, "harshest row killed nothing");
+    }
+
+    #[test]
+    fn churn_deterministic_across_jobs() {
+        let mut a_cfg = quick_cfg();
+        a_cfg.jobs = 1;
+        let mut b_cfg = a_cfg.clone();
+        b_cfg.jobs = 4;
+        let a = churn(&a_cfg);
+        let b = churn(&b_cfg);
+        assert_eq!(a.cells.len(), b.cells.len());
+        assert_eq!(a.to_csv(), b.to_csv(), "churn CSVs must not depend on --jobs");
+        for (ca, cb) in a.cells.iter().zip(&b.cells) {
+            assert_eq!(ca.scheduler, cb.scheduler);
+            for (ra, rb) in ca.trials.iter().zip(&cb.trials) {
+                assert_eq!(
+                    ra.busy_core_seconds.to_bits(),
+                    rb.busy_core_seconds.to_bits(),
+                    "{} mtbf {:?}",
+                    ca.scheduler,
+                    ca.mtbf_frac
+                );
+                assert_eq!(
+                    ra.wasted_core_seconds.to_bits(),
+                    rb.wasted_core_seconds.to_bits()
+                );
+                assert_eq!(ra.events, rb.events);
+                assert_eq!(ra.kills, rb.kills);
+                assert_eq!(ra.failed, rb.failed);
             }
         }
     }

@@ -4,7 +4,7 @@
 //! Subcommands:
 //!   features    render the paper's feature-comparison Tables 1–7
 //!   experiment  run table9 | table10 | fig4 | fig5 | fig6 | fig7 |
-//!               scenarios | preempt | service | scale | all
+//!               scenarios | preempt | service | churn | scale | all
 //!   serve       realtime mini-cluster (leader + worker threads, PJRT payloads)
 //!   validate    run every experiment's shape checks at reduced scale
 //!
@@ -52,7 +52,7 @@ fn usage() {
         "usage: sssched <command> [options]\n\
          commands:\n\
          \x20 features   [--table 1..7] [--csv]\n\
-         \x20 experiment <table9|table10|fig4|fig5|fig6|fig7|scenarios|preempt|service|scale|all> \
+         \x20 experiment <table9|table10|fig4|fig5|fig6|fig7|scenarios|preempt|service|churn|scale|all> \
          [--config f] [--quick] [--trials N] [--jobs N] [--out-dir d] [--artifacts d] [--csv]\n\
          \x20 serve      [--workers N] [--tasks N] [--task-ms MS] \
          [--payload sleep|spin|analytics] [--ts SECS] [--artifacts d]\n\
@@ -212,6 +212,16 @@ fn cmd_experiment(args: &Args) -> i32 {
                 println!("shape checks: OK");
                 write_out(&cfg, "service.csv", &rep.to_csv());
             }
+            "churn" => {
+                let rep = harness::churn(&cfg);
+                println!("{}", rep.render_table().render());
+                if let Err(e) = rep.check_shape(cfg.trials) {
+                    eprintln!("shape check FAILED: {e}");
+                    return 1;
+                }
+                println!("shape checks (incl. fault-free coverage gate): OK");
+                write_out(&cfg, "churn.csv", &rep.to_csv());
+            }
             "scale" => {
                 let rep = harness::scale(&cfg);
                 println!("{}", rep.render_table().render());
@@ -241,6 +251,7 @@ fn cmd_experiment(args: &Args) -> i32 {
             "scenarios",
             "preempt",
             "service",
+            "churn",
             "scale",
         ] {
             let rc = run(name);
@@ -354,6 +365,7 @@ fn cmd_validate(args: &Args) -> i32 {
         "service shapes",
         harness::service(&cfg).check_shape(cfg.trials),
     );
+    check("churn shapes", harness::churn(&cfg).check_shape(cfg.trials));
     check("scale shapes", harness::scale(&cfg).check_shape(&cfg));
     if failures == 0 {
         println!("all shape checks passed");

@@ -53,6 +53,10 @@ mod tests {
             daemon_busy: 0.0,
             waits: Summary::new(),
             preemptions: 0,
+            kills: 0,
+            failed: 0,
+            completed: (n * p as f64) as u64,
+            wasted_core_seconds: 0.0,
             horizon: None,
             busy_core_seconds: 0.0,
             trace: None,

@@ -146,6 +146,14 @@ impl<'a> Scheduler for Multilevel<'a> {
         // The aggregated workload is P tasks — small next to the N-task
         // input — so building it per run is off the zero-alloc critical
         // path; the inner simulation reuses the scratch.
+        //
+        // Fault plans pass straight through to the inner backend's
+        // kernel run: a node failure kills the mapper bundles running
+        // there and the inner scheduler retries each whole bundle
+        // elsewhere under `TaskSpec::max_retries`. Aggregation widens
+        // the blast radius — one kill loses the bundle's entire
+        // accumulated work, the price of hiding N tasks inside P — but
+        // no bundle is ever stranded on a dead node.
         let aggregated = self.aggregate(workload, processors, seed);
         let mut result = self
             .inner
@@ -233,6 +241,26 @@ mod tests {
         improved.check_invariants().unwrap();
         // Same isolated job time accounting.
         assert!((improved.t_job - base.t_job).abs() < 1e-9);
+    }
+
+    #[test]
+    fn node_failure_retries_whole_bundles() {
+        use crate::cluster::FaultPlan;
+        // 16 bundles of ~11 s fill all 16 slots; node 0 dies at t=5,
+        // killing the 8 bundles running there. Each retries elsewhere
+        // from zero (aggregation loses the whole bundle's work).
+        let inner = CentralizedSim::new(calibration::slurm_params());
+        let ml = Multilevel::new(&inner, MultilevelParams::default());
+        let w = WorkloadBuilder::constant(1.0).tasks(160).label("mlf").build();
+        let mut options = RunOptions::default();
+        options.faults = FaultPlan::none().fail(5.0, 0);
+        let r = ml.run(&w, &cluster(), 3, &options);
+        r.check_invariants().unwrap();
+        assert_eq!(r.kills, 8, "one bundle per slot on the dead node");
+        assert_eq!(r.failed, 0, "retry budget absorbs one kill");
+        assert!(r.wasted_core_seconds > 8.0 * 3.0, "each lost ~5 s minus dispatch");
+        let baseline = ml.run(&w, &cluster(), 3, &RunOptions::default());
+        assert!(r.t_total > baseline.t_total, "retries on half capacity cost time");
     }
 
     #[test]

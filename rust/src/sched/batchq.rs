@@ -187,6 +187,35 @@ impl SchedPolicy for BatchPolicy {
             self.pass(ctx, now);
         }
     }
+
+    fn on_node_fail(&mut self, ctx: &mut KernelCtx, now: Time, _node: crate::cluster::NodeId) {
+        // Killed tasks re-enter the queue through the normal ordering
+        // (a retry keeps its job's priority and fairshare usage); the
+        // queue is event-driven, so give it the dispatch pass a
+        // release would have triggered. Stale backfill shadows from
+        // the killed runs only skew reservation estimates until the
+        // retries land — the shadows were estimates already.
+        if !ctx.has_more_events_at(now) {
+            self.pass(ctx, now);
+        }
+    }
+
+    fn on_node_drain(&mut self, ctx: &mut KernelCtx, now: Time, _node: crate::cluster::NodeId) {
+        // A drain frees nothing and requeues nothing, but the
+        // decision-instant discipline (see `on_arrive`) defers the
+        // dispatch pass to the LAST same-instant event — which this
+        // may be when a plan drains and fails nodes at one timestamp.
+        if !ctx.has_more_events_at(now) {
+            self.pass(ctx, now);
+        }
+    }
+
+    fn on_node_recover(&mut self, ctx: &mut KernelCtx, now: Time, _node: crate::cluster::NodeId) {
+        // Restored slots re-enter the pool without SlotFree events.
+        if !ctx.has_more_events_at(now) {
+            self.pass(ctx, now);
+        }
+    }
 }
 
 impl BatchQueueSim {

@@ -149,6 +149,13 @@ impl SchedPolicy for CentralizedPolicy<'_> {
         Some(fin + teardown)
     }
 
+    // Node faults need no dedicated hooks here: the daemon's periodic
+    // queue-management cycle (`on_tick`) already re-scans the pending
+    // queue, so a killed task requeued by the kernel is re-admitted on
+    // the next cycle exactly like a fresh arrival — which is how
+    // slurmctld/sge_qmaster treat a requeued job — and a recovered
+    // node's slots simply show up free to the next dispatch scan.
+
     fn daemon_busy(&self) -> f64 {
         self.daemon.busy()
     }

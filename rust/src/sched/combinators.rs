@@ -36,7 +36,7 @@
 //! victim re-queues behind the trigger task, which terminates but
 //! thrashes; priority ordering gives preemption its intent.
 
-use crate::cluster::{ClusterSpec, SlotId};
+use crate::cluster::{ClusterSpec, NodeId, SlotId};
 use crate::sched::{RunOptions, RunResult, Scheduler};
 use crate::sim::{Kernel, KernelCtx, LaunchFn, OrderMode, SchedPolicy, SimScratch, Time};
 use crate::workload::{JobKind, TaskId, TaskSpec, Workload};
@@ -354,6 +354,23 @@ impl<P: SchedPolicy> SchedPolicy for Ordered<P> {
         self.inner.on_resume(ctx, now, task, slot);
     }
 
+    fn on_node_fail(&mut self, ctx: &mut KernelCtx, now: Time, node: NodeId) {
+        // Killed tasks re-entered the overlay through the normal
+        // requeue path with their original priority/usage; refresh the
+        // eager oracle before the inner policy reacts.
+        self.refresh(ctx);
+        self.inner.on_node_fail(ctx, now, node);
+    }
+
+    fn on_node_drain(&mut self, ctx: &mut KernelCtx, now: Time, node: NodeId) {
+        self.inner.on_node_drain(ctx, now, node);
+    }
+
+    fn on_node_recover(&mut self, ctx: &mut KernelCtx, now: Time, node: NodeId) {
+        self.refresh(ctx);
+        self.inner.on_node_recover(ctx, now, node);
+    }
+
     fn daemon_busy(&self) -> f64 {
         self.inner.daemon_busy()
     }
@@ -463,6 +480,22 @@ impl<P: SchedPolicy> SchedPolicy for Preemptive<P> {
     fn on_resume(&mut self, ctx: &mut KernelCtx, now: Time, task: TaskId, slot: SlotId) {
         self.resumes += 1;
         self.inner.on_resume(ctx, now, task, slot);
+    }
+
+    fn on_node_fail(&mut self, ctx: &mut KernelCtx, now: Time, node: NodeId) {
+        // A failure is not an eviction: the killed tasks' slots parked
+        // instantly (no checkpoint drain), so there is no in-flight
+        // capacity to track here — the next preemption pass simply sees
+        // the smaller free pool.
+        self.inner.on_node_fail(ctx, now, node);
+    }
+
+    fn on_node_drain(&mut self, ctx: &mut KernelCtx, now: Time, node: NodeId) {
+        self.inner.on_node_drain(ctx, now, node);
+    }
+
+    fn on_node_recover(&mut self, ctx: &mut KernelCtx, now: Time, node: NodeId) {
+        self.inner.on_node_recover(ctx, now, node);
     }
 
     fn on_preempt_candidates(&mut self, ctx: &mut KernelCtx, now: Time, out: &mut Vec<TaskId>) {
@@ -616,6 +649,15 @@ impl<P: SchedPolicy + ?Sized> SchedPolicy for Box<P> {
     }
     fn on_resume(&mut self, ctx: &mut KernelCtx, now: Time, task: TaskId, slot: SlotId) {
         (**self).on_resume(ctx, now, task, slot)
+    }
+    fn on_node_fail(&mut self, ctx: &mut KernelCtx, now: Time, node: NodeId) {
+        (**self).on_node_fail(ctx, now, node)
+    }
+    fn on_node_drain(&mut self, ctx: &mut KernelCtx, now: Time, node: NodeId) {
+        (**self).on_node_drain(ctx, now, node)
+    }
+    fn on_node_recover(&mut self, ctx: &mut KernelCtx, now: Time, node: NodeId) {
+        (**self).on_node_recover(ctx, now, node)
     }
     fn daemon_busy(&self) -> f64 {
         (**self).daemon_busy()

@@ -11,7 +11,7 @@
 
 use super::result::{RunOptions, RunResult};
 use super::Scheduler;
-use crate::cluster::ClusterSpec;
+use crate::cluster::{ClusterSpec, NodeId};
 use crate::sim::{Kernel, KernelCtx, Launch, SchedPolicy, SimScratch, Time};
 use crate::workload::{TaskId, Workload};
 
@@ -46,6 +46,22 @@ impl SchedPolicy for IdealPolicy {
     }
 
     fn on_slot_free(&mut self, ctx: &mut KernelCtx, now: Time) {
+        ctx.drain_fifo(&mut |_, _| Launch::start(now));
+    }
+
+    fn on_node_fail(&mut self, ctx: &mut KernelCtx, now: Time, _node: NodeId) {
+        // The kernel killed and requeued the node's tasks before this
+        // hook; re-place them on whatever healthy capacity is free.
+        // An event-driven policy has no tick to fall back on — without
+        // this, requeued work would wait for an unrelated completion
+        // (or strand outright on an otherwise-idle cluster).
+        ctx.drain_fifo(&mut |_, _| Launch::start(now));
+    }
+
+    fn on_node_recover(&mut self, ctx: &mut KernelCtx, now: Time, _node: NodeId) {
+        // Restored slots re-enter the free pool without SlotFree
+        // events; give pending work the dispatch pass a release would
+        // have triggered.
         ctx.drain_fifo(&mut |_, _| Launch::start(now));
     }
 }
@@ -106,6 +122,40 @@ mod tests {
         let w = WorkloadBuilder::constant(2.0).tasks(8).dag_chains(4).build();
         let r = IdealFifo.run(&w, &cluster, 0, &RunOptions::default());
         assert!((r.t_total - 8.0).abs() < 1e-9, "t_total={}", r.t_total);
+    }
+
+    #[test]
+    fn node_failure_requeues_onto_survivors_exactly() {
+        use crate::cluster::FaultPlan;
+        let cluster = ClusterSpec::homogeneous(2, 4, 32 * 1024, 2);
+        // 8 tasks of 4 s fill all 8 slots at t=0. Node 0 (slots 0..4)
+        // dies at t=1: its 4 tasks lose 1 s each and requeue; node 1's
+        // tasks finish at 4, freeing slots for the retries -> exactly 8.
+        let w = WorkloadBuilder::constant(4.0).tasks(8).label("f").build();
+        let mut options = RunOptions::default();
+        options.faults = FaultPlan::none().fail(1.0, 0);
+        let r = IdealFifo.run(&w, &cluster, 0, &options);
+        r.check_invariants().unwrap();
+        assert_eq!(r.kills, 4);
+        assert_eq!(r.failed, 0);
+        assert!((r.wasted_core_seconds - 4.0).abs() < 1e-9);
+        assert!((r.t_total - 8.0).abs() < 1e-9, "t_total={}", r.t_total);
+    }
+
+    #[test]
+    fn recovery_redispatches_pending_retries_immediately() {
+        use crate::cluster::FaultPlan;
+        let cluster = ClusterSpec::homogeneous(2, 4, 32 * 1024, 2);
+        // Same failure, but the node returns at t=2: the 4 retries must
+        // restart on the recovered capacity at t=2 (ending at 6), not
+        // wait for node 1's completions at t=4.
+        let w = WorkloadBuilder::constant(4.0).tasks(8).label("r").build();
+        let mut options = RunOptions::default();
+        options.faults = FaultPlan::none().fail(1.0, 0).recover(2.0, 0);
+        let r = IdealFifo.run(&w, &cluster, 0, &options);
+        r.check_invariants().unwrap();
+        assert_eq!(r.kills, 4);
+        assert!((r.t_total - 6.0).abs() < 1e-9, "t_total={}", r.t_total);
     }
 
     #[test]

@@ -128,6 +128,14 @@ impl SchedPolicy for MesosPolicy<'_> {
         Some(fin + self.p.agent_teardown)
     }
 
+    // Node faults need no dedicated hooks: offers are regenerated from
+    // the live free-slot pool every `offer_interval`, so a dead
+    // agent's resources never appear in the next offer batch — the
+    // master has effectively rescinded them — and the kernel requeues
+    // its killed tasks for the framework to accept against a later
+    // round. Recovery is just the agent re-registering: its slots are
+    // back in the next offer.
+
     fn daemon_busy(&self) -> f64 {
         self.master.busy()
     }

@@ -1,6 +1,7 @@
 //! Simulation run results and the utilization arithmetic of the paper's
 //! Section 4/5: U = T_job / T_total.
 
+use crate::cluster::FaultPlan;
 use crate::util::stats::Summary;
 use crate::workload::TraceRecord;
 
@@ -21,6 +22,12 @@ pub struct RunOptions {
     /// classic run-to-completion mode; service tasks are rejected there
     /// because they never complete.
     pub horizon: Option<f64>,
+    /// Deterministic node-lifecycle schedule injected into the run
+    /// (mid-run failures, drains, recoveries). Empty (the default)
+    /// bypasses the fault machinery entirely — runs are bit-identical
+    /// to pre-fault-plan builds. Validated by
+    /// [`crate::workload::Workload::validate_for`].
+    pub faults: FaultPlan,
 }
 
 impl RunOptions {
@@ -37,6 +44,14 @@ impl RunOptions {
     pub fn with_horizon(horizon: f64) -> Self {
         Self {
             horizon: Some(horizon),
+            ..Default::default()
+        }
+    }
+
+    /// Fault-injecting options.
+    pub fn with_faults(faults: FaultPlan) -> Self {
+        Self {
+            faults,
             ..Default::default()
         }
     }
@@ -94,6 +109,25 @@ pub struct RunResult {
     /// Evictions executed by the kernel's preemption subsystem (0 for
     /// workloads without preemptible tasks).
     pub preemptions: u64,
+    /// Task kills executed by the fault subsystem: each node failure
+    /// kills every task running there, losing its non-checkpointed work
+    /// (unlike an eviction, which banks progress). 0 without a fault
+    /// plan.
+    pub kills: u64,
+    /// Tasks that exhausted their retry budget (or were cascade-failed
+    /// by a failed dependency) and never completed. 0 without a fault
+    /// plan.
+    pub failed: u64,
+    /// Tasks that ran to completion. A horizonless run completes every
+    /// non-failed task (`completed + failed == n_tasks`); a
+    /// horizon-bounded run counts only tasks finished inside the window
+    /// (services never are). The `churn` experiment's completion
+    /// coverage is `completed / n_tasks`.
+    pub completed: u64,
+    /// Core-seconds of executed-then-lost work: the integral of killed
+    /// runs' spans weighted by core count. Goodput subtracts this from
+    /// the busy integral. 0 without a fault plan.
+    pub wasted_core_seconds: f64,
     /// Observation window of a horizon-bounded run ([`RunOptions::horizon`]);
     /// `None` for classic run-to-completion trials. When set, `t_total`
     /// equals the window length.
@@ -142,6 +176,21 @@ impl RunResult {
         self.n_tasks as f64 / self.processors as f64
     }
 
+    /// Goodput utilization of a windowed run: productive core-seconds
+    /// that were *not* later lost to a node failure, over `P · h` —
+    /// `(busy − wasted) / (P · h)`. Equals [`Self::utilization`] when
+    /// nothing was killed; horizonless runs fall back to it.
+    pub fn goodput_utilization(&self) -> f64 {
+        if let Some(h) = self.horizon {
+            if h <= 0.0 || self.processors == 0 {
+                return 0.0;
+            }
+            return (self.busy_core_seconds - self.wasted_core_seconds).max(0.0)
+                / (h * self.processors as f64);
+        }
+        self.utilization()
+    }
+
     /// Sanity invariants every run must satisfy (used by tests).
     pub fn check_invariants(&self) -> Result<(), String> {
         if !(self.t_total.is_finite() && self.t_total >= 0.0) {
@@ -161,6 +210,30 @@ impl RunResult {
         }
         if !(self.daemon_busy.is_finite() && self.daemon_busy >= 0.0) {
             return Err(format!("bad daemon_busy {}", self.daemon_busy));
+        }
+        if !(self.wasted_core_seconds.is_finite() && self.wasted_core_seconds >= 0.0) {
+            return Err(format!(
+                "bad wasted_core_seconds {}",
+                self.wasted_core_seconds
+            ));
+        }
+        if self.failed > self.n_tasks {
+            return Err(format!(
+                "{} failed tasks out of {}",
+                self.failed, self.n_tasks
+            ));
+        }
+        if self.completed + self.failed > self.n_tasks {
+            return Err(format!(
+                "{} completed + {} failed exceeds {} tasks",
+                self.completed, self.failed, self.n_tasks
+            ));
+        }
+        if self.horizon.is_none() && self.completed + self.failed != self.n_tasks {
+            return Err(format!(
+                "horizonless run completed {} + failed {} != {} tasks",
+                self.completed, self.failed, self.n_tasks
+            ));
         }
         if self.waits.count() > self.n_tasks {
             return Err(format!(
@@ -197,27 +270,34 @@ impl RunResult {
                         self.busy_core_seconds
                     ));
                 }
-                // Preemption accounting: a traced preempt run records
-                // one span per dispatch, so spans = completions (= N,
-                // every task finishes in a horizonless run) + evictions.
+                // Preemption/kill accounting: a traced run records one
+                // span per dispatch, so spans = completions (= N −
+                // failed; every non-failed task finishes in a
+                // horizonless run) + evictions + kills.
                 if let (Some(spans), Some(_)) = (&self.spans, &self.trace) {
-                    if spans.len() as u64 != self.n_tasks + self.preemptions {
+                    let expect = self.n_tasks - self.failed + self.preemptions + self.kills;
+                    if spans.len() as u64 != expect {
                         return Err(format!(
-                            "{} spans for {} tasks + {} preemptions",
+                            "{} spans for {} tasks − {} failed + {} preemptions + {} kills",
                             spans.len(),
                             self.n_tasks,
-                            self.preemptions
+                            self.failed,
+                            self.preemptions,
+                            self.kills
                         ));
                     }
                 }
             }
         }
         if let Some(trace) = &self.trace {
-            // A window can close before every task starts; a
-            // run-to-completion trial must start (and record) them all.
-            // Either way a task never has more than one record.
+            // A window can close before every task starts, and a failed
+            // task may never have started (dep-cascade); a
+            // run-to-completion trial must start (and record) every
+            // other task. Either way a task never has more than one
+            // record.
             if trace.len() as u64 > self.n_tasks
-                || (self.horizon.is_none() && (trace.len() as u64) < self.n_tasks)
+                || (self.horizon.is_none()
+                    && (trace.len() as u64) < self.n_tasks - self.failed)
             {
                 return Err(format!(
                     "trace has {} records for {} tasks (horizon {:?})",
@@ -265,6 +345,10 @@ mod tests {
             daemon_busy: 0.0,
             waits: Summary::new(),
             preemptions: 0,
+            kills: 0,
+            failed: 0,
+            completed: 10,
+            wasted_core_seconds: 0.0,
             horizon: None,
             busy_core_seconds: 0.0,
             trace: None,
@@ -362,5 +446,44 @@ mod tests {
         r.check_invariants().unwrap();
         r.spans = spans(2);
         assert!(r.check_invariants().unwrap_err().contains("spans"));
+        // A kill also splits a span off; a failed task contributes its
+        // killed spans but no completion span.
+        r.preemptions = 0;
+        r.kills = 2;
+        r.failed = 1;
+        r.spans = spans(3); // (2 − 1 completions) + 2 kills = 3
+        r.check_invariants().unwrap();
+        r.spans = spans(4);
+        assert!(r.check_invariants().unwrap_err().contains("kills"));
+    }
+
+    #[test]
+    fn invariant_catches_bad_fault_accounting() {
+        let mut r = result(300.0, 240.0);
+        r.wasted_core_seconds = -1.0;
+        assert!(r.check_invariants().unwrap_err().contains("wasted"));
+        let mut r = result(300.0, 240.0);
+        r.wasted_core_seconds = f64::NAN;
+        assert!(r.check_invariants().is_err());
+        let mut r = result(300.0, 240.0);
+        r.failed = 11; // > n_tasks
+        assert!(r.check_invariants().unwrap_err().contains("failed"));
+    }
+
+    #[test]
+    fn goodput_subtracts_wasted_work_in_windowed_runs() {
+        // 2 processors, 10 s window: 15 busy core-seconds of which 5
+        // were later lost to kills -> U = 0.75, goodput = 0.5.
+        let mut r = result(10.0, 240.0);
+        r.horizon = Some(10.0);
+        r.busy_core_seconds = 15.0;
+        r.wasted_core_seconds = 5.0;
+        r.kills = 1;
+        assert!((r.utilization() - 0.75).abs() < 1e-12);
+        assert!((r.goodput_utilization() - 0.5).abs() < 1e-12);
+        r.check_invariants().unwrap();
+        // Horizonless: goodput falls back to the paper's definition.
+        let r = result(300.0, 240.0);
+        assert_eq!(r.goodput_utilization(), r.utilization());
     }
 }

@@ -18,10 +18,23 @@
 //! [`SchedPolicy::on_complete`] returns `None` and the kernel emits no
 //! `SlotFree` events. Multi-core tasks claim several distinct backlog
 //! slots; gangs place all members with a common synchronized start.
+//!
+//! **Faults.** Because the backlogs live policy-side, Sparrow reacts
+//! to node faults itself: a failed or drained node's worker backlogs
+//! are masked to infinity so probes skip them (the same mechanism that
+//! steers probes away from service-pinned workers), and recovery
+//! restores the saved backlog — zeroed for failures, whose running
+//! work was killed; kept for drains, whose running work finishes.
+//! Tasks the kernel killed or aborted re-enter the pending queue and
+//! are re-probed on the next placement pass. One approximation: the
+//! kernel tracks only a task's *primary* worker, so a multi-core task
+//! whose extra backlog slots sit on a failed node keeps running —
+//! acceptable for a scheduler whose backlogs are estimates to begin
+//! with.
 
 use super::result::{RunOptions, RunResult};
 use super::Scheduler;
-use crate::cluster::ClusterSpec;
+use crate::cluster::{ClusterSpec, NodeId};
 use crate::sim::{Kernel, KernelCtx, SchedPolicy, SimEv, SimScratch, Time};
 use crate::util::prng::Prng;
 use crate::workload::{JobKind, TaskId, Workload};
@@ -68,9 +81,41 @@ impl SparrowSim {
 struct SparrowPolicy<'p> {
     p: &'p SparrowParams,
     rng: Prng,
+    /// Whether each worker slot's node is currently down (failed or
+    /// drained); lazily sized on the first fault event.
+    down: Vec<bool>,
+    /// Backlog saved while a slot's node is down, restored on
+    /// recovery: drains keep the running work's backlog, failures zero
+    /// it (the work was killed).
+    saved_backlog: Vec<f64>,
 }
 
 impl SparrowPolicy<'_> {
+    /// Mask a down node's worker backlogs to infinity so probes skip
+    /// them, saving the pre-fault backlog for recovery.
+    fn mark_node_down(&mut self, ctx: &mut KernelCtx, node: NodeId, keep_backlog: bool) {
+        let slots = ctx.capacity();
+        if ctx.busy_until().len() < slots {
+            ctx.busy_until().resize(slots, 0.0);
+        }
+        if self.down.len() < slots {
+            self.down.resize(slots, false);
+            self.saved_backlog.resize(slots, 0.0);
+        }
+        for s in 0..slots {
+            if ctx.node_of_slot(s as u32) != node {
+                continue;
+            }
+            if !self.down[s] {
+                self.down[s] = true;
+                self.saved_backlog[s] = if keep_backlog { ctx.busy_until()[s] } else { 0.0 };
+            } else if !keep_backlog {
+                // A drained node failing outright loses its backlog too.
+                self.saved_backlog[s] = 0.0;
+            }
+            ctx.busy_until()[s] = f64::INFINITY;
+        }
+    }
     /// Probe d random slots, preferring the least-backlogged; slots in
     /// `taken` (already claimed by this task/gang) are skipped by a
     /// deterministic linear advance so concurrent claims stay distinct.
@@ -234,6 +279,38 @@ impl SchedPolicy for SparrowPolicy<'_> {
     ) -> Option<Time> {
         None // backlog bookkeeping happened at placement time
     }
+
+    fn on_slot_free(&mut self, ctx: &mut KernelCtx, now: Time) {
+        // Sparrow holds no kernel slots, so this only fires when the
+        // kernel aborts a launch in flight toward a dead node; the
+        // aborted task is back in the pending queue — re-probe it.
+        self.place_ready(ctx, now);
+    }
+
+    fn on_node_fail(&mut self, ctx: &mut KernelCtx, now: Time, node: NodeId) {
+        self.mark_node_down(ctx, node, false);
+        // The kernel already killed and requeued the node's tasks;
+        // re-probe them against the surviving (finite) backlogs.
+        self.place_ready(ctx, now);
+    }
+
+    fn on_node_drain(&mut self, ctx: &mut KernelCtx, _now: Time, node: NodeId) {
+        // Running work finishes in place; only future probes move away.
+        self.mark_node_down(ctx, node, true);
+    }
+
+    fn on_node_recover(&mut self, ctx: &mut KernelCtx, now: Time, node: NodeId) {
+        let slots = ctx.capacity();
+        for s in 0..slots.min(self.down.len()) {
+            if ctx.node_of_slot(s as u32) != node || !self.down[s] {
+                continue;
+            }
+            self.down[s] = false;
+            ctx.busy_until()[s] = self.saved_backlog[s];
+        }
+        // Fresh capacity may unblock tasks every probe pass skipped.
+        self.place_ready(ctx, now);
+    }
 }
 
 impl Scheduler for SparrowSim {
@@ -248,6 +325,8 @@ impl Scheduler for SparrowSim {
         Some(Box::new(SparrowPolicy {
             p: &self.params,
             rng: Prng::new(seed ^ 0x5BA2_2063),
+            down: Vec::new(),
+            saved_backlog: Vec::new(),
         }))
     }
 
@@ -407,6 +486,102 @@ mod tests {
         }
         // Services alone pin half the window's core-time.
         assert!(r.utilization() > 0.5, "U={}", r.utilization());
+    }
+
+    #[test]
+    fn node_failure_reprobes_killed_tasks_onto_survivors() {
+        use crate::cluster::FaultPlan;
+        // 4 nodes x 8 slots; node 0 (slots 0..8) dies at t=1 and never
+        // comes back. Tasks killed there lose their work and re-probe
+        // onto the 24 surviving workers inside the retry budget.
+        let sim = SparrowSim::new(SparrowParams::default());
+        let w = WorkloadBuilder::constant(2.0).tasks(64).label("f").build();
+        let mut options = RunOptions::with_trace();
+        options.faults = FaultPlan::none().fail(1.0, 0);
+        let r = sim.run(&w, &cluster(), 17, &options);
+        r.check_invariants().unwrap();
+        assert!(r.kills > 0, "slots 0..8 held tasks at t=1");
+        assert_eq!(r.failed, 0, "default retry budget absorbs one kill");
+        assert!(r.wasted_core_seconds > 0.0);
+        assert_eq!(r.trace.as_ref().unwrap().len(), 64);
+        // No execution span may touch the dead node after the failure.
+        for s in r.spans.as_ref().unwrap() {
+            if s.slot < 8 {
+                assert!(s.end <= 1.0 + 1e-9, "span on dead node: {s:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn services_restart_after_failure_without_consuming_a_budget() {
+        use crate::cluster::FaultPlan;
+        use crate::workload::{TaskSpec, Workload};
+        // 2 nodes x 4 slots, 6 services pinned to distinct workers:
+        // by pigeonhole node 1 (slots 4..8) holds 2-4 of them. It dies
+        // at t=5 and recovers at t=8; the killed services restart (on
+        // node 0's spare slots at ~5, the rest on the recovered node at
+        // ~8) and every one runs to the horizon — no retry budget.
+        let cluster = ClusterSpec::homogeneous(2, 4, 64 * 1024, 2);
+        let tasks: Vec<TaskSpec> = (0..6).map(|i| TaskSpec::service(i, i, 1)).collect();
+        let w = Workload {
+            tasks,
+            label: "svc-fail".into(),
+        };
+        let sim = SparrowSim::new(SparrowParams::default());
+        let options = RunOptions {
+            collect_trace: true,
+            horizon: Some(20.0),
+            faults: FaultPlan::none().fail(5.0, 1).recover(8.0, 1),
+            ..Default::default()
+        };
+        let r = sim.run(&w, &cluster, 23, &options);
+        r.check_invariants().unwrap();
+        assert!((2..=4).contains(&r.kills), "pigeonhole: {} kills", r.kills);
+        assert_eq!(r.failed, 0, "services never fail permanently");
+        assert!(r.wasted_core_seconds > 0.0, "killed work is lost");
+        let spans = r.spans.as_ref().unwrap();
+        // Nothing runs on node 1 inside the failure gap [5, 8).
+        for s in spans {
+            if s.slot >= 4 {
+                assert!(
+                    s.end <= 5.0 + 1e-9 || s.start >= 8.0,
+                    "span overlaps the outage: {s:?}"
+                );
+            }
+        }
+        // Every kill produced a restart span that holds to the horizon.
+        let restarted = spans
+            .iter()
+            .filter(|s| s.start >= 5.0 && (s.end - 20.0).abs() < 1e-9)
+            .count() as u64;
+        assert_eq!(restarted, r.kills, "every kill restarted somewhere");
+    }
+
+    #[test]
+    fn drain_then_recover_restores_backlogs() {
+        use crate::cluster::FaultPlan;
+        // Drain node 1 at t=0.5, recover at t=3: running work finishes
+        // in place (no kills), and post-recovery placements may use the
+        // node again.
+        let sim = SparrowSim::new(SparrowParams::default());
+        let w = WorkloadBuilder::constant(1.0).tasks(320).label("d").build();
+        let mut options = RunOptions::with_trace();
+        options.faults = FaultPlan::none().drain(0.5, 1).recover(3.0, 1);
+        let r = sim.run(&w, &cluster(), 29, &options);
+        r.check_invariants().unwrap();
+        assert_eq!(r.kills, 0, "drain spares running work");
+        assert_eq!(r.failed, 0);
+        assert_eq!(r.wasted_core_seconds, 0.0);
+        assert_eq!(r.trace.as_ref().unwrap().len(), 320);
+        // 320 one-second tasks on 32 slots: the run outlives the
+        // recovery and the node picks work back up.
+        let reused = r
+            .spans
+            .as_ref()
+            .unwrap()
+            .iter()
+            .any(|s| (8..16).contains(&s.slot) && s.start >= 3.0);
+        assert!(reused, "recovered node never reused");
     }
 
     #[test]

@@ -129,6 +129,14 @@ impl SchedPolicy for YarnPolicy<'_> {
         Some(fin + self.p.teardown)
     }
 
+    // Node faults need no dedicated hooks: a failed NM stops
+    // heartbeating (its containers leave the pool via the kernel) and
+    // the killed applications the kernel requeued are re-admitted at
+    // the next NM heartbeat like fresh submissions; an AM whose
+    // container launch was in flight toward the dead node is aborted
+    // by the kernel and re-granted the same way. Recovery is the NM
+    // heartbeating again with free containers.
+
     fn daemon_busy(&self) -> f64 {
         self.rm.busy()
     }

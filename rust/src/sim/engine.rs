@@ -319,6 +319,25 @@ pub enum SimEv {
         /// Freed slot.
         slot: u32,
     },
+    /// A node fails mid-run (scheduled from `RunOptions::faults`): its
+    /// free slots retire, every task running there is killed — losing
+    /// its non-checkpointed work — and killed tasks requeue through
+    /// their retry budget.
+    NodeFail {
+        /// Failing node.
+        node: u32,
+    },
+    /// A node drains mid-run: no new placement, running work finishes;
+    /// slots park as they free.
+    NodeDrain {
+        /// Draining node.
+        node: u32,
+    },
+    /// A retired node returns to service with its full slot complement.
+    NodeRecover {
+        /// Recovering node.
+        node: u32,
+    },
 }
 
 #[cfg(test)]

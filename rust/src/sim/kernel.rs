@@ -90,6 +90,42 @@
 //! instead of the historical silent run-as-batch. Horizonless runs take
 //! the exact pre-horizon code path: results stay bit-identical.
 //!
+//! **Fault-injection subsystem.** When [`RunOptions::faults`] carries a
+//! non-empty [`crate::cluster::FaultPlan`] the kernel makes node
+//! lifecycle a first-class mechanism: the plan's events are seeded into
+//! the queue at run start and fire as `NodeFail` / `NodeDrain` /
+//! `NodeRecover`:
+//!
+//! * **failure** retires the node's slots mid-run (the pool parks them;
+//!   see [`SlotPool::retire_node`]) and *kills* every task running
+//!   there — unlike an eviction, the partial work is **lost**
+//!   (`remaining` resets to the full duration and the span is charged
+//!   to [`RunResult::wasted_core_seconds`]); gang members die with
+//!   their whole gang, services always restart elsewhere, and batch
+//!   tasks requeue through a per-task retry budget
+//!   ([`crate::workload::TaskSpec::max_retries`]) — a task killed more
+//!   times than its budget allows is permanently *failed* (and its
+//!   dependents cascade-fail with it, since their indegrees can never
+//!   reach zero);
+//! * **drain** retires the node for placement but lets running work
+//!   finish (nothing is killed; slots park as they release);
+//! * **recovery** returns the parked capacity through the same indexed
+//!   free-paths ([`SlotPool::restore_node`]).
+//!
+//! A launch in flight toward a node that dies before its `Start` fires
+//! is *aborted*: the slots release (parking), the task silently
+//! requeues, and neither the retry budget nor the waste accounting is
+//! charged (no work had started). Policies observe lifecycle through
+//! [`SchedPolicy::on_node_fail`] / [`SchedPolicy::on_node_drain`] /
+//! [`SchedPolicy::on_node_recover`] — tick-driven backends typically
+//! need no hook (the next cycle re-dispatches the requeued work, and
+//! the parked pool is the rescinded offer), while event-driven backends
+//! use them as dispatch opportunities. At equal timestamps fault events
+//! fire before same-time `Start`/`End` events (they were seeded first),
+//! so a failure always beats a photo-finish completion — deterministic
+//! and pessimistic. With an empty plan every gate in this subsystem is
+//! statically false and runs are bit-identical to pre-fault builds.
+//!
 //! Determinism contract: for workloads using none of the new
 //! dimensions (1-core, dep-free, all-at-once `Array` tasks — the
 //! paper's benchmark shape), the kernel replays the exact event and
@@ -100,7 +136,7 @@
 use super::engine::{EventQueue, SimEv, Time};
 use super::pending::{OrderIndex, OrderMode, PendingList};
 use super::scratch::SimScratch;
-use crate::cluster::{ClusterSpec, SlotId, SlotPool};
+use crate::cluster::{ClusterSpec, FaultKind, NodeId, SlotId, SlotPool};
 use crate::sched::{ExecSpan, RunOptions, RunResult};
 use crate::util::stats::Summary;
 use crate::workload::{JobId, JobKind, TaskId, TraceRecord, Workload};
@@ -207,6 +243,28 @@ pub trait SchedPolicy {
     /// fairshare adjustments).
     fn on_resume(&mut self, _ctx: &mut KernelCtx, _now: Time, _task: TaskId, _slot: SlotId) {}
 
+    /// A node failed: its slots were retired from the pool and every
+    /// task running there was killed and requeued (or permanently
+    /// failed) *before* this hook fires. Policies doing their own
+    /// capacity bookkeeping (Sparrow) mark the dead workers here;
+    /// event-driven policies treat it as a dispatch opportunity for the
+    /// requeued tasks (slots freed on *other* nodes by multi-core
+    /// kills). Tick-driven backends typically need nothing: the next
+    /// scheduling cycle re-dispatches in character.
+    fn on_node_fail(&mut self, _ctx: &mut KernelCtx, _now: Time, _node: NodeId) {}
+
+    /// A node started draining: no new placement (the pool parks its
+    /// free slots), but running work finishes normally. Nothing is
+    /// killed, so most policies need no reaction; Sparrow must stop
+    /// probing the drained workers.
+    fn on_node_drain(&mut self, _ctx: &mut KernelCtx, _now: Time, _node: NodeId) {}
+
+    /// A failed or drained node came back: its parked slots rejoined
+    /// the free pool *before* this hook fires. Event-driven policies
+    /// dispatch here; tick-driven backends pick the capacity up on the
+    /// next cycle.
+    fn on_node_recover(&mut self, _ctx: &mut KernelCtx, _now: Time, _node: NodeId) {}
+
     /// Seconds the central daemon / master spent busy, for
     /// [`RunResult::daemon_busy`].
     fn daemon_busy(&self) -> f64 {
@@ -259,6 +317,14 @@ pub struct KernelCtx<'w, 's> {
     rp_buf: &'s mut Vec<u32>,
     spans: &'s mut Vec<ExecSpan>,
     preempt_count: u64,
+    // Fault-injection subsystem (built only when RunOptions carries a
+    // non-empty FaultPlan).
+    has_faults: bool,
+    kills: &'s mut Vec<u32>,
+    failed: &'s mut Vec<bool>,
+    kill_count: u64,
+    n_failed: usize,
+    wasted_core_seconds: f64,
     // Windowed accounting (built only for horizon-bounded runs).
     horizon: Option<Time>,
     win_start: &'s mut Vec<f64>,
@@ -387,6 +453,35 @@ impl<'w> KernelCtx<'w, '_> {
     /// run (the workload contains at least one preemptible task).
     pub fn preempt_enabled(&self) -> bool {
         self.has_preempt
+    }
+
+    /// True when the fault-injection subsystem is active for this run
+    /// (the run options carry a non-empty fault plan).
+    pub fn faults_enabled(&self) -> bool {
+        self.has_faults
+    }
+
+    /// Number of node-failure kills a task has absorbed so far (0 when
+    /// the fault subsystem is inactive).
+    pub fn kill_count_of(&self, task: TaskId) -> u32 {
+        if self.has_faults {
+            self.kills[task as usize]
+        } else {
+            0
+        }
+    }
+
+    /// Whether a task has permanently failed (retry budget exhausted,
+    /// or a dependency of it did).
+    pub fn task_failed(&self, task: TaskId) -> bool {
+        self.has_faults && self.failed[task as usize]
+    }
+
+    /// Per-task run-state tracking (`remaining`/`span_start`/`run_slot`
+    /// /epochs) is shared by the preemption and fault subsystems;
+    /// either one switches it on.
+    fn tracked(&self) -> bool {
+        self.has_preempt || self.has_faults
     }
 
     /// Collect every currently-evictable task into `out`: running,
@@ -549,6 +644,19 @@ impl<'w> KernelCtx<'w, '_> {
     /// backlogs instead of allocating kernel slots (Sparrow).
     pub fn busy_until(&mut self) -> &mut Vec<f64> {
         &mut *self.busy_until
+    }
+
+    /// Home node of a core slot. Policies doing their own capacity
+    /// bookkeeping use this to map fault events onto their per-slot
+    /// state (Sparrow masks the dead node's worker backlogs).
+    pub fn node_of_slot(&self, slot: SlotId) -> NodeId {
+        self.pool.node_of(slot)
+    }
+
+    /// Whether a node currently accepts placements (healthy, not
+    /// failed or drained).
+    pub fn node_placeable(&self, node: NodeId) -> bool {
+        self.pool.node_placeable(node)
     }
 
     /// True when every member of a `Parallel` job is admitted and
@@ -806,6 +914,199 @@ impl<'w> KernelCtx<'w, '_> {
         self.enqueue_ready(task);
     }
 
+    /// Collect every running task with a slot (primary or extra) on
+    /// `node` into `out`, then expand gang members to their whole
+    /// running gang — gangs die atomically. Scan order (ascending task
+    /// id, then expansion order) is deterministic. O(tasks) per fault
+    /// event; fault events are rare.
+    fn collect_kill_victims(&self, node: NodeId, out: &mut Vec<TaskId>) {
+        out.clear();
+        for t in &self.workload.tasks {
+            let i = t.id as usize;
+            let slot = self.run_slot[i];
+            if slot == u32::MAX {
+                continue;
+            }
+            let mut hit = self.pool.node_of(slot) == node;
+            if !hit && !self.extra_span.is_empty() && self.kernel_alloc[i] {
+                let (s0, len) = self.extra_span[i];
+                for k in 0..len {
+                    let s = self.extra_slots[(s0 + k) as usize];
+                    if self.pool.node_of(s) == node {
+                        hit = true;
+                        break;
+                    }
+                }
+            }
+            if hit {
+                out.push(t.id);
+            }
+        }
+        if self.has_gang {
+            let mut k = 0;
+            while k < out.len() {
+                let spec = &self.workload.tasks[out[k] as usize];
+                if spec.kind == JobKind::Parallel {
+                    for t in &self.workload.tasks {
+                        if t.job == spec.job
+                            && t.kind == JobKind::Parallel
+                            && self.run_slot[t.id as usize] != u32::MAX
+                            && !out.contains(&t.id)
+                        {
+                            out.push(t.id);
+                        }
+                    }
+                }
+                k += 1;
+            }
+        }
+    }
+
+    /// Kill one running task after a node failure. Unlike
+    /// [`KernelCtx::execute_evict`], the partial work is *lost*:
+    /// `remaining` resets to the full duration and the span is charged
+    /// to `wasted_core_seconds`. The slots release immediately (the
+    /// pool parks the ones on the retired node and re-frees the rest),
+    /// and the task either requeues (services always; batch while the
+    /// retry budget holds) or permanently fails.
+    fn execute_kill(&mut self, now: Time, task: TaskId) {
+        let spec = &self.workload.tasks[task as usize];
+        let i = task as usize;
+        let primary = self.run_slot[i];
+        debug_assert!(primary != u32::MAX, "killing idle task {task}");
+        if self.collect_trace {
+            self.spans.push(ExecSpan {
+                task,
+                slot: primary,
+                start: self.span_start[i],
+                end: now,
+            });
+            // The task may never run again: its trace record must
+            // already be closed (a later End or the window-close pass
+            // overwrites it if it does).
+            self.trace[self.trace_idx[i] as usize].end = now;
+        }
+        if self.horizon.is_some() {
+            self.busy_core_seconds += spec.cores as f64 * (now - self.win_start[i]);
+            self.win_start[i] = f64::NAN;
+        }
+        // A kill at t <= horizon lies fully inside the window, so the
+        // whole span is wasted — no clipping needed.
+        self.wasted_core_seconds += spec.cores as f64 * (now - self.span_start[i]);
+        // The cluster was busy (if fruitlessly) until the kill: the
+        // makespan covers it even when the task never completes.
+        self.makespan = self.makespan.max(now);
+        self.remaining[i] = spec.duration; // work LOST, not banked
+        self.epoch[i] += 1; // the in-flight End is now stale
+        self.kills[i] += 1;
+        self.kill_count += 1;
+        self.span_start[i] = f64::NAN;
+        self.run_slot[i] = u32::MAX;
+        let had_slots = self.kernel_alloc[i];
+        self.kernel_alloc[i] = false;
+        self.rp_remove(task);
+        if had_slots {
+            // Same primary-then-extras order the End path uses; the
+            // pool parks slots on the retired node and re-frees extras
+            // that live on healthy nodes.
+            self.pool.release(primary, self.slot_mem[primary as usize]);
+            if !self.extra_span.is_empty() {
+                let (s0, len) = self.extra_span[i];
+                for k in 0..len {
+                    let s = self.extra_slots[(s0 + k) as usize];
+                    self.pool.release(s, self.slot_mem[s as usize]);
+                }
+            }
+        }
+        if self.failed[i] {
+            // Already cascade-failed earlier in this kill batch.
+            return;
+        }
+        if spec.kind == JobKind::Service || self.kills[i] <= spec.max_retries {
+            self.enqueue_ready(task);
+        } else {
+            self.fail_task(task);
+        }
+    }
+
+    /// Permanently fail a task: retry budget exhausted, or (cascade) a
+    /// dependency of it failed so its indegree can never reach zero. A
+    /// failed gang member leaves its gang (mirroring completion), so
+    /// the survivors can still assemble and re-dispatch.
+    fn fail_task(&mut self, task: TaskId) {
+        let i = task as usize;
+        if self.failed[i] {
+            return;
+        }
+        self.failed[i] = true;
+        self.n_failed += 1;
+        if self.pending.contains(task) {
+            // Dead overlay entries are lazily skimmed against the
+            // pending list, so removing from `pending` is enough.
+            self.remove_pending(task);
+        }
+        if self.has_gang {
+            let t = &self.workload.tasks[i];
+            if t.kind == JobKind::Parallel {
+                self.gang_total[t.job as usize] -= 1;
+            }
+        }
+        if self.has_deps {
+            // Cascade: a dependent of a failed task was never admitted
+            // (its indegree stays > 0 forever), so recursing cannot
+            // meet a running or pending task.
+            let a = self.dep_off[i] as usize;
+            let b = self.dep_off[i + 1] as usize;
+            for k in a..b {
+                let d = self.dep_edges[k];
+                self.fail_task(d);
+            }
+        }
+    }
+
+    /// Whether a launch event targeting `slot` would start the task on
+    /// a node that has since failed or drained (any of its slots, for
+    /// multi-core tasks).
+    fn dead_launch(&self, task: TaskId, slot: SlotId) -> bool {
+        if !self.pool.node_placeable(self.pool.node_of(slot)) {
+            return true;
+        }
+        if !self.extra_span.is_empty() && self.kernel_alloc[task as usize] {
+            let (s0, len) = self.extra_span[task as usize];
+            for k in 0..len {
+                let s = self.extra_slots[(s0 + k) as usize];
+                if !self.pool.node_placeable(self.pool.node_of(s)) {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    /// Abort a launch whose target node died between dispatch and
+    /// `Start`: release the slots (the retired ones park) and silently
+    /// requeue the task. No span was opened, so neither the retry
+    /// budget nor the waste accounting is charged — the dispatch cost
+    /// the policy already paid is sunk, as in a real control plane.
+    fn abort_launch(&mut self, task: TaskId, slot: SlotId) {
+        let i = task as usize;
+        let had_slots = self.kernel_alloc[i];
+        self.kernel_alloc[i] = false;
+        if had_slots {
+            self.pool.release(slot, self.slot_mem[slot as usize]);
+            if !self.extra_span.is_empty() {
+                let (s0, len) = self.extra_span[i];
+                for k in 0..len {
+                    let s = self.extra_slots[(s0 + k) as usize];
+                    self.pool.release(s, self.slot_mem[s as usize]);
+                }
+            }
+        }
+        if !self.failed[i] {
+            self.enqueue_ready(task);
+        }
+    }
+
     /// Allocate every slot a task needs, all-or-nothing. The primary
     /// slot carries the task's memory; extra slots (cores > 1) carry
     /// none. On failure the allocations are rolled back in reverse so
@@ -834,7 +1135,7 @@ impl<'w> KernelCtx<'w, '_> {
             }
             self.extra_span[tid as usize] = (start, task.cores - 1);
         }
-        if self.has_preempt {
+        if self.tracked() {
             self.kernel_alloc[tid as usize] = true;
         }
         Some(primary)
@@ -854,7 +1155,7 @@ impl<'w> KernelCtx<'w, '_> {
             self.extra_span[tid as usize] = (0, 0);
         }
         self.pool.release(primary, task.mem_mb);
-        if self.has_preempt {
+        if self.tracked() {
             self.kernel_alloc[tid as usize] = false;
         }
     }
@@ -906,8 +1207,13 @@ impl<'w> KernelCtx<'w, '_> {
     /// here rather than trusting the event variant).
     fn handle_start(&mut self, now: Time, task: TaskId, slot: SlotId) -> bool {
         let spec = &self.workload.tasks[task as usize];
+        // An eviction resumes (partial work banked); a kill restarts
+        // from scratch. Both are re-starts: wait and trace record were
+        // taken at the first start. Aborted launches count as neither —
+        // the task never started.
         let resumed = self.has_preempt && self.evictions[task as usize] > 0;
-        if !resumed {
+        let restart = resumed || (self.has_faults && self.kills[task as usize] > 0);
+        if !restart {
             self.waits.add(now - spec.submit_at);
             if self.collect_trace {
                 self.trace_idx[task as usize] = self.trace.len() as u32;
@@ -928,7 +1234,7 @@ impl<'w> KernelCtx<'w, '_> {
         // preemption, its epoch/slot bookkeeping so it stays evictable)
         // but never schedules an `End`.
         let service = spec.kind == JobKind::Service;
-        if self.has_preempt {
+        if self.tracked() {
             let i = task as usize;
             self.epoch[i] += 1;
             self.span_start[i] = now;
@@ -970,7 +1276,7 @@ impl<'w> KernelCtx<'w, '_> {
                 self.gang_total[t.job as usize] -= 1;
             }
         }
-        if self.has_preempt {
+        if self.tracked() {
             let i = task as usize;
             if self.collect_trace {
                 self.spans.push(ExecSpan {
@@ -1095,7 +1401,15 @@ impl Kernel {
         if has_multicore {
             scratch.extra_span.resize(n, (0, 0));
         }
-        if has_preempt {
+        let has_faults = !options.faults.is_empty();
+        debug_assert!(
+            options.faults.validate().is_ok(),
+            "invalid FaultPlan reached the kernel: {}",
+            options.faults.validate().unwrap_err()
+        );
+        // Run-state tracking is shared by preemption and faults.
+        let track = has_preempt || has_faults;
+        if track {
             scratch
                 .remaining
                 .extend(workload.tasks.iter().map(|t| t.duration));
@@ -1105,6 +1419,10 @@ impl Kernel {
             scratch.evictions.resize(n, 0);
             scratch.kernel_alloc.resize(n, false);
             scratch.rp_pos.resize(n, u32::MAX);
+        }
+        if has_faults {
+            scratch.kills.resize(n, 0);
+            scratch.failed.resize(n, false);
         }
         if horizon.is_some() {
             scratch.win_start.resize(n, f64::NAN);
@@ -1137,6 +1455,9 @@ impl Kernel {
             rp_pos,
             rp_buf,
             preempt_victims,
+            kills,
+            failed,
+            kill_buf,
             spans,
             win_start,
         } = scratch;
@@ -1172,6 +1493,12 @@ impl Kernel {
             rp_buf,
             spans,
             preempt_count: 0,
+            has_faults,
+            kills,
+            failed,
+            kill_count: 0,
+            n_failed: 0,
+            wasted_core_seconds: 0.0,
             horizon,
             win_start,
             busy_core_seconds: 0.0,
@@ -1191,6 +1518,21 @@ impl Kernel {
             } else {
                 ctx.queue
                     .push(t.submit_at.max(0.0), SimEv::Arrive { task: t.id });
+            }
+        }
+        if has_faults {
+            // Seeded before the policy's first Tick, so at equal
+            // timestamps a fault fires before same-time control-plane
+            // and launch/end events: a failure beats a photo-finish
+            // completion (deterministic, pessimistic). Out-of-range
+            // node ids fail loudly in retire/restore.
+            for e in &options.faults.events {
+                let ev = match e.kind {
+                    FaultKind::Fail => SimEv::NodeFail { node: e.node },
+                    FaultKind::Drain => SimEv::NodeDrain { node: e.node },
+                    FaultKind::Recover => SimEv::NodeRecover { node: e.node },
+                };
+                ctx.queue.push(e.at, ev);
             }
         }
         policy.on_submit(&mut ctx, batch);
@@ -1218,13 +1560,13 @@ impl Kernel {
                     if has_preempt {
                         preemption_pass(policy, &mut ctx, now, preempt_victims);
                     }
-                    if ctx.completed < n {
+                    if ctx.completed + ctx.n_failed < n {
                         if let Some(interval) = policy.tick_interval() {
                             assert!(
                                 !(ctx.queue.is_empty() && ctx.pool.busy_count() == 0),
                                 "kernel stalled: {} of {n} tasks can never be \
                                  dispatched (cores/memory exceed cluster capacity?)",
-                                n - ctx.completed,
+                                n - ctx.completed - ctx.n_failed,
                             );
                             ctx.queue.push(now + interval, SimEv::Tick);
                         }
@@ -1232,15 +1574,23 @@ impl Kernel {
                 }
                 SimEv::Stage { task, slot } => policy.on_stage(&mut ctx, now, task, slot),
                 SimEv::Start { task, slot } => {
-                    // Staged launches of evicted tasks re-enter here, so
-                    // resumes are detected rather than event-tagged.
-                    if ctx.handle_start(now, task, slot) {
+                    if has_faults && ctx.dead_launch(task, slot) {
+                        ctx.abort_launch(task, slot);
+                        policy.on_slot_free(&mut ctx, now);
+                    } else if ctx.handle_start(now, task, slot) {
+                        // Staged launches of evicted tasks re-enter here,
+                        // so resumes are detected rather than event-tagged.
                         policy.on_resume(&mut ctx, now, task, slot);
                     }
                 }
                 SimEv::Resume { task, slot } => {
-                    ctx.handle_start(now, task, slot);
-                    policy.on_resume(&mut ctx, now, task, slot);
+                    if has_faults && ctx.dead_launch(task, slot) {
+                        ctx.abort_launch(task, slot);
+                        policy.on_slot_free(&mut ctx, now);
+                    } else {
+                        ctx.handle_start(now, task, slot);
+                        policy.on_resume(&mut ctx, now, task, slot);
+                    }
                 }
                 SimEv::Preempt { task, epoch } => {
                     // Stale if the victim completed or restarted since
@@ -1253,8 +1603,8 @@ impl Kernel {
                     }
                 }
                 SimEv::End { task, slot, epoch } => {
-                    if has_preempt && ctx.epoch[task as usize] != epoch {
-                        continue; // stale End: the task was evicted out of this run
+                    if track && ctx.epoch[task as usize] != epoch {
+                        continue; // stale End: the task was evicted or killed out of this run
                     }
                     ctx.handle_end(now, task);
                     if ctx.has_deps && ctx.propagate_deps(task) {
@@ -1275,6 +1625,22 @@ impl Kernel {
                     ctx.pool.release(slot, ctx.slot_mem[slot as usize]);
                     policy.on_slot_free(&mut ctx, now);
                 }
+                SimEv::NodeFail { node } => {
+                    ctx.pool.retire_node(node);
+                    ctx.collect_kill_victims(node, kill_buf);
+                    for &t in kill_buf.iter() {
+                        ctx.execute_kill(now, t);
+                    }
+                    policy.on_node_fail(&mut ctx, now, node);
+                }
+                SimEv::NodeDrain { node } => {
+                    ctx.pool.retire_node(node);
+                    policy.on_node_drain(&mut ctx, now, node);
+                }
+                SimEv::NodeRecover { node } => {
+                    ctx.pool.restore_node(node);
+                    policy.on_node_recover(&mut ctx, now, node);
+                }
             }
         }
 
@@ -1291,7 +1657,7 @@ impl Kernel {
                 ctx.busy_core_seconds += t.cores as f64 * (h - s);
                 if ctx.collect_trace {
                     ctx.trace[ctx.trace_idx[i] as usize].end = h;
-                    if has_preempt {
+                    if track {
                         ctx.spans.push(ExecSpan {
                             task: t.id,
                             slot: ctx.run_slot[i],
@@ -1306,13 +1672,18 @@ impl Kernel {
             // undispatchable task drains the queue and would otherwise
             // return silently-truncated results in release builds. A
             // horizon-bounded run is exempt — the window closing before
-            // every task completes is its normal outcome.
+            // every task completes is its normal outcome. Permanently
+            // failed tasks (retry budget exhausted under a fault plan)
+            // count as resolved.
             assert_eq!(
-                ctx.completed, n,
+                ctx.completed + ctx.n_failed,
+                n,
                 "kernel finished with incomplete workload: {} of {n} tasks \
-                 completed (cores/memory exceed cluster capacity, or a gang \
-                 can never assemble?)",
+                 completed and {} failed (cores/memory exceed cluster \
+                 capacity, a gang can never assemble, or every node holding \
+                 the remaining work is down?)",
                 ctx.completed,
+                ctx.n_failed,
             );
         }
         let processors = cluster.total_cores();
@@ -1328,11 +1699,14 @@ impl Kernel {
             daemon_busy: policy.daemon_busy(),
             waits: ctx.waits,
             preemptions: ctx.preempt_count,
+            kills: ctx.kill_count,
+            failed: ctx.n_failed as u64,
+            completed: ctx.completed as u64,
+            wasted_core_seconds: ctx.wasted_core_seconds,
             horizon,
             busy_core_seconds: ctx.busy_core_seconds,
             trace: options.collect_trace.then(|| std::mem::take(ctx.trace)),
-            spans: (options.collect_trace && has_preempt)
-                .then(|| std::mem::take(ctx.spans)),
+            spans: (options.collect_trace && track).then(|| std::mem::take(ctx.spans)),
         }
     }
 }
@@ -1385,6 +1759,12 @@ mod tests {
             Some(now)
         }
         fn on_slot_free(&mut self, ctx: &mut KernelCtx, now: Time) {
+            ctx.drain_fifo(&mut |_, _| Launch::start(now));
+        }
+        fn on_node_fail(&mut self, ctx: &mut KernelCtx, now: Time, _node: NodeId) {
+            ctx.drain_fifo(&mut |_, _| Launch::start(now));
+        }
+        fn on_node_recover(&mut self, ctx: &mut KernelCtx, now: Time, _node: NodeId) {
             ctx.drain_fifo(&mut |_, _| Launch::start(now));
         }
     }
@@ -1992,6 +2372,300 @@ mod tests {
             assert_eq!(warm.t_total.to_bits(), fresh.t_total.to_bits());
             assert_eq!(warm.events, fresh.events);
             assert_eq!(warm.trace.as_ref().unwrap(), fresh.trace.as_ref().unwrap());
+        }
+    }
+
+    // ---- fault-injection subsystem ------------------------------------------
+
+    use crate::cluster::FaultPlan;
+
+    fn run_faulted(w: &Workload, faults: FaultPlan, horizon: Option<f64>) -> RunResult {
+        let mut scratch = SimScratch::new();
+        let options = RunOptions {
+            collect_trace: true,
+            horizon,
+            faults,
+            ..Default::default()
+        };
+        Kernel::run(&mut InstantPolicy, w, &cluster(), &options, &mut scratch)
+    }
+
+    #[test]
+    fn node_failure_kills_and_loses_work() {
+        // 8 × 10 s tasks fill both nodes at t=0 (tasks 0–3 on node 0,
+        // 4–7 on node 1). Node 1 dies at t=4: tasks 4–7 are killed with
+        // their 4 s of progress LOST, requeue, and restart at t=10 when
+        // node 0 frees — finishing at t=20 with a full re-run.
+        let tasks = (0..8).map(|i| TaskSpec::array(i, 0, 10.0)).collect();
+        let w = Workload {
+            tasks,
+            label: "churn".into(),
+        };
+        let r = run_faulted(&w, FaultPlan::none().fail(4.0, 1), None);
+        r.check_invariants().unwrap();
+        assert_eq!(r.kills, 4);
+        assert_eq!(r.failed, 0);
+        assert!((r.t_total - 20.0).abs() < 1e-9, "t_total={}", r.t_total);
+        assert!(
+            (r.wasted_core_seconds - 16.0).abs() < 1e-9,
+            "wasted={}",
+            r.wasted_core_seconds
+        );
+        // 8 completions + 4 kill spans.
+        assert_eq!(r.spans.as_ref().unwrap().len(), 12);
+        // The killed tasks' restarts went to node 0, never the dead one.
+        let spans = r.spans.as_ref().unwrap();
+        for s in spans.iter().filter(|s| s.start >= 4.0) {
+            assert!(s.slot < 4, "span on dead node after failure: {s:?}");
+        }
+    }
+
+    #[test]
+    fn retry_budget_exhaustion_fails_tasks_permanently() {
+        let tasks = (0..8)
+            .map(|i| {
+                let mut t = TaskSpec::array(i, 0, 10.0);
+                t.max_retries = 0;
+                t
+            })
+            .collect();
+        let w = Workload {
+            tasks,
+            label: "fail".into(),
+        };
+        let r = run_faulted(&w, FaultPlan::none().fail(4.0, 1), None);
+        r.check_invariants().unwrap();
+        assert_eq!(r.kills, 4);
+        assert_eq!(r.failed, 4, "budget of 0 means one kill is fatal");
+        assert!((r.t_total - 10.0).abs() < 1e-9, "t_total={}", r.t_total);
+        // 4 completions + 4 kill spans; every task started once.
+        assert_eq!(r.spans.as_ref().unwrap().len(), 8);
+        assert_eq!(r.trace.as_ref().unwrap().len(), 8);
+    }
+
+    #[test]
+    fn drain_stops_placement_but_spares_running_work() {
+        // 16 × 5 s tasks on 8 slots. Node 1 drains at t=2: the first
+        // wave (8 tasks) finishes untouched at t=5, but the second wave
+        // only gets node 0's 4 slots — two more waves of 4, done at 15.
+        let tasks = (0..16).map(|i| TaskSpec::array(i, 0, 5.0)).collect();
+        let w = Workload {
+            tasks,
+            label: "drain".into(),
+        };
+        let r = run_faulted(&w, FaultPlan::none().drain(2.0, 1), None);
+        r.check_invariants().unwrap();
+        assert_eq!(r.kills, 0, "drain kills nothing");
+        assert_eq!(r.failed, 0);
+        assert!((r.wasted_core_seconds - 0.0).abs() < 1e-9);
+        assert!((r.t_total - 15.0).abs() < 1e-9, "t_total={}", r.t_total);
+    }
+
+    #[test]
+    fn recovery_restores_failed_capacity() {
+        // Node 1 dies at t=2 (killing tasks 4–7) and recovers at t=3:
+        // the killed tasks restart there immediately and re-run their
+        // full 10 s, ending at 13.
+        let tasks = (0..8).map(|i| TaskSpec::array(i, 0, 10.0)).collect();
+        let w = Workload {
+            tasks,
+            label: "recover".into(),
+        };
+        let r = run_faulted(&w, FaultPlan::none().fail(2.0, 1).recover(3.0, 1), None);
+        r.check_invariants().unwrap();
+        assert_eq!(r.kills, 4);
+        assert_eq!(r.failed, 0);
+        assert!((r.t_total - 13.0).abs() < 1e-9, "t_total={}", r.t_total);
+        assert!(
+            (r.wasted_core_seconds - 8.0).abs() < 1e-9,
+            "wasted={}",
+            r.wasted_core_seconds
+        );
+    }
+
+    #[test]
+    fn gang_dies_atomically_with_its_node() {
+        // An 8-member gang spans both nodes; node 1 fails at t=3. ALL
+        // members die (gang atomicity), wait for recovery at t=5, and
+        // re-run together: done at 15.
+        let tasks = (0..8)
+            .map(|i| {
+                let mut t = TaskSpec::array(i, 7, 10.0);
+                t.kind = JobKind::Parallel;
+                t
+            })
+            .collect();
+        let w = Workload {
+            tasks,
+            label: "gangfail".into(),
+        };
+        let r = run_faulted(&w, FaultPlan::none().fail(3.0, 1).recover(5.0, 1), None);
+        r.check_invariants().unwrap();
+        assert_eq!(r.kills, 8, "whole gang killed, not just node 1's half");
+        assert_eq!(r.failed, 0);
+        assert!((r.t_total - 15.0).abs() < 1e-9, "t_total={}", r.t_total);
+        assert!(
+            (r.wasted_core_seconds - 24.0).abs() < 1e-9,
+            "wasted={}",
+            r.wasted_core_seconds
+        );
+        // Second starts are synchronized.
+        let spans = r.spans.as_ref().unwrap();
+        for s in spans.iter().filter(|s| s.start >= 4.0) {
+            assert!((s.start - 5.0).abs() < 1e-9, "{s:?}");
+        }
+    }
+
+    #[test]
+    fn services_restart_after_kills_without_consuming_a_budget() {
+        // Tasks 0–3 (3 s batch) take node 0; the service lands on node
+        // 1 and is killed at t=2. It has no free slot until the batch
+        // wave ends at t=3, restarts there, and runs to the horizon.
+        let mut tasks: Vec<TaskSpec> = (0..4).map(|i| TaskSpec::array(i, i, 3.0)).collect();
+        tasks.push(TaskSpec::service(4, 4, 1));
+        let w = Workload {
+            tasks,
+            label: "svc-fail".into(),
+        };
+        let r = run_faulted(&w, FaultPlan::none().fail(2.0, 1), Some(8.0));
+        r.check_invariants().unwrap();
+        assert_eq!(r.kills, 1);
+        assert_eq!(r.failed, 0, "services restart, they never fail");
+        // Service busy [0,2) + [3,8): 7 s; batch 4 × 3 s = 12 s.
+        assert!(
+            (r.busy_core_seconds - 19.0).abs() < 1e-9,
+            "busy={}",
+            r.busy_core_seconds
+        );
+        assert!(
+            (r.wasted_core_seconds - 2.0).abs() < 1e-9,
+            "wasted={}",
+            r.wasted_core_seconds
+        );
+        assert!(r.goodput_utilization() < r.utilization());
+        let svc = r.trace.as_ref().unwrap().iter().find(|t| t.task == 4).unwrap();
+        assert!((svc.end - 8.0).abs() < 1e-9, "service clipped to horizon");
+    }
+
+    #[test]
+    fn launches_in_flight_toward_a_dead_node_abort_without_charge() {
+        // Dispatch at t=0 with a 2 s launch delay; node 1 dies at t=1,
+        // while 4 Starts are still in flight toward it. Those launches
+        // abort silently — no kill, no waste — and the tasks re-dispatch
+        // when node 0 frees at t=7 (start 9, end 14).
+        struct DelayedPolicy;
+        impl SchedPolicy for DelayedPolicy {
+            fn label(&self) -> String {
+                "Delayed".into()
+            }
+            fn on_submit(&mut self, ctx: &mut KernelCtx, _batch: usize) {
+                ctx.drain_fifo(&mut |_, _| Launch::start(2.0));
+            }
+            fn on_complete(
+                &mut self,
+                _ctx: &mut KernelCtx,
+                now: Time,
+                _task: TaskId,
+                _slot: SlotId,
+            ) -> Option<Time> {
+                Some(now)
+            }
+            fn on_slot_free(&mut self, ctx: &mut KernelCtx, now: Time) {
+                ctx.drain_fifo(&mut |_, _| Launch::start(now + 2.0));
+            }
+        }
+        let tasks = (0..8).map(|i| TaskSpec::array(i, 0, 5.0)).collect();
+        let w = Workload {
+            tasks,
+            label: "abort".into(),
+        };
+        let mut scratch = SimScratch::new();
+        let options = RunOptions {
+            collect_trace: true,
+            faults: FaultPlan::none().fail(1.0, 1),
+            ..Default::default()
+        };
+        let r = Kernel::run(&mut DelayedPolicy, &w, &cluster(), &options, &mut scratch);
+        r.check_invariants().unwrap();
+        assert_eq!(r.kills, 0, "aborted launches are not kills");
+        assert_eq!(r.failed, 0);
+        assert!((r.wasted_core_seconds - 0.0).abs() < 1e-9);
+        assert!((r.t_total - 14.0).abs() < 1e-9, "t_total={}", r.t_total);
+        // Aborts leave no spans: 8 completion spans only.
+        assert_eq!(r.spans.as_ref().unwrap().len(), 8);
+    }
+
+    #[test]
+    fn failed_tasks_cascade_to_their_dependents() {
+        // Task 0 (on a cluster-filling 8-core footprint) dies with a 0
+        // budget; tasks 1 and 2 depend on it (2 on 1 transitively) and
+        // can never run. Task 3 is independent and completes.
+        let mut t0 = TaskSpec::array(0, 0, 10.0);
+        t0.cores = 8;
+        t0.max_retries = 0;
+        let mut t1 = TaskSpec::array(1, 0, 1.0);
+        t1.deps = vec![0];
+        let mut t2 = TaskSpec::array(2, 0, 1.0);
+        t2.deps = vec![1];
+        let t3 = TaskSpec::array(3, 1, 1.0);
+        let w = Workload {
+            tasks: vec![t0, t1, t2, t3],
+            label: "cascade".into(),
+        };
+        let r = run_faulted(&w, FaultPlan::none().fail(2.0, 1).recover(3.0, 1), None);
+        r.check_invariants().unwrap();
+        assert_eq!(r.kills, 1);
+        assert_eq!(r.failed, 3, "task 0 plus both dependents");
+        // Only tasks 0 (killed) and 3 ever started.
+        assert_eq!(r.trace.as_ref().unwrap().len(), 2);
+        // 1 completion (task 3) + 1 kill span.
+        assert_eq!(r.spans.as_ref().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn empty_fault_plan_is_bit_identical_to_no_plan() {
+        let tasks = (0..16).map(|i| TaskSpec::array(i, 0, 3.0)).collect();
+        let w = Workload {
+            tasks,
+            label: "noop".into(),
+        };
+        let base = run(&w);
+        let faulted = run_faulted(&w, FaultPlan::none(), None);
+        assert_eq!(base.t_total.to_bits(), faulted.t_total.to_bits());
+        assert_eq!(base.events, faulted.events);
+        assert_eq!(base.trace, faulted.trace);
+        assert_eq!(faulted.kills, 0);
+        assert_eq!(faulted.failed, 0);
+        assert_eq!(faulted.spans, None, "no tracking buffers without a plan");
+    }
+
+    #[test]
+    fn fault_scratch_reuse_matches_fresh() {
+        // A churn run through a warm scratch is bit-identical to a
+        // fresh one, and a plain run AFTER it is unaffected.
+        let churn = Workload {
+            tasks: (0..8).map(|i| TaskSpec::array(i, 0, 10.0)).collect(),
+            label: "churn".into(),
+        };
+        let plain = Workload {
+            tasks: (0..8).map(|i| TaskSpec::array(i, 0, 1.0)).collect(),
+            label: "plain".into(),
+        };
+        let plan = FaultPlan::none().fail(2.0, 1).recover(3.0, 1);
+        let mut scratch = SimScratch::new();
+        for (w, p) in [(&churn, &plan), (&plain, &FaultPlan::none()), (&churn, &plan)] {
+            let options = RunOptions {
+                collect_trace: true,
+                faults: p.clone(),
+                ..Default::default()
+            };
+            let warm = Kernel::run(&mut InstantPolicy, w, &cluster(), &options, &mut scratch);
+            let fresh = run_faulted(w, p.clone(), None);
+            assert_eq!(warm.t_total.to_bits(), fresh.t_total.to_bits());
+            assert_eq!(warm.events, fresh.events);
+            assert_eq!(warm.kills, fresh.kills);
+            assert_eq!(warm.trace, fresh.trace);
+            assert_eq!(warm.spans, fresh.spans);
         }
     }
 }

@@ -90,6 +90,14 @@ pub struct SimScratch {
     /// Victim-collection buffer handed to
     /// [`crate::sim::SchedPolicy::on_preempt_candidates`].
     pub preempt_victims: Vec<u32>,
+    /// Per-task kill count — runs lost to node failures (fault plans
+    /// only; drives the retry budget).
+    pub kills: Vec<u32>,
+    /// Whether each task permanently failed (retry budget exhausted or
+    /// dep-cascade; fault plans only).
+    pub failed: Vec<bool>,
+    /// Kill-victim collection buffer for one node-failure event.
+    pub kill_buf: Vec<u32>,
     /// Executed-span records (traced preemption runs only).
     pub spans: Vec<crate::sched::ExecSpan>,
     /// Start time of each task's currently-open execution span for
@@ -128,6 +136,9 @@ impl SimScratch {
             rp_pos: Vec::new(),
             rp_buf: Vec::new(),
             preempt_victims: Vec::new(),
+            kills: Vec::new(),
+            failed: Vec::new(),
+            kill_buf: Vec::new(),
             spans: Vec::new(),
             win_start: Vec::new(),
         }
@@ -164,6 +175,9 @@ impl SimScratch {
         self.rp_pos.clear();
         self.rp_buf.clear();
         self.preempt_victims.clear();
+        self.kills.clear();
+        self.failed.clear();
+        self.kill_buf.clear();
         self.spans.clear();
         self.win_start.clear();
         if collect_trace {
@@ -213,6 +227,9 @@ mod tests {
         s.rp_pos.push(0);
         s.rp_buf.push(2);
         s.preempt_victims.push(0);
+        s.kills.push(1);
+        s.failed.push(true);
+        s.kill_buf.push(4);
         s.spans.push(crate::sched::ExecSpan {
             task: 0,
             slot: 0,
@@ -247,6 +264,9 @@ mod tests {
         assert!(s.rp_pos.is_empty());
         assert!(s.rp_buf.is_empty());
         assert!(s.preempt_victims.is_empty());
+        assert!(s.kills.is_empty());
+        assert!(s.failed.is_empty());
+        assert!(s.kill_buf.is_empty());
         assert!(s.spans.is_empty());
         assert!(s.win_start.is_empty());
     }

@@ -53,6 +53,13 @@ pub struct TaskSpec {
     /// task's slots stay occupied this long (checkpoint drain) before
     /// they are released; the task itself loses no progress.
     pub checkpoint_cost: f64,
+    /// How many times the task may be re-run after being killed by a
+    /// node failure before it is counted as permanently `failed`
+    /// (kills beyond this budget stop requeueing). Unlike preemption —
+    /// which banks progress — a kill loses the run's work, so every
+    /// retry re-pays the full duration. Services ignore this field
+    /// (they restart elsewhere, unbounded) and must leave it 0.
+    pub max_retries: u32,
 }
 
 impl TaskSpec {
@@ -71,6 +78,7 @@ impl TaskSpec {
             user: 0,
             preemptible: false,
             checkpoint_cost: 0.0,
+            max_retries: 3,
         }
     }
 
@@ -91,6 +99,9 @@ impl TaskSpec {
         Self {
             kind: JobKind::Service,
             cores,
+            // Services restart elsewhere after a node failure instead
+            // of consuming a retry budget.
+            max_retries: 0,
             ..Self::array(id, job, 0.0)
         }
     }
@@ -238,6 +249,19 @@ impl Workload {
                 }
             }
         }
+        options.faults.validate()?;
+        if let Some(t) = self
+            .tasks
+            .iter()
+            .find(|t| t.kind == JobKind::Service && t.max_retries != 0)
+        {
+            return Err(format!(
+                "task {} is a Service job with max_retries {}; services restart \
+                 elsewhere after a node failure, they do not consume a retry budget \
+                 (leave max_retries at 0)",
+                t.id, t.max_retries
+            ));
+        }
         Ok(())
     }
 }
@@ -344,6 +368,7 @@ mod tests {
         assert_eq!(t.checkpoint_cost, 0.0);
         assert_eq!(t.priority, 0);
         assert_eq!(t.user, 0);
+        assert_eq!(t.max_retries, 3);
     }
 
     #[test]
@@ -401,5 +426,52 @@ mod tests {
         wl(vec![TaskSpec::array(0, 0, 1.0)])
             .validate_for(&RunOptions::default())
             .unwrap();
+    }
+
+    #[test]
+    fn service_helper_has_no_retry_budget() {
+        assert_eq!(TaskSpec::service(0, 0, 1).max_retries, 0);
+    }
+
+    #[test]
+    fn validate_for_rejects_service_with_retry_budget() {
+        use crate::sched::RunOptions;
+        let mut svc = TaskSpec::service(0, 0, 1);
+        svc.max_retries = 2;
+        let err = wl(vec![svc])
+            .validate_for(&RunOptions::with_horizon(100.0))
+            .unwrap_err();
+        assert!(err.contains("retry budget"), "{err}");
+    }
+
+    #[test]
+    fn validate_for_rejects_malformed_fault_plans() {
+        use crate::cluster::FaultPlan;
+        use crate::sched::RunOptions;
+        let w = wl(vec![TaskSpec::array(0, 0, 1.0)]);
+        // Well-formed plan passes.
+        w.validate_for(&RunOptions::with_faults(
+            FaultPlan::none().fail(5.0, 0).recover(9.0, 0),
+        ))
+        .unwrap();
+        // Event before t=0.
+        let err = w
+            .validate_for(&RunOptions::with_faults(FaultPlan::none().fail(-1.0, 0)))
+            .unwrap_err();
+        assert!(err.contains("t=0"), "{err}");
+        // Non-finite time.
+        assert!(w
+            .validate_for(&RunOptions::with_faults(FaultPlan::none().fail(f64::NAN, 0)))
+            .is_err());
+        // Fail of an already-failed node.
+        assert!(w
+            .validate_for(&RunOptions::with_faults(
+                FaultPlan::none().fail(1.0, 0).fail(2.0, 0)
+            ))
+            .is_err());
+        // Recover of a healthy node.
+        assert!(w
+            .validate_for(&RunOptions::with_faults(FaultPlan::none().recover(1.0, 0)))
+            .is_err());
     }
 }

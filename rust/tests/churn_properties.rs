@@ -1,0 +1,439 @@
+//! Property suite for the fault-injection kernel: random fault plans ×
+//! every simulated backend × {array, gang, DAG, service} workload
+//! shapes, checked against the failure model's invariants.
+//!
+//! For every run the suite reconstructs each node's lifecycle windows
+//! from the `FaultPlan` and asserts, from the execution spans:
+//!
+//! - **No span overlaps a down window.** Between a node's `Fail` and
+//!   its `Recover`, no execution span may occupy any of its slots —
+//!   killed runs end exactly at the fail instant, restarts begin at or
+//!   after recovery.
+//! - **No span starts in an unplaceable window.** From the first
+//!   `Drain`/`Fail` of a lifecycle cycle until `Recover`, the node
+//!   accepts no new placements (drains let already-running work
+//!   finish, so only span *starts* are constrained).
+//! - **Retries never exceed budget.** A batch task is dispatched at
+//!   most `max_retries + 1` times; every non-final span ends at a kill
+//!   instant (its node's fail time — or any fail time for gang
+//!   members, which die atomically with the member on the dead node).
+//! - **Kill/waste accounting is exact.** Dispatches = kills +
+//!   completions, and `wasted_core_seconds` equals the span-seconds of
+//!   exactly the killed runs.
+//! - **Failure is completion's complement** (horizonless runs):
+//!   `completed + failed == n`, the trace holds precisely the
+//!   completed tasks, DAG dependents of a failed task fail too, and no
+//!   gang member's span runs through an instant at which its
+//!   gang-mates were killed (kill atomicity over running members).
+//! - **Warm scratch ≡ fresh.** Every faulted run is executed twice —
+//!   once on a reused `SimScratch`, once fresh — and must be
+//!   bit-identical (the `churn` experiment additionally pins
+//!   `--jobs 1 ≡ --jobs N` in the harness tests).
+
+use std::collections::BTreeMap;
+
+use sssched::cluster::{ClusterSpec, FaultKind, FaultPlan};
+use sssched::config::SchedulerChoice;
+use sssched::sched::{make_scheduler, RunOptions, RunResult, SimScratch};
+use sssched::util::prng::Prng;
+use sssched::workload::{ArrivalProcess, JobKind, Workload, WorkloadBuilder};
+
+const NODES: u32 = 6;
+const CORES: u32 = 4;
+const TASK_T: f64 = 2.0;
+const EPS: f64 = 1e-9;
+
+fn cluster() -> ClusterSpec {
+    ClusterSpec::homogeneous(NODES, CORES, 32 * 1024, 3)
+}
+
+/// Random node-lifecycle plan: each node gets (with probability) one
+/// fail or drain cycle — drains sometimes dying outright mid-drain —
+/// and possibly a second fail cycle. Every cycle is closed with a
+/// `Recover`, so horizonless runs always regain full capacity and
+/// terminate.
+fn random_plan(rng: &mut Prng, span: f64) -> FaultPlan {
+    let mut plan = FaultPlan::none();
+    let mut any = false;
+    for node in 0..NODES {
+        if !rng.chance(0.7) {
+            continue;
+        }
+        any = true;
+        let a = rng.range_f64(span * 0.04, span * 0.55);
+        let b = a + rng.range_f64(span * 0.03, span * 0.25);
+        if rng.chance(0.5) {
+            plan = plan.fail(a, node);
+        } else {
+            plan = plan.drain(a, node);
+            if rng.chance(0.4) {
+                // The drained node dies before it finishes draining.
+                plan = plan.fail(a + (b - a) * 0.5, node);
+            }
+        }
+        plan = plan.recover(b, node);
+        if rng.chance(0.3) {
+            let c = b + rng.range_f64(span * 0.02, span * 0.2);
+            let d = c + rng.range_f64(span * 0.02, span * 0.15);
+            plan = plan.fail(c, node).recover(d, node);
+        }
+    }
+    if !any {
+        plan = plan.fail(span * 0.25, 0).recover(span * 0.35, 0);
+    }
+    plan.validate().expect("generated plan must be valid");
+    plan
+}
+
+#[derive(Default, Clone)]
+struct NodeWindows {
+    /// `(fail, recover)`: no span may overlap the interior.
+    down: Vec<(f64, f64)>,
+    /// `(first drain/fail, recover)`: no span may start inside.
+    no_place: Vec<(f64, f64)>,
+    /// Kill instants (fail times) on this node.
+    fails: Vec<f64>,
+}
+
+/// Replay the plan in firing order into per-node lifecycle windows.
+fn fault_windows(plan: &FaultPlan) -> Vec<NodeWindows> {
+    let mut order: Vec<usize> = (0..plan.events.len()).collect();
+    order.sort_by(|&a, &b| plan.events[a].at.total_cmp(&plan.events[b].at));
+    let mut win = vec![NodeWindows::default(); NODES as usize];
+    let mut down_at = vec![None; NODES as usize];
+    let mut gone_at = vec![None; NODES as usize];
+    for &i in &order {
+        let e = &plan.events[i];
+        let n = e.node as usize;
+        match e.kind {
+            FaultKind::Fail => {
+                win[n].fails.push(e.at);
+                if down_at[n].is_none() {
+                    down_at[n] = Some(e.at);
+                }
+                if gone_at[n].is_none() {
+                    gone_at[n] = Some(e.at);
+                }
+            }
+            FaultKind::Drain => {
+                if gone_at[n].is_none() {
+                    gone_at[n] = Some(e.at);
+                }
+            }
+            FaultKind::Recover => {
+                if let Some(s) = down_at[n].take() {
+                    win[n].down.push((s, e.at));
+                }
+                if let Some(s) = gone_at[n].take() {
+                    win[n].no_place.push((s, e.at));
+                }
+            }
+        }
+    }
+    for n in 0..NODES as usize {
+        assert!(
+            down_at[n].is_none() && gone_at[n].is_none(),
+            "generator must close every lifecycle cycle (node {n} left open)"
+        );
+    }
+    win
+}
+
+fn assert_bit_identical(a: &RunResult, b: &RunResult, what: &str) {
+    assert_eq!(a.t_total.to_bits(), b.t_total.to_bits(), "{what}: t_total");
+    assert_eq!(a.events, b.events, "{what}: events");
+    assert_eq!(a.kills, b.kills, "{what}: kills");
+    assert_eq!(a.failed, b.failed, "{what}: failed");
+    assert_eq!(a.completed, b.completed, "{what}: completed");
+    assert_eq!(
+        a.wasted_core_seconds.to_bits(),
+        b.wasted_core_seconds.to_bits(),
+        "{what}: wasted_core_seconds"
+    );
+    assert_eq!(
+        a.busy_core_seconds.to_bits(),
+        b.busy_core_seconds.to_bits(),
+        "{what}: busy_core_seconds"
+    );
+    assert_eq!(a.trace, b.trace, "{what}: trace");
+    assert_eq!(a.spans, b.spans, "{what}: spans");
+}
+
+/// Check every fault-model property a single run must satisfy.
+fn check_run(w: &Workload, plan: &FaultPlan, r: &RunResult, label: &str) {
+    r.check_invariants().unwrap_or_else(|e| panic!("{label}: {e}"));
+    assert_eq!(r.preemptions, 0, "{label}: no preemption in these workloads");
+    let horizonless = r.horizon.is_none();
+    let win = fault_windows(plan);
+    let spans = r.spans.as_ref().expect("faulted traced runs collect spans");
+    let all_fails: Vec<f64> = win.iter().flat_map(|nw| nw.fails.iter().copied()).collect();
+
+    // -- spatial: spans vs node lifecycle windows --
+    for s in spans {
+        let node = (s.slot / CORES) as usize;
+        assert!(s.end >= s.start - EPS, "{label}: span of task {} inverted", s.task);
+        if let Some(h) = r.horizon {
+            assert!(
+                s.start >= -EPS && s.end <= h + EPS,
+                "{label}: task {} span [{}, {}] escapes window [0, {h}]",
+                s.task,
+                s.start,
+                s.end
+            );
+        }
+        for &(a, b) in &win[node].down {
+            assert!(
+                s.end <= a + EPS || s.start >= b - EPS,
+                "{label}: task {} span [{}, {}] overlaps down window [{a}, {b}] on node {node}",
+                s.task,
+                s.start,
+                s.end
+            );
+        }
+        for &(a, b) in &win[node].no_place {
+            // Strict at the left edge: a fault event at t fires before
+            // any same-instant Start, so a launch exactly at the
+            // drain/fail instant must have been aborted.
+            assert!(
+                s.start < a || s.start >= b - EPS,
+                "{label}: task {} span starts at {} inside unplaceable window [{a}, {b}) \
+                 on node {node}",
+                s.task,
+                s.start
+            );
+        }
+    }
+
+    // -- per-task: retry budgets, kill-aligned span ends, no overlap --
+    let n = w.tasks.len();
+    let mut per_task: Vec<Vec<&sssched::sched::ExecSpan>> = vec![Vec::new(); n];
+    for s in spans {
+        per_task[s.task as usize].push(s);
+    }
+    for (tid, ts) in per_task.iter_mut().enumerate() {
+        let spec = &w.tasks[tid];
+        ts.sort_by(|x, y| x.start.total_cmp(&y.start));
+        for pair in ts.windows(2) {
+            assert!(
+                pair[0].end <= pair[1].start + EPS,
+                "{label}: task {tid} spans overlap in time"
+            );
+        }
+        if spec.kind != JobKind::Service {
+            assert!(
+                ts.len() as u32 <= spec.max_retries + 1,
+                "{label}: task {tid} dispatched {} times, retry budget {}",
+                ts.len(),
+                spec.max_retries
+            );
+        }
+        if ts.is_empty() {
+            continue;
+        }
+        // Every non-final span is a killed run: it must end exactly at
+        // a fail instant — on its own node, except gang members, which
+        // die atomically when any member's node fails.
+        for s in &ts[..ts.len() - 1] {
+            let node = (s.slot / CORES) as usize;
+            let killed_at = if spec.kind == JobKind::Parallel {
+                all_fails.iter().any(|&ft| (ft - s.end).abs() <= EPS)
+            } else {
+                win[node].fails.iter().any(|&ft| (ft - s.end).abs() <= EPS)
+            };
+            assert!(
+                killed_at,
+                "{label}: task {tid} non-final span ends at {} which is not a kill instant",
+                s.end
+            );
+        }
+    }
+
+    // -- global accounting (horizonless batch shapes: every span ends
+    //    in either a kill or a completion, and all tasks are 1-core) --
+    if horizonless {
+        assert_eq!(
+            r.completed + r.failed,
+            n as u64,
+            "{label}: horizonless runs finish or fail every task"
+        );
+        assert_eq!(
+            r.kills,
+            spans.len() as u64 - r.completed,
+            "{label}: dispatches = kills + completions"
+        );
+
+        let trace = r.trace.as_ref().expect("traced run");
+        let mut done = vec![false; n];
+        for rec in trace {
+            done[rec.task as usize] = true;
+        }
+        assert_eq!(
+            done.iter().filter(|&&d| d).count() as u64,
+            r.completed,
+            "{label}: trace holds exactly the completed tasks"
+        );
+
+        // Wasted = span-seconds of exactly the killed runs: everything
+        // except each completed task's final (completing) span.
+        let total: f64 = spans.iter().map(|s| s.end - s.start).sum();
+        let finished: f64 = per_task
+            .iter()
+            .enumerate()
+            .filter(|(tid, _)| done[*tid])
+            .filter_map(|(_, ts)| ts.last().map(|s| s.end - s.start))
+            .sum();
+        assert!(
+            (r.wasted_core_seconds - (total - finished)).abs() <= 1e-6 * total.max(1.0),
+            "{label}: wasted_core_seconds {} != span-seconds of killed runs {}",
+            r.wasted_core_seconds,
+            total - finished
+        );
+        for t in &w.tasks {
+            // A failed task that ever ran was killed on its last span.
+            if !done[t.id as usize] {
+                if let Some(last) = per_task[t.id as usize].last() {
+                    let node = (last.slot / CORES) as usize;
+                    let killed = if t.kind == JobKind::Parallel {
+                        all_fails.iter().any(|&ft| (ft - last.end).abs() <= EPS)
+                    } else {
+                        win[node].fails.iter().any(|&ft| (ft - last.end).abs() <= EPS)
+                    };
+                    assert!(
+                        killed,
+                        "{label}: failed task {} last span must end at a kill instant",
+                        t.id
+                    );
+                }
+            }
+            // Cascade: a task can never outlive a failed dependency.
+            for &d in &t.deps {
+                if !done[d as usize] {
+                    assert!(
+                        !done[t.id as usize],
+                        "{label}: task {} completed though dependency {d} failed",
+                        t.id
+                    );
+                }
+            }
+        }
+
+        // Gang kill atomicity: when any gang member dies at a fail
+        // instant, every member *running* at that instant dies with it
+        // — no member's span may run through a kill that took its
+        // gang-mates. (Members whose launch was still in flight are
+        // not running yet; they abort or proceed individually, so only
+        // spans covering the instant are constrained.)
+        let mut gangs: BTreeMap<u32, Vec<u32>> = BTreeMap::new();
+        for t in &w.tasks {
+            if t.kind == JobKind::Parallel {
+                gangs.entry(t.job).or_default().push(t.id);
+            }
+        }
+        for (job, members) in &gangs {
+            for &tf in &all_fails {
+                let gang_killed = members.iter().any(|&m| {
+                    let ts = &per_task[m as usize];
+                    ts.iter().enumerate().any(|(k, s)| {
+                        // A span ending at tf is a kill unless it is
+                        // the member's completing (final, done) span.
+                        (s.end - tf).abs() <= EPS && !(k == ts.len() - 1 && done[m as usize])
+                    })
+                });
+                if !gang_killed {
+                    continue;
+                }
+                for &m in members {
+                    for s in &per_task[m as usize] {
+                        assert!(
+                            s.start >= tf - EPS || s.end <= tf + EPS,
+                            "{label}: gang {job} member {m} span [{}, {}] runs through \
+                             the gang kill at t={tf}",
+                            s.start,
+                            s.end
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Drive one workload shape through every simulated backend × several
+/// random plans, asserting warm-scratch ≡ fresh bit-identity and all
+/// fault-model properties on each run.
+fn drive(shape: &str, w: &Workload, span: f64, horizon: Option<f64>, plan_seed: u64) {
+    let cl = cluster();
+    let mut rng = Prng::new(plan_seed);
+    let mut scratch = SimScratch::new();
+    for choice in SchedulerChoice::all_simulated() {
+        let sched = make_scheduler(choice);
+        for trial in 0..3u64 {
+            let plan = random_plan(&mut rng, span);
+            let opts = RunOptions {
+                collect_trace: true,
+                horizon,
+                faults: plan.clone(),
+                ..Default::default()
+            };
+            w.validate_for(&opts).unwrap();
+            let label = format!("{shape}/{}/trial{trial}", choice.name());
+            let warm = sched.run_with_scratch(w, &cl, 0xC0DE + trial, &opts, &mut scratch);
+            let fresh = sched.run(w, &cl, 0xC0DE + trial, &opts);
+            assert_bit_identical(&warm, &fresh, &label);
+            check_run(w, &plan, &warm, &label);
+        }
+    }
+}
+
+fn batch_base(n: u64, seed: u64) -> WorkloadBuilder {
+    WorkloadBuilder::constant(TASK_T)
+        .tasks(n)
+        .seed(seed)
+        .label("churn-prop")
+}
+
+#[test]
+fn array_tasks_respect_fault_windows_and_budgets() {
+    let mut w = batch_base(48, 0xA1)
+        .arrivals(ArrivalProcess::Poisson { rate: 10.0 })
+        .build();
+    for t in &mut w.tasks {
+        t.max_retries = t.id % 4;
+    }
+    drive("array", &w, 12.0, None, 0x0A11);
+}
+
+#[test]
+fn gangs_die_atomically_under_churn() {
+    let mut w = batch_base(48, 0xB2).gangs(4).build();
+    for t in &mut w.tasks {
+        // Uniform budget inside each gang: members share kill counts,
+        // so they exhaust their budgets in lockstep.
+        t.max_retries = 2;
+    }
+    drive("gang", &w, 12.0, None, 0x0B22);
+}
+
+#[test]
+fn dag_dependents_cascade_with_failed_dependencies() {
+    let mut w = batch_base(48, 0xC3).dag_chains(4).build();
+    for t in &mut w.tasks {
+        t.max_retries = t.id % 2;
+    }
+    drive("dag", &w, 16.0, None, 0x0C33);
+}
+
+#[test]
+fn services_restart_and_batch_windows_hold_under_churn() {
+    let horizon = 30.0;
+    let mut w = batch_base(40, 0xD4)
+        .arrivals(ArrivalProcess::Poisson { rate: 4.0 })
+        .services(4, 1)
+        .build();
+    for t in &mut w.tasks {
+        if t.kind != JobKind::Service {
+            t.max_retries = t.id % 3;
+        }
+    }
+    drive("service", &w, horizon, Some(horizon), 0x0D44);
+}

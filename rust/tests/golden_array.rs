@@ -10,7 +10,7 @@
 //! written and the test passes; commit the generated file to pin the
 //! results.
 
-use sssched::cluster::ClusterSpec;
+use sssched::cluster::{ClusterSpec, FaultPlan};
 use sssched::config::SchedulerChoice;
 use sssched::multilevel::{Multilevel, MultilevelParams};
 use sssched::sched::batchq::{BatchJob, BatchQueueSim, QueuePolicy};
@@ -32,6 +32,13 @@ fn preempt_snapshot_path() -> PathBuf {
         .join("tests")
         .join("golden")
         .join("preempt_t_total.txt")
+}
+
+fn churn_snapshot_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("golden")
+        .join("churn_slurm.txt")
 }
 
 fn cluster() -> ClusterSpec {
@@ -143,6 +150,64 @@ fn compute_preempt_lines() -> Vec<String> {
     lines
 }
 
+/// `Slurm+churn seed goodput_bits wasted_bits kills failed_set retry_hist`
+/// lines for a fixed 3-event fault plan: node 0 dies mid-run and
+/// returns, node 1 drains and stays out. Pins the fault subsystem's
+/// goodput, kill/retry accounting and exact failed-task set on the
+/// Slurm-like backend (separate snapshot so the pre-existing ones stay
+/// byte-identical).
+fn compute_churn_lines() -> Vec<String> {
+    let cluster = cluster();
+    let n = 200usize;
+    let mut w = WorkloadBuilder::constant(1.0)
+        .tasks(n as u64)
+        .label("golden-churn")
+        .build();
+    for t in &mut w.tasks {
+        // Alternating 0/1 retry budgets: half of the kills on node 0
+        // requeue once, the other half fail permanently.
+        t.max_retries = t.id % 2;
+    }
+    let plan = FaultPlan::none().fail(2.7, 0).drain(5.3, 1).recover(6.1, 0);
+    let opts = RunOptions {
+        collect_trace: true,
+        // Generous window: every task completes or fails well inside
+        // it, so the failed set is exactly the trace's complement.
+        horizon: Some(60.0),
+        faults: plan,
+        ..Default::default()
+    };
+    w.validate_for(&opts).unwrap();
+    let mut lines = Vec::new();
+    for seed in [1u64, 2, 3] {
+        let r = make_scheduler(SchedulerChoice::Slurm).run(&w, &cluster, seed, &opts);
+        let trace = r.trace.as_ref().expect("traced run");
+        let mut done = vec![false; n];
+        for rec in trace {
+            done[rec.task as usize] = true;
+        }
+        let failed: Vec<String> = (0..n).filter(|&i| !done[i]).map(|i| i.to_string()).collect();
+        assert_eq!(failed.len() as u64, r.failed, "trace/failed-count mismatch");
+        let mut dispatches = vec![0u32; n];
+        for s in r.spans.as_ref().expect("faulted run collects spans") {
+            dispatches[s.task as usize] += 1;
+        }
+        let mut hist = [0u64; 3]; // retries 0, 1, 2+ (budgets are 0/1)
+        for &d in &dispatches {
+            hist[(d.saturating_sub(1) as usize).min(2)] += 1;
+        }
+        lines.push(format!(
+            "Slurm+churn {seed} {:016x} {:016x} kills={} failed=[{}] retries={:?}",
+            r.goodput_utilization().to_bits(),
+            r.wasted_core_seconds.to_bits(),
+            r.kills,
+            failed.join(","),
+            hist
+        ));
+    }
+    lines
+}
+
 fn assert_snapshot(path: &std::path::Path, lines: &[String]) {
     match std::fs::read_to_string(path) {
         Ok(expected) => {
@@ -188,6 +253,16 @@ fn golden_preempt_recomputation_is_stable() {
 #[test]
 fn golden_array_results_are_pinned() {
     assert_snapshot(&snapshot_path(), &compute_lines());
+}
+
+#[test]
+fn golden_churn_results_are_pinned() {
+    assert_snapshot(&churn_snapshot_path(), &compute_churn_lines());
+}
+
+#[test]
+fn golden_churn_recomputation_is_stable() {
+    assert_eq!(compute_churn_lines(), compute_churn_lines());
 }
 
 #[test]

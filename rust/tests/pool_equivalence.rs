@@ -35,7 +35,10 @@ use sssched::workload::{JobKind, TaskSpec, Workload};
 
 /// The pre-index `SlotPool`, kept verbatim as the differential oracle:
 /// one global free stack, `rposition` scan for memory-constrained
-/// allocations, `Vec::remove` for mid-stack extraction.
+/// allocations, `Vec::remove` for mid-stack extraction. Node lifecycle
+/// (retire/restore for the fault kernel) is the obvious O(P)
+/// filter-the-stack implementation — the oracle for the indexed pool's
+/// lazy parked-slot machinery.
 struct LegacySlotPool {
     node_of: Vec<u32>,
     free: Vec<u32>,
@@ -43,6 +46,8 @@ struct LegacySlotPool {
     mem_free: Vec<i64>,
     mem_total: Vec<i64>,
     busy_count: usize,
+    placeable: Vec<bool>,
+    parked: Vec<Vec<u32>>,
 }
 
 impl LegacySlotPool {
@@ -54,6 +59,8 @@ impl LegacySlotPool {
             mem_free: Vec::new(),
             mem_total: Vec::new(),
             busy_count: 0,
+            placeable: vec![true; spec.nodes.len()],
+            parked: vec![Vec::new(); spec.nodes.len()],
         };
         for node in &spec.nodes {
             if node.state != NodeState::Up {
@@ -99,7 +106,43 @@ impl LegacySlotPool {
             self.mem_free[node] <= self.mem_total[node],
             "memory over-release on node {node}"
         );
+        if !self.placeable[node] {
+            self.parked[node].push(slot);
+            return;
+        }
         self.free.push(slot);
+    }
+
+    /// Retire a node: its free slots leave the stack (order of the rest
+    /// preserved) and park in stack order; busy slots park on release.
+    fn retire_node(&mut self, node: u32) {
+        let n = node as usize;
+        if !self.placeable[n] {
+            return;
+        }
+        self.placeable[n] = false;
+        let mut kept = Vec::with_capacity(self.free.len());
+        for &s in &self.free {
+            if self.node_of[s as usize] == node {
+                self.parked[n].push(s);
+            } else {
+                kept.push(s);
+            }
+        }
+        self.free = kept;
+    }
+
+    /// Restore a node: parked slots re-enter the stack in parked order
+    /// (the last parked slot becomes the new top).
+    fn restore_node(&mut self, node: u32) {
+        let n = node as usize;
+        if self.placeable[n] {
+            return;
+        }
+        self.placeable[n] = true;
+        for s in std::mem::take(&mut self.parked[n]) {
+            self.free.push(s);
+        }
     }
 
     fn free_count(&self) -> usize {
@@ -150,6 +193,28 @@ impl PoolPair {
             let i = self.held.len() - 1;
             self.release_at(i);
         }
+    }
+
+    fn retire(&mut self, node: u32) {
+        self.indexed.retire_node(node);
+        self.legacy.retire_node(node);
+        assert_eq!(
+            self.indexed.free_count(),
+            self.legacy.free_count(),
+            "free count diverged after retiring node {node}"
+        );
+        self.indexed.check_invariants().unwrap();
+    }
+
+    fn restore(&mut self, node: u32) {
+        self.indexed.restore_node(node);
+        self.legacy.restore_node(node);
+        assert_eq!(
+            self.indexed.free_count(),
+            self.legacy.free_count(),
+            "free count diverged after restoring node {node}"
+        );
+        self.indexed.check_invariants().unwrap();
     }
 }
 
@@ -255,6 +320,47 @@ fn pool_differential_exhaustion_and_refill() {
             let i = rng.below(pair.held.len() as u64) as usize;
             pair.release_at(i);
         }
+    }
+}
+
+#[test]
+fn pool_differential_mid_run_retire_restore() {
+    // Fault-kernel shape: nodes retire (fail/drain) and restore mid-run
+    // while memory-constrained allocs and random-order releases keep
+    // flowing. The indexed pool's lazily invalidated parked-slot
+    // machinery must reproduce the legacy filter-the-stack pop order
+    // exactly, including releases that park onto retired nodes and
+    // stale lazy-stack entries left by slow-path allocations.
+    let mut rng = Prng::new(0xFA17);
+    for trial in 0..15 {
+        let mut pair = PoolPair::new(&small_cluster());
+        for _ in 0..400 {
+            match rng.below(10) {
+                0..=4 => {
+                    let mem = [0i64, 150, 400, 900][rng.below(4) as usize];
+                    pair.alloc(mem);
+                }
+                5..=6 => {
+                    if !pair.held.is_empty() {
+                        let i = rng.below(pair.held.len() as u64) as usize;
+                        pair.release_at(i);
+                    }
+                }
+                7..=8 => pair.retire(rng.below(6) as u32),
+                _ => pair.restore(rng.below(6) as u32),
+            }
+        }
+        // Restore everything and drain both pools to empty: the tail
+        // pop order (over freshly restored seqs) must agree too.
+        for node in 0..6 {
+            pair.restore(node);
+        }
+        while !pair.held.is_empty() {
+            let i = rng.below(pair.held.len() as u64) as usize;
+            pair.release_at(i);
+        }
+        while pair.alloc(0).is_some() {}
+        assert_eq!(pair.indexed.free_count(), 0, "trial {trial}");
     }
 }
 
