@@ -14,66 +14,89 @@
 //!   retire/kill/requeue/restore path (`churn_mevents_per_s` in
 //!   BENCH_perf.json)
 //! * indexed-queue scale sweep: warm events/s per (scheduler, n) up to
-//!   n = 100k, the fitted log-log wall-time exponent, the eager-sort vs
+//!   n = 100k — including the node-granular and sharded engine rows —
+//!   the fitted log-log wall-time exponent, the eager-sort vs
 //!   incremental ordered-queue speedup (asserted ≥ 5×, bit-identical),
-//!   and a flat-allocation assert at the largest n
+//!   a flat-allocation assert at the largest n, and the engine rows'
+//!   Mevents/s floor (`harness::SCALE_MEVENTS_FLOOR`)
+//! * streaming-metrics memory gate: a warm untraced run's transient
+//!   byte peak is O(active) — bounded, independent of n — while the
+//!   exact traced oracle necessarily peaks at O(n) trace bytes
 //! * realtime coordinator dispatch rate (channel round-trip)
 //! * artifact-suite power-law fit latency (the L1/L2 hot path from rust)
 //! * serial vs parallel fig4-style sweep: cells/s, events/s, wall-clock
 //!   speedup, and a bit-identity check between `jobs=1` and `jobs=N`
 //!
 //! Usage: `cargo bench --bench perf_engine -- [--quick] [--jobs N]
-//! [--out FILE]` (default out: BENCH_perf.json in the working dir).
+//! [--bench-out FILE]` (default out: BENCH_perf.json in the working
+//! dir; `--out` is accepted as a legacy alias).
 
 use sssched::cluster::{ClusterSpec, FaultPlan};
 use sssched::config::{ExperimentConfig, SchedulerChoice};
 use sssched::exec::{RealtimeCoordinator, RealtimeParams, RtTask, RtWork};
 use sssched::harness::{
     run_sweeps, scale_array_workload, scale_cluster as scale_cluster_of, scale_preempt_workload,
-    SchedulerSweep, SweepSpec,
+    SchedulerSweep, SweepSpec, SCALE_MEVENTS_FLOOR, SCALE_SHARDS,
 };
 use sssched::sched::combinators::{make_preemptive, Order, OrderedSim};
-use sssched::sched::{make_scheduler, RunOptions, Scheduler, SimScratch};
+use sssched::sched::{
+    make_scheduler, NodeGranularSim, RunOptions, Scheduler, ShardedSim, SimScratch,
+};
 use sssched::sim::EventQueue;
 use sssched::util::fit::fit_power_law;
 use sssched::workload::{TaskSpec, Workload};
 use std::alloc::{GlobalAlloc, Layout, System};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
 use std::time::Instant;
 
 /// Allocation-counting wrapper around the system allocator, used to
-/// assert the warm-scratch preemption path allocates nothing per
-/// event. Counting is flag-gated so the timed benchmarks elsewhere in
-/// this binary pay only a relaxed load per allocation, not a shared
-/// atomic RMW that could skew the published sweep numbers; it is
-/// switched on only around the preemption flatness measurement. Counts
-/// allocations and reallocations (frees are irrelevant to the
-/// zero-alloc contract).
+/// assert the warm-scratch preemption path allocates nothing per event
+/// and that the streaming-metrics path keeps transient memory O(active).
+/// Counting is flag-gated so the timed benchmarks elsewhere in this
+/// binary pay only a relaxed load per allocation, not a shared atomic
+/// RMW that could skew the published sweep numbers; it is switched on
+/// only around the flatness/peak measurements. Tracks the allocation
+/// count (frees are irrelevant to the zero-alloc contract) plus net
+/// live bytes and their high-water mark (frees matter there).
 struct CountingAlloc;
 
 static COUNTING: AtomicBool = AtomicBool::new(false);
 static ALLOC_COUNT: AtomicU64 = AtomicU64::new(0);
+static ALLOC_CURRENT: AtomicI64 = AtomicI64::new(0);
+static ALLOC_PEAK: AtomicI64 = AtomicI64::new(0);
+
+/// Record `delta` net bytes (and, for allocating calls, one count).
+fn track(delta: i64, count: bool) {
+    if count {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+    }
+    let cur = ALLOC_CURRENT.fetch_add(delta, Ordering::Relaxed) + delta;
+    ALLOC_PEAK.fetch_max(cur, Ordering::Relaxed);
+}
 
 unsafe impl GlobalAlloc for CountingAlloc {
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         if COUNTING.load(Ordering::Relaxed) {
-            ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+            track(layout.size() as i64, true);
         }
         System.alloc(layout)
     }
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
         if COUNTING.load(Ordering::Relaxed) {
-            ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+            track(layout.size() as i64, true);
         }
         System.alloc_zeroed(layout)
     }
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         if COUNTING.load(Ordering::Relaxed) {
-            ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+            track(new_size as i64 - layout.size() as i64, true);
         }
         System.realloc(ptr, layout, new_size)
     }
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        if COUNTING.load(Ordering::Relaxed) {
+            track(-(layout.size() as i64), false);
+        }
         System.dealloc(ptr, layout)
     }
 }
@@ -83,6 +106,28 @@ static GLOBAL: CountingAlloc = CountingAlloc;
 
 fn allocs() -> u64 {
     ALLOC_COUNT.load(Ordering::Relaxed)
+}
+
+/// Zero the net-bytes ledger so the next measurement window reads peak
+/// *growth* relative to its start.
+fn reset_byte_ledger() {
+    ALLOC_CURRENT.store(0, Ordering::Relaxed);
+    ALLOC_PEAK.store(0, Ordering::Relaxed);
+}
+
+fn peak_bytes() -> i64 {
+    ALLOC_PEAK.load(Ordering::Relaxed).max(0)
+}
+
+/// Process-lifetime peak resident set (VmHWM) in KiB, when the
+/// platform exposes it (Linux /proc; `None` elsewhere).
+fn peak_rss_kb() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    status
+        .lines()
+        .find(|l| l.starts_with("VmHWM:"))
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|v| v.parse().ok())
 }
 
 struct SweepStats {
@@ -147,7 +192,9 @@ fn main() {
             .cloned()
     };
     let par_jobs: u32 = opt("--jobs").and_then(|v| v.parse().ok()).unwrap_or(4);
-    let out_path = opt("--out").unwrap_or_else(|| "BENCH_perf.json".to_string());
+    let out_path = opt("--bench-out")
+        .or_else(|| opt("--out"))
+        .unwrap_or_else(|| "BENCH_perf.json".to_string());
 
     // ---- 1. Raw event queue.
     let n = if quick { 500_000u64 } else { 2_000_000u64 };
@@ -405,6 +452,16 @@ fn main() {
             "IdealFIFO+prio",
         )),
         make_preemptive(SchedulerChoice::IdealFifo, 1, Order::Priority),
+        Box::new(NodeGranularSim::new(
+            make_scheduler(SchedulerChoice::IdealFifo),
+            "IdealFIFO+node",
+        )),
+        Box::new(ShardedSim::new(
+            make_scheduler(SchedulerChoice::IdealFifo),
+            SCALE_SHARDS,
+            SCALE_SHARDS,
+            "IdealFIFO+shard4",
+        )),
     ];
     let mut scale_cells: Vec<(String, u32, f64, u64)> = Vec::new(); // (name, n, wall, events)
     let mut scale_exponents: Vec<(String, f64, f64)> = Vec::new(); // (name, alpha, r2)
@@ -440,6 +497,22 @@ fn main() {
         let fit = fit_power_law(&xs, &ys);
         println!("scale {name:<20} wall-time exponent alpha={:.3} (R²={:.3})", fit.alpha_s, fit.r2);
         scale_exponents.push((name, fit.alpha_s, fit.r2));
+    }
+
+    // Engine-row throughput floor at the largest n (mirrors the
+    // `scale` experiment's check_shape gate).
+    let scale_max_n = *scale_ns.last().expect("non-empty scale_ns");
+    for (name, n, wall, events) in &scale_cells {
+        let floored =
+            name == "IdealFIFO" || name == "IdealFIFO+node" || name == "IdealFIFO+shard4";
+        if *n == scale_max_n && floored {
+            let rate = *events as f64 / wall.max(1e-9) / 1e6;
+            assert!(
+                rate >= SCALE_MEVENTS_FLOOR,
+                "{name} n={n}: {rate:.3} Mev/s under the {SCALE_MEVENTS_FLOOR} floor \
+                 ({events} events in {wall:.3} s)"
+            );
+        }
     }
 
     // Eager-sort oracle vs incremental ordered queue: bit-identical
@@ -520,6 +593,49 @@ fn main() {
             scale_ns.last().expect("non-empty")
         );
         (small_allocs, big_allocs)
+    };
+
+    // ---- 2f. Streaming-metrics memory gate. With wait statistics
+    // streamed (P² quantiles + bounded reservoir) instead of traced, a
+    // warm untraced run's transient byte peak is O(active): a small
+    // constant regardless of n. The exact traced oracle (kept behind
+    // `collect_trace` as the differential reference) necessarily peaks
+    // at O(n) trace bytes — the contrast is the contract.
+    let (streaming_n, streaming_untraced_peak, streaming_traced_peak) = {
+        let n = scale_max_n;
+        let w = scale_array_workload(n);
+        let sched = make_scheduler(SchedulerChoice::IdealFifo);
+        let mut scratch = SimScratch::new();
+        // Warm both shapes (the traced warm-up also sizes what it can;
+        // the trace buffer itself leaves the scratch with each result).
+        sched.run_with_scratch(&w, &scale_cluster, 21, &RunOptions::default(), &mut scratch);
+        sched.run_with_scratch(&w, &scale_cluster, 22, &RunOptions::with_trace(), &mut scratch);
+        let mut measure = |opts: &RunOptions, seed: u64| -> i64 {
+            COUNTING.store(true, Ordering::Relaxed);
+            reset_byte_ledger();
+            let r = sched.run_with_scratch(&w, &scale_cluster, seed, opts, &mut scratch);
+            let peak = peak_bytes();
+            COUNTING.store(false, Ordering::Relaxed);
+            drop(r);
+            peak
+        };
+        let untraced = measure(&RunOptions::default(), 23);
+        let traced = measure(&RunOptions::with_trace(), 24);
+        assert!(
+            untraced < 1_000_000,
+            "warm untraced run peaked at {untraced} transient bytes for n={n}: \
+             streaming metrics should keep per-run memory O(active)"
+        );
+        assert!(
+            traced >= 16 * n as i64,
+            "traced oracle peaked at only {traced} bytes for n={n} — the O(n) \
+             contrast with the streaming path has collapsed"
+        );
+        println!(
+            "streaming memory @ n={n}: warm untraced peak {untraced} B (O(active)) vs \
+             traced oracle {traced} B (O(n))"
+        );
+        (n, untraced, traced)
     };
 
     // ---- 3. Realtime dispatch rate (zero-work tasks).
@@ -664,8 +780,13 @@ fn main() {
          \x20   \"ordered_speedup\": {osp:.3},\n\
          \x20   \"flat_allocs_small\": {sas},\n\
          \x20   \"flat_allocs_big\": {sab},\n\
+         \x20   \"mevents_floor\": {floor},\n\
+         \x20   \"streaming_n\": {stn},\n\
+         \x20   \"streaming_untraced_peak_bytes\": {supb},\n\
+         \x20   \"streaming_traced_peak_bytes\": {stpb},\n\
          \x20   \"bit_identical\": true\n\
          \x20 }},\n\
+         \x20 \"peak_rss_kb\": {rss},\n\
          \x20 \"realtime_dispatch_per_s\": {dispatch_rate:.1},\n\
          \x20 \"powerlaw_fit_ms_per_call\": {fit_ms},\n\
          \x20 \"sweep\": {{\n\
@@ -692,6 +813,13 @@ fn main() {
         osp = ordered_speedup,
         sas = scale_allocs_small,
         sab = scale_allocs_big,
+        floor = SCALE_MEVENTS_FLOOR,
+        stn = streaming_n,
+        supb = streaming_untraced_peak,
+        stpb = streaming_traced_peak,
+        rss = peak_rss_kb()
+            .map(|kb| kb.to_string())
+            .unwrap_or_else(|| "null".to_string()),
         fit_ms = if fit_ms_per_call.is_finite() {
             format!("{fit_ms_per_call:.4}")
         } else {

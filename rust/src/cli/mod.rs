@@ -12,7 +12,7 @@
 use std::collections::BTreeMap;
 
 /// Flags the CLI treats as boolean: they never take a value.
-pub const BOOL_FLAGS: &[&str] = &["quick", "csv", "full"];
+pub const BOOL_FLAGS: &[&str] = &["quick", "csv", "full", "huge"];
 
 /// Parsed command line.
 #[derive(Clone, Debug, Default)]

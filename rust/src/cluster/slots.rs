@@ -93,6 +93,15 @@ pub struct SlotPool {
     parked: Vec<Vec<SlotId>>,
     /// Total parked slot count across nodes.
     parked_n: usize,
+    /// Node-granular mode (arXiv 2108.11359): allocations drain one
+    /// *open* node's cores until it runs dry, consulting the tournament
+    /// tree only on node rollover — one tree query per node instead of
+    /// per slot, and no lazy-stack maintenance at all. Changes placement
+    /// (whole-node packing, not most-recently-freed), so it is off by
+    /// default and selected per run.
+    node_granular: bool,
+    /// Currently open node in node-granular mode (`u32::MAX` = none).
+    open_node: u32,
 }
 
 impl SlotPool {
@@ -125,6 +134,8 @@ impl SlotPool {
             placeable: Vec::new(),
             parked: Vec::new(),
             parked_n: 0,
+            node_granular: false,
+            open_node: u32::MAX,
         }
     }
 
@@ -143,6 +154,8 @@ impl SlotPool {
         self.slot_seq.clear();
         self.next_seq = 0;
         self.dirty.clear();
+        self.node_granular = false;
+        self.open_node = u32::MAX;
         let n_nodes = spec.nodes.len();
         // Keep (never shrink) the outer per-node vec so inner list
         // capacity survives trials; only the first `n_nodes` entries are
@@ -225,6 +238,26 @@ impl SlotPool {
     /// Node that hosts a slot.
     pub fn node_of(&self, slot: SlotId) -> NodeId {
         self.node_of[slot as usize]
+    }
+
+    /// Switch the pool into (or out of) node-granular allocation mode.
+    /// Must be called on a quiescent pool (no busy slots): the mode
+    /// changes the pop order and stops maintaining the lazy stack, so
+    /// flipping mid-run would break the per-slot mode's equivalence
+    /// argument. [`SlotPool::reinit`] always resets to per-slot mode.
+    pub fn set_node_granular(&mut self, on: bool) {
+        assert!(
+            self.busy_count == 0,
+            "set_node_granular on a pool with {} busy slots",
+            self.busy_count
+        );
+        self.node_granular = on;
+        self.open_node = u32::MAX;
+    }
+
+    /// Whether node-granular allocation mode is active.
+    pub fn node_granular(&self) -> bool {
+        self.node_granular
     }
 
     #[inline]
@@ -318,6 +351,9 @@ impl SlotPool {
         if self.free_n == 0 {
             return None;
         }
+        if self.node_granular {
+            return self.alloc_node_granular(mem_mb);
+        }
         // Skim dead entries (slot re-allocated via the slow path, or
         // re-freed under a newer seq). Each entry dies at most once.
         while let Some(&(s, q)) = self.free_lifo.last() {
@@ -343,6 +379,30 @@ impl SlotPool {
         // top free slot is the max-seq fitting choice.
         self.flush_dirty();
         let (_, node) = self.query_best(1, mem_mb)?;
+        let slot = self.node_free[node]
+            .pop()
+            .expect("tree eligibility implies a non-empty node list");
+        Some(self.take(slot, node, mem_mb))
+    }
+
+    /// Node-granular allocation: hand out cores from the open node
+    /// until it has no fitting free slot, then roll over to the node
+    /// the tournament tree ranks best. A retired open node has an empty
+    /// free list, so it rolls over naturally.
+    fn alloc_node_granular(&mut self, mem_mb: i64) -> Option<SlotId> {
+        if self.open_node != u32::MAX {
+            let n = self.open_node as usize;
+            if self.mem_free[n] >= mem_mb {
+                if let Some(top) = self.node_free[n].pop() {
+                    return Some(self.take(top, n, mem_mb));
+                }
+            }
+        }
+        // Node rollover (or first allocation): one tree query opens the
+        // next node.
+        self.flush_dirty();
+        let (_, node) = self.query_best(1, mem_mb)?;
+        self.open_node = node as u32;
         let slot = self.node_free[node]
             .pop()
             .expect("tree eligibility implies a non-empty node list");
@@ -442,7 +502,12 @@ impl SlotPool {
         }
         self.next_seq += 1;
         self.slot_seq[idx] = self.next_seq;
-        self.free_lifo.push((slot, self.next_seq));
+        if !self.node_granular {
+            // Node-granular mode never consults the lazy stack; pushing
+            // here would only accumulate dead entries (O(completions)
+            // growth over a long run) with nothing skimming them.
+            self.free_lifo.push((slot, self.next_seq));
+        }
         self.node_free[node].push(slot);
         self.free_n += 1;
         self.mark_dirty(node);
@@ -519,7 +584,16 @@ impl SlotPool {
             .iter()
             .filter(|&&(s, q)| !self.busy[s as usize] && self.slot_seq[s as usize] == q)
             .count();
-        if live != self.free_n {
+        if self.node_granular {
+            // Node mode stops maintaining the stack: reinit-seeded
+            // entries die off as slots cycle and nothing replaces them.
+            if live > self.free_n {
+                return Err(format!(
+                    "lazy stack holds {live} live entries but free count is {} (node mode)",
+                    self.free_n
+                ));
+            }
+        } else if live != self.free_n {
             return Err(format!(
                 "lazy stack holds {live} live entries but free count is {}",
                 self.free_n
@@ -605,6 +679,103 @@ mod tests {
         assert_eq!(p.alloc(0), Some(1));
         assert_eq!(p.alloc(0), Some(3));
         p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn node_granular_drains_whole_nodes() {
+        let sp = ClusterSpec::homogeneous(3, 4, 1000, 2);
+        let mut p = SlotPool::new(&sp);
+        p.set_node_granular(true);
+        assert!(p.node_granular());
+        let mut nodes = Vec::new();
+        while let Some(s) = p.alloc(100) {
+            nodes.push(p.node_of(s));
+            p.check_invariants().unwrap();
+        }
+        assert_eq!(nodes.len(), 12);
+        // Cores come out node-by-node: once the cursor leaves a node it
+        // never interleaves back (3 contiguous groups of 4).
+        let mut opened: Vec<NodeId> = Vec::new();
+        for &n in &nodes {
+            if opened.last() != Some(&n) {
+                assert!(!opened.contains(&n), "node {n} reopened mid-drain");
+                opened.push(n);
+            }
+        }
+        assert_eq!(opened.len(), 3);
+    }
+
+    #[test]
+    fn node_granular_respects_memory_on_rollover() {
+        // 1000 MB per node, 4 cores: only two 450 MB tasks fit per node,
+        // so the cursor must roll over with cores still free.
+        let sp = ClusterSpec::homogeneous(3, 4, 1000, 2);
+        let mut p = SlotPool::new(&sp);
+        p.set_node_granular(true);
+        let mut per_node = [0u32; 3];
+        while let Some(s) = p.alloc(450) {
+            per_node[p.node_of(s) as usize] += 1;
+            p.check_invariants().unwrap();
+        }
+        assert_eq!(per_node, [2, 2, 2]);
+    }
+
+    #[test]
+    fn node_granular_mode_keeps_the_lazy_stack_bounded() {
+        let sp = ClusterSpec::homogeneous(2, 2, 1000, 2);
+        let mut p = SlotPool::new(&sp);
+        p.set_node_granular(true);
+        for _ in 0..1000 {
+            let s = p.alloc(100).unwrap();
+            p.release(s, 100);
+            p.check_invariants().unwrap();
+        }
+        // Releases skip the lazy stack in node mode: it never grows
+        // past the reinit seeding (per-slot mode would hold ~1000 dead
+        // entries here).
+        assert!(p.free_lifo.len() <= p.capacity());
+    }
+
+    #[test]
+    fn node_granular_rolls_over_a_retired_open_node() {
+        let sp = ClusterSpec::homogeneous(2, 2, 1000, 2);
+        let mut p = SlotPool::new(&sp);
+        p.set_node_granular(true);
+        let a = p.alloc(0).unwrap();
+        let open = p.node_of(a);
+        p.retire_node(open);
+        p.check_invariants().unwrap();
+        // The open node's free list was parked: the cursor rolls to the
+        // surviving node instead of resurrecting retired capacity.
+        let b = p.alloc(0).unwrap();
+        assert_ne!(p.node_of(b), open);
+        p.release(a, 0); // parks on the retired node
+        p.check_invariants().unwrap();
+        p.restore_node(open);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn reinit_resets_node_granular_mode() {
+        let mut p = SlotPool::new(&spec());
+        p.set_node_granular(true);
+        p.reinit(&spec());
+        assert!(!p.node_granular());
+        // Back in per-slot mode the legacy pop order returns.
+        let fresh = SlotPool::new(&spec());
+        let mut a = p;
+        let mut b = fresh;
+        for _ in 0..b.capacity() {
+            assert_eq!(a.alloc(100), b.alloc(100));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "set_node_granular on a pool with")]
+    fn node_granular_flip_requires_quiescent_pool() {
+        let mut p = SlotPool::new(&spec());
+        p.alloc(0).unwrap();
+        p.set_node_granular(true);
     }
 
     #[test]

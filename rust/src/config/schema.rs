@@ -121,12 +121,16 @@ pub struct ExperimentConfig {
     /// Mean time-to-repair of the `churn` experiment, as a fraction of
     /// the observation window.
     pub churn_mttr_frac: f64,
-    /// Total-task-count sweep of the `scale` experiment (the 10⁴–10⁵
-    /// short-job regime of Byun et al.).
+    /// Total-task-count sweep of the `scale` experiment (decade steps
+    /// through the 10⁴–10⁶ short-job regime of Byun et al.).
     pub scale_ns: Vec<u32>,
     /// Cluster core counts of the `scale` experiment; each must be a
     /// positive multiple of `harness::SCALE_CORES_PER_NODE` (25).
     pub scale_procs: Vec<u32>,
+    /// Extend `scale_ns` with a 10⁷-task point (`--huge`). Off by
+    /// default — the point takes minutes and is for dedicated perf
+    /// sessions, not CI.
+    pub scale_huge: bool,
 }
 
 impl Default for ExperimentConfig {
@@ -150,8 +154,9 @@ impl Default for ExperimentConfig {
             service_horizon: 240.0,
             churn_mtbf_fracs: vec![4.0, 1.0, 0.25],
             churn_mttr_frac: 0.05,
-            scale_ns: vec![1_000, 3_000, 10_000, 30_000, 100_000],
+            scale_ns: vec![1_000, 10_000, 100_000, 1_000_000],
             scale_procs: vec![1_000, 10_000],
+            scale_huge: false,
         }
     }
 }
@@ -240,6 +245,9 @@ impl ExperimentConfig {
                         .iter()
                         .map(|v| get_u32(v, key))
                         .collect::<Result<_, _>>()?;
+                }
+                "experiment.scale_huge" => {
+                    cfg.scale_huge = value.as_bool().ok_or_else(|| bad(key))?
                 }
                 "experiment.scale_procs" => {
                     let arr = match value {
@@ -510,6 +518,10 @@ n_sweep = [4, 240]
         .unwrap();
         assert_eq!(c.scale_ns, vec![500, 2000]);
         assert_eq!(c.scale_procs, vec![100]);
+        assert!(!c.scale_huge);
+        let h = ExperimentConfig::from_toml("[experiment]\nscale_huge = true").unwrap();
+        assert!(h.scale_huge);
+        assert!(ExperimentConfig::from_toml("[experiment]\nscale_huge = 3").is_err());
         assert!(ExperimentConfig::from_toml("[experiment]\nscale_ns = []").is_err());
         assert!(ExperimentConfig::from_toml("[experiment]\nscale_procs = [0]").is_err());
         // Negative values must be rejected, not wrapped to huge u32s.

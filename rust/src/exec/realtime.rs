@@ -2,7 +2,7 @@
 
 use crate::sched::RunResult;
 use crate::util::prng::Prng;
-use crate::util::stats::Summary;
+use crate::util::stats::{condense_sample, percentile_sorted, Summary, WAIT_SAMPLE_CAP};
 use crate::workload::TraceRecord;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
@@ -109,6 +109,7 @@ impl RealtimeCoordinator {
         let mut free: Vec<u32> = (0..p as u32).rev().collect();
         let mut outstanding = 0usize;
         let mut waits = Summary::new();
+        let mut wait_list: Vec<f64> = Vec::with_capacity(tasks.len());
         let mut trace: Vec<TraceRecord> = Vec::with_capacity(tasks.len());
         let mut makespan = 0.0f64;
         let mut checksum_acc = 0.0f64;
@@ -121,7 +122,9 @@ impl RealtimeCoordinator {
                 // The emulated daemon latency blocks the leader (serial
                 // dispatch) without burning a core the workers need.
                 wait_for(self.params.dispatch_overhead);
-                waits.add(epoch.elapsed().as_secs_f64());
+                let wait = epoch.elapsed().as_secs_f64();
+                waits.add(wait);
+                wait_list.push(wait);
                 task_txs[worker as usize]
                     .send(task)
                     .expect("worker channel closed");
@@ -155,6 +158,19 @@ impl RealtimeCoordinator {
 
         let t_job: f64 = tasks.iter().map(|t| t.nominal).sum::<f64>() / p as f64;
         trace.sort_by_key(|r| r.task);
+        // Realtime runs are small: exact quantiles from the full sorted
+        // wait list, condensed to the same bounded-sample contract the
+        // simulator's streaming reservoir honors.
+        wait_list.sort_by(|a, b| a.partial_cmp(b).expect("finite waits"));
+        let q = |p: f64| {
+            if wait_list.is_empty() {
+                f64::NAN
+            } else {
+                percentile_sorted(&wait_list, p)
+            }
+        };
+        let (wait_p50, wait_p95, wait_p99) = (q(0.50), q(0.95), q(0.99));
+        condense_sample(&mut wait_list, WAIT_SAMPLE_CAP);
         Ok(RunResult {
             scheduler: format!("realtime(ts={})", self.params.dispatch_overhead),
             workload: "realtime".into(),
@@ -165,6 +181,10 @@ impl RealtimeCoordinator {
             events: 0,
             daemon_busy: self.params.dispatch_overhead * tasks.len() as f64,
             waits,
+            wait_p50,
+            wait_p95,
+            wait_p99,
+            wait_sample: wait_list,
             preemptions: 0,
             kills: 0,
             failed: 0,

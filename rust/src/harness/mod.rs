@@ -14,7 +14,7 @@
 //! | `preempt`  | preemption sweep: checkpoint cost × ordering × all schedulers, fairness vs ΔT |
 //! | `service`  | service-footprint sweep: resident services × Poisson short tasks × all schedulers, windowed utilization |
 //! | `churn`    | fault-injection sweep: seeded node failure/repair churn × retry budget × all schedulers, goodput + lost work + completion coverage |
-//! | `scale`    | simulator wall-time scaling at 10⁴–10⁵ tasks: n × P × all schedulers + ordered/preemptive rows, fitted log-log exponent |
+//! | `scale`    | simulator wall-time scaling at 10³–10⁶ tasks (10⁷ with `--huge`): n × P × all schedulers + ordered/preemptive + node-granular/sharded engine rows, fitted log-log exponent + Mev/s floor |
 
 //! All experiment runners route their `(scheduler, n, trial)`
 //! cells through the deterministic parallel executor in [`parallel`];
@@ -38,8 +38,9 @@ pub use fig6::{fig6, Fig6Report};
 pub use fig7::{fig7, Fig7Report};
 pub use parallel::{default_jobs, run_cells};
 pub use scale::{
-    scale, scale_array_workload, scale_cluster, scale_preempt_workload, ScaleCell, ScaleFit,
-    ScaleReport, SCALE_ALPHA_CEILING, SCALE_CORES_PER_NODE, SCALE_GATE_MIN_N, SCALE_PREEMPT_BG,
+    scale, scale_array_workload, scale_cluster, scale_effective_ns, scale_preempt_workload,
+    ScaleCell, ScaleFit, ScaleReport, SCALE_ALPHA_CEILING, SCALE_CORES_PER_NODE,
+    SCALE_GATE_MIN_N, SCALE_MEVENTS_FLOOR, SCALE_PREEMPT_BG, SCALE_SHARDS,
 };
 pub use scenarios::{
     churn, preempt, scenarios, service, ChurnCell, ChurnReport, PreemptCell, PreemptReport,

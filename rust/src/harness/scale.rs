@@ -1,4 +1,5 @@
-//! `scale` experiment: simulator wall-clock scaling at 10⁴–10⁵ tasks.
+//! `scale` experiment: simulator wall-clock scaling at 10³–10⁶ tasks
+//! (10⁷ behind `--huge`).
 //!
 //! The paper's experiments stop at thousands of tasks, but the regime
 //! Byun et al. ("Node-Based Job Scheduling for Large Scale Simulations
@@ -7,15 +8,21 @@
 //! legacy `Ordered`/`Preemptive` combinators re-sorted the whole
 //! pending queue per event, `take_task`/`try_dispatch` scanned it per
 //! dispatch, and memory-constrained `SlotPool` allocations scanned and
-//! memmoved the free stack, all quadratic.
+//! memmoved the free stack, all quadratic. With those gone and the
+//! kernel on SoA task state + streaming metrics, the sweep extends to
+//! 10⁶ tasks as a matter of course.
 //!
 //! This runner measures the *wall time* of simulating n ∈
 //! `cfg.scale_ns` tasks on P ∈ `cfg.scale_procs` cores for every
-//! scheduler family plus the ordered/preemptive wrapper rows, fits the
-//! log-log wall-time-vs-n exponent with [`crate::util::fit`], and (in
-//! [`ScaleReport::check_shape`]) gates the ordered/preemptive rows at
-//! exponent ≤ 1.25 while asserting the incremental ordered queue is
-//! bit-identical to the legacy eager-sort oracle.
+//! scheduler family plus the ordered/preemptive wrapper rows and two
+//! engine-mode rows — `IdealFIFO+node` (whole-node allocation, arXiv
+//! 2108.11359) and `IdealFIFO+shard4` (the kernel sharded across node
+//! groups) — fits the log-log wall-time-vs-n exponent with
+//! [`crate::util::fit`], and (in [`ScaleReport::check_shape`]) gates
+//! the ordered/preemptive rows at exponent ≤ 1.25, holds the
+//! engine-mode rows to the [`SCALE_MEVENTS_FLOOR`] throughput floor,
+//! and asserts the incremental ordered queue is bit-identical to the
+//! legacy eager-sort oracle.
 //!
 //! Methodology notes:
 //!
@@ -34,7 +41,7 @@
 use super::parallel::run_cells;
 use crate::config::{ExperimentConfig, SchedulerChoice};
 use crate::sched::combinators::{self, Order, OrderedSim};
-use crate::sched::{make_scheduler, RunOptions, Scheduler};
+use crate::sched::{make_scheduler, NodeGranularSim, RunOptions, Scheduler, ShardedSim};
 use crate::util::fit::fit_power_law;
 use crate::util::table::{fnum, Table};
 use crate::workload::{TaskSpec, Workload};
@@ -55,6 +62,17 @@ pub const SCALE_GATE_MIN_N: u32 = 8000;
 
 /// Fitted log-log exponent ceiling for the ordered/preemptive rows.
 pub const SCALE_ALPHA_CEILING: f64 = 1.25;
+
+/// Shard count of the `IdealFIFO+shard4` row (must divide every
+/// `scale_procs / SCALE_CORES_PER_NODE` node count).
+pub const SCALE_SHARDS: usize = 4;
+
+/// Throughput floor (million simulation events per wall second) for the
+/// engine-mode rows at the largest n. Deliberately conservative — a
+/// release-build kernel clears it by an order of magnitude; only a
+/// quadratic regression or an accidental debug-path allocation storm
+/// trips it.
+pub const SCALE_MEVENTS_FLOOR: f64 = 0.5;
 
 /// One measured (P, scheduler, n) cell.
 pub struct ScaleCell {
@@ -179,9 +197,18 @@ fn is_gated_row(name: &str) -> bool {
     name.contains("+prio")
 }
 
+/// Whether a row is held to the [`SCALE_MEVENTS_FLOOR`] throughput
+/// floor at the largest n (the raw engine and its two fast modes —
+/// rows whose cost per event is pure kernel machinery).
+fn is_floor_row(name: &str) -> bool {
+    name == "IdealFIFO" || name == "IdealFIFO+node" || name == "IdealFIFO+shard4"
+}
+
 /// The scale scheduler set: every simulated family at calibrated
 /// (unscaled) costs, plus the ordered and preemptive wrapper rows over
-/// the zero-overhead reference (isolating the queue machinery).
+/// the zero-overhead reference (isolating the queue machinery), plus
+/// the node-granular and sharded engine modes over the same reference
+/// (isolating the allocation and parallelism machinery).
 fn scale_schedulers() -> Vec<Box<dyn Scheduler>> {
     let mut v: Vec<Box<dyn Scheduler>> = SchedulerChoice::all_simulated()
         .iter()
@@ -197,6 +224,16 @@ fn scale_schedulers() -> Vec<Box<dyn Scheduler>> {
         1,
         Order::Priority,
     ));
+    v.push(Box::new(NodeGranularSim::new(
+        make_scheduler(SchedulerChoice::IdealFifo),
+        "IdealFIFO+node",
+    )));
+    v.push(Box::new(ShardedSim::new(
+        make_scheduler(SchedulerChoice::IdealFifo),
+        SCALE_SHARDS,
+        SCALE_SHARDS,
+        "IdealFIFO+shard4",
+    )));
     v
 }
 
@@ -216,13 +253,23 @@ pub fn scale_cluster(procs: u32) -> crate::cluster::ClusterSpec {
     )
 }
 
+/// The n sweep a config asks for: `scale_ns`, extended with the
+/// 10⁷-task point when `--huge` (`scale_huge`) is set.
+pub fn scale_effective_ns(cfg: &ExperimentConfig) -> Vec<u32> {
+    let mut ns = cfg.scale_ns.clone();
+    if cfg.scale_huge && !ns.contains(&10_000_000) {
+        ns.push(10_000_000);
+    }
+    ns
+}
+
 /// Run the scale sweep.
 pub fn scale(cfg: &ExperimentConfig) -> ScaleReport {
     let schedulers = scale_schedulers();
+    let scale_ns = scale_effective_ns(cfg);
     // One array + one preempt workload per (P, n); preempt workloads
     // depend on P through the filler count.
-    let array_workloads: Vec<(u32, Workload)> = cfg
-        .scale_ns
+    let array_workloads: Vec<(u32, Workload)> = scale_ns
         .iter()
         .map(|&n| (n, scale_array_workload(n)))
         .collect();
@@ -230,7 +277,7 @@ pub fn scale(cfg: &ExperimentConfig) -> ScaleReport {
         .scale_procs
         .iter()
         .flat_map(|&p| {
-            cfg.scale_ns
+            scale_ns
                 .iter()
                 .map(move |&n| (p, n, scale_preempt_workload(n, p)))
         })
@@ -249,7 +296,7 @@ pub fn scale(cfg: &ExperimentConfig) -> ScaleReport {
         let cluster = scale_cluster(procs);
         for (ki, sched) in schedulers.iter().enumerate() {
             let preemptive = is_preemptive_row(sched.name());
-            for (ni, &n) in cfg.scale_ns.iter().enumerate() {
+            for (ni, &n) in scale_ns.iter().enumerate() {
                 let workload = if preemptive {
                     &preempt_workloads
                         .iter()
@@ -335,7 +382,7 @@ pub fn scale(cfg: &ExperimentConfig) -> ScaleReport {
     ScaleReport {
         cells,
         fits,
-        ns: cfg.scale_ns.clone(),
+        ns: scale_ns,
         procs: cfg.scale_procs.clone(),
         serial_timing: cfg.effective_jobs() == 1,
     }
@@ -438,7 +485,10 @@ impl ScaleReport {
     ///   timed runs (`--jobs 1`; parallel cells time each other's CPU
     ///   contention) that are large enough for the timer to out-vote
     ///   noise (max n ≥ [`SCALE_GATE_MIN_N`]). The CI smoke step runs
-    ///   with `--jobs 1` so the gate is always live there.
+    ///   with `--jobs 1` so the gate is always live there;
+    /// * under the same serial-timing conditions, the engine-mode rows
+    ///   (`IdealFIFO`, `IdealFIFO+node`, `IdealFIFO+shard4`) clear
+    ///   [`SCALE_MEVENTS_FLOOR`] at the largest n.
     pub fn check_shape(&self, cfg: &ExperimentConfig) -> Result<(), String> {
         let expected = self.procs.len() * scale_schedulers().len() * self.ns.len();
         if self.cells.len() != expected {
@@ -476,6 +526,24 @@ impl ScaleReport {
                         "{} P={}: fitted exponent {:.3} exceeds the \
                          {SCALE_ALPHA_CEILING} ceiling (quadratic regression?)",
                         f.scheduler, f.procs, f.alpha
+                    ));
+                }
+            }
+            for c in self
+                .cells
+                .iter()
+                .filter(|c| c.n == max_n && is_floor_row(&c.scheduler))
+            {
+                if c.mevents_per_s() < SCALE_MEVENTS_FLOOR {
+                    return Err(format!(
+                        "{} P={} n={}: {:.3} Mev/s under the {SCALE_MEVENTS_FLOOR} \
+                         floor ({} events in {:.3} s)",
+                        c.scheduler,
+                        c.procs,
+                        c.n,
+                        c.mevents_per_s(),
+                        c.events,
+                        c.wall_s
                     ));
                 }
             }
@@ -560,9 +628,9 @@ mod tests {
         let cfg = tiny_cfg();
         let rep = scale(&cfg);
         rep.check_shape(&cfg).unwrap();
-        // 8 scheduler rows × 2 n values × 1 P value.
-        assert_eq!(rep.cells.len(), 16);
-        assert_eq!(rep.fits.len(), 8);
+        // 10 scheduler rows × 2 n values × 1 P value.
+        assert_eq!(rep.cells.len(), 20);
+        assert_eq!(rep.fits.len(), 10);
         assert_eq!(rep.fits.iter().filter(|f| f.gated).count(), 2);
         assert!(!rep.to_csv().is_empty());
     }
@@ -588,6 +656,38 @@ mod tests {
             );
             assert_eq!(ca.events, cb.events);
             assert_eq!(ca.preemptions, cb.preemptions);
+        }
+    }
+
+    #[test]
+    fn huge_flag_appends_the_ten_million_point() {
+        let mut cfg = tiny_cfg();
+        assert_eq!(scale_effective_ns(&cfg), vec![200, 800]);
+        cfg.scale_huge = true;
+        assert_eq!(scale_effective_ns(&cfg), vec![200, 800, 10_000_000]);
+        // Idempotent when the point is already in the sweep.
+        cfg.scale_ns.push(10_000_000);
+        assert_eq!(scale_effective_ns(&cfg), vec![200, 800, 10_000_000]);
+    }
+
+    #[test]
+    fn engine_mode_rows_agree_with_the_reference() {
+        // Constant 1-core tasks under zero-overhead FIFO finish in
+        // ceil(n/P) waves however the slots are carved up: the plain,
+        // node-granular and sharded rows must report the same makespan.
+        let cfg = tiny_cfg();
+        let rep = scale(&cfg);
+        for &n in &cfg.scale_ns {
+            let t = |name: &str| {
+                rep.cells
+                    .iter()
+                    .find(|c| c.scheduler == name && c.n == n)
+                    .unwrap_or_else(|| panic!("missing {name} n={n}"))
+                    .t_total
+            };
+            let reference = t("IdealFIFO");
+            assert_eq!(t("IdealFIFO+node").to_bits(), reference.to_bits());
+            assert_eq!(t("IdealFIFO+shard4").to_bits(), reference.to_bits());
         }
     }
 

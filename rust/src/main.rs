@@ -9,9 +9,9 @@
 //!   validate    run every experiment's shape checks at reduced scale
 //!
 //! Common options: --config <toml>, --quick (scaled-down cluster),
-//! --trials N, --jobs N (sweep worker threads; results are
-//! bit-identical for any value), --out-dir <dir>, --artifacts <dir>,
-//! --csv.
+//! --huge (adds a 10⁷-task point to the `scale` sweep), --trials N,
+//! --jobs N (sweep worker threads; results are bit-identical for any
+//! value), --out-dir <dir>, --artifacts <dir>, --csv.
 
 use sssched::cli::Args;
 use sssched::config::ExperimentConfig;
@@ -53,7 +53,7 @@ fn usage() {
          commands:\n\
          \x20 features   [--table 1..7] [--csv]\n\
          \x20 experiment <table9|table10|fig4|fig5|fig6|fig7|scenarios|preempt|service|churn|scale|all> \
-         [--config f] [--quick] [--trials N] [--jobs N] [--out-dir d] [--artifacts d] [--csv]\n\
+         [--config f] [--quick] [--huge] [--trials N] [--jobs N] [--out-dir d] [--artifacts d] [--csv]\n\
          \x20 serve      [--workers N] [--tasks N] [--task-ms MS] \
          [--payload sleep|spin|analytics] [--ts SECS] [--artifacts d]\n\
          \x20 validate   [--quick]"
@@ -72,6 +72,11 @@ fn load_config(args: &Args) -> Result<ExperimentConfig, String> {
         // large enough for a meaningful wall-time exponent fit.
         cfg.scale_ns = vec![2_000, 8_000, 32_000];
         cfg.scale_procs = vec![1_000];
+    }
+    if args.flag("huge") {
+        // Appended by the scale runner, so it composes with --quick and
+        // config-file sweeps alike.
+        cfg.scale_huge = true;
     }
     if let Some(t) = args.opt("trials") {
         cfg.trials = t.parse().map_err(|_| "bad --trials")?;

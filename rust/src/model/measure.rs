@@ -52,6 +52,10 @@ mod tests {
             events: 0,
             daemon_busy: 0.0,
             waits: Summary::new(),
+            wait_p50: f64::NAN,
+            wait_p95: f64::NAN,
+            wait_p99: f64::NAN,
+            wait_sample: Vec::new(),
             preemptions: 0,
             kills: 0,
             failed: 0,

@@ -19,6 +19,10 @@
 //!   EASY backfill) over rigid parallel jobs.
 //! * [`ideal`] — zero-overhead FIFO used as a correctness reference
 //!   (T_total == ceil(N/P)·t exactly, U == 1).
+//! * [`sharded`] — wrappers, not backends: [`ShardedSim`] decomposes a
+//!   run across disjoint node groups (parallelism *within* one giant
+//!   run) and [`NodeGranularSim`] switches the slot pool to whole-node
+//!   allocation (arXiv 2108.11359).
 //!
 //! Since the kernel refactor every backend is a
 //! [`crate::sim::SchedPolicy`]: the event loop, slot packing, gang
@@ -39,10 +43,12 @@ pub mod combinators;
 pub mod ideal;
 pub mod mesos;
 mod result;
+pub mod sharded;
 pub mod sparrow;
 pub mod yarn;
 
 pub use result::{ExecSpan, RunOptions, RunResult};
+pub use sharded::{NodeGranularSim, ShardedSim};
 
 use crate::cluster::ClusterSpec;
 use crate::config::SchedulerChoice;

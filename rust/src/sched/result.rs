@@ -2,7 +2,7 @@
 //! Section 4/5: U = T_job / T_total.
 
 use crate::cluster::FaultPlan;
-use crate::util::stats::Summary;
+use crate::util::stats::{Summary, WAIT_SAMPLE_CAP};
 use crate::workload::TraceRecord;
 
 /// Options controlling what a run records.
@@ -28,6 +28,13 @@ pub struct RunOptions {
     /// to pre-fault-plan builds. Validated by
     /// [`crate::workload::Workload::validate_for`].
     pub faults: FaultPlan,
+    /// Node-granular allocation (arXiv 2108.11359): the slot pool hands
+    /// out cores from one open node at a time and consults the
+    /// tournament tree only on node rollover, trading packing quality
+    /// for allocation throughput on massive short-task streams. Changes
+    /// placement, so results are *not* bit-identical to the default
+    /// per-slot mode.
+    pub node_granular: bool,
 }
 
 impl RunOptions {
@@ -106,6 +113,22 @@ pub struct RunResult {
     pub daemon_busy: f64,
     /// Summary of per-task scheduler-induced wait times.
     pub waits: Summary,
+    /// Streaming P² estimate of the median wait (NaN when no task ever
+    /// started). Exact below 5 observations; within the P² marker error
+    /// above — `wait_sample` carries the exactly-reconstructable tail
+    /// for small runs.
+    pub wait_p50: f64,
+    /// Streaming P² estimate of the 95th-percentile wait (NaN when
+    /// empty).
+    pub wait_p95: f64,
+    /// Streaming P² estimate of the 99th-percentile wait (NaN when
+    /// empty).
+    pub wait_p99: f64,
+    /// Sorted bounded reservoir of wait observations (Algorithm R, cap
+    /// [`WAIT_SAMPLE_CAP`], deterministic seed). Below the cap this IS
+    /// the full sorted wait list, so small-n runs expose exact
+    /// quantiles; above it, a uniform sample that shard merges condense.
+    pub wait_sample: Vec<f64>,
     /// Evictions executed by the kernel's preemption subsystem (0 for
     /// workloads without preemptible tasks).
     pub preemptions: u64,
@@ -249,6 +272,38 @@ impl RunResult {
                 self.waits.mean()
             ));
         }
+        if self.waits.count() > 0 {
+            let lo = self.waits.min() - 1e-9;
+            let hi = self.waits.max() + 1e-9;
+            for (name, q) in [
+                ("wait_p50", self.wait_p50),
+                ("wait_p95", self.wait_p95),
+                ("wait_p99", self.wait_p99),
+            ] {
+                if !q.is_finite() || q < lo || q > hi {
+                    return Err(format!(
+                        "{name} {q} outside observed wait range [{}, {}]",
+                        self.waits.min(),
+                        self.waits.max()
+                    ));
+                }
+            }
+            if self.wait_p50 > self.wait_p95 + 1e-9 || self.wait_p95 > self.wait_p99 + 1e-9 {
+                return Err(format!(
+                    "non-monotone wait quantiles p50 {} p95 {} p99 {}",
+                    self.wait_p50, self.wait_p95, self.wait_p99
+                ));
+            }
+        }
+        let cap = (self.waits.count() as usize).min(WAIT_SAMPLE_CAP);
+        if self.wait_sample.len() > cap {
+            return Err(format!(
+                "wait_sample holds {} entries for {} observations (cap {})",
+                self.wait_sample.len(),
+                self.waits.count(),
+                WAIT_SAMPLE_CAP
+            ));
+        }
         match self.horizon {
             Some(h) => {
                 if !(h.is_finite() && h > 0.0) {
@@ -344,6 +399,10 @@ mod tests {
             events: 0,
             daemon_busy: 0.0,
             waits: Summary::new(),
+            wait_p50: f64::NAN,
+            wait_p95: f64::NAN,
+            wait_p99: f64::NAN,
+            wait_sample: Vec::new(),
             preemptions: 0,
             kills: 0,
             failed: 0,
@@ -404,6 +463,30 @@ mod tests {
         let mut r = result(300.0, 240.0);
         r.busy_core_seconds = 1.0;
         assert!(r.check_invariants().is_err());
+    }
+
+    #[test]
+    fn invariant_checks_streaming_wait_quantiles() {
+        let mut r = result(300.0, 240.0);
+        r.waits = Summary::of(&[1.0, 2.0, 3.0]);
+        r.wait_p50 = 2.0;
+        r.wait_p95 = 2.9;
+        r.wait_p99 = 3.0;
+        r.wait_sample = vec![1.0, 2.0, 3.0];
+        r.check_invariants().unwrap();
+        // A quantile outside the observed wait range.
+        r.wait_p99 = 4.0;
+        assert!(r.check_invariants().unwrap_err().contains("wait_p99"));
+        // Non-monotone quantiles.
+        r.wait_p99 = 3.0;
+        r.wait_p50 = 3.0;
+        r.wait_p95 = 1.5;
+        assert!(r.check_invariants().unwrap_err().contains("non-monotone"));
+        // More sample entries than observations.
+        r.wait_p50 = 2.0;
+        r.wait_p95 = 2.9;
+        r.wait_sample = vec![1.0, 2.0, 2.0, 3.0];
+        assert!(r.check_invariants().unwrap_err().contains("wait_sample"));
     }
 
     #[test]

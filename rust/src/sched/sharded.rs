@@ -1,0 +1,462 @@
+//! Sharded kernel driver and the node-granular allocation wrapper —
+//! the two fast modes of the million-task data plane.
+//!
+//! # Sharding
+//!
+//! The Sparrow and ideal paths are embarrassingly independent: no
+//! central daemon couples one task's placement to another's, so a run
+//! over N tasks on P cores decomposes into G runs over disjoint node
+//! groups and disjoint job subsets. [`ShardedSim`] performs that
+//! decomposition — nodes into G contiguous groups, jobs by `job % G`,
+//! task ids re-packed densely per shard — runs each shard through the
+//! ordinary [`Kernel`](crate::sim::Kernel) loop (in parallel up to a
+//! worker cap), and merges the shard results:
+//!
+//! * `t_total` = max over shards (the last shard to finish ends the
+//!   run); sums for `events`, `daemon_busy`, completion and fault
+//!   counters, and windowed busy time;
+//! * `waits` via parallel Welford merge in shard order;
+//! * wait quantiles re-estimated from the concatenated (then condensed)
+//!   per-shard reservoir samples;
+//! * traces/spans remapped back to global task/node/slot ids.
+//!
+//! The merge is deterministic in the worker count: each shard's result
+//! is a pure function of its seed, and merging happens in shard-index
+//! order. Shard 0 runs under the caller's seed unchanged, so a
+//! single-shard `ShardedSim` reproduces the plain run bit-for-bit
+//! (modulo the scheduler label and sample-derived quantiles), which
+//! `tests/streaming_metrics.rs` pins.
+//!
+//! Policies with *global* state are not shardable: a centralized
+//! daemon's queue couples shards, and Sparrow's single probe RNG
+//! stream means a sharded Sparrow run is a different (equally valid,
+//! still deterministic) draw than the global one. The ideal FIFO on a
+//! constant-duration 1-core workload is exactly invariant: with G
+//! dividing the node count, task `i = q·P + r` starts at wave `q` both
+//! ways, so `t_total` matches bitwise.
+//!
+//! # Node granularity
+//!
+//! [`NodeGranularSim`] flips `RunOptions::node_granular`, switching the
+//! slot pool into the whole-node allocation mode of arXiv 2108.11359
+//! (open-node cursor, one tournament-tree query per node rollover, no
+//! lazy-stack maintenance). Placement changes, so results are a
+//! different valid schedule — the `scale` experiment measures what the
+//! mode buys at n = 10^6.
+
+use super::result::{RunOptions, RunResult};
+use super::Scheduler;
+use crate::cluster::{ClusterSpec, Node, NodeState};
+use crate::sim::SimScratch;
+use crate::util::stats::{condense_sample, percentile_sorted, Summary, WAIT_SAMPLE_CAP};
+use crate::workload::{TaskSpec, Workload};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Per-shard seed derivation: shard 0 keeps the caller's seed (the
+/// single-shard identity the tests pin); later shards step by the
+/// golden-ratio increment so streams never collide.
+fn shard_seed(seed: u64, shard: usize) -> u64 {
+    seed.wrapping_add((shard as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+/// A [`Scheduler`] adapter running an inner backend's run in
+/// node-granular slot-pool mode (see [`RunOptions::node_granular`]).
+pub struct NodeGranularSim {
+    inner: Box<dyn Scheduler>,
+    name: &'static str,
+}
+
+impl NodeGranularSim {
+    /// Wrap `inner`; `name` is the display name, e.g.
+    /// `"IdealFIFO+node"`.
+    pub fn new(inner: Box<dyn Scheduler>, name: &'static str) -> Self {
+        Self { inner, name }
+    }
+}
+
+impl Scheduler for NodeGranularSim {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn run_with_scratch(
+        &self,
+        workload: &Workload,
+        cluster: &ClusterSpec,
+        seed: u64,
+        options: &RunOptions,
+        scratch: &mut SimScratch,
+    ) -> RunResult {
+        let mut opts = options.clone();
+        opts.node_granular = true;
+        let mut r = self
+            .inner
+            .run_with_scratch(workload, cluster, seed, &opts, scratch);
+        r.scheduler = self.name.to_string();
+        r
+    }
+
+    fn projected_runtime(&self, workload: &Workload, cluster: &ClusterSpec) -> f64 {
+        self.inner.projected_runtime(workload, cluster)
+    }
+}
+
+/// A [`Scheduler`] adapter that shards a run across disjoint node
+/// groups (see the module docs for the decomposition and merge rules).
+pub struct ShardedSim {
+    inner: Box<dyn Scheduler>,
+    shards: usize,
+    /// Worker-thread cap for running shards concurrently (1 = serial;
+    /// results are identical either way).
+    jobs: usize,
+    name: &'static str,
+    /// Warm per-worker scratches reused across runs, so repeated runs
+    /// hit the kernel's zero-allocation steady state. The warm-buffer
+    /// contract makes results independent of scratch history.
+    scratch_pool: Mutex<Vec<SimScratch>>,
+}
+
+impl ShardedSim {
+    /// Wrap `inner` into `shards` node groups run on up to `jobs`
+    /// threads; `name` is the display name, e.g. `"IdealFIFO+shard4"`.
+    pub fn new(inner: Box<dyn Scheduler>, shards: usize, jobs: usize, name: &'static str) -> Self {
+        assert!(shards >= 1, "ShardedSim needs at least one shard");
+        Self {
+            inner,
+            shards,
+            jobs: jobs.max(1),
+            name,
+            scratch_pool: Mutex::new(Vec::new()),
+        }
+    }
+}
+
+impl Scheduler for ShardedSim {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn run_with_scratch(
+        &self,
+        workload: &Workload,
+        cluster: &ClusterSpec,
+        seed: u64,
+        options: &RunOptions,
+        _scratch: &mut SimScratch,
+    ) -> RunResult {
+        // Shards run on the internal per-worker scratch pool (the
+        // warm-buffer contract makes results independent of scratch
+        // history), so the caller's scratch is deliberately unused.
+        assert!(
+            options.faults.is_empty(),
+            "sharded runs do not support fault plans (node ids are global)"
+        );
+        assert!(
+            workload.tasks.iter().all(|t| t.deps.is_empty()),
+            "sharded runs require a dependency-free workload"
+        );
+        let g = self.shards.min(cluster.n_nodes().max(1));
+
+        // Nodes into G contiguous groups (remainder spread over the
+        // first groups), re-id'd densely per shard. Slot offsets count
+        // Up-node cores only — the slot-id space the pool exposes.
+        let n_nodes = cluster.n_nodes();
+        let base = n_nodes / g;
+        let extra = n_nodes % g;
+        let mut clusters: Vec<ClusterSpec> = Vec::with_capacity(g);
+        let mut node_off: Vec<u32> = Vec::with_capacity(g);
+        let mut slot_off: Vec<u32> = Vec::with_capacity(g);
+        let mut node_cursor = 0usize;
+        let mut slot_cursor = 0u32;
+        for s in 0..g {
+            let take = base + usize::from(s < extra);
+            node_off.push(node_cursor as u32);
+            slot_off.push(slot_cursor);
+            let nodes: Vec<Node> = cluster.nodes[node_cursor..node_cursor + take]
+                .iter()
+                .enumerate()
+                .map(|(j, n)| Node {
+                    id: j as u32,
+                    ..n.clone()
+                })
+                .collect();
+            slot_cursor += nodes
+                .iter()
+                .filter(|n| n.state == NodeState::Up)
+                .map(|n| n.cores)
+                .sum::<u32>();
+            node_cursor += take;
+            clusters.push(ClusterSpec {
+                nodes,
+                rpc_latency: cluster.rpc_latency,
+                launch_overhead: cluster.launch_overhead,
+                teardown_overhead: cluster.teardown_overhead,
+            });
+        }
+
+        // Jobs to shards by `job % G`; task ids re-packed densely per
+        // shard in global id order, with the inverse map kept for trace
+        // remapping.
+        let mut workloads: Vec<Workload> = (0..g)
+            .map(|_| Workload {
+                tasks: Vec::new(),
+                label: workload.label.clone(),
+            })
+            .collect();
+        let mut global_ids: Vec<Vec<u32>> = vec![Vec::new(); g];
+        for t in &workload.tasks {
+            let s = (t.job as usize) % g;
+            let local = TaskSpec {
+                id: global_ids[s].len() as u32,
+                ..t.clone()
+            };
+            global_ids[s].push(t.id);
+            workloads[s].tasks.push(local);
+        }
+
+        // Run every shard (worker pool claims shard indices; each
+        // shard's result depends only on its own seed, so the outcome
+        // is independent of `jobs`).
+        let results: Vec<Mutex<Option<RunResult>>> = (0..g).map(|_| Mutex::new(None)).collect();
+        let next = AtomicUsize::new(0);
+        let workers = self.jobs.min(g);
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| {
+                    let mut scratch = self
+                        .scratch_pool
+                        .lock()
+                        .expect("scratch pool lock")
+                        .pop()
+                        .unwrap_or_else(SimScratch::new);
+                    loop {
+                        let s = next.fetch_add(1, Ordering::Relaxed);
+                        if s >= g {
+                            break;
+                        }
+                        let r = self.inner.run_with_scratch(
+                            &workloads[s],
+                            &clusters[s],
+                            shard_seed(seed, s),
+                            options,
+                            &mut scratch,
+                        );
+                        *results[s].lock().expect("shard result lock") = Some(r);
+                    }
+                    self.scratch_pool
+                        .lock()
+                        .expect("scratch pool lock")
+                        .push(scratch);
+                });
+            }
+        });
+        let shard_results: Vec<RunResult> = results
+            .into_iter()
+            .map(|m| {
+                m.into_inner()
+                    .expect("shard result lock")
+                    .expect("every shard ran")
+            })
+            .collect();
+
+        // Merge in shard-index order (deterministic).
+        let processors = cluster.total_cores();
+        let mut merged = RunResult {
+            scheduler: self.name.to_string(),
+            workload: workload.label.clone(),
+            n_tasks: workload.len() as u64,
+            processors,
+            t_total: 0.0,
+            t_job: workload.t_job_per_proc(processors),
+            events: 0,
+            daemon_busy: 0.0,
+            waits: Summary::new(),
+            wait_p50: f64::NAN,
+            wait_p95: f64::NAN,
+            wait_p99: f64::NAN,
+            wait_sample: Vec::new(),
+            preemptions: 0,
+            kills: 0,
+            failed: 0,
+            completed: 0,
+            wasted_core_seconds: 0.0,
+            horizon: options.horizon,
+            busy_core_seconds: 0.0,
+            trace: options.collect_trace.then(Vec::new),
+            spans: None,
+        };
+        let mut sample: Vec<f64> = Vec::new();
+        let mut spans = Vec::new();
+        let all_spans = shard_results.iter().all(|r| r.spans.is_some());
+        for (s, r) in shard_results.iter().enumerate() {
+            merged.t_total = merged.t_total.max(r.t_total);
+            merged.events += r.events;
+            merged.daemon_busy += r.daemon_busy;
+            merged.waits = merged.waits.merge(&r.waits);
+            sample.extend_from_slice(&r.wait_sample);
+            merged.preemptions += r.preemptions;
+            merged.kills += r.kills;
+            merged.failed += r.failed;
+            merged.completed += r.completed;
+            merged.wasted_core_seconds += r.wasted_core_seconds;
+            merged.busy_core_seconds += r.busy_core_seconds;
+            if let (Some(out), Some(tr)) = (merged.trace.as_mut(), r.trace.as_ref()) {
+                for rec in tr {
+                    let mut rec = rec.clone();
+                    rec.task = global_ids[s][rec.task as usize];
+                    rec.node += node_off[s];
+                    rec.slot += slot_off[s];
+                    out.push(rec);
+                }
+            }
+            if all_spans {
+                for sp in r.spans.as_ref().expect("checked above") {
+                    let mut sp = *sp;
+                    sp.task = global_ids[s][sp.task as usize];
+                    sp.slot += slot_off[s];
+                    spans.push(sp);
+                }
+            }
+        }
+        if let Some(tr) = merged.trace.as_mut() {
+            tr.sort_by_key(|r| r.task);
+        }
+        if options.collect_trace && all_spans {
+            spans.sort_by(|a, b| (a.task, a.start).partial_cmp(&(b.task, b.start)).unwrap());
+            merged.spans = Some(spans);
+        }
+        condense_sample(&mut sample, WAIT_SAMPLE_CAP);
+        if !sample.is_empty() {
+            merged.wait_p50 = percentile_sorted(&sample, 0.50);
+            merged.wait_p95 = percentile_sorted(&sample, 0.95);
+            merged.wait_p99 = percentile_sorted(&sample, 0.99);
+        }
+        merged.wait_sample = sample;
+        merged
+    }
+
+    fn projected_runtime(&self, workload: &Workload, cluster: &ClusterSpec) -> f64 {
+        self.inner.projected_runtime(workload, cluster)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::ideal::IdealFifo;
+    use crate::workload::WorkloadBuilder;
+
+    fn cluster() -> ClusterSpec {
+        ClusterSpec::homogeneous(4, 4, 8 * 1024, 2)
+    }
+
+    #[test]
+    fn shard_zero_keeps_the_caller_seed() {
+        assert_eq!(shard_seed(1234, 0), 1234);
+        assert_ne!(shard_seed(1234, 1), 1234);
+    }
+
+    #[test]
+    fn single_shard_matches_plain_run() {
+        let w = WorkloadBuilder::constant(3.0).tasks(64).label("s1").build();
+        let plain = IdealFifo.run(&w, &cluster(), 7, &RunOptions::with_trace());
+        let sharded = ShardedSim::new(Box::new(IdealFifo), 1, 1, "IdealFIFO+shard1");
+        let r = sharded.run(&w, &cluster(), 7, &RunOptions::with_trace());
+        r.check_invariants().unwrap();
+        assert_eq!(r.t_total.to_bits(), plain.t_total.to_bits());
+        assert_eq!(r.events, plain.events);
+        assert_eq!(r.completed, plain.completed);
+        assert_eq!(r.waits.count(), plain.waits.count());
+        assert_eq!(r.waits.mean().to_bits(), plain.waits.mean().to_bits());
+        let mut pt = plain.trace.clone().unwrap();
+        pt.sort_by_key(|rec| rec.task);
+        assert_eq!(r.trace.as_ref().unwrap(), &pt);
+    }
+
+    #[test]
+    fn sharded_ideal_constant_workload_is_wave_exact() {
+        // 64 one-core 3 s tasks on 16 cores: 4 waves of 12 s whether
+        // the cluster runs whole or as 2 or 4 node groups. One job per
+        // task so `job % G` spreads the load evenly.
+        let w = WorkloadBuilder::constant(3.0)
+            .tasks(64)
+            .jobs(64)
+            .label("w")
+            .build();
+        let plain = IdealFifo.run(&w, &cluster(), 0, &RunOptions::default());
+        for g in [2usize, 4] {
+            let name: &'static str = if g == 2 { "I+shard2" } else { "I+shard4" };
+            let sim = ShardedSim::new(Box::new(IdealFifo), g, 2, name);
+            let r = sim.run(&w, &cluster(), 0, &RunOptions::default());
+            r.check_invariants().unwrap();
+            assert_eq!(r.t_total.to_bits(), plain.t_total.to_bits(), "G={g}");
+            assert_eq!(r.completed, plain.completed);
+            assert_eq!(r.processors, plain.processors);
+        }
+    }
+
+    #[test]
+    fn sharded_results_are_independent_of_worker_count() {
+        let w = WorkloadBuilder::constant(2.0)
+            .tasks(120)
+            .jobs(12)
+            .label("j")
+            .build();
+        let runs: Vec<RunResult> = [1usize, 2, 8]
+            .iter()
+            .map(|&jobs| {
+                ShardedSim::new(Box::new(IdealFifo), 4, jobs, "I+shard4").run(
+                    &w,
+                    &cluster(),
+                    42,
+                    &RunOptions::with_trace(),
+                )
+            })
+            .collect();
+        for r in &runs[1..] {
+            assert_eq!(r.t_total.to_bits(), runs[0].t_total.to_bits());
+            assert_eq!(r.events, runs[0].events);
+            assert_eq!(r.waits.mean().to_bits(), runs[0].waits.mean().to_bits());
+            assert_eq!(r.trace, runs[0].trace);
+            assert_eq!(r.wait_sample, runs[0].wait_sample);
+        }
+    }
+
+    #[test]
+    fn trace_remap_restores_global_ids_and_disjoint_slots() {
+        let w = WorkloadBuilder::constant(1.0)
+            .tasks(32)
+            .jobs(32)
+            .label("t")
+            .build();
+        let sim = ShardedSim::new(Box::new(IdealFifo), 4, 2, "I+shard4");
+        let r = sim.run(&w, &cluster(), 3, &RunOptions::with_trace());
+        let trace = r.trace.as_ref().unwrap();
+        assert_eq!(trace.len(), 32);
+        for (i, rec) in trace.iter().enumerate() {
+            assert_eq!(rec.task, i as u32);
+            assert!(rec.slot < 16);
+            assert_eq!(rec.node, rec.slot / 4, "homogeneous slot->node map");
+        }
+        // Every shard (node group) actually ran work.
+        let mut nodes: Vec<u32> = trace.iter().map(|rec| rec.node).collect();
+        nodes.sort_unstable();
+        nodes.dedup();
+        assert_eq!(nodes, (0..4).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn node_granular_wrapper_relabels_and_completes() {
+        let w = WorkloadBuilder::constant(2.0).tasks(48).label("ng").build();
+        let sim = NodeGranularSim::new(Box::new(IdealFifo), "IdealFIFO+node");
+        let r = sim.run(&w, &cluster(), 0, &RunOptions::default());
+        r.check_invariants().unwrap();
+        assert_eq!(r.scheduler, "IdealFIFO+node");
+        assert_eq!(r.completed, 48);
+        // Constant 1-core work: whole-node packing changes placement,
+        // not the wave count.
+        let plain = IdealFifo.run(&w, &cluster(), 0, &RunOptions::default());
+        assert_eq!(r.t_total.to_bits(), plain.t_total.to_bits());
+    }
+}

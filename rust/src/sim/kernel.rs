@@ -135,10 +135,10 @@
 
 use super::engine::{EventQueue, SimEv, Time};
 use super::pending::{OrderIndex, OrderMode, PendingList};
-use super::scratch::SimScratch;
+use super::scratch::{SimScratch, TaskSoa};
 use crate::cluster::{ClusterSpec, FaultKind, NodeId, SlotId, SlotPool};
 use crate::sched::{ExecSpan, RunOptions, RunResult};
-use crate::util::stats::Summary;
+use crate::util::stats::{P2Quantile, Reservoir, Summary};
 use crate::workload::{JobId, JobKind, TaskId, TraceRecord, Workload};
 
 /// How one dispatched task enters execution.
@@ -277,6 +277,13 @@ pub trait SchedPolicy {
 /// (multi-core packing, gang all-or-nothing, dependency admission).
 pub struct KernelCtx<'w, 's> {
     workload: &'w Workload,
+    /// Struct-of-arrays mirror of the hot task-spec fields (duration,
+    /// submit time, cores, memory, job, kind), filled by the workload
+    /// scan. The event-loop hot paths read these columns instead of
+    /// walking `&[TaskSpec]`, so a million-task run stays cache-linear;
+    /// cold paths (eviction specs, retries, ordering keys) keep the
+    /// AoS view.
+    soa: &'s TaskSoa,
     queue: &'s mut EventQueue<SimEv>,
     pending: &'s mut PendingList,
     /// Incremental ordering overlay (inactive unless an `Ordered`
@@ -334,6 +341,13 @@ pub struct KernelCtx<'w, 's> {
     completed: usize,
     makespan: f64,
     waits: Summary,
+    // Streaming wait metrics: O(1) P² percentile markers plus a bounded
+    // reservoir, so quantiles survive in the result without an O(n)
+    // trace (the traced mode stays the exact oracle at small n).
+    wait_p50: &'s mut P2Quantile,
+    wait_p95: &'s mut P2Quantile,
+    wait_p99: &'s mut P2Quantile,
+    wait_sample: &'s mut Reservoir,
 }
 
 impl<'w> KernelCtx<'w, '_> {
@@ -676,10 +690,7 @@ impl<'w> KernelCtx<'w, '_> {
         let mut v: Vec<TaskId> = self
             .pending
             .iter()
-            .filter(|&t| {
-                let spec = &self.workload.tasks[t as usize];
-                spec.job == job && spec.kind == JobKind::Parallel
-            })
+            .filter(|&t| self.soa.is_parallel(t) && self.soa.job[t as usize] == job)
             .collect();
         if self.order.is_active() {
             self.order.sort_ids(&mut v, &self.workload.tasks);
@@ -724,9 +735,8 @@ impl<'w> KernelCtx<'w, '_> {
         let mut tried_gangs: Vec<JobId> = Vec::new();
         let mut cur = self.pending.first();
         while let Some(tid) = cur {
-            let task = &self.workload.tasks[tid as usize];
-            if task.kind == JobKind::Parallel {
-                let job = task.job;
+            if self.soa.is_parallel(tid) {
+                let job = self.soa.job[tid as usize];
                 if tried_gangs.contains(&job) {
                     cur = self.pending.next_of(tid);
                     continue;
@@ -776,9 +786,8 @@ impl<'w> KernelCtx<'w, '_> {
                 break;
             };
             let tid = entry as u32;
-            let task = &self.workload.tasks[tid as usize];
-            if task.kind == JobKind::Parallel {
-                let job = task.job;
+            if self.soa.is_parallel(tid) {
+                let job = self.soa.job[tid as usize];
                 if self.order.tried_gangs.contains(&job) {
                     self.order.stash_entry(entry);
                     continue;
@@ -829,11 +838,8 @@ impl<'w> KernelCtx<'w, '_> {
     fn remove_pending(&mut self, tid: TaskId) {
         let removed = self.pending.remove(tid);
         debug_assert!(removed, "task {tid} was not pending");
-        if self.has_gang {
-            let t = &self.workload.tasks[tid as usize];
-            if t.kind == JobKind::Parallel {
-                self.gang_ready[t.job as usize] -= 1;
-            }
+        if self.has_gang && self.soa.is_parallel(tid) {
+            self.gang_ready[self.soa.job[tid as usize] as usize] -= 1;
         }
     }
 
@@ -851,11 +857,8 @@ impl<'w> KernelCtx<'w, '_> {
     fn enqueue_ready(&mut self, tid: TaskId) {
         self.pending.push_back(tid);
         self.order.push(tid, &self.workload.tasks);
-        if self.has_gang {
-            let t = &self.workload.tasks[tid as usize];
-            if t.kind == JobKind::Parallel {
-                self.gang_ready[t.job as usize] += 1;
-            }
+        if self.has_gang && self.soa.is_parallel(tid) {
+            self.gang_ready[self.soa.job[tid as usize] as usize] += 1;
         }
     }
 
@@ -1112,12 +1115,13 @@ impl<'w> KernelCtx<'w, '_> {
     /// none. On failure the allocations are rolled back in reverse so
     /// the pool's free-stack order is exactly as before the attempt.
     fn alloc_task(&mut self, tid: TaskId) -> Option<SlotId> {
-        let task = &self.workload.tasks[tid as usize];
-        let primary = self.pool.alloc(task.mem_mb)?;
-        self.slot_mem[primary as usize] = task.mem_mb;
-        if task.cores > 1 {
+        let mem_mb = self.soa.mem_mb[tid as usize];
+        let cores = self.soa.cores[tid as usize];
+        let primary = self.pool.alloc(mem_mb)?;
+        self.slot_mem[primary as usize] = mem_mb;
+        if cores > 1 {
             let start = self.extra_slots.len() as u32;
-            for _ in 1..task.cores {
+            for _ in 1..cores {
                 match self.pool.alloc(0) {
                     Some(s) => {
                         self.slot_mem[s as usize] = 0;
@@ -1128,12 +1132,12 @@ impl<'w> KernelCtx<'w, '_> {
                             let s = self.extra_slots.pop().expect("non-empty");
                             self.pool.release(s, 0);
                         }
-                        self.pool.release(primary, task.mem_mb);
+                        self.pool.release(primary, mem_mb);
                         return None;
                     }
                 }
             }
-            self.extra_span[tid as usize] = (start, task.cores - 1);
+            self.extra_span[tid as usize] = (start, cores - 1);
         }
         if self.tracked() {
             self.kernel_alloc[tid as usize] = true;
@@ -1144,8 +1148,7 @@ impl<'w> KernelCtx<'w, '_> {
     /// Undo a successful [`KernelCtx::alloc_task`] (gang rollback).
     /// Must be called in reverse allocation order.
     fn undo_alloc(&mut self, tid: TaskId, primary: SlotId) {
-        let task = &self.workload.tasks[tid as usize];
-        if task.cores > 1 {
+        if self.soa.cores[tid as usize] > 1 {
             let (start, len) = self.extra_span[tid as usize];
             debug_assert_eq!((start + len) as usize, self.extra_slots.len());
             for _ in 0..len {
@@ -1154,7 +1157,7 @@ impl<'w> KernelCtx<'w, '_> {
             }
             self.extra_span[tid as usize] = (0, 0);
         }
-        self.pool.release(primary, task.mem_mb);
+        self.pool.release(primary, self.soa.mem_mb[tid as usize]);
         if self.tracked() {
             self.kernel_alloc[tid as usize] = false;
         }
@@ -1206,7 +1209,7 @@ impl<'w> KernelCtx<'w, '_> {
     /// launches re-enter through `Start`, so the kernel detects resumes
     /// here rather than trusting the event variant).
     fn handle_start(&mut self, now: Time, task: TaskId, slot: SlotId) -> bool {
-        let spec = &self.workload.tasks[task as usize];
+        let submit_at = self.soa.submit_at[task as usize];
         // An eviction resumes (partial work banked); a kill restarts
         // from scratch. Both are re-starts: wait and trace record were
         // taken at the first start. Aborted launches count as neither —
@@ -1214,14 +1217,19 @@ impl<'w> KernelCtx<'w, '_> {
         let resumed = self.has_preempt && self.evictions[task as usize] > 0;
         let restart = resumed || (self.has_faults && self.kills[task as usize] > 0);
         if !restart {
-            self.waits.add(now - spec.submit_at);
+            let wait = now - submit_at;
+            self.waits.add(wait);
+            self.wait_p50.add(wait);
+            self.wait_p95.add(wait);
+            self.wait_p99.add(wait);
+            self.wait_sample.add(wait);
             if self.collect_trace {
                 self.trace_idx[task as usize] = self.trace.len() as u32;
                 self.trace.push(TraceRecord {
                     task,
                     node: self.pool.node_of(slot),
                     slot,
-                    submit: spec.submit_at,
+                    submit: submit_at,
                     start: now,
                     end: 0.0, // patched on End
                 });
@@ -1233,13 +1241,13 @@ impl<'w> KernelCtx<'w, '_> {
         // A service runs until the horizon: it opens its span (and, under
         // preemption, its epoch/slot bookkeeping so it stays evictable)
         // but never schedules an `End`.
-        let service = spec.kind == JobKind::Service;
+        let service = self.soa.is_service(task);
         if self.tracked() {
             let i = task as usize;
             self.epoch[i] += 1;
             self.span_start[i] = now;
             self.run_slot[i] = slot;
-            if spec.preemptible && self.kernel_alloc[i] {
+            if self.workload.tasks[i].preemptible && self.kernel_alloc[i] {
                 self.rp_add(task);
             }
             let epoch = self.epoch[i];
@@ -1248,8 +1256,8 @@ impl<'w> KernelCtx<'w, '_> {
                     .push(now + self.remaining[i], SimEv::End { task, slot, epoch });
             }
         } else if !service {
-            self.queue
-                .push(now + spec.duration, SimEv::End { task, slot, epoch: 0 });
+            let end = now + self.soa.duration[task as usize];
+            self.queue.push(end, SimEv::End { task, slot, epoch: 0 });
         }
         resumed
     }
@@ -1260,21 +1268,18 @@ impl<'w> KernelCtx<'w, '_> {
         self.makespan = self.makespan.max(now);
         if self.horizon.is_some() {
             let i = task as usize;
-            let cores = self.workload.tasks[i].cores as f64;
+            let cores = self.soa.cores[i] as f64;
             self.busy_core_seconds += cores * (now - self.win_start[i]);
             self.win_start[i] = f64::NAN;
         }
         if self.collect_trace {
             self.trace[self.trace_idx[task as usize] as usize].end = now;
         }
-        if self.has_gang {
+        if self.has_gang && self.soa.is_parallel(task) {
             // A completed member leaves its gang, so a later eviction
             // of the surviving members can still reassemble and
             // re-dispatch the remainder all-or-nothing.
-            let t = &self.workload.tasks[task as usize];
-            if t.kind == JobKind::Parallel {
-                self.gang_total[t.job as usize] -= 1;
-            }
+            self.gang_total[self.soa.job[task as usize] as usize] -= 1;
         }
         if self.tracked() {
             let i = task as usize;
@@ -1328,9 +1333,14 @@ impl Kernel {
     ) -> RunResult {
         let n = workload.len();
         scratch.begin(cluster, n, options.collect_trace);
+        if options.node_granular {
+            scratch.pool.set_node_granular(true);
+        }
 
         // One pass over the task list decides which optional mechanisms
-        // this run needs; plain array workloads skip all of them.
+        // this run needs, and packs the hot per-task fields into the
+        // cache-linear SoA mirror; plain array workloads skip all of
+        // the optional machinery.
         let mut has_deps = false;
         let mut has_gang = false;
         let mut has_multicore = false;
@@ -1338,6 +1348,7 @@ impl Kernel {
         let mut has_service = false;
         let mut max_job = 0u32;
         for t in &workload.tasks {
+            scratch.soa.push(t);
             has_deps |= !t.deps.is_empty();
             has_gang |= t.kind == JobKind::Parallel;
             has_multicore |= t.cores > 1;
@@ -1429,6 +1440,7 @@ impl Kernel {
         }
 
         let SimScratch {
+            soa,
             queue,
             pending,
             order,
@@ -1460,9 +1472,14 @@ impl Kernel {
             kill_buf,
             spans,
             win_start,
+            wait_p50,
+            wait_p95,
+            wait_p99,
+            wait_sample,
         } = scratch;
         let mut ctx = KernelCtx {
             workload,
+            soa,
             queue,
             pending,
             order,
@@ -1506,6 +1523,10 @@ impl Kernel {
             completed: 0,
             makespan: 0.0,
             waits: Summary::new(),
+            wait_p50,
+            wait_p95,
+            wait_p99,
+            wait_sample,
         };
 
         // Seed submissions: batch tasks (t <= 0, array mode) go straight
@@ -1698,6 +1719,10 @@ impl Kernel {
             events,
             daemon_busy: policy.daemon_busy(),
             waits: ctx.waits,
+            wait_p50: ctx.wait_p50.estimate(),
+            wait_p95: ctx.wait_p95.estimate(),
+            wait_p99: ctx.wait_p99.estimate(),
+            wait_sample: ctx.wait_sample.sorted_sample(),
             preemptions: ctx.preempt_count,
             kills: ctx.kill_count,
             failed: ctx.n_failed as u64,

@@ -21,7 +21,109 @@
 use super::engine::{EventQueue, SimEv};
 use super::pending::{OrderIndex, PendingList};
 use crate::cluster::{ClusterSpec, SlotPool};
-use crate::workload::TraceRecord;
+use crate::util::stats::{P2Quantile, Reservoir, WAIT_SAMPLE_CAP};
+use crate::workload::{JobKind, TaskSpec, TraceRecord};
+
+/// Struct-of-arrays mirror of the per-task spec fields the kernel's
+/// event loop actually touches, indexed by dense task id.
+///
+/// `TaskSpec` is ~100 bytes plus a `deps` vector; the hot loop
+/// (dispatch, start, end, requeue) reads only these six scalars, so
+/// walking the array-of-structs form wastes most of every cache line
+/// and ~3× the bandwidth. The columns below pack the hot fields at
+/// their natural widths (`kind` as one byte, not an enum-in-a-struct)
+/// so a million-task run streams through them cache-linearly. Cold
+/// paths (eviction specs, fault retries, ordering keys) keep reading
+/// the original `&[TaskSpec]` — the SoA is a performance mirror, not a
+/// second source of truth, and is filled in the kernel's existing
+/// one-pass workload scan.
+#[derive(Default)]
+pub struct TaskSoa {
+    /// Productive seconds per task.
+    pub duration: Vec<f64>,
+    /// Submission time per task.
+    pub submit_at: Vec<f64>,
+    /// Core slots required.
+    pub cores: Vec<u32>,
+    /// Resident memory demanded from the primary slot's node (MB).
+    pub mem_mb: Vec<i64>,
+    /// Owning job id.
+    pub job: Vec<u32>,
+    /// [`JobKind`] packed to one byte ([`Self::KIND_ARRAY`]…).
+    pub kind: Vec<u8>,
+}
+
+impl TaskSoa {
+    /// `kind` byte for [`JobKind::Array`].
+    pub const KIND_ARRAY: u8 = 0;
+    /// `kind` byte for [`JobKind::Parallel`].
+    pub const KIND_PARALLEL: u8 = 1;
+    /// `kind` byte for [`JobKind::Service`].
+    pub const KIND_SERVICE: u8 = 2;
+
+    /// Pack a [`JobKind`] into its column byte.
+    pub fn kind_byte(kind: JobKind) -> u8 {
+        match kind {
+            JobKind::Array => Self::KIND_ARRAY,
+            JobKind::Parallel => Self::KIND_PARALLEL,
+            JobKind::Service => Self::KIND_SERVICE,
+        }
+    }
+
+    /// Drop all rows (capacity retained for the warm path).
+    pub fn clear(&mut self) {
+        self.duration.clear();
+        self.submit_at.clear();
+        self.cores.clear();
+        self.mem_mb.clear();
+        self.job.clear();
+        self.kind.clear();
+    }
+
+    /// Reserve for `n` rows ahead of a fill pass.
+    pub fn reserve(&mut self, n: usize) {
+        self.duration.reserve(n);
+        self.submit_at.reserve(n);
+        self.cores.reserve(n);
+        self.mem_mb.reserve(n);
+        self.job.reserve(n);
+        self.kind.reserve(n);
+    }
+
+    /// Append one task's hot fields (called once per task, in dense id
+    /// order, by the kernel's workload scan).
+    #[inline]
+    pub fn push(&mut self, t: &TaskSpec) {
+        self.duration.push(t.duration);
+        self.submit_at.push(t.submit_at);
+        self.cores.push(t.cores);
+        self.mem_mb.push(t.mem_mb);
+        self.job.push(t.job);
+        self.kind.push(Self::kind_byte(t.kind));
+    }
+
+    /// Rows filled.
+    pub fn len(&self) -> usize {
+        self.duration.len()
+    }
+
+    /// Whether the table is empty.
+    pub fn is_empty(&self) -> bool {
+        self.duration.is_empty()
+    }
+
+    /// Whether task `id` is a service task.
+    #[inline]
+    pub fn is_service(&self, id: u32) -> bool {
+        self.kind[id as usize] == Self::KIND_SERVICE
+    }
+
+    /// Whether task `id` belongs to a parallel (gang) job.
+    #[inline]
+    pub fn is_parallel(&self, id: u32) -> bool {
+        self.kind[id as usize] == Self::KIND_PARALLEL
+    }
+}
 
 /// Warm buffers for one simulation worker.
 pub struct SimScratch {
@@ -104,6 +206,18 @@ pub struct SimScratch {
     /// windowed `busy_core_seconds` accounting (`NAN` when the task is
     /// not running; horizon-bounded runs only).
     pub win_start: Vec<f64>,
+    /// Struct-of-arrays mirror of the hot task-spec fields, filled by
+    /// the kernel's one-pass workload scan (all runs).
+    pub soa: TaskSoa,
+    /// Streaming P² estimate of the median scheduler-induced wait.
+    pub wait_p50: P2Quantile,
+    /// Streaming P² estimate of the 95th-percentile wait.
+    pub wait_p95: P2Quantile,
+    /// Streaming P² estimate of the 99th-percentile wait.
+    pub wait_p99: P2Quantile,
+    /// Bounded deterministic reservoir of wait observations — exact at
+    /// small n (≤ [`WAIT_SAMPLE_CAP`]), a uniform sample past it.
+    pub wait_sample: Reservoir,
 }
 
 impl SimScratch {
@@ -141,6 +255,11 @@ impl SimScratch {
             kill_buf: Vec::new(),
             spans: Vec::new(),
             win_start: Vec::new(),
+            soa: TaskSoa::default(),
+            wait_p50: P2Quantile::new(0.50),
+            wait_p95: P2Quantile::new(0.95),
+            wait_p99: P2Quantile::new(0.99),
+            wait_sample: Reservoir::new(WAIT_SAMPLE_CAP),
         }
     }
 
@@ -180,6 +299,12 @@ impl SimScratch {
         self.kill_buf.clear();
         self.spans.clear();
         self.win_start.clear();
+        self.soa.clear();
+        self.soa.reserve(n_tasks);
+        self.wait_p50.reset();
+        self.wait_p95.reset();
+        self.wait_p99.reset();
+        self.wait_sample.reset();
         if collect_trace {
             self.trace.reserve(n_tasks);
             self.trace_idx.resize(n_tasks, u32::MAX);
@@ -237,6 +362,11 @@ mod tests {
             end: 1.0,
         });
         s.win_start.push(3.0);
+        s.soa.push(&TaskSpec::array(0, 0, 2.0));
+        s.wait_p50.add(1.0);
+        s.wait_p95.add(2.0);
+        s.wait_p99.add(3.0);
+        s.wait_sample.add(4.0);
         s.begin(&cluster, 4, true);
         assert!(s.queue.is_empty());
         assert_eq!(s.queue.now(), 0.0);
@@ -269,6 +399,44 @@ mod tests {
         assert!(s.kill_buf.is_empty());
         assert!(s.spans.is_empty());
         assert!(s.win_start.is_empty());
+        assert!(s.soa.is_empty());
+        assert_eq!(s.wait_p50.count(), 0);
+        assert!(s.wait_p50.estimate().is_nan());
+        assert_eq!(s.wait_p95.count(), 0);
+        assert_eq!(s.wait_p99.count(), 0);
+        assert_eq!(s.wait_sample.seen(), 0);
+        assert!(s.wait_sample.sample().is_empty());
+    }
+
+    #[test]
+    fn soa_packs_kinds_and_mirrors_spec_fields() {
+        let mut soa = TaskSoa::default();
+        let mut t = TaskSpec::array(3, 1, 2.5);
+        t.cores = 4;
+        t.mem_mb = 512;
+        t.submit_at = 1.25;
+        soa.push(&t);
+        soa.push(&TaskSpec::parallel(4, 2, 1.0, 2));
+        soa.push(&TaskSpec::service(5, 3, 2));
+        assert_eq!(soa.len(), 3);
+        assert_eq!(soa.duration[0], 2.5);
+        assert_eq!(soa.submit_at[0], 1.25);
+        assert_eq!(soa.cores[0], 4);
+        assert_eq!(soa.mem_mb[0], 512);
+        assert_eq!(soa.job[0], 1);
+        assert_eq!(
+            soa.kind,
+            vec![
+                TaskSoa::KIND_ARRAY,
+                TaskSoa::KIND_PARALLEL,
+                TaskSoa::KIND_SERVICE
+            ]
+        );
+        assert!(!soa.is_service(0));
+        assert!(soa.is_parallel(1));
+        assert!(soa.is_service(2));
+        soa.clear();
+        assert!(soa.is_empty());
     }
 
     #[test]

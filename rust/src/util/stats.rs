@@ -144,6 +144,235 @@ pub fn geomean(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
 }
 
+/// Capacity of the bounded wait-time reservoir a run carries in its
+/// [`crate::sched::RunResult`]. At or below this many observations the
+/// reservoir holds *every* value, so reservoir-derived percentiles are
+/// exact — the property the streaming-vs-exact oracle tests exploit.
+pub const WAIT_SAMPLE_CAP: usize = 512;
+
+/// Streaming quantile estimator (the P² algorithm of Jain & Chlamtác,
+/// CACM 1985): five markers track `{min, p/2, p, (1+p)/2, max}` in O(1)
+/// memory, adjusting heights by a piecewise-parabolic rule as
+/// observations stream in. Below 5 observations it stores the values
+/// and answers with an exact order statistic (the bootstrap edge case).
+///
+/// Estimates are always within `[min, max]` of the observed data and
+/// exact for constant streams; accuracy on wild distributions is
+/// bounded by the marker spacing, which is why results also carry a
+/// bounded [`Reservoir`] sample as a cross-check.
+#[derive(Clone, Debug)]
+pub struct P2Quantile {
+    p: f64,
+    count: u64,
+    /// Marker heights (during bootstrap: the first ≤5 raw values).
+    q: [f64; 5],
+    /// Marker positions, 1-based (integral, kept as f64 for the rule).
+    pos: [f64; 5],
+    /// Desired marker positions.
+    npos: [f64; 5],
+    /// Desired-position increments per observation.
+    dn: [f64; 5],
+}
+
+impl P2Quantile {
+    /// Estimator for quantile `p` ∈ (0, 1).
+    pub fn new(p: f64) -> Self {
+        assert!(p > 0.0 && p < 1.0, "P² quantile must be in (0,1), got {p}");
+        Self {
+            p,
+            count: 0,
+            q: [0.0; 5],
+            pos: [1.0, 2.0, 3.0, 4.0, 5.0],
+            npos: [1.0, 1.0 + 2.0 * p, 1.0 + 4.0 * p, 3.0 + 2.0 * p, 5.0],
+            dn: [0.0, p / 2.0, p, (1.0 + p) / 2.0, 1.0],
+        }
+    }
+
+    /// The target quantile.
+    pub fn quantile(&self) -> f64 {
+        self.p
+    }
+
+    /// Observations absorbed.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Reset to the empty state (same target quantile) — used by the
+    /// warm-scratch path so a reused estimator is bit-identical to a
+    /// fresh one.
+    pub fn reset(&mut self) {
+        *self = Self::new(self.p);
+    }
+
+    /// Absorb one observation.
+    pub fn add(&mut self, x: f64) {
+        if self.count < 5 {
+            self.q[self.count as usize] = x;
+            self.count += 1;
+            if self.count == 5 {
+                self.q.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            }
+            return;
+        }
+        // Locate the cell and update the extreme markers exactly.
+        let k = if x < self.q[0] {
+            self.q[0] = x;
+            0
+        } else if x >= self.q[4] {
+            self.q[4] = x;
+            3
+        } else {
+            let mut k = 0;
+            while k < 3 && x >= self.q[k + 1] {
+                k += 1;
+            }
+            k
+        };
+        for i in (k + 1)..5 {
+            self.pos[i] += 1.0;
+        }
+        for i in 0..5 {
+            self.npos[i] += self.dn[i];
+        }
+        // Adjust the three interior markers toward their desired
+        // positions, parabolic when the result stays ordered.
+        for i in 1..4 {
+            let d = self.npos[i] - self.pos[i];
+            if (d >= 1.0 && self.pos[i + 1] - self.pos[i] > 1.0)
+                || (d <= -1.0 && self.pos[i - 1] - self.pos[i] < -1.0)
+            {
+                let d = d.signum();
+                let qp = self.parabolic(i, d);
+                self.q[i] = if self.q[i - 1] < qp && qp < self.q[i + 1] {
+                    qp
+                } else {
+                    self.linear(i, d)
+                };
+                self.pos[i] += d;
+            }
+        }
+        self.count += 1;
+    }
+
+    fn parabolic(&self, i: usize, d: f64) -> f64 {
+        let (q, n) = (&self.q, &self.pos);
+        q[i] + d / (n[i + 1] - n[i - 1])
+            * ((n[i] - n[i - 1] + d) * (q[i + 1] - q[i]) / (n[i + 1] - n[i])
+                + (n[i + 1] - n[i] - d) * (q[i] - q[i - 1]) / (n[i] - n[i - 1]))
+    }
+
+    fn linear(&self, i: usize, d: f64) -> f64 {
+        let j = if d > 0.0 { i + 1 } else { i - 1 };
+        self.q[i] + d * (self.q[j] - self.q[i]) / (self.pos[j] - self.pos[i])
+    }
+
+    /// Current estimate: NaN when empty, an exact order statistic
+    /// during the <5-observation bootstrap, the middle marker after.
+    pub fn estimate(&self) -> f64 {
+        match self.count {
+            0 => f64::NAN,
+            c if c < 5 => {
+                let mut head = self.q;
+                let head = &mut head[..c as usize];
+                head.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                percentile_sorted(head, self.p)
+            }
+            _ => self.q[2],
+        }
+    }
+}
+
+/// Bounded uniform sample of a stream (Vitter's Algorithm R) with a
+/// deterministic splitmix64 replacement sequence, so equal streams give
+/// bit-identical samples regardless of wall clock or worker count. At
+/// or below capacity the sample *is* the stream (exact percentiles);
+/// past it each prefix item stays with probability `cap / seen`.
+#[derive(Clone, Debug)]
+pub struct Reservoir {
+    cap: usize,
+    seen: u64,
+    state: u64,
+    buf: Vec<f64>,
+}
+
+impl Reservoir {
+    /// Reservoir holding at most `cap` values (`cap` ≥ 1).
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 1, "reservoir capacity must be >= 1");
+        Self {
+            cap,
+            seen: 0,
+            // Fixed seed: sampling is part of the deterministic result
+            // contract, not a per-run stochastic input.
+            state: 0x9E37_79B9_7F4A_7C15,
+            buf: Vec::new(),
+        }
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        // splitmix64 step.
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Observations seen (≥ `sample().len()`).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Reset to empty (same capacity, same deterministic sequence) —
+    /// keeps the buffer's allocation for the warm-scratch path.
+    pub fn reset(&mut self) {
+        self.seen = 0;
+        self.state = 0x9E37_79B9_7F4A_7C15;
+        self.buf.clear();
+    }
+
+    /// Absorb one observation.
+    pub fn add(&mut self, x: f64) {
+        self.seen += 1;
+        if self.buf.len() < self.cap {
+            self.buf.push(x);
+        } else {
+            let j = self.next_u64() % self.seen;
+            if (j as usize) < self.cap {
+                self.buf[j as usize] = x;
+            }
+        }
+    }
+
+    /// The current sample (unsorted, insertion/replacement order).
+    pub fn sample(&self) -> &[f64] {
+        &self.buf
+    }
+
+    /// Sorted copy of the sample for percentile queries.
+    pub fn sorted_sample(&self) -> Vec<f64> {
+        let mut v = self.buf.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v
+    }
+}
+
+/// Deterministically condense a sample to at most `cap` values while
+/// preserving its empirical quantile curve: sort, then keep `cap`
+/// evenly-spaced order statistics (always including min and max). Used
+/// when merging per-shard wait samples whose union exceeds the bound.
+pub fn condense_sample(xs: &mut Vec<f64>, cap: usize) {
+    assert!(cap >= 2, "condense_sample needs cap >= 2");
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    if xs.len() <= cap {
+        return;
+    }
+    let n = xs.len();
+    let picked: Vec<f64> = (0..cap).map(|i| xs[(i * (n - 1)) / (cap - 1)]).collect();
+    *xs = picked;
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -188,5 +417,176 @@ mod tests {
     #[test]
     fn geomean_basic() {
         assert!((geomean(&[1.0, 100.0]) - 10.0).abs() < 1e-9);
+    }
+
+    /// Deterministic value stream with a known exact quantile oracle.
+    fn exact_q(xs: &[f64], q: f64) -> f64 {
+        let mut s = xs.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        percentile_sorted(&s, q)
+    }
+
+    fn feed(p: f64, xs: &[f64]) -> P2Quantile {
+        let mut e = P2Quantile::new(p);
+        for &x in xs {
+            e.add(x);
+        }
+        e
+    }
+
+    #[test]
+    fn p2_constant_stream_is_exact() {
+        for &q in &[0.5, 0.95, 0.99] {
+            let e = feed(q, &[7.25; 1000]);
+            assert_eq!(e.estimate(), 7.25, "q={q}");
+        }
+    }
+
+    #[test]
+    fn p2_bootstrap_below_five_is_exact_order_statistic() {
+        let mut e = P2Quantile::new(0.5);
+        assert!(e.estimate().is_nan(), "empty estimator must answer NaN");
+        e.add(5.0);
+        assert_eq!(e.estimate(), 5.0);
+        e.add(1.0);
+        assert!((e.estimate() - 3.0).abs() < 1e-12); // median of {1,5}
+        e.add(9.0);
+        assert_eq!(e.estimate(), 5.0); // median of {1,5,9}
+        e.add(3.0);
+        assert!((e.estimate() - 4.0).abs() < 1e-12); // median of {1,3,5,9}
+    }
+
+    #[test]
+    fn p2_uniform_ramp_converges() {
+        // 0..10 ramp, deterministic shuffle by stride walk.
+        let n = 2001usize;
+        let xs: Vec<f64> = (0..n).map(|i| (i * 977 % n) as f64 / 200.0).collect();
+        for &q in &[0.5, 0.95, 0.99] {
+            let e = feed(q, &xs);
+            let exact = exact_q(&xs, q);
+            assert!(
+                (e.estimate() - exact).abs() < 0.2,
+                "q={q}: p2 {} vs exact {exact}",
+                e.estimate()
+            );
+        }
+    }
+
+    #[test]
+    fn p2_bimodal_stays_in_range_and_picks_the_right_mode() {
+        // 80% mass at ~1, 20% at ~100: p50 must sit in the low mode,
+        // p95 in the high mode.
+        let xs: Vec<f64> = (0..5000)
+            .map(|i| {
+                if i % 5 == 4 {
+                    100.0 + (i % 7) as f64
+                } else {
+                    1.0 + (i % 3) as f64 * 0.01
+                }
+            })
+            .collect();
+        let p50 = feed(0.5, &xs).estimate();
+        let p95 = feed(0.95, &xs).estimate();
+        // p50's neighbor markers (q25, q75) both sit in the low mode, so
+        // the estimate is pinned there; p95 interpolates across the mode
+        // gap, so the principled bound is "far above the low mode and
+        // inside the observed range", not mode membership.
+        assert!((1.0..=2.0).contains(&p50), "bimodal p50 {p50}");
+        assert!((10.0..=107.0).contains(&p95), "bimodal p95 {p95}");
+        assert!(p50 < p95);
+    }
+
+    #[test]
+    fn p2_heavy_tail_median_close_and_extremes_bounded() {
+        // Pareto-ish tail: x = (1 - u)^(-2), u a deterministic ramp.
+        let n = 4001usize;
+        let xs: Vec<f64> = (1..=n)
+            .map(|i| {
+                let u = (i * 1663 % n) as f64 / (n as f64 + 1.0);
+                (1.0 - u).powi(-2)
+            })
+            .collect();
+        let (lo, hi) = (
+            xs.iter().cloned().fold(f64::INFINITY, f64::min),
+            xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+        );
+        for &q in &[0.5, 0.95, 0.99] {
+            let est = feed(q, &xs).estimate();
+            assert!(est >= lo && est <= hi, "q={q} estimate {est} out of range");
+        }
+        let exact50 = exact_q(&xs, 0.5);
+        let p50 = feed(0.5, &xs).estimate();
+        assert!(
+            (p50 - exact50).abs() / exact50 < 0.25,
+            "heavy-tail p50 {p50} vs exact {exact50}"
+        );
+    }
+
+    #[test]
+    fn p2_reset_matches_fresh() {
+        let xs: Vec<f64> = (0..500).map(|i| ((i * 31) % 97) as f64).collect();
+        let fresh = feed(0.95, &xs);
+        let mut reused = feed(0.95, &[3.0, 1.0, 4.0]);
+        reused.reset();
+        for &x in &xs {
+            reused.add(x);
+        }
+        assert_eq!(fresh.estimate().to_bits(), reused.estimate().to_bits());
+    }
+
+    #[test]
+    fn reservoir_exact_below_capacity() {
+        let mut r = Reservoir::new(64);
+        let xs: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        for &x in &xs {
+            r.add(x);
+        }
+        assert_eq!(r.seen(), 50);
+        assert_eq!(r.sample(), &xs[..]);
+        let sorted = r.sorted_sample();
+        assert_eq!(percentile_sorted(&sorted, 0.5), exact_q(&xs, 0.5));
+    }
+
+    #[test]
+    fn reservoir_bounded_deterministic_and_representative() {
+        let xs: Vec<f64> = (0..10_000).map(|i| (i * 379 % 10_000) as f64).collect();
+        let mut a = Reservoir::new(256);
+        let mut b = Reservoir::new(256);
+        for &x in &xs {
+            a.add(x);
+            b.add(x);
+        }
+        assert_eq!(a.sample().len(), 256);
+        assert_eq!(a.sample(), b.sample(), "equal streams → identical samples");
+        // A 256-point uniform sample's median sits near the true one.
+        let est = percentile_sorted(&a.sorted_sample(), 0.5);
+        let exact = exact_q(&xs, 0.5);
+        assert!(
+            (est - exact).abs() < 1500.0,
+            "reservoir median {est} vs exact {exact}"
+        );
+        // Reset replays the identical sequence.
+        a.reset();
+        assert_eq!(a.seen(), 0);
+        for &x in &xs {
+            a.add(x);
+        }
+        assert_eq!(a.sample(), b.sample());
+    }
+
+    #[test]
+    fn condense_preserves_extremes_and_quantiles() {
+        let mut xs: Vec<f64> = (0..1000).map(|i| (i * 613 % 1000) as f64).collect();
+        let full = xs.clone();
+        condense_sample(&mut xs, 101);
+        assert_eq!(xs.len(), 101);
+        assert_eq!(xs[0], 0.0);
+        assert_eq!(*xs.last().unwrap(), 999.0);
+        let med = percentile_sorted(&xs, 0.5);
+        assert!((med - exact_q(&full, 0.5)).abs() < 20.0);
+        // Below cap: sorted but untouched in content.
+        let mut small = vec![3.0, 1.0, 2.0];
+        condense_sample(&mut small, 10);
+        assert_eq!(small, vec![1.0, 2.0, 3.0]);
     }
 }

@@ -1,0 +1,198 @@
+//! Streaming-metrics equivalence and engine-mode identity tests.
+//!
+//! The kernel folds every task wait into O(1) streaming state (Welford
+//! summary, P² quantile markers, bounded reservoir) instead of keeping
+//! a whole-run trace. The exact traced mode stays available behind
+//! `RunOptions::with_trace` as a differential oracle, which is exactly
+//! how these tests use it:
+//!
+//! * at n ≤ `WAIT_SAMPLE_CAP` the reservoir holds every wait, so the
+//!   result's `wait_sample` must equal the sorted trace-derived waits
+//!   bitwise, and the P² estimates must land near the exact empirical
+//!   quantiles;
+//! * enabling the trace is pure observability — no streamed statistic
+//!   may move by a single bit;
+//! * `ShardedSim` with one shard is the identity wrapper, sharded
+//!   results are independent of the worker count, and on 1-core
+//!   constant tasks neither sharding (when the shard count divides the
+//!   core count evenly) nor node-granular packing can change the
+//!   ideal-FIFO wave schedule.
+
+use sssched::cluster::ClusterSpec;
+use sssched::config::SchedulerChoice;
+use sssched::sched::combinators::{Order, OrderedSim};
+use sssched::sched::{make_scheduler, NodeGranularSim, RunOptions, Scheduler, ShardedSim};
+use sssched::util::stats::{percentile_sorted, WAIT_SAMPLE_CAP};
+use sssched::workload::{TraceRecord, Workload, WorkloadBuilder};
+
+fn cluster() -> ClusterSpec {
+    ClusterSpec::homogeneous(4, 25, 64 * 1024, 2)
+}
+
+/// Constant-duration batch with one task per job, so `job % G` routing
+/// spreads the work across every shard of a `ShardedSim`.
+fn workload(n: u64) -> Workload {
+    WorkloadBuilder::constant(2.0)
+        .tasks(n)
+        .jobs(n as u32)
+        .label("stream")
+        .build()
+}
+
+/// Every simulated backend plus an ordered-combinator row, so the
+/// streaming path is exercised through `make_policy` wrappers too.
+fn backends() -> Vec<Box<dyn Scheduler>> {
+    let mut v: Vec<Box<dyn Scheduler>> = SchedulerChoice::all_simulated()
+        .iter()
+        .map(|&c| make_scheduler(c))
+        .collect();
+    v.push(Box::new(OrderedSim::new(
+        make_scheduler(SchedulerChoice::IdealFifo),
+        Order::Priority,
+        "IdealFIFO+prio",
+    )));
+    v
+}
+
+/// Exact sorted wait population reconstructed from the trace oracle.
+fn trace_waits(trace: &[TraceRecord]) -> Vec<f64> {
+    let mut waits: Vec<f64> = trace.iter().map(|t| t.start - t.submit).collect();
+    waits.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    waits
+}
+
+#[test]
+fn streamed_waits_match_the_traced_oracle_at_small_n() {
+    let n = 300u64;
+    assert!((n as usize) <= WAIT_SAMPLE_CAP, "reservoir must hold every wait");
+    let w = workload(n);
+    let cl = cluster();
+    for sched in backends() {
+        let r = sched.run(&w, &cl, 7, &RunOptions::with_trace());
+        r.check_invariants().unwrap();
+        let exact = trace_waits(r.trace.as_ref().expect("traced run"));
+        assert_eq!(exact.len() as u64, r.waits.count(), "{}", r.scheduler);
+        // Under capacity the reservoir is lossless: the streamed sample
+        // is the exact sorted wait population, bit for bit.
+        assert_eq!(r.wait_sample, exact, "{}", r.scheduler);
+        // Welford mean vs naive sum/n: same value up to rounding noise.
+        let mean = exact.iter().sum::<f64>() / exact.len() as f64;
+        assert!(
+            (mean - r.waits.mean()).abs() < 1e-9,
+            "{}: streamed mean {} vs exact {}",
+            r.scheduler,
+            r.waits.mean(),
+            mean
+        );
+        // P² estimates stay inside the observed range and land near the
+        // exact empirical quantiles from the trace.
+        let span = (r.waits.max() - r.waits.min()).max(0.0);
+        for (q, est) in [(0.5, r.wait_p50), (0.95, r.wait_p95), (0.99, r.wait_p99)] {
+            assert!(
+                est >= r.waits.min() - 1e-9 && est <= r.waits.max() + 1e-9,
+                "{} p{q}: estimate {est} outside sample range",
+                r.scheduler
+            );
+            let exact_q = percentile_sorted(&exact, q);
+            assert!(
+                (est - exact_q).abs() <= 0.30 * span + 1e-9,
+                "{} p{q}: P² {est} vs exact {exact_q} (span {span})",
+                r.scheduler
+            );
+        }
+        assert!(r.wait_p50 <= r.wait_p95 + 1e-9 && r.wait_p95 <= r.wait_p99 + 1e-9);
+    }
+}
+
+#[test]
+fn tracing_is_pure_observability() {
+    let w = workload(300);
+    let cl = cluster();
+    for sched in backends() {
+        let plain = sched.run(&w, &cl, 11, &RunOptions::default());
+        let traced = sched.run(&w, &cl, 11, &RunOptions::with_trace());
+        assert!(plain.trace.is_none());
+        assert!(traced.trace.is_some());
+        let who = &plain.scheduler;
+        assert_eq!(plain.t_total.to_bits(), traced.t_total.to_bits(), "{who}");
+        assert_eq!(plain.events, traced.events, "{who}");
+        assert_eq!(plain.completed, traced.completed, "{who}");
+        assert_eq!(plain.waits.count(), traced.waits.count(), "{who}");
+        assert_eq!(plain.waits.mean().to_bits(), traced.waits.mean().to_bits(), "{who}");
+        assert_eq!(plain.wait_p50.to_bits(), traced.wait_p50.to_bits(), "{who}");
+        assert_eq!(plain.wait_p95.to_bits(), traced.wait_p95.to_bits(), "{who}");
+        assert_eq!(plain.wait_p99.to_bits(), traced.wait_p99.to_bits(), "{who}");
+        assert_eq!(plain.wait_sample, traced.wait_sample, "{who}");
+    }
+}
+
+#[test]
+fn single_shard_wrapper_is_the_identity_for_ideal_and_sparrow() {
+    // G = 1 routes every job to shard 0 with the caller's exact seed,
+    // an identity task re-id, and a merge that starts from an empty
+    // summary — so even the randomized Sparrow backend must reproduce
+    // the plain run bit for bit. (Quantile fields are excluded: the
+    // merged run recomputes them from the condensed sample rather than
+    // the per-shard P² markers.)
+    let w = workload(240);
+    let cl = cluster();
+    for choice in [SchedulerChoice::IdealFifo, SchedulerChoice::Sparrow] {
+        let plain = make_scheduler(choice).run(&w, &cl, 13, &RunOptions::with_trace());
+        let sharded = ShardedSim::new(make_scheduler(choice), 1, 1, "g1")
+            .run(&w, &cl, 13, &RunOptions::with_trace());
+        assert_eq!(plain.t_total.to_bits(), sharded.t_total.to_bits(), "{choice:?}");
+        assert_eq!(plain.events, sharded.events, "{choice:?}");
+        assert_eq!(plain.completed, sharded.completed, "{choice:?}");
+        assert_eq!(plain.waits.count(), sharded.waits.count(), "{choice:?}");
+        assert_eq!(plain.waits.mean().to_bits(), sharded.waits.mean().to_bits(), "{choice:?}");
+        assert_eq!(plain.waits.min().to_bits(), sharded.waits.min().to_bits(), "{choice:?}");
+        assert_eq!(plain.waits.max().to_bits(), sharded.waits.max().to_bits(), "{choice:?}");
+        // The merged trace is sorted by task id; bring the plain trace
+        // into the same order before comparing.
+        let mut reference = plain.trace.clone().expect("traced run");
+        reference.sort_by_key(|t| t.task);
+        assert_eq!(Some(reference), sharded.trace, "{choice:?}");
+    }
+}
+
+#[test]
+fn sharded_sparrow_is_deterministic_across_worker_counts() {
+    let w = workload(240);
+    let cl = cluster();
+    let reference = ShardedSim::new(make_scheduler(SchedulerChoice::Sparrow), 4, 1, "s4")
+        .run(&w, &cl, 17, &RunOptions::with_trace());
+    for jobs in [2, 8] {
+        let r = ShardedSim::new(make_scheduler(SchedulerChoice::Sparrow), 4, jobs, "s4")
+            .run(&w, &cl, 17, &RunOptions::with_trace());
+        assert_eq!(reference.t_total.to_bits(), r.t_total.to_bits(), "jobs={jobs}");
+        assert_eq!(reference.events, r.events, "jobs={jobs}");
+        assert_eq!(reference.waits.mean().to_bits(), r.waits.mean().to_bits(), "jobs={jobs}");
+        assert_eq!(reference.trace, r.trace, "jobs={jobs}");
+        assert_eq!(reference.wait_sample, r.wait_sample, "jobs={jobs}");
+    }
+}
+
+#[test]
+fn engine_modes_preserve_the_ideal_wave_schedule_bitwise() {
+    // 1-core constant tasks on a homogeneous cluster: ideal FIFO runs
+    // ceil(n / P) waves. Splitting the 4 nodes into 2 or 4 contiguous
+    // groups divides both the tasks and the cores evenly, and
+    // node-granular packing only changes which slot a task lands on —
+    // neither may move t_total by a bit.
+    let w = workload(300);
+    let cl = cluster();
+    let ideal = make_scheduler(SchedulerChoice::IdealFifo);
+    let plain = ideal.run(&w, &cl, 19, &RunOptions::default());
+    for g in [2usize, 4] {
+        let r = ShardedSim::new(make_scheduler(SchedulerChoice::IdealFifo), g, g, "gx")
+            .run(&w, &cl, 19, &RunOptions::default());
+        assert_eq!(plain.t_total.to_bits(), r.t_total.to_bits(), "G={g}");
+        assert_eq!(plain.completed, r.completed, "G={g}");
+    }
+    let ng = NodeGranularSim::new(make_scheduler(SchedulerChoice::IdealFifo), "IdealFIFO+node")
+        .run(&w, &cl, 19, &RunOptions::default());
+    assert_eq!("IdealFIFO+node", ng.scheduler);
+    assert_eq!(plain.t_total.to_bits(), ng.t_total.to_bits());
+    assert_eq!(plain.waits.mean().to_bits(), ng.waits.mean().to_bits());
+    assert_eq!(plain.completed, ng.completed);
+}
