@@ -688,6 +688,53 @@ fn main() {
         );
     }
 
+    // ---- 4b. Fitted-model layer: rust-native power-law fit latency
+    // (the hardened `fit_sweep` path the `model` experiment gates on)
+    // and the auto-tuner's bundle-size derivation scan.
+    let (model_fit_us_per_call, model_tune_us_per_call) = {
+        use sssched::model::{derive_bundle_size, fit_sweep};
+        use sssched::multilevel::MultilevelParams;
+        use sssched::util::prng::Prng;
+        // Synthetic pooled sweep the shape of the real one: 7 n values
+        // × 3 trials, Slurm-like parameters, deterministic noise.
+        let mut rng = Prng::new(0xBE_4C);
+        let pts: Vec<(f64, f64)> = [4u32, 8, 16, 32, 48, 96, 240]
+            .iter()
+            .flat_map(|&n| {
+                let mut draw = || {
+                    (
+                        n as f64,
+                        2.2 * (n as f64).powf(1.3) * rng.lognormal_mean_cv(1.0, 0.05),
+                    )
+                };
+                [draw(), draw(), draw()]
+            })
+            .collect();
+        let params = MultilevelParams::default();
+        let fit_iters = if quick { 2_000u32 } else { 10_000 };
+        let f = fit_sweep("bench", &pts).unwrap();
+        let t0 = Instant::now();
+        let mut acc = 0.0f64;
+        for _ in 0..fit_iters {
+            acc += fit_sweep("bench", &pts).unwrap().t_s;
+        }
+        let fit_us = t0.elapsed().as_secs_f64() / fit_iters as f64 * 1e6;
+        let tune_iters = if quick { 500u32 } else { 2_000 };
+        let t0 = Instant::now();
+        let mut m_acc = 0u64;
+        for _ in 0..tune_iters {
+            m_acc += derive_bundle_size(f.t_s, f.alpha_s, &params, 1.0, 960, 0.9)
+                .bundles_per_proc as u64;
+        }
+        let tune_us = t0.elapsed().as_secs_f64() / tune_iters as f64 * 1e6;
+        println!(
+            "model fit: {fit_us:.2} us/call ({} pts, {fit_iters} iters, checksum {acc:.1}); \
+             auto-tune: {tune_us:.2} us/call (n=960 scan, {tune_iters} iters, checksum {m_acc})",
+            pts.len()
+        );
+        (fit_us, tune_us)
+    };
+
     // ---- 5. Sweep executor: serial vs parallel fig4-style sweep.
     let mut cfg = ExperimentConfig::default();
     cfg.scale_down = 8; // 5 nodes × 32 = 160 cores, shape-preserving
@@ -789,6 +836,8 @@ fn main() {
          \x20 \"peak_rss_kb\": {rss},\n\
          \x20 \"realtime_dispatch_per_s\": {dispatch_rate:.1},\n\
          \x20 \"powerlaw_fit_ms_per_call\": {fit_ms},\n\
+         \x20 \"model_fit_us_per_call\": {model_fit_us:.3},\n\
+         \x20 \"model_tune_us_per_call\": {model_tune_us:.3},\n\
          \x20 \"sweep\": {{\n\
          \x20   \"scale_down\": {scale_down},\n\
          \x20   \"trials\": {trials},\n\
@@ -825,6 +874,8 @@ fn main() {
         } else {
             "null".to_string()
         },
+        model_fit_us = model_fit_us_per_call,
+        model_tune_us = model_tune_us_per_call,
         scale_down = cfg.scale_down,
         trials = cfg.trials,
         cells = serial_stats.cells,

@@ -12,7 +12,7 @@
 use std::collections::BTreeMap;
 
 /// Flags the CLI treats as boolean: they never take a value.
-pub const BOOL_FLAGS: &[&str] = &["quick", "csv", "full", "huge"];
+pub const BOOL_FLAGS: &[&str] = &["quick", "csv", "full", "huge", "churn"];
 
 /// Parsed command line.
 #[derive(Clone, Debug, Default)]
@@ -127,6 +127,16 @@ mod tests {
         let a = parse("cmd --quick --n 3");
         assert!(a.flag("quick"));
         assert_eq!(a.opt("n"), Some("3"));
+    }
+
+    #[test]
+    fn churn_is_boolean_and_keeps_positionals() {
+        // `--churn model` must parse `model` as the experiment name,
+        // not as the flag's value.
+        let a = parse("experiment --churn model --jobs 2");
+        assert!(a.flag("churn"));
+        assert_eq!(a.positionals, vec!["model"]);
+        assert_eq!(a.opt("jobs"), Some("2"));
     }
 
     #[test]

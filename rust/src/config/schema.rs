@@ -131,6 +131,12 @@ pub struct ExperimentConfig {
     /// default — the point takes minutes and is for dedicated perf
     /// sessions, not CI.
     pub scale_huge: bool,
+    /// Tasks-per-processor sweep of the `model` experiment's fit phase.
+    pub model_ns: Vec<u32>,
+    /// Target predicted utilization the `model` experiment's auto-tuner
+    /// inverts the analytic model for (the paper's headline: ≥ 90 % for
+    /// short tasks).
+    pub model_target_util: f64,
 }
 
 impl Default for ExperimentConfig {
@@ -157,6 +163,8 @@ impl Default for ExperimentConfig {
             scale_ns: vec![1_000, 10_000, 100_000, 1_000_000],
             scale_procs: vec![1_000, 10_000],
             scale_huge: false,
+            model_ns: vec![4, 8, 16, 32, 48, 96, 240],
+            model_target_util: 0.9,
         }
     }
 }
@@ -258,6 +266,19 @@ impl ExperimentConfig {
                         .iter()
                         .map(|v| get_u32(v, key))
                         .collect::<Result<_, _>>()?;
+                }
+                "experiment.model_ns" => {
+                    let arr = match value {
+                        TomlValue::Array(xs) => xs,
+                        _ => return Err(bad(key)),
+                    };
+                    cfg.model_ns = arr
+                        .iter()
+                        .map(|v| get_u32(v, key))
+                        .collect::<Result<_, _>>()?;
+                }
+                "experiment.model_target_util" => {
+                    cfg.model_target_util = value.as_f64().ok_or_else(|| bad(key))?
                 }
                 "experiment.out_dir" => {
                     cfg.out_dir = value.as_str().ok_or_else(|| bad(key))?.to_string()
@@ -374,6 +395,15 @@ impl ExperimentConfig {
             return Err(format!(
                 "scale_procs must be non-empty, positive multiples of {cpn}"
             ));
+        }
+        if self.model_ns.is_empty() || self.model_ns.iter().any(|&n| n == 0) {
+            return Err("model_ns must be non-empty, positive".into());
+        }
+        if !(self.model_target_util.is_finite()
+            && self.model_target_util > 0.0
+            && self.model_target_util < 1.0)
+        {
+            return Err("model_target_util must be in (0, 1)".into());
         }
         Ok(())
     }
@@ -528,6 +558,21 @@ n_sweep = [4, 240]
         assert!(ExperimentConfig::from_toml("[experiment]\nscale_ns = [-1]").is_err());
         // Non-multiple of the scale cluster's cores-per-node.
         assert!(ExperimentConfig::from_toml("[experiment]\nscale_procs = [1001]").is_err());
+    }
+
+    #[test]
+    fn model_keys_parse_and_validate() {
+        let c = ExperimentConfig::from_toml(
+            "[experiment]\nmodel_ns = [4, 48]\nmodel_target_util = 0.8",
+        )
+        .unwrap();
+        assert_eq!(c.model_ns, vec![4, 48]);
+        assert!((c.model_target_util - 0.8).abs() < 1e-12);
+        assert!(ExperimentConfig::from_toml("[experiment]\nmodel_ns = []").is_err());
+        assert!(ExperimentConfig::from_toml("[experiment]\nmodel_ns = [0]").is_err());
+        assert!(ExperimentConfig::from_toml("[experiment]\nmodel_ns = [-4]").is_err());
+        assert!(ExperimentConfig::from_toml("[experiment]\nmodel_target_util = 1.0").is_err());
+        assert!(ExperimentConfig::from_toml("[experiment]\nmodel_target_util = 0").is_err());
     }
 
     #[test]

@@ -15,6 +15,7 @@
 //! | `service`  | service-footprint sweep: resident services × Poisson short tasks × all schedulers, windowed utilization |
 //! | `churn`    | fault-injection sweep: seeded node failure/repair churn × retry budget × all schedulers, goodput + lost work + completion coverage |
 //! | `scale`    | simulator wall-time scaling at 10³–10⁶ tasks (10⁷ with `--huge`): n × P × all schedulers + ordered/preemptive + node-granular/sharded engine rows, fitted log-log exponent + Mev/s floor |
+//! | `model`    | closed loop on (t_s, α_s): fit per-backend sweeps vs paper Table 10, invert the analytic model to auto-tune the multilevel bundle size, report predicted vs simulated U; `--churn` refits under a seeded fault plan |
 
 //! All experiment runners route their `(scheduler, n, trial)`
 //! cells through the deterministic parallel executor in [`parallel`];
@@ -25,6 +26,7 @@ mod fig4;
 mod fig5;
 mod fig6;
 mod fig7;
+mod model;
 mod parallel;
 mod scale;
 mod scenarios;
@@ -36,6 +38,11 @@ pub use fig4::{fig4, Fig4Report};
 pub use fig5::{fig5, fig5_from, Fig5Report};
 pub use fig6::{fig6, Fig6Report};
 pub use fig7::{fig7, Fig7Report};
+pub use model::{
+    model, ModelChurnRow, ModelFitRow, ModelReport, ModelTuneRow, MODEL_CHURN_MTBF_SECS,
+    MODEL_CHURN_MTTR_SECS, MODEL_PRED_EPS, MODEL_R2_GATE, MODEL_SIM_UTIL_FLOOR,
+    MODEL_TUNE_TASKS_PER_PROC, MODEL_TUNE_TASK_SECS,
+};
 pub use parallel::{default_jobs, run_cells};
 pub use scale::{
     scale, scale_array_workload, scale_cluster, scale_effective_ns, scale_preempt_workload,

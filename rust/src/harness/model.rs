@@ -1,0 +1,802 @@
+//! The `model` experiment — close the paper's loop on (t_s, α_s).
+//!
+//! Three phases, all on the deterministic cell executor:
+//!
+//! 1. **Fit**: per-backend launch-latency sweeps (the same `run_sweeps`
+//!    cells Table 10 uses, over `cfg.model_ns`) are pooled and fitted
+//!    to ΔT = t_s · n^α_s through the hardened `try_fit` path, then
+//!    compared against the paper's reported Table 10 values.
+//! 2. **Tune**: for each backend the fitted parameters are fed to
+//!    [`crate::model::derive_bundle_size`], which inverts the analytic
+//!    utilization model to find the smallest multilevel bundle size
+//!    whose *predicted* short-task utilization meets
+//!    `cfg.model_target_util`; `Multilevel` then runs at exactly that
+//!    derived size and the report shows predicted vs simulated side by
+//!    side.
+//! 3. **Churn** (`--churn`): the same sweeps re-run under a seeded
+//!    [`FaultPlan`] and are refitted, reporting the effective
+//!    (t_s, α_s) shift — the scheduler a fault-ridden cluster
+//!    *behaves like*, fed back into the same model.
+
+use crate::cluster::FaultPlan;
+use crate::config::{ExperimentConfig, SchedulerChoice};
+use crate::model::{derive_bundle_size, fit_sweep, BundleChoice, FittedModel};
+use crate::multilevel::{Multilevel, MultilevelParams};
+use crate::sched::calibration::{paper_table10, PaperFit};
+use crate::sched::{make_scheduler_scaled, RunOptions, RunResult, Scheduler};
+use crate::util::table::{fnum, Table};
+use crate::workload::WorkloadBuilder;
+
+use super::parallel::run_cells;
+use super::sweep::{cluster_of, run_sweeps, trial_mean, workload_for, SweepSpec, PROHIBITIVE_SECS};
+
+/// Minimum R² for a gated (paper-scheduler) fit row.
+pub const MODEL_R2_GATE: f64 = 0.90;
+/// Floor on the auto-tuned bundle's *simulated* utilization for the
+/// four paper schedulers.
+pub const MODEL_SIM_UTIL_FLOOR: f64 = 0.85;
+/// Maximum |predicted − simulated| divergence on gated tune rows.
+pub const MODEL_PRED_EPS: f64 = 0.10;
+/// Tasks per processor in the tune phase. Deliberately larger than the
+/// sweep workloads: at the sweep's T_job = 240 s even a single 240-task
+/// bundle per processor cannot amortize YARN's per-job startup to 85 %,
+/// so the headline "model-derived size reaches the target" claim needs
+/// a job long enough that the target is reachable at all.
+pub const MODEL_TUNE_TASKS_PER_PROC: u32 = 960;
+/// Task time in the tune phase (seconds) — the paper's "short task"
+/// regime where raw backends sit under 10 % utilization.
+pub const MODEL_TUNE_TASK_SECS: f64 = 1.0;
+/// Mean time between failures per node in the churn refit (seconds).
+pub const MODEL_CHURN_MTBF_SECS: f64 = 480.0;
+/// Mean time to repair per node in the churn refit (seconds).
+pub const MODEL_CHURN_MTTR_SECS: f64 = 24.0;
+/// Retry budget for churn-refit tasks: generous, so the refit measures
+/// the latency shift of retried work rather than failure truncation.
+const MODEL_CHURN_RETRIES: u32 = 8;
+
+/// One backend's fitted parameters next to the paper's measurement.
+#[derive(Clone, Debug)]
+pub struct ModelFitRow {
+    /// Which backend.
+    pub choice: SchedulerChoice,
+    /// Display name.
+    pub scheduler: String,
+    /// The hardened fit — `Err` carries scheduler + n-range context.
+    pub fit: Result<FittedModel, String>,
+    /// Paper Table 10 values, for the four schedulers it reports.
+    pub paper: Option<PaperFit>,
+    /// n values skipped as prohibitive in the sweep.
+    pub skipped: Vec<u32>,
+}
+
+/// One backend's auto-tuned aggregation run.
+#[derive(Clone, Debug)]
+pub struct ModelTuneRow {
+    /// Which backend.
+    pub choice: SchedulerChoice,
+    /// Display name of the wrapped scheduler.
+    pub scheduler: String,
+    /// The derived bundle size and its predicted utilization.
+    pub bundle: BundleChoice,
+    /// Simulation trials of `Multilevel` at the derived size.
+    pub trials: Vec<RunResult>,
+}
+
+impl ModelTuneRow {
+    /// Mean simulated utilization across trials.
+    pub fn mean_utilization(&self) -> f64 {
+        trial_mean(&self.trials, |r| r.utilization())
+    }
+}
+
+/// One backend's refit under churn, next to its fault-free baseline.
+#[derive(Clone, Debug)]
+pub struct ModelChurnRow {
+    /// Display name.
+    pub scheduler: String,
+    /// Refit of the same sweep under the seeded fault plan.
+    pub fit: Result<FittedModel, String>,
+    /// The fault-free fit this row shifts from (when it succeeded).
+    pub base: Option<FittedModel>,
+}
+
+impl ModelChurnRow {
+    /// Multiplicative t_s shift (churn / base), when both fits exist
+    /// and the baseline has measurable overhead.
+    pub fn t_s_shift(&self) -> Option<f64> {
+        match (&self.fit, &self.base) {
+            (Ok(c), Some(b)) if b.t_s > 0.0 => Some(c.t_s / b.t_s),
+            _ => None,
+        }
+    }
+
+    /// Additive α_s shift (churn − base), when both fits exist.
+    pub fn alpha_shift(&self) -> Option<f64> {
+        match (&self.fit, &self.base) {
+            (Ok(c), Some(b)) => Some(c.alpha_s - b.alpha_s),
+            _ => None,
+        }
+    }
+}
+
+/// Full report of the `model` experiment.
+#[derive(Clone, Debug)]
+pub struct ModelReport {
+    /// Phase 1: per-backend fits vs paper.
+    pub fits: Vec<ModelFitRow>,
+    /// Phase 2: auto-tuned aggregation, one row per successful fit.
+    pub tune: Vec<ModelTuneRow>,
+    /// Phase 3 (`--churn` only): refits under the seeded fault plan.
+    pub churn: Option<Vec<ModelChurnRow>>,
+    /// The target utilization the tuner inverted for.
+    pub target: f64,
+}
+
+/// Tune-cell: run `Multilevel` at row `row`'s derived size, one trial.
+struct TuneCell {
+    row: usize,
+    seed: u64,
+}
+
+/// Churn-cell: one `(sweep, point, trial)` of the refit sweep.
+struct ChurnCell {
+    sweep: usize,
+    point: usize,
+    n: u32,
+    seed: u64,
+    workload: usize,
+    plan: usize,
+}
+
+/// Run the `model` experiment: fit, tune, and optionally refit under
+/// churn. Deterministic for any `cfg.jobs`.
+pub fn model(cfg: &ExperimentConfig, churn: bool) -> ModelReport {
+    let choices = SchedulerChoice::all_simulated();
+
+    // ---- Phase 1: fit (t_s, α_s) from the shared sweep cells. ----
+    let specs: Vec<SweepSpec> = choices.iter().map(|&c| (c, None)).collect();
+    let sweeps = run_sweeps(&specs, cfg, &cfg.model_ns);
+    let fits: Vec<ModelFitRow> = choices
+        .iter()
+        .zip(&sweeps)
+        .map(|(&choice, sweep)| ModelFitRow {
+            choice,
+            scheduler: sweep.scheduler.clone(),
+            fit: fit_sweep(&sweep.scheduler, &sweep.fit_points()),
+            paper: paper_table10()
+                .into_iter()
+                .find(|p| p.scheduler == sweep.scheduler),
+            skipped: sweep.skipped.clone(),
+        })
+        .collect();
+
+    // ---- Phase 2: invert the model, run Multilevel at the answer. ----
+    let cluster = cluster_of(cfg);
+    let processors = cluster.total_cores();
+    let params = MultilevelParams::default();
+    let tune_workload = WorkloadBuilder::constant(MODEL_TUNE_TASK_SECS)
+        .tasks(MODEL_TUNE_TASKS_PER_PROC as u64 * processors)
+        .label("model-tune")
+        .build();
+    let tuned: Vec<(SchedulerChoice, String, BundleChoice)> = fits
+        .iter()
+        .filter_map(|row| {
+            let f = row.fit.as_ref().ok()?;
+            Some((
+                row.choice,
+                row.scheduler.clone(),
+                derive_bundle_size(
+                    f.t_s,
+                    f.alpha_s,
+                    &params,
+                    MODEL_TUNE_TASK_SECS,
+                    MODEL_TUNE_TASKS_PER_PROC,
+                    cfg.model_target_util,
+                ),
+            ))
+        })
+        .collect();
+    let tune_schedulers: Vec<Box<dyn Scheduler>> = tuned
+        .iter()
+        .map(|&(choice, _, _)| make_scheduler_scaled(choice, cfg.scale_down))
+        .collect();
+    let mut tune_cells: Vec<TuneCell> = Vec::new();
+    for row in 0..tuned.len() {
+        for trial in 0..cfg.trials {
+            // A seed stream of its own, disjoint from the sweep cells'.
+            let seed = (cfg.seed ^ 0x0DE1_7A6E)
+                .wrapping_add(trial as u64)
+                .wrapping_add((row as u64) << 24);
+            tune_cells.push(TuneCell { row, seed });
+        }
+    }
+    let tune_results = run_cells(cfg.effective_jobs(), &tune_cells, |cell, scratch| {
+        let (_, _, bundle) = &tuned[cell.row];
+        let ml = Multilevel::with_bundles_per_proc(
+            tune_schedulers[cell.row].as_ref(),
+            params.clone(),
+            bundle.bundles_per_proc as u64,
+        );
+        let r = ml.run_with_scratch(
+            &tune_workload,
+            &cluster,
+            cell.seed,
+            &RunOptions::default(),
+            scratch,
+        );
+        r.check_invariants()
+            .unwrap_or_else(|e| panic!("model tune {}: {e}", tuned[cell.row].1));
+        r
+    });
+    let mut tune: Vec<ModelTuneRow> = tuned
+        .into_iter()
+        .map(|(choice, scheduler, bundle)| ModelTuneRow {
+            choice,
+            scheduler,
+            bundle,
+            trials: Vec::with_capacity(cfg.trials as usize),
+        })
+        .collect();
+    for (cell, result) in tune_cells.iter().zip(tune_results) {
+        tune[cell.row].trials.push(result);
+    }
+
+    // ---- Phase 3: refit the same sweeps under seeded churn. ----
+    let churn = churn.then(|| churn_refit(cfg, &fits));
+
+    ModelReport {
+        fits,
+        tune,
+        churn,
+        target: cfg.model_target_util,
+    }
+}
+
+/// Re-run the fit sweeps under a seeded [`FaultPlan`] and refit. The
+/// plan at each `(n, trial)` is shared by every backend, so the shift
+/// comparison across schedulers sees identical node weather.
+fn churn_refit(cfg: &ExperimentConfig, fits: &[ModelFitRow]) -> Vec<ModelChurnRow> {
+    let choices = SchedulerChoice::all_simulated();
+    let cluster = cluster_of(cfg);
+    let processors = cluster.total_cores();
+    let schedulers: Vec<Box<dyn Scheduler>> = choices
+        .iter()
+        .map(|&c| make_scheduler_scaled(c, cfg.scale_down))
+        .collect();
+
+    let workloads: Vec<(u32, crate::workload::Workload)> = cfg
+        .model_ns
+        .iter()
+        .map(|&n| {
+            let mut w = workload_for(n, processors, &format!("n{n}+churn"));
+            for task in &mut w.tasks {
+                task.max_retries = MODEL_CHURN_RETRIES;
+            }
+            (n, w)
+        })
+        .collect();
+    // One plan per (n, trial), shared across backends.
+    let plans: Vec<FaultPlan> = cfg
+        .model_ns
+        .iter()
+        .flat_map(|&n| {
+            (0..cfg.trials).map(move |trial| {
+                FaultPlan::seeded(
+                    (cfg.seed ^ 0xC11A_0F0E)
+                        .wrapping_add(trial as u64)
+                        .wrapping_add((n as u64) << 24),
+                    cfg.effective_nodes(),
+                    MODEL_CHURN_MTBF_SECS,
+                    MODEL_CHURN_MTTR_SECS,
+                    PROHIBITIVE_SECS,
+                )
+            })
+        })
+        .collect();
+
+    // Skeleton sweeps + flat cells, mirroring `run_sweeps` (which
+    // hard-codes fault-free options and so cannot run this phase).
+    let mut pooled: Vec<Vec<Vec<(f64, f64)>>> = Vec::new(); // [sweep][point] -> obs
+    let mut cells: Vec<ChurnCell> = Vec::new();
+    for (si, inner) in schedulers.iter().enumerate() {
+        let mut points = Vec::new();
+        for (wi, &(n, ref workload)) in workloads.iter().enumerate() {
+            // Same prohibitive-cost skip as the fault-free sweep: the
+            // fault-free projection decides, so both phases fit over
+            // the same n values.
+            if inner.projected_runtime(workload, &cluster) > PROHIBITIVE_SECS {
+                continue;
+            }
+            let point = points.len();
+            for trial in 0..cfg.trials {
+                let ni = cfg.model_ns.iter().position(|&x| x == n).unwrap();
+                cells.push(ChurnCell {
+                    sweep: si,
+                    point,
+                    n,
+                    seed: cfg
+                        .seed
+                        .wrapping_add(trial as u64)
+                        .wrapping_add((n as u64) << 20),
+                    workload: wi,
+                    plan: ni * cfg.trials as usize + trial as usize,
+                });
+            }
+            points.push(Vec::with_capacity(cfg.trials as usize));
+        }
+        pooled.push(points);
+    }
+
+    let results = run_cells(cfg.effective_jobs(), &cells, |cell, scratch| {
+        let inner = schedulers[cell.sweep].as_ref();
+        let options = RunOptions::with_faults(plans[cell.plan].clone());
+        let r = inner.run_with_scratch(
+            &workloads[cell.workload].1,
+            &cluster,
+            cell.seed,
+            &options,
+            scratch,
+        );
+        r.check_invariants()
+            .unwrap_or_else(|e| panic!("model churn {} n={}: {e}", inner.name(), cell.n));
+        r
+    });
+    for (cell, result) in cells.iter().zip(results) {
+        pooled[cell.sweep][cell.point].push((cell.n as f64, result.delta_t()));
+    }
+
+    schedulers
+        .iter()
+        .zip(pooled)
+        .map(|(inner, points)| {
+            let name = inner.name().to_string();
+            let obs: Vec<(f64, f64)> = points.into_iter().flatten().collect();
+            let base = fits
+                .iter()
+                .find(|f| f.scheduler == name)
+                .and_then(|f| f.fit.as_ref().ok())
+                .cloned();
+            ModelChurnRow {
+                fit: fit_sweep(&format!("{name}+churn"), &obs),
+                scheduler: name,
+                base,
+            }
+        })
+        .collect()
+}
+
+/// Format an `f64` for the CSV: fixed precision keeps the bytes stable
+/// and diffable across platforms and `--jobs` values.
+fn csv_num(x: f64) -> String {
+    format!("{x:.6}")
+}
+
+/// Flatten an error note into a single CSV-safe field.
+fn csv_note(s: &str) -> String {
+    s.replace([',', '\n'], ";")
+}
+
+impl ModelReport {
+    /// Phase-1 table: fitted parameters vs the paper's Table 10.
+    pub fn render_fits(&self) -> Table {
+        let mut t = Table::new(
+            "Model: fitted DT = t_s * n^alpha_s per backend vs paper Table 10",
+            &[
+                "scheduler",
+                "t_s",
+                "alpha_s",
+                "R2",
+                "points",
+                "n range",
+                "t_s paper",
+                "alpha paper",
+                "note",
+            ],
+        );
+        for row in &self.fits {
+            let (paper_ts, paper_a) = match &row.paper {
+                Some(p) => (fnum(p.t_s), fnum(p.alpha_s)),
+                None => ("-".into(), "-".into()),
+            };
+            match &row.fit {
+                Ok(f) => {
+                    t.row(&[
+                        row.scheduler.clone(),
+                        fnum(f.t_s),
+                        fnum(f.alpha_s),
+                        fnum(f.r2),
+                        f.points.to_string(),
+                        format!("{}..{}", f.n_lo, f.n_hi),
+                        paper_ts,
+                        paper_a,
+                        if f.zero_overhead {
+                            "zero-overhead".into()
+                        } else {
+                            String::new()
+                        },
+                    ]);
+                }
+                Err(e) => {
+                    t.row(&[
+                        row.scheduler.clone(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                        "0".into(),
+                        "-".into(),
+                        paper_ts,
+                        paper_a,
+                        format!("FIT FAILED: {e}"),
+                    ]);
+                }
+            }
+        }
+        t
+    }
+
+    /// Phase-2 table: the derived bundle size, predicted vs simulated.
+    pub fn render_tune(&self) -> Table {
+        let mut t = Table::new(
+            format!(
+                "Model: auto-tuned aggregation for {} s tasks, n = {}/proc (target U >= {})",
+                fnum(MODEL_TUNE_TASK_SECS),
+                MODEL_TUNE_TASKS_PER_PROC,
+                fnum(self.target)
+            ),
+            &[
+                "scheduler",
+                "bundle size",
+                "bundles/proc",
+                "U predicted",
+                "U simulated",
+                "|diff|",
+                "note",
+            ],
+        );
+        for row in &self.tune {
+            let sim = row.mean_utilization();
+            t.row(&[
+                row.scheduler.clone(),
+                row.bundle.bundle_size.to_string(),
+                row.bundle.bundles_per_proc.to_string(),
+                fnum(row.bundle.predicted_u),
+                fnum(sim),
+                fnum((sim - row.bundle.predicted_u).abs()),
+                if row.bundle.capped {
+                    "capped (target unreachable)".into()
+                } else {
+                    String::new()
+                },
+            ]);
+        }
+        t
+    }
+
+    /// Phase-3 table, when the churn refit ran.
+    pub fn render_churn(&self) -> Option<Table> {
+        let churn = self.churn.as_ref()?;
+        let mut t = Table::new(
+            format!(
+                "Model: (t_s, alpha_s) refit under churn (MTBF {} s, MTTR {} s per node)",
+                fnum(MODEL_CHURN_MTBF_SECS),
+                fnum(MODEL_CHURN_MTTR_SECS)
+            ),
+            &[
+                "scheduler",
+                "t_s churn",
+                "alpha churn",
+                "R2",
+                "t_s shift x",
+                "alpha shift",
+                "note",
+            ],
+        );
+        for row in churn {
+            match &row.fit {
+                Ok(f) => {
+                    t.row(&[
+                        row.scheduler.clone(),
+                        fnum(f.t_s),
+                        fnum(f.alpha_s),
+                        fnum(f.r2),
+                        row.t_s_shift().map(fnum).unwrap_or_else(|| "-".into()),
+                        row.alpha_shift().map(fnum).unwrap_or_else(|| "-".into()),
+                        if f.zero_overhead {
+                            "zero-overhead".into()
+                        } else {
+                            String::new()
+                        },
+                    ]);
+                }
+                Err(e) => {
+                    t.row(&[
+                        row.scheduler.clone(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                        format!("REFIT FAILED: {e}"),
+                    ]);
+                }
+            }
+        }
+        Some(t)
+    }
+
+    /// The experiment's CSV: one row per fit / tune / churn entry,
+    /// distinguished by the `kind` column. Fully deterministic — no
+    /// wall-clock content — so it is byte-identical for any `--jobs`.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "kind,scheduler,t_s,alpha_s,r2,zero_overhead,points,t_s_paper,alpha_paper,\
+             bundle_size,bundles_per_proc,predicted_u,simulated_u,capped,t_s_shift,\
+             alpha_shift,note\n",
+        );
+        let blank = |n: usize| vec![String::new(); n];
+        let mut push = |fields: Vec<String>| {
+            out.push_str(&fields.join(","));
+            out.push('\n');
+        };
+        for row in &self.fits {
+            let (pt, pa) = match &row.paper {
+                Some(p) => (csv_num(p.t_s), csv_num(p.alpha_s)),
+                None => (String::new(), String::new()),
+            };
+            let mut fields = vec!["fit".to_string(), row.scheduler.clone()];
+            match &row.fit {
+                Ok(f) => {
+                    fields.extend([
+                        csv_num(f.t_s),
+                        csv_num(f.alpha_s),
+                        csv_num(f.r2),
+                        f.zero_overhead.to_string(),
+                        f.points.to_string(),
+                        pt,
+                        pa,
+                    ]);
+                    fields.extend(blank(7));
+                    fields.push(String::new());
+                }
+                Err(e) => {
+                    fields.extend(blank(5));
+                    fields.extend([pt, pa]);
+                    fields.extend(blank(7));
+                    fields.push(csv_note(e));
+                }
+            }
+            push(fields);
+        }
+        for row in &self.tune {
+            let mut fields = vec!["tune".to_string(), row.scheduler.clone()];
+            fields.extend(blank(7));
+            fields.extend([
+                row.bundle.bundle_size.to_string(),
+                row.bundle.bundles_per_proc.to_string(),
+                csv_num(row.bundle.predicted_u),
+                csv_num(row.mean_utilization()),
+                row.bundle.capped.to_string(),
+            ]);
+            fields.extend(blank(2));
+            fields.push(String::new());
+            push(fields);
+        }
+        for row in self.churn.iter().flatten() {
+            let mut fields = vec!["churn".to_string(), row.scheduler.clone()];
+            match &row.fit {
+                Ok(f) => {
+                    fields.extend([
+                        csv_num(f.t_s),
+                        csv_num(f.alpha_s),
+                        csv_num(f.r2),
+                        f.zero_overhead.to_string(),
+                        f.points.to_string(),
+                    ]);
+                    fields.extend(blank(7));
+                    fields.extend([
+                        row.t_s_shift().map(csv_num).unwrap_or_default(),
+                        row.alpha_shift().map(csv_num).unwrap_or_default(),
+                    ]);
+                    fields.push(String::new());
+                }
+                Err(e) => {
+                    fields.extend(blank(14));
+                    fields.push(csv_note(e));
+                }
+            }
+            push(fields);
+        }
+        out
+    }
+
+    /// Structural gates, enforced by CI's model smoke step:
+    ///
+    /// * every backend's fit succeeded, with finite parameters;
+    /// * gated rows (the four paper schedulers) have measurable
+    ///   overhead and R² ≥ [`MODEL_R2_GATE`];
+    /// * every tune row ran all trials at a sane derived size, and on
+    ///   gated rows the simulated utilization is ≥
+    ///   [`MODEL_SIM_UTIL_FLOOR`] *and* within [`MODEL_PRED_EPS`] of
+    ///   the model's prediction — the closed-loop claim itself;
+    /// * when the churn refit ran, it succeeded for every backend whose
+    ///   fault-free fit had measurable overhead.
+    pub fn check_shape(&self, cfg: &ExperimentConfig) -> Result<(), String> {
+        let gated = SchedulerChoice::paper_four();
+        if self.fits.len() != SchedulerChoice::all_simulated().len() {
+            return Err(format!("expected 6 fit rows, got {}", self.fits.len()));
+        }
+        for row in &self.fits {
+            let f = row.fit.as_ref().map_err(|e| format!("fit failed: {e}"))?;
+            if !(f.t_s.is_finite() && f.alpha_s.is_finite() && f.t_s >= 0.0) {
+                return Err(format!(
+                    "{}: non-finite or negative fit (t_s={}, alpha_s={})",
+                    row.scheduler, f.t_s, f.alpha_s
+                ));
+            }
+            if gated.contains(&row.choice) {
+                if f.zero_overhead {
+                    return Err(format!(
+                        "{}: paper scheduler fitted as zero-overhead — sweep measured no DT",
+                        row.scheduler
+                    ));
+                }
+                if f.r2 < MODEL_R2_GATE {
+                    return Err(format!(
+                        "{}: R2 {} below gate {MODEL_R2_GATE} over n in [{}, {}]",
+                        row.scheduler,
+                        fnum(f.r2),
+                        f.n_lo,
+                        f.n_hi
+                    ));
+                }
+            }
+        }
+        if self.tune.len() != self.fits.len() {
+            return Err(format!(
+                "expected {} tune rows, got {}",
+                self.fits.len(),
+                self.tune.len()
+            ));
+        }
+        for row in &self.tune {
+            let b = &row.bundle;
+            if b.bundles_per_proc < 1
+                || b.bundles_per_proc > MODEL_TUNE_TASKS_PER_PROC
+                || b.bundle_size < 1
+                || !(b.predicted_u > 0.0 && b.predicted_u <= 1.0)
+            {
+                return Err(format!(
+                    "{}: insane bundle choice (m={}, k={}, predicted U={})",
+                    row.scheduler, b.bundles_per_proc, b.bundle_size, b.predicted_u
+                ));
+            }
+            if row.trials.len() != cfg.trials as usize {
+                return Err(format!(
+                    "{}: ran {} tune trials, expected {}",
+                    row.scheduler,
+                    row.trials.len(),
+                    cfg.trials
+                ));
+            }
+            let sim = row.mean_utilization();
+            if !sim.is_finite() || sim <= 0.0 || sim > 1.0 + 1e-9 {
+                return Err(format!("{}: insane simulated U {sim}", row.scheduler));
+            }
+            if gated.contains(&row.choice) {
+                if b.capped {
+                    return Err(format!(
+                        "{}: target U {} unreachable even at one bundle per processor",
+                        row.scheduler, self.target
+                    ));
+                }
+                if sim < MODEL_SIM_UTIL_FLOOR {
+                    return Err(format!(
+                        "{}: simulated U {} below floor {MODEL_SIM_UTIL_FLOOR} at derived \
+                         bundle size {}",
+                        row.scheduler,
+                        fnum(sim),
+                        b.bundle_size
+                    ));
+                }
+                if (sim - b.predicted_u).abs() > MODEL_PRED_EPS {
+                    return Err(format!(
+                        "{}: simulated U {} diverges from predicted {} by more than \
+                         {MODEL_PRED_EPS}",
+                        row.scheduler,
+                        fnum(sim),
+                        fnum(b.predicted_u)
+                    ));
+                }
+            }
+        }
+        if let Some(churn) = &self.churn {
+            for row in churn {
+                let measurable_base = row.base.as_ref().is_some_and(|b| !b.zero_overhead);
+                match &row.fit {
+                    Err(e) if measurable_base => {
+                        return Err(format!("churn refit failed: {e}"));
+                    }
+                    Ok(f) if measurable_base && !(f.t_s.is_finite() && f.alpha_s.is_finite()) => {
+                        return Err(format!(
+                            "{}: non-finite churn refit (t_s={}, alpha_s={})",
+                            row.scheduler, f.t_s, f.alpha_s
+                        ));
+                    }
+                    _ => {}
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.scale_down = 11; // 4 nodes, 128 cores — fast in tests
+        cfg.trials = 1;
+        cfg.model_ns = vec![4, 8, 48];
+        cfg
+    }
+
+    #[test]
+    fn model_report_structure() {
+        let rep = model(&tiny_cfg(), false);
+        assert_eq!(rep.fits.len(), 6);
+        assert_eq!(rep.tune.len(), 6, "every fit Ok => every backend tuned");
+        assert!(rep.churn.is_none());
+        for row in &rep.fits {
+            let f = row.fit.as_ref().unwrap();
+            assert!(f.t_s.is_finite() && f.alpha_s.is_finite());
+        }
+        for row in &rep.tune {
+            assert!(row.bundle.bundles_per_proc >= 1);
+            assert!(row.bundle.bundle_size as u32 <= MODEL_TUNE_TASKS_PER_PROC);
+            assert_eq!(row.trials.len(), 1);
+            let sim = row.mean_utilization();
+            assert!(sim > 0.0 && sim <= 1.0 + 1e-9, "{}: U={sim}", row.scheduler);
+        }
+        // The paper's four get comparison columns; the extras don't.
+        assert_eq!(rep.fits.iter().filter(|r| r.paper.is_some()).count(), 4);
+    }
+
+    #[test]
+    fn churn_refit_shifts_params_for_paper_backends() {
+        let rep = model(&tiny_cfg(), true);
+        let churn = rep.churn.as_ref().unwrap();
+        assert_eq!(churn.len(), 6);
+        for row in churn {
+            if row.base.as_ref().is_some_and(|b| !b.zero_overhead) {
+                let f = row.fit.as_ref().unwrap_or_else(|e| panic!("{e}"));
+                assert!(f.t_s.is_finite() && f.alpha_s.is_finite());
+            }
+        }
+        // Churn can only add effective overhead in aggregate: at least
+        // one measurable backend must show a t_s or alpha_s increase.
+        assert!(
+            churn.iter().any(|r| {
+                r.t_s_shift().is_some_and(|s| s > 1.0)
+                    || r.alpha_shift().is_some_and(|d| d > 0.0)
+            }),
+            "no backend shifted under churn"
+        );
+    }
+
+    #[test]
+    fn csv_is_deterministic_and_kind_tagged() {
+        let rep = model(&tiny_cfg(), false);
+        let csv = rep.to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert!(lines[0].starts_with("kind,scheduler,"));
+        let cols = lines[0].split(',').count();
+        for line in &lines[1..] {
+            assert_eq!(line.split(',').count(), cols, "ragged row: {line}");
+        }
+        assert_eq!(csv.matches("\nfit,").count() + 1, 7); // header + 6 (first row offset)
+        assert_eq!(csv.matches("\ntune,").count(), 6);
+        assert_eq!(rep.to_csv(), csv, "recomputation stable");
+    }
+}

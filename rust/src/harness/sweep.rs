@@ -79,7 +79,7 @@ impl SchedulerSweep {
     }
 }
 
-fn cluster_of(cfg: &ExperimentConfig) -> ClusterSpec {
+pub(crate) fn cluster_of(cfg: &ExperimentConfig) -> ClusterSpec {
     ClusterSpec::homogeneous(
         cfg.effective_nodes(),
         cfg.cores_per_node,
@@ -88,7 +88,7 @@ fn cluster_of(cfg: &ExperimentConfig) -> ClusterSpec {
     )
 }
 
-fn workload_for(n: u32, processors: u64, label: &str) -> Workload {
+pub(crate) fn workload_for(n: u32, processors: u64, label: &str) -> Workload {
     let t = TABLE9_JOB_TIME_PER_PROC / n as f64;
     WorkloadBuilder::constant(t)
         .tasks(n as u64 * processors)

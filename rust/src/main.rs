@@ -4,12 +4,13 @@
 //! Subcommands:
 //!   features    render the paper's feature-comparison Tables 1–7
 //!   experiment  run table9 | table10 | fig4 | fig5 | fig6 | fig7 |
-//!               scenarios | preempt | service | churn | scale | all
+//!               scenarios | preempt | service | churn | scale | model | all
 //!   serve       realtime mini-cluster (leader + worker threads, PJRT payloads)
 //!   validate    run every experiment's shape checks at reduced scale
 //!
 //! Common options: --config <toml>, --quick (scaled-down cluster),
-//! --huge (adds a 10⁷-task point to the `scale` sweep), --trials N,
+//! --huge (adds a 10⁷-task point to the `scale` sweep), --churn (adds
+//! the fault-plan refit phase to the `model` experiment), --trials N,
 //! --jobs N (sweep worker threads; results are bit-identical for any
 //! value), --out-dir <dir>, --artifacts <dir>, --csv.
 
@@ -52,8 +53,8 @@ fn usage() {
         "usage: sssched <command> [options]\n\
          commands:\n\
          \x20 features   [--table 1..7] [--csv]\n\
-         \x20 experiment <table9|table10|fig4|fig5|fig6|fig7|scenarios|preempt|service|churn|scale|all> \
-         [--config f] [--quick] [--huge] [--trials N] [--jobs N] [--out-dir d] [--artifacts d] [--csv]\n\
+         \x20 experiment <table9|table10|fig4|fig5|fig6|fig7|scenarios|preempt|service|churn|scale|model|all> \
+         [--config f] [--quick] [--huge] [--churn] [--trials N] [--jobs N] [--out-dir d] [--artifacts d] [--csv]\n\
          \x20 serve      [--workers N] [--tasks N] [--task-ms MS] \
          [--payload sleep|spin|analytics] [--ts SECS] [--artifacts d]\n\
          \x20 validate   [--quick]"
@@ -238,6 +239,20 @@ fn cmd_experiment(args: &Args) -> i32 {
                 println!("shape checks (incl. exponent gate + eager bit-identity): OK");
                 write_out(&cfg, "scale.csv", &rep.to_csv());
             }
+            "model" => {
+                let rep = harness::model(&cfg, args.flag("churn"));
+                println!("{}", rep.render_fits().render());
+                println!("{}", rep.render_tune().render());
+                if let Some(t) = rep.render_churn() {
+                    println!("{}", t.render());
+                }
+                if let Err(e) = rep.check_shape(&cfg) {
+                    eprintln!("shape check FAILED: {e}");
+                    return 1;
+                }
+                println!("shape checks (incl. R2 gate + predicted-vs-simulated eps): OK");
+                write_out(&cfg, "model.csv", &rep.to_csv());
+            }
             other => {
                 eprintln!("unknown experiment `{other}`");
                 return 2;
@@ -258,6 +273,7 @@ fn cmd_experiment(args: &Args) -> i32 {
             "service",
             "churn",
             "scale",
+            "model",
         ] {
             let rc = run(name);
             if rc != 0 {
@@ -372,6 +388,7 @@ fn cmd_validate(args: &Args) -> i32 {
     );
     check("churn shapes", harness::churn(&cfg).check_shape(cfg.trials));
     check("scale shapes", harness::scale(&cfg).check_shape(&cfg));
+    check("model shapes", harness::model(&cfg, false).check_shape(&cfg));
     if failures == 0 {
         println!("all shape checks passed");
         0

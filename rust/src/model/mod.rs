@@ -5,7 +5,12 @@
 //! time, n tasks per processor, α_s nonlinear exponent, U utilization.
 
 mod analytic;
+mod fitted;
 mod measure;
 
 pub use analytic::{delta_t_model, u_constant_approx, u_constant_exact, u_variable};
+pub use fitted::{
+    derive_bundle_size, expected_bundle_overhead, fit_sweep, predicted_bundled_utilization,
+    BundleChoice, FittedModel, ZERO_DELTA_T,
+};
 pub use measure::{fit_from_runs, FitPoint};

@@ -62,12 +62,35 @@ impl Default for MultilevelParams {
 pub struct Multilevel<'a> {
     inner: &'a dyn Scheduler,
     params: MultilevelParams,
+    /// Mapper bundles per processor used by the `run*` path. The
+    /// paper's default is 1 (one mapper per processor); the `model`
+    /// experiment's auto-tuner derives larger values when the fitted
+    /// (t_s, α_s) predicts the target utilization is still met.
+    bundles_per_proc: u64,
 }
 
 impl<'a> Multilevel<'a> {
-    /// Wrap `inner` with aggregation parameters.
+    /// Wrap `inner` with aggregation parameters and the paper's default
+    /// of one mapper bundle per processor.
     pub fn new(inner: &'a dyn Scheduler, params: MultilevelParams) -> Self {
-        Self { inner, params }
+        Self::with_bundles_per_proc(inner, params, 1)
+    }
+
+    /// Wrap `inner`, aggregating to `bundles_per_proc` mapper bundles
+    /// per processor instead of the default one. Keeping the bundle
+    /// count an integer multiple of P avoids wave quantization: every
+    /// processor runs exactly `bundles_per_proc` equal-shape bundles.
+    pub fn with_bundles_per_proc(
+        inner: &'a dyn Scheduler,
+        params: MultilevelParams,
+        bundles_per_proc: u64,
+    ) -> Self {
+        assert!(bundles_per_proc > 0);
+        Self {
+            inner,
+            params,
+            bundles_per_proc,
+        }
     }
 
     /// Rewrite an N-task workload into `bundles` mapper jobs.
@@ -154,7 +177,7 @@ impl<'a> Scheduler for Multilevel<'a> {
         // the blast radius — one kill loses the bundle's entire
         // accumulated work, the price of hiding N tasks inside P — but
         // no bundle is ever stranded on a dead node.
-        let aggregated = self.aggregate(workload, processors, seed);
+        let aggregated = self.aggregate(workload, processors * self.bundles_per_proc, seed);
         let mut result = self
             .inner
             .run_with_scratch(&aggregated, cluster, seed, options, scratch);
@@ -168,8 +191,10 @@ impl<'a> Scheduler for Multilevel<'a> {
     }
 
     fn projected_runtime(&self, workload: &Workload, cluster: &ClusterSpec) -> f64 {
-        // One mapper per processor: the scheduler only sees P tasks.
-        workload.total_work() / cluster.total_cores() as f64 + self.params.mapper_startup
+        // `bundles_per_proc` mappers per processor: the scheduler only
+        // sees m·P tasks, and each processor pays m mapper startups.
+        workload.total_work() / cluster.total_cores() as f64
+            + self.params.mapper_startup * self.bundles_per_proc as f64
     }
 }
 
@@ -261,6 +286,28 @@ mod tests {
         assert!(r.wasted_core_seconds > 8.0 * 3.0, "each lost ~5 s minus dispatch");
         let baseline = ml.run(&w, &cluster(), 3, &RunOptions::default());
         assert!(r.t_total > baseline.t_total, "retries on half capacity cost time");
+    }
+
+    #[test]
+    fn bundles_per_proc_override_changes_bundle_count() {
+        let inner = CentralizedSim::new(calibration::slurm_params());
+        let w = WorkloadBuilder::constant(1.0).tasks(16 * 120).label("bpp").build();
+        // Default path (m = 1) and the explicit m = 1 form are the same
+        // scheduler; m = 3 runs 3× the bundles, so more per-bundle
+        // overhead and lower utilization, but still well above the raw
+        // backend for 1 s tasks.
+        let one = Multilevel::new(&inner, MultilevelParams::default());
+        let one_explicit =
+            Multilevel::with_bundles_per_proc(&inner, MultilevelParams::default(), 1);
+        let three = Multilevel::with_bundles_per_proc(&inner, MultilevelParams::default(), 3);
+        assert_eq!(three.aggregate(&w, 3 * 16, 7).len(), 48);
+        let r1 = one.run(&w, &cluster(), 9, &RunOptions::default());
+        let r1x = one_explicit.run(&w, &cluster(), 9, &RunOptions::default());
+        let r3 = three.run(&w, &cluster(), 9, &RunOptions::default());
+        r3.check_invariants().unwrap();
+        assert_eq!(r1.t_total.to_bits(), r1x.t_total.to_bits());
+        assert!(r3.utilization() < r1.utilization());
+        assert!((r3.t_job - r1.t_job).abs() < 1e-9, "same isolated job time");
     }
 
     #[test]

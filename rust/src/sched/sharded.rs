@@ -130,6 +130,44 @@ impl ShardedSim {
             scratch_pool: Mutex::new(Vec::new()),
         }
     }
+
+    /// Check whether `(workload, options)` can be sharded at all.
+    ///
+    /// Two restrictions fall out of the decomposition (jobs route to
+    /// shards by `job % G`, and each shard renumbers its node group
+    /// from zero):
+    ///
+    /// * **fault plans** address *global* node ids, so a plan replayed
+    ///   inside a shard would fire on different physical nodes than the
+    ///   unsharded run — a silently different experiment;
+    /// * **task dependencies** may cross shard boundaries, where the
+    ///   parent's completion is never observed and the child would wait
+    ///   forever.
+    ///
+    /// The run path calls this and panics with the returned message;
+    /// callers that want to degrade gracefully (pick an unsharded
+    /// engine instead) should call it first.
+    pub fn validate_shardable(workload: &Workload, options: &RunOptions) -> Result<(), String> {
+        if !options.faults.is_empty() {
+            return Err(
+                "sharded runs do not support fault plans: FaultPlan events address global \
+                 node ids, but each shard renumbers its node group from zero, so the plan \
+                 would strike different physical nodes than an unsharded run; run fault \
+                 scenarios on an unsharded engine"
+                    .into(),
+            );
+        }
+        if let Some(t) = workload.tasks.iter().find(|t| !t.deps.is_empty()) {
+            return Err(format!(
+                "sharded runs require a dependency-free workload: task {} depends on \
+                 {:?}, and jobs are routed to shards by `job % shards`, so a dependency \
+                 crossing shards would deadlock (the parent's completion is never seen \
+                 by the child's shard); run DAG workloads on an unsharded engine",
+                t.id, t.deps
+            ));
+        }
+        Ok(())
+    }
 }
 
 impl Scheduler for ShardedSim {
@@ -148,14 +186,9 @@ impl Scheduler for ShardedSim {
         // Shards run on the internal per-worker scratch pool (the
         // warm-buffer contract makes results independent of scratch
         // history), so the caller's scratch is deliberately unused.
-        assert!(
-            options.faults.is_empty(),
-            "sharded runs do not support fault plans (node ids are global)"
-        );
-        assert!(
-            workload.tasks.iter().all(|t| t.deps.is_empty()),
-            "sharded runs require a dependency-free workload"
-        );
+        if let Err(e) = Self::validate_shardable(workload, options) {
+            panic!("{}: {e}", self.name);
+        }
         let g = self.shards.min(cluster.n_nodes().max(1));
 
         // Nodes into G contiguous groups (remainder spread over the
@@ -372,6 +405,36 @@ mod tests {
         let mut pt = plain.trace.clone().unwrap();
         pt.sort_by_key(|rec| rec.task);
         assert_eq!(r.trace.as_ref().unwrap(), &pt);
+    }
+
+    #[test]
+    fn fault_plans_are_rejected_with_a_diagnostic() {
+        use crate::cluster::FaultPlan;
+        let w = WorkloadBuilder::constant(1.0).tasks(16).jobs(16).build();
+        let options = RunOptions::with_faults(FaultPlan::none().fail(2.0, 0));
+        let e = ShardedSim::validate_shardable(&w, &options).unwrap_err();
+        assert!(e.contains("fault plans"), "{e}");
+        assert!(e.contains("global"), "{e}");
+        // The fault-free, dependency-free case passes.
+        ShardedSim::validate_shardable(&w, &RunOptions::default()).unwrap();
+    }
+
+    #[test]
+    fn dag_workloads_are_rejected_with_a_diagnostic() {
+        let w = WorkloadBuilder::constant(1.0).tasks(12).dag_chains(4).build();
+        let e = ShardedSim::validate_shardable(&w, &RunOptions::default()).unwrap_err();
+        assert!(e.contains("dependency-free"), "{e}");
+        assert!(e.contains("deadlock"), "{e}");
+    }
+
+    #[test]
+    #[should_panic(expected = "sharded runs do not support fault plans")]
+    fn run_panics_on_fault_plan_with_the_validation_message() {
+        use crate::cluster::FaultPlan;
+        let w = WorkloadBuilder::constant(1.0).tasks(16).jobs(16).build();
+        let options = RunOptions::with_faults(FaultPlan::none().fail(2.0, 0));
+        let sim = ShardedSim::new(Box::new(IdealFifo), 2, 1, "I+shard2");
+        sim.run(&w, &cluster(), 0, &options);
     }
 
     #[test]

@@ -2,6 +2,38 @@
 //! ΔT = t_s · n^α_s, fitted as a line in log–log space
 //! (log ΔT = log t_s + α_s · log n). Table 10 of the paper reports
 //! exactly these two parameters per scheduler.
+//!
+//! Two entry points per fit: a `try_*` form returning [`FitError`] for
+//! callers that must survive pathological data (the `model` experiment
+//! gates a sweep row on its fit, so a degenerate row has to fail with a
+//! diagnostic rather than abort the process), and the original
+//! panicking form for call sites where bad input is a programming
+//! error.
+
+use std::fmt;
+
+/// Why a least-squares fit could not be computed from the given points.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FitError {
+    /// Fewer than two usable points: `usable` counts the points that
+    /// survived filtering (the power-law path drops non-positive n or
+    /// ΔT), out of `total` supplied.
+    TooFewPoints { usable: usize, total: usize },
+    /// All x values coincide, so the slope is unidentifiable.
+    DegenerateX,
+}
+
+impl fmt::Display for FitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FitError::TooFewPoints { usable, total } => write!(
+                f,
+                "need at least 2 usable points, got {usable} of {total} supplied"
+            ),
+            FitError::DegenerateX => write!(f, "degenerate x values (all x coincide)"),
+        }
+    }
+}
 
 /// Result of a simple linear regression y = a + b·x.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -14,20 +46,25 @@ pub struct Line {
     pub r2: f64,
 }
 
-/// Ordinary least squares on (x, y) pairs. Panics if fewer than 2 points.
-pub fn linear_regression(xs: &[f64], ys: &[f64]) -> Line {
+/// Ordinary least squares on (x, y) pairs. Errors on fewer than 2
+/// points or coincident x values instead of panicking.
+pub fn try_linear_regression(xs: &[f64], ys: &[f64]) -> Result<Line, FitError> {
     assert_eq!(xs.len(), ys.len(), "x/y length mismatch");
-    assert!(xs.len() >= 2, "need at least 2 points to fit a line");
+    if xs.len() < 2 {
+        return Err(FitError::TooFewPoints {
+            usable: xs.len(),
+            total: xs.len(),
+        });
+    }
     let n = xs.len() as f64;
     let sx: f64 = xs.iter().sum();
     let sy: f64 = ys.iter().sum();
     let sxx: f64 = xs.iter().map(|x| x * x).sum();
     let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| x * y).sum();
     let denom = n * sxx - sx * sx;
-    assert!(
-        denom.abs() > 1e-300,
-        "degenerate x values in linear regression"
-    );
+    if denom.abs() <= 1e-300 {
+        return Err(FitError::DegenerateX);
+    }
     let slope = (n * sxy - sx * sy) / denom;
     let intercept = (sy - slope * sx) / n;
     // R^2
@@ -46,11 +83,18 @@ pub fn linear_regression(xs: &[f64], ys: &[f64]) -> Line {
     } else {
         1.0 - ss_res / ss_tot
     };
-    Line {
+    Ok(Line {
         intercept,
         slope,
         r2,
-    }
+    })
+}
+
+/// Ordinary least squares on (x, y) pairs. Panics if fewer than 2
+/// points or the x values are degenerate; use [`try_linear_regression`]
+/// where bad input is survivable.
+pub fn linear_regression(xs: &[f64], ys: &[f64]) -> Line {
+    try_linear_regression(xs, ys).unwrap_or_else(|e| panic!("linear regression: {e}"))
 }
 
 /// Fitted power law ΔT = t_s · n^α_s.
@@ -73,9 +117,9 @@ impl PowerLawFit {
 
 /// Fit ΔT = t_s n^α_s by OLS in log–log space. Points with non-positive
 /// n or ΔT are skipped (they carry no information for a power law and
-/// occur only as shot noise at tiny n). Panics if fewer than 2 usable
-/// points remain.
-pub fn fit_power_law(ns: &[f64], delta_ts: &[f64]) -> PowerLawFit {
+/// occur only as shot noise at tiny n). Errors if fewer than 2 usable
+/// points remain or all usable n coincide.
+pub fn try_fit_power_law(ns: &[f64], delta_ts: &[f64]) -> Result<PowerLawFit, FitError> {
     assert_eq!(ns.len(), delta_ts.len());
     let (mut xs, mut ys) = (Vec::new(), Vec::new());
     for (&n, &dt) in ns.iter().zip(delta_ts) {
@@ -84,12 +128,25 @@ pub fn fit_power_law(ns: &[f64], delta_ts: &[f64]) -> PowerLawFit {
             ys.push(dt.ln());
         }
     }
-    let line = linear_regression(&xs, &ys);
-    PowerLawFit {
+    let line = try_linear_regression(&xs, &ys).map_err(|e| match e {
+        // Report the filter's view of the data, not the filtered slice's.
+        FitError::TooFewPoints { usable, .. } => FitError::TooFewPoints {
+            usable,
+            total: ns.len(),
+        },
+        other => other,
+    })?;
+    Ok(PowerLawFit {
         t_s: line.intercept.exp(),
         alpha_s: line.slope,
         r2: line.r2,
-    }
+    })
+}
+
+/// Fit ΔT = t_s n^α_s by OLS in log–log space, panicking on degenerate
+/// input; use [`try_fit_power_law`] where bad input is survivable.
+pub fn fit_power_law(ns: &[f64], delta_ts: &[f64]) -> PowerLawFit {
+    try_fit_power_law(ns, delta_ts).unwrap_or_else(|e| panic!("power-law fit: {e}"))
 }
 
 #[cfg(test)]
@@ -150,5 +207,43 @@ mod tests {
     #[should_panic]
     fn regression_needs_two_points() {
         linear_regression(&[1.0], &[1.0]);
+    }
+
+    #[test]
+    fn try_regression_too_few_points_is_an_error() {
+        let err = try_linear_regression(&[1.0], &[1.0]).unwrap_err();
+        assert_eq!(err, FitError::TooFewPoints { usable: 1, total: 1 });
+        assert!(err.to_string().contains("at least 2"));
+    }
+
+    #[test]
+    fn try_regression_degenerate_x_is_an_error() {
+        // Three points, all at the same x: slope unidentifiable.
+        let err = try_linear_regression(&[2.0, 2.0, 2.0], &[1.0, 2.0, 3.0]).unwrap_err();
+        assert_eq!(err, FitError::DegenerateX);
+        assert!(err.to_string().contains("degenerate"));
+    }
+
+    #[test]
+    fn try_power_law_reports_usable_vs_total() {
+        // Five points supplied, but only one survives the positivity
+        // filter — the error must say so.
+        let err = try_fit_power_law(&[1.0, 2.0, 4.0, 8.0, 16.0], &[0.0, 0.0, 0.0, 0.0, 3.0])
+            .unwrap_err();
+        assert_eq!(err, FitError::TooFewPoints { usable: 1, total: 5 });
+    }
+
+    #[test]
+    fn try_power_law_single_n_is_degenerate() {
+        // Repeated trials at one n: positive ΔT everywhere, but the
+        // exponent is unidentifiable from a single n.
+        let err = try_fit_power_law(&[8.0, 8.0, 8.0], &[3.0, 3.1, 2.9]).unwrap_err();
+        assert_eq!(err, FitError::DegenerateX);
+    }
+
+    #[test]
+    #[should_panic]
+    fn regression_panics_on_degenerate_x() {
+        linear_regression(&[5.0, 5.0], &[1.0, 2.0]);
     }
 }

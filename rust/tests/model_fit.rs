@@ -1,0 +1,285 @@
+//! Property + golden suite for the fitted-model layer (the `model`
+//! experiment): the hardened power-law fitter recovers known
+//! parameters under seeded noise, degenerate sweeps fail as errors
+//! instead of aborting, the auto-tuned bundle size moves monotonically
+//! with task duration and scheduler latency, the experiment's CSV is
+//! byte-identical for any worker count, and a self-seeding golden
+//! snapshot pins the fitted parameters and derived bundle sizes
+//! bit-for-bit.
+
+use sssched::config::ExperimentConfig;
+use sssched::harness::{self, ModelReport};
+use sssched::model::{derive_bundle_size, fit_sweep, predicted_bundled_utilization};
+use sssched::multilevel::MultilevelParams;
+use sssched::sched::{RunOptions, ShardedSim};
+use sssched::util::fit::{try_fit_power_law, try_linear_regression, FitError};
+use sssched::util::prng::Prng;
+use sssched::workload::WorkloadBuilder;
+use std::path::PathBuf;
+
+/// Small config shared by the end-to-end tests: 4 nodes × 32 cores,
+/// one trial, three sweep points.
+fn tiny_cfg(jobs: u32) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.scale_down = 11; // 4 nodes, 128 cores — fast in tests
+    cfg.trials = 1;
+    cfg.model_ns = vec![4, 8, 48];
+    cfg.jobs = jobs;
+    cfg
+}
+
+// ---------------------------------------------------------------------
+// Property: the fitter recovers known (t_s, α_s) under seeded noise.
+// ---------------------------------------------------------------------
+
+#[test]
+fn fitter_recovers_known_parameters_under_noise() {
+    let ns = [4u32, 8, 16, 32, 48, 96, 240];
+    for case in 0..20u64 {
+        let mut rng = Prng::new(0xF17_0000 + case);
+        let t_s = rng.range_f64(0.5, 40.0);
+        let alpha = rng.range_f64(0.9, 1.5);
+        // Three "trials" per n with multiplicative lognormal noise
+        // (mean 1, cv 5 %) — the same shape as pooled sweep trials.
+        let mut pts: Vec<(f64, f64)> = Vec::new();
+        for &n in &ns {
+            for _ in 0..3 {
+                let dt = t_s * (n as f64).powf(alpha) * rng.lognormal_mean_cv(1.0, 0.05);
+                pts.push((n as f64, dt));
+            }
+        }
+        let f = fit_sweep("synthetic", &pts).unwrap();
+        assert!(!f.zero_overhead);
+        assert!(
+            (f.t_s - t_s).abs() / t_s < 0.25,
+            "case {case}: t_s {} vs true {t_s}",
+            f.t_s
+        );
+        assert!(
+            (f.alpha_s - alpha).abs() < 0.05,
+            "case {case}: alpha {} vs true {alpha}",
+            f.alpha_s
+        );
+        assert!(f.r2 > 0.95, "case {case}: r2 {}", f.r2);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Satellite bugfix: degenerate fits are contextual errors, not panics.
+// ---------------------------------------------------------------------
+
+#[test]
+fn degenerate_fits_are_errors_not_panics() {
+    assert_eq!(
+        try_linear_regression(&[1.0], &[1.0]).unwrap_err(),
+        FitError::TooFewPoints { usable: 1, total: 1 }
+    );
+    assert_eq!(
+        try_linear_regression(&[2.0, 2.0, 2.0], &[1.0, 2.0, 3.0]).unwrap_err(),
+        FitError::DegenerateX
+    );
+    // All-zero ΔT: every point filtered, none usable.
+    assert_eq!(
+        try_fit_power_law(&[4.0, 8.0, 16.0], &[0.0, 0.0, 0.0]).unwrap_err(),
+        FitError::TooFewPoints { usable: 0, total: 3 }
+    );
+    // The experiment-level wrapper adds scheduler + n-range context.
+    let e = fit_sweep("PathologicalSched", &[(4.0, 0.0), (8.0, 0.0), (48.0, 3.0)]).unwrap_err();
+    assert!(e.contains("PathologicalSched"), "{e}");
+    assert!(e.contains("[4, 48]"), "{e}");
+    let e = fit_sweep("PathologicalSched", &[(8.0, 3.0), (8.0, 3.1)]).unwrap_err();
+    assert!(e.contains("degenerate"), "{e}");
+    // An all-noise sweep is the zero-overhead convention, not an error.
+    let f = fit_sweep("Ideal", &[(4.0, 0.0), (8.0, 1e-9)]).unwrap();
+    assert!(f.zero_overhead);
+    assert_eq!((f.t_s, f.alpha_s, f.r2), (0.0, 1.0, 1.0));
+}
+
+// ---------------------------------------------------------------------
+// Property: auto-tuned bundle size is monotone in t and inverse in t_s.
+// ---------------------------------------------------------------------
+
+#[test]
+fn bundle_size_monotone_non_increasing_in_task_duration() {
+    let p = MultilevelParams::default();
+    let mut last_k = u64::MAX;
+    for &t in &[0.5, 1.0, 2.0, 5.0, 15.0, 60.0] {
+        let c = derive_bundle_size(3.0, 1.2, &p, t, 960, 0.9);
+        assert!(
+            c.bundle_size <= last_k,
+            "t={t}: bundle {} grew past {last_k}",
+            c.bundle_size
+        );
+        last_k = c.bundle_size;
+    }
+    // Long tasks need almost no aggregation; short tasks need a lot.
+    let short = derive_bundle_size(3.0, 1.2, &p, 0.5, 960, 0.9);
+    let long = derive_bundle_size(3.0, 1.2, &p, 60.0, 960, 0.9);
+    assert!(short.bundle_size > long.bundle_size);
+}
+
+#[test]
+fn bundle_size_inverse_monotone_in_ts() {
+    let p = MultilevelParams::default();
+    let mut last_k = 0u64;
+    for &t_s in &[0.1, 1.0, 2.2, 3.4, 10.0, 33.0] {
+        let c = derive_bundle_size(t_s, 1.1, &p, 1.0, 960, 0.9);
+        assert!(
+            c.bundle_size >= last_k,
+            "t_s={t_s}: bundle {} shrank below {last_k}",
+            c.bundle_size
+        );
+        last_k = c.bundle_size;
+    }
+}
+
+#[test]
+fn predicted_utilization_is_monotone_in_m_and_capped_choice_is_sane() {
+    let p = MultilevelParams::default();
+    let mut last = f64::INFINITY;
+    for m in 1..=960u32 {
+        let u = predicted_bundled_utilization(2.8, 1.3, &p, 1.0, 960.0, m as f64);
+        assert!(u <= last + 1e-12, "m={m}");
+        last = u;
+    }
+    let c = derive_bundle_size(1.0e9, 1.3, &p, 1.0, 960, 0.9);
+    assert!(c.capped && c.bundles_per_proc == 1 && c.bundle_size == 960);
+}
+
+// ---------------------------------------------------------------------
+// Satellite: sharding restrictions are validated errors.
+// ---------------------------------------------------------------------
+
+#[test]
+fn sharding_rejects_fault_plans_and_dag_workloads() {
+    use sssched::cluster::FaultPlan;
+    let plain = WorkloadBuilder::constant(1.0).tasks(16).jobs(16).build();
+    ShardedSim::validate_shardable(&plain, &RunOptions::default()).unwrap();
+    let e = ShardedSim::validate_shardable(
+        &plain,
+        &RunOptions::with_faults(FaultPlan::none().fail(1.0, 0)),
+    )
+    .unwrap_err();
+    assert!(e.contains("fault plans"), "{e}");
+    let dag = WorkloadBuilder::constant(1.0).tasks(12).dag_chains(4).build();
+    let e = ShardedSim::validate_shardable(&dag, &RunOptions::default()).unwrap_err();
+    assert!(e.contains("dependency-free"), "{e}");
+}
+
+// ---------------------------------------------------------------------
+// Determinism: model.csv is byte-identical for any --jobs.
+// ---------------------------------------------------------------------
+
+#[test]
+fn model_csv_byte_identical_across_jobs() {
+    let r1 = harness::model(&tiny_cfg(1), true);
+    let r4 = harness::model(&tiny_cfg(4), true);
+    assert_eq!(
+        r1.to_csv(),
+        r4.to_csv(),
+        "model.csv must be byte-identical for --jobs 1 vs --jobs 4"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Golden snapshot: fitted parameters + derived bundle sizes, pinned
+// bit-for-bit (self-seeding, tests/golden_array.rs pattern).
+// ---------------------------------------------------------------------
+
+fn snapshot_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("golden")
+        .join("model_fit.txt")
+}
+
+/// Bits-formatted lines for every fit, tune, and churn row of the tiny
+/// pinned-seed model run.
+fn compute_model_lines(rep: &ModelReport) -> Vec<String> {
+    let mut lines = Vec::new();
+    for row in &rep.fits {
+        let name = row.scheduler.replace(' ', "_");
+        match &row.fit {
+            Ok(f) => lines.push(format!(
+                "fit {name} {:016x} {:016x} {:016x} {}",
+                f.t_s.to_bits(),
+                f.alpha_s.to_bits(),
+                f.r2.to_bits(),
+                if f.zero_overhead { "zero" } else { "fitted" }
+            )),
+            Err(e) => lines.push(format!("fit {name} ERR {}", e.replace(' ', "_"))),
+        }
+    }
+    for row in &rep.tune {
+        lines.push(format!(
+            "tune {} m={} k={} pred={:016x} sim={:016x}",
+            row.scheduler.replace(' ', "_"),
+            row.bundle.bundles_per_proc,
+            row.bundle.bundle_size,
+            row.bundle.predicted_u.to_bits(),
+            row.mean_utilization().to_bits(),
+        ));
+    }
+    for row in rep.churn.iter().flatten() {
+        let name = row.scheduler.replace(' ', "_");
+        match &row.fit {
+            Ok(f) => lines.push(format!(
+                "churn {name} {:016x} {:016x}",
+                f.t_s.to_bits(),
+                f.alpha_s.to_bits(),
+            )),
+            Err(e) => lines.push(format!("churn {name} ERR {}", e.replace(' ', "_"))),
+        }
+    }
+    lines
+}
+
+fn assert_snapshot(path: &std::path::Path, lines: &[String]) {
+    match std::fs::read_to_string(path) {
+        Ok(expected) => {
+            let expected: Vec<&str> = expected.lines().filter(|l| !l.is_empty()).collect();
+            assert_eq!(
+                expected.len(),
+                lines.len(),
+                "snapshot {} has {} lines, run produced {}",
+                path.display(),
+                expected.len(),
+                lines.len()
+            );
+            for (e, got) in expected.iter().zip(lines) {
+                assert_eq!(
+                    *e, got,
+                    "result drifted from golden snapshot {}",
+                    path.display()
+                );
+            }
+        }
+        Err(_) => {
+            std::fs::create_dir_all(path.parent().expect("has parent"))
+                .expect("create tests/golden");
+            std::fs::write(path, lines.join("\n") + "\n").expect("write snapshot");
+            eprintln!(
+                "golden snapshot seeded at {} — commit it to pin results",
+                path.display()
+            );
+        }
+    }
+}
+
+#[test]
+fn golden_model_fit_and_tune_are_pinned() {
+    let rep = harness::model(&tiny_cfg(1), true);
+    // Structural expectations first, so a drifted run fails with a
+    // readable message before any bit comparison.
+    assert_eq!(rep.fits.len(), 6);
+    assert_eq!(rep.tune.len(), 6);
+    assert!(rep.fits.iter().all(|r| r.fit.is_ok()));
+    assert_snapshot(&snapshot_path(), &compute_model_lines(&rep));
+}
+
+#[test]
+fn golden_model_recomputation_is_stable() {
+    let a = compute_model_lines(&harness::model(&tiny_cfg(1), true));
+    let b = compute_model_lines(&harness::model(&tiny_cfg(1), true));
+    assert_eq!(a, b, "model experiment must be deterministic per process");
+}
