@@ -780,6 +780,30 @@ fn main() {
          outputs bit-identical: yes"
     );
 
+    // ---- 6. pallas-lint: the static determinism pass over this
+    // crate's own tree. Tracked so a rule or tree growth that makes the
+    // lint step slow shows up in the perf trajectory like any other
+    // regression, and so rule-hit counts (pre-suppression) are recorded
+    // alongside the numbers they protect.
+    let (lint_wall_ms, lint_report) = {
+        let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+        let _warm = sssched::lint::lint_tree(&root).expect("lint walks the crate");
+        let t0 = Instant::now();
+        let report = sssched::lint::lint_tree(&root).expect("lint walks the crate");
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        assert!(
+            report.is_clean(),
+            "perf run on a tree that fails pallas-lint:\n{}",
+            report.render()
+        );
+        println!(
+            "pallas-lint: {} files clean in {wall_ms:.1} ms ({} suppression honoured)",
+            report.files_scanned,
+            report.suppressed
+        );
+        (wall_ms, report)
+    };
+
     // ---- Machine-readable perf trajectory.
     let sims_json: Vec<String> = sim_rates
         .iter()
@@ -833,6 +857,10 @@ fn main() {
          \x20   \"streaming_traced_peak_bytes\": {stpb},\n\
          \x20   \"bit_identical\": true\n\
          \x20 }},\n\
+         \x20 \"lint_wall_ms\": {lint_wall_ms:.2},\n\
+         \x20 \"lint_files\": {lint_files},\n\
+         \x20 \"lint_suppressed\": {lint_suppressed},\n\
+         \x20 \"lint_rule_hits\": {{{lint_hits}}},\n\
          \x20 \"peak_rss_kb\": {rss},\n\
          \x20 \"realtime_dispatch_per_s\": {dispatch_rate:.1},\n\
          \x20 \"powerlaw_fit_ms_per_call\": {fit_ms},\n\
@@ -866,6 +894,14 @@ fn main() {
         stn = streaming_n,
         supb = streaming_untraced_peak,
         stpb = streaming_traced_peak,
+        lint_files = lint_report.files_scanned,
+        lint_suppressed = lint_report.suppressed,
+        lint_hits = lint_report
+            .rule_hits
+            .iter()
+            .map(|(n, c)| format!("\"{n}\": {c}"))
+            .collect::<Vec<_>>()
+            .join(", "),
         rss = peak_rss_kb()
             .map(|kb| kb.to_string())
             .unwrap_or_else(|| "null".to_string()),

@@ -1,0 +1,59 @@
+//! `pallas-lint` — static enforcement of the determinism contract.
+//!
+//! Usage:
+//!
+//! ```text
+//! cargo run --release --bin pallas-lint              # lint this crate
+//! cargo run --release --bin pallas-lint -- --json    # machine output
+//! cargo run --release --bin pallas-lint -- --root path/to/crate
+//! ```
+//!
+//! Exit codes: 0 clean, 1 diagnostics found, 2 usage/I-O error. The
+//! same pass also runs as `tests/lint_clean.rs` (tier-1) and as a
+//! dedicated CI step; see the README section "Static analysis & the
+//! determinism contract" for the rule table and the
+//! `pallas: allow(rule) — reason` suppression grammar.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use sssched::cli::Args;
+use sssched::lint;
+
+fn main() -> ExitCode {
+    let args = match Args::parse_with_bools(std::env::args().skip(1), &["json"]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("pallas-lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let root = args
+        .opt("root")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")));
+
+    // pallas: allow(wall-clock) — linter self-timing for the lint_wall_ms
+    // perf metric; no simulated path reads this clock.
+    let t0 = std::time::Instant::now();
+    let report = match lint::lint_tree(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("pallas-lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    if args.flag("json") {
+        println!("{}", report.to_json(Some(wall_ms)));
+    } else {
+        print!("{}", report.render());
+        println!("({wall_ms:.1} ms)");
+    }
+    if report.is_clean() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}

@@ -261,8 +261,13 @@ impl FaultPlan {
         // (Vec::sort_by is stable).
         let mut order: Vec<usize> = (0..self.events.len()).collect();
         order.sort_by(|&a, &b| self.events[a].at.total_cmp(&self.events[b].at));
-        let mut state: std::collections::HashMap<NodeId, NodeState> =
-            std::collections::HashMap::new();
+        // BTreeMap, not HashMap: the map is only probed via entry(), so
+        // iteration order can't leak today — but the determinism linter
+        // bans hash containers in cluster/ outright, and the ordered map
+        // keeps any future "report all inconsistent nodes" iteration
+        // deterministic by construction.
+        let mut state: std::collections::BTreeMap<NodeId, NodeState> =
+            std::collections::BTreeMap::new();
         for &i in &order {
             let e = &self.events[i];
             let s = state.entry(e.node).or_insert(NodeState::Up);
@@ -405,5 +410,23 @@ mod tests {
         // Different seeds draw different schedules.
         let c = FaultPlan::seeded(8, 4, 50.0, 10.0, 240.0);
         assert_ne!(a, c);
+    }
+
+    #[test]
+    fn fault_plan_validation_error_is_order_deterministic() {
+        // Two independent inconsistencies on different nodes: node 0
+        // double-fails at t=2, node 1 recovers while healthy at t=5.
+        // Replay is in firing order, so the earliest inconsistency must
+        // win every time — regardless of builder call order and of any
+        // map the replay keeps per-node state in (the reason the state
+        // map is a BTreeMap, not a HashMap).
+        let plan = FaultPlan::none().recover(5.0, 1).fail(1.0, 0).fail(2.0, 0);
+        for _ in 0..8 {
+            let err = plan.validate().unwrap_err();
+            assert!(
+                err.contains("node 0") && err.contains("already down"),
+                "expected the t=2 double-fail on node 0 to fire first, got: {err}"
+            );
+        }
     }
 }

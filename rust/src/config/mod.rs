@@ -8,5 +8,5 @@
 mod schema;
 mod toml;
 
-pub use schema::{ExperimentConfig, SchedulerChoice};
+pub use schema::{validate_experiment, ExperimentConfig, SchedulerChoice, EXPERIMENT_NAMES};
 pub use toml::{parse_toml, TomlValue};

@@ -409,6 +409,40 @@ impl ExperimentConfig {
     }
 }
 
+/// Canonical registry of `experiment` subcommand names. This is the
+/// single source of truth the CLI dispatches from (`experiment all`
+/// iterates it) and that `pallas-lint`'s `experiment-wiring` rule
+/// cross-checks against `main.rs` dispatch/validate arms and the
+/// README EXPERIMENTS table — adding a name here without wiring it
+/// everywhere fails the linter.
+pub const EXPERIMENT_NAMES: &[&str] = &[
+    "table9",
+    "table10",
+    "fig4",
+    "fig5",
+    "fig6",
+    "fig7",
+    "scenarios",
+    "preempt",
+    "service",
+    "churn",
+    "scale",
+    "model",
+];
+
+/// Validate a CLI experiment name against [`EXPERIMENT_NAMES`]
+/// (`all` is the meta-name that runs the whole registry).
+pub fn validate_experiment(name: &str) -> Result<(), String> {
+    if name == "all" || EXPERIMENT_NAMES.contains(&name) {
+        Ok(())
+    } else {
+        Err(format!(
+            "unknown experiment `{name}` (known: {}, all)",
+            EXPERIMENT_NAMES.join(", ")
+        ))
+    }
+}
+
 fn get_u32(v: &TomlValue, key: &str) -> Result<u32, String> {
     v.as_i64()
         .filter(|&i| i >= 0 && i <= u32::MAX as i64)
@@ -585,5 +619,22 @@ n_sweep = [4, 240]
         assert!((c.arrival_rho - 0.5).abs() < 1e-12);
         assert!(ExperimentConfig::from_toml("[experiment]\nscenario_n = 0").is_err());
         assert!(ExperimentConfig::from_toml("[experiment]\narrival_rho = 1.5").is_err());
+    }
+
+    #[test]
+    fn experiment_registry_validates_names() {
+        for name in EXPERIMENT_NAMES {
+            validate_experiment(name).unwrap();
+        }
+        validate_experiment("all").unwrap();
+        let err = validate_experiment("tabel9").unwrap_err();
+        assert!(err.contains("unknown experiment `tabel9`"));
+        assert!(err.contains("table9"), "error lists the known names");
+        // The registry is duplicate-free — a duplicate would make the
+        // `experiment all` loop run something twice.
+        let mut sorted: Vec<&str> = EXPERIMENT_NAMES.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), EXPERIMENT_NAMES.len());
     }
 }

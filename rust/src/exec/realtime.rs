@@ -161,7 +161,7 @@ impl RealtimeCoordinator {
         // Realtime runs are small: exact quantiles from the full sorted
         // wait list, condensed to the same bounded-sample contract the
         // simulator's streaming reservoir honors.
-        wait_list.sort_by(|a, b| a.partial_cmp(b).expect("finite waits"));
+        wait_list.sort_by(|a, b| a.total_cmp(b));
         let q = |p: f64| {
             if wait_list.is_empty() {
                 f64::NAN

@@ -172,7 +172,7 @@ impl Fig5Report {
                 }
             }
             let mut sorted = s.measured.clone();
-            sorted.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            sorted.sort_by(|a, b| a.0.total_cmp(&b.0));
             for w in sorted.windows(2) {
                 if w[1].1 < w[0].1 * 0.8 {
                     return Err(format!(

@@ -34,6 +34,7 @@ pub mod config;
 pub mod exec;
 pub mod features;
 pub mod harness;
+pub mod lint;
 pub mod model;
 pub mod multilevel;
 pub mod runtime;

@@ -1,0 +1,439 @@
+//! A minimal hand-rolled Rust lexer for `pallas-lint`.
+//!
+//! This is not a full Rust grammar — it is exactly enough lexing to
+//! make token-level rules sound: comments (line, nested block), string
+//! literals (cooked, raw with any `#` count, byte, raw-byte), char
+//! literals vs lifetimes, raw identifiers, and numeric literals are
+//! all recognized so that e.g. `partial_cmp` inside a string or a
+//! comment never reaches the rule engine as an identifier.
+//!
+//! The lexer is lossy on purpose: punctuation is emitted one char at a
+//! time (`::` is two `Punct(':')` tokens) and numeric payloads are
+//! discarded. Rules match identifier sequences, which survive intact.
+
+/// One source token, with comments and whitespace stripped.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tok {
+    /// 1-based line the token starts on.
+    pub line: u32,
+    /// Kind and payload.
+    pub kind: TokKind,
+}
+
+/// Token kinds. Only identifiers and string contents carry payloads —
+/// the rules never need anything else.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TokKind {
+    /// Identifier or keyword (raw identifiers lose their `r#` prefix).
+    Ident(String),
+    /// String-literal content (quotes stripped, escapes left raw).
+    Str(String),
+    /// Char or byte-char literal; the payload is irrelevant to rules.
+    CharLit,
+    /// A lifetime such as `'a` or `'static`.
+    Lifetime,
+    /// Numeric literal; the payload is irrelevant to rules.
+    Num,
+    /// A single punctuation character.
+    Punct(char),
+}
+
+/// A `//` line comment (doc comments included), kept separately from
+/// the token stream so the allow-directive parser can see them.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Comment {
+    /// 1-based line the comment starts on.
+    pub line: u32,
+    /// True when code tokens precede the comment on the same line
+    /// (a trailing comment annotates its own line, not the next one).
+    pub trailing: bool,
+    /// Text after the `//`, untrimmed.
+    pub text: String,
+}
+
+/// Result of lexing one file.
+#[derive(Clone, Debug, Default)]
+pub struct Lexed {
+    /// Code tokens in source order.
+    pub tokens: Vec<Tok>,
+    /// Line comments in source order.
+    pub comments: Vec<Comment>,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c == '_' || c.is_alphabetic()
+}
+
+fn is_ident_char(c: char) -> bool {
+    c == '_' || c.is_alphanumeric()
+}
+
+/// Consume a cooked (escaped) string body starting just after the
+/// opening quote. Returns `(content, index_after_closing_quote,
+/// newlines_consumed)`. Escapes are kept verbatim in the content.
+fn cooked_string(cs: &[char], mut j: usize) -> (String, usize, u32) {
+    let mut content = String::new();
+    let mut nl = 0u32;
+    while j < cs.len() {
+        match cs[j] {
+            '\\' => {
+                content.push('\\');
+                if let Some(&e) = cs.get(j + 1) {
+                    if e == '\n' {
+                        nl += 1;
+                    }
+                    content.push(e);
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            '"' => return (content, j + 1, nl),
+            '\n' => {
+                nl += 1;
+                content.push('\n');
+                j += 1;
+            }
+            ch => {
+                content.push(ch);
+                j += 1;
+            }
+        }
+    }
+    (content, j, nl)
+}
+
+/// Lex `src` into tokens and line comments.
+pub fn lex(src: &str) -> Lexed {
+    let cs: Vec<char> = src.chars().collect();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+    // Whether a code token has been emitted on the current line; used
+    // to classify comments as trailing.
+    let mut line_has_code = false;
+
+    macro_rules! emit {
+        ($kind:expr) => {{
+            out.tokens.push(Tok { line, kind: $kind });
+            line_has_code = true;
+        }};
+    }
+
+    while i < cs.len() {
+        let c = cs[i];
+        if c == '\n' {
+            line += 1;
+            line_has_code = false;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+
+        // Line comment (also catches /// and //! doc comments).
+        if c == '/' && cs.get(i + 1) == Some(&'/') {
+            let start = i + 2;
+            let mut j = start;
+            while j < cs.len() && cs[j] != '\n' {
+                j += 1;
+            }
+            out.comments.push(Comment {
+                line,
+                trailing: line_has_code,
+                text: cs[start..j].iter().collect(),
+            });
+            i = j; // the newline is handled on the next iteration
+            continue;
+        }
+
+        // Block comment, with nesting (Rust block comments nest).
+        if c == '/' && cs.get(i + 1) == Some(&'*') {
+            let mut depth = 1u32;
+            let mut j = i + 2;
+            while j < cs.len() && depth > 0 {
+                if cs[j] == '\n' {
+                    line += 1;
+                    line_has_code = false;
+                    j += 1;
+                } else if cs[j] == '/' && cs.get(j + 1) == Some(&'*') {
+                    depth += 1;
+                    j += 2;
+                } else if cs[j] == '*' && cs.get(j + 1) == Some(&'/') {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            i = j;
+            continue;
+        }
+
+        // Byte string b"..." (cooked).
+        if c == 'b' && cs.get(i + 1) == Some(&'"') {
+            let (content, j, nl) = cooked_string(&cs, i + 2);
+            emit!(TokKind::Str(content));
+            line += nl;
+            i = j;
+            continue;
+        }
+
+        // Byte char b'x'.
+        if c == 'b' && cs.get(i + 1) == Some(&'\'') {
+            let mut j = i + 2;
+            if cs.get(j) == Some(&'\\') {
+                j += 2; // skip the escaped char
+            }
+            while j < cs.len() && cs[j] != '\'' {
+                j += 1;
+            }
+            emit!(TokKind::CharLit);
+            i = (j + 1).min(cs.len());
+            continue;
+        }
+
+        // Raw strings r"…" / r#"…"# / br#"…"# and raw identifiers r#x.
+        let raw_start = (c == 'r' && matches!(cs.get(i + 1), Some('"') | Some('#')))
+            || (c == 'b'
+                && cs.get(i + 1) == Some(&'r')
+                && matches!(cs.get(i + 2), Some('"') | Some('#')));
+        if raw_start {
+            let hash_start = if c == 'b' { i + 2 } else { i + 1 };
+            let mut hashes = 0usize;
+            let mut j = hash_start;
+            while cs.get(j) == Some(&'#') {
+                hashes += 1;
+                j += 1;
+            }
+            if cs.get(j) == Some(&'"') {
+                // Raw string: body runs until `"` followed by `hashes` #s.
+                j += 1;
+                let body_start = j;
+                let mut nl = 0u32;
+                while j < cs.len() {
+                    if cs[j] == '"' {
+                        let mut k = 0usize;
+                        while k < hashes && cs.get(j + 1 + k) == Some(&'#') {
+                            k += 1;
+                        }
+                        if k == hashes {
+                            break;
+                        }
+                    } else if cs[j] == '\n' {
+                        nl += 1;
+                    }
+                    j += 1;
+                }
+                let content: String = cs[body_start..j.min(cs.len())].iter().collect();
+                emit!(TokKind::Str(content));
+                line += nl;
+                i = (j + 1 + hashes).min(cs.len());
+                continue;
+            }
+            if c == 'r' && hashes == 1 && cs.get(j).map(|&ch| is_ident_start(ch)) == Some(true) {
+                // Raw identifier r#ident — emit without the prefix.
+                let mut k = j;
+                while k < cs.len() && is_ident_char(cs[k]) {
+                    k += 1;
+                }
+                emit!(TokKind::Ident(cs[j..k].iter().collect()));
+                i = k;
+                continue;
+            }
+            // Fall through: a bare `r` / `b` ident followed by puncts.
+        }
+
+        // Char literal vs lifetime.
+        if c == '\'' {
+            match cs.get(i + 1).copied() {
+                Some('\\') => {
+                    // Escaped char literal: escapes never contain a quote.
+                    let mut j = i + 2;
+                    while j < cs.len() && cs[j] != '\'' {
+                        j += 1;
+                    }
+                    emit!(TokKind::CharLit);
+                    i = (j + 1).min(cs.len());
+                }
+                Some(ch) if is_ident_start(ch) => {
+                    if cs.get(i + 2) == Some(&'\'') {
+                        // 'a' — a one-char literal.
+                        emit!(TokKind::CharLit);
+                        i += 3;
+                    } else {
+                        // 'ident not followed by a quote — a lifetime.
+                        let mut j = i + 1;
+                        while j < cs.len() && is_ident_char(cs[j]) {
+                            j += 1;
+                        }
+                        emit!(TokKind::Lifetime);
+                        i = j;
+                    }
+                }
+                Some(_) => {
+                    // Non-identifier char literal such as '+' or '\n'.
+                    let mut j = i + 1;
+                    while j < cs.len() && cs[j] != '\'' {
+                        j += 1;
+                    }
+                    emit!(TokKind::CharLit);
+                    i = (j + 1).min(cs.len());
+                }
+                None => {
+                    i += 1;
+                }
+            }
+            continue;
+        }
+
+        // Cooked string.
+        if c == '"' {
+            let (content, j, nl) = cooked_string(&cs, i + 1);
+            emit!(TokKind::Str(content));
+            line += nl;
+            i = j;
+            continue;
+        }
+
+        // Number: digits, alphanumeric suffixes/exponents and `.` only
+        // when the dot is followed by a digit (so `1.0f64.to_bits()`
+        // does not swallow the method name).
+        if c.is_ascii_digit() {
+            let mut j = i;
+            while j < cs.len() {
+                let ch = cs[j];
+                if ch.is_ascii_alphanumeric() || ch == '_' {
+                    j += 1;
+                } else if ch == '.' && cs.get(j + 1).map(|d| d.is_ascii_digit()) == Some(true) {
+                    j += 1;
+                } else {
+                    break;
+                }
+            }
+            emit!(TokKind::Num);
+            i = j;
+            continue;
+        }
+
+        // Identifier / keyword.
+        if is_ident_start(c) {
+            let mut j = i;
+            while j < cs.len() && is_ident_char(cs[j]) {
+                j += 1;
+            }
+            emit!(TokKind::Ident(cs[i..j].iter().collect()));
+            i = j;
+            continue;
+        }
+
+        // Everything else: single-char punctuation.
+        emit!(TokKind::Punct(c));
+        i += 1;
+    }
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .tokens
+            .into_iter()
+            .filter_map(|t| match t.kind {
+                TokKind::Ident(s) => Some(s),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn strings_hide_identifiers() {
+        let src = r##"let x = "partial_cmp HashMap"; let y = r#"Instant::now"#;"##;
+        let ids = idents(src);
+        assert_eq!(ids, vec!["let", "x", "let", "y"]);
+        let strs: Vec<String> = lex(src)
+            .tokens
+            .into_iter()
+            .filter_map(|t| match t.kind {
+                TokKind::Str(s) => Some(s),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(strs, vec!["partial_cmp HashMap", "Instant::now"]);
+    }
+
+    #[test]
+    fn raw_string_hash_counts_respected() {
+        // The inner "# must not terminate a ##-delimited raw string.
+        let src = "let a = r##\"has \"# inside\"##; let b = 1;";
+        let ids = idents(src);
+        assert_eq!(ids, vec!["let", "a", "let", "b"]);
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "a /* outer /* inner partial_cmp */ still out */ b";
+        assert_eq!(idents(src), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn line_comments_captured_with_trailing_flag() {
+        let src = "// leading\nlet x = 1; // trailing\n";
+        let lx = lex(src);
+        assert_eq!(lx.comments.len(), 2);
+        assert!(!lx.comments[0].trailing);
+        assert_eq!(lx.comments[0].line, 1);
+        assert!(lx.comments[1].trailing);
+        assert_eq!(lx.comments[1].line, 2);
+        assert_eq!(lx.comments[1].text.trim(), "trailing");
+    }
+
+    #[test]
+    fn char_literal_vs_lifetime() {
+        let src = "let c = 'x'; fn f<'a>(s: &'a str, t: &'static str) -> char { '\\n' }";
+        let lx = lex(src);
+        let chars = lx
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokKind::CharLit)
+            .count();
+        let lifetimes = lx
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokKind::Lifetime)
+            .count();
+        assert_eq!(chars, 2, "'x' and '\\n'");
+        assert_eq!(lifetimes, 3, "'a twice and 'static");
+    }
+
+    #[test]
+    fn numbers_do_not_swallow_method_calls() {
+        let src = "let b = 1.0f64.to_bits(); let r = 0..5;";
+        let ids = idents(src);
+        assert!(ids.contains(&"to_bits".to_string()));
+    }
+
+    #[test]
+    fn line_numbers_survive_multiline_strings() {
+        let src = "let a = \"one\ntwo\";\nlet b = 1;";
+        let lx = lex(src);
+        let b_line = lx
+            .tokens
+            .iter()
+            .find(|t| t.kind == TokKind::Ident("b".into()))
+            .map(|t| t.line);
+        assert_eq!(b_line, Some(3));
+    }
+
+    #[test]
+    fn byte_literals() {
+        let src = "let s = b\"HashSet\"; let c = b'x';";
+        assert_eq!(idents(src), vec!["let", "s", "let", "c"]);
+    }
+}

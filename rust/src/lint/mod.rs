@@ -1,0 +1,574 @@
+//! `pallas-lint` — a zero-dependency static-analysis pass that enforces
+//! the repo's bit-identity determinism contract.
+//!
+//! Every result this simulator reports rests on one promise: runs are
+//! bit-identical across `--jobs` worker counts, warm-vs-fresh scratch,
+//! and shard counts. The differential tests catch violations *after*
+//! they are written; this linter rejects the hazard patterns at review
+//! time — nondeterministic hash iteration, NaN-unsafe float ordering,
+//! wall-clock reads in simulated paths, OS entropy, ad-hoc threading —
+//! plus cross-file structural drift (unwired experiments, missing
+//! fault hooks, dangling golden snapshots).
+//!
+//! Suppressions are spelled `// pallas: allow(rule-name) — <reason>`
+//! on (or directly above) the offending line. The reason is mandatory,
+//! and an allow that no longer suppresses anything is itself an error,
+//! so annotations cannot rot.
+//!
+//! Entry points: [`lint_tree`] walks a crate root (`src/**` plus
+//! top-level `tests/*.rs`); [`lint_source`] lints one in-memory file
+//! under a caller-chosen relative path (this is what the fixture tests
+//! use). The `pallas-lint` binary and `tests/lint_clean.rs` both call
+//! [`lint_tree`].
+
+pub mod lexer;
+pub mod rules;
+
+use std::collections::BTreeSet;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+pub use lexer::{lex, Comment, Lexed, Tok, TokKind};
+pub use rules::{is_allowable, RuleInfo, RULES};
+
+/// One finding, pointing at a `file:line`.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Diagnostic {
+    /// Path relative to the crate root (forward slashes).
+    pub file: String,
+    /// 1-based line.
+    pub line: u32,
+    /// Rule name (one of the [`rules`] constants).
+    pub rule: &'static str,
+    /// Human-readable explanation.
+    pub msg: String,
+}
+
+impl Diagnostic {
+    /// Build a diagnostic for `file:line` under `rule`.
+    pub fn new(file: &str, line: u32, rule: &'static str, msg: String) -> Self {
+        Diagnostic {
+            file: file.to_string(),
+            line,
+            rule,
+            msg,
+        }
+    }
+}
+
+/// Result of linting a single source string via [`lint_source`].
+#[derive(Debug)]
+pub struct FileReport {
+    /// Post-suppression diagnostics, including allow-machinery errors.
+    pub diagnostics: Vec<Diagnostic>,
+    /// Pre-suppression match counts per suppressible rule.
+    pub rule_hits: Vec<(&'static str, usize)>,
+    /// Diagnostics silenced by well-formed allows.
+    pub suppressed: usize,
+}
+
+/// Result of linting a whole crate via [`lint_tree`].
+#[derive(Debug)]
+pub struct LintReport {
+    /// Post-suppression diagnostics, sorted by `(file, line, rule)`.
+    pub diagnostics: Vec<Diagnostic>,
+    /// Number of `.rs` files scanned.
+    pub files_scanned: usize,
+    /// Diagnostics silenced by well-formed allows.
+    pub suppressed: usize,
+    /// Pre-suppression match counts per suppressible rule, in
+    /// [`RULES`] order (zeros included, so the shape is stable).
+    pub rule_hits: Vec<(&'static str, usize)>,
+}
+
+impl LintReport {
+    /// True when the tree carries no diagnostics at all.
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// Human-readable rendering: one `file:line: [rule] msg` per
+    /// diagnostic plus a summary line.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for d in &self.diagnostics {
+            s.push_str(&format!("{}:{}: [{}] {}\n", d.file, d.line, d.rule, d.msg));
+        }
+        if self.is_clean() {
+            s.push_str(&format!(
+                "pallas-lint: clean — {} files scanned, {} suppression(s) honoured\n",
+                self.files_scanned,
+                self.suppressed
+            ));
+        } else {
+            s.push_str(&format!(
+                "pallas-lint: {} diagnostic(s) across {} files ({} suppressed)\n",
+                self.diagnostics.len(),
+                self.files_scanned,
+                self.suppressed
+            ));
+        }
+        s
+    }
+
+    /// Machine-readable rendering. `wall_ms` is the caller-measured
+    /// lint wall time, when available.
+    pub fn to_json(&self, wall_ms: Option<f64>) -> String {
+        let mut s = String::from("{\n");
+        s.push_str(&format!("  \"clean\": {},\n", self.is_clean()));
+        s.push_str(&format!("  \"files_scanned\": {},\n", self.files_scanned));
+        s.push_str(&format!("  \"suppressed\": {},\n", self.suppressed));
+        if let Some(ms) = wall_ms {
+            s.push_str(&format!("  \"lint_wall_ms\": {ms:.2},\n"));
+        }
+        let hits: Vec<String> = self
+            .rule_hits
+            .iter()
+            .map(|(name, n)| format!("\"{name}\": {n}"))
+            .collect();
+        s.push_str(&format!("  \"rule_hits\": {{{}}},\n", hits.join(", ")));
+        let diags: Vec<String> = self
+            .diagnostics
+            .iter()
+            .map(|d| {
+                format!(
+                    "    {{\"file\": \"{}\", \"line\": {}, \"rule\": \"{}\", \"message\": \"{}\"}}",
+                    json_escape(&d.file),
+                    d.line,
+                    d.rule,
+                    json_escape(&d.msg)
+                )
+            })
+            .collect();
+        if diags.is_empty() {
+            s.push_str("  \"diagnostics\": []\n");
+        } else {
+            s.push_str(&format!("  \"diagnostics\": [\n{}\n  ]\n", diags.join(",\n")));
+        }
+        s.push('}');
+        s
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// A parsed, well-formed `pallas: allow(rule) — reason` directive.
+struct Allow {
+    rule: String,
+    /// Line whose diagnostics this allow suppresses.
+    target_line: u32,
+    /// Line the comment itself sits on (anchor for stale reports).
+    comment_line: u32,
+    used: bool,
+}
+
+/// Parse every `pallas:` directive in a file's comments. Malformed
+/// directives (unknown rule, missing reason, unparseable) become meta
+/// diagnostics and do not suppress anything.
+fn parse_allows(rel: &str, lexed: &Lexed) -> (Vec<Allow>, Vec<Diagnostic>) {
+    let mut allows = Vec::new();
+    let mut meta = Vec::new();
+    for c in &lexed.comments {
+        // Doc comments reach us with a leading `/` or `!` still attached.
+        let text = c.text.trim_start_matches(['/', '!']).trim();
+        let rest = match text.strip_prefix("pallas:") {
+            Some(r) => r.trim(),
+            None => continue,
+        };
+        let parsed = rest
+            .strip_prefix("allow")
+            .map(str::trim_start)
+            .and_then(|r| r.strip_prefix('('))
+            .and_then(|r| r.split_once(')'));
+        let (rule_raw, tail) = match parsed {
+            Some(p) => p,
+            None => {
+                meta.push(Diagnostic::new(
+                    rel,
+                    c.line,
+                    rules::RULE_UNKNOWN_RULE,
+                    format!(
+                        "unrecognized pallas directive `{rest}` — the grammar is \
+                         `pallas: allow(<rule>) — <reason>`"
+                    ),
+                ));
+                continue;
+            }
+        };
+        let rule = rule_raw.trim().to_string();
+        if !rules::is_allowable(&rule) {
+            let known: Vec<&str> = RULES.iter().map(|r| r.name).collect();
+            meta.push(Diagnostic::new(
+                rel,
+                c.line,
+                rules::RULE_UNKNOWN_RULE,
+                format!(
+                    "`allow({rule})` names no suppressible rule (known: {})",
+                    known.join(", ")
+                ),
+            ));
+            continue;
+        }
+        let reason = tail.trim_start().trim_start_matches(['—', '–', '-', ':']).trim();
+        if reason.is_empty() {
+            meta.push(Diagnostic::new(
+                rel,
+                c.line,
+                rules::RULE_ALLOW_MISSING_REASON,
+                format!(
+                    "`allow({rule})` carries no reason — write \
+                     `pallas: allow({rule}) — <why this is safe here>`"
+                ),
+            ));
+            continue;
+        }
+        // A trailing comment annotates its own line; a leading comment
+        // annotates the next line that has code on it.
+        let target_line = if c.trailing {
+            c.line
+        } else {
+            lexed
+                .tokens
+                .iter()
+                .find(|t| t.line > c.line)
+                .map(|t| t.line)
+                .unwrap_or(c.line)
+        };
+        allows.push(Allow {
+            rule,
+            target_line,
+            comment_line: c.line,
+            used: false,
+        });
+    }
+    (allows, meta)
+}
+
+/// Apply allows to raw diagnostics; unused allows become stale-allow
+/// errors. Returns the surviving diagnostics (raw + meta) and the
+/// suppression count.
+fn apply_allows(
+    rel: &str,
+    raw: Vec<Diagnostic>,
+    mut allows: Vec<Allow>,
+    meta: Vec<Diagnostic>,
+) -> (Vec<Diagnostic>, usize) {
+    let mut kept = Vec::new();
+    let mut suppressed = 0usize;
+    for d in raw {
+        let hit = allows
+            .iter_mut()
+            .find(|a| a.rule == d.rule && a.target_line == d.line);
+        match hit {
+            Some(a) => {
+                a.used = true;
+                suppressed += 1;
+            }
+            None => kept.push(d),
+        }
+    }
+    for a in &allows {
+        if !a.used {
+            kept.push(Diagnostic::new(
+                rel,
+                a.comment_line,
+                rules::RULE_STALE_ALLOW,
+                format!(
+                    "stale `pallas: allow({})` — nothing on line {} trips that rule \
+                     any more; remove the annotation",
+                    a.rule, a.target_line
+                ),
+            ));
+        }
+    }
+    kept.extend(meta);
+    (kept, suppressed)
+}
+
+fn zero_hits() -> Vec<(&'static str, usize)> {
+    RULES.iter().map(|r| (r.name, 0usize)).collect()
+}
+
+fn count_hits(counts: &mut [(&'static str, usize)], diags: &[Diagnostic]) {
+    for d in diags {
+        if let Some(e) = counts.iter_mut().find(|(n, _)| *n == d.rule) {
+            e.1 += 1;
+        }
+    }
+}
+
+/// Lint one in-memory source file as if it lived at `rel` (a
+/// `rust/`-relative forward-slash path such as `src/sim/engine.rs`).
+/// Cross-file rules (golden snapshots, experiment wiring) need a real
+/// tree and only run under [`lint_tree`].
+pub fn lint_source(rel: &str, source: &str) -> FileReport {
+    let lexed = lexer::lex(source);
+    let raw = rules::token_rules(rel, &lexed);
+    let (allows, meta) = parse_allows(rel, &lexed);
+    let mut rule_hits = zero_hits();
+    count_hits(&mut rule_hits, &raw);
+    let (mut diagnostics, suppressed) = apply_allows(rel, raw, allows, meta);
+    diagnostics.sort();
+    FileReport {
+        diagnostics,
+        rule_hits,
+        suppressed,
+    }
+}
+
+struct FileCtx {
+    rel: String,
+    lexed: Lexed,
+    raw: Vec<Diagnostic>,
+    allows: Vec<Allow>,
+    meta: Vec<Diagnostic>,
+}
+
+fn walk_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let rd = fs::read_dir(dir).map_err(|e| format!("read {}: {e}", dir.display()))?;
+    let mut entries: Vec<PathBuf> = rd.filter_map(|e| e.ok().map(|e| e.path())).collect();
+    // Sorted walk, so diagnostics and timings are order-stable.
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk_rs(&p, out)?;
+        } else if p.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+fn rel_of(root: &Path, p: &Path) -> String {
+    p.strip_prefix(root)
+        .unwrap_or(p)
+        .to_string_lossy()
+        .replace('\\', "/")
+}
+
+/// The `golden-exists` rule: every snapshot a test references must be
+/// on disk (unless the test self-seeds via `fn assert_snapshot`, the
+/// repo's bootstrap convention), and every file under `tests/golden/`
+/// must be referenced by some test (orphans are renames or typos).
+fn golden_rule(root: &Path, ctxs: &mut [FileCtx], extra: &mut Vec<Diagnostic>) {
+    let mut referenced: BTreeSet<String> = BTreeSet::new();
+    for ctx in ctxs.iter_mut() {
+        if !ctx.rel.starts_with("tests/") {
+            continue;
+        }
+        let refs = rules::golden_refs(&ctx.lexed);
+        if refs.is_empty() {
+            continue;
+        }
+        let self_seeding = rules::defines_assert_snapshot(&ctx.lexed);
+        for (fname, line) in refs {
+            referenced.insert(fname.clone());
+            let on_disk = root.join("tests/golden").join(&fname).is_file();
+            if !on_disk && !self_seeding {
+                ctx.raw.push(Diagnostic::new(
+                    &ctx.rel,
+                    line,
+                    rules::RULE_GOLDEN_EXISTS,
+                    format!(
+                        "referenced snapshot tests/golden/{fname} is missing and this \
+                         test has no self-seeding `assert_snapshot` helper"
+                    ),
+                ));
+            }
+        }
+    }
+    let gdir = root.join("tests/golden");
+    if gdir.is_dir() {
+        let mut names: Vec<String> = match fs::read_dir(&gdir) {
+            Ok(rd) => rd
+                .filter_map(|e| e.ok())
+                .filter(|e| e.path().is_file())
+                .map(|e| e.file_name().to_string_lossy().into_owned())
+                .collect(),
+            Err(_) => Vec::new(),
+        };
+        names.sort();
+        for n in names {
+            if !referenced.contains(&n) {
+                extra.push(Diagnostic::new(
+                    &format!("tests/golden/{n}"),
+                    1,
+                    rules::RULE_GOLDEN_EXISTS,
+                    "snapshot is not referenced by any test — stale file or typo'd \
+                     reference"
+                        .to_string(),
+                ));
+            }
+        }
+    }
+}
+
+/// The `experiment-wiring` rule: every name in the
+/// `config::EXPERIMENT_NAMES` registry must have a CLI dispatch arm and
+/// a `validate` shape-check in `src/main.rs`, and a row in the README
+/// `## EXPERIMENTS` table. Skipped silently when the tree has no
+/// `src/config/schema.rs` + `src/main.rs` pair (synthetic test roots).
+fn wiring_rule(root: &Path, ctxs: &[FileCtx], extra: &mut Vec<Diagnostic>) {
+    let schema = ctxs.iter().find(|c| c.rel == "src/config/schema.rs");
+    let main = ctxs.iter().find(|c| c.rel == "src/main.rs");
+    let (schema, main) = match (schema, main) {
+        (Some(s), Some(m)) => (s, m),
+        _ => return,
+    };
+    let (names, _reg_line) = match rules::experiment_names(&schema.lexed) {
+        Some(v) => v,
+        None => {
+            extra.push(Diagnostic::new(
+                "src/config/schema.rs",
+                1,
+                rules::RULE_EXPERIMENT_WIRING,
+                "no EXPERIMENT_NAMES registry found — the wiring rule cross-checks \
+                 CLI, validate, and README against it"
+                    .to_string(),
+            ));
+            return;
+        }
+    };
+    let lits = rules::string_literals(&main.lexed);
+    let readme = root
+        .parent()
+        .map(|p| p.join("README.md"))
+        .and_then(|p| fs::read_to_string(p).ok());
+    let section = readme.as_deref().and_then(experiments_section);
+    for name in &names {
+        if !lits.contains(&name.as_str()) {
+            extra.push(Diagnostic::new(
+                "src/main.rs",
+                1,
+                rules::RULE_EXPERIMENT_WIRING,
+                format!("experiment `{name}` has no CLI dispatch arm in main.rs"),
+            ));
+        }
+        let shapes = format!("{name} shapes");
+        if !lits.iter().any(|l| l.contains(shapes.as_str())) {
+            extra.push(Diagnostic::new(
+                "src/main.rs",
+                1,
+                rules::RULE_EXPERIMENT_WIRING,
+                format!(
+                    "experiment `{name}` is not covered by `validate` (no \
+                     \"{name} shapes\" check in main.rs)"
+                ),
+            ));
+        }
+        if let Some((sec_line, sec)) = &section {
+            if !sec.contains(&format!("`{name}`")) {
+                extra.push(Diagnostic::new(
+                    "README.md",
+                    *sec_line,
+                    rules::RULE_EXPERIMENT_WIRING,
+                    format!("experiment `{name}` has no row in the README EXPERIMENTS table"),
+                ));
+            }
+        }
+    }
+    if section.is_none() {
+        extra.push(Diagnostic::new(
+            "README.md",
+            1,
+            rules::RULE_EXPERIMENT_WIRING,
+            "README has no `## EXPERIMENTS` section to cross-check experiment names \
+             against"
+                .to_string(),
+        ));
+    }
+}
+
+/// Body of the README `## EXPERIMENTS` section (up to the next `## `
+/// heading) and the 1-based line of its heading.
+fn experiments_section(readme: &str) -> Option<(u32, String)> {
+    let mut body = String::new();
+    let mut in_sec = false;
+    let mut sec_line = 0u32;
+    for (i, l) in readme.lines().enumerate() {
+        if l.starts_with("## ") {
+            if in_sec {
+                break;
+            }
+            if l.contains("EXPERIMENTS") {
+                in_sec = true;
+                sec_line = i as u32 + 1;
+            }
+            continue;
+        }
+        if in_sec {
+            body.push_str(l);
+            body.push('\n');
+        }
+    }
+    if in_sec {
+        Some((sec_line, body))
+    } else {
+        None
+    }
+}
+
+/// Lint a crate rooted at `root` (the directory holding `src/`): all of
+/// `src/**/*.rs` recursively plus top-level `tests/*.rs`, then the
+/// cross-file rules. Returns `Err` only for I/O-level failures (missing
+/// `src/`, unreadable file) — findings are diagnostics, not errors.
+pub fn lint_tree(root: &Path) -> Result<LintReport, String> {
+    let src_dir = root.join("src");
+    if !src_dir.is_dir() {
+        return Err(format!("no src/ directory under {}", root.display()));
+    }
+    let mut files = Vec::new();
+    walk_rs(&src_dir, &mut files)?;
+    let tests_dir = root.join("tests");
+    if tests_dir.is_dir() {
+        let rd = fs::read_dir(&tests_dir).map_err(|e| format!("read tests/: {e}"))?;
+        let mut tests: Vec<PathBuf> = rd
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.is_file() && p.extension().and_then(|e| e.to_str()) == Some("rs"))
+            .collect();
+        tests.sort();
+        files.extend(tests);
+    }
+
+    let mut ctxs: Vec<FileCtx> = Vec::with_capacity(files.len());
+    for p in &files {
+        let rel = rel_of(root, p);
+        let source = fs::read_to_string(p).map_err(|e| format!("read {}: {e}", p.display()))?;
+        let lexed = lexer::lex(&source);
+        let raw = rules::token_rules(&rel, &lexed);
+        let (allows, meta) = parse_allows(&rel, &lexed);
+        ctxs.push(FileCtx {
+            rel,
+            lexed,
+            raw,
+            allows,
+            meta,
+        });
+    }
+
+    let mut extra: Vec<Diagnostic> = Vec::new();
+    golden_rule(root, &mut ctxs, &mut extra);
+    wiring_rule(root, &ctxs, &mut extra);
+
+    let mut rule_hits = zero_hits();
+    let mut diagnostics = Vec::new();
+    let mut suppressed = 0usize;
+    for ctx in ctxs {
+        count_hits(&mut rule_hits, &ctx.raw);
+        let (d, s) = apply_allows(&ctx.rel, ctx.raw, ctx.allows, ctx.meta);
+        diagnostics.extend(d);
+        suppressed += s;
+    }
+    count_hits(&mut rule_hits, &extra);
+    diagnostics.extend(extra);
+    diagnostics.sort();
+
+    Ok(LintReport {
+        diagnostics,
+        files_scanned: files.len(),
+        suppressed,
+        rule_hits,
+    })
+}

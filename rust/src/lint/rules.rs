@@ -1,0 +1,450 @@
+//! The determinism rules `pallas-lint` enforces.
+//!
+//! Per-file token rules live in [`token_rules`]; helpers for the
+//! cross-file rules (golden snapshots, experiment wiring) extract the
+//! facts each file contributes and leave the joining to `lint_tree`.
+//!
+//! Scopes are path-based on the `rust/`-relative forward-slash path
+//! (`src/sim/engine.rs`), so the same engine runs against fixture
+//! sources with synthetic paths in tests.
+
+use super::lexer::{Lexed, Tok, TokKind};
+use super::Diagnostic;
+
+/// `HashMap`/`HashSet` inside a deterministic module.
+pub const RULE_HASH_ITERATION: &str = "hash-iteration";
+/// `partial_cmp` call (NaN-incomparable float ordering).
+pub const RULE_FLOAT_ORD: &str = "float-ord";
+/// `Instant`/`SystemTime` outside the realtime executor / timing harness.
+pub const RULE_WALL_CLOCK: &str = "wall-clock";
+/// OS entropy (`RandomState`, `thread_rng`, …) anywhere in `src/`.
+pub const RULE_OS_ENTROPY: &str = "os-entropy";
+/// `thread::{spawn,scope,Builder}` outside the deterministic-merge modules.
+pub const RULE_THREAD_SPAWN: &str = "thread-spawn";
+/// A `SchedPolicy` impl that does not state its fault behaviour.
+pub const RULE_FAULT_HOOKS: &str = "fault-hooks";
+/// An experiment name missing from CLI dispatch, `validate`, or README.
+pub const RULE_EXPERIMENT_WIRING: &str = "experiment-wiring";
+/// A golden snapshot referenced by tests but absent (or orphaned) on disk.
+pub const RULE_GOLDEN_EXISTS: &str = "golden-exists";
+
+/// Meta: an allow that suppressed nothing.
+pub const RULE_STALE_ALLOW: &str = "stale-allow";
+/// Meta: an allow without a reason clause.
+pub const RULE_ALLOW_MISSING_REASON: &str = "allow-missing-reason";
+/// Meta: an allow naming no known rule, or an unparseable directive.
+pub const RULE_UNKNOWN_RULE: &str = "unknown-rule";
+
+/// Static description of one suppressible rule, for `--json` consumers
+/// and the README table.
+pub struct RuleInfo {
+    /// Rule name as used in diagnostics and `pallas: allow(...)`.
+    pub name: &'static str,
+    /// Path scope the rule applies to.
+    pub scope: &'static str,
+    /// Why the pattern breaks the bit-identity contract.
+    pub rationale: &'static str,
+}
+
+/// All suppressible rules. The meta rules ([`RULE_STALE_ALLOW`],
+/// [`RULE_ALLOW_MISSING_REASON`], [`RULE_UNKNOWN_RULE`]) are deliberately
+/// not in this table: an allow cannot suppress the allow machinery.
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        name: RULE_HASH_ITERATION,
+        scope: "src/{sim,sched,cluster,multilevel,workload}/",
+        rationale: "HashMap/HashSet iteration order is seeded per process; \
+                    simulated outcomes must not depend on it — use BTreeMap/BTreeSet \
+                    or a sorted drain",
+    },
+    RuleInfo {
+        name: RULE_FLOAT_ORD,
+        scope: "src/ (definitions named partial_cmp are exempt)",
+        rationale: "partial_cmp returns None for NaN, so sorts panic or silently \
+                    misorder — use total_cmp (the PR 1 MultiServer::serve bug class)",
+    },
+    RuleInfo {
+        name: RULE_WALL_CLOCK,
+        scope: "src/ except exec/realtime.rs and harness/scale.rs",
+        rationale: "simulated paths must be pure in virtual time; wall-clock reads \
+                    make runs non-replayable",
+    },
+    RuleInfo {
+        name: RULE_OS_ENTROPY,
+        scope: "src/ except exec/realtime.rs and harness/scale.rs",
+        rationale: "all randomness must flow from the experiment seed so any run \
+                    can be replayed bit-for-bit",
+    },
+    RuleInfo {
+        name: RULE_THREAD_SPAWN,
+        scope: "src/ except harness/parallel.rs, sched/sharded.rs, exec/",
+        rationale: "ad-hoc threading reduces in nondeterministic order and breaks \
+                    --jobs bit-identity; use the deterministic-merge helpers",
+    },
+    RuleInfo {
+        name: RULE_FAULT_HOOKS,
+        scope: "src/ SchedPolicy impls outside #[cfg(test)] modules",
+        rationale: "every policy must state its on_node_{fail,drain,recover} \
+                    behaviour, if only as a documented no-op, so churn semantics \
+                    are a decision rather than an accident",
+    },
+    RuleInfo {
+        name: RULE_EXPERIMENT_WIRING,
+        scope: "config::EXPERIMENT_NAMES vs src/main.rs and README EXPERIMENTS",
+        rationale: "an experiment that parses but is missing a CLI arm, a validate \
+                    shape-check, or a README row is dead weight or a typo",
+    },
+    RuleInfo {
+        name: RULE_GOLDEN_EXISTS,
+        scope: "tests/*.rs references into tests/golden/",
+        rationale: "a renamed or typo'd snapshot reference silently un-pins the \
+                    behaviour the golden was guarding",
+    },
+];
+
+/// True when `rule` may appear in a `pallas: allow(...)` directive.
+pub fn is_allowable(rule: &str) -> bool {
+    RULES.iter().any(|r| r.name == rule)
+}
+
+/// Hooks every non-test `SchedPolicy` impl must define.
+const REQUIRED_HOOKS: &[&str] = &["on_node_fail", "on_node_drain", "on_node_recover"];
+
+fn deterministic_scope(rel: &str) -> bool {
+    const DIRS: &[&str] = &[
+        "src/sim/",
+        "src/sched/",
+        "src/cluster/",
+        "src/multilevel/",
+        "src/workload/",
+    ];
+    DIRS.iter().any(|d| rel.starts_with(d))
+}
+
+fn clock_exempt(rel: &str) -> bool {
+    // The realtime executor is *about* wall time; the scale harness
+    // measures wall-time-vs-n exponents. Everything else is simulated.
+    rel == "src/exec/realtime.rs" || rel == "src/harness/scale.rs"
+}
+
+fn thread_exempt(rel: &str) -> bool {
+    // parallel.rs and sharded.rs own the deterministic merges; the
+    // exec backends run real work on real threads by design.
+    rel == "src/harness/parallel.rs"
+        || rel == "src/sched/sharded.rs"
+        || rel.starts_with("src/exec/")
+}
+
+fn ident(t: &Tok) -> Option<&str> {
+    match &t.kind {
+        TokKind::Ident(s) => Some(s.as_str()),
+        _ => None,
+    }
+}
+
+fn is_punct(t: Option<&Tok>, c: char) -> bool {
+    matches!(t.map(|t| &t.kind), Some(TokKind::Punct(p)) if *p == c)
+}
+
+/// Run every per-file token rule against one lexed file. `rel` is the
+/// `rust/`-relative path with forward slashes; files outside `src/`
+/// produce no token diagnostics (tests are checked by the cross-file
+/// rules only).
+pub fn token_rules(rel: &str, lexed: &Lexed) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    if !rel.starts_with("src/") {
+        return out;
+    }
+    let toks = &lexed.tokens;
+    for (idx, t) in toks.iter().enumerate() {
+        let name = match ident(t) {
+            Some(s) => s,
+            None => continue,
+        };
+        match name {
+            "HashMap" | "HashSet" if deterministic_scope(rel) => {
+                out.push(Diagnostic::new(
+                    rel,
+                    t.line,
+                    RULE_HASH_ITERATION,
+                    format!(
+                        "`{name}` in a deterministic module: iteration order is seeded \
+                         per process — use `BTreeMap`/`BTreeSet` or a sorted drain"
+                    ),
+                ));
+            }
+            "partial_cmp" => {
+                let is_definition = idx > 0 && ident(&toks[idx - 1]) == Some("fn");
+                if !is_definition {
+                    out.push(Diagnostic::new(
+                        rel,
+                        t.line,
+                        RULE_FLOAT_ORD,
+                        "`partial_cmp` float ordering: NaN is incomparable, so sorts \
+                         panic or misorder — use `total_cmp`"
+                            .to_string(),
+                    ));
+                }
+            }
+            "Instant" | "SystemTime" if !clock_exempt(rel) => {
+                out.push(Diagnostic::new(
+                    rel,
+                    t.line,
+                    RULE_WALL_CLOCK,
+                    format!(
+                        "`{name}` outside the realtime executor / timing harness: \
+                         simulated paths must be pure in virtual time"
+                    ),
+                ));
+            }
+            "RandomState" | "from_entropy" | "getrandom" | "thread_rng" | "OsRng"
+                if !clock_exempt(rel) =>
+            {
+                out.push(Diagnostic::new(
+                    rel,
+                    t.line,
+                    RULE_OS_ENTROPY,
+                    format!(
+                        "`{name}` draws OS entropy: seeds must come from the \
+                         experiment config so runs replay bit-for-bit"
+                    ),
+                ));
+            }
+            "thread" if !thread_exempt(rel) => {
+                let method = if is_punct(toks.get(idx + 1), ':') && is_punct(toks.get(idx + 2), ':')
+                {
+                    toks.get(idx + 3).and_then(ident)
+                } else {
+                    None
+                };
+                if let Some(m @ ("spawn" | "scope" | "Builder")) = method {
+                    out.push(Diagnostic::new(
+                        rel,
+                        t.line,
+                        RULE_THREAD_SPAWN,
+                        format!(
+                            "`thread::{m}` outside harness/parallel.rs and \
+                             sched/sharded.rs: ad-hoc threading breaks --jobs \
+                             bit-identity — use the deterministic-merge helpers"
+                        ),
+                    ));
+                }
+            }
+            _ => {}
+        }
+    }
+    out.extend(fault_hook_rule(rel, lexed));
+    out
+}
+
+/// Index of the `}` matching the `{` at `open`, or `toks.len()` if the
+/// file is truncated.
+fn match_brace(toks: &[Tok], open: usize) -> usize {
+    let mut depth = 0i32;
+    let mut j = open;
+    while j < toks.len() {
+        match toks[j].kind {
+            TokKind::Punct('{') => depth += 1,
+            TokKind::Punct('}') => {
+                depth -= 1;
+                if depth == 0 {
+                    return j;
+                }
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    toks.len()
+}
+
+/// Token-index ranges of `mod tests { .. }` / `#[cfg(test)] mod x { .. }`
+/// blocks — policy impls inside them are harness scaffolding, not
+/// production policies.
+fn test_mod_ranges(toks: &[Tok]) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i + 2 < toks.len() {
+        if ident(&toks[i]) == Some("mod") {
+            let named = matches!(&toks[i + 1].kind, TokKind::Ident(_));
+            if named && matches!(toks[i + 2].kind, TokKind::Punct('{')) {
+                let test_named = ident(&toks[i + 1]) == Some("tests");
+                let cfg_test = i >= 7 && is_cfg_test(&toks[i - 7..i]);
+                if test_named || cfg_test {
+                    let end = match_brace(toks, i + 2);
+                    out.push((i, end));
+                    i = end;
+                    continue;
+                }
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+fn is_cfg_test(w: &[Tok]) -> bool {
+    w.len() == 7
+        && matches!(w[0].kind, TokKind::Punct('#'))
+        && matches!(w[1].kind, TokKind::Punct('['))
+        && ident(&w[2]) == Some("cfg")
+        && matches!(w[3].kind, TokKind::Punct('('))
+        && ident(&w[4]) == Some("test")
+        && matches!(w[5].kind, TokKind::Punct(')'))
+        && matches!(w[6].kind, TokKind::Punct(']'))
+}
+
+/// Enforce that every `impl .. SchedPolicy for ..` outside test modules
+/// defines all of [`REQUIRED_HOOKS`].
+fn fault_hook_rule(rel: &str, lexed: &Lexed) -> Vec<Diagnostic> {
+    let toks = &lexed.tokens;
+    let skip = test_mod_ranges(toks);
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if ident(&toks[i]) != Some("impl") || skip.iter().any(|&(a, b)| i >= a && i <= b) {
+            i += 1;
+            continue;
+        }
+        let impl_line = toks[i].line;
+        let mut j = i + 1;
+        // Skip `<..>` generic params; a `>` preceded by `-` is the arrow
+        // of an `Fn() -> T` bound, not a closer.
+        if matches!(toks.get(j).map(|t| &t.kind), Some(TokKind::Punct('<'))) {
+            let mut depth = 0i32;
+            while j < toks.len() {
+                match toks[j].kind {
+                    TokKind::Punct('<') => depth += 1,
+                    TokKind::Punct('>') => {
+                        let arrow = matches!(toks[j - 1].kind, TokKind::Punct('-'));
+                        if !arrow {
+                            depth -= 1;
+                            if depth == 0 {
+                                j += 1;
+                                break;
+                            }
+                        }
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+        }
+        let header_start = j;
+        while j < toks.len() && !matches!(toks[j].kind, TokKind::Punct('{') | TokKind::Punct(';')) {
+            j += 1;
+        }
+        let header = &toks[header_start..j.min(toks.len())];
+        let is_policy_impl = header
+            .windows(2)
+            .any(|w| ident(&w[0]) == Some("SchedPolicy") && ident(&w[1]) == Some("for"));
+        if !is_policy_impl || j >= toks.len() || !matches!(toks[j].kind, TokKind::Punct('{')) {
+            i += 1;
+            continue;
+        }
+        let end = match_brace(toks, j);
+        let mut fns: Vec<&str> = Vec::new();
+        let mut depth = 0i32;
+        for k in j..=end.min(toks.len() - 1) {
+            match &toks[k].kind {
+                TokKind::Punct('{') => depth += 1,
+                TokKind::Punct('}') => depth -= 1,
+                TokKind::Ident(s) if s == "fn" && depth == 1 => {
+                    if let Some(name) = toks.get(k + 1).and_then(ident) {
+                        fns.push(name);
+                    }
+                }
+                _ => {}
+            }
+        }
+        let missing: Vec<&str> = REQUIRED_HOOKS
+            .iter()
+            .copied()
+            .filter(|h| !fns.contains(h))
+            .collect();
+        if !missing.is_empty() {
+            out.push(Diagnostic::new(
+                rel,
+                impl_line,
+                RULE_FAULT_HOOKS,
+                format!(
+                    "`SchedPolicy` impl is missing fault hooks: {} — every policy \
+                     must state its fail/drain/recover behaviour (an explicit no-op \
+                     with a comment counts)",
+                    missing.join(", ")
+                ),
+            ));
+        }
+        i = end + 1;
+    }
+    out
+}
+
+/// Golden-snapshot filenames a test file references via the repo's
+/// `.join("golden").join("<name>")` convention, with the line of each.
+pub fn golden_refs(lexed: &Lexed) -> Vec<(String, u32)> {
+    let t = &lexed.tokens;
+    let mut out = Vec::new();
+    for i in 0..t.len().saturating_sub(7) {
+        let shape = ident(&t[i]) == Some("join")
+            && matches!(t[i + 1].kind, TokKind::Punct('('))
+            && matches!(&t[i + 2].kind, TokKind::Str(s) if s == "golden")
+            && matches!(t[i + 3].kind, TokKind::Punct(')'))
+            && matches!(t[i + 4].kind, TokKind::Punct('.'))
+            && ident(&t[i + 5]) == Some("join")
+            && matches!(t[i + 6].kind, TokKind::Punct('('));
+        if shape {
+            if let TokKind::Str(f) = &t[i + 7].kind {
+                out.push((f.clone(), t[i + 7].line));
+            }
+        }
+    }
+    out
+}
+
+/// True when the file defines the repo's self-seeding snapshot helper
+/// (`fn assert_snapshot`): such tests create a missing golden on first
+/// run, so absence on disk is the documented bootstrap state, not a bug.
+pub fn defines_assert_snapshot(lexed: &Lexed) -> bool {
+    lexed
+        .tokens
+        .windows(2)
+        .any(|w| ident(&w[0]) == Some("fn") && ident(&w[1]) == Some("assert_snapshot"))
+}
+
+/// Extract the string entries of `EXPERIMENT_NAMES` from the lexed
+/// `config/schema.rs`, plus the line the registry starts on.
+pub fn experiment_names(lexed: &Lexed) -> Option<(Vec<String>, u32)> {
+    let t = &lexed.tokens;
+    let at = t.iter().position(|tok| ident(tok) == Some("EXPERIMENT_NAMES"))?;
+    let line = t[at].line;
+    // Skip past the `=` so the `[` of the `&[&str]` type annotation is
+    // not mistaken for the initializer list.
+    let eq = t[at..]
+        .iter()
+        .position(|tok| matches!(tok.kind, TokKind::Punct('=')))?
+        + at;
+    let open = t[eq..].iter().position(|tok| matches!(tok.kind, TokKind::Punct('[')))? + eq;
+    let mut names = Vec::new();
+    for tok in &t[open + 1..] {
+        match &tok.kind {
+            TokKind::Punct(']') => break,
+            TokKind::Str(s) => names.push(s.clone()),
+            _ => {}
+        }
+    }
+    Some((names, line))
+}
+
+/// All string literals in a file (used to check `main.rs` for CLI arms
+/// and validate coverage).
+pub fn string_literals(lexed: &Lexed) -> Vec<&str> {
+    lexed
+        .tokens
+        .iter()
+        .filter_map(|t| match &t.kind {
+            TokKind::Str(s) => Some(s.as_str()),
+            _ => None,
+        })
+        .collect()
+}

@@ -15,7 +15,7 @@
 //! value), --out-dir <dir>, --artifacts <dir>, --csv.
 
 use sssched::cli::Args;
-use sssched::config::ExperimentConfig;
+use sssched::config::{validate_experiment, ExperimentConfig, EXPERIMENT_NAMES};
 use sssched::exec::{RealtimeCoordinator, RealtimeParams, RtTask, RtWork};
 use sssched::features::{feature_table, FeatureCategory};
 use sssched::harness;
@@ -260,21 +260,14 @@ fn cmd_experiment(args: &Args) -> i32 {
         }
         0
     };
+    // Fail fast on typos before any experiment runs; `run`'s own
+    // fallback arm stays as a defensive backstop.
+    if let Err(e) = validate_experiment(what) {
+        eprintln!("{e}");
+        return 2;
+    }
     if what == "all" {
-        for name in [
-            "table9",
-            "table10",
-            "fig4",
-            "fig5",
-            "fig6",
-            "fig7",
-            "scenarios",
-            "preempt",
-            "service",
-            "churn",
-            "scale",
-            "model",
-        ] {
+        for name in EXPERIMENT_NAMES {
             let rc = run(name);
             if rc != 0 {
                 return rc;

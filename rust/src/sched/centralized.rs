@@ -23,7 +23,7 @@
 
 use super::result::{RunOptions, RunResult};
 use super::Scheduler;
-use crate::cluster::ClusterSpec;
+use crate::cluster::{ClusterSpec, NodeId};
 use crate::sim::{Kernel, KernelCtx, Launch, SchedPolicy, ServiceStation, SimEv, SimScratch, Time};
 use crate::util::prng::{LognormalGen, Prng};
 use crate::workload::{TaskId, Workload};
@@ -149,12 +149,17 @@ impl SchedPolicy for CentralizedPolicy<'_> {
         Some(fin + teardown)
     }
 
-    // Node faults need no dedicated hooks here: the daemon's periodic
+    // Node faults are deliberate no-ops here: the daemon's periodic
     // queue-management cycle (`on_tick`) already re-scans the pending
     // queue, so a killed task requeued by the kernel is re-admitted on
     // the next cycle exactly like a fresh arrival — which is how
     // slurmctld/sge_qmaster treat a requeued job — and a recovered
     // node's slots simply show up free to the next dispatch scan.
+    fn on_node_fail(&mut self, _ctx: &mut KernelCtx, _now: Time, _node: NodeId) {}
+
+    fn on_node_drain(&mut self, _ctx: &mut KernelCtx, _now: Time, _node: NodeId) {}
+
+    fn on_node_recover(&mut self, _ctx: &mut KernelCtx, _now: Time, _node: NodeId) {}
 
     fn daemon_busy(&self) -> f64 {
         self.daemon.busy()

@@ -58,6 +58,13 @@ impl SchedPolicy for IdealPolicy {
         ctx.drain_fifo(&mut |_, _| Launch::start(now));
     }
 
+    fn on_node_drain(&mut self, _ctx: &mut KernelCtx, _now: Time, _node: NodeId) {
+        // Deliberate no-op: a drain only parks the node's *free* slots
+        // (the pool refuses new placement kernel-side) and kills
+        // nothing, so an event-driven policy has no requeued work to
+        // re-place — the next completion or recovery drives dispatch.
+    }
+
     fn on_node_recover(&mut self, ctx: &mut KernelCtx, now: Time, _node: NodeId) {
         // Restored slots re-enter the free pool without SlotFree
         // events; give pending work the dispatch pass a release would

@@ -21,7 +21,7 @@
 
 use super::result::{RunOptions, RunResult};
 use super::Scheduler;
-use crate::cluster::ClusterSpec;
+use crate::cluster::{ClusterSpec, NodeId};
 use crate::sim::{Kernel, KernelCtx, Launch, SchedPolicy, ServiceStation, SimEv, SimScratch, Time};
 use crate::util::prng::{LognormalGen, Prng};
 use crate::workload::{TaskId, Workload};
@@ -128,13 +128,18 @@ impl SchedPolicy for MesosPolicy<'_> {
         Some(fin + self.p.agent_teardown)
     }
 
-    // Node faults need no dedicated hooks: offers are regenerated from
+    // Node faults are deliberate no-ops: offers are regenerated from
     // the live free-slot pool every `offer_interval`, so a dead
     // agent's resources never appear in the next offer batch — the
     // master has effectively rescinded them — and the kernel requeues
     // its killed tasks for the framework to accept against a later
     // round. Recovery is just the agent re-registering: its slots are
     // back in the next offer.
+    fn on_node_fail(&mut self, _ctx: &mut KernelCtx, _now: Time, _node: NodeId) {}
+
+    fn on_node_drain(&mut self, _ctx: &mut KernelCtx, _now: Time, _node: NodeId) {}
+
+    fn on_node_recover(&mut self, _ctx: &mut KernelCtx, _now: Time, _node: NodeId) {}
 
     fn daemon_busy(&self) -> f64 {
         self.master.busy()

@@ -356,7 +356,7 @@ impl Scheduler for ShardedSim {
             tr.sort_by_key(|r| r.task);
         }
         if options.collect_trace && all_spans {
-            spans.sort_by(|a, b| (a.task, a.start).partial_cmp(&(b.task, b.start)).unwrap());
+            spans.sort_by(|a, b| a.task.cmp(&b.task).then(a.start.total_cmp(&b.start)));
             merged.spans = Some(spans);
         }
         condense_sample(&mut sample, WAIT_SAMPLE_CAP);

@@ -24,7 +24,7 @@
 
 use super::result::{RunOptions, RunResult};
 use super::Scheduler;
-use crate::cluster::ClusterSpec;
+use crate::cluster::{ClusterSpec, NodeId};
 use crate::sim::{Kernel, KernelCtx, Launch, SchedPolicy, ServiceStation, SimEv, SimScratch, Time};
 use crate::util::prng::{LognormalGen, Prng};
 use crate::workload::{TaskId, Workload};
@@ -129,13 +129,18 @@ impl SchedPolicy for YarnPolicy<'_> {
         Some(fin + self.p.teardown)
     }
 
-    // Node faults need no dedicated hooks: a failed NM stops
+    // Node faults are deliberate no-ops: a failed NM stops
     // heartbeating (its containers leave the pool via the kernel) and
     // the killed applications the kernel requeued are re-admitted at
     // the next NM heartbeat like fresh submissions; an AM whose
     // container launch was in flight toward the dead node is aborted
     // by the kernel and re-granted the same way. Recovery is the NM
     // heartbeating again with free containers.
+    fn on_node_fail(&mut self, _ctx: &mut KernelCtx, _now: Time, _node: NodeId) {}
+
+    fn on_node_drain(&mut self, _ctx: &mut KernelCtx, _now: Time, _node: NodeId) {}
+
+    fn on_node_recover(&mut self, _ctx: &mut KernelCtx, _now: Time, _node: NodeId) {}
 
     fn daemon_busy(&self) -> f64 {
         self.rm.busy()

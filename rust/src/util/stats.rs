@@ -211,7 +211,7 @@ impl P2Quantile {
             self.q[self.count as usize] = x;
             self.count += 1;
             if self.count == 5 {
-                self.q.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                self.q.sort_by(|a, b| a.total_cmp(b));
             }
             return;
         }
@@ -275,7 +275,7 @@ impl P2Quantile {
             c if c < 5 => {
                 let mut head = self.q;
                 let head = &mut head[..c as usize];
-                head.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                head.sort_by(|a, b| a.total_cmp(b));
                 percentile_sorted(head, self.p)
             }
             _ => self.q[2],
@@ -353,7 +353,7 @@ impl Reservoir {
     /// Sorted copy of the sample for percentile queries.
     pub fn sorted_sample(&self) -> Vec<f64> {
         let mut v = self.buf.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.sort_by(|a, b| a.total_cmp(b));
         v
     }
 }
@@ -364,7 +364,7 @@ impl Reservoir {
 /// when merging per-shard wait samples whose union exceeds the bound.
 pub fn condense_sample(xs: &mut Vec<f64>, cap: usize) {
     assert!(cap >= 2, "condense_sample needs cap >= 2");
-    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs.sort_by(|a, b| a.total_cmp(b));
     if xs.len() <= cap {
         return;
     }
@@ -422,7 +422,7 @@ mod tests {
     /// Deterministic value stream with a known exact quantile oracle.
     fn exact_q(xs: &[f64], q: f64) -> f64 {
         let mut s = xs.to_vec();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s.sort_by(|a, b| a.total_cmp(b));
         percentile_sorted(&s, q)
     }
 
@@ -588,5 +588,31 @@ mod tests {
         let mut small = vec![3.0, 1.0, 2.0];
         condense_sample(&mut small, 10);
         assert_eq!(small, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn sorts_are_total_even_for_nan_and_signed_zero() {
+        // Regression for the PR 1 `partial_cmp().unwrap()` bug class:
+        // the stats sorts must neither panic on NaN nor let -0.0/+0.0
+        // order depend on input order. total_cmp pins -0.0 < +0.0 and
+        // sorts NaN after +inf instead of panicking.
+        let mut xs = vec![f64::NAN, 0.0, f64::INFINITY, -0.0, f64::NEG_INFINITY, 1.0];
+        condense_sample(&mut xs, 6);
+        assert_eq!(xs[0], f64::NEG_INFINITY);
+        assert!(xs[1].is_sign_negative() && xs[1] == 0.0, "-0.0 sorts first");
+        assert!(xs[2].is_sign_positive() && xs[2] == 0.0);
+        assert_eq!(xs[3], 1.0);
+        assert_eq!(xs[4], f64::INFINITY);
+        assert!(xs[5].is_nan(), "NaN sorts last, no panic");
+
+        // Same stream in reverse condenses to the identical bytes —
+        // the order-independence the differential suites rely on.
+        let mut fwd = vec![-0.0, 0.0, 2.5, -1.0];
+        let mut rev = fwd.clone();
+        rev.reverse();
+        condense_sample(&mut fwd, 4);
+        condense_sample(&mut rev, 4);
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<u64>>();
+        assert_eq!(bits(&fwd), bits(&rev));
     }
 }

@@ -1,0 +1,47 @@
+//! Tier-1 gate: the production tree must pass `pallas-lint` with zero
+//! diagnostics, so introducing a determinism hazard (or letting an
+//! allow go stale) fails `cargo test -q` — not just the dedicated CI
+//! step.
+
+use std::path::PathBuf;
+
+use sssched::lint;
+
+#[test]
+fn tree_is_lint_clean() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let report = lint::lint_tree(&root).expect("lint walks the crate");
+    assert!(
+        report.is_clean(),
+        "pallas-lint found determinism-contract violations:\n{}",
+        report.render()
+    );
+    // Sanity: the walk actually covered the tree (src/** plus
+    // top-level tests), and the suppression machinery is exercised by
+    // the linter binary's own documented wall-clock allow.
+    assert!(
+        report.files_scanned > 50,
+        "suspiciously few files scanned: {}",
+        report.files_scanned
+    );
+    assert!(
+        report.suppressed >= 1,
+        "expected at least the pallas-lint self-timing allow to be honoured"
+    );
+}
+
+#[test]
+fn rule_hits_are_reported_for_every_rule() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let report = lint::lint_tree(&root).expect("lint walks the crate");
+    // The pre-suppression hit counts keep a stable shape (one entry
+    // per rule, fixed order) so BENCH_perf.json rows stay comparable
+    // across commits.
+    let names: Vec<&str> = report.rule_hits.iter().map(|(n, _)| *n).collect();
+    let expected: Vec<&str> = lint::RULES.iter().map(|r| r.name).collect();
+    assert_eq!(names, expected);
+    // Everything that fired was suppressed (the tree is clean), so the
+    // total pre-suppression count equals the suppression count.
+    let total: usize = report.rule_hits.iter().map(|(_, n)| *n).sum();
+    assert_eq!(total, report.suppressed);
+}

@@ -1,0 +1,11 @@
+//! Fixture: well-formed `pallas: allow` directives, leading and
+//! trailing — both must suppress and produce zero diagnostics.
+
+pub fn leading(xs: &mut [f64]) {
+    // pallas: allow(float-ord) — fixture inputs are hand-picked finite constants
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}
+
+pub fn trailing(xs: &mut [f64]) {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap()); // pallas: allow(float-ord) — same finite set
+}

@@ -1,0 +1,6 @@
+//! Fixture: a reason-less allow is an error AND suppresses nothing.
+
+pub fn bad(xs: &mut [f64]) {
+    // pallas: allow(float-ord)
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}

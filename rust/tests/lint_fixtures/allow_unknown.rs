@@ -1,0 +1,6 @@
+//! Fixture: an allow naming an unknown rule is an error.
+
+pub fn noop() {
+    // pallas: allow(no-such-rule) — typo'd rule names must be caught
+    let _x = 0u32;
+}

@@ -1,0 +1,21 @@
+//! Fixture: `fault-hooks` fires exactly once, on the incomplete impl.
+//! (Never compiled, so the trait need not resolve.)
+
+pub struct Incomplete;
+pub struct Complete;
+
+impl SchedPolicy for Incomplete {
+    fn on_node_fail(&mut self) {}
+}
+
+impl SchedPolicy for Complete {
+    fn on_node_fail(&mut self) {}
+    fn on_node_drain(&mut self) {}
+    fn on_node_recover(&mut self) {}
+}
+
+#[cfg(test)]
+mod tests {
+    // Test-harness policies are scaffolding and must not fire.
+    impl SchedPolicy for TestOnly {}
+}

@@ -1,0 +1,19 @@
+//! Fixture: `float-ord` fires exactly once, on the sort in `sort_floats`.
+
+use std::cmp::Ordering;
+
+pub struct Key(pub f64);
+
+impl Key {
+    /// A *definition* named partial_cmp is trait plumbing, not a float
+    /// ordering hazard — it must not fire.
+    pub fn partial_cmp(&self, other: &Key) -> Option<Ordering> {
+        Some(self.0.total_cmp(&other.0))
+    }
+}
+
+pub fn sort_floats(xs: &mut [f64]) {
+    // The same word inside a string literal must not fire either:
+    let _doc = "call partial_cmp to compare floats";
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}

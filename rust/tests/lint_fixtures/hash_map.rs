@@ -1,0 +1,9 @@
+//! Fixture: `hash-iteration` fires exactly once, on the use declaration.
+//! (Never compiled — scanned by the linter under a synthetic src/ path.)
+use std::collections::HashMap;
+
+pub fn build() -> usize {
+    // BTreeMap is the sanctioned replacement and must not fire.
+    let m: std::collections::BTreeMap<u32, u32> = std::collections::BTreeMap::new();
+    m.len()
+}

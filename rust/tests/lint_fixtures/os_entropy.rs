@@ -1,0 +1,7 @@
+//! Fixture: `os-entropy` fires exactly once, on the RandomState draw.
+
+pub fn unseeded() -> u64 {
+    let s = std::collections::hash_map::RandomState::new();
+    let _ = &s;
+    0
+}

@@ -1,0 +1,8 @@
+//! Fixture: `thread-spawn` fires exactly once, on the spawn call.
+
+pub fn reduce(xs: &[u64]) -> u64 {
+    let h = std::thread::spawn(move || 0u64);
+    // thread::sleep is not a reduction hazard and must not fire:
+    std::thread::sleep(std::time::Duration::from_millis(1));
+    h.join().unwrap_or(0) + xs.len() as u64
+}

@@ -1,0 +1,15 @@
+//! Fixture: tokenizer edge cases — every hazard word below sits inside
+//! a string, comment, or char literal, so NOTHING may fire.
+
+pub fn edges() -> usize {
+    let a = r#"HashMap partial_cmp Instant::now() thread::spawn"#;
+    let b = r##"SystemTime "quoted" RandomState"##;
+    let c = "partial_cmp inside a cooked string \" with an escaped quote";
+    let d = b"HashSet in a byte string";
+    /* block comment: Instant::now()
+       /* nested block comment: partial_cmp */
+       still inside the outer comment: HashMap */
+    let e = 'h'; // a char literal, not the start of a lifetime
+    let f: &'static str = "lifetime then string: thread::scope";
+    a.len() + b.len() + c.len() + d.len() + (e as usize) + f.len()
+}

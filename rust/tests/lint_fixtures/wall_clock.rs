@@ -1,0 +1,7 @@
+//! Fixture: `wall-clock` fires exactly once, on the clock read below.
+//! A comment naming the wall-clock types must not fire.
+
+pub fn elapsed_ms() -> u64 {
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_millis() as u64
+}

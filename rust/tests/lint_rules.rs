@@ -1,0 +1,245 @@
+//! Tests for the `pallas-lint` engine itself: every rule fires exactly
+//! once on its fixture (and nowhere else), the allow machinery
+//! suppresses/ errors as specified, the tokenizer doesn't false-positive
+//! on strings/comments/char literals, and the cross-file rules work on
+//! synthetic crate roots under `target/`.
+
+use std::fs;
+use std::path::PathBuf;
+
+use sssched::lint::{self, FileReport};
+
+fn fixture(name: &str) -> String {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/lint_fixtures")
+        .join(name);
+    fs::read_to_string(&p).unwrap_or_else(|e| panic!("fixture {name}: {e}"))
+}
+
+fn rule_names(rep: &FileReport) -> Vec<&'static str> {
+    rep.diagnostics.iter().map(|d| d.rule).collect()
+}
+
+fn hits(rep: &FileReport, rule: &str) -> usize {
+    rep.rule_hits
+        .iter()
+        .find(|(n, _)| *n == rule)
+        .map(|(_, c)| *c)
+        .unwrap_or_else(|| panic!("rule {rule} missing from rule_hits"))
+}
+
+fn line_containing(src: &str, needle: &str) -> u32 {
+    src.lines()
+        .position(|l| l.contains(needle))
+        .map(|i| i as u32 + 1)
+        .unwrap_or_else(|| panic!("fixture lost its `{needle}` line"))
+}
+
+#[test]
+fn hash_iteration_fires_once_and_only_in_scope() {
+    let src = fixture("hash_map.rs");
+    let rep = lint::lint_source("src/sim/fixture.rs", &src);
+    assert_eq!(rule_names(&rep), vec!["hash-iteration"]);
+    assert_eq!(rep.diagnostics[0].line, line_containing(&src, "HashMap"));
+    assert_eq!(hits(&rep, "hash-iteration"), 1);
+    // util/ is outside the deterministic scope: same source, no finding.
+    let out = lint::lint_source("src/util/fixture.rs", &src);
+    assert!(out.diagnostics.is_empty(), "{:?}", out.diagnostics);
+}
+
+#[test]
+fn float_ord_fires_once_sparing_definitions_and_strings() {
+    let src = fixture("float_ord.rs");
+    let rep = lint::lint_source("src/harness/fixture.rs", &src);
+    assert_eq!(rule_names(&rep), vec!["float-ord"]);
+    assert_eq!(rep.diagnostics[0].line, line_containing(&src, "xs.sort_by"));
+}
+
+#[test]
+fn wall_clock_fires_once_outside_the_exempt_files() {
+    let src = fixture("wall_clock.rs");
+    let rep = lint::lint_source("src/sim/fixture.rs", &src);
+    assert_eq!(rule_names(&rep), vec!["wall-clock"]);
+    assert_eq!(rep.diagnostics[0].line, line_containing(&src, "Instant::now"));
+    for exempt in ["src/exec/realtime.rs", "src/harness/scale.rs", "tests/fixture.rs"] {
+        let out = lint::lint_source(exempt, &src);
+        assert!(out.diagnostics.is_empty(), "{exempt}: {:?}", out.diagnostics);
+    }
+}
+
+#[test]
+fn os_entropy_fires_once() {
+    let src = fixture("os_entropy.rs");
+    let rep = lint::lint_source("src/workload/fixture.rs", &src);
+    assert_eq!(rule_names(&rep), vec!["os-entropy"]);
+}
+
+#[test]
+fn thread_spawn_fires_once_outside_merge_modules() {
+    let src = fixture("thread_spawn.rs");
+    let rep = lint::lint_source("src/sim/fixture.rs", &src);
+    assert_eq!(rule_names(&rep), vec!["thread-spawn"]);
+    assert_eq!(rep.diagnostics[0].line, line_containing(&src, "thread::spawn"));
+    for exempt in ["src/harness/parallel.rs", "src/sched/sharded.rs", "src/exec/worker.rs"] {
+        let out = lint::lint_source(exempt, &src);
+        assert!(out.diagnostics.is_empty(), "{exempt}: {:?}", out.diagnostics);
+    }
+}
+
+#[test]
+fn fault_hooks_fires_once_on_the_incomplete_impl() {
+    let src = fixture("fault_hooks.rs");
+    let rep = lint::lint_source("src/sched/fixture.rs", &src);
+    assert_eq!(rule_names(&rep), vec!["fault-hooks"]);
+    let d = &rep.diagnostics[0];
+    assert_eq!(d.line, line_containing(&src, "impl SchedPolicy for Incomplete"));
+    assert!(d.msg.contains("on_node_drain") && d.msg.contains("on_node_recover"));
+}
+
+#[test]
+fn allow_with_reason_suppresses_leading_and_trailing() {
+    let src = fixture("allow_good.rs");
+    let rep = lint::lint_source("src/sim/fixture.rs", &src);
+    assert!(rep.diagnostics.is_empty(), "{:?}", rep.diagnostics);
+    assert_eq!(rep.suppressed, 2);
+    // Hits are counted pre-suppression for the perf trajectory.
+    assert_eq!(hits(&rep, "float-ord"), 2);
+}
+
+#[test]
+fn allow_without_reason_errors_and_does_not_suppress() {
+    let src = fixture("allow_no_reason.rs");
+    let rep = lint::lint_source("src/sim/fixture.rs", &src);
+    assert_eq!(rule_names(&rep), vec!["allow-missing-reason", "float-ord"]);
+    assert_eq!(rep.suppressed, 0);
+}
+
+#[test]
+fn allow_with_unknown_rule_errors() {
+    let src = fixture("allow_unknown.rs");
+    let rep = lint::lint_source("src/sim/fixture.rs", &src);
+    assert_eq!(rule_names(&rep), vec!["unknown-rule"]);
+    assert!(rep.diagnostics[0].msg.contains("no-such-rule"));
+}
+
+#[test]
+fn stale_allow_errors() {
+    let src = fixture("allow_stale.rs");
+    let rep = lint::lint_source("src/sim/fixture.rs", &src);
+    assert_eq!(rule_names(&rep), vec!["stale-allow"]);
+    assert_eq!(
+        rep.diagnostics[0].line,
+        line_containing(&src, "pallas: allow(float-ord)")
+    );
+}
+
+#[test]
+fn tokenizer_edges_produce_no_findings() {
+    let src = fixture("tokenizer_edge.rs");
+    let rep = lint::lint_source("src/sim/fixture.rs", &src);
+    assert!(rep.diagnostics.is_empty(), "{:?}", rep.diagnostics);
+    assert_eq!(rep.suppressed, 0);
+    let total: usize = rep.rule_hits.iter().map(|(_, c)| *c).sum();
+    assert_eq!(total, 0);
+}
+
+/// Fresh synthetic crate root under `target/` (gitignored) for the
+/// cross-file rules.
+fn scratch_root(name: &str) -> PathBuf {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("target/lint-scratch")
+        .join(name);
+    let _ = fs::remove_dir_all(&p);
+    fs::create_dir_all(p.join("src")).unwrap();
+    fs::write(p.join("src/lib.rs"), "pub fn placeholder() {}\n").unwrap();
+    p
+}
+
+#[test]
+fn golden_exists_flags_missing_refs_and_orphans() {
+    let root = scratch_root("golden");
+    let gdir = root.join("tests/golden");
+    fs::create_dir_all(&gdir).unwrap();
+    fs::write(gdir.join("pinned.txt"), "1\n").unwrap();
+    fs::write(gdir.join("orphan.txt"), "1\n").unwrap();
+    // No `fn assert_snapshot` here, so a missing referenced snapshot
+    // is a finding, and so is the unreferenced orphan file.
+    let refs = r#"
+fn base() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests")
+}
+
+#[test]
+fn pins() {
+    let _a = base().join("golden").join("pinned.txt");
+    let _b = base().join("golden").join("missing.txt");
+}
+"#;
+    fs::write(root.join("tests/refs.rs"), refs).unwrap();
+    let rep = lint::lint_tree(&root).unwrap();
+    let rules: Vec<&str> = rep.diagnostics.iter().map(|d| d.rule).collect();
+    assert_eq!(rules, vec!["golden-exists", "golden-exists"], "{}", rep.render());
+    assert!(rep.diagnostics.iter().any(|d| d.msg.contains("missing.txt")));
+    assert!(rep
+        .diagnostics
+        .iter()
+        .any(|d| d.file.contains("orphan.txt") && d.msg.contains("not referenced")));
+}
+
+#[test]
+fn golden_exists_respects_self_seeding_tests() {
+    let root = scratch_root("golden-seed");
+    fs::create_dir_all(root.join("tests")).unwrap();
+    // The repo convention: tests defining `fn assert_snapshot` create a
+    // missing golden on first run, so absence is bootstrap, not a bug.
+    let seeded = r#"
+fn assert_snapshot(path: &std::path::Path, got: &str) {
+    let _ = (path, got);
+}
+
+#[test]
+fn pins() {
+    let p = std::path::Path::new("tests").join("golden").join("boot.txt");
+    assert_snapshot(&p, "v");
+}
+"#;
+    fs::write(root.join("tests/seeded.rs"), seeded).unwrap();
+    let rep = lint::lint_tree(&root).unwrap();
+    assert!(rep.is_clean(), "{}", rep.render());
+}
+
+#[test]
+fn experiment_wiring_flags_unwired_names() {
+    let parent = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("target/lint-scratch")
+        .join("wiring");
+    let _ = fs::remove_dir_all(&parent);
+    let root = parent.join("rust");
+    fs::create_dir_all(root.join("src/config")).unwrap();
+    fs::write(
+        parent.join("README.md"),
+        "# demo\n\n## EXPERIMENTS\n\n| `alpha` | ok |\n\n## Next\n",
+    )
+    .unwrap();
+    fs::write(
+        root.join("src/config/schema.rs"),
+        "pub const EXPERIMENT_NAMES: &[&str] = &[\"alpha\", \"beta\"];\n",
+    )
+    .unwrap();
+    // `alpha` is fully wired (dispatch arm + validate check + README
+    // row); `beta` is wired nowhere → three findings, all about beta.
+    fs::write(
+        root.join("src/main.rs"),
+        "pub const WIRED: &[&str] = &[\"alpha\", \"alpha shapes\"];\n",
+    )
+    .unwrap();
+    let rep = lint::lint_tree(&root).unwrap();
+    let wiring: Vec<&lint::Diagnostic> = rep
+        .diagnostics
+        .iter()
+        .filter(|d| d.rule == "experiment-wiring")
+        .collect();
+    assert_eq!(wiring.len(), 3, "{}", rep.render());
+    assert!(wiring.iter().all(|d| d.msg.contains("beta")));
+    assert_eq!(rep.diagnostics.len(), 3, "only wiring findings: {}", rep.render());
+}
