@@ -13,6 +13,11 @@
 //!   node-outage plan, with the same flat-allocation assert on the
 //!   retire/kill/requeue/restore path (`churn_mevents_per_s` in
 //!   BENCH_perf.json)
+//! * degraded-control-plane kernel loop: warm events/s with heartbeat
+//!   detection, an active `MessagePlan` (latency + loss + duplication)
+//!   and speculation all armed, with the same flat-allocation assert
+//!   on the heartbeat/suspect/defer/backoff/speculate path
+//!   (`degraded_mevents_per_s` in BENCH_perf.json)
 //! * indexed-queue scale sweep: warm events/s per (scheduler, n) up to
 //!   n = 100k — including the node-granular and sharded engine rows —
 //!   the fitted log-log wall-time exponent, the eager-sort vs
@@ -31,7 +36,7 @@
 //! [--bench-out FILE]` (default out: BENCH_perf.json in the working
 //! dir; `--out` is accepted as a legacy alias).
 
-use sssched::cluster::{ClusterSpec, FaultPlan};
+use sssched::cluster::{ClusterSpec, FaultPlan, MessagePlan};
 use sssched::config::{ExperimentConfig, SchedulerChoice};
 use sssched::exec::{RealtimeCoordinator, RealtimeParams, RtTask, RtWork};
 use sssched::harness::{
@@ -425,6 +430,95 @@ fn main() {
              small={small_allocs} big={big_allocs} (flat)"
         );
         (rate, kps, big_allocs)
+    };
+
+    // ---- 2d-bis. Degraded-control-plane kernel loop (warm scratch):
+    // events/s with heartbeat detection, an active message plan
+    // (latency + loss + duplication) and speculation all armed at
+    // once, plus the same flat-allocation contract — after warmup
+    // nothing on the heartbeat/suspect/deferred-End/backoff/speculate
+    // hot path allocates.
+    let (degraded_rate, degraded_allocs_per_run) = {
+        let sched = make_scheduler(SchedulerChoice::Slurm);
+        let n_nodes = cluster.nodes.len() as u32;
+        let mut plan = FaultPlan::none();
+        for k in 0..n_nodes.min(8) {
+            plan = plan
+                .fail(4.0 + 4.0 * k as f64, k)
+                .recover(8.0 + 4.0 * k as f64, k);
+        }
+        plan.validate().expect("bench fault plan");
+        let messages = MessagePlan::seeded(0xBE9C)
+            .with_latency(0.02, 0.02, 0.01)
+            .with_loss(0.05, 0.05, 0.4, 3)
+            .with_duplication(0.05);
+        messages.validate().expect("bench message plan");
+        let opts = RunOptions {
+            faults: plan,
+            ..Default::default()
+        }
+        .messages(messages)
+        .detection(1.0, 0.5)
+        .speculation(3.0);
+        let degraded_workload = |waves: u64| {
+            let mut w = sssched::workload::WorkloadBuilder::constant(5.0)
+                .tasks(waves * cluster.total_cores())
+                .label("degraded-bench")
+                .build();
+            // Sparse stragglers keep the speculation path live.
+            for t in &mut w.tasks {
+                if t.id % 100 == 50 {
+                    t.duration = 25.0;
+                }
+            }
+            w
+        };
+        let big = degraded_workload(16);
+        let small = degraded_workload(4);
+        let mut scratch = SimScratch::new();
+        // Warm-up run sizes every buffer, degraded machinery included.
+        sched.run_with_scratch(&big, &cluster, 0, &opts, &mut scratch);
+        let iters = if quick { 2u64 } else { 5 };
+        let t0 = Instant::now();
+        let mut events = 0u64;
+        let mut perturbed = 0u64;
+        for i in 0..iters {
+            let r = sched.run_with_scratch(&big, &cluster, i + 1, &opts, &mut scratch);
+            events += r.events;
+            perturbed += r.messages_lost
+                + r.messages_duplicated
+                + r.spec_launches
+                + r.detection_latencies.len() as u64;
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        assert!(
+            perturbed > 0,
+            "degraded bench never perturbed the control plane"
+        );
+        COUNTING.store(true, Ordering::Relaxed);
+        let before_small = allocs();
+        sched.run_with_scratch(&small, &cluster, 97, &opts, &mut scratch);
+        let small_allocs = allocs() - before_small;
+        let before_big = allocs();
+        sched.run_with_scratch(&big, &cluster, 98, &opts, &mut scratch);
+        let big_allocs = allocs() - before_big;
+        COUNTING.store(false, Ordering::Relaxed);
+        assert!(
+            small_allocs < 512 && big_allocs < 512,
+            "warm degraded run allocates per event: small={small_allocs} big={big_allocs}"
+        );
+        assert!(
+            big_allocs <= small_allocs + 64 && small_allocs <= big_allocs + 64,
+            "warm degraded allocations scale with workload size: \
+             small={small_allocs} big={big_allocs}"
+        );
+        let rate = events as f64 / dt / 1e6;
+        println!(
+            "degraded loop (warm scratch): {events} events, {perturbed} perturbations over \
+             {iters} trials in {dt:.3}s = {rate:.2}M events/s; allocs/run \
+             small={small_allocs} big={big_allocs} (flat)"
+        );
+        (rate, big_allocs)
     };
 
     // ---- 2e. Indexed-queue scale sweep (the `scale` experiment's
@@ -840,6 +934,8 @@ fn main() {
          \x20 \"churn_mevents_per_s\": {churn_rate:.4},\n\
          \x20 \"churn_kills_per_s\": {churn_kills_per_s:.1},\n\
          \x20 \"churn_warm_allocs_per_run\": {churn_allocs_per_run},\n\
+         \x20 \"degraded_mevents_per_s\": {degraded_rate:.4},\n\
+         \x20 \"degraded_warm_allocs_per_run\": {degraded_allocs_per_run},\n\
          \x20 \"sims\": [\n{sims}\n  ],\n\
          \x20 \"scale\": {{\n\
          \x20   \"procs\": {scale_procs},\n\

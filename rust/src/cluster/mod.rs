@@ -6,5 +6,5 @@
 mod nodes;
 mod slots;
 
-pub use nodes::{ClusterSpec, FaultEvent, FaultKind, FaultPlan, Node, NodeId, NodeState};
+pub use nodes::{ClusterSpec, FaultEvent, FaultKind, FaultPlan, MessagePlan, Node, NodeId, NodeState};
 pub use slots::{SlotId, SlotPool};

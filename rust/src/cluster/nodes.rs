@@ -305,6 +305,159 @@ impl FaultPlan {
     }
 }
 
+/// Seeded control-plane perturbation injected into a kernel run via
+/// `RunOptions::messages`. Unlike [`FaultPlan`] (a pre-drawn event
+/// schedule), a `MessagePlan` is a parameter set: the kernel forks a
+/// dedicated PRNG stream from `seed` at run start and draws every
+/// per-message latency/loss/duplication outcome in event-loop order,
+/// so results are bit-identical for any `--jobs` worker count. The
+/// empty plan (the default) is a zero-cost bypass: no stream is
+/// forked, no draw happens, and runs are bit-identical to
+/// pre-message-plan builds.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MessagePlan {
+    /// Seed for the plan's forked PRNG stream.
+    pub seed: u64,
+    /// Mean of the exponential extra delay added to launch RPCs
+    /// (`Start`/`Resume` deliveries), seconds. 0 = no delay.
+    pub launch_latency_mean: f64,
+    /// Mean of the exponential extra delay added to completion
+    /// notifications (`End` deliveries — the slot is held busy until
+    /// the scheduler processes the notification), seconds. 0 = none.
+    pub completion_latency_mean: f64,
+    /// Mean of the exponential extra delay added to staged launches
+    /// (Sparrow probe deliveries), seconds. 0 = no delay.
+    pub probe_latency_mean: f64,
+    /// Probability a launch RPC is lost in flight. Lost launches are
+    /// retried with capped exponential backoff.
+    pub loss_prob: f64,
+    /// Probability a completion notification is delivered twice. The
+    /// duplicate must be idempotent (dispatch-epoch check).
+    pub dup_prob: f64,
+    /// First retry delay after a lost launch, seconds.
+    pub backoff_base: f64,
+    /// Upper bound on any single backoff delay, seconds.
+    pub backoff_cap: f64,
+    /// Maximum consecutive losses of one launch; the attempt after the
+    /// cap is force-delivered so every dispatch makes progress.
+    pub max_retries: u32,
+}
+
+impl Default for MessagePlan {
+    fn default() -> Self {
+        Self {
+            seed: 0,
+            launch_latency_mean: 0.0,
+            completion_latency_mean: 0.0,
+            probe_latency_mean: 0.0,
+            loss_prob: 0.0,
+            dup_prob: 0.0,
+            backoff_base: 0.05,
+            backoff_cap: 1.0,
+            max_retries: 4,
+        }
+    }
+}
+
+impl MessagePlan {
+    /// Seed-XOR constant for the plan's PRNG stream, distinct from
+    /// every other stream constant in the tree (`FaultPlan` uses
+    /// 0xFA17_71A5, Sparrow 0x5BA2_2063, ...).
+    pub const STREAM: u64 = 0x4D50_1A6C;
+
+    /// The empty plan: every control message is instant, lossless, and
+    /// delivered exactly once.
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// New plan with the given PRNG seed and no perturbation yet.
+    pub fn seeded(seed: u64) -> Self {
+        Self {
+            seed,
+            ..Self::default()
+        }
+    }
+
+    /// True iff the plan perturbs nothing (the message machinery is
+    /// bypassed entirely).
+    pub fn is_empty(&self) -> bool {
+        self.launch_latency_mean == 0.0
+            && self.completion_latency_mean == 0.0
+            && self.probe_latency_mean == 0.0
+            && self.loss_prob == 0.0
+            && self.dup_prob == 0.0
+    }
+
+    /// Set per-class latency means (builder-style).
+    pub fn with_latency(mut self, launch: f64, completion: f64, probe: f64) -> Self {
+        self.launch_latency_mean = launch;
+        self.completion_latency_mean = completion;
+        self.probe_latency_mean = probe;
+        self
+    }
+
+    /// Set the launch-loss probability and backoff schedule
+    /// (builder-style).
+    pub fn with_loss(mut self, p: f64, base: f64, cap: f64, max_retries: u32) -> Self {
+        self.loss_prob = p;
+        self.backoff_base = base;
+        self.backoff_cap = cap;
+        self.max_retries = max_retries;
+        self
+    }
+
+    /// Set the completion-duplication probability (builder-style).
+    pub fn with_duplication(mut self, p: f64) -> Self {
+        self.dup_prob = p;
+        self
+    }
+
+    /// Backoff delay before retry number `attempt` (1-based): base
+    /// doubled per retry, capped at `backoff_cap`.
+    pub fn backoff_delay(&self, attempt: u32) -> f64 {
+        let exp = attempt.saturating_sub(1).min(52);
+        (self.backoff_base * (1u64 << exp) as f64).min(self.backoff_cap)
+    }
+
+    /// Validate the plan: probabilities in [0, 1), latency means
+    /// finite and >= 0, and a usable backoff schedule whenever loss is
+    /// enabled.
+    pub fn validate(&self) -> Result<(), String> {
+        for (name, p) in [("loss_prob", self.loss_prob), ("dup_prob", self.dup_prob)] {
+            if !p.is_finite() || !(0.0..1.0).contains(&p) {
+                return Err(format!("message plan: {name} {p} outside [0, 1)"));
+            }
+        }
+        for (name, m) in [
+            ("launch_latency_mean", self.launch_latency_mean),
+            ("completion_latency_mean", self.completion_latency_mean),
+            ("probe_latency_mean", self.probe_latency_mean),
+        ] {
+            if !m.is_finite() || m < 0.0 {
+                return Err(format!(
+                    "message plan: {name} {m} must be finite and >= 0"
+                ));
+            }
+        }
+        if self.loss_prob > 0.0 {
+            if !self.backoff_base.is_finite() || self.backoff_base <= 0.0 {
+                return Err(format!(
+                    "message plan: loss enabled but backoff_base {} is not > 0",
+                    self.backoff_base
+                ));
+            }
+            if !self.backoff_cap.is_finite() || self.backoff_cap < self.backoff_base {
+                return Err(format!(
+                    "message plan: backoff_cap {} must be finite and >= backoff_base {}",
+                    self.backoff_cap, self.backoff_base
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -428,5 +581,51 @@ mod tests {
                 "expected the t=2 double-fail on node 0 to fire first, got: {err}"
             );
         }
+    }
+
+    #[test]
+    fn message_plan_default_is_empty_and_valid() {
+        let plan = MessagePlan::none();
+        assert!(plan.is_empty());
+        plan.validate().unwrap();
+        assert_eq!(plan, MessagePlan::default());
+        // Any perturbation knob flips is_empty.
+        assert!(!MessagePlan::none().with_latency(0.01, 0.0, 0.0).is_empty());
+        assert!(!MessagePlan::none().with_latency(0.0, 0.01, 0.0).is_empty());
+        assert!(!MessagePlan::none().with_latency(0.0, 0.0, 0.01).is_empty());
+        assert!(!MessagePlan::none().with_loss(0.1, 0.05, 1.0, 4).is_empty());
+        assert!(!MessagePlan::none().with_duplication(0.1).is_empty());
+        // The seed alone does not: a seeded-but-quiet plan still
+        // bypasses the machinery.
+        assert!(MessagePlan::seeded(42).is_empty());
+    }
+
+    #[test]
+    fn message_plan_backoff_doubles_and_caps() {
+        let plan = MessagePlan::none().with_loss(0.5, 0.05, 0.3, 8);
+        assert_eq!(plan.backoff_delay(1), 0.05);
+        assert_eq!(plan.backoff_delay(2), 0.10);
+        assert_eq!(plan.backoff_delay(3), 0.20);
+        assert_eq!(plan.backoff_delay(4), 0.30, "capped at backoff_cap");
+        assert_eq!(plan.backoff_delay(40), 0.30, "stays capped, no overflow");
+    }
+
+    #[test]
+    fn message_plan_validation_rejects_bad_knobs() {
+        let p = MessagePlan::none().with_loss(1.0, 0.05, 1.0, 4);
+        assert!(p.validate().unwrap_err().contains("loss_prob"));
+        let p = MessagePlan::none().with_duplication(-0.1);
+        assert!(p.validate().unwrap_err().contains("dup_prob"));
+        let p = MessagePlan::none().with_latency(f64::NAN, 0.0, 0.0);
+        assert!(p.validate().unwrap_err().contains("launch_latency_mean"));
+        let p = MessagePlan::none().with_latency(0.0, -1.0, 0.0);
+        assert!(p
+            .validate()
+            .unwrap_err()
+            .contains("completion_latency_mean"));
+        let p = MessagePlan::none().with_loss(0.1, 0.0, 1.0, 4);
+        assert!(p.validate().unwrap_err().contains("backoff_base"));
+        let p = MessagePlan::none().with_loss(0.1, 0.5, 0.1, 4);
+        assert!(p.validate().unwrap_err().contains("backoff_cap"));
     }
 }

@@ -121,6 +121,21 @@ pub struct ExperimentConfig {
     /// Mean time-to-repair of the `churn` experiment, as a fraction of
     /// the observation window.
     pub churn_mttr_frac: f64,
+    /// Failure-detection timeouts (virtual s) swept by the `degraded`
+    /// experiment; heartbeats run at half each timeout.
+    pub degraded_detect_timeouts: Vec<f64>,
+    /// Control-message loss probabilities of the `degraded` severity
+    /// levels, in non-decreasing order (duplication runs at half the
+    /// loss probability).
+    pub degraded_loss_probs: Vec<f64>,
+    /// Mean control-message latencies (virtual s) of the `degraded`
+    /// severity levels; zipped 1:1 with `degraded_loss_probs` and also
+    /// non-decreasing, so severity is totally ordered.
+    pub degraded_latency_means: Vec<f64>,
+    /// Speculative re-execution threshold of the `degraded`
+    /// experiment's spec-armed rows: duplicate a task once it runs
+    /// longer than this multiple of its class's streaming mean.
+    pub degraded_speculate_factor: f64,
     /// Total-task-count sweep of the `scale` experiment (decade steps
     /// through the 10⁴–10⁶ short-job regime of Byun et al.).
     pub scale_ns: Vec<u32>,
@@ -160,6 +175,10 @@ impl Default for ExperimentConfig {
             service_horizon: 240.0,
             churn_mtbf_fracs: vec![4.0, 1.0, 0.25],
             churn_mttr_frac: 0.05,
+            degraded_detect_timeouts: vec![1.0, 8.0],
+            degraded_loss_probs: vec![0.0, 0.05, 0.2],
+            degraded_latency_means: vec![0.0, 1.0, 4.0],
+            degraded_speculate_factor: 3.0,
             scale_ns: vec![1_000, 10_000, 100_000, 1_000_000],
             scale_procs: vec![1_000, 10_000],
             scale_huge: false,
@@ -241,6 +260,39 @@ impl ExperimentConfig {
                 }
                 "experiment.churn_mttr_frac" => {
                     cfg.churn_mttr_frac = value.as_f64().ok_or_else(|| bad(key))?
+                }
+                "experiment.degraded_detect_timeouts" => {
+                    let arr = match value {
+                        TomlValue::Array(xs) => xs,
+                        _ => return Err(bad(key)),
+                    };
+                    cfg.degraded_detect_timeouts = arr
+                        .iter()
+                        .map(|v| v.as_f64().ok_or_else(|| bad(key)))
+                        .collect::<Result<_, _>>()?;
+                }
+                "experiment.degraded_loss_probs" => {
+                    let arr = match value {
+                        TomlValue::Array(xs) => xs,
+                        _ => return Err(bad(key)),
+                    };
+                    cfg.degraded_loss_probs = arr
+                        .iter()
+                        .map(|v| v.as_f64().ok_or_else(|| bad(key)))
+                        .collect::<Result<_, _>>()?;
+                }
+                "experiment.degraded_latency_means" => {
+                    let arr = match value {
+                        TomlValue::Array(xs) => xs,
+                        _ => return Err(bad(key)),
+                    };
+                    cfg.degraded_latency_means = arr
+                        .iter()
+                        .map(|v| v.as_f64().ok_or_else(|| bad(key)))
+                        .collect::<Result<_, _>>()?;
+                }
+                "experiment.degraded_speculate_factor" => {
+                    cfg.degraded_speculate_factor = value.as_f64().ok_or_else(|| bad(key))?
                 }
                 "experiment.scale_ns" => {
                     let arr = match value {
@@ -385,6 +437,48 @@ impl ExperimentConfig {
         if !(self.churn_mttr_frac.is_finite() && self.churn_mttr_frac > 0.0) {
             return Err("churn_mttr_frac must be finite and > 0".into());
         }
+        if self.degraded_detect_timeouts.is_empty()
+            || self
+                .degraded_detect_timeouts
+                .iter()
+                .any(|&t| !t.is_finite() || t <= 0.0)
+        {
+            return Err("degraded_detect_timeouts must be non-empty, finite, > 0".into());
+        }
+        if self.degraded_loss_probs.is_empty()
+            || self
+                .degraded_loss_probs
+                .iter()
+                .any(|&p| !p.is_finite() || !(0.0..1.0).contains(&p))
+        {
+            return Err("degraded_loss_probs must be non-empty, finite, in [0, 1)".into());
+        }
+        if self.degraded_latency_means.len() != self.degraded_loss_probs.len()
+            || self
+                .degraded_latency_means
+                .iter()
+                .any(|&l| !l.is_finite() || l < 0.0)
+        {
+            return Err(
+                "degraded_latency_means must be finite, >= 0, and zip 1:1 with \
+                 degraded_loss_probs"
+                    .into(),
+            );
+        }
+        // Severity must be totally ordered so "goodput monotone
+        // non-increasing in severity" is a meaningful gate.
+        if self.degraded_loss_probs.windows(2).any(|w| w[1] < w[0])
+            || self.degraded_latency_means.windows(2).any(|w| w[1] < w[0])
+        {
+            return Err(
+                "degraded severity levels must be non-decreasing in both loss \
+                 probability and latency mean"
+                    .into(),
+            );
+        }
+        if !(self.degraded_speculate_factor.is_finite() && self.degraded_speculate_factor > 1.0) {
+            return Err("degraded_speculate_factor must be finite and > 1".into());
+        }
         if self.scale_ns.is_empty() || self.scale_ns.iter().any(|&n| n == 0) {
             return Err("scale_ns must be non-empty, positive".into());
         }
@@ -426,6 +520,7 @@ pub const EXPERIMENT_NAMES: &[&str] = &[
     "preempt",
     "service",
     "churn",
+    "degraded",
     "scale",
     "model",
 ];
@@ -572,6 +667,49 @@ n_sweep = [4, 240]
             ExperimentConfig::from_toml("[experiment]\nchurn_mtbf_fracs = [0.0]").is_err()
         );
         assert!(ExperimentConfig::from_toml("[experiment]\nchurn_mttr_frac = 0").is_err());
+    }
+
+    #[test]
+    fn degraded_keys_parse_and_validate() {
+        let c = ExperimentConfig::from_toml(
+            "[experiment]\ndegraded_detect_timeouts = [2.0]\n\
+             degraded_loss_probs = [0.0, 0.1]\n\
+             degraded_latency_means = [0.5, 1.5]\n\
+             degraded_speculate_factor = 2.5",
+        )
+        .unwrap();
+        assert_eq!(c.degraded_detect_timeouts, vec![2.0]);
+        assert_eq!(c.degraded_loss_probs, vec![0.0, 0.1]);
+        assert_eq!(c.degraded_latency_means, vec![0.5, 1.5]);
+        assert!((c.degraded_speculate_factor - 2.5).abs() < 1e-12);
+        assert!(
+            ExperimentConfig::from_toml("[experiment]\ndegraded_detect_timeouts = []").is_err()
+        );
+        assert!(
+            ExperimentConfig::from_toml("[experiment]\ndegraded_detect_timeouts = [0.0]")
+                .is_err()
+        );
+        // Loss of exactly 1.0 would retry forever; the builder rejects
+        // it and so must the config.
+        assert!(
+            ExperimentConfig::from_toml("[experiment]\ndegraded_loss_probs = [1.0]").is_err()
+        );
+        // The level vectors must zip 1:1 ...
+        assert!(ExperimentConfig::from_toml(
+            "[experiment]\ndegraded_loss_probs = [0.1]\n\
+             degraded_latency_means = [1.0, 2.0]"
+        )
+        .is_err());
+        // ... and severity must be totally ordered.
+        assert!(ExperimentConfig::from_toml(
+            "[experiment]\ndegraded_loss_probs = [0.2, 0.1]\n\
+             degraded_latency_means = [0.0, 1.0]"
+        )
+        .is_err());
+        assert!(
+            ExperimentConfig::from_toml("[experiment]\ndegraded_speculate_factor = 1.0")
+                .is_err()
+        );
     }
 
     #[test]

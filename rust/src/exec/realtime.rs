@@ -192,6 +192,13 @@ impl RealtimeCoordinator {
             wasted_core_seconds: 0.0,
             horizon: None,
             busy_core_seconds: 0.0,
+            detection_latencies: Vec::new(),
+            undetected_lost_core_seconds: 0.0,
+            messages_lost: 0,
+            messages_duplicated: 0,
+            spec_launches: 0,
+            spec_kills: 0,
+            retry_hist: Vec::new(),
             trace: Some(trace),
             spans: None,
         })

@@ -14,6 +14,7 @@
 //! | `preempt`  | preemption sweep: checkpoint cost × ordering × all schedulers, fairness vs ΔT |
 //! | `service`  | service-footprint sweep: resident services × Poisson short tasks × all schedulers, windowed utilization |
 //! | `churn`    | fault-injection sweep: seeded node failure/repair churn × retry budget × all schedulers, goodput + lost work + completion coverage |
+//! | `degraded` | degraded-control-plane sweep: heartbeat detect timeout × message loss/latency severity × speculation × all schedulers, goodput + duplicate work + detection latency percentiles + effective (t_s, α_s) inflation |
 //! | `scale`    | simulator wall-time scaling at 10³–10⁶ tasks (10⁷ with `--huge`): n × P × all schedulers + ordered/preemptive + node-granular/sharded engine rows, fitted log-log exponent + Mev/s floor |
 //! | `model`    | closed loop on (t_s, α_s): fit per-backend sweeps vs paper Table 10, invert the analytic model to auto-tune the multilevel bundle size, report predicted vs simulated U; `--churn` refits under a seeded fault plan |
 
@@ -50,9 +51,11 @@ pub use scale::{
     SCALE_GATE_MIN_N, SCALE_MEVENTS_FLOOR, SCALE_PREEMPT_BG, SCALE_SHARDS,
 };
 pub use scenarios::{
-    churn, preempt, scenarios, service, ChurnCell, ChurnReport, PreemptCell, PreemptReport,
-    ScenarioCell, ScenariosReport, ServiceCell, ServiceReport, CHURN_ARRIVAL_SPAN,
-    CHURN_RETRY_BUDGETS, GANG_SIZE,
+    churn, degraded, preempt, scenarios, service, ChurnCell, ChurnReport, DegradedCell,
+    DegradedFitRow, DegradedReport, PreemptCell, PreemptReport, ScenarioCell, ScenariosReport,
+    ServiceCell, ServiceReport, CHURN_ARRIVAL_SPAN, CHURN_RETRY_BUDGETS, DEGRADED_BACKLOG,
+    DEGRADED_FIT_NS, DEGRADED_MONO_EPS, DEGRADED_STRAGGLER_EVERY, DEGRADED_STRAGGLER_FACTOR,
+    GANG_SIZE,
 };
 pub use sweep::{run_sweep, run_sweeps, SchedulerSweep, SweepPoint, SweepSpec, PROHIBITIVE_SECS};
 pub use table10::{table10, Table10Report};

@@ -24,8 +24,9 @@
 
 use super::parallel::run_cells;
 use super::sweep::{trial_mean, PROHIBITIVE_SECS};
-use crate::cluster::FaultPlan;
+use crate::cluster::{FaultPlan, MessagePlan};
 use crate::config::{ExperimentConfig, SchedulerChoice};
+use crate::model::{fit_sweep, FittedModel};
 use crate::sched::combinators::{self, Order};
 use crate::sched::{make_scheduler_scaled, RunOptions, RunResult, Scheduler};
 use crate::util::prng::Prng;
@@ -1513,6 +1514,909 @@ impl ChurnReport {
     }
 }
 
+// ---- the `degraded` experiment family -------------------------------------
+
+/// Backlog factor over the window's total core capacity: every cell
+/// submits `DEGRADED_BACKLOG · h · P / t` tasks at t = 0, so the queue
+/// never drains and every core-second a degraded control plane idles
+/// (launch latency, loss backoff) is a core-second of goodput lost at
+/// the window close — the signal the monotonicity gate rides on.
+pub const DEGRADED_BACKLOG: f64 = 1.25;
+
+/// Every this-many-th task is a straggler; the rest run the constant
+/// batch time t.
+pub const DEGRADED_STRAGGLER_EVERY: u64 = 100;
+
+/// Straggler duration multiple. Must exceed the speculation threshold
+/// (`speculate_factor ×` the streaming class mean ≈ `factor ×
+/// ~1.04 t`) so duplicates actually launch, and stay short enough
+/// that early stragglers complete inside the window — their losing
+/// duplicates are where `spec_kills` comes from.
+pub const DEGRADED_STRAGGLER_FACTOR: f64 = 5.0;
+
+/// MTBF of the shared per-trial fault plan, as a fraction of the
+/// horizon (each node fails about once per window).
+pub const DEGRADED_MTBF_FRAC: f64 = 1.0;
+
+/// MTTR as a fraction of the horizon — long against every swept
+/// `detect_timeout`, so real failures are detected, not false alarms.
+pub const DEGRADED_MTTR_FRAC: f64 = 0.25;
+
+/// Backoff base / cap (virtual s) and retry cap for lost launch RPCs.
+pub const DEGRADED_BACKOFF_BASE: f64 = 0.25;
+/// See [`DEGRADED_BACKOFF_BASE`].
+pub const DEGRADED_BACKOFF_CAP: f64 = 2.0;
+/// See [`DEGRADED_BACKOFF_BASE`].
+pub const DEGRADED_MAX_RETRIES: u32 = 4;
+
+/// Slack on the goodput-monotone-in-severity gate: kill timing shifts
+/// between severity levels (same fault plan, different dispatch
+/// instants) add noise of a few tenths of a percent to the pooled
+/// means; the latency-idle signal between adjacent default levels is
+/// an order of magnitude larger.
+pub const DEGRADED_MONO_EPS: f64 = 2e-3;
+
+/// Tasks-per-processor values of the refit phase (subset of the model
+/// experiment's sweep: enough spread to fit ΔT = t_s · n^α, cheap
+/// enough to ride inside the experiment).
+pub const DEGRADED_FIT_NS: [u32; 4] = [4, 16, 48, 240];
+
+/// Build one severity level's message plan. Zero loss and latency
+/// yield an empty (bypassed) plan, so level 0 isolates pure
+/// detection + speculation effects.
+fn degraded_message_plan(seed: u64, loss: f64, latency: f64) -> MessagePlan {
+    let mut m = MessagePlan::seeded(seed);
+    if latency > 0.0 {
+        m = m.with_latency(latency, latency, 0.5 * latency);
+    }
+    if loss > 0.0 {
+        m = m
+            .with_loss(
+                loss,
+                DEGRADED_BACKOFF_BASE,
+                DEGRADED_BACKOFF_CAP,
+                DEGRADED_MAX_RETRIES,
+            )
+            .with_duplication(0.5 * loss);
+    }
+    m.validate()
+        .unwrap_or_else(|e| panic!("degraded message plan invalid: {e}"));
+    m
+}
+
+/// One (detect-timeout, severity level, speculation, scheduler) cell.
+pub struct DegradedCell {
+    /// Failure-detection timeout; `None` is the undegraded control row
+    /// (oracular detection, perfect messages, no speculation).
+    pub detect_timeout: Option<f64>,
+    /// Launch/completion-loss probability of this cell's level.
+    pub loss_prob: f64,
+    /// Mean control-message latency (virtual s) of this cell's level.
+    pub latency_mean: f64,
+    /// Whether speculative re-execution was armed.
+    pub speculate: bool,
+    /// Scheduler display name.
+    pub scheduler: String,
+    /// One traced, horizon-bounded result per trial.
+    pub trials: Vec<RunResult>,
+}
+
+impl DegradedCell {
+    /// Mean windowed utilization across trials.
+    pub fn mean_utilization(&self) -> f64 {
+        trial_mean(&self.trials, |r| r.utilization())
+    }
+
+    /// Mean goodput utilization across trials.
+    pub fn mean_goodput(&self) -> f64 {
+        trial_mean(&self.trials, |r| r.goodput_utilization())
+    }
+
+    /// Mean executed-then-lost core-seconds across trials.
+    pub fn mean_wasted(&self) -> f64 {
+        trial_mean(&self.trials, |r| r.wasted_core_seconds)
+    }
+
+    /// Mean core-seconds lost to undetected (doomed) work.
+    pub fn mean_undetected(&self) -> f64 {
+        trial_mean(&self.trials, |r| r.undetected_lost_core_seconds)
+    }
+
+    /// Total kills across trials.
+    pub fn kills(&self) -> u64 {
+        self.trials.iter().map(|r| r.kills).sum()
+    }
+
+    /// Total lost control messages across trials.
+    pub fn messages_lost(&self) -> u64 {
+        self.trials.iter().map(|r| r.messages_lost).sum()
+    }
+
+    /// Total duplicated completions across trials.
+    pub fn messages_duplicated(&self) -> u64 {
+        self.trials.iter().map(|r| r.messages_duplicated).sum()
+    }
+
+    /// Total speculative duplicate launches across trials.
+    pub fn spec_launches(&self) -> u64 {
+        self.trials.iter().map(|r| r.spec_launches).sum()
+    }
+
+    /// Total speculation losers killed across trials.
+    pub fn spec_kills(&self) -> u64 {
+        self.trials.iter().map(|r| r.spec_kills).sum()
+    }
+
+    /// All detection latencies across trials, sorted ascending.
+    pub fn detections(&self) -> Vec<f64> {
+        let mut d: Vec<f64> = self
+            .trials
+            .iter()
+            .flat_map(|r| r.detection_latencies.iter().copied())
+            .collect();
+        d.sort_by(f64::total_cmp);
+        d
+    }
+}
+
+/// Linear-interpolated quantile of an ascending-sorted slice (NaN when
+/// empty — rendered literally, which keeps the CSV deterministic).
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * (pos - lo as f64)
+}
+
+/// One backend's (t_s, α_s) refit under the harshest control-plane
+/// degradation, next to its clean baseline — the "effective scheduler
+/// the degraded control plane behaves like".
+pub struct DegradedFitRow {
+    /// Scheduler display name.
+    pub scheduler: String,
+    /// Clean fit over [`DEGRADED_FIT_NS`].
+    pub base: Result<FittedModel, String>,
+    /// Refit of the same sweep under the harshest message plan +
+    /// detection + speculation (no fault plan: pure control-plane
+    /// inflation).
+    pub degraded: Result<FittedModel, String>,
+    /// n values skipped as prohibitive (both variants alike).
+    pub skipped: Vec<u32>,
+}
+
+impl DegradedFitRow {
+    /// Largest swept n that actually ran (anchor for the inflation
+    /// gate), when any did.
+    pub fn n_hi(&self) -> Option<u32> {
+        DEGRADED_FIT_NS
+            .iter()
+            .rev()
+            .copied()
+            .find(|n| !self.skipped.contains(n))
+    }
+}
+
+/// Full degraded-control-plane sweep report.
+pub struct DegradedReport {
+    /// Control row first, then timeout-major × severity × speculation,
+    /// scheduler-minor.
+    pub cells: Vec<DegradedCell>,
+    /// Per-backend (t_s, α_s) inflation refits.
+    pub fits: Vec<DegradedFitRow>,
+    /// Tasks per processor n of the batch stream.
+    pub n: u32,
+    /// Batch task time t = T_job / n.
+    pub t: f64,
+    /// Observation window (virtual s).
+    pub horizon: f64,
+    /// Swept detection timeouts (virtual s).
+    pub detect_timeouts: Vec<f64>,
+    /// Severity levels as (loss probability, latency mean) pairs, in
+    /// non-decreasing severity order.
+    pub levels: Vec<(f64, f64)>,
+    /// Speculation threshold factor of the spec-armed rows.
+    pub speculate_factor: f64,
+}
+
+/// Run the degraded-control-plane sweep: {undegraded control} ∪
+/// {detect timeout × severity level × speculation on/off} × every
+/// simulated scheduler family × `cfg.trials`, horizon-bounded, on a
+/// saturated backlog (so control-plane idle shows up as goodput lost
+/// at the window close), plus the per-backend (t_s, α_s) refit phase.
+/// Every cell of a trial faces the identical seeded failure schedule
+/// and every cell of a (level, trial) the identical message plan, so
+/// comparisons across schedulers and timeouts are like-for-like.
+pub fn degraded(cfg: &ExperimentConfig) -> DegradedReport {
+    let cluster = super::sweep::cluster_of(cfg);
+    let processors = cluster.total_cores();
+    let h = cfg.service_horizon;
+    let choices = SchedulerChoice::all_simulated();
+    let schedulers: Vec<Box<dyn Scheduler>> = choices
+        .iter()
+        .map(|&c| make_scheduler_scaled(c, cfg.scale_down))
+        .collect();
+    assert_eq!(
+        cfg.degraded_loss_probs.len(),
+        cfg.degraded_latency_means.len(),
+        "severity level vectors must zip (validated by the config)"
+    );
+    let levels: Vec<(f64, f64)> = cfg
+        .degraded_loss_probs
+        .iter()
+        .copied()
+        .zip(cfg.degraded_latency_means.iter().copied())
+        .collect();
+
+    // Saturated backlog: every task submitted at t = 0, with a sparse
+    // straggler population for the speculation dimension to bite on.
+    let n_scn = cfg.scenario_n.max(1);
+    let t = TABLE9_JOB_TIME_PER_PROC / n_scn as f64;
+    let n_tasks = ((DEGRADED_BACKLOG * h * processors as f64 / t).ceil() as u64).max(1);
+    let mut workload = WorkloadBuilder::constant(t)
+        .tasks(n_tasks)
+        .seed(cfg.seed)
+        .label("degraded")
+        .build();
+    for (i, task) in workload.tasks.iter_mut().enumerate() {
+        if i as u64 % DEGRADED_STRAGGLER_EVERY == 0 {
+            task.duration = DEGRADED_STRAGGLER_FACTOR * t;
+        }
+    }
+    workload
+        .validate_for(&RunOptions::with_horizon(h))
+        .unwrap_or_else(|e| panic!("degraded workload invalid: {e}"));
+
+    // One fault plan per trial, shared by every non-control cell of
+    // that trial.
+    let plans: Vec<FaultPlan> = (0..cfg.trials)
+        .map(|trial| {
+            let plan = FaultPlan::seeded(
+                cfg.seed
+                    .wrapping_add(0xDE6A_0000)
+                    .wrapping_add(trial as u64),
+                cfg.effective_nodes(),
+                DEGRADED_MTBF_FRAC * h,
+                DEGRADED_MTTR_FRAC * h,
+                h,
+            );
+            plan.validate()
+                .unwrap_or_else(|e| panic!("seeded degraded plan invalid: {e}"));
+            plan
+        })
+        .collect();
+
+    // One message plan per (severity level, trial), shared across
+    // schedulers, timeouts and the speculation toggle.
+    let msg_plans: Vec<MessagePlan> = levels
+        .iter()
+        .enumerate()
+        .flat_map(|(li, &(loss, latency))| {
+            (0..cfg.trials).map(move |trial| {
+                degraded_message_plan(
+                    cfg.seed
+                        .wrapping_add(0x4D50_0000)
+                        .wrapping_add((li as u64) << 20)
+                        .wrapping_add(trial as u64),
+                    loss,
+                    latency,
+                )
+            })
+        })
+        .collect();
+
+    struct Row {
+        timeout: Option<f64>,
+        li: usize,
+        spec: bool,
+    }
+    let mut rows: Vec<Row> = vec![Row {
+        timeout: None,
+        li: 0,
+        spec: false,
+    }];
+    for &timeout in &cfg.degraded_detect_timeouts {
+        for li in 0..levels.len() {
+            for spec in [false, true] {
+                rows.push(Row {
+                    timeout: Some(timeout),
+                    li,
+                    spec,
+                });
+            }
+        }
+    }
+
+    struct Cell {
+        row: usize,
+        sched: usize,
+        slot: usize,
+        trial: usize,
+        seed: u64,
+    }
+    let mut cells: Vec<Cell> = Vec::new();
+    let mut out: Vec<DegradedCell> = Vec::new();
+    for (ri, row) in rows.iter().enumerate() {
+        for (ki, sched) in schedulers.iter().enumerate() {
+            for trial in 0..cfg.trials {
+                cells.push(Cell {
+                    row: ri,
+                    sched: ki,
+                    slot: out.len(),
+                    trial: trial as usize,
+                    seed: cfg
+                        .seed
+                        .wrapping_add(trial as u64)
+                        .wrapping_add((ri as u64) << 40)
+                        .wrapping_add((ki as u64) << 16),
+                });
+            }
+            let (loss, latency) = levels[row.li];
+            out.push(DegradedCell {
+                detect_timeout: row.timeout,
+                loss_prob: if row.timeout.is_some() { loss } else { 0.0 },
+                latency_mean: if row.timeout.is_some() { latency } else { 0.0 },
+                speculate: row.spec,
+                scheduler: sched.name().to_string(),
+                trials: Vec::with_capacity(cfg.trials as usize),
+            });
+        }
+    }
+
+    let results = run_cells(cfg.effective_jobs(), &cells, |cell, scratch| {
+        let row = &rows[cell.row];
+        let mut options = RunOptions {
+            collect_trace: true,
+            horizon: Some(h),
+            ..Default::default()
+        };
+        if let Some(timeout) = row.timeout {
+            options.faults = plans[cell.trial].clone();
+            options.messages =
+                msg_plans[row.li * cfg.trials as usize + cell.trial].clone();
+            options = options.detection(timeout, 0.5 * timeout).speculation(
+                if row.spec {
+                    cfg.degraded_speculate_factor
+                } else {
+                    0.0
+                },
+            );
+        }
+        let sched = schedulers[cell.sched].as_ref();
+        let r = sched.run_with_scratch(&workload, &cluster, cell.seed, &options, scratch);
+        r.check_invariants()
+            .unwrap_or_else(|e| panic!("{} on degraded: {e}", sched.name()));
+        r
+    });
+    for (cell, result) in cells.iter().zip(results) {
+        out[cell.slot].trials.push(result);
+    }
+
+    let fits = degraded_fits(cfg, &cluster, &schedulers, &levels);
+
+    DegradedReport {
+        cells: out,
+        fits,
+        n: n_scn,
+        t,
+        horizon: h,
+        detect_timeouts: cfg.degraded_detect_timeouts.clone(),
+        levels,
+        speculate_factor: cfg.degraded_speculate_factor,
+    }
+}
+
+/// The refit phase: per-backend clean vs degraded launch-latency
+/// sweeps over [`DEGRADED_FIT_NS`] (run-to-completion, no fault plan),
+/// pooled and fitted to ΔT = t_s · n^α — the effective (t_s, α_s)
+/// inflation a lossy, delayed control plane imposes.
+fn degraded_fits(
+    cfg: &ExperimentConfig,
+    cluster: &crate::cluster::ClusterSpec,
+    schedulers: &[Box<dyn Scheduler>],
+    levels: &[(f64, f64)],
+) -> Vec<DegradedFitRow> {
+    let processors = cluster.total_cores();
+    let workloads: Vec<(u32, Workload)> = DEGRADED_FIT_NS
+        .iter()
+        .map(|&n| (n, super::sweep::workload_for(n, processors, "degraded-fit")))
+        .collect();
+    let &(loss, latency) = levels.last().expect("levels validated non-empty");
+    let timeout = cfg
+        .degraded_detect_timeouts
+        .iter()
+        .copied()
+        .fold(f64::NEG_INFINITY, f64::max);
+
+    struct FitCell {
+        sched: usize,
+        wi: usize,
+        degraded: bool,
+        seed: u64,
+        msg_seed: u64,
+    }
+    let mut cells: Vec<FitCell> = Vec::new();
+    let mut skipped: Vec<Vec<u32>> = vec![Vec::new(); schedulers.len()];
+    for (ki, sched) in schedulers.iter().enumerate() {
+        for (wi, (n, w)) in workloads.iter().enumerate() {
+            if sched.projected_runtime(w, cluster) > PROHIBITIVE_SECS {
+                skipped[ki].push(*n);
+                continue;
+            }
+            for degraded in [false, true] {
+                for trial in 0..cfg.trials {
+                    cells.push(FitCell {
+                        sched: ki,
+                        wi,
+                        degraded,
+                        seed: cfg
+                            .seed
+                            .wrapping_add(trial as u64)
+                            .wrapping_add((wi as u64) << 40)
+                            .wrapping_add((ki as u64) << 16)
+                            .wrapping_add(u64::from(degraded) << 8),
+                        // The plan is keyed by (n, trial) only, so every
+                        // scheduler faces the identical message stream.
+                        msg_seed: cfg
+                            .seed
+                            .wrapping_add(0xF17D_0000)
+                            .wrapping_add((wi as u64) << 20)
+                            .wrapping_add(trial as u64),
+                    });
+                }
+            }
+        }
+    }
+
+    let results = run_cells(cfg.effective_jobs(), &cells, |cell, scratch| {
+        let (_, ref w) = workloads[cell.wi];
+        let options = if cell.degraded {
+            RunOptions::with_messages(degraded_message_plan(cell.msg_seed, loss, latency))
+                .detection(timeout, 0.5 * timeout)
+                .speculation(cfg.degraded_speculate_factor)
+        } else {
+            RunOptions::default()
+        };
+        let sched = schedulers[cell.sched].as_ref();
+        let r = sched.run_with_scratch(w, cluster, cell.seed, &options, scratch);
+        r.check_invariants()
+            .unwrap_or_else(|e| panic!("{} on degraded-fit: {e}", sched.name()));
+        r
+    });
+
+    let mut base_pts: Vec<Vec<(f64, f64)>> = vec![Vec::new(); schedulers.len()];
+    let mut deg_pts: Vec<Vec<(f64, f64)>> = vec![Vec::new(); schedulers.len()];
+    for (cell, r) in cells.iter().zip(&results) {
+        let (n, _) = workloads[cell.wi];
+        let pts = if cell.degraded {
+            &mut deg_pts[cell.sched]
+        } else {
+            &mut base_pts[cell.sched]
+        };
+        pts.push((n as f64, r.delta_t()));
+    }
+    schedulers
+        .iter()
+        .enumerate()
+        .map(|(ki, s)| DegradedFitRow {
+            scheduler: s.name().to_string(),
+            base: fit_sweep(s.name(), &base_pts[ki]),
+            degraded: fit_sweep(&format!("{}+degraded", s.name()), &deg_pts[ki]),
+            skipped: skipped[ki].clone(),
+        })
+        .collect()
+}
+
+impl DegradedReport {
+    /// Rendered summary table of the sweep cells.
+    pub fn render_table(&self) -> Table {
+        let mut table = Table::new(
+            format!(
+                "Degraded control plane — goodput under imperfect detection, \
+                 lossy/delayed messages and speculation (horizon={} s, batch \
+                 t={} s at n={}, backlog ×{})",
+                fnum(self.horizon),
+                fnum(self.t),
+                self.n,
+                DEGRADED_BACKLOG
+            ),
+            &[
+                "detect",
+                "loss",
+                "latency",
+                "spec",
+                "scheduler",
+                "U(goodput)",
+                "U(window)",
+                "wasted core-s",
+                "undetected",
+                "kills",
+                "msgs lost",
+                "msgs dup",
+                "spec L/K",
+                "detect p50/p99",
+            ],
+        );
+        for c in &self.cells {
+            let d = c.detections();
+            table.row(&[
+                c.detect_timeout
+                    .map_or("none".to_string(), |t| format!("{t:.1}")),
+                format!("{:.2}", c.loss_prob),
+                format!("{:.2}", c.latency_mean),
+                if c.speculate { "on" } else { "off" }.to_string(),
+                c.scheduler.clone(),
+                format!("{:.3}", c.mean_goodput()),
+                format!("{:.3}", c.mean_utilization()),
+                fnum(c.mean_wasted()),
+                fnum(c.mean_undetected()),
+                c.kills().to_string(),
+                c.messages_lost().to_string(),
+                c.messages_duplicated().to_string(),
+                format!("{}/{}", c.spec_launches(), c.spec_kills()),
+                format!(
+                    "{:.2}/{:.2}",
+                    percentile(&d, 0.50),
+                    percentile(&d, 0.99)
+                ),
+            ]);
+        }
+        table
+    }
+
+    /// Rendered (t_s, α_s) inflation table of the refit phase.
+    pub fn render_fits(&self) -> Table {
+        let mut table = Table::new(
+            format!(
+                "Effective (t_s, α_s) under the harshest message plan \
+                 (loss={:.2}, latency={:.2} s; no faults)",
+                self.levels.last().map_or(0.0, |l| l.0),
+                self.levels.last().map_or(0.0, |l| l.1)
+            ),
+            &[
+                "scheduler",
+                "t_s",
+                "α_s",
+                "R²",
+                "t_s (degraded)",
+                "α_s (degraded)",
+                "R² (degraded)",
+                "ΔT shift @n_hi",
+                "skipped n",
+            ],
+        );
+        for f in &self.fits {
+            let n_hi = f.n_hi().map_or(0.0, f64::from);
+            let shift = match (&f.base, &f.degraded) {
+                (Ok(b), Ok(d)) if n_hi > 0.0 => {
+                    format!("{:+.1}", d.delta_t(n_hi) - b.delta_t(n_hi))
+                }
+                _ => "—".to_string(),
+            };
+            let fmt = |fit: &Result<FittedModel, String>, pick: fn(&FittedModel) -> f64| {
+                fit.as_ref()
+                    .map_or("—".to_string(), |m| format!("{:.3}", pick(m)))
+            };
+            table.row(&[
+                f.scheduler.clone(),
+                fmt(&f.base, |m| m.t_s),
+                fmt(&f.base, |m| m.alpha_s),
+                fmt(&f.base, |m| m.r2),
+                fmt(&f.degraded, |m| m.t_s),
+                fmt(&f.degraded, |m| m.alpha_s),
+                fmt(&f.degraded, |m| m.r2),
+                shift,
+                format!("{:?}", f.skipped),
+            ]);
+        }
+        table
+    }
+
+    /// CSV series, one row per sweep trial.
+    pub fn to_csv(&self) -> String {
+        let mut table = Table::new(
+            "",
+            &[
+                "detect_timeout",
+                "loss_prob",
+                "latency_mean",
+                "speculate",
+                "scheduler",
+                "trial",
+                "utilization",
+                "goodput_utilization",
+                "wasted_core_s",
+                "undetected_lost_core_s",
+                "kills",
+                "failed",
+                "completed",
+                "n_tasks",
+                "messages_lost",
+                "messages_duplicated",
+                "spec_launches",
+                "spec_kills",
+                "detections",
+                "detect_p50",
+                "detect_p99",
+            ],
+        );
+        for c in &self.cells {
+            for (trial, r) in c.trials.iter().enumerate() {
+                let mut d = r.detection_latencies.clone();
+                d.sort_by(f64::total_cmp);
+                table.row(&[
+                    c.detect_timeout
+                        .map_or("none".to_string(), |t| format!("{t:.3}")),
+                    format!("{:.3}", c.loss_prob),
+                    format!("{:.3}", c.latency_mean),
+                    u8::from(c.speculate).to_string(),
+                    c.scheduler.clone(),
+                    trial.to_string(),
+                    format!("{:.6}", r.utilization()),
+                    format!("{:.6}", r.goodput_utilization()),
+                    format!("{:.3}", r.wasted_core_seconds),
+                    format!("{:.3}", r.undetected_lost_core_seconds),
+                    r.kills.to_string(),
+                    r.failed.to_string(),
+                    r.completed.to_string(),
+                    r.n_tasks.to_string(),
+                    r.messages_lost.to_string(),
+                    r.messages_duplicated.to_string(),
+                    r.spec_launches.to_string(),
+                    r.spec_kills.to_string(),
+                    d.len().to_string(),
+                    format!("{:.4}", percentile(&d, 0.50)),
+                    format!("{:.4}", percentile(&d, 0.99)),
+                ]);
+            }
+        }
+        table.to_csv()
+    }
+
+    /// Mean goodput pooled over every non-control cell of one severity
+    /// level (all timeouts, speculation toggles, schedulers, trials).
+    fn level_goodput(&self, li: usize) -> f64 {
+        let (loss, latency) = self.levels[li];
+        let mut sum = 0.0;
+        let mut count = 0u64;
+        for c in &self.cells {
+            if c.detect_timeout.is_some() && c.loss_prob == loss && c.latency_mean == latency {
+                for r in &c.trials {
+                    sum += r.goodput_utilization();
+                    count += 1;
+                }
+            }
+        }
+        if count == 0 {
+            f64::NAN
+        } else {
+            sum / count as f64
+        }
+    }
+
+    /// Structural shape checks, CI-gated:
+    ///
+    /// - every cell ran all its trials as windows of the configured
+    ///   horizon, with goodput ≤ raw utilization;
+    /// - the control row is *pure*: zero kills, failures, wasted or
+    ///   duplicate work, lost/duplicated messages and detections — the
+    ///   degraded-off bypass must cost nothing — and the zero-overhead
+    ///   reference saturates its window;
+    /// - every recorded detection latency ≥ the cell's configured
+    ///   timeout (detection can never be faster than the timeout);
+    /// - speculation-off cells launch no duplicates, loss-free levels
+    ///   lose/duplicate no messages;
+    /// - pooled goodput is monotone non-increasing in severity level;
+    /// - the machinery was exercised: the harshest level lost and
+    ///   duplicated messages, failures were detected, doomed work was
+    ///   charged, and spec-armed rows launched (and killed) duplicates;
+    /// - the refit phase fitted every backend, and the degraded fit's
+    ///   ΔT at the anchor n is never below the clean fit's.
+    pub fn check_shape(&self, trials: u32) -> Result<(), String> {
+        for c in &self.cells {
+            let label = format!(
+                "detect {:?} loss {} latency {} spec {} × {}",
+                c.detect_timeout, c.loss_prob, c.latency_mean, c.speculate, c.scheduler
+            );
+            if c.trials.len() != trials as usize {
+                return Err(format!(
+                    "{label}: {} of {trials} trials ran",
+                    c.trials.len()
+                ));
+            }
+            for r in &c.trials {
+                if r.horizon != Some(self.horizon) {
+                    return Err(format!(
+                        "{label}: result horizon {:?} != {}",
+                        r.horizon, self.horizon
+                    ));
+                }
+                if (r.t_total - self.horizon).abs() > 1e-9 {
+                    return Err(format!(
+                        "{label}: windowed t_total {} != horizon {}",
+                        r.t_total, self.horizon
+                    ));
+                }
+                if r.goodput_utilization() > r.utilization() + 1e-9 {
+                    return Err(format!(
+                        "{label}: goodput {} exceeds utilization {}",
+                        r.goodput_utilization(),
+                        r.utilization()
+                    ));
+                }
+                match c.detect_timeout {
+                    None => {
+                        if r.kills != 0
+                            || r.failed != 0
+                            || r.wasted_core_seconds != 0.0
+                            || r.spec_launches != 0
+                            || r.spec_kills != 0
+                            || r.messages_lost != 0
+                            || r.messages_duplicated != 0
+                            || !r.detection_latencies.is_empty()
+                            || r.undetected_lost_core_seconds != 0.0
+                        {
+                            return Err(format!(
+                                "{label}: control row is not pure — kills={} \
+                                 failed={} wasted={} spec={}/{} msgs={}/{} \
+                                 detections={} undetected={}",
+                                r.kills,
+                                r.failed,
+                                r.wasted_core_seconds,
+                                r.spec_launches,
+                                r.spec_kills,
+                                r.messages_lost,
+                                r.messages_duplicated,
+                                r.detection_latencies.len(),
+                                r.undetected_lost_core_seconds
+                            ));
+                        }
+                    }
+                    Some(timeout) => {
+                        for &d in &r.detection_latencies {
+                            if d + 1e-9 < timeout {
+                                return Err(format!(
+                                    "{label}: detection latency {d} beats the \
+                                     configured timeout {timeout}"
+                                ));
+                            }
+                        }
+                        if !c.speculate && r.spec_launches != 0 {
+                            return Err(format!(
+                                "{label}: speculation-off cell launched {} duplicates",
+                                r.spec_launches
+                            ));
+                        }
+                        if c.loss_prob == 0.0
+                            && (r.messages_lost != 0 || r.messages_duplicated != 0)
+                        {
+                            return Err(format!(
+                                "{label}: loss-free level lost {} / duplicated {} messages",
+                                r.messages_lost, r.messages_duplicated
+                            ));
+                        }
+                    }
+                }
+            }
+            // On a 1.25× backlog the zero-overhead reference never
+            // idles a slot fault-free, so the control row pins the
+            // saturation the monotonicity gate rides on.
+            if c.detect_timeout.is_none()
+                && c.scheduler == "IdealFIFO"
+                && c.mean_utilization() < 0.999
+            {
+                return Err(format!(
+                    "control × IdealFIFO: windowed utilization {} < 0.999 — \
+                     the backlog no longer saturates the window",
+                    c.mean_utilization()
+                ));
+            }
+        }
+
+        // Goodput monotone non-increasing in severity.
+        let pooled: Vec<f64> = (0..self.levels.len())
+            .map(|li| self.level_goodput(li))
+            .collect();
+        for (li, w) in pooled.windows(2).enumerate() {
+            if !(w[0].is_finite() && w[1].is_finite()) {
+                return Err(format!("level goodput NaN: {pooled:?}"));
+            }
+            if w[1] > w[0] + DEGRADED_MONO_EPS {
+                return Err(format!(
+                    "goodput not monotone in severity: level {} = {} > level {} = {}",
+                    li + 1,
+                    w[1],
+                    li,
+                    w[0]
+                ));
+            }
+        }
+
+        // The machinery must actually have been exercised.
+        let harsh = self.levels.last().copied().unwrap_or((0.0, 0.0));
+        if harsh.0 > 0.0 {
+            let (lost, dup): (u64, u64) = self
+                .cells
+                .iter()
+                .filter(|c| {
+                    c.detect_timeout.is_some()
+                        && c.loss_prob == harsh.0
+                        && c.latency_mean == harsh.1
+                })
+                .fold((0, 0), |(l, d), c| {
+                    (l + c.messages_lost(), d + c.messages_duplicated())
+                });
+            if lost == 0 || dup == 0 {
+                return Err(format!(
+                    "harshest level ({}, {}) lost {lost} / duplicated {dup} \
+                     messages — the message machinery was not exercised",
+                    harsh.0, harsh.1
+                ));
+            }
+        }
+        let detections: usize = self
+            .cells
+            .iter()
+            .filter(|c| c.detect_timeout.is_some())
+            .map(|c| c.detections().len())
+            .sum();
+        if detections == 0 {
+            return Err("no failure was ever detected — the heartbeat \
+                        machinery was not exercised"
+                .to_string());
+        }
+        let undetected: f64 = self
+            .cells
+            .iter()
+            .filter(|c| c.detect_timeout.is_some())
+            .map(|c| c.mean_undetected())
+            .sum();
+        if undetected <= 0.0 {
+            return Err("no doomed (undetected) work was ever charged".to_string());
+        }
+        let (spec_l, spec_k): (u64, u64) = self
+            .cells
+            .iter()
+            .filter(|c| c.speculate)
+            .fold((0, 0), |(l, k), c| (l + c.spec_launches(), k + c.spec_kills()));
+        if spec_l == 0 || spec_k == 0 {
+            return Err(format!(
+                "spec-armed rows launched {spec_l} / killed {spec_k} duplicates \
+                 — the speculation machinery was not exercised"
+            ));
+        }
+
+        // Refit gate: every backend fitted, and degradation never
+        // *reduces* the fitted overhead at the anchor point.
+        for f in &self.fits {
+            let base = f
+                .base
+                .as_ref()
+                .map_err(|e| format!("{}: clean fit failed: {e}", f.scheduler))?;
+            let deg = f
+                .degraded
+                .as_ref()
+                .map_err(|e| format!("{}: degraded fit failed: {e}", f.scheduler))?;
+            let Some(n_hi) = f.n_hi() else {
+                return Err(format!("{}: every fit n was skipped", f.scheduler));
+            };
+            let n_hi = f64::from(n_hi);
+            if deg.delta_t(n_hi) + 1e-6 < base.delta_t(n_hi) {
+                return Err(format!(
+                    "{}: degraded ΔT({n_hi}) = {} below clean ΔT = {} — \
+                     control-plane degradation cannot speed a scheduler up",
+                    f.scheduler,
+                    deg.delta_t(n_hi),
+                    base.delta_t(n_hi)
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1656,6 +2560,68 @@ mod tests {
                 assert_eq!(ra.events, rb.events);
                 assert_eq!(ra.kills, rb.kills);
                 assert_eq!(ra.failed, rb.failed);
+            }
+        }
+    }
+
+    #[test]
+    fn degraded_runs_and_passes_shape_checks() {
+        let cfg = quick_cfg();
+        let rep = degraded(&cfg);
+        rep.check_shape(cfg.trials).unwrap();
+        // Control row + 2 timeouts × 3 levels × {spec off, on}, × 6
+        // schedulers; the horizon bounds every sweep run.
+        assert_eq!(
+            rep.cells.len(),
+            (1 + rep.detect_timeouts.len() * rep.levels.len() * 2) * 6
+        );
+        assert_eq!(rep.fits.len(), 6);
+        assert!(!rep.to_csv().is_empty());
+    }
+
+    #[test]
+    fn degraded_deterministic_across_jobs() {
+        let mut a_cfg = quick_cfg();
+        a_cfg.jobs = 1;
+        let mut b_cfg = a_cfg.clone();
+        b_cfg.jobs = 4;
+        let a = degraded(&a_cfg);
+        let b = degraded(&b_cfg);
+        assert_eq!(a.cells.len(), b.cells.len());
+        assert_eq!(
+            a.to_csv(),
+            b.to_csv(),
+            "degraded CSVs must not depend on --jobs"
+        );
+        for (ca, cb) in a.cells.iter().zip(&b.cells) {
+            assert_eq!(ca.scheduler, cb.scheduler);
+            for (ra, rb) in ca.trials.iter().zip(&cb.trials) {
+                assert_eq!(
+                    ra.busy_core_seconds.to_bits(),
+                    rb.busy_core_seconds.to_bits(),
+                    "{} detect {:?}",
+                    ca.scheduler,
+                    ca.detect_timeout
+                );
+                assert_eq!(
+                    ra.wasted_core_seconds.to_bits(),
+                    rb.wasted_core_seconds.to_bits()
+                );
+                assert_eq!(ra.events, rb.events);
+                assert_eq!(ra.messages_lost, rb.messages_lost);
+                assert_eq!(ra.messages_duplicated, rb.messages_duplicated);
+                assert_eq!(ra.spec_launches, rb.spec_launches);
+                assert_eq!(ra.detection_latencies, rb.detection_latencies);
+            }
+        }
+        for (fa, fb) in a.fits.iter().zip(&b.fits) {
+            assert_eq!(fa.scheduler, fb.scheduler);
+            match (&fa.degraded, &fb.degraded) {
+                (Ok(x), Ok(y)) => {
+                    assert_eq!(x.t_s.to_bits(), y.t_s.to_bits(), "{}", fa.scheduler);
+                    assert_eq!(x.alpha_s.to_bits(), y.alpha_s.to_bits());
+                }
+                (x, y) => assert_eq!(x.is_err(), y.is_err()),
             }
         }
     }

@@ -84,9 +84,9 @@ pub const RULES: &[RuleInfo] = &[
     RuleInfo {
         name: RULE_FAULT_HOOKS,
         scope: "src/ SchedPolicy impls outside #[cfg(test)] modules",
-        rationale: "every policy must state its on_node_{fail,drain,recover} \
-                    behaviour, if only as a documented no-op, so churn semantics \
-                    are a decision rather than an accident",
+        rationale: "every policy must state its on_node_{fail,suspected,drain,recover} \
+                    behaviour, if only as a documented no-op, so churn and \
+                    detection semantics are a decision rather than an accident",
     },
     RuleInfo {
         name: RULE_EXPERIMENT_WIRING,
@@ -108,7 +108,16 @@ pub fn is_allowable(rule: &str) -> bool {
 }
 
 /// Hooks every non-test `SchedPolicy` impl must define.
-const REQUIRED_HOOKS: &[&str] = &["on_node_fail", "on_node_drain", "on_node_recover"];
+/// `on_node_suspected` joined the list with the degraded control
+/// plane: under heartbeat detection it replaces `on_node_fail` as the
+/// instant a failure becomes visible, so a policy that handles one but
+/// not the other silently strands requeued work in detection runs.
+const REQUIRED_HOOKS: &[&str] = &[
+    "on_node_fail",
+    "on_node_suspected",
+    "on_node_drain",
+    "on_node_recover",
+];
 
 fn deterministic_scope(rel: &str) -> bool {
     const DIRS: &[&str] = &[
@@ -369,8 +378,8 @@ fn fault_hook_rule(rel: &str, lexed: &Lexed) -> Vec<Diagnostic> {
                 RULE_FAULT_HOOKS,
                 format!(
                     "`SchedPolicy` impl is missing fault hooks: {} — every policy \
-                     must state its fail/drain/recover behaviour (an explicit no-op \
-                     with a comment counts)",
+                     must state its fail/suspected/drain/recover behaviour (an \
+                     explicit no-op with a comment counts)",
                     missing.join(", ")
                 ),
             ));

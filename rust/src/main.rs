@@ -4,7 +4,8 @@
 //! Subcommands:
 //!   features    render the paper's feature-comparison Tables 1–7
 //!   experiment  run table9 | table10 | fig4 | fig5 | fig6 | fig7 |
-//!               scenarios | preempt | service | churn | scale | model | all
+//!               scenarios | preempt | service | churn | degraded |
+//!               scale | model | all
 //!   serve       realtime mini-cluster (leader + worker threads, PJRT payloads)
 //!   validate    run every experiment's shape checks at reduced scale
 //!
@@ -53,7 +54,7 @@ fn usage() {
         "usage: sssched <command> [options]\n\
          commands:\n\
          \x20 features   [--table 1..7] [--csv]\n\
-         \x20 experiment <table9|table10|fig4|fig5|fig6|fig7|scenarios|preempt|service|churn|scale|model|all> \
+         \x20 experiment <table9|table10|fig4|fig5|fig6|fig7|scenarios|preempt|service|churn|degraded|scale|model|all> \
          [--config f] [--quick] [--huge] [--churn] [--trials N] [--jobs N] [--out-dir d] [--artifacts d] [--csv]\n\
          \x20 serve      [--workers N] [--tasks N] [--task-ms MS] \
          [--payload sleep|spin|analytics] [--ts SECS] [--artifacts d]\n\
@@ -228,6 +229,20 @@ fn cmd_experiment(args: &Args) -> i32 {
                 println!("shape checks (incl. fault-free coverage gate): OK");
                 write_out(&cfg, "churn.csv", &rep.to_csv());
             }
+            "degraded" => {
+                let rep = harness::degraded(&cfg);
+                println!("{}", rep.render_table().render());
+                println!("{}", rep.render_fits().render());
+                if let Err(e) = rep.check_shape(cfg.trials) {
+                    eprintln!("shape check FAILED: {e}");
+                    return 1;
+                }
+                println!(
+                    "shape checks (incl. control-row purity + goodput \
+                     monotonicity + detection-latency floor): OK"
+                );
+                write_out(&cfg, "degraded.csv", &rep.to_csv());
+            }
             "scale" => {
                 let rep = harness::scale(&cfg);
                 println!("{}", rep.render_table().render());
@@ -380,6 +395,10 @@ fn cmd_validate(args: &Args) -> i32 {
         harness::service(&cfg).check_shape(cfg.trials),
     );
     check("churn shapes", harness::churn(&cfg).check_shape(cfg.trials));
+    check(
+        "degraded shapes",
+        harness::degraded(&cfg).check_shape(cfg.trials),
+    );
     check("scale shapes", harness::scale(&cfg).check_shape(&cfg));
     check("model shapes", harness::model(&cfg, false).check_shape(&cfg));
     if failures == 0 {

@@ -200,6 +200,20 @@ impl SchedPolicy for BatchPolicy {
         }
     }
 
+    fn on_node_suspected(
+        &mut self,
+        ctx: &mut KernelCtx,
+        now: Time,
+        _node: crate::cluster::NodeId,
+    ) {
+        // Late detection looks exactly like the failure itself from the
+        // queue's side: killed tasks are already requeued, so run the
+        // dispatch pass a release would have triggered.
+        if !ctx.has_more_events_at(now) {
+            self.pass(ctx, now);
+        }
+    }
+
     fn on_node_drain(&mut self, ctx: &mut KernelCtx, now: Time, _node: crate::cluster::NodeId) {
         // A drain frees nothing and requeues nothing, but the
         // decision-instant discipline (see `on_arrive`) defers the

@@ -157,6 +157,11 @@ impl SchedPolicy for CentralizedPolicy<'_> {
     // node's slots simply show up free to the next dispatch scan.
     fn on_node_fail(&mut self, _ctx: &mut KernelCtx, _now: Time, _node: NodeId) {}
 
+    fn on_node_suspected(&mut self, _ctx: &mut KernelCtx, _now: Time, _node: NodeId) {
+        // Same reasoning as on_node_fail: the next queue-management
+        // cycle re-admits whatever the (late) detection requeued.
+    }
+
     fn on_node_drain(&mut self, _ctx: &mut KernelCtx, _now: Time, _node: NodeId) {}
 
     fn on_node_recover(&mut self, _ctx: &mut KernelCtx, _now: Time, _node: NodeId) {}

@@ -362,6 +362,16 @@ impl<P: SchedPolicy> SchedPolicy for Ordered<P> {
         self.inner.on_node_fail(ctx, now, node);
     }
 
+    fn on_node_suspected(&mut self, ctx: &mut KernelCtx, now: Time, node: NodeId) {
+        // Same requeue shape as an instant-detection failure.
+        self.refresh(ctx);
+        self.inner.on_node_suspected(ctx, now, node);
+    }
+
+    fn on_message_lost(&mut self, ctx: &mut KernelCtx, now: Time, task: TaskId, slot: SlotId) {
+        self.inner.on_message_lost(ctx, now, task, slot);
+    }
+
     fn on_node_drain(&mut self, ctx: &mut KernelCtx, now: Time, node: NodeId) {
         self.inner.on_node_drain(ctx, now, node);
     }
@@ -488,6 +498,16 @@ impl<P: SchedPolicy> SchedPolicy for Preemptive<P> {
         // capacity to track here — the next preemption pass simply sees
         // the smaller free pool.
         self.inner.on_node_fail(ctx, now, node);
+    }
+
+    fn on_node_suspected(&mut self, ctx: &mut KernelCtx, now: Time, node: NodeId) {
+        // Like on_node_fail: detection parks slots instantly, nothing
+        // in-flight to track.
+        self.inner.on_node_suspected(ctx, now, node);
+    }
+
+    fn on_message_lost(&mut self, ctx: &mut KernelCtx, now: Time, task: TaskId, slot: SlotId) {
+        self.inner.on_message_lost(ctx, now, task, slot);
     }
 
     fn on_node_drain(&mut self, ctx: &mut KernelCtx, now: Time, node: NodeId) {
@@ -652,6 +672,12 @@ impl<P: SchedPolicy + ?Sized> SchedPolicy for Box<P> {
     }
     fn on_node_fail(&mut self, ctx: &mut KernelCtx, now: Time, node: NodeId) {
         (**self).on_node_fail(ctx, now, node)
+    }
+    fn on_node_suspected(&mut self, ctx: &mut KernelCtx, now: Time, node: NodeId) {
+        (**self).on_node_suspected(ctx, now, node)
+    }
+    fn on_message_lost(&mut self, ctx: &mut KernelCtx, now: Time, task: TaskId, slot: SlotId) {
+        (**self).on_message_lost(ctx, now, task, slot)
     }
     fn on_node_drain(&mut self, ctx: &mut KernelCtx, now: Time, node: NodeId) {
         (**self).on_node_drain(ctx, now, node)

@@ -58,6 +58,12 @@ impl SchedPolicy for IdealPolicy {
         ctx.drain_fifo(&mut |_, _| Launch::start(now));
     }
 
+    fn on_node_suspected(&mut self, ctx: &mut KernelCtx, now: Time, _node: NodeId) {
+        // Detection is the instant the failure becomes visible: react
+        // exactly as on_node_fail would have.
+        ctx.drain_fifo(&mut |_, _| Launch::start(now));
+    }
+
     fn on_node_drain(&mut self, _ctx: &mut KernelCtx, _now: Time, _node: NodeId) {
         // Deliberate no-op: a drain only parks the node's *free* slots
         // (the pool refuses new placement kernel-side) and kills

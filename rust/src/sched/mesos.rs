@@ -137,6 +137,11 @@ impl SchedPolicy for MesosPolicy<'_> {
     // back in the next offer.
     fn on_node_fail(&mut self, _ctx: &mut KernelCtx, _now: Time, _node: NodeId) {}
 
+    fn on_node_suspected(&mut self, _ctx: &mut KernelCtx, _now: Time, _node: NodeId) {
+        // Same as on_node_fail: the next offer round is built from the
+        // live pool, which the (late) detection just shrank.
+    }
+
     fn on_node_drain(&mut self, _ctx: &mut KernelCtx, _now: Time, _node: NodeId) {}
 
     fn on_node_recover(&mut self, _ctx: &mut KernelCtx, _now: Time, _node: NodeId) {}

@@ -1,7 +1,7 @@
 //! Simulation run results and the utilization arithmetic of the paper's
 //! Section 4/5: U = T_job / T_total.
 
-use crate::cluster::FaultPlan;
+use crate::cluster::{FaultPlan, MessagePlan};
 use crate::util::stats::{Summary, WAIT_SAMPLE_CAP};
 use crate::workload::TraceRecord;
 
@@ -35,6 +35,28 @@ pub struct RunOptions {
     /// placement, so results are *not* bit-identical to the default
     /// per-slot mode.
     pub node_granular: bool,
+    /// Seeded control-plane perturbation: per-message latency draws,
+    /// launch loss with capped exponential backoff, completion
+    /// duplication. Empty (the default) bypasses the message machinery
+    /// entirely — runs are bit-identical to pre-message-plan builds.
+    pub messages: MessagePlan,
+    /// Failure-detection timeout (seconds). 0 (the default) keeps the
+    /// oracular instant-detection path: a `NodeFail` retires capacity
+    /// and kills its tasks at the fail instant. When > 0, a failed
+    /// node is only `Suspected` after this long without a heartbeat;
+    /// doomed launches still target it in the window (work lost on
+    /// detection) and a recovery inside the window is a free false
+    /// alarm.
+    pub detect_timeout: f64,
+    /// Heartbeat emission period (seconds); 0 disables the explicit
+    /// heartbeat events (detection then runs purely on the fail-timer).
+    /// Only meaningful with `detect_timeout > 0`.
+    pub heartbeat_period: f64,
+    /// Speculative re-execution threshold: a task running longer than
+    /// `speculate_factor ×` its class's streaming runtime estimate gets
+    /// a duplicate launch; first completion wins and the loser's work
+    /// counts as wasted. 0 (the default) disables speculation.
+    pub speculate_factor: f64,
 }
 
 impl RunOptions {
@@ -61,6 +83,41 @@ impl RunOptions {
             faults,
             ..Default::default()
         }
+    }
+
+    /// Message-perturbing options.
+    pub fn with_messages(messages: MessagePlan) -> Self {
+        Self {
+            messages,
+            ..Default::default()
+        }
+    }
+
+    /// Set the message plan (builder-style).
+    pub fn messages(mut self, messages: MessagePlan) -> Self {
+        self.messages = messages;
+        self
+    }
+
+    /// Set heartbeat-based failure detection (builder-style).
+    pub fn detection(mut self, detect_timeout: f64, heartbeat_period: f64) -> Self {
+        self.detect_timeout = detect_timeout;
+        self.heartbeat_period = heartbeat_period;
+        self
+    }
+
+    /// Set the speculative re-execution factor (builder-style).
+    pub fn speculation(mut self, speculate_factor: f64) -> Self {
+        self.speculate_factor = speculate_factor;
+        self
+    }
+
+    /// True iff any degraded-control-plane mechanism is active. False
+    /// (the default) is the zero-cost bypass: no heartbeat/suspicion
+    /// events, no message RNG stream, no speculation deadlines, and
+    /// runs bit-identical to pre-degraded builds.
+    pub fn degraded_active(&self) -> bool {
+        !self.messages.is_empty() || self.detect_timeout > 0.0 || self.speculate_factor > 0.0
     }
 }
 
@@ -160,6 +217,33 @@ pub struct RunResult {
     /// core count. Always 0 for horizonless runs, whose utilization
     /// derives from `t_job / t_total` instead.
     pub busy_core_seconds: f64,
+    /// Per-failure detection latency (detection instant − fail
+    /// instant), one entry per *detected* real failure, in detection
+    /// order. Empty with `detect_timeout = 0` (oracular detection) —
+    /// and for false alarms, which are never detected.
+    pub detection_latencies: Vec<f64>,
+    /// Core-seconds of killed work accrued *after* the true fail
+    /// instant — the part of `wasted_core_seconds` an oracular detector
+    /// would not have lost (launches doomed onto an undetected-dead
+    /// node, plus the undetected tail of runs already there). Always a
+    /// subset of `wasted_core_seconds`; 0 with instant detection.
+    pub undetected_lost_core_seconds: f64,
+    /// Launch RPCs lost by the `MessagePlan` (each is retried with
+    /// capped exponential backoff). 0 without a plan.
+    pub messages_lost: u64,
+    /// Completion notifications the `MessagePlan` delivered twice; the
+    /// dispatch-epoch check drops every duplicate, so accounting stays
+    /// exactly-once. 0 without a plan.
+    pub messages_duplicated: u64,
+    /// Speculative duplicate launches issued. 0 with speculation off.
+    pub spec_launches: u64,
+    /// Speculation losers killed (primary or duplicate — whichever
+    /// finished second); each loser's work is in `wasted_core_seconds`.
+    pub spec_kills: u64,
+    /// Retry histogram of fault kills: `retry_hist[k]` counts tasks
+    /// killed exactly `k` times, so `Σ k · retry_hist[k] == kills`.
+    /// Empty without a fault plan.
+    pub retry_hist: Vec<u64>,
     /// Optional full trace.
     pub trace: Option<Vec<TraceRecord>>,
     /// Productive execution spans, split at evictions. Collected only
@@ -240,6 +324,40 @@ impl RunResult {
                 self.wasted_core_seconds
             ));
         }
+        if !self.retry_hist.is_empty() {
+            let hist_kills: u64 = self
+                .retry_hist
+                .iter()
+                .enumerate()
+                .map(|(k, &c)| k as u64 * c)
+                .sum();
+            if hist_kills != self.kills {
+                return Err(format!(
+                    "retry histogram sums to {hist_kills} kills but the run recorded {}",
+                    self.kills
+                ));
+            }
+        }
+        for (i, d) in self.detection_latencies.iter().enumerate() {
+            if !(d.is_finite() && *d >= 0.0) {
+                return Err(format!("detection latency {i} is {d}"));
+            }
+        }
+        if !(self.undetected_lost_core_seconds.is_finite()
+            && self.undetected_lost_core_seconds >= 0.0
+            && self.undetected_lost_core_seconds <= self.wasted_core_seconds + 1e-6)
+        {
+            return Err(format!(
+                "undetected_lost_core_seconds {} outside [0, wasted = {}]",
+                self.undetected_lost_core_seconds, self.wasted_core_seconds
+            ));
+        }
+        if self.spec_kills > self.spec_launches {
+            return Err(format!(
+                "{} speculation losers killed but only {} duplicates launched",
+                self.spec_kills, self.spec_launches
+            ));
+        }
         if self.failed > self.n_tasks {
             return Err(format!(
                 "{} failed tasks out of {}",
@@ -317,6 +435,14 @@ impl RunResult {
                         self.busy_core_seconds
                     ));
                 }
+                // Wasted work is a subset of executed work: every killed
+                // span accrued busy core-seconds before it was lost.
+                if self.wasted_core_seconds > self.busy_core_seconds * (1.0 + 1e-9) + 1e-6 {
+                    return Err(format!(
+                        "wasted_core_seconds {} exceeds busy_core_seconds {}",
+                        self.wasted_core_seconds, self.busy_core_seconds
+                    ));
+                }
             }
             None => {
                 if self.busy_core_seconds != 0.0 {
@@ -328,17 +454,22 @@ impl RunResult {
                 // Preemption/kill accounting: a traced run records one
                 // span per dispatch, so spans = completions (= N −
                 // failed; every non-failed task finishes in a
-                // horizonless run) + evictions + kills.
+                // horizonless run) + evictions + kills + speculation
+                // losers (each loser's run closes its own span).
                 if let (Some(spans), Some(_)) = (&self.spans, &self.trace) {
-                    let expect = self.n_tasks - self.failed + self.preemptions + self.kills;
+                    let expect = self.n_tasks - self.failed
+                        + self.preemptions
+                        + self.kills
+                        + self.spec_kills;
                     if spans.len() as u64 != expect {
                         return Err(format!(
-                            "{} spans for {} tasks − {} failed + {} preemptions + {} kills",
+                            "{} spans for {} tasks − {} failed + {} preemptions + {} kills + {} spec_kills",
                             spans.len(),
                             self.n_tasks,
                             self.failed,
                             self.preemptions,
-                            self.kills
+                            self.kills,
+                            self.spec_kills
                         ));
                     }
                 }
@@ -410,6 +541,13 @@ mod tests {
             wasted_core_seconds: 0.0,
             horizon: None,
             busy_core_seconds: 0.0,
+            detection_latencies: Vec::new(),
+            undetected_lost_core_seconds: 0.0,
+            messages_lost: 0,
+            messages_duplicated: 0,
+            spec_launches: 0,
+            spec_kills: 0,
+            retry_hist: Vec::new(),
             trace: None,
             spans: None,
         }
@@ -551,6 +689,65 @@ mod tests {
         let mut r = result(300.0, 240.0);
         r.failed = 11; // > n_tasks
         assert!(r.check_invariants().unwrap_err().contains("failed"));
+    }
+
+    #[test]
+    fn invariant_catches_wasted_exceeding_busy_on_windowed_runs() {
+        // Regression: wasted work is carved out of executed work, so a
+        // windowed run reporting more wasted than busy core-seconds is
+        // an accounting bug that used to slip through check_invariants.
+        let mut r = result(10.0, 240.0);
+        r.horizon = Some(10.0);
+        r.busy_core_seconds = 6.0;
+        r.wasted_core_seconds = 6.0;
+        r.kills = 1;
+        r.check_invariants().unwrap();
+        r.wasted_core_seconds = 6.5;
+        let err = r.check_invariants().unwrap_err();
+        assert!(err.contains("exceeds busy_core_seconds"), "got: {err}");
+    }
+
+    #[test]
+    fn invariant_checks_retry_histogram_sums_to_kills() {
+        // Regression: the retry histogram must account for every kill —
+        // Σ k · hist[k] == kills.
+        let mut r = result(300.0, 240.0);
+        r.kills = 5;
+        r.retry_hist = vec![7, 3, 1]; // 3 tasks killed once + 1 twice = 5
+        r.check_invariants().unwrap();
+        r.retry_hist = vec![7, 3, 0]; // sums to 3, not 5
+        let err = r.check_invariants().unwrap_err();
+        assert!(err.contains("retry histogram"), "got: {err}");
+        // An empty histogram (no fault plan) is always consistent.
+        r.retry_hist = Vec::new();
+        r.kills = 0;
+        r.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn invariant_checks_degraded_accounting() {
+        // Undetected loss is a subset of wasted work.
+        let mut r = result(300.0, 240.0);
+        r.wasted_core_seconds = 2.0;
+        r.undetected_lost_core_seconds = 3.0;
+        assert!(r
+            .check_invariants()
+            .unwrap_err()
+            .contains("undetected_lost_core_seconds"));
+        r.undetected_lost_core_seconds = 1.5;
+        r.check_invariants().unwrap();
+        // Detection latencies must be finite and non-negative.
+        r.detection_latencies = vec![0.5, -0.1];
+        assert!(r
+            .check_invariants()
+            .unwrap_err()
+            .contains("detection latency"));
+        r.detection_latencies = vec![0.5, 0.5];
+        r.check_invariants().unwrap();
+        // More speculation losers than duplicates launched.
+        r.spec_kills = 2;
+        r.spec_launches = 1;
+        assert!(r.check_invariants().unwrap_err().contains("speculation"));
     }
 
     #[test]

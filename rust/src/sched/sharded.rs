@@ -46,7 +46,7 @@
 
 use super::result::{RunOptions, RunResult};
 use super::Scheduler;
-use crate::cluster::{ClusterSpec, Node, NodeState};
+use crate::cluster::{ClusterSpec, FaultEvent, FaultPlan, Node, NodeState};
 use crate::sim::SimScratch;
 use crate::util::stats::{condense_sample, percentile_sorted, Summary, WAIT_SAMPLE_CAP};
 use crate::workload::{TaskSpec, Workload};
@@ -58,6 +58,23 @@ use std::sync::Mutex;
 /// golden-ratio increment so streams never collide.
 fn shard_seed(seed: u64, shard: usize) -> u64 {
     seed.wrapping_add((shard as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+/// Which of the `g` contiguous node groups owns global node id `node`.
+///
+/// Mirrors the decomposition in [`ShardedSim::run_with_scratch`]: the
+/// first `n_nodes % g` groups take `n_nodes / g + 1` nodes each, the
+/// rest take `n_nodes / g`. Callers guarantee `1 <= g <= n_nodes`.
+fn shard_of_node(node: u32, n_nodes: usize, g: usize) -> usize {
+    let base = n_nodes / g;
+    let extra = n_nodes % g;
+    let i = node as usize;
+    let big = extra * (base + 1);
+    if i < big {
+        i / (base + 1)
+    } else {
+        extra + (i - big) / base
+    }
 }
 
 /// A [`Scheduler`] adapter running an inner backend's run in
@@ -131,15 +148,20 @@ impl ShardedSim {
         }
     }
 
-    /// Check whether `(workload, options)` can be sharded at all.
+    /// Check whether `(workload, options)` can be sharded over a
+    /// cluster of `n_nodes` nodes split into `shards` groups.
     ///
     /// Two restrictions fall out of the decomposition (jobs route to
     /// shards by `job % G`, and each shard renumbers its node group
     /// from zero):
     ///
-    /// * **fault plans** address *global* node ids, so a plan replayed
-    ///   inside a shard would fire on different physical nodes than the
-    ///   unsharded run — a silently different experiment;
+    /// * **fault plans** address *global* node ids. Events are routed
+    ///   to the shard owning each node (and remapped to its local id),
+    ///   so plans whose node set stays inside one node group replay
+    ///   exactly like the unsharded run. Plans that *cross* shard
+    ///   groups are rejected: their node lifecycles would be split
+    ///   across kernels that see disjoint slices of the load, a
+    ///   silently different experiment than the unsharded replay;
     /// * **task dependencies** may cross shard boundaries, where the
     ///   parent's completion is never observed and the child would wait
     ///   forever.
@@ -147,15 +169,40 @@ impl ShardedSim {
     /// The run path calls this and panics with the returned message;
     /// callers that want to degrade gracefully (pick an unsharded
     /// engine instead) should call it first.
-    pub fn validate_shardable(workload: &Workload, options: &RunOptions) -> Result<(), String> {
+    pub fn validate_shardable(
+        workload: &Workload,
+        options: &RunOptions,
+        n_nodes: usize,
+        shards: usize,
+    ) -> Result<(), String> {
         if !options.faults.is_empty() {
-            return Err(
-                "sharded runs do not support fault plans: FaultPlan events address global \
-                 node ids, but each shard renumbers its node group from zero, so the plan \
-                 would strike different physical nodes than an unsharded run; run fault \
-                 scenarios on an unsharded engine"
-                    .into(),
-            );
+            let g = shards.max(1).min(n_nodes.max(1));
+            let mut group: Option<usize> = None;
+            for e in &options.faults.events {
+                if (e.node as usize) >= n_nodes {
+                    return Err(format!(
+                        "fault plan addresses node {} but the cluster has only {} nodes",
+                        e.node, n_nodes
+                    ));
+                }
+                let s = shard_of_node(e.node, n_nodes, g);
+                if let Some(prev) = group {
+                    if prev != s {
+                        return Err(
+                            "sharded runs do not support fault plans that cross shard \
+                             groups: FaultPlan events address global node ids and are \
+                             routed to the shard owning each node, so a plan spanning \
+                             several node groups would split its lifecycle across \
+                             kernels that each see only a slice of the load — a \
+                             silently different experiment; confine the plan's node \
+                             set to one node group or run it on an unsharded engine"
+                                .into(),
+                        );
+                    }
+                } else {
+                    group = Some(s);
+                }
+            }
         }
         if let Some(t) = workload.tasks.iter().find(|t| !t.deps.is_empty()) {
             return Err(format!(
@@ -186,7 +233,8 @@ impl Scheduler for ShardedSim {
         // Shards run on the internal per-worker scratch pool (the
         // warm-buffer contract makes results independent of scratch
         // history), so the caller's scratch is deliberately unused.
-        if let Err(e) = Self::validate_shardable(workload, options) {
+        if let Err(e) = Self::validate_shardable(workload, options, cluster.n_nodes(), self.shards)
+        {
             panic!("{}: {e}", self.name);
         }
         let g = self.shards.min(cluster.n_nodes().max(1));
@@ -248,6 +296,30 @@ impl Scheduler for ShardedSim {
             workloads[s].tasks.push(local);
         }
 
+        // Route fault events to the shard owning each node, remapped
+        // to that shard's local node ids. Validation confined the
+        // plan's node set to one group, so exactly one shard receives
+        // a non-empty plan; the empty plans stay a zero-cost bypass in
+        // the other kernels.
+        let shard_options: Option<Vec<RunOptions>> = (!options.faults.is_empty()).then(|| {
+            let mut plans: Vec<FaultPlan> = vec![FaultPlan::none(); g];
+            for e in &options.faults.events {
+                let s = shard_of_node(e.node, n_nodes, g);
+                plans[s].events.push(FaultEvent {
+                    node: e.node - node_off[s],
+                    ..*e
+                });
+            }
+            plans
+                .into_iter()
+                .map(|p| {
+                    let mut o = options.clone();
+                    o.faults = p;
+                    o
+                })
+                .collect()
+        });
+
         // Run every shard (worker pool claims shard indices; each
         // shard's result depends only on its own seed, so the outcome
         // is independent of `jobs`).
@@ -268,11 +340,15 @@ impl Scheduler for ShardedSim {
                         if s >= g {
                             break;
                         }
+                        let opts: &RunOptions = match &shard_options {
+                            Some(per_shard) => &per_shard[s],
+                            None => options,
+                        };
                         let r = self.inner.run_with_scratch(
                             &workloads[s],
                             &clusters[s],
                             shard_seed(seed, s),
-                            options,
+                            opts,
                             &mut scratch,
                         );
                         *results[s].lock().expect("shard result lock") = Some(r);
@@ -316,6 +392,13 @@ impl Scheduler for ShardedSim {
             wasted_core_seconds: 0.0,
             horizon: options.horizon,
             busy_core_seconds: 0.0,
+            detection_latencies: Vec::new(),
+            undetected_lost_core_seconds: 0.0,
+            messages_lost: 0,
+            messages_duplicated: 0,
+            spec_launches: 0,
+            spec_kills: 0,
+            retry_hist: Vec::new(),
             trace: options.collect_trace.then(Vec::new),
             spans: None,
         };
@@ -334,6 +417,20 @@ impl Scheduler for ShardedSim {
             merged.completed += r.completed;
             merged.wasted_core_seconds += r.wasted_core_seconds;
             merged.busy_core_seconds += r.busy_core_seconds;
+            merged
+                .detection_latencies
+                .extend_from_slice(&r.detection_latencies);
+            merged.undetected_lost_core_seconds += r.undetected_lost_core_seconds;
+            merged.messages_lost += r.messages_lost;
+            merged.messages_duplicated += r.messages_duplicated;
+            merged.spec_launches += r.spec_launches;
+            merged.spec_kills += r.spec_kills;
+            if merged.retry_hist.len() < r.retry_hist.len() {
+                merged.retry_hist.resize(r.retry_hist.len(), 0);
+            }
+            for (k, c) in r.retry_hist.iter().enumerate() {
+                merged.retry_hist[k] += c;
+            }
             if let (Some(out), Some(tr)) = (merged.trace.as_mut(), r.trace.as_ref()) {
                 for rec in tr {
                     let mut rec = rec.clone();
@@ -408,33 +505,70 @@ mod tests {
     }
 
     #[test]
-    fn fault_plans_are_rejected_with_a_diagnostic() {
+    fn fault_plans_confined_to_one_node_group_are_accepted() {
         use crate::cluster::FaultPlan;
         let w = WorkloadBuilder::constant(1.0).tasks(16).jobs(16).build();
-        let options = RunOptions::with_faults(FaultPlan::none().fail(2.0, 0));
-        let e = ShardedSim::validate_shardable(&w, &options).unwrap_err();
+        // 4 nodes, 2 shards -> groups {0,1} and {2,3}. A plan touching
+        // nodes 0 and 1 stays inside group 0; adding node 2 crosses.
+        let same = RunOptions::with_faults(FaultPlan::none().fail(2.0, 0).recover(4.0, 1));
+        ShardedSim::validate_shardable(&w, &same, 4, 2).unwrap();
+        let crossing =
+            RunOptions::with_faults(FaultPlan::none().fail(2.0, 0).fail(3.0, 2));
+        let e = ShardedSim::validate_shardable(&w, &crossing, 4, 2).unwrap_err();
         assert!(e.contains("fault plans"), "{e}");
         assert!(e.contains("global"), "{e}");
+        // Out-of-range nodes are a validated error, not a late panic.
+        let oob = RunOptions::with_faults(FaultPlan::none().fail(2.0, 9));
+        let e = ShardedSim::validate_shardable(&w, &oob, 4, 2).unwrap_err();
+        assert!(e.contains("only 4 nodes"), "{e}");
         // The fault-free, dependency-free case passes.
-        ShardedSim::validate_shardable(&w, &RunOptions::default()).unwrap();
+        ShardedSim::validate_shardable(&w, &RunOptions::default(), 4, 2).unwrap();
     }
 
     #[test]
     fn dag_workloads_are_rejected_with_a_diagnostic() {
         let w = WorkloadBuilder::constant(1.0).tasks(12).dag_chains(4).build();
-        let e = ShardedSim::validate_shardable(&w, &RunOptions::default()).unwrap_err();
+        let e = ShardedSim::validate_shardable(&w, &RunOptions::default(), 4, 2).unwrap_err();
         assert!(e.contains("dependency-free"), "{e}");
         assert!(e.contains("deadlock"), "{e}");
     }
 
     #[test]
     #[should_panic(expected = "sharded runs do not support fault plans")]
-    fn run_panics_on_fault_plan_with_the_validation_message() {
+    fn run_panics_on_a_group_crossing_fault_plan() {
         use crate::cluster::FaultPlan;
         let w = WorkloadBuilder::constant(1.0).tasks(16).jobs(16).build();
-        let options = RunOptions::with_faults(FaultPlan::none().fail(2.0, 0));
+        // Nodes 0 and 3 live in different groups under 2 shards.
+        let options = RunOptions::with_faults(FaultPlan::none().fail(2.0, 0).fail(2.0, 3));
         let sim = ShardedSim::new(Box::new(IdealFifo), 2, 1, "I+shard2");
         sim.run(&w, &cluster(), 0, &options);
+    }
+
+    #[test]
+    fn fault_events_route_to_the_owning_shard_and_match_the_plain_run() {
+        use crate::cluster::FaultPlan;
+        // 4 nodes × 4 cores; 16 one-core 4 s tasks fill the cluster at
+        // t=0. Node 1 dies at t=1: its 4 tasks lose 1 s each and rerun
+        // on slots freed at t=4, ending at t=8 — identically whether
+        // the run is whole or split into 2 node groups (node 1 is
+        // local node 1 of shard 0 after remapping).
+        let w = WorkloadBuilder::constant(4.0).tasks(16).jobs(16).build();
+        let options = RunOptions::with_faults(FaultPlan::none().fail(1.0, 1));
+        let plain = IdealFifo.run(&w, &cluster(), 0, &options);
+        let sim = ShardedSim::new(Box::new(IdealFifo), 2, 2, "I+shard2");
+        let r = sim.run(&w, &cluster(), 0, &options);
+        r.check_invariants().unwrap();
+        assert_eq!(r.kills, plain.kills);
+        assert_eq!(r.kills, 4);
+        assert_eq!(r.completed, 16);
+        assert_eq!(r.failed, 0);
+        assert!((r.wasted_core_seconds - plain.wasted_core_seconds).abs() < 1e-9);
+        assert!((r.wasted_core_seconds - 4.0).abs() < 1e-9);
+        assert!((r.t_total - plain.t_total).abs() < 1e-9, "t={}", r.t_total);
+        // Per-shard retry histograms merge element-wise. Only shard 0
+        // ran a (non-empty) fault plan, so the histogram covers its 8
+        // tasks: 4 untouched, 4 killed exactly once.
+        assert_eq!(r.retry_hist, vec![4, 4]);
     }
 
     #[test]

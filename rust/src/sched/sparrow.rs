@@ -294,6 +294,13 @@ impl SchedPolicy for SparrowPolicy<'_> {
         self.place_ready(ctx, now);
     }
 
+    fn on_node_suspected(&mut self, ctx: &mut KernelCtx, now: Time, node: NodeId) {
+        // Identical to on_node_fail: detection is when the probes stop
+        // getting answers, so the workers' backlogs mask out now.
+        self.mark_node_down(ctx, node, false);
+        self.place_ready(ctx, now);
+    }
+
     fn on_node_drain(&mut self, ctx: &mut KernelCtx, _now: Time, node: NodeId) {
         // Running work finishes in place; only future probes move away.
         self.mark_node_down(ctx, node, true);

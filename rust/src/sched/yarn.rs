@@ -138,6 +138,11 @@ impl SchedPolicy for YarnPolicy<'_> {
     // heartbeating again with free containers.
     fn on_node_fail(&mut self, _ctx: &mut KernelCtx, _now: Time, _node: NodeId) {}
 
+    fn on_node_suspected(&mut self, _ctx: &mut KernelCtx, _now: Time, _node: NodeId) {
+        // Same as on_node_fail: a suspected NM is one whose heartbeats
+        // stopped; re-admission rides the next heartbeat cycle.
+    }
+
     fn on_node_drain(&mut self, _ctx: &mut KernelCtx, _now: Time, _node: NodeId) {}
 
     fn on_node_recover(&mut self, _ctx: &mut KernelCtx, _now: Time, _node: NodeId) {}

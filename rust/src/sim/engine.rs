@@ -338,6 +338,47 @@ pub enum SimEv {
         /// Recovering node.
         node: u32,
     },
+    /// A node's periodic heartbeat reaches the control plane. Only
+    /// scheduled when `RunOptions::heartbeat_period > 0`; a node that
+    /// is down when its heartbeat would fire emits nothing (the next
+    /// recovery restarts the cadence).
+    Heartbeat {
+        /// Emitting node.
+        node: u32,
+    },
+    /// The failure detector's timeout for a node expires
+    /// (`detect_timeout` after its `NodeFail`). Carries the node's
+    /// heartbeat sequence number at scheduling time: a recovery before
+    /// the timeout bumps the sequence, turning the suspicion into a
+    /// stale no-op (a false alarm that costs nothing).
+    Suspect {
+        /// Suspected node.
+        node: u32,
+        /// Heartbeat sequence the suspicion was raised against.
+        seq: u32,
+    },
+    /// Speculation deadline for a task: fires `speculate_factor ×` the
+    /// task class's streaming runtime estimate after its start. If the
+    /// task (same epoch) is still running, the kernel launches a
+    /// duplicate on a free slot.
+    SpecCheck {
+        /// Task id.
+        task: u32,
+        /// Dispatch epoch the deadline was scheduled against.
+        epoch: u32,
+    },
+    /// A speculative duplicate finishes. Valid only while the epoch
+    /// matches and the duplicate's slot is still registered — the
+    /// kernel clears the registration whenever the primary wins or the
+    /// duplicate is killed, so a stale `SpecEnd` is a no-op.
+    SpecEnd {
+        /// Task id.
+        task: u32,
+        /// Slot the duplicate ran on.
+        slot: u32,
+        /// Dispatch epoch at duplicate launch.
+        epoch: u32,
+    },
 }
 
 #[cfg(test)]

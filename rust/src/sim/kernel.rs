@@ -126,6 +126,39 @@
 //! and pessimistic. With an empty plan every gate in this subsystem is
 //! statically false and runs are bit-identical to pre-fault builds.
 //!
+//! **Degraded control plane.** Three optional mechanisms model an
+//! *imperfect* control plane on top of the fault subsystem, all seeded
+//! and bit-identical for any `--jobs` (see the README's "Degraded
+//! control plane" section):
+//!
+//! * **heartbeat failure detection** ([`RunOptions::detect_timeout`] >
+//!   0) — a `NodeFail` no longer retires capacity instantly: the node
+//!   keeps accepting (doomed) launches until `detect_timeout` elapses
+//!   without a heartbeat, at which point a `Suspect` event retires the
+//!   node, kills its tasks (charging the extra work run since the
+//!   failure to [`RunResult::undetected_lost_core_seconds`]) and fires
+//!   [`SchedPolicy::on_node_suspected`]. A node that recovers inside
+//!   the window is a *false alarm*: nothing was killed, nothing fires.
+//!   Completions on a failed-but-undetected node cannot be observed —
+//!   their `End` defers to the suspicion instant, where the detection
+//!   kill (scheduled first, so it wins the FIFO tie) or the recovery
+//!   decides their fate;
+//! * **message perturbation** ([`RunOptions::messages`]) — launch RPCs
+//!   draw an exponential in-flight latency and can be *lost* (retried
+//!   with capped exponential backoff while the slots stay held, up to
+//!   `max_retries` then force-delivered) and completion notifications
+//!   can be *delayed* or *duplicated* (a duplicate `End` is idempotent:
+//!   completion bumps the dispatch epoch, so the copy is stale);
+//! * **speculative re-execution** ([`RunOptions::speculate_factor`] >
+//!   0) — a single-core batch task running `factor ×` its kind's
+//!   streaming mean runtime gets a duplicate launch on a free slot;
+//!   first completion wins, the loser is killed and charged to
+//!   `wasted_core_seconds` (never double-counted as goodput).
+//!
+//! With `RunOptions::degraded_active()` false every gate is statically
+//! false: no buffers are sized, no RNG is drawn, and runs are
+//! bit-identical to pre-degraded builds.
+//!
 //! Determinism contract: for workloads using none of the new
 //! dimensions (1-core, dep-free, all-at-once `Array` tasks — the
 //! paper's benchmark shape), the kernel replays the exact event and
@@ -136,8 +169,9 @@
 use super::engine::{EventQueue, SimEv, Time};
 use super::pending::{OrderIndex, OrderMode, PendingList};
 use super::scratch::{SimScratch, TaskSoa};
-use crate::cluster::{ClusterSpec, FaultKind, NodeId, SlotId, SlotPool};
+use crate::cluster::{ClusterSpec, FaultKind, MessagePlan, NodeId, SlotId, SlotPool};
 use crate::sched::{ExecSpan, RunOptions, RunResult};
+use crate::util::prng::Prng;
 use crate::util::stats::{P2Quantile, Reservoir, Summary};
 use crate::workload::{JobId, JobKind, TaskId, TraceRecord, Workload};
 
@@ -265,6 +299,25 @@ pub trait SchedPolicy {
     /// next cycle.
     fn on_node_recover(&mut self, _ctx: &mut KernelCtx, _now: Time, _node: NodeId) {}
 
+    /// A node's failure was *detected*: under heartbeat-based detection
+    /// (`RunOptions::detect_timeout > 0`) a `NodeFail` is invisible to
+    /// the control plane until `detect_timeout` elapses without a
+    /// heartbeat; only then are the node's slots retired and its tasks
+    /// killed — both done *before* this hook fires. This is the
+    /// degraded-mode counterpart of [`SchedPolicy::on_node_fail`]
+    /// (which fires instead under instant detection), so policies react
+    /// the same way: mark dead workers, treat it as a dispatch
+    /// opportunity, or do nothing if tick-driven. A node that recovers
+    /// inside the window is a false alarm and no hook fires at all.
+    fn on_node_suspected(&mut self, _ctx: &mut KernelCtx, _now: Time, _node: NodeId) {}
+
+    /// A launch RPC toward `slot` was lost in flight
+    /// (`RunOptions::messages` loss draw); the kernel retries it after
+    /// a capped exponential backoff while the slots stay held. Purely
+    /// observational — most policies need nothing.
+    fn on_message_lost(&mut self, _ctx: &mut KernelCtx, _now: Time, _task: TaskId, _slot: SlotId) {
+    }
+
     /// Seconds the central daemon / master spent busy, for
     /// [`RunResult::daemon_busy`].
     fn daemon_busy(&self) -> f64 {
@@ -332,6 +385,29 @@ pub struct KernelCtx<'w, 's> {
     kill_count: u64,
     n_failed: usize,
     wasted_core_seconds: f64,
+    // Degraded control plane (built only when
+    // RunOptions::degraded_active(); see the module docs).
+    has_degraded: bool,
+    msg: MessagePlan,
+    msg_rng: Prng,
+    detect_timeout: Time,
+    speculate_factor: f64,
+    node_failed_at: &'s mut Vec<f64>,
+    node_detected: &'s mut Vec<bool>,
+    hb_seq: &'s mut Vec<u32>,
+    msg_attempt: &'s mut Vec<u32>,
+    spec_slot: &'s mut Vec<u32>,
+    spec_start: &'s mut Vec<f64>,
+    detect_latencies: &'s mut Vec<f64>,
+    undetected_lost: f64,
+    messages_lost: u64,
+    messages_duplicated: u64,
+    spec_launches: u64,
+    spec_kills: u64,
+    // Streaming per-kind runtime estimate (count, mean) feeding the
+    // speculation deadline; indexed by the TaskSoa kind byte.
+    spec_est_count: [u64; 3],
+    spec_est_mean: [f64; 3],
     // Windowed accounting (built only for horizon-bounded runs).
     horizon: Option<Time>,
     win_start: &'s mut Vec<f64>,
@@ -492,10 +568,31 @@ impl<'w> KernelCtx<'w, '_> {
     }
 
     /// Per-task run-state tracking (`remaining`/`span_start`/`run_slot`
-    /// /epochs) is shared by the preemption and fault subsystems;
-    /// either one switches it on.
+    /// /epochs) is shared by the preemption, fault and degraded
+    /// control-plane subsystems; any one switches it on.
     fn tracked(&self) -> bool {
-        self.has_preempt || self.has_faults
+        self.has_preempt || self.has_faults || self.has_degraded
+    }
+
+    /// True when the degraded control plane is active for this run
+    /// (non-empty message plan, heartbeat detection, or speculation).
+    pub fn degraded_enabled(&self) -> bool {
+        self.has_degraded
+    }
+
+    /// Heartbeat-based failure detection active (`detect_timeout` > 0).
+    fn has_detection(&self) -> bool {
+        self.has_degraded && self.detect_timeout > 0.0
+    }
+
+    /// Message perturbation active (non-empty `MessagePlan`).
+    fn msg_active(&self) -> bool {
+        self.has_degraded && !self.msg.is_empty()
+    }
+
+    /// Speculative re-execution active (`speculate_factor` > 0).
+    fn spec_active(&self) -> bool {
+        self.has_degraded && self.speculate_factor > 0.0
     }
 
     /// Collect every currently-evictable task into `out`: running,
@@ -873,6 +970,10 @@ impl<'w> KernelCtx<'w, '_> {
         let i = task as usize;
         let primary = self.run_slot[i];
         debug_assert!(primary != u32::MAX, "evicting idle task {task}");
+        if self.spec_active() && self.spec_slot[i] != u32::MAX {
+            // The eviction invalidates the run the duplicate was racing.
+            self.kill_duplicate(now, task);
+        }
         if self.collect_trace {
             self.spans.push(ExecSpan {
                 task,
@@ -977,6 +1078,11 @@ impl<'w> KernelCtx<'w, '_> {
         let i = task as usize;
         let primary = self.run_slot[i];
         debug_assert!(primary != u32::MAX, "killing idle task {task}");
+        if self.spec_active() && self.spec_slot[i] != u32::MAX {
+            // The kill restarts the task from scratch; the duplicate
+            // was racing a run that no longer exists.
+            self.kill_duplicate(now, task);
+        }
         if self.collect_trace {
             self.spans.push(ExecSpan {
                 task,
@@ -1110,6 +1216,156 @@ impl<'w> KernelCtx<'w, '_> {
         }
     }
 
+    // ---- degraded control plane ---------------------------------------------
+
+    /// Loss draw for a launch RPC firing now. A lost launch bumps the
+    /// task's attempt counter (the caller re-pushes the event after
+    /// [`MessagePlan::backoff_delay`]); once the retry budget is spent
+    /// the message is force-delivered so a run can never stall on bad
+    /// luck. Delivery resets the counter.
+    fn launch_lost(&mut self, task: TaskId) -> bool {
+        let i = task as usize;
+        if self.msg_attempt[i] >= self.msg.max_retries {
+            self.msg_attempt[i] = 0;
+            return false;
+        }
+        if self.msg_rng.chance(self.msg.loss_prob) {
+            self.msg_attempt[i] += 1;
+            self.messages_lost += 1;
+            true
+        } else {
+            self.msg_attempt[i] = 0;
+            false
+        }
+    }
+
+    /// If any node hosting `task`'s slots is failed but not yet
+    /// detected, a completion fired there cannot be observed by the
+    /// control plane: returns the earliest suspicion instant to defer
+    /// the `End` to. The detection kill was queued at that instant
+    /// *before* the deferred copy, so it wins the FIFO tie and stales
+    /// the `End` via the epoch bump; if the node recovered in the
+    /// window (false alarm) the deferred `End` completes then.
+    fn end_deferral(&self, task: TaskId, slot: SlotId) -> Option<Time> {
+        let check = |s: SlotId| -> Option<Time> {
+            let node = self.pool.node_of(s) as usize;
+            let fa = self.node_failed_at[node];
+            (fa.is_finite() && !self.node_detected[node]).then(|| fa + self.detect_timeout)
+        };
+        let mut at = check(slot);
+        if !self.extra_span.is_empty() && self.kernel_alloc[task as usize] {
+            let (s0, len) = self.extra_span[task as usize];
+            for k in 0..len {
+                let s = self.extra_slots[(s0 + k) as usize];
+                match (at, check(s)) {
+                    (Some(a), Some(b)) => at = Some(a.min(b)),
+                    (None, b @ Some(_)) => at = b,
+                    _ => {}
+                }
+            }
+        }
+        at
+    }
+
+    /// Kill one victim of a *detected* node failure: same semantics as
+    /// [`KernelCtx::execute_kill`], plus the work the task ran between
+    /// the physical failure and its detection (doomed, invisible to the
+    /// scheduler) is charged to `undetected_lost_core_seconds`.
+    fn execute_kill_detected(&mut self, now: Time, task: TaskId, failed_at: Time) {
+        let i = task as usize;
+        let cores = self.soa.cores[i] as f64;
+        let lost_from = self.span_start[i].max(failed_at);
+        self.undetected_lost += cores * (now - lost_from);
+        self.execute_kill(now, task);
+    }
+
+    /// Launch a speculative duplicate of a running task on a free pool
+    /// slot (no-op when the pool is full — speculation never preempts).
+    /// The duplicate is kernel-owned: it occupies exactly one slot
+    /// (speculation is gated to single-core batch tasks), runs the full
+    /// duration, and resolves first-completion-wins against the primary.
+    fn launch_speculative(&mut self, now: Time, task: TaskId) {
+        let i = task as usize;
+        let mem = self.soa.mem_mb[i];
+        let Some(slot) = self.pool.alloc(mem) else {
+            return;
+        };
+        self.slot_mem[slot as usize] = mem;
+        self.spec_slot[i] = slot;
+        self.spec_start[i] = now;
+        self.spec_launches += 1;
+        let mut end = now + self.soa.duration[i];
+        if self.msg_active() && self.msg.completion_latency_mean > 0.0 {
+            end += self.msg_rng.exponential(self.msg.completion_latency_mean);
+        }
+        let epoch = self.epoch[i];
+        self.queue.push(end, SimEv::SpecEnd { task, slot, epoch });
+    }
+
+    /// Kill a task's speculative duplicate (the primary completed,
+    /// was evicted, was killed, or the duplicate's node died): its span
+    /// is pure duplicate overhead, charged to `wasted_core_seconds`.
+    /// The in-flight `SpecEnd` goes stale via the cleared `spec_slot`.
+    fn kill_duplicate(&mut self, now: Time, task: TaskId) {
+        let i = task as usize;
+        let slot = self.spec_slot[i];
+        debug_assert!(slot != u32::MAX, "task {task} has no duplicate");
+        let cores = self.soa.cores[i] as f64;
+        let ran = now - self.spec_start[i];
+        self.wasted_core_seconds += cores * ran;
+        if self.horizon.is_some() {
+            // The duplicate occupied real capacity: busy, if fruitless.
+            self.busy_core_seconds += cores * ran;
+        }
+        if self.collect_trace {
+            self.spans.push(ExecSpan {
+                task,
+                slot,
+                start: self.spec_start[i],
+                end: now,
+            });
+        }
+        self.spec_kills += 1;
+        self.spec_slot[i] = u32::MAX;
+        self.spec_start[i] = f64::NAN;
+        self.pool.release(slot, self.slot_mem[slot as usize]);
+    }
+
+    /// Schedule the speculation deadline for a freshly-started task if
+    /// it qualifies: single-core `Array` work (gangs restart atomically
+    /// and services never end, so duplicates race badly with both) with
+    /// a streaming estimate already available for its kind. A
+    /// `SpecCheck` fires at `speculate_factor ×` the kind's mean; a
+    /// task still running then gets a duplicate launch.
+    fn maybe_schedule_speculation(&mut self, now: Time, task: TaskId) {
+        let i = task as usize;
+        if self.soa.kind[i] != TaskSoa::KIND_ARRAY || self.soa.cores[i] != 1 {
+            return;
+        }
+        let k = self.soa.kind[i] as usize;
+        if self.spec_est_count[k] == 0 {
+            return;
+        }
+        let deadline = now + self.speculate_factor * self.spec_est_mean[k];
+        let epoch = self.epoch[i];
+        self.queue.push(deadline, SimEv::SpecCheck { task, epoch });
+    }
+
+    /// Kill every speculative duplicate whose slot lives on `node`
+    /// (node death sweeps duplicates too; the primaries, if elsewhere,
+    /// keep running). O(tasks), only on node-lifecycle events.
+    fn kill_duplicates_on(&mut self, now: Time, node: NodeId) {
+        if !self.spec_active() {
+            return;
+        }
+        for i in 0..self.spec_slot.len() {
+            let s = self.spec_slot[i];
+            if s != u32::MAX && self.pool.node_of(s) == node {
+                self.kill_duplicate(now, i as u32);
+            }
+        }
+    }
+
     /// Allocate every slot a task needs, all-or-nothing. The primary
     /// slot carries the task's memory; extra slots (cores > 1) carry
     /// none. On failure the allocations are rolled back in reverse so
@@ -1200,7 +1456,22 @@ impl<'w> KernelCtx<'w, '_> {
         } else {
             SimEv::Start { task, slot }
         };
-        self.queue.push(l.at, ev);
+        let mut at = l.at;
+        if self.msg_active() {
+            // In-flight control-message latency: probe RPCs for staged
+            // launches, launch RPCs otherwise. Loss is drawn when the
+            // event *fires* (so it also covers Starts pushed directly by
+            // policies like Sparrow/YARN), latency when it is *sent*.
+            let mean = if l.via_stage {
+                self.msg.probe_latency_mean
+            } else {
+                self.msg.launch_latency_mean
+            };
+            if mean > 0.0 {
+                at += self.msg_rng.exponential(mean);
+            }
+        }
+        self.queue.push(at, ev);
     }
 
     /// `Start`/`Resume` event: record wait + trace (first start only),
@@ -1252,8 +1523,27 @@ impl<'w> KernelCtx<'w, '_> {
             }
             let epoch = self.epoch[i];
             if !service {
-                self.queue
-                    .push(now + self.remaining[i], SimEv::End { task, slot, epoch });
+                let mut end = now + self.remaining[i];
+                if self.msg_active() && self.msg.completion_latency_mean > 0.0 {
+                    // The completion notification travels back to the
+                    // control plane: the task *finishes* on time but is
+                    // *observed* late.
+                    end += self.msg_rng.exponential(self.msg.completion_latency_mean);
+                }
+                self.queue.push(end, SimEv::End { task, slot, epoch });
+                if self.msg_active()
+                    && self.msg.dup_prob > 0.0
+                    && self.msg_rng.chance(self.msg.dup_prob)
+                {
+                    // Duplicated completion notification. The first copy
+                    // to fire completes the task and bumps the epoch;
+                    // the second is recognisably stale (idempotent).
+                    self.messages_duplicated += 1;
+                    self.queue.push(end, SimEv::End { task, slot, epoch });
+                }
+                if self.spec_active() {
+                    self.maybe_schedule_speculation(now, task);
+                }
             }
         } else if !service {
             let end = now + self.soa.duration[task as usize];
@@ -1291,11 +1581,25 @@ impl<'w> KernelCtx<'w, '_> {
                     end: now,
                 });
             }
+            // The completed run's epoch moves on, so a duplicated
+            // completion notification (MessagePlan) or a straggling
+            // SpecEnd is recognisably stale — completion is idempotent.
+            self.epoch[i] += 1;
             self.remaining[i] = 0.0;
             self.span_start[i] = f64::NAN;
             self.run_slot[i] = u32::MAX;
             self.kernel_alloc[i] = false;
             self.rp_remove(task);
+        }
+        if self.spec_active() {
+            // Feed the streaming per-kind runtime estimate (true
+            // durations, not observed spans — deterministic regardless
+            // of message delays).
+            let i = task as usize;
+            let k = self.soa.kind[i] as usize;
+            self.spec_est_count[k] += 1;
+            let d = self.soa.duration[i];
+            self.spec_est_mean[k] += (d - self.spec_est_mean[k]) / self.spec_est_count[k] as f64;
         }
     }
 
@@ -1418,8 +1722,45 @@ impl Kernel {
             "invalid FaultPlan reached the kernel: {}",
             options.faults.validate().unwrap_err()
         );
-        // Run-state tracking is shared by preemption and faults.
-        let track = has_preempt || has_faults;
+        let has_degraded = options.degraded_active();
+        if has_degraded {
+            debug_assert!(
+                options.messages.validate().is_ok(),
+                "invalid MessagePlan reached the kernel: {}",
+                options.messages.validate().unwrap_err()
+            );
+            assert!(
+                options.detect_timeout.is_finite() && options.detect_timeout >= 0.0,
+                "RunOptions.detect_timeout must be finite and >= 0, got {}",
+                options.detect_timeout
+            );
+            assert!(
+                options.heartbeat_period.is_finite() && options.heartbeat_period >= 0.0,
+                "RunOptions.heartbeat_period must be finite and >= 0, got {}",
+                options.heartbeat_period
+            );
+            assert!(
+                options.speculate_factor.is_finite() && options.speculate_factor >= 0.0,
+                "RunOptions.speculate_factor must be finite and >= 0, got {}",
+                options.speculate_factor
+            );
+            if !options.messages.is_empty() {
+                scratch.msg_attempt.resize(n, 0);
+            }
+            if options.detect_timeout > 0.0 {
+                let n_nodes = cluster.n_nodes();
+                scratch.node_failed_at.resize(n_nodes, f64::INFINITY);
+                scratch.node_detected.resize(n_nodes, false);
+                scratch.hb_seq.resize(n_nodes, 0);
+            }
+            if options.speculate_factor > 0.0 {
+                scratch.spec_slot.resize(n, u32::MAX);
+                scratch.spec_start.resize(n, f64::NAN);
+            }
+        }
+        // Run-state tracking is shared by preemption, faults and the
+        // degraded control plane.
+        let track = has_preempt || has_faults || has_degraded;
         if track {
             scratch
                 .remaining
@@ -1472,6 +1813,13 @@ impl Kernel {
             kill_buf,
             spans,
             win_start,
+            node_failed_at,
+            node_detected,
+            hb_seq,
+            msg_attempt,
+            spec_slot,
+            spec_start,
+            detect_latencies,
             wait_p50,
             wait_p95,
             wait_p99,
@@ -1516,6 +1864,25 @@ impl Kernel {
             kill_count: 0,
             n_failed: 0,
             wasted_core_seconds: 0.0,
+            has_degraded,
+            msg: options.messages.clone(),
+            msg_rng: Prng::new(options.messages.seed ^ MessagePlan::STREAM),
+            detect_timeout: options.detect_timeout,
+            speculate_factor: options.speculate_factor,
+            node_failed_at,
+            node_detected,
+            hb_seq,
+            msg_attempt,
+            spec_slot,
+            spec_start,
+            detect_latencies,
+            undetected_lost: 0.0,
+            messages_lost: 0,
+            messages_duplicated: 0,
+            spec_launches: 0,
+            spec_kills: 0,
+            spec_est_count: [0; 3],
+            spec_est_mean: [0.0; 3],
             horizon,
             win_start,
             busy_core_seconds: 0.0,
@@ -1554,6 +1921,17 @@ impl Kernel {
                     FaultKind::Recover => SimEv::NodeRecover { node: e.node },
                 };
                 ctx.queue.push(e.at, ev);
+            }
+        }
+        let hb_period = options.heartbeat_period;
+        if has_degraded && options.detect_timeout > 0.0 && hb_period > 0.0 {
+            // One self-rescheduling heartbeat stream per node, seeded
+            // after the fault plan so a same-time fault fires first.
+            // The stream runs for the whole workload (a down node's
+            // beat fires but carries no liveness) and stops re-arming
+            // once every task is resolved, so horizonless queues drain.
+            for node in 0..cluster.n_nodes() as u32 {
+                ctx.queue.push(hb_period, SimEv::Heartbeat { node });
             }
         }
         policy.on_submit(&mut ctx, batch);
@@ -1598,6 +1976,17 @@ impl Kernel {
                     if has_faults && ctx.dead_launch(task, slot) {
                         ctx.abort_launch(task, slot);
                         policy.on_slot_free(&mut ctx, now);
+                    } else if ctx.msg_active()
+                        && ctx.msg.loss_prob > 0.0
+                        && ctx.launch_lost(task)
+                    {
+                        // Lost launch RPC: the slots stay held, the same
+                        // event retries after a capped exponential
+                        // backoff. Drawn at firing time so it also
+                        // covers Starts pushed directly by policies.
+                        let delay = ctx.msg.backoff_delay(ctx.msg_attempt[task as usize]);
+                        ctx.queue.push(now + delay, SimEv::Start { task, slot });
+                        policy.on_message_lost(&mut ctx, now, task, slot);
                     } else if ctx.handle_start(now, task, slot) {
                         // Staged launches of evicted tasks re-enter here,
                         // so resumes are detected rather than event-tagged.
@@ -1608,6 +1997,13 @@ impl Kernel {
                     if has_faults && ctx.dead_launch(task, slot) {
                         ctx.abort_launch(task, slot);
                         policy.on_slot_free(&mut ctx, now);
+                    } else if ctx.msg_active()
+                        && ctx.msg.loss_prob > 0.0
+                        && ctx.launch_lost(task)
+                    {
+                        let delay = ctx.msg.backoff_delay(ctx.msg_attempt[task as usize]);
+                        ctx.queue.push(now + delay, SimEv::Resume { task, slot });
+                        policy.on_message_lost(&mut ctx, now, task, slot);
                     } else {
                         ctx.handle_start(now, task, slot);
                         policy.on_resume(&mut ctx, now, task, slot);
@@ -1626,6 +2022,21 @@ impl Kernel {
                 SimEv::End { task, slot, epoch } => {
                     if track && ctx.epoch[task as usize] != epoch {
                         continue; // stale End: the task was evicted or killed out of this run
+                    }
+                    if ctx.has_detection() {
+                        if let Some(at) = ctx.end_deferral(task, slot) {
+                            // The node died (unobserved): the completion
+                            // can't reach the control plane. Defer to the
+                            // suspicion instant — the detection kill wins
+                            // the tie there, or the node recovered and
+                            // the completion lands late (false alarm).
+                            ctx.queue.push(at, SimEv::End { task, slot, epoch });
+                            continue;
+                        }
+                    }
+                    if ctx.spec_active() && ctx.spec_slot[task as usize] != u32::MAX {
+                        // The primary won the race; the duplicate dies.
+                        ctx.kill_duplicate(now, task);
                     }
                     ctx.handle_end(now, task);
                     if ctx.has_deps && ctx.propagate_deps(task) {
@@ -1647,20 +2058,162 @@ impl Kernel {
                     policy.on_slot_free(&mut ctx, now);
                 }
                 SimEv::NodeFail { node } => {
-                    ctx.pool.retire_node(node);
-                    ctx.collect_kill_victims(node, kill_buf);
-                    for &t in kill_buf.iter() {
-                        ctx.execute_kill(now, t);
+                    if ctx.has_detection() {
+                        // The failure is physical but not yet *observed*:
+                        // capacity stays placeable (doomed launches
+                        // included) until the detector fires
+                        // `detect_timeout` later. No policy hook yet —
+                        // the control plane has seen nothing.
+                        let ni = node as usize;
+                        ctx.node_failed_at[ni] = now;
+                        ctx.node_detected[ni] = false;
+                        ctx.hb_seq[ni] += 1;
+                        let seq = ctx.hb_seq[ni];
+                        ctx.queue
+                            .push(now + ctx.detect_timeout, SimEv::Suspect { node, seq });
+                    } else {
+                        ctx.pool.retire_node(node);
+                        ctx.collect_kill_victims(node, kill_buf);
+                        for &t in kill_buf.iter() {
+                            ctx.execute_kill(now, t);
+                        }
+                        ctx.kill_duplicates_on(now, node);
+                        policy.on_node_fail(&mut ctx, now, node);
                     }
-                    policy.on_node_fail(&mut ctx, now, node);
                 }
                 SimEv::NodeDrain { node } => {
                     ctx.pool.retire_node(node);
                     policy.on_node_drain(&mut ctx, now, node);
                 }
                 SimEv::NodeRecover { node } => {
-                    ctx.pool.restore_node(node);
-                    policy.on_node_recover(&mut ctx, now, node);
+                    if ctx.has_detection() {
+                        let ni = node as usize;
+                        let undetected =
+                            ctx.node_failed_at[ni].is_finite() && !ctx.node_detected[ni];
+                        ctx.hb_seq[ni] += 1; // stales any armed Suspect
+                        ctx.node_failed_at[ni] = f64::INFINITY;
+                        ctx.node_detected[ni] = false;
+                        if undetected {
+                            // False alarm: the node came back inside the
+                            // detection window. Capacity was never
+                            // retired, nothing was killed, and the
+                            // control plane never saw the failure — the
+                            // recovery costs (and announces) nothing.
+                        } else {
+                            ctx.pool.restore_node(node);
+                            policy.on_node_recover(&mut ctx, now, node);
+                        }
+                    } else {
+                        ctx.pool.restore_node(node);
+                        policy.on_node_recover(&mut ctx, now, node);
+                    }
+                }
+                SimEv::Heartbeat { node } => {
+                    // Liveness cadence only: detection rides the Suspect
+                    // timer armed at the (unobservable) failure instant,
+                    // whose expiry models "detect_timeout elapsed without
+                    // a heartbeat". Stops re-arming once the workload is
+                    // resolved so horizonless runs drain their queue.
+                    if ctx.completed + ctx.n_failed < n {
+                        ctx.queue.push(now + hb_period, SimEv::Heartbeat { node });
+                    }
+                }
+                SimEv::Suspect { node, seq } => {
+                    let ni = node as usize;
+                    if ctx.hb_seq[ni] != seq || !ctx.node_failed_at[ni].is_finite() {
+                        continue; // false alarm: recovered inside the window
+                    }
+                    // Detection: retire the node and kill its tasks now,
+                    // exactly as an instant-detection NodeFail would have
+                    // at the failure instant — the difference (work run
+                    // since then, doomed and invisible) is the price of
+                    // late detection.
+                    ctx.node_detected[ni] = true;
+                    let failed_at = ctx.node_failed_at[ni];
+                    ctx.detect_latencies.push(now - failed_at);
+                    ctx.pool.retire_node(node);
+                    ctx.collect_kill_victims(node, kill_buf);
+                    for &t in kill_buf.iter() {
+                        ctx.execute_kill_detected(now, t, failed_at);
+                    }
+                    ctx.kill_duplicates_on(now, node);
+                    policy.on_node_suspected(&mut ctx, now, node);
+                }
+                SimEv::SpecCheck { task, epoch } => {
+                    let i = task as usize;
+                    // Stale if the task completed, was evicted or killed
+                    // (epoch moved on); skipped if a duplicate already
+                    // runs or the task is no longer running.
+                    if ctx.epoch[i] == epoch
+                        && ctx.run_slot[i] != u32::MAX
+                        && ctx.spec_slot[i] == u32::MAX
+                    {
+                        ctx.launch_speculative(now, task);
+                    }
+                }
+                SimEv::SpecEnd { task, slot, epoch } => {
+                    let i = task as usize;
+                    if ctx.epoch[i] != epoch || ctx.spec_slot[i] != slot {
+                        continue; // stale: the primary won, or the duplicate was killed
+                    }
+                    if ctx.has_detection() {
+                        let ni = ctx.pool.node_of(slot) as usize;
+                        let fa = ctx.node_failed_at[ni];
+                        if fa.is_finite() && !ctx.node_detected[ni] {
+                            // Duplicate completed on a failed-undetected
+                            // node: defer like a primary End would.
+                            ctx.queue.push(
+                                fa + ctx.detect_timeout,
+                                SimEv::SpecEnd { task, slot, epoch },
+                            );
+                            continue;
+                        }
+                    }
+                    // The duplicate wins: the primary's open span is the
+                    // loser's, charged as duplicate overhead.
+                    let primary = ctx.run_slot[i];
+                    debug_assert!(primary != u32::MAX, "duplicate raced an idle task");
+                    let cores = ctx.soa.cores[i] as f64;
+                    ctx.wasted_core_seconds += cores * (now - ctx.span_start[i]);
+                    if ctx.collect_trace {
+                        ctx.spans.push(ExecSpan {
+                            task,
+                            slot: primary,
+                            start: ctx.span_start[i],
+                            end: now,
+                        });
+                    }
+                    if horizon.is_some() {
+                        // Close the primary's windowed span and hand the
+                        // window over to the winning duplicate, so
+                        // handle_end charges the duplicate's busy span.
+                        ctx.busy_core_seconds += cores * (now - ctx.win_start[i]);
+                        ctx.win_start[i] = ctx.spec_start[i];
+                    }
+                    if ctx.kernel_alloc[i] {
+                        // Kill semantics for the loser's slot: immediate
+                        // release (speculation is single-core, no extras).
+                        ctx.pool.release(primary, ctx.slot_mem[primary as usize]);
+                    }
+                    // Adopt the duplicate's run as canonical, then
+                    // complete through the ordinary path.
+                    ctx.span_start[i] = ctx.spec_start[i];
+                    ctx.run_slot[i] = slot;
+                    ctx.kernel_alloc[i] = true;
+                    ctx.spec_slot[i] = u32::MAX;
+                    ctx.spec_start[i] = f64::NAN;
+                    ctx.spec_kills += 1;
+                    ctx.handle_end(now, task);
+                    if ctx.has_deps && ctx.propagate_deps(task) {
+                        policy.on_deps_ready(&mut ctx, now);
+                    }
+                    // The duplicate's slot is kernel-owned even under
+                    // policies doing their own capacity bookkeeping
+                    // (on_complete -> None), so it always releases.
+                    let free_at = policy
+                        .on_complete(&mut ctx, now, task, slot)
+                        .unwrap_or(now);
+                    ctx.queue.push(free_at, SimEv::SlotFree { slot });
                 }
             }
         }
@@ -1688,6 +2241,30 @@ impl Kernel {
                     }
                 }
             }
+            if ctx.spec_active() {
+                // Speculative duplicates still racing at the window
+                // close: real occupancy (busy) that never produced a
+                // unique completion — duplicate overhead (wasted)
+                // either way.
+                for i in 0..n {
+                    let s = ctx.spec_slot[i];
+                    if s == u32::MAX {
+                        continue;
+                    }
+                    let cores = ctx.soa.cores[i] as f64;
+                    let open = h - ctx.spec_start[i];
+                    ctx.busy_core_seconds += cores * open;
+                    ctx.wasted_core_seconds += cores * open;
+                    if ctx.collect_trace {
+                        ctx.spans.push(ExecSpan {
+                            task: i as u32,
+                            slot: s,
+                            start: ctx.spec_start[i],
+                            end: h,
+                        });
+                    }
+                }
+            }
         } else {
             // Hard check (not debug-only): an event-driven policy with an
             // undispatchable task drains the queue and would otherwise
@@ -1709,6 +2286,19 @@ impl Kernel {
         }
         let processors = cluster.total_cores();
         let events = ctx.queue.popped();
+        // Retry histogram: hist[k] = tasks killed exactly k times, so
+        // Σ k·hist[k] recovers the kill count (check_invariants pins
+        // it). Empty without a fault plan.
+        let retry_hist = if has_faults {
+            let max_k = ctx.kills.iter().copied().max().unwrap_or(0) as usize;
+            let mut hist = vec![0u64; max_k + 1];
+            for &k in ctx.kills.iter() {
+                hist[k as usize] += 1;
+            }
+            hist
+        } else {
+            Vec::new()
+        };
         RunResult {
             scheduler: policy.label(),
             workload: workload.label.clone(),
@@ -1730,6 +2320,13 @@ impl Kernel {
             wasted_core_seconds: ctx.wasted_core_seconds,
             horizon,
             busy_core_seconds: ctx.busy_core_seconds,
+            detection_latencies: std::mem::take(ctx.detect_latencies),
+            undetected_lost_core_seconds: ctx.undetected_lost,
+            messages_lost: ctx.messages_lost,
+            messages_duplicated: ctx.messages_duplicated,
+            spec_launches: ctx.spec_launches,
+            spec_kills: ctx.spec_kills,
+            retry_hist,
             trace: options.collect_trace.then(|| std::mem::take(ctx.trace)),
             spans: (options.collect_trace && track).then(|| std::mem::take(ctx.spans)),
         }
@@ -2692,5 +3289,210 @@ mod tests {
             assert_eq!(warm.trace, fresh.trace);
             assert_eq!(warm.spans, fresh.spans);
         }
+    }
+
+    // ---- degraded control plane ----
+
+    fn run_opts(w: &Workload, options: &RunOptions) -> RunResult {
+        let mut scratch = SimScratch::new();
+        Kernel::run(&mut InstantPolicy, w, &cluster(), options, &mut scratch)
+    }
+
+    #[test]
+    fn detection_window_delays_the_kill_and_charges_undetected_work() {
+        // 8 × 10 s tasks fill both nodes at t=0 (tasks 4–7 on node 1).
+        // Node 1 dies at t=4 but with a 2 s detect timeout the kill
+        // lands at t=6: each victim loses 6 s (vs 4 with instant
+        // detection), of which the 2 s run after the physical failure
+        // is undetected-doomed work. Retries start when node 0 frees
+        // at t=10 and finish at t=20.
+        let tasks = (0..8).map(|i| TaskSpec::array(i, 0, 10.0)).collect();
+        let w = Workload {
+            tasks,
+            label: "detect".into(),
+        };
+        let options = RunOptions {
+            collect_trace: true,
+            faults: FaultPlan::none().fail(4.0, 1),
+            ..Default::default()
+        }
+        .detection(2.0, 1.0);
+        let r = run_opts(&w, &options);
+        r.check_invariants().unwrap();
+        assert_eq!(r.kills, 4);
+        assert_eq!(r.completed, 8);
+        assert!((r.t_total - 20.0).abs() < 1e-9, "t_total={}", r.t_total);
+        assert!((r.wasted_core_seconds - 24.0).abs() < 1e-9);
+        assert!((r.undetected_lost_core_seconds - 8.0).abs() < 1e-9);
+        assert_eq!(r.detection_latencies, vec![2.0]);
+    }
+
+    #[test]
+    fn recovery_inside_the_window_is_a_zero_cost_false_alarm() {
+        // Node 1 blips out at t=4 and returns at t=5, under a 2 s
+        // detect timeout: the armed Suspect goes stale, nothing is
+        // killed, and the run matches a failure-free one bit-for-bit.
+        let tasks: Vec<TaskSpec> = (0..8).map(|i| TaskSpec::array(i, 0, 10.0)).collect();
+        let w = Workload {
+            tasks,
+            label: "blip".into(),
+        };
+        let blip = RunOptions {
+            collect_trace: true,
+            faults: FaultPlan::none().fail(4.0, 1).recover(5.0, 1),
+            ..Default::default()
+        }
+        .detection(2.0, 1.0);
+        let clean = RunOptions::with_trace().detection(2.0, 1.0);
+        let a = run_opts(&w, &blip);
+        let b = run_opts(&w, &clean);
+        a.check_invariants().unwrap();
+        assert_eq!(a.kills, 0);
+        assert_eq!(a.completed, 8);
+        assert!((a.wasted_core_seconds - 0.0).abs() < 1e-9);
+        assert!(a.detection_latencies.is_empty());
+        assert_eq!(a.t_total.to_bits(), b.t_total.to_bits());
+        assert_eq!(a.trace, b.trace);
+    }
+
+    #[test]
+    fn lost_launches_retry_within_the_backoff_budget() {
+        // 8 × 1 s tasks on 8 slots under 90 % launch loss with at most
+        // 3 retries of 0.25/0.5/1.0 s: every task still completes, and
+        // no start can slip past t = 1.75 (the attempt after the cap is
+        // force-delivered), bounding the makespan.
+        let tasks = (0..8).map(|i| TaskSpec::array(i, 0, 1.0)).collect();
+        let w = Workload {
+            tasks,
+            label: "loss".into(),
+        };
+        let plan = MessagePlan::seeded(11).with_loss(0.9, 0.25, 1.0, 3);
+        let options = RunOptions::with_trace().messages(plan);
+        let r = run_opts(&w, &options);
+        r.check_invariants().unwrap();
+        assert_eq!(r.completed, 8);
+        assert!(r.messages_lost > 0, "0.9 loss over 8 launches never lost");
+        assert!(r.t_total > 1.0, "a lost launch must delay its task");
+        assert!(
+            r.t_total <= 1.0 + 1.75 + 1e-9,
+            "backoff cap exceeded: t_total={}",
+            r.t_total
+        );
+        // Same seed, same draws: the perturbed run is deterministic.
+        let again = run_opts(&w, &options);
+        assert_eq!(r.t_total.to_bits(), again.t_total.to_bits());
+        assert_eq!(r.messages_lost, again.messages_lost);
+        assert_eq!(r.trace, again.trace);
+    }
+
+    #[test]
+    fn duplicated_completions_are_idempotent() {
+        // 90 % completion duplication: every duplicate End must hit the
+        // epoch check, leaving exactly one completion per task and the
+        // makespan of the unperturbed run.
+        let tasks = (0..8).map(|i| TaskSpec::array(i, 0, 2.0)).collect();
+        let w = Workload {
+            tasks,
+            label: "dup".into(),
+        };
+        let plan = MessagePlan::seeded(5).with_duplication(0.9);
+        let options = RunOptions::with_trace().messages(plan);
+        let r = run_opts(&w, &options);
+        r.check_invariants().unwrap();
+        assert_eq!(r.completed, 8);
+        assert!(r.messages_duplicated > 0, "0.9 dup over 8 Ends never fired");
+        assert!((r.t_total - 2.0).abs() < 1e-9, "t_total={}", r.t_total);
+        assert_eq!(r.trace.as_ref().unwrap().len(), 8);
+    }
+
+    #[test]
+    fn speculation_duplicate_loses_to_the_primary() {
+        // Four 1 s calibration tasks seed the Array-class estimate;
+        // a 10 s straggler submitted at t=2 then gets its SpecCheck at
+        // t = 2 + 3 × 1 s = 5 and a duplicate launch. The primary ends
+        // first (t=12), so the duplicate's 7 s span is pure overhead.
+        let mut tasks: Vec<TaskSpec> = (0..4).map(|i| TaskSpec::array(i, 0, 1.0)).collect();
+        let mut straggler = TaskSpec::array(4, 1, 10.0);
+        straggler.submit_at = 2.0;
+        tasks.push(straggler);
+        let w = Workload {
+            tasks,
+            label: "spec".into(),
+        };
+        let options = RunOptions::with_trace().speculation(3.0);
+        let r = run_opts(&w, &options);
+        r.check_invariants().unwrap();
+        assert_eq!(r.completed, 5);
+        assert_eq!(r.spec_launches, 1);
+        assert_eq!(r.spec_kills, 1);
+        assert!((r.t_total - 12.0).abs() < 1e-9, "t_total={}", r.t_total);
+        assert!((r.wasted_core_seconds - 7.0).abs() < 1e-9);
+        // 5 completion spans + 1 duplicate-overhead span.
+        assert_eq!(r.spans.as_ref().unwrap().len(), 6);
+    }
+
+    #[test]
+    fn speculation_duplicate_wins_when_the_primary_node_dies_undetected() {
+        // A 4-core hog pins node 0 until t=4, four 1 s calibrations run
+        // on node 1 (seeding the estimate), and a 10 s straggler
+        // submitted at t=2 lands on node 1. Its duplicate (SpecCheck at
+        // t=5) allocates on node 0, freed at t=4. Node 1 dies at t=11
+        // with an 8 s detect window, so the primary's End (t=12) defers
+        // past the duplicate's finish at t=15 — the duplicate wins, the
+        // primary's 13 s span is charged as duplicate overhead, and the
+        // detector fires at t=19 with nothing left to kill.
+        let mut hog = TaskSpec::array(0, 0, 4.0);
+        hog.cores = 4;
+        let mut tasks = vec![hog];
+        tasks.extend((1..5).map(|i| TaskSpec::array(i, 2, 1.0)));
+        let mut straggler = TaskSpec::array(5, 3, 10.0);
+        straggler.submit_at = 2.0;
+        tasks.push(straggler);
+        let w = Workload {
+            tasks,
+            label: "specwin".into(),
+        };
+        let options = RunOptions {
+            collect_trace: true,
+            faults: FaultPlan::none().fail(11.0, 1),
+            ..Default::default()
+        }
+        .detection(8.0, 0.0)
+        .speculation(3.0);
+        let r = run_opts(&w, &options);
+        r.check_invariants().unwrap();
+        assert_eq!(r.completed, 6);
+        assert_eq!(r.kills, 0, "the straggler moved before detection");
+        assert_eq!(r.spec_launches, 1);
+        assert_eq!(r.spec_kills, 1);
+        assert!((r.t_total - 15.0).abs() < 1e-9, "t_total={}", r.t_total);
+        assert!((r.wasted_core_seconds - 13.0).abs() < 1e-9);
+        assert_eq!(r.detection_latencies, vec![8.0]);
+        assert!((r.undetected_lost_core_seconds - 0.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn inactive_degraded_options_are_bit_identical_to_plain() {
+        // A seeded-but-empty message plan, zero detect timeout and zero
+        // speculation factor must take the zero-cost bypass: identical
+        // events, trace and timings, and no tracking buffers.
+        let tasks = (0..16).map(|i| TaskSpec::array(i, 0, 3.0)).collect();
+        let w = Workload {
+            tasks,
+            label: "bypass".into(),
+        };
+        let inactive = RunOptions::with_trace()
+            .messages(MessagePlan::seeded(99))
+            .detection(0.0, 0.0)
+            .speculation(0.0);
+        assert!(!inactive.degraded_active());
+        let base = run(&w);
+        let r = run_opts(&w, &inactive);
+        assert_eq!(base.t_total.to_bits(), r.t_total.to_bits());
+        assert_eq!(base.events, r.events);
+        assert_eq!(base.trace, r.trace);
+        assert_eq!(r.spans, None, "no tracking buffers when inactive");
+        assert_eq!(r.messages_lost, 0);
+        assert_eq!(r.spec_launches, 0);
     }
 }

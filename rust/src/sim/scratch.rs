@@ -206,6 +206,30 @@ pub struct SimScratch {
     /// windowed `busy_core_seconds` accounting (`NAN` when the task is
     /// not running; horizon-bounded runs only).
     pub win_start: Vec<f64>,
+    /// Fail instant of each node awaiting failure detection
+    /// (`f64::INFINITY` when the node is healthy or its failure was
+    /// already detected; degraded runs with `detect_timeout > 0` only).
+    pub node_failed_at: Vec<f64>,
+    /// Whether each node's current failure has been detected (the node
+    /// is retired and its tasks killed; degraded runs only).
+    pub node_detected: Vec<bool>,
+    /// Per-node heartbeat sequence, bumped on every fail/recover so a
+    /// `Suspect` raised before a recovery goes recognisably stale
+    /// (degraded runs only).
+    pub hb_seq: Vec<u32>,
+    /// Consecutive launch-message losses of each task's in-flight
+    /// launch (drives the capped exponential backoff; message plans
+    /// only).
+    pub msg_attempt: Vec<u32>,
+    /// Slot of each task's live speculative duplicate (`u32::MAX` =
+    /// none; speculation only).
+    pub spec_slot: Vec<u32>,
+    /// Start time of each task's live speculative duplicate (`NAN`
+    /// when none; speculation only).
+    pub spec_start: Vec<f64>,
+    /// Detection latencies recorded this run (one per detected real
+    /// failure, in detection order; degraded runs only).
+    pub detect_latencies: Vec<f64>,
     /// Struct-of-arrays mirror of the hot task-spec fields, filled by
     /// the kernel's one-pass workload scan (all runs).
     pub soa: TaskSoa,
@@ -255,6 +279,13 @@ impl SimScratch {
             kill_buf: Vec::new(),
             spans: Vec::new(),
             win_start: Vec::new(),
+            node_failed_at: Vec::new(),
+            node_detected: Vec::new(),
+            hb_seq: Vec::new(),
+            msg_attempt: Vec::new(),
+            spec_slot: Vec::new(),
+            spec_start: Vec::new(),
+            detect_latencies: Vec::new(),
             soa: TaskSoa::default(),
             wait_p50: P2Quantile::new(0.50),
             wait_p95: P2Quantile::new(0.95),
@@ -299,6 +330,13 @@ impl SimScratch {
         self.kill_buf.clear();
         self.spans.clear();
         self.win_start.clear();
+        self.node_failed_at.clear();
+        self.node_detected.clear();
+        self.hb_seq.clear();
+        self.msg_attempt.clear();
+        self.spec_slot.clear();
+        self.spec_start.clear();
+        self.detect_latencies.clear();
         self.soa.clear();
         self.soa.reserve(n_tasks);
         self.wait_p50.reset();
@@ -362,6 +400,13 @@ mod tests {
             end: 1.0,
         });
         s.win_start.push(3.0);
+        s.node_failed_at.push(4.0);
+        s.node_detected.push(true);
+        s.hb_seq.push(2);
+        s.msg_attempt.push(1);
+        s.spec_slot.push(3);
+        s.spec_start.push(5.0);
+        s.detect_latencies.push(0.5);
         s.soa.push(&TaskSpec::array(0, 0, 2.0));
         s.wait_p50.add(1.0);
         s.wait_p95.add(2.0);
@@ -399,6 +444,13 @@ mod tests {
         assert!(s.kill_buf.is_empty());
         assert!(s.spans.is_empty());
         assert!(s.win_start.is_empty());
+        assert!(s.node_failed_at.is_empty());
+        assert!(s.node_detected.is_empty());
+        assert!(s.hb_seq.is_empty());
+        assert!(s.msg_attempt.is_empty());
+        assert!(s.spec_slot.is_empty());
+        assert!(s.spec_start.is_empty());
+        assert!(s.detect_latencies.is_empty());
         assert!(s.soa.is_empty());
         assert_eq!(s.wait_p50.count(), 0);
         assert!(s.wait_p50.estimate().is_nan());

@@ -1,0 +1,514 @@
+//! Property suite for the degraded control plane: heartbeat failure
+//! detection, lossy/delayed control messages, and speculative
+//! re-execution, checked across every simulated backend.
+//!
+//! The invariants asserted from execution spans and counters:
+//!
+//! - **No start after detection.** Once a failed node is suspected
+//!   (at `fail + detect_timeout`), nothing may start there until it
+//!   recovers; inside the undetected window `[fail, detect)` doomed
+//!   launches are allowed (and must die at the detection instant).
+//!   Completions on a failed-but-undetected node cannot be observed,
+//!   so no span may end strictly inside the window, and every
+//!   detection latency equals the configured timeout.
+//! - **Duplicated completions are exactly-once.** Under heavy
+//!   completion duplication every task still completes exactly once:
+//!   one trace record and one span per task.
+//! - **Speculative duplicates never both count.** A duplicate and its
+//!   primary produce one completion; the loser's span-seconds are
+//!   exactly the run's `wasted_core_seconds` (fault-free runs: the
+//!   primary always wins, so `spec_kills == spec_launches`).
+//! - **Backoff retries respect the cap.** Under launch loss the
+//!   zero-overhead baseline's makespan is bounded by the task time
+//!   plus the full capped backoff schedule.
+//! - **Bit-identity.** Every perturbed run is executed warm
+//!   (reused [`SimScratch`]), fresh, and through the harness's
+//!   parallel executor at `--jobs 1` vs `--jobs 4` — all four must
+//!   agree bit-for-bit, degraded counters included.
+
+use sssched::cluster::{ClusterSpec, FaultPlan, MessagePlan};
+use sssched::config::SchedulerChoice;
+use sssched::harness::run_cells;
+use sssched::sched::{make_scheduler, RunOptions, RunResult, SimScratch};
+use sssched::util::prng::Prng;
+use sssched::workload::{ArrivalProcess, Workload, WorkloadBuilder};
+
+const NODES: u32 = 6;
+const CORES: u32 = 4;
+const TASK_T: f64 = 2.0;
+const EPS: f64 = 1e-9;
+
+fn cluster() -> ClusterSpec {
+    ClusterSpec::homogeneous(NODES, CORES, 32 * 1024, 3)
+}
+
+fn array_poisson(n: u64, seed: u64, rate: f64, label: &str) -> Workload {
+    WorkloadBuilder::constant(TASK_T)
+        .tasks(n)
+        .seed(seed)
+        .arrivals(ArrivalProcess::Poisson { rate })
+        .label(label)
+        .build()
+}
+
+/// Bit-identity over every observable, degraded counters included.
+fn assert_bit_identical(a: &RunResult, b: &RunResult, what: &str) {
+    assert_eq!(a.t_total.to_bits(), b.t_total.to_bits(), "{what}: t_total");
+    assert_eq!(a.events, b.events, "{what}: events");
+    assert_eq!(a.kills, b.kills, "{what}: kills");
+    assert_eq!(a.failed, b.failed, "{what}: failed");
+    assert_eq!(a.completed, b.completed, "{what}: completed");
+    assert_eq!(
+        a.wasted_core_seconds.to_bits(),
+        b.wasted_core_seconds.to_bits(),
+        "{what}: wasted_core_seconds"
+    );
+    assert_eq!(
+        a.busy_core_seconds.to_bits(),
+        b.busy_core_seconds.to_bits(),
+        "{what}: busy_core_seconds"
+    );
+    assert_eq!(
+        a.undetected_lost_core_seconds.to_bits(),
+        b.undetected_lost_core_seconds.to_bits(),
+        "{what}: undetected_lost_core_seconds"
+    );
+    let da: Vec<u64> = a.detection_latencies.iter().map(|x| x.to_bits()).collect();
+    let db: Vec<u64> = b.detection_latencies.iter().map(|x| x.to_bits()).collect();
+    assert_eq!(da, db, "{what}: detection_latencies");
+    assert_eq!(a.messages_lost, b.messages_lost, "{what}: messages_lost");
+    assert_eq!(
+        a.messages_duplicated, b.messages_duplicated,
+        "{what}: messages_duplicated"
+    );
+    assert_eq!(a.spec_launches, b.spec_launches, "{what}: spec_launches");
+    assert_eq!(a.spec_kills, b.spec_kills, "{what}: spec_kills");
+    assert_eq!(a.retry_hist, b.retry_hist, "{what}: retry_hist");
+    assert_eq!(a.trace, b.trace, "{what}: trace");
+    assert_eq!(a.spans, b.spans, "{what}: spans");
+}
+
+/// One fail/recover cycle per chosen node; `detected == false` cycles
+/// recover inside the detection window (free false alarms).
+fn random_fail_plan(rng: &mut Prng, span: f64, detect: f64) -> FaultPlan {
+    let mut plan = FaultPlan::none();
+    let mut any = false;
+    for node in 0..NODES {
+        if !rng.chance(0.6) {
+            continue;
+        }
+        any = true;
+        let a = rng.range_f64(span * 0.05, span * 0.5);
+        let b = if rng.chance(0.4) {
+            // False alarm: back before the detector can fire.
+            a + detect * rng.range_f64(0.2, 0.9)
+        } else {
+            a + detect + rng.range_f64(span * 0.05, span * 0.3)
+        };
+        plan = plan.fail(a, node).recover(b, node);
+    }
+    if !any {
+        plan = plan.fail(span * 0.2, 0).recover(span * 0.2 + 2.0 * detect, 0);
+    }
+    plan.validate().expect("generated plan must be valid");
+    plan
+}
+
+fn random_message_plan(rng: &mut Prng) -> MessagePlan {
+    let mut plan = MessagePlan::seeded(rng.next_u64());
+    if rng.chance(0.8) {
+        plan = plan.with_latency(
+            rng.range_f64(0.01, 0.4),
+            rng.range_f64(0.01, 0.4),
+            rng.range_f64(0.01, 0.2),
+        );
+    }
+    if rng.chance(0.8) {
+        let base = rng.range_f64(0.05, 0.2);
+        let cap = base * rng.range_f64(1.0, 4.0);
+        let retries = 1 + (rng.next_u64() % 4) as u32;
+        plan = plan.with_loss(rng.range_f64(0.05, 0.45), base, cap, retries);
+    }
+    if rng.chance(0.6) {
+        plan = plan.with_duplication(rng.range_f64(0.05, 0.45));
+    }
+    plan.validate().expect("generated message plan must be valid");
+    plan
+}
+
+#[test]
+fn no_task_starts_on_a_node_after_its_detection_instant() {
+    // Three real failures (recover well past detection), one false
+    // alarm (recover inside the window). detect_timeout = 1.0.
+    const DETECT: f64 = 1.0;
+    let fails = [(0u32, 1.0f64), (1, 1.8), (2, 2.6)];
+    let mut plan = FaultPlan::none();
+    for &(node, at) in &fails {
+        plan = plan.fail(at, node).recover(at + 5.0, node);
+    }
+    plan = plan.fail(1.4, 3).recover(1.9, 3); // false alarm on node 3
+    plan.validate().unwrap();
+
+    let mut w = array_poisson(48, 0xE1, 10.0, "degraded-prop-detect");
+    for t in &mut w.tasks {
+        t.max_retries = t.id % 4;
+    }
+    let cl = cluster();
+    let opts = RunOptions {
+        collect_trace: true,
+        faults: plan,
+        ..Default::default()
+    }
+    .detection(DETECT, 0.5 * DETECT);
+    w.validate_for(&opts).unwrap();
+
+    let mut scratch = SimScratch::new();
+    let (mut doomed_starts, mut detections, mut undetected) = (0u64, 0u64, 0.0f64);
+    for choice in SchedulerChoice::all_simulated() {
+        let label = choice.name();
+        let sched = make_scheduler(choice);
+        let r = sched.run_with_scratch(&w, &cl, 0xD07E, &opts, &mut scratch);
+        r.check_invariants().unwrap_or_else(|e| panic!("{label}: {e}"));
+        assert_eq!(
+            r.completed + r.failed,
+            w.tasks.len() as u64,
+            "{label}: horizonless runs finish or fail every task"
+        );
+
+        // Every detection is a real failure seen exactly detect_timeout
+        // after the fact; the false alarm never shows up.
+        assert!(
+            r.detection_latencies.len() <= fails.len(),
+            "{label}: more detections than real failures"
+        );
+        for &lat in &r.detection_latencies {
+            assert!(
+                (lat - DETECT).abs() <= EPS,
+                "{label}: detection latency {lat} != detect_timeout {DETECT}"
+            );
+        }
+        detections += r.detection_latencies.len() as u64;
+        undetected += r.undetected_lost_core_seconds;
+
+        let spans = r.spans.as_ref().expect("traced degraded runs collect spans");
+        let mut per_task: Vec<Vec<&sssched::sched::ExecSpan>> =
+            vec![Vec::new(); w.tasks.len()];
+        for s in spans {
+            let node = s.slot / CORES;
+            per_task[s.task as usize].push(s);
+            let Some(&(_, fail)) = fails.iter().find(|&&(n, _)| n == node) else {
+                continue;
+            };
+            let det = fail + DETECT;
+            let recover = fail + 5.0;
+            // Suspected nodes accept nothing until recovery.
+            assert!(
+                !(s.start > det + EPS && s.start < recover - EPS),
+                "{label}: task {} starts at {} on node {node} after its \
+                 detection at {det} (recover {recover})",
+                s.task,
+                s.start
+            );
+            // The detection kill sweeps the node: no span crosses it.
+            assert!(
+                !(s.start < det - EPS && s.end > det + EPS),
+                "{label}: task {} span [{}, {}] on node {node} runs through \
+                 the detection instant {det}",
+                s.task,
+                s.start,
+                s.end
+            );
+            // Ends inside (fail, det) are unobservable: an End there is
+            // deferred to the suspicion instant, where the kill wins.
+            assert!(
+                !(s.end > fail + EPS && s.end < det - EPS),
+                "{label}: task {} span ends at {} inside the undetected \
+                 window ({fail}, {det}) on node {node}",
+                s.task,
+                s.end
+            );
+            // Doomed launch: allowed in the window, dead at detection.
+            if s.start >= fail - EPS && s.start < det - EPS {
+                assert!(
+                    (s.end - det).abs() <= EPS,
+                    "{label}: doomed task {} started at {} must die at the \
+                     detection instant {det}, span ends at {}",
+                    s.task,
+                    s.start,
+                    s.end
+                );
+                doomed_starts += 1;
+            }
+        }
+
+        // Retry budgets hold, and every non-final span is a detection
+        // kill on its own node.
+        for (tid, ts) in per_task.iter_mut().enumerate() {
+            ts.sort_by(|x, y| x.start.total_cmp(&y.start));
+            assert!(
+                ts.len() as u32 <= w.tasks[tid].max_retries + 1,
+                "{label}: task {tid} dispatched {} times, retry budget {}",
+                ts.len(),
+                w.tasks[tid].max_retries
+            );
+            for s in ts.iter().take(ts.len().saturating_sub(1)) {
+                let node = s.slot / CORES;
+                let at_det = fails
+                    .iter()
+                    .any(|&(n, f)| n == node && (s.end - (f + DETECT)).abs() <= EPS);
+                assert!(
+                    at_det,
+                    "{label}: task {tid} non-final span ends at {} which is \
+                     not its node's detection instant",
+                    s.end
+                );
+            }
+        }
+    }
+    assert!(detections > 0, "the plan's real failures were never detected");
+    assert!(
+        doomed_starts > 0,
+        "no launch ever targeted a failed-but-undetected node"
+    );
+    assert!(
+        undetected > 0.0,
+        "detection kills never charged undetected work"
+    );
+}
+
+#[test]
+fn duplicated_completions_complete_each_task_exactly_once() {
+    let n = 30u64;
+    let w = WorkloadBuilder::constant(1.5)
+        .tasks(n)
+        .seed(0xE2)
+        .label("degraded-prop-dup")
+        .build();
+    let cl = cluster();
+    let plan = MessagePlan::seeded(7)
+        .with_latency(0.0, 0.05, 0.0)
+        .with_duplication(0.9);
+    let opts = RunOptions::with_trace().messages(plan);
+    w.validate_for(&opts).unwrap();
+
+    let mut scratch = SimScratch::new();
+    for choice in SchedulerChoice::all_simulated() {
+        let label = choice.name();
+        let sched = make_scheduler(choice);
+        let warm = sched.run_with_scratch(&w, &cl, 0xD0B1, &opts, &mut scratch);
+        let fresh = sched.run(&w, &cl, 0xD0B1, &opts);
+        assert_bit_identical(&warm, &fresh, label);
+        warm.check_invariants().unwrap_or_else(|e| panic!("{label}: {e}"));
+        assert_eq!(warm.completed, n, "{label}: every task completes once");
+        assert!(
+            warm.messages_duplicated > 0,
+            "{label}: 0.9 duplication over {n} completions never fired"
+        );
+        let trace = warm.trace.as_ref().expect("traced run");
+        assert_eq!(trace.len(), n as usize, "{label}: one trace record per task");
+        let spans = warm.spans.as_ref().expect("degraded runs collect spans");
+        assert_eq!(spans.len(), n as usize, "{label}: one span per task");
+        let mut seen = vec![false; n as usize];
+        for rec in trace {
+            assert!(
+                !seen[rec.task as usize],
+                "{label}: task {} completed twice",
+                rec.task
+            );
+            seen[rec.task as usize] = true;
+        }
+    }
+}
+
+#[test]
+fn speculative_duplicates_never_both_count_as_goodput() {
+    // Undersubscribed batches: sixteen 2 s seeds at t=0 feed the
+    // Array-class runtime estimate, two 12 s stragglers submitted
+    // afterwards trip the ×3 speculation deadline (start + 6 s, well
+    // before their own end), and a short tail keeps the stream going.
+    // The 24-slot pool is never full, so every duplicate finds a slot.
+    let mut w = WorkloadBuilder::constant(TASK_T)
+        .tasks(24)
+        .seed(0xE3)
+        .label("degraded-prop-spec")
+        .build();
+    for t in &mut w.tasks {
+        match t.id {
+            16 | 17 => {
+                t.duration = 6.0 * TASK_T;
+                t.submit_at = if t.id == 16 { 6.0 } else { 7.0 };
+            }
+            18..=23 => t.submit_at = 8.0,
+            _ => {}
+        }
+    }
+    let cl = cluster();
+    let opts = RunOptions::with_trace().speculation(3.0);
+    w.validate_for(&opts).unwrap();
+
+    let mut scratch = SimScratch::new();
+    for choice in SchedulerChoice::all_simulated() {
+        let label = choice.name();
+        let sched = make_scheduler(choice);
+        let warm = sched.run_with_scratch(&w, &cl, 0x5BEC, &opts, &mut scratch);
+        let fresh = sched.run(&w, &cl, 0x5BEC, &opts);
+        assert_bit_identical(&warm, &fresh, label);
+        warm.check_invariants().unwrap_or_else(|e| panic!("{label}: {e}"));
+        assert_eq!(warm.completed, w.tasks.len() as u64, "{label}: all complete");
+        assert!(
+            warm.spec_launches > 0,
+            "{label}: the stragglers never tripped speculation"
+        );
+        // Fault-free, the earlier-started primary always wins: every
+        // duplicate is killed, none completes.
+        assert_eq!(
+            warm.spec_kills, warm.spec_launches,
+            "{label}: a duplicate survived its primary in a fault-free run"
+        );
+
+        let spans = warm.spans.as_ref().expect("degraded runs collect spans");
+        let mut count = vec![0u32; w.tasks.len()];
+        let mut total = 0.0;
+        for s in spans {
+            count[s.task as usize] += 1;
+            total += s.end - s.start;
+        }
+        for (tid, &c) in count.iter().enumerate() {
+            assert!(
+                c <= 2,
+                "{label}: task {tid} has {c} spans (primary + at most one duplicate)"
+            );
+        }
+        assert_eq!(
+            count.iter().filter(|&&c| c == 2).count() as u64,
+            warm.spec_launches,
+            "{label}: exactly the speculated tasks carry a duplicate span"
+        );
+        // Exactly one span per task counts toward goodput: the rest of
+        // the span-seconds — the losing duplicates — are the waste.
+        let durations: f64 = w.tasks.iter().map(|t| t.duration).sum();
+        assert!(
+            (warm.wasted_core_seconds - (total - durations)).abs() <= 1e-6 * total.max(1.0),
+            "{label}: wasted {} != duplicate span-seconds {}",
+            warm.wasted_core_seconds,
+            total - durations
+        );
+    }
+}
+
+#[test]
+fn lost_launch_retries_respect_the_backoff_cap() {
+    // 24 × 1 s tasks on 24 slots under 90 % launch loss, backoff
+    // 0.1/0.2/0.4 (capped), 3 retries: the attempt after the budget is
+    // force-delivered, so no start slips past t = 0.7 on the
+    // zero-overhead baseline and the makespan is bounded by 1.7 s.
+    let n = 24u64;
+    let w = WorkloadBuilder::constant(1.0)
+        .tasks(n)
+        .seed(0xE4)
+        .label("degraded-prop-loss")
+        .build();
+    let cl = cluster();
+    let plan = MessagePlan::seeded(3).with_loss(0.9, 0.1, 0.4, 3);
+    let backoff_budget: f64 = (1..=3).map(|a| plan.backoff_delay(a)).sum();
+    assert!((backoff_budget - 0.7).abs() <= EPS);
+    let opts = RunOptions::with_trace().messages(plan);
+    w.validate_for(&opts).unwrap();
+
+    let mut scratch = SimScratch::new();
+    for choice in SchedulerChoice::all_simulated() {
+        let label = choice.name();
+        let sched = make_scheduler(choice);
+        let r = sched.run_with_scratch(&w, &cl, 0x1057, &opts, &mut scratch);
+        r.check_invariants().unwrap_or_else(|e| panic!("{label}: {e}"));
+        assert_eq!(r.completed, n, "{label}: loss delays but never drops a task");
+        assert!(
+            r.messages_lost > 0,
+            "{label}: 0.9 loss over {n} launches never lost"
+        );
+        assert!(
+            r.messages_lost <= n * 3,
+            "{label}: {} losses exceed the {n}-task × 3-retry budget",
+            r.messages_lost
+        );
+        if choice == SchedulerChoice::IdealFifo {
+            // Zero dispatch overhead isolates the backoff schedule.
+            assert!(r.t_total > 1.0, "{label}: a lost launch must delay its task");
+            assert!(
+                r.t_total <= 1.0 + backoff_budget + EPS,
+                "{label}: backoff cap exceeded: t_total={}",
+                r.t_total
+            );
+        }
+    }
+}
+
+#[test]
+fn degraded_runs_are_bit_identical_warm_fresh_and_across_jobs() {
+    let mut w = array_poisson(48, 0xE5, 8.0, "degraded-prop-bits");
+    for t in &mut w.tasks {
+        t.max_retries = t.id % 4;
+    }
+    let cl = cluster();
+
+    // Random degraded option sets: message perturbation × fault plan ×
+    // detection × (sometimes) speculation, per scheduler × trial.
+    let mut rng = Prng::new(0x0E55);
+    let mut cells: Vec<(SchedulerChoice, u64, RunOptions)> = Vec::new();
+    for choice in SchedulerChoice::all_simulated() {
+        for trial in 0..3u64 {
+            let detect = rng.range_f64(0.4, 1.2);
+            let spec = if rng.chance(0.7) {
+                rng.range_f64(2.0, 4.0)
+            } else {
+                0.0
+            };
+            let opts = RunOptions {
+                collect_trace: true,
+                faults: random_fail_plan(&mut rng, 12.0, detect),
+                ..Default::default()
+            }
+            .messages(random_message_plan(&mut rng))
+            .detection(detect, 0.5 * detect)
+            .speculation(spec);
+            w.validate_for(&opts).unwrap();
+            cells.push((choice, trial, opts));
+        }
+    }
+
+    let work = |cell: &(SchedulerChoice, u64, RunOptions), scratch: &mut SimScratch| {
+        make_scheduler(cell.0).run_with_scratch(&w, &cl, 0xDEC0 + cell.1, &cell.2, scratch)
+    };
+    let serial = run_cells(1, &cells, work);
+    let threaded = run_cells(4, &cells, work);
+    assert_eq!(serial.len(), cells.len());
+
+    for (i, cell) in cells.iter().enumerate() {
+        let label = format!("{}/trial{}", cell.0.name(), cell.1);
+        serial[i]
+            .check_invariants()
+            .unwrap_or_else(|e| panic!("{label}: {e}"));
+        assert_bit_identical(&serial[i], &threaded[i], &format!("{label}: jobs 1 vs 4"));
+        let fresh = make_scheduler(cell.0).run(&w, &cl, 0xDEC0 + cell.1, &cell.2);
+        assert_bit_identical(&serial[i], &fresh, &format!("{label}: warm vs fresh"));
+    }
+
+    // The random plans must actually exercise the machinery somewhere
+    // in the pool, or the identity checks prove nothing.
+    assert!(
+        serial
+            .iter()
+            .map(|r| r.messages_lost + r.messages_duplicated)
+            .sum::<u64>()
+            > 0,
+        "no run ever lost or duplicated a message"
+    );
+    assert!(
+        serial.iter().any(|r| !r.detection_latencies.is_empty()),
+        "no run ever detected a failure"
+    );
+    assert!(
+        serial.iter().map(|r| r.kills).sum::<u64>() > 0,
+        "no run ever killed a task"
+    );
+}

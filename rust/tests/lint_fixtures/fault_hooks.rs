@@ -10,6 +10,7 @@ impl SchedPolicy for Incomplete {
 
 impl SchedPolicy for Complete {
     fn on_node_fail(&mut self) {}
+    fn on_node_suspected(&mut self) {}
     fn on_node_drain(&mut self) {}
     fn on_node_recover(&mut self) {}
 }

@@ -94,6 +94,9 @@ fn fault_hooks_fires_once_on_the_incomplete_impl() {
     let d = &rep.diagnostics[0];
     assert_eq!(d.line, line_containing(&src, "impl SchedPolicy for Incomplete"));
     assert!(d.msg.contains("on_node_drain") && d.msg.contains("on_node_recover"));
+    // The degraded-control-plane hook is required alongside the
+    // legacy fail/drain/recover trio.
+    assert!(d.msg.contains("on_node_suspected"), "{}", d.msg);
 }
 
 #[test]

@@ -151,18 +151,30 @@ fn predicted_utilization_is_monotone_in_m_and_capped_choice_is_sane() {
 // ---------------------------------------------------------------------
 
 #[test]
-fn sharding_rejects_fault_plans_and_dag_workloads() {
+fn sharding_rejects_crossing_fault_plans_and_dag_workloads() {
     use sssched::cluster::FaultPlan;
     let plain = WorkloadBuilder::constant(1.0).tasks(16).jobs(16).build();
-    ShardedSim::validate_shardable(&plain, &RunOptions::default()).unwrap();
-    let e = ShardedSim::validate_shardable(
+    ShardedSim::validate_shardable(&plain, &RunOptions::default(), 4, 2).unwrap();
+    // Confined to one node group (nodes 0..2 under 2 shards of 4
+    // nodes): accepted — events route to the owning shard.
+    ShardedSim::validate_shardable(
         &plain,
         &RunOptions::with_faults(FaultPlan::none().fail(1.0, 0)),
+        4,
+        2,
+    )
+    .unwrap();
+    // Crossing groups (nodes 0 and 3): rejected with a diagnostic.
+    let e = ShardedSim::validate_shardable(
+        &plain,
+        &RunOptions::with_faults(FaultPlan::none().fail(1.0, 0).fail(1.0, 3)),
+        4,
+        2,
     )
     .unwrap_err();
     assert!(e.contains("fault plans"), "{e}");
     let dag = WorkloadBuilder::constant(1.0).tasks(12).dag_chains(4).build();
-    let e = ShardedSim::validate_shardable(&dag, &RunOptions::default()).unwrap_err();
+    let e = ShardedSim::validate_shardable(&dag, &RunOptions::default(), 4, 2).unwrap_err();
     assert!(e.contains("dependency-free"), "{e}");
 }
 
